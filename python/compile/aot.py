@@ -1,0 +1,116 @@
+"""AOT lowering: JAX entry points → HLO *text* artifacts for the rust
+runtime.
+
+HLO text — NOT serialized HloModuleProto — is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--config n,m,k,c ...]
+
+Emits one artifact per (entry, shape) configuration plus a ``manifest.txt``
+the rust artifact registry reads: tab-separated
+``name  entry  n  m  k  cap  filename``.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_eval_dense(n, m, k, c, block_n):
+    fn = functools.partial(model.eval_dense_shard, c=c, block_n=block_n)
+    return jax.jit(fn).lower(_f32(n, m), _f32(n, m, k), _f32(k))
+
+
+def lower_eval_sparse(n, m, q, block_n):
+    fn = functools.partial(model.eval_sparse_shard, q=q, block_n=block_n)
+    return jax.jit(fn).lower(_f32(n, m), _f32(n, m), _f32(m))
+
+
+def lower_scd_sparse(n, m, q, block_n):
+    fn = functools.partial(model.scd_sparse_map, q=q, block_n=block_n)
+    return jax.jit(fn).lower(_f32(n, m), _f32(n, m), _f32(m))
+
+
+# default artifact set: the shapes the examples and benches use
+DEFAULT_CONFIGS = [
+    # (entry, n, m, k, cap)
+    ("eval_dense", 2048, 10, 10, 1),
+    ("eval_dense", 2048, 10, 5, 1),
+    ("eval_sparse", 4096, 10, 10, 1),
+    ("scd_sparse", 4096, 10, 10, 1),
+]
+
+
+def emit(entry, n, m, k, cap, out_dir):
+    block_n = min(512 if entry != "eval_dense" else 256, n)
+    if entry == "eval_dense":
+        lowered = lower_eval_dense(n, m, k, cap, block_n)
+    elif entry == "eval_sparse":
+        assert m == k, "sparse artifacts assume the identity mapping (M=K)"
+        lowered = lower_eval_sparse(n, m, cap, block_n)
+    elif entry == "scd_sparse":
+        assert m == k
+        lowered = lower_scd_sparse(n, m, cap, block_n)
+    else:
+        raise ValueError(f"unknown entry {entry}")
+    name = f"{entry}_n{n}_m{m}_k{k}_c{cap}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {name}: {len(text)} chars")
+    return (name, entry, n, m, k, cap, f"{name}.hlo.txt")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--config",
+        action="append",
+        default=None,
+        help="entry,n,m,k,cap — may repeat; defaults to the standard set",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    configs = DEFAULT_CONFIGS
+    if args.config:
+        configs = []
+        for spec in args.config:
+            entry, n, m, k, cap = spec.split(",")
+            configs.append((entry, int(n), int(m), int(k), int(cap)))
+
+    rows = [emit(*cfg, args.out_dir) for cfg in configs]
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        for row in rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"wrote manifest with {len(rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the AOT artifacts).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers them to plain HLO that any
+backend (including the rust runtime's CPU client) can run. The BlockSpec
+structure still encodes the HBM->VMEM tiling a real TPU build would use; the
+VMEM/MXU accounting lives in each kernel's docstring and DESIGN.md
+section "Hardware adaptation".
+"""
+
+from .adjusted_profit import adjusted_profit
+from .consumption import consumption
+from .fused_solve import fused_solve_dense, fused_solve_sparse, sparse_candidates
+from .topc_select import topc_select
+
+__all__ = [
+    "adjusted_profit",
+    "consumption",
+    "fused_solve_dense",
+    "fused_solve_sparse",
+    "sparse_candidates",
+    "topc_select",
+]

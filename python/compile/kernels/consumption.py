@@ -1,0 +1,46 @@
+"""Consumption kernel: ``R[n, K] = Σ_j B[n, j, k] · X[n, j]`` — the
+per-group knapsack usage the mappers emit (Algorithm 2's ``v_ik``).
+
+Same VMEM tiling as the adjusted-profit kernel; the contraction is a
+batched (1, M)×(M, K) matvec per group, fused over the block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _consumption_kernel(b_ref, x_ref, o_ref):
+    b = b_ref[...]  # [bn, m, k]
+    x = x_ref[...]  # [bn, m]
+    o_ref[...] = jnp.einsum("nmk,nm->nk", b, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def consumption(b, x, *, block_n=256):
+    """Per-group consumption of each knapsack.
+
+    Args:
+      b: f32[n, m, k] dense costs.
+      x: f32[n, m] selection mask.
+      block_n: groups per grid step (must divide n).
+
+    Returns:
+      f32[n, k] consumption rows.
+    """
+    n, m, k = b.shape
+    assert x.shape == (n, m)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _consumption_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), b.dtype),
+        interpret=True,
+    )(b, x)

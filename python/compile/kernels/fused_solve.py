@@ -1,0 +1,187 @@
+"""Fused solve kernels — the performance variants.
+
+The separate adjusted-profit / top-C / consumption kernels round-trip the
+intermediate ``AP`` and ``X`` arrays through HBM twice. The fused kernels
+keep them in VMEM for the life of a group block and emit only the *block
+partials* (K consumption sums + 3 scalars per block), which is also what
+shrinks the host transfer from O(n·M) to O(K) per shard.
+
+Three kernels:
+
+* ``fused_solve_dense`` — price + top-C select + consume for the dense
+  cost layout (`C=[c]` locals).
+* ``fused_solve_sparse`` — the same for the sparse layout with the
+  identity item→knapsack mapping (`M = K`, Algorithm 5's setting).
+* ``sparse_candidates`` — Algorithm 5's map step: per-item critical
+  thresholds `(v1, v2, valid)` from the top-Q boundary, computed with Q+1
+  unrolled masked-max steps (quickselect's job on the VPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topc_mask(ap, c):
+    """Top-`c` positive mask, lowest-index tie-break (matches rust)."""
+    _, m = ap.shape
+    x = jnp.zeros_like(ap)
+    cur = ap
+    for _ in range(c):
+        idx = jnp.argmax(cur, axis=1)
+        mx = jnp.max(cur, axis=1)
+        sel = jax.nn.one_hot(idx, m, dtype=ap.dtype) * (mx > 0)[:, None]
+        x = x + sel
+        cur = jnp.where(sel > 0, -jnp.inf, cur)
+    return x
+
+
+def _fused_dense_kernel(p_ref, b_ref, lam_ref, r_ref, s_ref, *, c):
+    block_n, m, k = b_ref.shape
+    p = p_ref[...]
+    b = b_ref[...]
+    lam = lam_ref[...]
+    ap = p - (b.reshape(block_n * m, k) @ lam).reshape(block_n, m)
+    x = _topc_mask(ap, c)
+    # block partials, f32 accumulation is fine within a block (≤ 2^20 rows)
+    r_ref[...] = jnp.einsum("nmk,nm->k", b, x)[None, :]
+    primal = jnp.sum(p * x)
+    dual = jnp.sum(ap * x)
+    count = jnp.sum(x)
+    s_ref[...] = jnp.stack([primal, dual, count])[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("c", "block_n"))
+def fused_solve_dense(p, b, lam, *, c, block_n=256):
+    """Fused dense shard solve.
+
+    Args:
+      p: f32[n, m]; b: f32[n, m, k]; lam: f32[k]; c: local cap.
+
+    Returns:
+      (r, s): r f32[grid, k] block consumption partials,
+      s f32[grid, 3] block (primal, dual, count) partials.
+      Callers sum over axis 0.
+    """
+    n, m = p.shape
+    k = b.shape[-1]
+    assert n % block_n == 0
+    grid = n // block_n
+    return pl.pallas_call(
+        functools.partial(_fused_dense_kernel, c=c),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid, k), p.dtype),
+            jax.ShapeDtypeStruct((grid, 3), p.dtype),
+        ],
+        interpret=True,
+    )(p, b, lam)
+
+
+def _topq_thresholds(ap_pos, q):
+    """(q-th, (q+1)-th) largest of the clamped profits, via q+1 unrolled
+    masked maxima. Falls back to 0 beyond the array (profits clamped ≥ 0).
+    """
+    _, m = ap_pos.shape
+    cur = ap_pos
+    vals = []
+    for _ in range(min(q + 1, m)):
+        mx = jnp.max(cur, axis=1)
+        idx = jnp.argmax(cur, axis=1)
+        vals.append(mx)
+        cur = jnp.where(jax.nn.one_hot(idx, m, dtype=bool), -jnp.inf, cur)
+    q_th = vals[q - 1] if q - 1 < len(vals) else jnp.zeros_like(vals[0])
+    q1_th = vals[q] if q < len(vals) else jnp.zeros_like(vals[0])
+    return jnp.maximum(q_th, 0.0), jnp.maximum(q1_th, 0.0)
+
+
+def _fused_sparse_kernel(p_ref, bd_ref, lam_ref, r_ref, s_ref, *, q):
+    p = p_ref[...]
+    bd = bd_ref[...]
+    lam = lam_ref[...]
+    ap = p - bd * lam[None, :]  # item j maps to knapsack j
+    x = _topc_mask(ap, q)
+    r_ref[...] = jnp.sum(bd * x, axis=0)[None, :]
+    s_ref[...] = jnp.stack([jnp.sum(p * x), jnp.sum(ap * x), jnp.sum(x)])[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("q", "block_n"))
+def fused_solve_sparse(p, bdiag, lam, *, q, block_n=512):
+    """Fused sparse (identity-mapped, M=K) shard solve.
+
+    Args:
+      p: f32[n, m]; bdiag: f32[n, m] (item j consumes knapsack j);
+      lam: f32[m]; q: local cap.
+
+    Returns:
+      (r, s) block partials as in :func:`fused_solve_dense` (k == m).
+    """
+    n, m = p.shape
+    assert bdiag.shape == (n, m) and lam.shape == (m,)
+    assert n % block_n == 0
+    grid = n // block_n
+    return pl.pallas_call(
+        functools.partial(_fused_sparse_kernel, q=q),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid, m), p.dtype),
+            jax.ShapeDtypeStruct((grid, 3), p.dtype),
+        ],
+        interpret=True,
+    )(p, bdiag, lam)
+
+
+def _sparse_candidates_kernel(p_ref, bd_ref, lam_ref, v1_ref, v2_ref, valid_ref, *, q):
+    p = p_ref[...]
+    bd = bd_ref[...]
+    lam = lam_ref[...]
+    ap = jnp.maximum(p - bd * lam[None, :], 0.0)
+    q_th, q1_th = _topq_thresholds(ap, q)
+    in_top = ap >= q_th[:, None]
+    p_bar = jnp.where(in_top, q1_th[:, None], q_th[:, None])
+    valid = (p > p_bar) & (bd > 0)
+    v1_ref[...] = jnp.where(valid, (p - p_bar) / jnp.where(bd > 0, bd, 1.0), 0.0)
+    v2_ref[...] = jnp.where(valid, bd, 0.0)
+    valid_ref[...] = valid.astype(p.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q", "block_n"))
+def sparse_candidates(p, bdiag, lam, *, q, block_n=512):
+    """Algorithm 5's map step for the identity-mapped sparse layout.
+
+    Returns:
+      (v1, v2, valid) each f32[n, m]: per item, the critical multiplier of
+      its knapsack, the consumption it adds, and a 0/1 validity mask.
+    """
+    n, m = p.shape
+    assert n % block_n == 0
+    grid = n // block_n
+    spec = pl.BlockSpec((block_n, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sparse_candidates_kernel, q=q),
+        grid=(grid,),
+        in_specs=[spec, spec, pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n, m), p.dtype)] * 3,
+        interpret=True,
+    )(p, bdiag, lam)

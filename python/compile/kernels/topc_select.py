@@ -1,0 +1,53 @@
+"""Top-C selection kernel: the greedy rule for a single all-items local
+constraint (`C=[c]`): select up to `c` items per group with the highest
+*positive* adjusted profit.
+
+No sort: `c` is tiny (≤4 in every paper workload), so the kernel unrolls
+`c` masked argmax steps — each a vector max + compare over the M lanes,
+cheap on the VPU and exactly matching the rust greedy's tie-breaking
+(argmax returns the lowest index on ties).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topc_kernel(ap_ref, x_ref, *, c):
+    ap = ap_ref[...]
+    _, m = ap.shape
+    x = jnp.zeros_like(ap)
+    cur = ap
+    for _ in range(c):
+        idx = jnp.argmax(cur, axis=1)  # first max on ties == rust order
+        mx = jnp.max(cur, axis=1)
+        sel = jax.nn.one_hot(idx, m, dtype=ap.dtype) * (mx > 0)[:, None]
+        x = x + sel
+        cur = jnp.where(sel > 0, -jnp.inf, cur)
+    x_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("c", "block_n"))
+def topc_select(ap, *, c, block_n=256):
+    """0/1 mask of the top-`c` positive adjusted profits per group.
+
+    Args:
+      ap: f32[n, m] adjusted profits.
+      c: local cap (static).
+      block_n: groups per grid step (must divide n).
+
+    Returns:
+      f32[n, m] selection mask.
+    """
+    n, m = ap.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_topc_kernel, c=c),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), ap.dtype),
+        interpret=True,
+    )(ap)

@@ -1,0 +1,45 @@
+"""Layer-2 JAX compute graphs for the solver's map phases.
+
+Each entry point is a pure function over a fixed-shape shard, built from the
+Layer-1 Pallas kernels, and is AOT-lowered by :mod:`compile.aot` into an HLO
+text artifact the rust runtime executes at solve time. Outputs are already
+block-reduced so the host transfer per shard is O(K), not O(n·M).
+
+Entry points (shapes static per artifact):
+
+* ``eval_dense_shard``  — (P[n,M], B[n,M,K], λ[K]) → (R[K], stats[3])
+* ``eval_sparse_shard`` — (P[n,M], Bd[n,M], λ[M]) → (R[M], stats[3])
+* ``scd_sparse_map``    — (P[n,M], Bd[n,M], λ[M]) →
+                          (R[M], stats[3], v1[n,M], v2[n,M], valid[n,M])
+  (Algorithm 4's sparse map: evaluation at λ *plus* Algorithm 5's
+  candidate emissions, sharing the shard's VMEM residency.)
+
+``stats`` = (primal, dual_inner, n_selected).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    fused_solve_dense,
+    fused_solve_sparse,
+    sparse_candidates,
+)
+
+
+def eval_dense_shard(p, b, lam, *, c, block_n=256):
+    """Dense shard evaluation: total consumption + stats."""
+    r_blocks, s_blocks = fused_solve_dense(p, b, lam, c=c, block_n=block_n)
+    return jnp.sum(r_blocks, axis=0), jnp.sum(s_blocks, axis=0)
+
+
+def eval_sparse_shard(p, bdiag, lam, *, q, block_n=512):
+    """Sparse (identity-mapped) shard evaluation."""
+    r_blocks, s_blocks = fused_solve_sparse(p, bdiag, lam, q=q, block_n=block_n)
+    return jnp.sum(r_blocks, axis=0), jnp.sum(s_blocks, axis=0)
+
+
+def scd_sparse_map(p, bdiag, lam, *, q, block_n=512):
+    """Full SCD sparse map step: evaluation + Algorithm-5 candidates."""
+    r, s = eval_sparse_shard(p, bdiag, lam, q=q, block_n=block_n)
+    v1, v2, valid = sparse_candidates(p, bdiag, lam, q=q, block_n=block_n)
+    return r, s, v1, v2, valid

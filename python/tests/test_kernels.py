@@ -1,0 +1,162 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and seeds; every kernel must match its ref.* twin
+to f32 tolerance for all of them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adjusted_profit,
+    consumption,
+    fused_solve_dense,
+    fused_solve_sparse,
+    sparse_candidates,
+    topc_select,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, lo=0.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+def case(seed, n, m, k):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p = rand(ks[0], n, m)
+    b = rand(ks[1], n, m, k)
+    lam = rand(ks[2], k, hi=2.0)
+    return p, b, lam
+
+
+shape_strategy = dict(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 128, 256]),
+    m=st.sampled_from([1, 3, 10, 16]),
+    k=st.sampled_from([1, 4, 10]),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(**shape_strategy)
+def test_adjusted_profit_matches_ref(seed, n, m, k):
+    p, b, lam = case(seed, n, m, k)
+    got = adjusted_profit(p, b, lam, block_n=64)
+    want = ref.ref_adjusted_profit(p, b, lam)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 128]),
+    m=st.sampled_from([2, 5, 10]),
+    c=st.sampled_from([1, 2, 3]),
+)
+def test_topc_select_matches_ref(seed, n, m, c):
+    key = jax.random.PRNGKey(seed)
+    ap = rand(key, n, m, lo=-1.0, hi=1.0)
+    got = topc_select(ap, c=c, block_n=64)
+    want = ref.ref_topc_select(ap, c)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # mask invariants: 0/1, ≤ c per row, only positive items
+    npx = np.asarray(got)
+    assert set(np.unique(npx)).issubset({0.0, 1.0})
+    assert (npx.sum(axis=1) <= c).all()
+    assert (np.asarray(ap)[npx > 0] > 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(**shape_strategy)
+def test_consumption_matches_ref(seed, n, m, k):
+    p, b, _ = case(seed, n, m, k)
+    x = (p > 0.5).astype(jnp.float32)
+    got = consumption(b, x, block_n=64)
+    want = ref.ref_consumption(b, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 256]),
+    m=st.sampled_from([5, 10]),
+    k=st.sampled_from([4, 10]),
+    c=st.sampled_from([1, 2]),
+)
+def test_fused_dense_matches_composition(seed, n, m, k, c):
+    p, b, lam = case(seed, n, m, k)
+    r_blocks, s_blocks = fused_solve_dense(p, b, lam, c=c, block_n=64)
+    r = np.asarray(jnp.sum(r_blocks, axis=0))
+    s = np.asarray(jnp.sum(s_blocks, axis=0))
+    wr, wp, wd, wc = ref.ref_solve_dense(p, b, lam, c)
+    np.testing.assert_allclose(r, np.asarray(wr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s[0], float(wp), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s[1], float(wd), rtol=1e-4, atol=1e-4)
+    assert s[2] == float(wc)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 512]),
+    m=st.sampled_from([4, 10]),
+    q=st.sampled_from([1, 2, 5]),
+)
+def test_fused_sparse_matches_ref(seed, n, m, q):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p, bd, lam = rand(ks[0], n, m), rand(ks[1], n, m), rand(ks[2], m, hi=2.0)
+    r_blocks, s_blocks = fused_solve_sparse(p, bd, lam, q=q, block_n=64)
+    r = np.asarray(jnp.sum(r_blocks, axis=0))
+    s = np.asarray(jnp.sum(s_blocks, axis=0))
+    wr, wp, wd, wc = ref.ref_solve_sparse(p, bd, lam, q)
+    np.testing.assert_allclose(r, np.asarray(wr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s[:2], [float(wp), float(wd)], rtol=1e-4, atol=1e-4)
+    assert s[2] == float(wc)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([64, 512]),
+    m=st.sampled_from([4, 10]),
+    q=st.sampled_from([1, 2]),
+)
+def test_sparse_candidates_match_ref(seed, n, m, q):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p, bd, lam = rand(ks[0], n, m), rand(ks[1], n, m), rand(ks[2], m, hi=2.0)
+    v1, v2, valid = sparse_candidates(p, bd, lam, q=q, block_n=64)
+    w1, w2, wv = ref.ref_sparse_candidates(p, bd, lam, q)
+    np.testing.assert_array_equal(np.asarray(valid), np.asarray(wv))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(w1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(w2), rtol=1e-6, atol=1e-6)
+    # emitted thresholds are positive and consumption equals the cost
+    nv1, nvalid = np.asarray(v1), np.asarray(valid)
+    assert (nv1[nvalid > 0] > 0).all()
+
+
+def test_block_size_does_not_change_results():
+    p, b, lam = case(7, 256, 10, 4)
+    a = adjusted_profit(p, b, lam, block_n=32)
+    bb = adjusted_profit(p, b, lam, block_n=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-6)
+    r1, s1 = fused_solve_dense(p, b, lam, c=2, block_n=32)
+    r2, s2 = fused_solve_dense(p, b, lam, c=2, block_n=256)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(r1, axis=0)), np.asarray(jnp.sum(r2, axis=0)), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(s1, axis=0)), np.asarray(jnp.sum(s2, axis=0)), rtol=1e-5
+    )
+
+
+def test_bad_block_size_asserts():
+    p, b, lam = case(1, 100, 4, 2)
+    with pytest.raises(AssertionError):
+        adjusted_profit(p, b, lam, block_n=64)  # 100 % 64 != 0

@@ -1,0 +1,35 @@
+//! Shared helpers for the paper-reproduction benches (harness = false —
+//! the offline registry has no criterion; each bench prints the same rows
+//! the paper's table/figure reports).
+#![allow(dead_code)]
+
+use bskp::mapreduce::Cluster;
+
+/// True when the bench should run at (closer to) paper scale:
+/// `BSKP_FULL=1 cargo bench`.
+pub fn full_scale() -> bool {
+    std::env::var("BSKP_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Worker pool for benches (`BSKP_WORKERS` overrides).
+pub fn cluster() -> Cluster {
+    match std::env::var("BSKP_WORKERS").ok().and_then(|v| v.parse().ok()) {
+        Some(w) => Cluster::new(w),
+        None => Cluster::available(),
+    }
+}
+
+/// Wall-clock a closure in seconds.
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Print a banner tying the bench to its paper artifact.
+pub fn banner(what: &str, setup: &str) {
+    println!("\n================================================================");
+    println!("{what}");
+    println!("{setup}");
+    println!("================================================================");
+}

@@ -1,0 +1,65 @@
+//! **Figure 2** — running time vs number of users.
+//!
+//! Paper setup: N ∈ {20, 40, 80, 100, 200, 400} million users, K = 10
+//! dense global constraints, hierarchical local constraints, 200 Spark
+//! executors (8 cores / 16 GB each); the reported curve is ~linear in N.
+//!
+//! Scaled default: N ÷ 4000 on the same dense+hierarchical shape (the
+//! per-group map cost is what the figure measures; linearity in N is
+//! machine-size-independent). `BSKP_FULL=1` multiplies the grid ×10.
+
+#[path = "common.rs"]
+mod common;
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::LaminarProfile;
+use bskp::solver::config::PresolveConfig;
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+
+fn main() {
+    let scale: usize = if common::full_scale() { 400 } else { 20_000 };
+    let ns: Vec<usize> =
+        [20, 40, 80, 100, 200, 400].iter().map(|m| m * 1_000_000 / scale).collect();
+    common::banner(
+        "Figure 2: running time vs N (dense K=10, hierarchical locals C=[2,2,3])",
+        &format!("N={ns:?} (paper's {{20..400}}M ÷ {scale})"),
+    );
+    let cluster = common::cluster();
+    println!(
+        "{:>9} {:>8} {:>10} {:>12} {:>14}",
+        "N", "iters", "total s", "s per iter", "µs/group·iter"
+    );
+    let mut rows = Vec::new();
+    for &n in &ns {
+        let p = SyntheticProblem::new(
+            GeneratorConfig::dense(n, 10, 10)
+                .with_locals(LaminarProfile::scenario_c223(10))
+                .with_seed(11),
+        );
+        let cfg = SolverConfig {
+            max_iters: 30,
+            presolve: Some(PresolveConfig { sample: 2_000, ..Default::default() }),
+            track_history: false,
+            ..Default::default()
+        };
+        let (r, secs) = common::time(|| solve_scd(&p, &cfg, &cluster).unwrap());
+        let per_iter = secs / r.iterations.max(1) as f64;
+        println!(
+            "{:>9} {:>8} {:>10.2} {:>12.3} {:>14.2}",
+            n,
+            r.iterations,
+            secs,
+            per_iter,
+            1e6 * per_iter / n as f64
+        );
+        rows.push((n as f64, per_iter));
+    }
+    // linearity check: per-iteration time ~ a·N (report the fit residual)
+    let ratio_last_first = (rows.last().unwrap().1 / rows[0].1)
+        / (rows.last().unwrap().0 / rows[0].0);
+    println!(
+        "\nlinearity: (t_perIter ratio)/(N ratio) = {ratio_last_first:.2} \
+         (1.0 = perfectly linear; paper's Fig 2 is ~linear)"
+    );
+}

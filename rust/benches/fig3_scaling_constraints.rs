@@ -1,0 +1,49 @@
+//! **Figure 3** — running time vs number of global constraints.
+//!
+//! Paper setup: N = 100 million users, K ∈ {4, 6, 8, 10, 15, 20} dense
+//! global constraints, 200 executors; runtime grows with K.
+//!
+//! Scaled default: N = 25,000 (paper's 1e8 ÷ 4000); `BSKP_FULL=1` raises
+//! N ×10.
+
+#[path = "common.rs"]
+mod common;
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::LaminarProfile;
+use bskp::solver::config::PresolveConfig;
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+
+fn main() {
+    let n: usize = if common::full_scale() { 250_000 } else { 10_000 };
+    let ks = [4usize, 6, 8, 10, 15, 20];
+    common::banner(
+        "Figure 3: running time vs K (dense, hierarchical locals)",
+        &format!("N={n} (paper: 1e8)  K∈{ks:?}"),
+    );
+    let cluster = common::cluster();
+    println!("{:>4} {:>8} {:>10} {:>12}", "K", "iters", "total s", "s per iter");
+    for &k in &ks {
+        let p = SyntheticProblem::new(
+            GeneratorConfig::dense(n, 10, k)
+                .with_locals(LaminarProfile::scenario_c223(10))
+                .with_seed(13),
+        );
+        let cfg = SolverConfig {
+            max_iters: 30,
+            presolve: Some(PresolveConfig { sample: 2_000, ..Default::default() }),
+            track_history: false,
+            ..Default::default()
+        };
+        let (r, secs) = common::time(|| solve_scd(&p, &cfg, &cluster).unwrap());
+        println!(
+            "{:>4} {:>8} {:>10.2} {:>12.3}",
+            k,
+            r.iterations,
+            secs,
+            secs / r.iterations.max(1) as f64
+        );
+    }
+    println!("\npaper shape: runtime grows roughly linearly with K.");
+}

@@ -1,0 +1,128 @@
+//! Hot-path microbenchmarks — the profiling substrate for the §Perf pass
+//! (not a paper artifact). Times each stage of the map phase in isolation
+//! so EXPERIMENTS.md §Perf can attribute end-to-end changes.
+
+#[path = "common.rs"]
+mod common;
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::LaminarProfile;
+use bskp::instance::problem::{GroupBuf, GroupSource};
+use bskp::instance::shard::Shards;
+use bskp::solver::adjusted::adjusted_profits;
+use bskp::solver::candidates::{candidate_lambdas, line_coefficients};
+use bskp::solver::greedy::{greedy_select, greedy_select_warm, reset_order, GroupScratch};
+use bskp::solver::rounds::{evaluation_round, RustEvaluator};
+use bskp::solver::sparse_q::{emit_candidates, SparseQScratch};
+
+fn bench<F: FnMut()>(name: &str, per: usize, mut f: F) {
+    // warmup + timed
+    f();
+    let reps: usize = 5;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let total = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "{name:<44} {:>10.1} ns/group   {:>8.2} Mgroups/s",
+        1e9 * total / per as f64,
+        per as f64 / total / 1e6
+    );
+}
+
+fn main() {
+    common::banner("perf microbench: map-phase stage costs", "per-group costs, 1 thread");
+    let n = 50_000;
+
+    // sparse fill+greedy
+    let sp = SyntheticProblem::new(GeneratorConfig::sparse(n, 10, 10).with_seed(1));
+    let dims = sp.dims();
+    let lambda = vec![0.5f64; 10];
+    {
+        let mut buf = GroupBuf::new(dims, false);
+        bench("sparse: fill_group (synthetic regen)", n, || {
+            for i in 0..n {
+                sp.fill_group(i, &mut buf);
+            }
+        });
+        let mut scratch = GroupScratch::new(10);
+        bench("sparse: fill + adjusted + greedy", n, || {
+            for i in 0..n {
+                sp.fill_group(i, &mut buf);
+                adjusted_profits(&buf, &lambda, &mut scratch.ptilde);
+                greedy_select(sp.locals(), &mut scratch);
+            }
+        });
+        let mut sq = SparseQScratch::default();
+        let mut sink = 0.0f64;
+        bench("sparse: fill + Alg5 candidate emission", n, || {
+            for i in 0..n {
+                sp.fill_group(i, &mut buf);
+                emit_candidates(&buf, &lambda, 1, &mut sq, |_, v1, v2| sink += v1 + v2);
+            }
+        });
+        std::hint::black_box(sink);
+    }
+
+    // dense greedy + Alg3 walk
+    let dn = 2_000;
+    let dp = SyntheticProblem::new(
+        GeneratorConfig::dense(dn, 10, 10)
+            .with_locals(LaminarProfile::scenario_c223(10))
+            .with_seed(2),
+    );
+    {
+        let ddims = dp.dims();
+        let mut buf = GroupBuf::new(ddims, true);
+        let mut scratch = GroupScratch::new(10);
+        bench("dense:  fill + adjusted + greedy (C=[2,2,3])", dn, || {
+            for i in 0..dn {
+                dp.fill_group(i, &mut buf);
+                adjusted_profits(&buf, &lambda, &mut scratch.ptilde);
+                greedy_select(dp.locals(), &mut scratch);
+            }
+        });
+        let (mut a, mut s) = (vec![0.0; 10], vec![0.0; 10]);
+        let mut cand = Vec::new();
+        let mut sink = 0.0;
+        bench("dense:  Alg3 candidates+walk, all K (per group)", dn, || {
+            for i in 0..dn {
+                dp.fill_group(i, &mut buf);
+                for k in 0..10 {
+                    line_coefficients(&buf, &lambda, k, &mut a, &mut s);
+                    candidate_lambdas(&a, &s, &mut cand);
+                    reset_order(&mut scratch);
+                    let mut prev = 0.0f64;
+                    for ci in 0..cand.len() {
+                        let hi = cand[ci];
+                        let lo = cand.get(ci + 1).copied().unwrap_or(0.0);
+                        let mid = 0.5 * (hi + lo);
+                        for j in 0..10 {
+                            scratch.ptilde[j] = a[j] - mid * s[j];
+                        }
+                        greedy_select_warm(dp.locals(), &mut scratch);
+                        let cur: f64 =
+                            (0..10).filter(|&j| scratch.x[j] != 0).map(|j| s[j]).sum();
+                        if cur > prev {
+                            sink += hi;
+                            prev = cur;
+                        }
+                    }
+                }
+            }
+        });
+        std::hint::black_box(sink);
+    }
+
+    // full evaluation rounds
+    let cluster = common::cluster();
+    let eval = RustEvaluator::new(&sp);
+    bench("round:  sparse evaluation_round (full)", n, || {
+        let agg = evaluation_round(&eval, Shards::new(n, 8_192), 10, &lambda, &cluster);
+        std::hint::black_box(agg.n_selected);
+    });
+}
+// (appended by the perf pass) — XLA vs rust map throughput lives in
+// examples/e2e_billion_scale.rs; the microbench stays artifact-free so it
+// runs before `make artifacts`.

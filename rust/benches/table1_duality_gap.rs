@@ -1,0 +1,55 @@
+//! **Table 1** — duality gap on large sparse instances.
+//!
+//! Paper setup: sparse global constraints, N = 100 million users,
+//! M ∈ {1, 5, 10, 20, 100} (up to 10 billion items); reports SCD
+//! iterations, primal objective and duality gap (gaps of ~1e2 against
+//! primals of ~1e8, i.e. relative gaps ≪ 1e-5), with no constraint
+//! violated at convergence.
+//!
+//! Default N = 200,000 (laptop scale); `BSKP_FULL=1` runs N = 2,000,000.
+//! The instances use the identity item→knapsack mapping (M = K), the
+//! §5.1/Algorithm-5 setting.
+
+#[path = "common.rs"]
+mod common;
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::solver::config::{PresolveConfig, ReduceMode};
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+
+fn main() {
+    let n: usize = if common::full_scale() { 2_000_000 } else { 200_000 };
+    let ms = [1usize, 5, 10, 20, 50];
+    common::banner(
+        "Table 1: duality gap on large sparse instances",
+        &format!("N={n}  M=K∈{ms:?}  C=[1]  (paper: N=1e8, M up to 100)"),
+    );
+    let cluster = common::cluster();
+    println!(
+        "{:>4} {:>10} {:>12} {:>16} {:>14} {:>10} {:>8}",
+        "M", "iters", "primal", "duality gap", "gap/primal", "viol", "secs"
+    );
+    for m in ms {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(n, m, m).with_seed(42));
+        let cfg = SolverConfig {
+            reduce: ReduceMode::Bucketed { delta: 1e-6 },
+            presolve: Some(PresolveConfig { sample: 10_000, ..Default::default() }),
+            track_history: false,
+            ..Default::default()
+        };
+        let (r, secs) = common::time(|| solve_scd(&p, &cfg, &cluster).unwrap());
+        println!(
+            "{:>4} {:>10} {:>12.2} {:>16.4} {:>14.3e} {:>10} {:>8.1}",
+            m,
+            r.iterations,
+            r.primal_value,
+            r.duality_gap(),
+            r.duality_gap() / r.primal_value,
+            r.n_violations(),
+            secs
+        );
+        assert!(r.is_feasible(), "Table-1 rows converge with no violations (paper §6.2)");
+    }
+    println!("\npaper shape: gap ≪ primal (relative ≲ 1e-5), zero violations.");
+}

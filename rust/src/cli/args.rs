@@ -1,0 +1,108 @@
+//! Tiny argv parser: `bskp <subcommand> [--flag value | --switch]...`.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Switches that take no value.
+const SWITCHES: &[&str] = &["quiet", "no-postprocess", "no-fastpath", "track-history"];
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    sub: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (element 0 = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut it = argv.into_iter().skip(1);
+        let sub = it.next().unwrap_or_default();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(Error::Usage(format!("expected --flag, got {tok:?}")));
+            };
+            if SWITCHES.contains(&name) {
+                switches.push(name.to_string());
+            } else {
+                let val = it
+                    .next()
+                    .ok_or_else(|| Error::Usage(format!("--{name} requires a value")))?;
+                flags.insert(name.to_string(), val);
+            }
+        }
+        Ok(Self { sub, flags, switches })
+    }
+
+    /// The subcommand (may be empty).
+    pub fn subcommand(&self) -> &str {
+        &self.sub
+    }
+
+    /// A typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// An optional typed flag.
+    pub fn get_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::Usage(format!("--{name}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// Raw string flag.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse("bskp solve --n 100 --class sparse --quiet").unwrap();
+        assert_eq!(a.subcommand(), "solve");
+        assert_eq!(a.get::<usize>("n", 0).unwrap(), 100);
+        assert_eq!(a.get_str("class", "dense"), "sparse");
+        assert!(a.has("quiet"));
+        assert!(!a.has("no-postprocess"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("bskp solve").unwrap();
+        assert_eq!(a.get::<usize>("n", 42).unwrap(), 42);
+        assert_eq!(a.get_opt::<f64>("tol").unwrap(), None);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse("bskp solve --n").is_err());
+        assert!(parse("bskp solve n 5").is_err());
+        assert!(parse("bskp solve --n five").unwrap().get::<usize>("n", 0).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! CLI subcommands.
+
+use crate::cli::args::Args;
+use crate::coordinator::{Algorithm, Backend, Coordinator};
+use crate::error::{Error, Result};
+use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::lp::lp_upper_bound;
+use crate::mapreduce::Cluster;
+use crate::metrics::report_to_json;
+use crate::solver::config::{CdMode, PresolveConfig, ReduceMode, SolverConfig};
+
+/// Usage text for `bskp help`.
+pub const USAGE: &str = "\
+bskp — billion-scale knapsack solver (WWW'20 reproduction)
+
+SUBCOMMANDS
+  solve      generate a synthetic instance and solve it
+  lpbound    compute the LP-relaxation upper bound (Kelley cutting planes)
+  inspect    print instance statistics and a sample group
+  help       this text
+
+INSTANCE FLAGS (solve / lpbound / inspect)
+  --n <int>            groups (default 100000)
+  --m <int>            items per group (default 10)
+  --k <int>            global constraints (default 10)
+  --class sparse|dense cost class (default sparse)
+  --locals single:<cap>|c223|taxonomy:<levels>   (default single:1)
+  --tightness <f>      budget tightness (default 0.25)
+  --seed <int>         instance seed (default 0)
+
+SOLVER FLAGS (solve)
+  --algo scd|dd        algorithm (default scd)
+  --backend rust|xla   map-phase backend (default rust)
+  --artifacts <dir>    artifact dir for --backend xla (default artifacts)
+  --iters <int>        max iterations (default 60)
+  --tol <f>            convergence tolerance (default 1e-4)
+  --alpha <f>          DD learning rate (default 1e-3)
+  --lambda0 <f>        initial multipliers (default 1.0)
+  --presolve <n>       §5.3 pre-solve with n sampled groups
+  --bucketed <delta>   §5.2 bucketed reduce with finest width delta
+  --cd sync|cyclic|block:<n>   coordinate schedule (default sync)
+  --damping <f>        under-relaxation in (0,1]
+  --workers <int>      map workers (default: all cores)
+  --shard <int>        shard size override
+  --json <path>        write the full report as JSON
+  --no-postprocess     skip §5.4 feasibility projection
+  --no-fastpath        disable Algorithm 5 (use Algorithm 3 everywhere)
+  --quiet              suppress the human-readable summary
+
+LPBOUND FLAGS
+  --lp-tol <f>         Kelley gap tolerance (default 1e-4)
+  --cuts <int>         max cuts (default 200)
+";
+
+/// Build the instance described by the shared flags.
+pub fn instance_from_args(args: &Args) -> Result<SyntheticProblem> {
+    let n = args.get("n", 100_000usize)?;
+    let m = args.get("m", 10usize)?;
+    let k = args.get("k", 10usize)?;
+    let class = args.get_str("class", "sparse");
+    let locals = parse_locals(&args.get_str("locals", "single:1"), m)?;
+    let mut cfg = match class.as_str() {
+        "sparse" => GeneratorConfig::sparse(n, m, k),
+        "dense" => GeneratorConfig::dense(n, m, k),
+        other => return Err(Error::Usage(format!("--class must be sparse|dense, got {other}"))),
+    };
+    cfg = cfg
+        .with_locals(locals)
+        .with_tightness(args.get("tightness", 0.25f64)?)
+        .with_seed(args.get("seed", 0u64)?);
+    Ok(SyntheticProblem::new(cfg))
+}
+
+fn parse_locals(spec: &str, m: usize) -> Result<LaminarProfile> {
+    if let Some(cap) = spec.strip_prefix("single:") {
+        let cap: u32 =
+            cap.parse().map_err(|_| Error::Usage(format!("bad cap in --locals {spec}")))?;
+        return Ok(LaminarProfile::single(m, cap));
+    }
+    if spec == "c223" {
+        return Ok(LaminarProfile::scenario_c223(m));
+    }
+    if let Some(levels) = spec.strip_prefix("taxonomy:") {
+        let levels: usize =
+            levels.parse().map_err(|_| Error::Usage(format!("bad levels in --locals {spec}")))?;
+        return LaminarProfile::taxonomy(m, levels);
+    }
+    Err(Error::Usage(format!("--locals must be single:<cap>|c223|taxonomy:<levels>, got {spec}")))
+}
+
+/// Build the solver config from flags.
+pub fn solver_config_from_args(args: &Args) -> Result<SolverConfig> {
+    let mut cfg = SolverConfig {
+        max_iters: args.get("iters", 60usize)?,
+        tol: args.get("tol", 1e-4f64)?,
+        lambda0: args.get("lambda0", 1.0f64)?,
+        dd_alpha: args.get("alpha", 1e-3f64)?,
+        postprocess: !args.has("no-postprocess"),
+        use_sparse_fast_path: !args.has("no-fastpath"),
+        shard_size: args.get_opt("shard")?,
+        damping: args.get_opt("damping")?,
+        ..SolverConfig::default()
+    };
+    if let Some(sample) = args.get_opt::<usize>("presolve")? {
+        cfg.presolve = Some(PresolveConfig { sample, ..Default::default() });
+    }
+    if let Some(delta) = args.get_opt::<f64>("bucketed")? {
+        cfg.reduce = ReduceMode::Bucketed { delta };
+    }
+    cfg.cd = match args.get_str("cd", "sync").as_str() {
+        "sync" => CdMode::Synchronous,
+        "cyclic" => CdMode::Cyclic,
+        other => {
+            if let Some(bs) = other.strip_prefix("block:") {
+                CdMode::Block {
+                    block_size: bs
+                        .parse()
+                        .map_err(|_| Error::Usage(format!("bad --cd block size {bs}")))?,
+                }
+            } else {
+                return Err(Error::Usage(format!("--cd must be sync|cyclic|block:<n>, got {other}")));
+            }
+        }
+    };
+    // config mistakes come from flags here — surface them as usage errors
+    cfg.validate().map_err(|e| Error::Usage(e.to_string()))?;
+    Ok(cfg)
+}
+
+fn cluster_from_args(args: &Args) -> Result<Cluster> {
+    Ok(match args.get_opt::<usize>("workers")? {
+        Some(w) => Cluster::new(w),
+        None => Cluster::available(),
+    })
+}
+
+/// `bskp solve`.
+pub fn cmd_solve(args: &Args) -> Result<()> {
+    let problem = instance_from_args(args)?;
+    let config = solver_config_from_args(args)?;
+    let cluster = cluster_from_args(args)?;
+    let algorithm = match args.get_str("algo", "scd").as_str() {
+        "scd" => Algorithm::Scd,
+        "dd" => Algorithm::Dd,
+        other => return Err(Error::Usage(format!("--algo must be scd|dd, got {other}"))),
+    };
+    let backend = match args.get_str("backend", "rust").as_str() {
+        "rust" => Backend::Rust,
+        "xla" => Backend::Xla { artifacts_dir: args.get_str("artifacts", "artifacts").into() },
+        other => return Err(Error::Usage(format!("--backend must be rust|xla, got {other}"))),
+    };
+    let coord = Coordinator { cluster, config, algorithm, backend };
+    let report = coord.solve(&problem)?;
+
+    if !args.has("quiet") {
+        let dims = problem.dims();
+        println!(
+            "solved N={} M={} K={} ({} decision variables)",
+            dims.n_groups,
+            dims.n_items,
+            dims.n_global,
+            dims.n_vars()
+        );
+        println!(
+            "  iterations      : {}{}",
+            report.iterations,
+            if report.converged { " (converged)" } else { " (iteration cap)" }
+        );
+        println!("  primal value    : {:.4}", report.primal_value);
+        println!("  dual value      : {:.4}", report.dual_value);
+        println!("  duality gap     : {:.4}", report.duality_gap());
+        println!("  max violation   : {:.6}", report.max_violation_ratio());
+        println!("  selected items  : {}", report.n_selected);
+        println!("  dropped groups  : {}", report.dropped_groups);
+        println!("  wall time       : {:.1} ms", report.wall_ms);
+    }
+    if let Some(path) = args.get_opt::<String>("json")? {
+        std::fs::write(&path, report_to_json(&report).to_string())?;
+        if !args.has("quiet") {
+            println!("  report written  : {path}");
+        }
+    }
+    Ok(())
+}
+
+/// `bskp lpbound`.
+pub fn cmd_lpbound(args: &Args) -> Result<()> {
+    let problem = instance_from_args(args)?;
+    let cluster = cluster_from_args(args)?;
+    let tol = args.get("lp-tol", 1e-4f64)?;
+    let cuts = args.get("cuts", 200usize)?;
+    let bound = lp_upper_bound(&problem, &cluster, tol, cuts)?;
+    println!("LP upper bound : {:.6}", bound.value);
+    println!("lower certificate: {:.6} (gap {:.3e})", bound.lower, bound.gap());
+    println!("cuts           : {}", bound.cuts);
+    println!("lambda         : {:?}", bound.lambda);
+    Ok(())
+}
+
+/// `bskp inspect`.
+pub fn cmd_inspect(args: &Args) -> Result<()> {
+    let problem = instance_from_args(args)?;
+    let dims = problem.dims();
+    problem.validate()?;
+    println!("instance: N={} M={} K={}", dims.n_groups, dims.n_items, dims.n_global);
+    println!("  class        : {}", if problem.is_dense() { "dense" } else { "sparse" });
+    println!("  vars         : {}", dims.n_vars());
+    println!("  local caps   : {:?}", problem
+        .locals()
+        .constraints()
+        .iter()
+        .map(|c| (c.items.len(), c.cap))
+        .collect::<Vec<_>>());
+    println!("  max selected : {}", problem.locals().max_selected(dims.n_items));
+    println!("  budgets[0..4]: {:?}", &problem.budgets()[..dims.n_global.min(4)]);
+    let mut buf = GroupBuf::new(dims, problem.is_dense());
+    problem.fill_group(0, &mut buf);
+    println!("  group 0 p    : {:?}", &buf.profits[..dims.n_items.min(8)]);
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Command-line interface (hand-rolled — the offline registry has no clap).
+//!
+//! ```text
+//! bskp solve   --n 1000000 --m 10 --k 10 --class sparse --algo scd [...]
+//! bskp lpbound --n 10000 --m 10 --k 5 [...]
+//! bskp inspect --n 100 --m 10 --k 10 --class dense [...]
+//! bskp help
+//! ```
+
+mod args;
+mod commands;
+
+pub use args::Args;
+
+use crate::error::{Error, Result};
+
+/// Entry point for `main`: parse argv and dispatch. Returns the process
+/// exit code.
+pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(Error::Usage(msg)) => {
+            eprintln!("usage error: {msg}\n");
+            eprintln!("{}", commands::USAGE);
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand() {
+        "solve" => commands::cmd_solve(&args),
+        "lpbound" => commands::cmd_lpbound(&args),
+        "inspect" => commands::cmd_inspect(&args),
+        "help" | "" => {
+            println!("{}", commands::USAGE);
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown subcommand {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(argv("bskp help")), 0);
+        assert_eq!(run(argv("bskp")), 0);
+    }
+
+    #[test]
+    fn unknown_subcommand_is_usage_error() {
+        assert_eq!(run(argv("bskp frobnicate")), 2);
+    }
+
+    #[test]
+    fn tiny_solve_roundtrip() {
+        assert_eq!(
+            run(argv("bskp solve --n 500 --m 6 --k 6 --class sparse --iters 10 --quiet")),
+            0
+        );
+    }
+
+    #[test]
+    fn inspect_runs() {
+        assert_eq!(run(argv("bskp inspect --n 10 --m 4 --k 4 --class dense")), 0);
+    }
+
+    #[test]
+    fn bad_flag_value_is_usage_error() {
+        assert_eq!(run(argv("bskp solve --n banana")), 2);
+    }
+}

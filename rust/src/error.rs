@@ -1,0 +1,75 @@
+//! Library error type.
+//!
+//! Hand-rolled (the offline registry has no `thiserror` for this toolchain's
+//! feature set we need); a small closed enum keeps match sites exhaustive.
+
+use std::fmt;
+
+/// Errors produced by the bskp library.
+#[derive(Debug)]
+pub enum Error {
+    /// Problem data failed validation (dimension mismatch, negative budget,
+    /// non-laminar local constraints, ...).
+    InvalidProblem(String),
+    /// Solver configuration is inconsistent.
+    InvalidConfig(String),
+    /// The solver exhausted its iteration budget without converging.
+    NotConverged { iterations: usize, residual: f64 },
+    /// An LP sub-solver failed (unbounded / infeasible master).
+    Lp(String),
+    /// PJRT runtime failure (artifact missing, compile error, exec error).
+    Runtime(String),
+    /// CLI usage error.
+    Usage(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidProblem(m) => write!(f, "invalid problem: {m}"),
+            Error::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            Error::NotConverged { iterations, residual } => {
+                write!(f, "not converged after {iterations} iterations (residual {residual:.3e})")
+            }
+            Error::Lp(m) => write!(f, "lp solver: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Usage(m) => write!(f, "usage: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::InvalidProblem("bad".into());
+        assert!(e.to_string().contains("invalid problem"));
+        let e = Error::NotConverged { iterations: 3, residual: 0.5 };
+        assert!(e.to_string().contains("3 iterations"));
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

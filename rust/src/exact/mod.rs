@@ -1,0 +1,261 @@
+//! Exact baselines (test oracles): exhaustive per-group subproblem solving
+//! and a branch-and-bound solver for tiny full instances.
+//!
+//! The paper bundles commercial solvers (CPLEX/Gurobi/OR-tools) into its
+//! mappers for the non-hierarchical case; offline we stand in with
+//! exhaustive enumeration — the subproblems are `O(M)` variables, so
+//! `2^M` enumeration is exact and fast for the `M ≤ 20` oracles need.
+
+use crate::error::{Error, Result};
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{GroupBuf, GroupSource, MaterializedProblem};
+
+/// Exhaustively solve the per-group subproblem `max Σ p̃_j x_j` subject to
+/// the laminar locals: returns `(best_x, best_value)`.
+///
+/// Oracle for Proposition 4.1 (the greedy of Algorithm 1 is optimal).
+/// Panics if `M > 25` (the caller's responsibility — oracles are for tiny
+/// instances).
+pub fn solve_group_exact(ptilde: &[f64], locals: &LaminarProfile) -> (Vec<u8>, f64) {
+    let m = ptilde.len();
+    assert!(m <= 25, "exhaustive oracle limited to M ≤ 25, got {m}");
+    let mut best_mask = 0u32;
+    let mut best_val = 0.0f64; // empty selection is always feasible
+    let mut x = vec![0u8; m];
+    for mask in 0u32..(1u32 << m) {
+        let mut val = 0.0;
+        for (j, xj) in x.iter_mut().enumerate() {
+            *xj = ((mask >> j) & 1) as u8;
+            if *xj != 0 {
+                val += ptilde[j];
+            }
+        }
+        if val > best_val && locals.is_feasible(&x) {
+            best_val = val;
+            best_mask = mask;
+        }
+    }
+    for (j, xj) in x.iter_mut().enumerate() {
+        *xj = ((best_mask >> j) & 1) as u8;
+    }
+    (x, best_val)
+}
+
+/// Exact optimum of a (tiny) full instance by depth-first branch and bound
+/// over groups. Exponential — intended for `N·M ≲ 24` in property tests.
+///
+/// Bound: current profit + Σ of remaining groups' unconstrained optima.
+pub fn solve_ip_exact(problem: &MaterializedProblem) -> Result<f64> {
+    let dims = problem.dims();
+    let (n, m, kk) = (dims.n_groups, dims.n_items, dims.n_global);
+    if n * m > 24 {
+        return Err(Error::InvalidProblem(format!(
+            "exact IP solver limited to N·M ≤ 24, got {}",
+            n * m
+        )));
+    }
+    // per-group feasible subsets with their profit and consumption
+    let locals = problem.locals().clone();
+    let mut buf = GroupBuf::new(dims, problem.is_dense());
+    let mut group_opts: Vec<Vec<(f64, Vec<f64>)>> = Vec::with_capacity(n);
+    let mut x = vec![0u8; m];
+    for i in 0..n {
+        problem.fill_group(i, &mut buf);
+        let mut opts = Vec::new();
+        for mask in 0u32..(1u32 << m) {
+            for (j, xj) in x.iter_mut().enumerate() {
+                *xj = ((mask >> j) & 1) as u8;
+            }
+            if !locals.is_feasible(&x) {
+                continue;
+            }
+            let mut profit = 0.0;
+            let mut cons = vec![0.0f64; kk];
+            for j in 0..m {
+                if x[j] != 0 {
+                    profit += buf.profits[j] as f64;
+                    for (k, c) in cons.iter_mut().enumerate() {
+                        *c += buf.cost(j, k, kk) as f64;
+                    }
+                }
+            }
+            opts.push((profit, cons));
+        }
+        // sort subsets by descending profit so good solutions are found
+        // early and the bound prunes aggressively
+        opts.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        group_opts.push(opts);
+    }
+    // optimistic suffix bound
+    let mut suffix_best = vec![0.0f64; n + 1];
+    for i in (0..n).rev() {
+        suffix_best[i] = suffix_best[i + 1] + group_opts[i][0].0;
+    }
+
+    let budgets = problem.budgets().to_vec();
+    let mut best = 0.0f64;
+    let mut cons = vec![0.0f64; kk];
+    dfs(&group_opts, &suffix_best, &budgets, 0, 0.0, &mut cons, &mut best);
+    Ok(best)
+}
+
+fn dfs(
+    group_opts: &[Vec<(f64, Vec<f64>)>],
+    suffix_best: &[f64],
+    budgets: &[f64],
+    i: usize,
+    profit: f64,
+    cons: &mut [f64],
+    best: &mut f64,
+) {
+    if i == group_opts.len() {
+        if profit > *best {
+            *best = profit;
+        }
+        return;
+    }
+    if profit + suffix_best[i] <= *best {
+        return; // bound
+    }
+    'opts: for (p, c) in &group_opts[i] {
+        for (k, (used, b)) in cons.iter().zip(budgets).enumerate() {
+            if used + c[k] > b + 1e-12 {
+                continue 'opts;
+            }
+        }
+        for (used, inc) in cons.iter_mut().zip(c) {
+            *used += inc;
+        }
+        dfs(group_opts, suffix_best, budgets, i + 1, profit + p, cons, best);
+        for (used, inc) in cons.iter_mut().zip(c) {
+            *used -= inc;
+        }
+    }
+}
+
+/// Random laminar profile for property tests: recursive interval splitting
+/// over `[0, m)`. (Test support — compiled only for test builds.)
+#[cfg(test)]
+pub(crate) fn random_laminar(
+    rng: &mut crate::rng::Xoshiro256pp,
+    m: usize,
+) -> LaminarProfile {
+    use crate::instance::laminar::LocalConstraint;
+    let mut cs = Vec::new();
+    fn split(
+        rng: &mut crate::rng::Xoshiro256pp,
+        lo: usize,
+        hi: usize,
+        cs: &mut Vec<LocalConstraint>,
+    ) {
+        let width = hi - lo;
+        if width == 0 {
+            return;
+        }
+        if rng.coin(0.7) {
+            let cap = 1 + rng.below(width as u64) as u32;
+            cs.push(LocalConstraint::new((lo as u16..hi as u16).collect(), cap));
+        }
+        if width >= 2 && rng.coin(0.5) {
+            let mid = lo + 1 + rng.below((width - 1) as u64) as usize;
+            split(rng, lo, mid, cs);
+            split(rng, mid, hi, cs);
+        }
+    }
+    split(rng, 0, m, &mut cs);
+    LaminarProfile::new(cs).expect("interval splitting is laminar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+    use crate::instance::laminar::LaminarProfile;
+    use crate::instance::problem::Dims;
+    use crate::rng::Xoshiro256pp;
+    use crate::solver::greedy::{greedy_select, GroupScratch};
+
+    #[test]
+    fn group_exact_matches_hand_case() {
+        let locals = LaminarProfile::single(3, 1);
+        let (x, v) = solve_group_exact(&[1.0, 3.0, 2.0], &locals);
+        assert_eq!(x, vec![0, 1, 0]);
+        assert_eq!(v, 3.0);
+    }
+
+    #[test]
+    fn group_exact_empty_when_all_negative() {
+        let locals = LaminarProfile::single(3, 3);
+        let (x, v) = solve_group_exact(&[-1.0, -2.0, -0.5], &locals);
+        assert_eq!(x, vec![0, 0, 0]);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn greedy_is_optimal_randomized_proposition_4_1() {
+        // Proposition 4.1: Algorithm 1 == exhaustive optimum over random
+        // laminar profiles and random adjusted profits
+        let mut rng = Xoshiro256pp::new(99);
+        for trial in 0..300 {
+            let m = 2 + rng.below(7) as usize; // 2..=8
+            let profile = crate::exact::random_laminar(&mut rng, m);
+            let ptilde: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 2.0)).collect();
+            let (_, exact_v) = solve_group_exact(&ptilde, &profile);
+            let mut s = GroupScratch::new(m);
+            s.ptilde.copy_from_slice(&ptilde);
+            greedy_select(&profile, &mut s);
+            let greedy_v: f64 =
+                ptilde.iter().zip(&s.x).filter(|(_, &x)| x != 0).map(|(&p, _)| p).sum();
+            assert!(profile.is_feasible(&s.x), "greedy infeasible on trial {trial}");
+            assert!(
+                (greedy_v - exact_v).abs() < 1e-9,
+                "trial {trial}: greedy {greedy_v} vs exact {exact_v} (m={m}, p={ptilde:?}, profile={profile:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn ip_exact_simple_instance() {
+        // 2 groups × 2 items, K=1, budget forces one item total
+        let dims = Dims { n_groups: 2, n_items: 2, n_global: 1 };
+        let mut p =
+            MaterializedProblem::zeroed_dense(dims, vec![1.0], LaminarProfile::single(2, 2))
+                .unwrap();
+        p.set_profit(0, 0, 3.0);
+        p.set_profit(0, 1, 2.0);
+        p.set_profit(1, 0, 4.0);
+        p.set_profit(1, 1, 1.0);
+        for i in 0..2 {
+            for j in 0..2 {
+                p.set_cost(i, j, 0, 1.0);
+            }
+        }
+        // budget 1 → pick the single best item (4.0)
+        assert_eq!(solve_ip_exact(&p).unwrap(), 4.0);
+        // budget 2 → best pair: 4 + 3
+        p.set_budgets(vec![2.0]);
+        assert_eq!(solve_ip_exact(&p).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn ip_exact_respects_locals() {
+        let dims = Dims { n_groups: 1, n_items: 3, n_global: 1 };
+        let mut p =
+            MaterializedProblem::zeroed_dense(dims, vec![100.0], LaminarProfile::single(3, 1))
+                .unwrap();
+        for (j, v) in [5.0, 7.0, 6.0].iter().enumerate() {
+            p.set_profit(0, j, *v);
+            p.set_cost(0, j, 0, 1.0);
+        }
+        assert_eq!(solve_ip_exact(&p).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn ip_exact_rejects_big_instances() {
+        let p = MaterializedProblem::from_source(&SyntheticProblem::new(
+            GeneratorConfig::sparse(10, 10, 10),
+        ))
+        .unwrap();
+        assert!(solve_ip_exact(&p).is_err());
+    }
+}

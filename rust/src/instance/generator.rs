@@ -1,0 +1,316 @@
+//! Synthetic instance generators matching the paper's experiment setup (§6):
+//! `p_ij ~ U[0,1]`; cost coefficients either `U[0,1]` or the Fig-1 mixture
+//! (`U[0,1]` w.p. ½, `U[0,10]` w.p. ½); *sparse* and *dense* global
+//! constraint classes; budgets scaled with `M`, `N` and the local profile so
+//! the global constraints bind.
+//!
+//! Groups are derived deterministically from `(seed, group_id)` via
+//! [`crate::rng::mix64`], so instances are never materialized: a
+//! 100-million-group problem costs no memory, exactly like the paper's
+//! mappers streaming rows out of a distributed store.
+
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{CostsBuf, Dims, GroupBuf, GroupSource};
+use crate::rng::{mix64, Xoshiro256pp};
+
+/// Global-constraint class (paper §6: "Two classes of global constraints
+/// (sparse and dense) are experimented with").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostClass {
+    /// Every item consumes from every knapsack: `b_ijk > 0` for all `k`.
+    Dense,
+    /// Each item consumes from exactly one knapsack (Algorithm 5's
+    /// precondition when `M = K` with the identity mapping).
+    Sparse,
+}
+
+/// Distribution for a coefficient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Dist {
+    /// Uniform on `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+    /// 50/50 mixture of two uniforms (the paper's Fig-1 cost setting).
+    MixUniform { lo1: f64, hi1: f64, lo2: f64, hi2: f64 },
+}
+
+impl Dist {
+    /// Standard `U[0,1)`.
+    pub const UNIT: Dist = Dist::Uniform { lo: 0.0, hi: 1.0 };
+
+    /// Sample once.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256pp) -> f64 {
+        match *self {
+            Dist::Uniform { lo, hi } => rng.uniform(lo, hi),
+            Dist::MixUniform { lo1, hi1, lo2, hi2 } => {
+                if rng.coin(0.5) {
+                    rng.uniform(lo1, hi1)
+                } else {
+                    rng.uniform(lo2, hi2)
+                }
+            }
+        }
+    }
+
+    /// Expected value (used for budget scaling).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Dist::Uniform { lo, hi } => 0.5 * (lo + hi),
+            Dist::MixUniform { lo1, hi1, lo2, hi2 } => 0.25 * (lo1 + hi1) + 0.25 * (lo2 + hi2),
+        }
+    }
+}
+
+/// Full generator specification.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// `N`.
+    pub n_groups: usize,
+    /// `M`.
+    pub n_items: usize,
+    /// `K`.
+    pub n_global: usize,
+    /// Sparse vs dense costs.
+    pub cost_class: CostClass,
+    /// Profit distribution (paper: `U[0,1]`).
+    pub profit_dist: Dist,
+    /// Cost distribution (paper: `U[0,1]`, or the Fig-1 mixture).
+    pub cost_dist: Dist,
+    /// Hierarchical local constraints shared by all groups.
+    pub locals: LaminarProfile,
+    /// Budget as a fraction of the expected *unconstrained* consumption;
+    /// < 1 makes the global constraints bind (paper scales budgets "to
+    /// ensure tightness").
+    pub budget_tightness: f64,
+    /// Instance seed.
+    pub seed: u64,
+}
+
+impl GeneratorConfig {
+    /// Paper's sparse class: `U[0,1]` profits/costs, `C=[1]` locals unless
+    /// overridden, identity item→knapsack mapping when `m == k`.
+    pub fn sparse(n: usize, m: usize, k: usize) -> Self {
+        Self {
+            n_groups: n,
+            n_items: m,
+            n_global: k,
+            cost_class: CostClass::Sparse,
+            profit_dist: Dist::UNIT,
+            cost_dist: Dist::UNIT,
+            locals: LaminarProfile::single(m, 1),
+            budget_tightness: 0.25,
+            seed: 0,
+        }
+    }
+
+    /// Paper's dense class.
+    pub fn dense(n: usize, m: usize, k: usize) -> Self {
+        Self { cost_class: CostClass::Dense, ..Self::sparse(n, m, k) }
+    }
+
+    /// The Fig-1 setting: dense, `M=10`, `b` from the 50/50
+    /// `U[0,1]`/`U[0,10]` mixture, local scenario supplied by the caller.
+    pub fn fig1(n: usize, k: usize, locals: LaminarProfile) -> Self {
+        Self {
+            n_items: 10,
+            cost_dist: Dist::MixUniform { lo1: 0.0, hi1: 1.0, lo2: 0.0, hi2: 10.0 },
+            locals,
+            ..Self::dense(n, 10, k)
+        }
+    }
+
+    /// Override the seed (builder style).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override local constraints.
+    pub fn with_locals(mut self, locals: LaminarProfile) -> Self {
+        self.locals = locals;
+        self
+    }
+
+    /// Override budget tightness.
+    pub fn with_tightness(mut self, t: f64) -> Self {
+        self.budget_tightness = t;
+        self
+    }
+
+    /// Budgets scaled with `N`, `M` and the local profile: expected
+    /// unconstrained consumption of knapsack `k` times the tightness
+    /// factor. Dense items consume from all `K` knapsacks; sparse items
+    /// from exactly one (uniformly, or identity when `m == k`).
+    pub fn budgets(&self) -> Vec<f64> {
+        let sel = self.locals.max_selected(self.n_items) as f64;
+        let per_group = match self.cost_class {
+            CostClass::Dense => sel * self.cost_dist.mean(),
+            CostClass::Sparse => sel * self.cost_dist.mean() / self.n_global as f64,
+        };
+        let b = (self.budget_tightness * self.n_groups as f64 * per_group).max(f64::MIN_POSITIVE);
+        vec![b; self.n_global]
+    }
+}
+
+/// A [`GroupSource`] that regenerates any group on demand from the seed.
+#[derive(Debug, Clone)]
+pub struct SyntheticProblem {
+    config: GeneratorConfig,
+    budgets: Vec<f64>,
+}
+
+impl SyntheticProblem {
+    /// Build from a config (budgets derived once via
+    /// [`GeneratorConfig::budgets`]).
+    pub fn new(config: GeneratorConfig) -> Self {
+        let budgets = config.budgets();
+        Self { config, budgets }
+    }
+
+    /// The generating config.
+    pub fn config(&self) -> &GeneratorConfig {
+        &self.config
+    }
+
+    /// Replace budgets (pre-solving rescales them on the sampled
+    /// subproblem).
+    pub fn with_budgets(mut self, budgets: Vec<f64>) -> Self {
+        self.budgets = budgets;
+        self
+    }
+}
+
+impl GroupSource for SyntheticProblem {
+    fn dims(&self) -> Dims {
+        Dims {
+            n_groups: self.config.n_groups,
+            n_items: self.config.n_items,
+            n_global: self.config.n_global,
+        }
+    }
+
+    fn is_dense(&self) -> bool {
+        self.config.cost_class == CostClass::Dense
+    }
+
+    fn locals(&self) -> &LaminarProfile {
+        &self.config.locals
+    }
+
+    fn budgets(&self) -> &[f64] {
+        &self.budgets
+    }
+
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+        let mut rng = Xoshiro256pp::new(mix64(self.config.seed, i as u64));
+        let m = self.config.n_items;
+        let k = self.config.n_global;
+        for j in 0..m {
+            buf.profits[j] = self.config.profit_dist.sample(&mut rng) as f32;
+        }
+        match &mut buf.costs {
+            CostsBuf::Dense(b) => {
+                debug_assert_eq!(b.len(), m * k);
+                for v in b.iter_mut() {
+                    *v = self.config.cost_dist.sample(&mut rng) as f32;
+                }
+            }
+            CostsBuf::Sparse { knap, cost } => {
+                for j in 0..m {
+                    knap[j] =
+                        if m == k { j as u32 } else { rng.below(k as u64) as u32 };
+                    cost[j] = self.config.cost_dist.sample(&mut rng) as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::problem::GroupBuf;
+
+    #[test]
+    fn deterministic_per_group() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 10, 10).with_seed(5));
+        let mut a = GroupBuf::new(p.dims(), false);
+        let mut b = GroupBuf::new(p.dims(), false);
+        p.fill_group(42, &mut a);
+        p.fill_group(7, &mut b); // interleave another group
+        p.fill_group(42, &mut b);
+        assert_eq!(a.profits, b.profits);
+        assert_eq!(a.costs, b.costs);
+    }
+
+    #[test]
+    fn sparse_identity_mapping_when_m_equals_k() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(10, 6, 6));
+        let mut buf = GroupBuf::new(p.dims(), false);
+        p.fill_group(3, &mut buf);
+        match &buf.costs {
+            CostsBuf::Sparse { knap, .. } => {
+                assert_eq!(knap, &(0..6).collect::<Vec<u32>>());
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn sparse_random_mapping_in_range() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(10, 5, 16));
+        let mut buf = GroupBuf::new(p.dims(), false);
+        for i in 0..10 {
+            p.fill_group(i, &mut buf);
+            match &buf.costs {
+                CostsBuf::Sparse { knap, .. } => assert!(knap.iter().all(|&x| x < 16)),
+                _ => panic!("expected sparse"),
+            }
+        }
+    }
+
+    #[test]
+    fn values_within_distribution_support() {
+        let cfg = GeneratorConfig::fig1(50, 5, LaminarProfile::scenario_c223(10));
+        let p = SyntheticProblem::new(cfg);
+        assert!(p.is_dense());
+        let mut buf = GroupBuf::new(p.dims(), true);
+        for i in 0..50 {
+            p.fill_group(i, &mut buf);
+            assert!(buf.profits.iter().all(|&x| (0.0..1.0).contains(&x)));
+            match &buf.costs {
+                CostsBuf::Dense(b) => assert!(b.iter().all(|&x| (0.0..10.0).contains(&x))),
+                _ => panic!("expected dense"),
+            }
+        }
+    }
+
+    #[test]
+    fn budgets_scale_with_n_and_tightness() {
+        let c1 = GeneratorConfig::sparse(1000, 10, 10);
+        let c2 = GeneratorConfig::sparse(2000, 10, 10);
+        assert!((c2.budgets()[0] / c1.budgets()[0] - 2.0).abs() < 1e-9);
+        let c3 = GeneratorConfig::sparse(1000, 10, 10).with_tightness(0.5);
+        assert!((c3.budgets()[0] / c1.budgets()[0] - 2.0).abs() < 1e-9);
+        // dense budgets don't divide by K
+        let cd = GeneratorConfig::dense(1000, 10, 10);
+        assert!(cd.budgets()[0] > c1.budgets()[0]);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let p1 = SyntheticProblem::new(GeneratorConfig::sparse(10, 4, 4).with_seed(1));
+        let p2 = SyntheticProblem::new(GeneratorConfig::sparse(10, 4, 4).with_seed(2));
+        let mut a = GroupBuf::new(p1.dims(), false);
+        let mut b = GroupBuf::new(p2.dims(), false);
+        p1.fill_group(0, &mut a);
+        p2.fill_group(0, &mut b);
+        assert_ne!(a.profits, b.profits);
+    }
+
+    #[test]
+    fn validates() {
+        let p = SyntheticProblem::new(GeneratorConfig::dense(10, 4, 3));
+        p.validate().unwrap();
+    }
+}

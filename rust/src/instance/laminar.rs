@@ -1,0 +1,306 @@
+//! Hierarchical (laminar) local constraints — paper Definition 2.1.
+//!
+//! A family `{S_l}` over the item set `[M]` is *laminar* when any two sets
+//! are either disjoint or nested. The paper builds a DAG with an arc
+//! `S_l → S_l'` iff `S_l ⊆ S_l'`; traversing it "from the lowest level"
+//! (children before parents) is exactly a traversal in non-decreasing set
+//! size, which is how [`LaminarProfile`] stores its topological order.
+
+use crate::error::{Error, Result};
+
+/// One local constraint: `Σ_{j∈items} x_ij ≤ cap`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LocalConstraint {
+    /// Item indices (within a group), strictly increasing.
+    pub items: Vec<u16>,
+    /// Capacity `C_l ≥ 1` (paper: strictly positive).
+    pub cap: u32,
+}
+
+impl LocalConstraint {
+    /// Construct with sorted, deduplicated items.
+    pub fn new(mut items: Vec<u16>, cap: u32) -> Self {
+        items.sort_unstable();
+        items.dedup();
+        Self { items, cap }
+    }
+}
+
+/// A validated laminar family plus its topological order. Shared by all
+/// groups of an instance (the paper's experiments use one profile per run;
+/// per-group profiles just mean constructing several of these).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaminarProfile {
+    constraints: Vec<LocalConstraint>,
+    /// Indices into `constraints`, children before parents.
+    topo: Vec<u32>,
+}
+
+impl LaminarProfile {
+    /// Build and validate. Rejects empty/zero-cap sets and non-laminar
+    /// overlap.
+    pub fn new(constraints: Vec<LocalConstraint>) -> Result<Self> {
+        for (l, c) in constraints.iter().enumerate() {
+            if c.items.is_empty() {
+                return Err(Error::InvalidProblem(format!("local constraint {l} has no items")));
+            }
+            if c.cap == 0 {
+                return Err(Error::InvalidProblem(format!(
+                    "local constraint {l} has cap 0 (paper requires C_l > 0)"
+                )));
+            }
+        }
+        for a in 0..constraints.len() {
+            for b in (a + 1)..constraints.len() {
+                if !laminar_pair(&constraints[a].items, &constraints[b].items) {
+                    return Err(Error::InvalidProblem(format!(
+                        "local constraints {a} and {b} overlap without nesting (not laminar)"
+                    )));
+                }
+            }
+        }
+        // children before parents == ascending set size (ties arbitrary:
+        // equal-size sets in a laminar family are disjoint or identical)
+        let mut topo: Vec<u32> = (0..constraints.len() as u32).collect();
+        topo.sort_by_key(|&l| constraints[l as usize].items.len());
+        Ok(Self { constraints, topo })
+    }
+
+    /// The paper's `C=[c]` scenario: one constraint over all `m` items.
+    pub fn single(m: usize, cap: u32) -> Self {
+        Self::new(vec![LocalConstraint::new((0..m as u16).collect(), cap)])
+            .expect("single constraint is trivially laminar")
+    }
+
+    /// The paper's Fig-1 `C=[2,2,3]` scenario: the item set split into two
+    /// halves capped at 2 each, nested under a root capped at 3.
+    pub fn scenario_c223(m: usize) -> Self {
+        let half = (m / 2) as u16;
+        Self::new(vec![
+            LocalConstraint::new((0..half).collect(), 2),
+            LocalConstraint::new((half..m as u16).collect(), 2),
+            LocalConstraint::new((0..m as u16).collect(), 3),
+        ])
+        .expect("two halves + root is laminar")
+    }
+
+    /// A deeper taxonomy used by the marketing example: `levels` of
+    /// power-of-two blocks with caps growing by one per level.
+    pub fn taxonomy(m: usize, levels: usize) -> Result<Self> {
+        let mut cs = Vec::new();
+        for lvl in 0..levels {
+            let width = m >> (levels - 1 - lvl);
+            if width == 0 {
+                continue;
+            }
+            let cap = (lvl + 1) as u32;
+            let mut start = 0usize;
+            while start < m {
+                let end = (start + width).min(m);
+                cs.push(LocalConstraint::new((start as u16..end as u16).collect(), cap));
+                start = end;
+            }
+        }
+        Self::new(cs)
+    }
+
+    /// Constraints in topological (children-first) order.
+    pub fn topo_iter(&self) -> impl Iterator<Item = &LocalConstraint> {
+        self.topo.iter().map(move |&l| &self.constraints[l as usize])
+    }
+
+    /// All constraints, declaration order.
+    pub fn constraints(&self) -> &[LocalConstraint] {
+        &self.constraints
+    }
+
+    /// Number of local constraints `L`.
+    pub fn len(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// True when no local constraints exist.
+    pub fn is_empty(&self) -> bool {
+        self.constraints.is_empty()
+    }
+
+    /// Upper bound on the number of items a feasible solution can select
+    /// out of `m` (used to scale budgets so global constraints bind).
+    pub fn max_selected(&self, m: usize) -> usize {
+        // greedily: root-most caps dominate; a safe bound is the min over
+        // covering constraints of cap, summed over a partition. Compute by
+        // DP over the laminar forest: bound(S) = min(cap_S, Σ bound(children)
+        // + uncovered items of S).
+        let mut bound = vec![0usize; self.constraints.len()];
+        let mut covered_by = vec![usize::MAX; m]; // smallest covering set idx
+        for &l in &self.topo {
+            let c = &self.constraints[l as usize];
+            let mut inner = 0usize;
+            let mut counted_children = std::collections::HashSet::new();
+            for &j in &c.items {
+                let owner = covered_by[j as usize];
+                if owner == usize::MAX {
+                    inner += 1; // item directly under this set
+                } else if counted_children.insert(owner) {
+                    inner += bound[owner];
+                }
+            }
+            bound[l as usize] = inner.min(c.cap as usize);
+            for &j in &c.items {
+                covered_by[j as usize] = l as usize;
+            }
+        }
+        // roots: items whose final cover is a root set + uncovered items
+        let mut total = 0usize;
+        let mut seen_roots = std::collections::HashSet::new();
+        for j in 0..m {
+            match covered_by[j] {
+                usize::MAX => total += 1,
+                r => {
+                    if seen_roots.insert(r) {
+                        total += bound[r];
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Check the solution `x` (0/1 per item) against every local constraint.
+    pub fn is_feasible(&self, x: &[u8]) -> bool {
+        self.constraints.iter().all(|c| {
+            let sel: u32 = c.items.iter().map(|&j| x[j as usize] as u32).sum();
+            sel <= c.cap
+        })
+    }
+
+    /// Validate that all item indices are `< m`.
+    pub fn check_items_in_range(&self, m: usize) -> Result<()> {
+        for (l, c) in self.constraints.iter().enumerate() {
+            if let Some(&j) = c.items.iter().find(|&&j| j as usize >= m) {
+                return Err(Error::InvalidProblem(format!(
+                    "local constraint {l} references item {j} but M={m}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// True when sorted sets `a`, `b` are disjoint or one contains the other.
+fn laminar_pair(a: &[u16], b: &[u16]) -> bool {
+    let inter = intersection_size(a, b);
+    inter == 0 || inter == a.len() || inter == b.len()
+}
+
+fn intersection_size(a: &[u16], b: &[u16]) -> usize {
+    let (mut i, mut j, mut n) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_disjoint_and_nested() {
+        LaminarProfile::new(vec![
+            LocalConstraint::new(vec![0, 1], 1),
+            LocalConstraint::new(vec![2, 3], 1),
+            LocalConstraint::new(vec![0, 1, 2, 3], 2),
+        ])
+        .unwrap();
+    }
+
+    #[test]
+    fn rejects_partial_overlap() {
+        let err = LaminarProfile::new(vec![
+            LocalConstraint::new(vec![0, 1], 1),
+            LocalConstraint::new(vec![1, 2], 1),
+        ]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn rejects_zero_cap_and_empty() {
+        assert!(LaminarProfile::new(vec![LocalConstraint::new(vec![0], 0)]).is_err());
+        assert!(LaminarProfile::new(vec![LocalConstraint::new(vec![], 1)]).is_err());
+    }
+
+    #[test]
+    fn topo_is_children_first() {
+        let p = LaminarProfile::new(vec![
+            LocalConstraint::new((0..10).collect(), 3),
+            LocalConstraint::new(vec![0, 1, 2], 2),
+            LocalConstraint::new(vec![5, 6], 1),
+        ])
+        .unwrap();
+        let sizes: Vec<usize> = p.topo_iter().map(|c| c.items.len()).collect();
+        assert_eq!(sizes, vec![2, 3, 10]);
+    }
+
+    #[test]
+    fn scenario_c223_shape() {
+        let p = LaminarProfile::scenario_c223(10);
+        assert_eq!(p.len(), 3);
+        let caps: Vec<u32> = p.topo_iter().map(|c| c.cap).collect();
+        assert_eq!(caps, vec![2, 2, 3]);
+        assert_eq!(p.max_selected(10), 3);
+    }
+
+    #[test]
+    fn single_scenario() {
+        let p = LaminarProfile::single(10, 2);
+        assert_eq!(p.max_selected(10), 2);
+        assert!(p.is_feasible(&[1, 1, 0, 0, 0, 0, 0, 0, 0, 0]));
+        assert!(!p.is_feasible(&[1, 1, 1, 0, 0, 0, 0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn max_selected_with_uncovered_items() {
+        // 4 items, only items 0-1 constrained to 1; items 2,3 free
+        let p = LaminarProfile::new(vec![LocalConstraint::new(vec![0, 1], 1)]).unwrap();
+        assert_eq!(p.max_selected(4), 3);
+    }
+
+    #[test]
+    fn max_selected_nested_chain() {
+        // {0,1} ≤ 2, {0,1,2,3} ≤ 3, {0..6} ≤ 4
+        let p = LaminarProfile::new(vec![
+            LocalConstraint::new(vec![0, 1], 2),
+            LocalConstraint::new(vec![0, 1, 2, 3], 3),
+            LocalConstraint::new((0..6).collect(), 4),
+        ])
+        .unwrap();
+        assert_eq!(p.max_selected(6), 4);
+    }
+
+    #[test]
+    fn taxonomy_is_laminar_and_bounded() {
+        let p = LaminarProfile::taxonomy(16, 3).unwrap();
+        assert!(p.len() > 3);
+        assert!(p.max_selected(16) <= 16);
+        p.check_items_in_range(16).unwrap();
+        assert!(p.check_items_in_range(8).is_err());
+    }
+
+    #[test]
+    fn feasibility_checker() {
+        let p = LaminarProfile::scenario_c223(6);
+        // halves: {0,1,2} cap2, {3,4,5} cap2, root cap3
+        assert!(p.is_feasible(&[1, 1, 0, 1, 0, 0]));
+        assert!(!p.is_feasible(&[1, 1, 1, 0, 0, 0])); // violates first half
+        assert!(!p.is_feasible(&[1, 1, 0, 1, 1, 0])); // violates root
+    }
+}

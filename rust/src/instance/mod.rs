@@ -1,0 +1,25 @@
+//! Problem instances: the generalized knapsack data model (paper §2).
+//!
+//! The central abstraction is [`GroupSource`]: anything that can produce the
+//! per-group data `(p_ij, b_ijk)` for group `i` on demand. Two
+//! implementations:
+//!
+//! * [`problem::MaterializedProblem`] — everything resident in memory
+//!   (tests, small experiments, the LP baseline);
+//! * [`generator::SyntheticProblem`] — groups derived deterministically from
+//!   `(seed, group_id)` and never materialized, which is what lets a single
+//!   box exercise hundred-million-group instances the way the paper's
+//!   mappers stream them from a distributed store.
+//!
+//! Local constraints are *hierarchical* ([`laminar::LaminarProfile`],
+//! Definition 2.1): any two index sets are disjoint or nested.
+
+pub mod generator;
+pub mod laminar;
+pub mod problem;
+pub mod shard;
+
+pub use generator::{CostClass, GeneratorConfig, SyntheticProblem};
+pub use laminar::{LaminarProfile, LocalConstraint};
+pub use problem::{CostsBuf, Dims, GroupBuf, GroupSource, MaterializedProblem};
+pub use shard::{ShardRange, Shards};

@@ -1,0 +1,394 @@
+//! Core problem model: dimensions, per-group buffers, the [`GroupSource`]
+//! abstraction and the in-memory [`MaterializedProblem`].
+
+use crate::error::{Error, Result};
+use crate::instance::laminar::LaminarProfile;
+
+/// Instance dimensions: `N` groups × `M` items per group × `K` global
+/// knapsack constraints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dims {
+    /// Number of groups (users), `N`. Billion-scale in production.
+    pub n_groups: usize,
+    /// Items per group, `M`. Small (≤ ~100).
+    pub n_items: usize,
+    /// Global knapsack constraints, `K`. Small (≤ ~hundreds).
+    pub n_global: usize,
+}
+
+impl Dims {
+    /// Total number of decision variables `N·M`.
+    pub fn n_vars(&self) -> usize {
+        self.n_groups * self.n_items
+    }
+}
+
+/// Cost coefficients for the `M` items of one group.
+///
+/// * `Dense` — `b_ijk` for all `(j,k)`, row-major `[j][k]`, the paper's
+///   "dense global constraints" class.
+/// * `Sparse` — each item `j` consumes from exactly one knapsack
+///   `knap[j]` at rate `cost[j]` (`b_ijk = 0` elsewhere), the paper's
+///   "sparse" class and the precondition of Algorithm 5.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CostsBuf {
+    /// Dense `M×K` block.
+    Dense(Vec<f32>),
+    /// One (knapsack, cost) pair per item.
+    Sparse { knap: Vec<u32>, cost: Vec<f32> },
+}
+
+impl CostsBuf {
+    /// Allocate a zeroed buffer of the right layout.
+    pub fn zeroed(m: usize, k: usize, dense: bool) -> Self {
+        if dense {
+            CostsBuf::Dense(vec![0.0; m * k])
+        } else {
+            let _ = k;
+            CostsBuf::Sparse { knap: vec![0; m], cost: vec![0.0; m] }
+        }
+    }
+
+    /// `b_ijk` for this group's item `j`, knapsack `k`.
+    #[inline]
+    pub fn cost(&self, j: usize, k: usize, n_global: usize) -> f32 {
+        match self {
+            CostsBuf::Dense(b) => b[j * n_global + k],
+            CostsBuf::Sparse { knap, cost } => {
+                if knap[j] as usize == k {
+                    cost[j]
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// True if this is the dense layout.
+    pub fn is_dense(&self) -> bool {
+        matches!(self, CostsBuf::Dense(_))
+    }
+}
+
+/// Reusable per-group scratch buffer filled by [`GroupSource::fill_group`].
+/// The map workers allocate one per worker and reuse it across the shard —
+/// there is no per-group allocation on the hot path.
+#[derive(Debug, Clone)]
+pub struct GroupBuf {
+    /// `p_ij` for `j ∈ [M]`.
+    pub profits: Vec<f32>,
+    /// `b_ijk`.
+    pub costs: CostsBuf,
+}
+
+impl GroupBuf {
+    /// Allocate a buffer matching `dims` and layout.
+    pub fn new(dims: Dims, dense: bool) -> Self {
+        Self {
+            profits: vec![0.0; dims.n_items],
+            costs: CostsBuf::zeroed(dims.n_items, dims.n_global, dense),
+        }
+    }
+
+    /// `b_ijk` accessor for the buffered group.
+    #[inline]
+    pub fn cost(&self, j: usize, k: usize, n_global: usize) -> f32 {
+        self.costs.cost(j, k, n_global)
+    }
+}
+
+/// A source of group data: the solver's view of an instance.
+///
+/// Implementations must be `Sync` — the MapReduce engine calls
+/// `fill_group` concurrently from worker threads, each with its own
+/// [`GroupBuf`].
+pub trait GroupSource: Sync {
+    /// Instance dimensions.
+    fn dims(&self) -> Dims;
+    /// Whether groups use dense cost blocks (vs sparse one-knapsack items).
+    fn is_dense(&self) -> bool;
+    /// The shared hierarchical local-constraint profile (paper Def. 2.1).
+    fn locals(&self) -> &LaminarProfile;
+    /// Global budgets `B_k`, strictly positive.
+    fn budgets(&self) -> &[f64];
+    /// Write group `i`'s `(p, b)` into `buf`.
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf);
+
+    /// Validate basic invariants; call once before solving.
+    fn validate(&self) -> Result<()> {
+        let d = self.dims();
+        if d.n_groups == 0 || d.n_items == 0 || d.n_global == 0 {
+            return Err(Error::InvalidProblem(format!(
+                "dimensions must be positive, got N={} M={} K={}",
+                d.n_groups, d.n_items, d.n_global
+            )));
+        }
+        if self.budgets().len() != d.n_global {
+            return Err(Error::InvalidProblem(format!(
+                "expected {} budgets, got {}",
+                d.n_global,
+                self.budgets().len()
+            )));
+        }
+        if let Some(b) = self.budgets().iter().find(|&&b| !(b > 0.0)) {
+            return Err(Error::InvalidProblem(format!("budgets must be strictly positive, got {b}")));
+        }
+        self.locals().check_items_in_range(d.n_items)?;
+        Ok(())
+    }
+}
+
+/// Fully in-memory instance. Layout is `f32` (the paper's coefficients live
+/// in `[0,10]`; accumulation happens in compensated `f64` downstream).
+#[derive(Debug, Clone)]
+pub struct MaterializedProblem {
+    dims: Dims,
+    /// `N×M`, row-major.
+    profits: Vec<f32>,
+    /// Dense: `N×M×K`; Sparse: parallel `knap`/`cost` of `N×M`.
+    costs: MaterializedCosts,
+    budgets: Vec<f64>,
+    locals: LaminarProfile,
+}
+
+#[derive(Debug, Clone)]
+enum MaterializedCosts {
+    Dense(Vec<f32>),
+    Sparse { knap: Vec<u32>, cost: Vec<f32> },
+}
+
+impl MaterializedProblem {
+    /// Zero-initialized dense instance; fill with the `set_*` methods.
+    pub fn zeroed_dense(dims: Dims, budgets: Vec<f64>, locals: LaminarProfile) -> Result<Self> {
+        let nm = dims
+            .n_groups
+            .checked_mul(dims.n_items)
+            .ok_or_else(|| Error::InvalidProblem("N*M overflows".into()))?;
+        let nmk = nm
+            .checked_mul(dims.n_global)
+            .ok_or_else(|| Error::InvalidProblem("N*M*K overflows".into()))?;
+        Ok(Self {
+            dims,
+            profits: vec![0.0; nm],
+            costs: MaterializedCosts::Dense(vec![0.0; nmk]),
+            budgets,
+            locals,
+        })
+    }
+
+    /// Zero-initialized sparse instance (every item initially mapped to
+    /// knapsack 0 with cost 0).
+    pub fn zeroed_sparse(dims: Dims, budgets: Vec<f64>, locals: LaminarProfile) -> Result<Self> {
+        let nm = dims
+            .n_groups
+            .checked_mul(dims.n_items)
+            .ok_or_else(|| Error::InvalidProblem("N*M overflows".into()))?;
+        Ok(Self {
+            dims,
+            profits: vec![0.0; nm],
+            costs: MaterializedCosts::Sparse { knap: vec![0; nm], cost: vec![0.0; nm] },
+            budgets,
+            locals,
+        })
+    }
+
+    /// Materialize any [`GroupSource`] (small instances only: O(N·M·K)).
+    pub fn from_source<S: GroupSource + ?Sized>(src: &S) -> Result<Self> {
+        let dims = src.dims();
+        let mut out = if src.is_dense() {
+            Self::zeroed_dense(dims, src.budgets().to_vec(), src.locals().clone())?
+        } else {
+            Self::zeroed_sparse(dims, src.budgets().to_vec(), src.locals().clone())?
+        };
+        let mut buf = GroupBuf::new(dims, src.is_dense());
+        for i in 0..dims.n_groups {
+            src.fill_group(i, &mut buf);
+            out.profits[i * dims.n_items..(i + 1) * dims.n_items].copy_from_slice(&buf.profits);
+            match (&mut out.costs, &buf.costs) {
+                (MaterializedCosts::Dense(dst), CostsBuf::Dense(srcb)) => {
+                    let w = dims.n_items * dims.n_global;
+                    dst[i * w..(i + 1) * w].copy_from_slice(srcb);
+                }
+                (MaterializedCosts::Sparse { knap, cost }, CostsBuf::Sparse { knap: kb, cost: cb }) => {
+                    knap[i * dims.n_items..(i + 1) * dims.n_items].copy_from_slice(kb);
+                    cost[i * dims.n_items..(i + 1) * dims.n_items].copy_from_slice(cb);
+                }
+                _ => unreachable!("layout fixed by constructor"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Set `p_ij`.
+    pub fn set_profit(&mut self, i: usize, j: usize, v: f32) {
+        self.profits[i * self.dims.n_items + j] = v;
+    }
+
+    /// Set dense `b_ijk`. Panics on a sparse instance.
+    pub fn set_cost(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        match &mut self.costs {
+            MaterializedCosts::Dense(b) => {
+                b[(i * self.dims.n_items + j) * self.dims.n_global + k] = v
+            }
+            _ => panic!("set_cost on sparse instance; use set_sparse_cost"),
+        }
+    }
+
+    /// Set sparse item mapping: item `j` of group `i` consumes `v` from `knapsack`.
+    pub fn set_sparse_cost(&mut self, i: usize, j: usize, knapsack: u32, v: f32) {
+        match &mut self.costs {
+            MaterializedCosts::Sparse { knap, cost } => {
+                let idx = i * self.dims.n_items + j;
+                knap[idx] = knapsack;
+                cost[idx] = v;
+            }
+            _ => panic!("set_sparse_cost on dense instance; use set_cost"),
+        }
+    }
+
+    /// Replace the budget vector.
+    pub fn set_budgets(&mut self, budgets: Vec<f64>) {
+        self.budgets = budgets;
+    }
+
+    /// `p_ij` accessor.
+    pub fn profit(&self, i: usize, j: usize) -> f32 {
+        self.profits[i * self.dims.n_items + j]
+    }
+
+    /// `b_ijk` accessor (works for both layouts).
+    pub fn cost(&self, i: usize, j: usize, k: usize) -> f32 {
+        match &self.costs {
+            MaterializedCosts::Dense(b) => {
+                b[(i * self.dims.n_items + j) * self.dims.n_global + k]
+            }
+            MaterializedCosts::Sparse { knap, cost } => {
+                let idx = i * self.dims.n_items + j;
+                if knap[idx] as usize == k {
+                    cost[idx]
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+impl GroupSource for MaterializedProblem {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn is_dense(&self) -> bool {
+        matches!(self.costs, MaterializedCosts::Dense(_))
+    }
+
+    fn locals(&self) -> &LaminarProfile {
+        &self.locals
+    }
+
+    fn budgets(&self) -> &[f64] {
+        &self.budgets
+    }
+
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+        let m = self.dims.n_items;
+        buf.profits.copy_from_slice(&self.profits[i * m..(i + 1) * m]);
+        match (&self.costs, &mut buf.costs) {
+            (MaterializedCosts::Dense(b), CostsBuf::Dense(dst)) => {
+                let w = m * self.dims.n_global;
+                dst.copy_from_slice(&b[i * w..(i + 1) * w]);
+            }
+            (MaterializedCosts::Sparse { knap, cost }, CostsBuf::Sparse { knap: dk, cost: dc }) => {
+                dk.copy_from_slice(&knap[i * m..(i + 1) * m]);
+                dc.copy_from_slice(&cost[i * m..(i + 1) * m]);
+            }
+            _ => panic!("GroupBuf layout does not match problem layout"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::laminar::LaminarProfile;
+
+    fn dims() -> Dims {
+        Dims { n_groups: 3, n_items: 2, n_global: 2 }
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut p =
+            MaterializedProblem::zeroed_dense(dims(), vec![1.0, 1.0], LaminarProfile::single(2, 1))
+                .unwrap();
+        p.set_profit(1, 0, 3.5);
+        p.set_cost(1, 0, 1, 0.25);
+        assert_eq!(p.profit(1, 0), 3.5);
+        assert_eq!(p.cost(1, 0, 1), 0.25);
+        assert_eq!(p.cost(1, 0, 0), 0.0);
+
+        let mut buf = GroupBuf::new(dims(), true);
+        p.fill_group(1, &mut buf);
+        assert_eq!(buf.profits, vec![3.5, 0.0]);
+        assert_eq!(buf.cost(0, 1, 2), 0.25);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let mut p = MaterializedProblem::zeroed_sparse(
+            dims(),
+            vec![1.0, 2.0],
+            LaminarProfile::single(2, 1),
+        )
+        .unwrap();
+        p.set_sparse_cost(2, 1, 1, 0.75);
+        assert_eq!(p.cost(2, 1, 1), 0.75);
+        assert_eq!(p.cost(2, 1, 0), 0.0);
+        let mut buf = GroupBuf::new(dims(), false);
+        p.fill_group(2, &mut buf);
+        assert_eq!(buf.cost(1, 1, 2), 0.75);
+        assert_eq!(buf.cost(1, 0, 2), 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_budgets() {
+        let p = MaterializedProblem::zeroed_dense(
+            dims(),
+            vec![1.0, 0.0],
+            LaminarProfile::single(2, 1),
+        )
+        .unwrap();
+        assert!(matches!(p.validate(), Err(Error::InvalidProblem(_))));
+        let p = MaterializedProblem::zeroed_dense(dims(), vec![1.0], LaminarProfile::single(2, 1))
+            .unwrap();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_dims() {
+        let p = MaterializedProblem::zeroed_dense(
+            Dims { n_groups: 0, n_items: 2, n_global: 1 },
+            vec![1.0],
+            LaminarProfile::single(2, 1),
+        )
+        .unwrap();
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn from_source_is_identity_for_materialized() {
+        let mut p = MaterializedProblem::zeroed_dense(
+            dims(),
+            vec![1.0, 1.0],
+            LaminarProfile::single(2, 1),
+        )
+        .unwrap();
+        p.set_profit(0, 1, 2.0);
+        p.set_cost(2, 1, 0, 0.5);
+        let q = MaterializedProblem::from_source(&p).unwrap();
+        assert_eq!(q.profit(0, 1), 2.0);
+        assert_eq!(q.cost(2, 1, 0), 0.5);
+    }
+}

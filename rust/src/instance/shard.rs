@@ -1,0 +1,131 @@
+//! Sharding: splitting `N` groups into contiguous ranges for the map phase.
+//!
+//! Shards are the unit of work stealing in [`crate::mapreduce`] and the unit
+//! of batching for the XLA-backed dense map phase (which requires a fixed
+//! batch shape — the final partial shard is padded by the runtime).
+
+/// A contiguous range of group ids `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRange {
+    /// First group id.
+    pub start: usize,
+    /// One past the last group id.
+    pub end: usize,
+}
+
+impl ShardRange {
+    /// Number of groups in the shard.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True when the shard is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+
+    /// Iterate group ids.
+    pub fn iter(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+}
+
+/// A partition of `[0, n)` into shards of (at most) `shard_size`.
+#[derive(Debug, Clone, Copy)]
+pub struct Shards {
+    n: usize,
+    shard_size: usize,
+}
+
+impl Shards {
+    /// Partition `n` groups into shards of `shard_size` (last one partial).
+    pub fn new(n: usize, shard_size: usize) -> Self {
+        assert!(shard_size > 0, "shard_size must be positive");
+        Self { n, shard_size }
+    }
+
+    /// Choose a shard size giving each worker several shards (load balance)
+    /// while keeping shards large enough to amortize dispatch (min 1k
+    /// groups, max 1M).
+    pub fn for_workers(n: usize, workers: usize) -> Self {
+        let target = (n / (workers.max(1) * 8)).clamp(1_024, 1 << 20).min(n.max(1));
+        Self::new(n, target)
+    }
+
+    /// Number of shards.
+    pub fn count(&self) -> usize {
+        self.n.div_ceil(self.shard_size)
+    }
+
+    /// The `idx`-th shard.
+    pub fn get(&self, idx: usize) -> ShardRange {
+        let start = idx * self.shard_size;
+        ShardRange { start, end: (start + self.shard_size).min(self.n) }
+    }
+
+    /// Total groups.
+    pub fn n_total(&self) -> usize {
+        self.n
+    }
+
+    /// Configured shard size.
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// Iterate all shards.
+    pub fn iter(&self) -> impl Iterator<Item = ShardRange> + '_ {
+        (0..self.count()).map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_groups_exactly_once() {
+        let s = Shards::new(1003, 100);
+        assert_eq!(s.count(), 11);
+        let mut seen = vec![false; 1003];
+        for sh in s.iter() {
+            for i in sh.iter() {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+        assert_eq!(s.get(10).len(), 3);
+    }
+
+    #[test]
+    fn exact_division() {
+        let s = Shards::new(1000, 100);
+        assert_eq!(s.count(), 10);
+        assert_eq!(s.get(9), ShardRange { start: 900, end: 1000 });
+    }
+
+    #[test]
+    fn empty_input() {
+        let s = Shards::new(0, 100);
+        assert_eq!(s.count(), 0);
+        assert!(s.iter().next().is_none());
+    }
+
+    #[test]
+    fn for_workers_bounds() {
+        let s = Shards::for_workers(10_000_000, 8);
+        assert!(s.shard_size() >= 1_024);
+        assert!(s.shard_size() <= 1 << 20);
+        let s = Shards::for_workers(100, 8);
+        assert!(s.count() >= 1);
+        // tiny n: single shard covering everything
+        assert_eq!(s.get(0).len().min(100), s.get(0).len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_shard_size_panics() {
+        Shards::new(10, 0);
+    }
+}

@@ -1,0 +1,49 @@
+//! # bskp — Billion-Scale Knapsack Solver
+//!
+//! Reproduction of *"Solving Billion-Scale Knapsack Problems"* (Zhang, Qi,
+//! Hua, Yang — WWW 2020): distributed dual-decomposition solvers (dual
+//! descent and synchronous coordinate descent) for generalized knapsack
+//! problems with global knapsack constraints and hierarchical (laminar)
+//! per-group local constraints.
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — problem model, MapReduce-style execution engine,
+//!   the paper's algorithms (Alg 1–5 plus the §5 speedups), LP-relaxation
+//!   bound, metrics and a CLI.
+//! * **L2 (python/compile/model.py)** — JAX compute graph for the dense map
+//!   phase, AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (interpret mode) for
+//!   the adjusted-profit contraction / top-C selection / consumption.
+//!
+//! At solve time only rust runs; [`runtime`] loads the AOT artifacts through
+//! the PJRT C API (`xla` crate) and executes them from the map workers.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+//! use bskp::solver::{SolverConfig, scd::solve_scd};
+//! use bskp::mapreduce::Cluster;
+//!
+//! let gen = GeneratorConfig::sparse(100_000, 10, 10).with_seed(7);
+//! let problem = SyntheticProblem::new(gen);
+//! let cluster = Cluster::new(8);
+//! let report = solve_scd(&problem, &SolverConfig::default(), &cluster).unwrap();
+//! println!("primal={} gap={}", report.primal_value, report.duality_gap());
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod exact;
+pub mod instance;
+pub mod lp;
+pub mod mapreduce;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,116 @@
+//! Per-group *fractional* subproblem over the laminar polytope:
+//!
+//! ```text
+//! max Σ_j p̃_j x_j   s.t.  Σ_{j∈S_l} x_j ≤ C_l ∀l,   0 ≤ x_j ≤ 1
+//! ```
+//!
+//! Greedy in descending `p̃` with capacity-limited assignment is optimal
+//! (polymatroid greedy / exchange argument on the laminar family). Because
+//! the caps are integers the polytope is integral, so the fractional
+//! optimum coincides with Algorithm 1's integral optimum — property-tested
+//! against [`crate::exact::solve_group_exact`]. This is what makes the
+//! greedy-evaluated dual `g(λ)` *equal* to the LP dual function.
+
+use crate::instance::laminar::LaminarProfile;
+
+/// Solve the fractional per-group subproblem; returns `(x, value)`.
+pub fn solve_group_fractional(ptilde: &[f64], locals: &LaminarProfile) -> (Vec<f64>, f64) {
+    let m = ptilde.len();
+    // residual capacity per constraint
+    let mut residual: Vec<f64> = locals.constraints().iter().map(|c| c.cap as f64).collect();
+    // which constraints cover each item
+    let mut covering: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (l, c) in locals.constraints().iter().enumerate() {
+        for &j in &c.items {
+            covering[j as usize].push(l);
+        }
+    }
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_unstable_by(|&a, &b| {
+        ptilde[b].partial_cmp(&ptilde[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut x = vec![0.0f64; m];
+    let mut value = 0.0f64;
+    for &j in &order {
+        if ptilde[j] <= 0.0 {
+            break;
+        }
+        let avail = covering[j]
+            .iter()
+            .map(|&l| residual[l])
+            .fold(1.0f64, f64::min);
+        if avail > 0.0 {
+            x[j] = avail;
+            value += ptilde[j] * avail;
+            for &l in &covering[j] {
+                residual[l] -= avail;
+            }
+        }
+    }
+    (x, value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exact::solve_group_exact;
+    use crate::instance::laminar::{LaminarProfile, LocalConstraint};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn unconstrained_selects_all_positive() {
+        let locals = LaminarProfile::new(vec![]).unwrap();
+        let (x, v) = solve_group_fractional(&[1.0, -1.0, 0.5], &locals);
+        assert_eq!(x, vec![1.0, 0.0, 1.0]);
+        assert!((v - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_cap() {
+        let locals = LaminarProfile::single(3, 1);
+        let (x, v) = solve_group_fractional(&[1.0, 3.0, 2.0], &locals);
+        assert_eq!(x, vec![0.0, 1.0, 0.0]);
+        assert!((v - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nested_caps() {
+        // {0,1} ≤ 1 inside {0,1,2} ≤ 2
+        let locals = LaminarProfile::new(vec![
+            LocalConstraint::new(vec![0, 1], 1),
+            LocalConstraint::new(vec![0, 1, 2], 2),
+        ])
+        .unwrap();
+        let (x, v) = solve_group_fractional(&[3.0, 2.5, 1.0], &locals);
+        assert_eq!(x, vec![1.0, 0.0, 1.0]);
+        assert!((v - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn integral_polytope_fractional_equals_integral() {
+        // the core fact behind using greedy for the LP dual: on laminar
+        // polytopes with integer caps, fractional greedy == exhaustive IP
+        let mut rng = Xoshiro256pp::new(7);
+        for trial in 0..300 {
+            let m = 2 + rng.below(7) as usize;
+            let profile = crate::exact::random_laminar(&mut rng, m);
+            let ptilde: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 2.0)).collect();
+            let (_, frac_v) = solve_group_fractional(&ptilde, &profile);
+            let (_, int_v) = solve_group_exact(&ptilde, &profile);
+            assert!(
+                (frac_v - int_v).abs() < 1e-9,
+                "trial {trial}: fractional {frac_v} vs integral {int_v}"
+            );
+        }
+    }
+
+    #[test]
+    fn fractional_solution_respects_caps() {
+        let locals = LaminarProfile::scenario_c223(6);
+        let (x, _) = solve_group_fractional(&[5.0, 4.0, 3.0, 2.0, 1.0, 0.5], &locals);
+        let root_sum: f64 = x.iter().sum();
+        assert!(root_sum <= 3.0 + 1e-12);
+        assert!(x[..3].iter().sum::<f64>() <= 2.0 + 1e-12);
+        assert!(x[3..].iter().sum::<f64>() <= 2.0 + 1e-12);
+    }
+}

@@ -1,0 +1,303 @@
+//! Dense two-phase primal simplex for small LPs:
+//!
+//! ```text
+//! max c'x   s.t.  A x ≤ b,  x ≥ 0      (b of any sign)
+//! ```
+//!
+//! Rows with negative RHS get surplus + artificial variables and Phase I
+//! drives the artificials to zero. Bland's rule prevents cycling. This is
+//! the master solver for the Kelley cutting-plane bound and the oracle for
+//! tiny full-LP relaxations — dimensions stay in the hundreds, so a dense
+//! tableau is the simple, robust choice.
+
+use crate::error::{Error, Result};
+
+/// `max c'x  s.t.  a·x ≤ b, x ≥ 0`.
+#[derive(Debug, Clone)]
+pub struct SimplexProblem {
+    /// Objective coefficients (length `n`).
+    pub c: Vec<f64>,
+    /// Constraint matrix rows (each length `n`).
+    pub a: Vec<Vec<f64>>,
+    /// Right-hand sides (length `m`).
+    pub b: Vec<f64>,
+}
+
+/// Optimal solution.
+#[derive(Debug, Clone)]
+pub struct SimplexSolution {
+    /// Optimal objective value.
+    pub value: f64,
+    /// Optimal primal point.
+    pub x: Vec<f64>,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve by two-phase dense simplex. Errors on infeasible/unbounded
+/// problems or iteration exhaustion.
+pub fn solve_simplex(p: &SimplexProblem, max_iters: usize) -> Result<SimplexSolution> {
+    let m = p.a.len();
+    let n = p.c.len();
+    for (i, row) in p.a.iter().enumerate() {
+        if row.len() != n {
+            return Err(Error::Lp(format!("row {i} has {} cols, expected {n}", row.len())));
+        }
+    }
+    if p.b.len() != m {
+        return Err(Error::Lp("rhs length mismatch".into()));
+    }
+
+    // columns: n structural + m slack/surplus + (#neg rows) artificial
+    let neg_rows: Vec<usize> = (0..m).filter(|&i| p.b[i] < 0.0).collect();
+    let n_art = neg_rows.len();
+    let total = n + m + n_art;
+    // tableau: m rows × (total + 1); last col = rhs
+    let mut t = vec![vec![0.0f64; total + 1]; m];
+    let mut basis = vec![0usize; m];
+    let mut art_col_of_row = vec![usize::MAX; m];
+    {
+        let mut next_art = n + m;
+        for i in 0..m {
+            let flip = if p.b[i] < 0.0 { -1.0 } else { 1.0 };
+            for j in 0..n {
+                t[i][j] = flip * p.a[i][j];
+            }
+            t[i][n + i] = flip; // slack (+1) or surplus (−1)
+            t[i][total] = flip * p.b[i];
+            if flip < 0.0 {
+                t[i][next_art] = 1.0;
+                basis[i] = next_art;
+                art_col_of_row[i] = next_art;
+                next_art += 1;
+            } else {
+                basis[i] = n + i;
+            }
+        }
+    }
+
+    // Phase I: minimize Σ artificials == max −Σ artificials.
+    // Reduced-cost row (z_j − c_j convention, c = −1 on artificials):
+    // z_j = −Σ_{artificial-basic rows} t[i][j]; price out, then add back
+    // +1 at the artificial columns themselves.
+    if n_art > 0 {
+        let mut obj = vec![0.0f64; total + 1];
+        for i in 0..m {
+            if art_col_of_row[i] != usize::MAX {
+                for j in 0..=total {
+                    obj[j] -= t[i][j];
+                }
+            }
+        }
+        for a in obj.iter_mut().take(total).skip(n + m) {
+            *a += 1.0;
+        }
+        run_simplex(&mut t, &mut basis, &mut obj, total, max_iters)?;
+        // objective value z = −w; infeasible when w = Σ artificials > 0
+        if -obj[total] > 1e-7 {
+            return Err(Error::Lp(format!("infeasible (phase-I residual {})", -obj[total])));
+        }
+        // drive any remaining artificial out of the basis
+        for i in 0..m {
+            if basis[i] >= n + m {
+                if let Some(j) = (0..n + m).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut vec![0.0; total + 1], i, j);
+                    basis[i] = j;
+                }
+            }
+        }
+    }
+
+    // Phase II: maximize c'x. Build reduced objective row: z_j − c_j form.
+    // obj[j] holds Σ_basic c_b · t[i][j] − c_j; start from −c and price out.
+    let mut obj = vec![0.0f64; total + 1];
+    for j in 0..n {
+        obj[j] = -p.c[j];
+    }
+    for i in 0..m {
+        let cb = if basis[i] < n { p.c[basis[i]] } else { 0.0 };
+        if cb != 0.0 {
+            for j in 0..=total {
+                obj[j] += cb * t[i][j];
+            }
+        }
+    }
+    // forbid artificials from re-entering
+    let art_block = total; // columns ≥ n+m are artificial
+    run_simplex_blocked(&mut t, &mut basis, &mut obj, total, n + m, art_block, max_iters)?;
+
+    let mut x = vec![0.0f64; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i][total];
+        }
+    }
+    let value = p.c.iter().zip(&x).map(|(c, x)| c * x).sum();
+    Ok(SimplexSolution { value, x })
+}
+
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    obj: &mut [f64],
+    total: usize,
+    max_iters: usize,
+) -> Result<()> {
+    run_simplex_blocked(t, basis, obj, total, total, total, max_iters)
+}
+
+/// Simplex iterations; columns in `[block_from, block_to)` may not enter.
+fn run_simplex_blocked(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    obj: &mut [f64],
+    total: usize,
+    block_from: usize,
+    block_to: usize,
+    max_iters: usize,
+) -> Result<()> {
+    for _ in 0..max_iters {
+        // Bland: entering = lowest-index column with negative reduced cost
+        let enter = (0..total)
+            .filter(|&j| !(block_from..block_to).contains(&j))
+            .find(|&j| obj[j] < -EPS);
+        let Some(enter) = enter else { return Ok(()) };
+        // ratio test, Bland tie-break on basis index
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for (i, row) in t.iter().enumerate() {
+            if row[enter] > EPS {
+                let ratio = row[total] / row[enter];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(true))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(leave) = leave else {
+            return Err(Error::Lp("unbounded".into()));
+        };
+        pivot_with_obj(t, obj, leave, enter, total);
+        basis[leave] = enter;
+    }
+    Err(Error::Lp("simplex iteration limit".into()))
+}
+
+fn pivot_with_obj(t: &mut [Vec<f64>], obj: &mut [f64], r: usize, c: usize, total: usize) {
+    let piv = t[r][c];
+    for v in t[r].iter_mut() {
+        *v /= piv;
+    }
+    for i in 0..t.len() {
+        if i != r && t[i][c].abs() > 0.0 {
+            let f = t[i][c];
+            for j in 0..=total {
+                t[i][j] -= f * t[r][j];
+            }
+        }
+    }
+    let f = obj[c];
+    if f.abs() > 0.0 {
+        for j in 0..=total {
+            obj[j] -= f * t[r][j];
+        }
+    }
+}
+
+fn pivot(t: &mut [Vec<f64>], obj: &mut Vec<f64>, r: usize, c: usize) {
+    let total = t[0].len() - 1;
+    pivot_with_obj(t, obj, r, c, total);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(c: &[f64], a: &[&[f64]], b: &[f64]) -> SimplexSolution {
+        let p = SimplexProblem {
+            c: c.to_vec(),
+            a: a.iter().map(|r| r.to_vec()).collect(),
+            b: b.to_vec(),
+        };
+        solve_simplex(&p, 10_000).unwrap()
+    }
+
+    #[test]
+    fn textbook_2d() {
+        // max 3x + 5y s.t. x ≤ 4; 2y ≤ 12; 3x + 2y ≤ 18 → (2, 6) value 36
+        let s = solve(
+            &[3.0, 5.0],
+            &[&[1.0, 0.0], &[0.0, 2.0], &[3.0, 2.0]],
+            &[4.0, 12.0, 18.0],
+        );
+        assert!((s.value - 36.0).abs() < 1e-7);
+        assert!((s.x[0] - 2.0).abs() < 1e-7);
+        assert!((s.x[1] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn fractional_knapsack() {
+        // max 2x1 + 3x2 s.t. x1 + 2x2 ≤ 2, x ≤ 1 → x2=0.5... actually
+        // x1=1, x2=0.5 → 3.5
+        let s = solve(
+            &[2.0, 3.0],
+            &[&[1.0, 2.0], &[1.0, 0.0], &[0.0, 1.0]],
+            &[2.0, 1.0, 1.0],
+        );
+        assert!((s.value - 3.5).abs() < 1e-7, "{}", s.value);
+    }
+
+    #[test]
+    fn negative_rhs_needs_phase_one() {
+        // max −x s.t. −x ≤ −2 (i.e. x ≥ 2) → x = 2, value −2
+        let s = solve(&[-1.0], &[&[-1.0]], &[-2.0]);
+        assert!((s.value + 2.0).abs() < 1e-7);
+        assert!((s.x[0] - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≥ 2 and x ≤ 1
+        let p = SimplexProblem {
+            c: vec![1.0],
+            a: vec![vec![-1.0], vec![1.0]],
+            b: vec![-2.0, 1.0],
+        };
+        assert!(solve_simplex(&p, 10_000).is_err());
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let p = SimplexProblem { c: vec![1.0], a: vec![vec![-1.0]], b: vec![0.0] };
+        assert!(matches!(solve_simplex(&p, 10_000), Err(Error::Lp(_))));
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // classic degenerate example; Bland's rule must terminate
+        let s = solve(
+            &[10.0, -57.0, -9.0, -24.0],
+            &[
+                &[0.5, -5.5, -2.5, 9.0],
+                &[0.5, -1.5, -0.5, 1.0],
+                &[1.0, 0.0, 0.0, 0.0],
+            ],
+            &[0.0, 0.0, 1.0],
+        );
+        assert!((s.value - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn mixed_signs_rhs() {
+        // max x + y s.t. x + y ≤ 5, −x ≤ −1 (x ≥ 1), y ≤ 3
+        let s = solve(
+            &[1.0, 1.0],
+            &[&[1.0, 1.0], &[-1.0, 0.0], &[0.0, 1.0]],
+            &[5.0, -1.0, 3.0],
+        );
+        assert!((s.value - 5.0).abs() < 1e-7);
+    }
+}

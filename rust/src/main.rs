@@ -1,0 +1,6 @@
+//! `bskp` binary: the L3 leader CLI.
+
+fn main() {
+    let code = bskp::cli::run(std::env::args());
+    std::process::exit(code);
+}

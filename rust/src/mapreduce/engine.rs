@@ -1,0 +1,205 @@
+//! The scoped map/combine execution engine.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A simulated cluster: `workers` map workers plus the calling thread as
+/// leader. Phases use `std::thread::scope`, so map closures may borrow the
+//  problem data; spawn cost (~tens of µs) is negligible against a map round
+/// over millions of groups.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    workers: usize,
+}
+
+impl Cluster {
+    /// A cluster with `workers` map workers (≥ 1).
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Single-worker cluster (sequential semantics, same code path).
+    pub fn single() -> Self {
+        Self::new(1)
+    }
+
+    /// One worker per available hardware thread.
+    pub fn available() -> Self {
+        Self::new(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    /// Number of map workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Map phase: apply `map` to every shard index in `[0, n_shards)`,
+    /// returning results **in shard order**. Work-stealing via an atomic
+    /// cursor balances skewed shards.
+    pub fn map_shards<T, F>(&self, n_shards: usize, map: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n_shards == 0 {
+            return Vec::new();
+        }
+        let cursor = AtomicUsize::new(0);
+        let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n_shards));
+        let workers = self.workers.min(n_shards);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                        if idx >= n_shards {
+                            break;
+                        }
+                        local.push((idx, map(idx)));
+                    }
+                    results.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let mut out = results.into_inner().unwrap();
+        out.sort_unstable_by_key(|(i, _)| *i);
+        out.into_iter().map(|(_, t)| t).collect()
+    }
+
+    /// Map + map-side combine: each worker folds its shards into a private
+    /// accumulator (`init` per worker, `fold(acc, shard_idx)` per shard);
+    /// the leader then merges the per-worker accumulators **in worker-rank
+    /// order** with `merge`. This is the shape of every solver round: the
+    /// shuffle volume is O(workers · K), independent of N.
+    pub fn map_combine<A, I, F, G>(&self, n_shards: usize, init: I, fold: F, mut merge: G) -> A
+    where
+        A: Send,
+        I: Fn() -> A + Sync,
+        F: Fn(&mut A, usize) + Sync,
+        G: FnMut(A, A) -> A,
+    {
+        if n_shards == 0 {
+            return init();
+        }
+        let cursor = AtomicUsize::new(0);
+        let workers = self.workers.min(n_shards);
+        let partials: Mutex<Vec<(usize, A)>> = Mutex::new(Vec::with_capacity(workers));
+        std::thread::scope(|s| {
+            for rank in 0..workers {
+                let partials = &partials;
+                let cursor = &cursor;
+                let init = &init;
+                let fold = &fold;
+                s.spawn(move || {
+                    let mut acc = init();
+                    loop {
+                        let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                        if idx >= n_shards {
+                            break;
+                        }
+                        fold(&mut acc, idx);
+                    }
+                    partials.lock().unwrap().push((rank, acc));
+                });
+            }
+        });
+        let mut parts = partials.into_inner().unwrap();
+        parts.sort_unstable_by_key(|(r, _)| *r);
+        let mut iter = parts.into_iter().map(|(_, a)| a);
+        let first = iter.next().expect("at least one worker ran");
+        iter.fold(first, |a, b| merge(a, b))
+    }
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Self::available()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_shards_preserves_order() {
+        let c = Cluster::new(4);
+        let out = c.map_shards(100, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_shards_empty() {
+        let c = Cluster::new(4);
+        let out: Vec<usize> = c.map_shards(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_combine_sums_once_per_shard() {
+        let c = Cluster::new(3);
+        let total = c.map_combine(
+            1000,
+            || 0u64,
+            |acc, idx| *acc += idx as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, (0..1000u64).sum());
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        // compensated-sum shaped reduction must not depend on worker count
+        let run = |w: usize| -> Vec<f64> {
+            Cluster::new(w).map_combine(
+                64,
+                || vec![0.0f64; 4],
+                |acc, idx| {
+                    for (k, a) in acc.iter_mut().enumerate() {
+                        *a += ((idx * 7 + k) % 13) as f64;
+                    }
+                },
+                |mut a, b| {
+                    for (x, y) in a.iter_mut().zip(b) {
+                        *x += y;
+                    }
+                    a
+                },
+            )
+        };
+        let expect = run(1);
+        for w in [2, 3, 8, 17] {
+            assert_eq!(run(w), expect, "worker count {w}");
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let f = |i: usize| (i as f64).sqrt();
+        let a = Cluster::single().map_shards(50, f);
+        let b = Cluster::new(8).map_shards(50, f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn borrows_caller_data() {
+        let data: Vec<u64> = (0..100).collect();
+        let c = Cluster::new(4);
+        let out = c.map_shards(10, |i| data[i * 10..(i + 1) * 10].iter().sum::<u64>());
+        assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        Cluster::new(2).map_shards(4, |i| {
+            if i == 3 {
+                panic!("boom")
+            }
+            i
+        });
+    }
+}

@@ -1,0 +1,24 @@
+//! MapReduce-style execution substrate.
+//!
+//! The paper describes its algorithms in MapReduce semantics and notes
+//! (§4, footnote 2) that any distributed framework works. This module is
+//! that framework for a single box: a leader (the caller's thread) drives
+//! synchronous *map → combine → reduce* rounds over shards of groups,
+//! executed by a pool of workers with work stealing. The observable
+//! semantics match the paper's Spark deployment:
+//!
+//! * mappers see disjoint shards of groups and emit per-knapsack partials;
+//! * per-worker **combiners** pre-aggregate before the shuffle (what Spark
+//!   calls map-side combine) so reduce input is O(workers), not O(N);
+//! * the reduce + multiplier update happen on the leader between rounds
+//!   (a synchronous barrier, as in Algorithm 2/4).
+//!
+//! Determinism: shard results are merged in shard order, and floating-point
+//! reductions use compensated sums, so solver output is reproducible for
+//! any worker count.
+
+mod engine;
+mod pool;
+
+pub use engine::Cluster;
+pub use pool::ThreadPool;

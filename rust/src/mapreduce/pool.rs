@@ -1,0 +1,139 @@
+//! A persistent thread pool for `'static` background jobs.
+//!
+//! The synchronous solver rounds use the scoped engine
+//! ([`super::Cluster`]) so closures can borrow the problem; this pool
+//! serves the asynchronous pieces — artifact prewarming, metrics flushing,
+//! the CLI's concurrent instance generation — where jobs own their data.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size pool; jobs run FIFO; `join` drains.
+pub struct ThreadPool {
+    tx: Sender<Message>,
+    handles: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (≥ 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let handles = (0..n)
+            .map(|_| {
+                let rx: Arc<Mutex<Receiver<Message>>> = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self { tx, handles, pending }
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Message::Run(Box::new(f))).expect("pool alive");
+    }
+
+    /// Block until every enqueued job has finished.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn join_with_no_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+        assert_eq!(pool.size(), 2);
+    }
+
+    #[test]
+    fn reusable_after_join() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn zero_requested_becomes_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,103 @@
+//! Minimal JSON serializer (output only — the CLI and benches emit
+//! machine-readable reports; nothing in the system parses JSON back).
+
+use std::fmt;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// Number (serialized via shortest-roundtrip `{:?}`; NaN/inf → null).
+    Num(f64),
+    /// String (escaped on write).
+    Str(String),
+    /// Array.
+    Array(Vec<JsonValue>),
+    /// Object with *ordered* keys.
+    Object(Vec<(String, JsonValue)>),
+}
+
+impl fmt::Display for JsonValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonValue::Null => write!(f, "null"),
+            JsonValue::Bool(b) => write!(f, "{b}"),
+            JsonValue::Num(x) => {
+                if x.is_finite() {
+                    write!(f, "{x:?}")
+                } else {
+                    write!(f, "null")
+                }
+            }
+            JsonValue::Str(s) => write_escaped(f, s),
+            JsonValue::Array(items) => {
+                write!(f, "[")?;
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                write!(f, "]")
+            }
+            JsonValue::Object(pairs) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(JsonValue::Null.to_string(), "null");
+        assert_eq!(JsonValue::Bool(true).to_string(), "true");
+        assert_eq!(JsonValue::Num(1.5).to_string(), "1.5");
+        assert_eq!(JsonValue::Num(f64::NAN).to_string(), "null");
+        assert_eq!(JsonValue::Str("a\"b\n".into()).to_string(), "\"a\\\"b\\n\"");
+    }
+
+    #[test]
+    fn nested() {
+        let v = JsonValue::Object(vec![
+            ("xs".into(), JsonValue::Array(vec![JsonValue::Num(1.0), JsonValue::Num(2.0)])),
+            ("name".into(), JsonValue::Str("run".into())),
+        ]);
+        assert_eq!(v.to_string(), r#"{"xs":[1.0,2.0],"name":"run"}"#);
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        assert_eq!(JsonValue::Str("\u{1}".into()).to_string(), "\"\\u0001\"");
+    }
+}

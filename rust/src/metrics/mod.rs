@@ -1,0 +1,84 @@
+//! Metrics: scoped timers, counters and a dependency-free JSON writer for
+//! structured run reports (the offline registry has no serde).
+
+mod json;
+mod timer;
+
+pub use json::JsonValue;
+pub use timer::{ScopedTimer, Stopwatch};
+
+use crate::solver::stats::SolveReport;
+
+/// Serialize a [`SolveReport`] as JSON (stable key order).
+pub fn report_to_json(r: &SolveReport) -> JsonValue {
+    let mut obj = Vec::new();
+    obj.push(("iterations".to_string(), JsonValue::Num(r.iterations as f64)));
+    obj.push(("converged".to_string(), JsonValue::Bool(r.converged)));
+    obj.push(("primal_value".to_string(), JsonValue::Num(r.primal_value)));
+    obj.push(("dual_value".to_string(), JsonValue::Num(r.dual_value)));
+    obj.push(("duality_gap".to_string(), JsonValue::Num(r.duality_gap())));
+    obj.push(("max_violation_ratio".to_string(), JsonValue::Num(r.max_violation_ratio())));
+    obj.push(("n_selected".to_string(), JsonValue::Num(r.n_selected as f64)));
+    obj.push(("dropped_groups".to_string(), JsonValue::Num(r.dropped_groups as f64)));
+    obj.push(("wall_ms".to_string(), JsonValue::Num(r.wall_ms)));
+    obj.push((
+        "lambda".to_string(),
+        JsonValue::Array(r.lambda.iter().map(|&l| JsonValue::Num(l)).collect()),
+    ));
+    obj.push((
+        "consumption".to_string(),
+        JsonValue::Array(r.consumption.iter().map(|&c| JsonValue::Num(c)).collect()),
+    ));
+    obj.push((
+        "budgets".to_string(),
+        JsonValue::Array(r.budgets.iter().map(|&b| JsonValue::Num(b)).collect()),
+    ));
+    obj.push((
+        "history".to_string(),
+        JsonValue::Array(
+            r.history
+                .iter()
+                .map(|h| {
+                    JsonValue::Object(vec![
+                        ("iter".to_string(), JsonValue::Num(h.iter as f64)),
+                        ("primal".to_string(), JsonValue::Num(h.primal)),
+                        ("dual".to_string(), JsonValue::Num(h.dual)),
+                        (
+                            "max_violation_ratio".to_string(),
+                            JsonValue::Num(h.max_violation_ratio),
+                        ),
+                        ("lambda_change".to_string(), JsonValue::Num(h.lambda_change)),
+                        ("wall_ms".to_string(), JsonValue::Num(h.wall_ms)),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    JsonValue::Object(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_roundtrips_keys() {
+        let r = SolveReport {
+            lambda: vec![1.0],
+            iterations: 2,
+            converged: true,
+            primal_value: 10.0,
+            dual_value: 11.0,
+            consumption: vec![5.0],
+            budgets: vec![6.0],
+            n_selected: 3,
+            dropped_groups: 0,
+            history: vec![],
+            wall_ms: 1.5,
+        };
+        let s = report_to_json(&r).to_string();
+        for key in ["iterations", "duality_gap", "lambda", "wall_ms"] {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+    }
+}

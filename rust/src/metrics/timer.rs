@@ -1,0 +1,115 @@
+//! Timing helpers for the benches and iteration logs.
+
+use std::time::Instant;
+
+/// Accumulating stopwatch: start/stop many times, read the total.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    total_ns: u128,
+    started: Option<Instant>,
+    laps: usize,
+}
+
+impl Stopwatch {
+    /// A stopped, zeroed stopwatch.
+    pub fn new() -> Self {
+        Self { total_ns: 0, started: None, laps: 0 }
+    }
+
+    /// Begin a lap (no-op if already running).
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// End the current lap.
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.total_ns += t.elapsed().as_nanos();
+            self.laps += 1;
+        }
+    }
+
+    /// Total accumulated milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.total_ns as f64 / 1e6
+    }
+
+    /// Completed laps.
+    pub fn laps(&self) -> usize {
+        self.laps
+    }
+
+    /// Mean lap time in milliseconds (0 when no laps).
+    pub fn mean_ms(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.total_ms() / self.laps as f64
+        }
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII timer: reports elapsed milliseconds into a callback on drop.
+pub struct ScopedTimer<F: FnMut(f64)> {
+    start: Instant,
+    sink: F,
+}
+
+impl<F: FnMut(f64)> ScopedTimer<F> {
+    /// Start timing; `sink` receives elapsed ms when the scope ends.
+    pub fn new(sink: F) -> Self {
+        Self { start: Instant::now(), sink }
+    }
+}
+
+impl<F: FnMut(f64)> Drop for ScopedTimer<F> {
+    fn drop(&mut self) {
+        (self.sink)(self.start.elapsed().as_secs_f64() * 1e3);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..3 {
+            sw.start();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            sw.stop();
+        }
+        assert_eq!(sw.laps(), 3);
+        assert!(sw.total_ms() >= 5.0);
+        assert!(sw.mean_ms() >= 1.5);
+    }
+
+    #[test]
+    fn double_start_stop_is_safe() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        sw.start();
+        sw.stop();
+        sw.stop();
+        assert_eq!(sw.laps(), 1);
+    }
+
+    #[test]
+    fn scoped_timer_fires() {
+        let mut ms = -1.0;
+        {
+            let _t = ScopedTimer::new(|m| ms = m);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(ms >= 0.5);
+    }
+}

@@ -1,0 +1,127 @@
+//! Artifact registry: the manifest written by `python/compile/aot.py`.
+//!
+//! Format (tab-separated): `name  entry  n  m  k  cap  filename`.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point with its baked shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Artifact name (`eval_dense_n2048_m10_k10_c1`).
+    pub name: String,
+    /// Entry point: `eval_dense`, `eval_sparse` or `scd_sparse`.
+    pub entry: String,
+    /// Shard batch size baked into the artifact.
+    pub n: usize,
+    /// Items per group.
+    pub m: usize,
+    /// Global constraints.
+    pub k: usize,
+    /// Local cap (`C` / `Q`).
+    pub cap: u32,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    entries: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {}/manifest.txt (run `make artifacts` first): {e}",
+                dir.display()
+            ))
+        })?;
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 7 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {} malformed: {line:?}",
+                    ln + 1
+                )));
+            }
+            let parse = |s: &str| -> Result<usize> {
+                s.parse().map_err(|_| Error::Runtime(format!("bad number {s:?} on line {}", ln + 1)))
+            };
+            entries.push(ArtifactEntry {
+                name: parts[0].to_string(),
+                entry: parts[1].to_string(),
+                n: parse(parts[2])?,
+                m: parse(parts[3])?,
+                k: parse(parts[4])?,
+                cap: parse(parts[5])? as u32,
+                path: dir.join(parts[6]),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Find an artifact for the given entry point and problem shape.
+    pub fn find(&self, entry: &str, m: usize, k: usize, cap: u32) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.entry == entry && e.m == m && e.k == k && e.cap == cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, content: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_and_finds() {
+        let dir = std::env::temp_dir().join(format!("bskp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            "eval_dense_n2048_m10_k10_c1\teval_dense\t2048\t10\t10\t1\teval.hlo.txt\n\
+             scd_sparse_n4096_m10_k10_c1\tscd_sparse\t4096\t10\t10\t1\tscd.hlo.txt\n",
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let e = m.find("eval_dense", 10, 10, 1).unwrap();
+        assert_eq!(e.n, 2048);
+        assert!(e.path.ends_with("eval.hlo.txt"));
+        assert!(m.find("eval_dense", 11, 10, 1).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = ArtifactManifest::load("/nonexistent_dir_xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = std::env::temp_dir().join(format!("bskp_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, "only\tthree\tfields\n");
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,90 @@
+//! PJRT client wrapper: compile-once executables with serialized execution.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::ArtifactEntry;
+use std::sync::Mutex;
+
+/// A PJRT CPU client plus the executables loaded through it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU client (one per process is plenty).
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))?;
+        Ok(Self { client })
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, entry: &ArtifactEntry) -> Result<LoadedExecutable> {
+        let path = entry.path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parse {path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", entry.name)))?;
+        Ok(LoadedExecutable { exe: Mutex::new(exe), entry: entry.clone() })
+    }
+}
+
+/// A compiled artifact. Execution is serialized through the mutex (the
+/// `xla` wrappers are not `Sync`; XLA's CPU runtime parallelizes
+/// internally), while input marshaling stays on the calling worker.
+pub struct LoadedExecutable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    entry: ArtifactEntry,
+}
+
+// SAFETY: the wrapped PJRT objects are only touched while the mutex is
+// held; PJRT itself is a thread-safe C API and the CPU client outlives the
+// executable (owned by the same struct that owns the Runtime).
+unsafe impl Send for LoadedExecutable {}
+unsafe impl Sync for LoadedExecutable {}
+
+impl LoadedExecutable {
+    /// The artifact metadata this executable was compiled from.
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Execute with f32 input arrays (shape-checked against `dims`),
+    /// returning every output flattened to `Vec<f32>`.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exe.lock().map_err(|_| Error::Runtime("executable mutex poisoned".into()))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: i64 = dims.iter().product();
+            if expect as usize != data.len() {
+                return Err(Error::Runtime(format!(
+                    "input length {} does not match shape {dims:?}",
+                    data.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| Error::Runtime(format!("reshape to {dims:?}: {e}")))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", self.entry.name)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+        // aot.py lowers with return_tuple=True
+        let parts = out.to_tuple().map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+        parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}"))))
+            .collect()
+    }
+}

@@ -1,0 +1,207 @@
+//! XLA-backed shard evaluators: the dense map phase executed through the
+//! AOT artifacts instead of the pure-rust greedy.
+//!
+//! Supported shapes (anything else falls back to [`RustEvaluator`]):
+//! * dense costs + one all-items local cap `c`  → `eval_dense` artifact;
+//! * sparse identity-mapped costs (`M = K`) + cap `q` → `eval_sparse`.
+//!
+//! Shards are processed in artifact-sized slabs; the final partial slab is
+//! zero-padded (zero profits give `p̃ = 0`, which the strict `> 0`
+//! selection rule never picks, so padding contributes nothing).
+
+use crate::error::{Error, Result};
+use crate::instance::problem::{CostsBuf, GroupBuf, GroupSource};
+use crate::instance::shard::ShardRange;
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::runtime::client::{LoadedExecutable, Runtime};
+use crate::solver::rounds::{RoundAgg, ShardEvaluator};
+use crate::solver::sparse_q;
+
+/// XLA evaluator for dense instances with a single local cap.
+pub struct XlaDenseEvaluator<'a, S: GroupSource + ?Sized> {
+    source: &'a S,
+    exe: LoadedExecutable,
+}
+
+impl<'a, S: GroupSource + ?Sized> XlaDenseEvaluator<'a, S> {
+    /// Build from a source + artifact manifest; errors when the instance
+    /// shape has no matching artifact.
+    pub fn new(source: &'a S, runtime: &Runtime, manifest: &ArtifactManifest) -> Result<Self> {
+        let dims = source.dims();
+        let locals = source.locals();
+        if !source.is_dense() {
+            return Err(Error::Runtime("XlaDenseEvaluator requires dense costs".into()));
+        }
+        if locals.len() != 1 || locals.constraints()[0].items.len() != dims.n_items {
+            return Err(Error::Runtime(
+                "XlaDenseEvaluator requires a single all-items local constraint".into(),
+            ));
+        }
+        let cap = locals.constraints()[0].cap;
+        let entry = manifest
+            .find("eval_dense", dims.n_items, dims.n_global, cap)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no eval_dense artifact for M={m} K={k} C={cap}; re-run aot.py with \
+                     --config eval_dense,<n>,{m},{k},{cap}",
+                    m = dims.n_items,
+                    k = dims.n_global,
+                ))
+            })?;
+        let exe = runtime.load(entry)?;
+        Ok(Self { source, exe })
+    }
+
+    /// The slab size baked into the artifact.
+    pub fn slab(&self) -> usize {
+        self.exe.entry().n
+    }
+}
+
+impl<S: GroupSource + ?Sized> ShardEvaluator for XlaDenseEvaluator<'_, S> {
+    fn eval_shard(&self, shard: ShardRange, lambda: &[f64], agg: &mut RoundAgg) {
+        let dims = self.source.dims();
+        let (n_art, m, k) = (self.exe.entry().n, dims.n_items, dims.n_global);
+        let lam32: Vec<f32> = lambda.iter().map(|&l| l as f32).collect();
+        let mut p = vec![0.0f32; n_art * m];
+        let mut b = vec![0.0f32; n_art * m * k];
+        let mut buf = GroupBuf::new(dims, true);
+        let mut start = shard.start;
+        while start < shard.end {
+            let end = (start + n_art).min(shard.end);
+            let used = end - start;
+            p[used * m..].iter_mut().for_each(|v| *v = 0.0);
+            b[used * m * k..].iter_mut().for_each(|v| *v = 0.0);
+            for (row, i) in (start..end).enumerate() {
+                self.source.fill_group(i, &mut buf);
+                p[row * m..(row + 1) * m].copy_from_slice(&buf.profits);
+                match &buf.costs {
+                    CostsBuf::Dense(src) => {
+                        b[row * m * k..(row + 1) * m * k].copy_from_slice(src)
+                    }
+                    _ => unreachable!("checked dense at construction"),
+                }
+            }
+            let outputs = self
+                .exe
+                .execute_f32(&[
+                    (&p, &[n_art as i64, m as i64]),
+                    (&b, &[n_art as i64, m as i64, k as i64]),
+                    (&lam32, &[k as i64]),
+                ])
+                .expect("artifact execution failed");
+            accumulate_eval_outputs(&outputs[0], &outputs[1], agg);
+            start = end;
+        }
+    }
+}
+
+/// XLA evaluator for sparse identity-mapped instances (`M = K`).
+pub struct XlaSparseEvaluator<'a, S: GroupSource + ?Sized> {
+    source: &'a S,
+    exe: LoadedExecutable,
+}
+
+impl<'a, S: GroupSource + ?Sized> XlaSparseEvaluator<'a, S> {
+    /// Build from a source + manifest (entry `eval_sparse`).
+    pub fn new(source: &'a S, runtime: &Runtime, manifest: &ArtifactManifest) -> Result<Self> {
+        let entry = sparse_artifact(source, manifest, "eval_sparse")?;
+        let exe = runtime.load(entry)?;
+        Ok(Self { source, exe })
+    }
+}
+
+impl<S: GroupSource + ?Sized> ShardEvaluator for XlaSparseEvaluator<'_, S> {
+    fn eval_shard(&self, shard: ShardRange, lambda: &[f64], agg: &mut RoundAgg) {
+        let dims = self.source.dims();
+        let (n_art, m) = (self.exe.entry().n, dims.n_items);
+        let lam32: Vec<f32> = lambda.iter().map(|&l| l as f32).collect();
+        let mut p = vec![0.0f32; n_art * m];
+        let mut bd = vec![0.0f32; n_art * m];
+        let mut buf = GroupBuf::new(dims, false);
+        let mut start = shard.start;
+        while start < shard.end {
+            let end = (start + n_art).min(shard.end);
+            marshal_sparse(self.source, start, end, m, &mut buf, &mut p, &mut bd);
+            let outputs = self
+                .exe
+                .execute_f32(&[
+                    (&p, &[n_art as i64, m as i64]),
+                    (&bd, &[n_art as i64, m as i64]),
+                    (&lam32, &[m as i64]),
+                ])
+                .expect("artifact execution failed");
+            accumulate_eval_outputs(&outputs[0], &outputs[1], agg);
+            start = end;
+        }
+    }
+}
+
+/// Check Algorithm-5-style eligibility and find the matching artifact.
+pub(crate) fn sparse_artifact<'m, S: GroupSource + ?Sized>(
+    source: &S,
+    manifest: &'m ArtifactManifest,
+    entry: &str,
+) -> Result<&'m crate::runtime::artifacts::ArtifactEntry> {
+    let dims = source.dims();
+    if source.is_dense() {
+        return Err(Error::Runtime("sparse evaluator requires the sparse layout".into()));
+    }
+    if dims.n_items != dims.n_global {
+        return Err(Error::Runtime(format!(
+            "sparse artifacts assume the identity mapping (M=K), got M={} K={}",
+            dims.n_items, dims.n_global
+        )));
+    }
+    let q = sparse_q::eligible(source).ok_or_else(|| {
+        Error::Runtime("sparse evaluator requires a single all-items local cap".into())
+    })?;
+    manifest.find(entry, dims.n_items, dims.n_global, q).ok_or_else(|| {
+        Error::Runtime(format!(
+            "no {entry} artifact for M=K={} Q={q}; re-run aot.py with --config \
+             {entry},<n>,{},{},{q}",
+            dims.n_items, dims.n_items, dims.n_global
+        ))
+    })
+}
+
+/// Marshal `[start, end)` into padded `p` / `bd` slabs, verifying the
+/// identity mapping.
+pub(crate) fn marshal_sparse<S: GroupSource + ?Sized>(
+    source: &S,
+    start: usize,
+    end: usize,
+    m: usize,
+    buf: &mut GroupBuf,
+    p: &mut [f32],
+    bd: &mut [f32],
+) {
+    let used = end - start;
+    p[used * m..].iter_mut().for_each(|v| *v = 0.0);
+    bd[used * m..].iter_mut().for_each(|v| *v = 0.0);
+    for (row, i) in (start..end).enumerate() {
+        source.fill_group(i, buf);
+        p[row * m..(row + 1) * m].copy_from_slice(&buf.profits);
+        match &buf.costs {
+            CostsBuf::Sparse { knap, cost } => {
+                debug_assert!(
+                    knap.iter().enumerate().all(|(j, &kk)| kk as usize == j),
+                    "sparse artifacts require the identity item→knapsack mapping"
+                );
+                bd[row * m..(row + 1) * m].copy_from_slice(cost);
+            }
+            _ => unreachable!("checked sparse at construction"),
+        }
+    }
+}
+
+/// Fold (r, stats) artifact outputs into a [`RoundAgg`].
+fn accumulate_eval_outputs(r: &[f32], stats: &[f32], agg: &mut RoundAgg) {
+    debug_assert_eq!(stats.len(), 3);
+    for (sum, &v) in agg.consumption.iter_mut().zip(r) {
+        sum.add(v as f64);
+    }
+    agg.primal.add(stats[0] as f64);
+    agg.dual_inner.add(stats[1] as f64);
+    agg.n_selected += stats[2].round() as u64;
+}

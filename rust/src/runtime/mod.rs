@@ -1,0 +1,21 @@
+//! PJRT runtime: load the AOT HLO artifacts produced by
+//! ``python/compile/aot.py`` and execute them from the map workers.
+//!
+//! Python never runs at solve time — the artifacts are compiled once by
+//! `make artifacts`; this module wraps the `xla` crate (PJRT C API) to
+//! load the HLO *text*, compile it on the CPU client and evaluate shards.
+//!
+//! Thread-safety: the `xla` crate's wrappers hold raw pointers and are not
+//! marked `Send`/`Sync`. Execution is serialized through a mutex per
+//! executable (input marshaling still happens in parallel on the workers;
+//! the XLA CPU runtime parallelizes internally).
+
+pub mod artifacts;
+pub mod client;
+pub mod evaluator;
+pub mod scd_xla;
+
+pub use artifacts::{ArtifactEntry, ArtifactManifest};
+pub use client::{LoadedExecutable, Runtime};
+pub use evaluator::XlaDenseEvaluator;
+pub use scd_xla::solve_scd_xla_sparse;

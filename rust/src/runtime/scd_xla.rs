@@ -1,0 +1,225 @@
+//! SCD with the XLA map phase: Algorithm 4 where each shard's evaluation
+//! *and* Algorithm-5 candidate generation run inside the `scd_sparse` AOT
+//! artifact. The reduce and the λ update stay on the rust leader — exactly
+//! the paper's split between mappers and the driver.
+//!
+//! Applies to sparse identity-mapped instances (`M = K`, single local cap),
+//! the paper's production shape. Everything else: use
+//! [`crate::solver::scd::solve_scd`].
+
+use crate::error::Result;
+use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::instance::shard::Shards;
+use crate::mapreduce::Cluster;
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::runtime::client::Runtime;
+use crate::runtime::evaluator::{marshal_sparse, sparse_artifact};
+use crate::solver::bucketing::BucketHist;
+use crate::solver::config::{ReduceMode, SolverConfig};
+use crate::solver::postprocess;
+use crate::solver::rounds::RoundAgg;
+use crate::solver::scd::exact_threshold_reduce;
+use crate::solver::stats::{max_violation_ratio, IterStat, SolveReport};
+use crate::util::rel_change;
+
+enum Thresholds {
+    Exact(Vec<Vec<(f64, f64)>>),
+    Bucketed(Vec<BucketHist>),
+}
+
+impl Thresholds {
+    fn new(mode: ReduceMode, lambda: &[f64]) -> Self {
+        match mode {
+            ReduceMode::Exact => Thresholds::Exact(vec![Vec::new(); lambda.len()]),
+            ReduceMode::Bucketed { delta } => {
+                Thresholds::Bucketed(lambda.iter().map(|&c| BucketHist::new(c, delta)).collect())
+            }
+        }
+    }
+    fn add(&mut self, k: usize, v1: f64, v2: f64) {
+        match self {
+            Thresholds::Exact(v) => v[k].push((v1, v2)),
+            Thresholds::Bucketed(h) => h[k].add(v1, v2),
+        }
+    }
+    fn merge(&mut self, other: Thresholds) {
+        match (self, other) {
+            (Thresholds::Exact(a), Thresholds::Exact(b)) => {
+                for (x, y) in a.iter_mut().zip(b) {
+                    x.extend(y);
+                }
+            }
+            (Thresholds::Bucketed(a), Thresholds::Bucketed(b)) => {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    x.merge(y);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    fn reduce(&mut self, k: usize, budget: f64) -> f64 {
+        match self {
+            Thresholds::Exact(v) => exact_threshold_reduce(&mut v[k], budget),
+            Thresholds::Bucketed(h) => h[k].reduce(budget),
+        }
+    }
+}
+
+/// Solve a sparse identity-mapped instance with SCD, running the map phase
+/// through the `scd_sparse` AOT artifact.
+pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    runtime: &Runtime,
+    manifest: &ArtifactManifest,
+) -> Result<SolveReport> {
+    config.validate()?;
+    source.validate()?;
+    let t0 = std::time::Instant::now();
+    let dims = source.dims();
+    let (m, kk) = (dims.n_items, dims.n_global);
+    let budgets = source.budgets().to_vec();
+    let entry = sparse_artifact(source, manifest, "scd_sparse")?;
+    let exe = runtime.load(entry)?;
+    let n_art = entry.n;
+    let shards = match config.shard_size {
+        Some(s) => Shards::new(dims.n_groups, s),
+        None => Shards::new(dims.n_groups, n_art),
+    };
+
+    let mut lambda = match &config.presolve {
+        Some(p) => crate::solver::presolve::presolve_lambda(source, p, config, cluster)?,
+        None => vec![config.lambda0; kk],
+    };
+
+    let mut history = Vec::new();
+    let mut lambda_2ago: Option<Vec<f64>> = None;
+    let mut converged = false;
+    let mut iterations = 0;
+    let mut last_agg = RoundAgg::new(kk);
+
+    for t in 0..config.max_iters {
+        let it0 = std::time::Instant::now();
+        let lam32: Vec<f32> = lambda.iter().map(|&l| l as f32).collect();
+
+        let (round, mut thresholds) = cluster.map_combine(
+            shards.count(),
+            || (RoundAgg::new(kk), Thresholds::new(config.reduce, &lambda)),
+            |(agg, th), idx| {
+                let shard = shards.get(idx);
+                let mut p = vec![0.0f32; n_art * m];
+                let mut bd = vec![0.0f32; n_art * m];
+                let mut buf = GroupBuf::new(dims, false);
+                let mut start = shard.start;
+                while start < shard.end {
+                    let end = (start + n_art).min(shard.end);
+                    marshal_sparse(source, start, end, m, &mut buf, &mut p, &mut bd);
+                    let out = exe
+                        .execute_f32(&[
+                            (&p, &[n_art as i64, m as i64]),
+                            (&bd, &[n_art as i64, m as i64]),
+                            (&lam32, &[m as i64]),
+                        ])
+                        .expect("scd_sparse artifact execution failed");
+                    // outputs: r[m], stats[3], v1[n,m], v2[n,m], valid[n,m]
+                    for (sum, &v) in agg.consumption.iter_mut().zip(&out[0]) {
+                        sum.add(v as f64);
+                    }
+                    agg.primal.add(out[1][0] as f64);
+                    agg.dual_inner.add(out[1][1] as f64);
+                    agg.n_selected += out[1][2].round() as u64;
+                    let used = end - start;
+                    let (v1, v2, valid) = (&out[2], &out[3], &out[4]);
+                    for row in 0..used {
+                        for j in 0..m {
+                            let idx = row * m + j;
+                            if valid[idx] > 0.5 {
+                                th.add(j, v1[idx] as f64, v2[idx] as f64);
+                            }
+                        }
+                    }
+                    start = end;
+                }
+            },
+            |(mut agg, mut th), (agg2, th2)| {
+                agg = agg.merge(agg2);
+                th.merge(th2);
+                (agg, th)
+            },
+        );
+        let consumption = round.consumption_values();
+
+        let mut new_lambda = lambda.clone();
+        for k in 0..kk {
+            new_lambda[k] = thresholds.reduce(k, budgets[k]);
+        }
+
+        iterations = t + 1;
+        let residual = rel_change(&new_lambda, &lambda);
+        if config.track_history {
+            history.push(IterStat {
+                iter: t,
+                primal: round.primal.value(),
+                dual: round.dual_value(&lambda, &budgets),
+                max_violation_ratio: max_violation_ratio(&consumption, &budgets),
+                lambda_change: residual,
+                wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            });
+        }
+        last_agg = round;
+
+        if let Some(two_ago) = &lambda_2ago {
+            if rel_change(&new_lambda, two_ago) < config.tol
+                && residual >= config.tol
+                && residual < 50.0 * config.tol
+            {
+                for (nl, &ol) in new_lambda.iter_mut().zip(lambda.iter()) {
+                    *nl = nl.max(ol);
+                }
+                lambda = new_lambda;
+                converged = true;
+                break;
+            }
+        }
+        lambda_2ago = Some(std::mem::replace(&mut lambda, new_lambda));
+        if residual < config.tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // final evaluation at the converged λ through the rust evaluator (the
+    // report is the contract; keep it backend-independent and f64-exact)
+    let eval = crate::solver::rounds::RustEvaluator::new(source);
+    let agg = if converged {
+        crate::solver::rounds::evaluation_round(
+            &eval,
+            Shards::for_workers(dims.n_groups, cluster.workers()),
+            kk,
+            &lambda,
+            cluster,
+        )
+    } else {
+        last_agg
+    };
+
+    let mut report = SolveReport {
+        dual_value: agg.dual_value(&lambda, &budgets),
+        primal_value: agg.primal.value(),
+        consumption: agg.consumption_values(),
+        lambda,
+        iterations,
+        converged,
+        budgets,
+        n_selected: agg.n_selected,
+        dropped_groups: 0,
+        history,
+        wall_ms: 0.0,
+    };
+    if config.postprocess && !report.is_feasible() {
+        postprocess::enforce_feasibility(source, &mut report, cluster)?;
+    }
+    report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(report)
+}

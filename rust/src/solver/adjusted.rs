@@ -1,0 +1,167 @@
+//! Cost-adjusted profits — the quantity everything else is built on:
+//!
+//! ```text
+//! p̃_ij = p_ij − Σ_k λ_k b_ijk            (per item; §4.2)
+//! p̃_i  = Σ_j (p_ij − Σ_k λ_k b_ijk) x_ij  (per group; §5.4)
+//! ```
+
+use crate::instance::problem::{CostsBuf, GroupBuf};
+
+/// Compute `p̃_j` for one buffered group into `out` (len `M`).
+///
+/// Dense: a length-`K` dot product per item (this is exactly the
+/// contraction the L1 Pallas kernel performs batched on the MXU).
+/// Sparse: one multiply per item.
+#[inline]
+pub fn adjusted_profits(buf: &GroupBuf, lambda: &[f64], out: &mut [f64]) {
+    let m = buf.profits.len();
+    debug_assert_eq!(out.len(), m);
+    match &buf.costs {
+        CostsBuf::Dense(b) => {
+            let k = lambda.len();
+            debug_assert_eq!(b.len(), m * k);
+            for j in 0..m {
+                let row = &b[j * k..(j + 1) * k];
+                let mut dot = 0.0f64;
+                for (lam, &bc) in lambda.iter().zip(row) {
+                    dot += lam * bc as f64;
+                }
+                out[j] = buf.profits[j] as f64 - dot;
+            }
+        }
+        CostsBuf::Sparse { knap, cost } => {
+            for j in 0..m {
+                out[j] = buf.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
+            }
+        }
+    }
+}
+
+/// Add the selected items' consumption `Σ_j b_jk x_j` into `acc[k]`,
+/// and return `(primal, dual)` group contributions:
+/// `primal = Σ p_j x_j`, `dual = Σ p̃_j x_j`.
+#[inline]
+pub fn accumulate_selection(
+    buf: &GroupBuf,
+    ptilde: &[f64],
+    x: &[u8],
+    acc: &mut [f64],
+) -> (f64, f64) {
+    let m = buf.profits.len();
+    let mut primal = 0.0f64;
+    let mut dual = 0.0f64;
+    match &buf.costs {
+        CostsBuf::Dense(b) => {
+            let k = acc.len();
+            for j in 0..m {
+                if x[j] != 0 {
+                    primal += buf.profits[j] as f64;
+                    dual += ptilde[j];
+                    let row = &b[j * k..(j + 1) * k];
+                    for (a, &bc) in acc.iter_mut().zip(row) {
+                        *a += bc as f64;
+                    }
+                }
+            }
+        }
+        CostsBuf::Sparse { knap, cost } => {
+            for j in 0..m {
+                if x[j] != 0 {
+                    primal += buf.profits[j] as f64;
+                    dual += ptilde[j];
+                    acc[knap[j] as usize] += cost[j] as f64;
+                }
+            }
+        }
+    }
+    (primal, dual)
+}
+
+/// Consumption of a single knapsack `k` by the selection (used by the SCD
+/// candidate walk, which only tracks the coordinate being updated).
+#[inline]
+pub fn consumption_of(buf: &GroupBuf, x: &[u8], k: usize) -> f64 {
+    let m = buf.profits.len();
+    match &buf.costs {
+        CostsBuf::Dense(b) => {
+            let kk = match &buf.costs {
+                CostsBuf::Dense(_) => b.len() / m,
+                _ => unreachable!(),
+            };
+            (0..m)
+                .filter(|&j| x[j] != 0)
+                .map(|j| b[j * kk + k] as f64)
+                .sum()
+        }
+        CostsBuf::Sparse { knap, cost } => (0..m)
+            .filter(|&j| x[j] != 0 && knap[j] as usize == k)
+            .map(|j| cost[j] as f64)
+            .sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::problem::{Dims, GroupBuf};
+
+    fn dense_buf() -> GroupBuf {
+        let mut buf = GroupBuf::new(Dims { n_groups: 1, n_items: 2, n_global: 2 }, true);
+        buf.profits.copy_from_slice(&[1.0, 2.0]);
+        match &mut buf.costs {
+            CostsBuf::Dense(b) => b.copy_from_slice(&[0.5, 0.0, 0.25, 1.0]),
+            _ => unreachable!(),
+        }
+        buf
+    }
+
+    #[test]
+    fn dense_adjusted() {
+        let buf = dense_buf();
+        let mut out = [0.0; 2];
+        adjusted_profits(&buf, &[2.0, 4.0], &mut out);
+        // j0: 1 − (2·0.5 + 4·0) = 0; j1: 2 − (2·0.25 + 4·1) = −2.5
+        assert!((out[0] - 0.0).abs() < 1e-9);
+        assert!((out[1] + 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_adjusted() {
+        let mut buf = GroupBuf::new(Dims { n_groups: 1, n_items: 2, n_global: 3 }, false);
+        buf.profits.copy_from_slice(&[1.0, 2.0]);
+        match &mut buf.costs {
+            CostsBuf::Sparse { knap, cost } => {
+                knap.copy_from_slice(&[2, 0]);
+                cost.copy_from_slice(&[0.5, 1.0]);
+            }
+            _ => unreachable!(),
+        }
+        let mut out = [0.0; 2];
+        adjusted_profits(&buf, &[3.0, 9.0, 2.0], &mut out);
+        assert!((out[0] - (1.0 - 2.0 * 0.5)).abs() < 1e-9);
+        assert!((out[1] - (2.0 - 3.0 * 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulate_and_consumption() {
+        let buf = dense_buf();
+        let ptilde = [0.7, 1.5];
+        let mut acc = [0.0; 2];
+        let (primal, dual) = accumulate_selection(&buf, &ptilde, &[1, 1], &mut acc);
+        assert!((primal - 3.0).abs() < 1e-9);
+        assert!((dual - 2.2).abs() < 1e-9);
+        assert!((acc[0] - 0.75).abs() < 1e-9);
+        assert!((acc[1] - 1.0).abs() < 1e-9);
+        assert!((consumption_of(&buf, &[1, 0], 0) - 0.5).abs() < 1e-9);
+        assert!((consumption_of(&buf, &[0, 1], 1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nothing_selected() {
+        let buf = dense_buf();
+        let mut acc = [0.0; 2];
+        let (p, d) = accumulate_selection(&buf, &[0.0, 0.0], &[0, 0], &mut acc);
+        assert_eq!((p, d), (0.0, 0.0));
+        assert_eq!(acc, [0.0, 0.0]);
+    }
+}

@@ -1,0 +1,217 @@
+//! §5.2 — fine-tuned bucketing for the SCD reducer.
+//!
+//! The exact reducer keeps every emitted `(v1, v2)` pair; at `N` in the
+//! hundreds of millions that is too much state. The paper's fix: a
+//! fixed-size histogram whose buckets are finest *around the previous
+//! iterate* `λ_k^t` (the best available estimate of the new `λ_k`) and grow
+//! exponentially away from it:
+//!
+//! ```text
+//! bucket_id(λ) = sign(λ − λ_t) · ⌊log(|λ − λ_t| / Δ)⌋
+//! ```
+//!
+//! The reducer walks buckets from high λ to low, accumulating consumption,
+//! and interpolates inside the bucket where the budget is crossed (we use
+//! the consumption-weighted mean of the bucket's candidates, which equals
+//! the exact answer when the bucket is a single candidate).
+
+/// Number of exponential buckets per side. 2^96 of dynamic range around Δ
+/// covers any f64 candidate the solver can produce.
+const HALF: usize = 96;
+
+/// One side's bucket: total consumption, consumption-weighted λ mass, and
+/// the observed candidate range (for in-bucket interpolation).
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    w: f64,  // Σ v2
+    wv: f64, // Σ v1·v2
+    lo: f64, // min v1 observed
+    hi: f64, // max v1 observed
+}
+
+impl Default for Bucket {
+    fn default() -> Self {
+        Self { w: 0.0, wv: 0.0, lo: f64::INFINITY, hi: f64::NEG_INFINITY }
+    }
+}
+
+/// Exponential histogram centred on `center = λ_k^t`.
+#[derive(Debug, Clone)]
+pub struct BucketHist {
+    center: f64,
+    delta: f64,
+    /// `λ ≥ center`: index grows with distance above.
+    pos: Vec<Bucket>,
+    /// `λ < center`: index grows with distance below.
+    neg: Vec<Bucket>,
+}
+
+impl BucketHist {
+    /// New histogram around `center` with finest width `delta`.
+    pub fn new(center: f64, delta: f64) -> Self {
+        assert!(delta > 0.0);
+        Self { center, delta, pos: vec![Bucket::default(); HALF], neg: vec![Bucket::default(); HALF] }
+    }
+
+    #[inline]
+    fn side_index(&self, dist: f64) -> usize {
+        // dist ≥ 0; buckets: [0,Δ) → 0, [Δ,2Δ) → 1, [2Δ,4Δ) → 2, ...
+        if dist < self.delta {
+            0
+        } else {
+            let e = (dist / self.delta).log2().floor() as i64 + 1;
+            (e.max(0) as usize).min(HALF - 1)
+        }
+    }
+
+    /// Add one `(v1, v2)` emission.
+    #[inline]
+    pub fn add(&mut self, v1: f64, v2: f64) {
+        let d = v1 - self.center;
+        let b = if d >= 0.0 {
+            let idx = self.side_index(d);
+            &mut self.pos[idx]
+        } else {
+            let idx = self.side_index(-d);
+            &mut self.neg[idx]
+        };
+        b.w += v2;
+        b.wv += v1 * v2;
+        b.lo = b.lo.min(v1);
+        b.hi = b.hi.max(v1);
+    }
+
+    /// Merge a compatible histogram (same center/delta).
+    pub fn merge(&mut self, other: &BucketHist) {
+        debug_assert_eq!(self.center.to_bits(), other.center.to_bits());
+        debug_assert_eq!(self.delta.to_bits(), other.delta.to_bits());
+        let fold = |a: &mut Bucket, b: &Bucket| {
+            a.w += b.w;
+            a.wv += b.wv;
+            a.lo = a.lo.min(b.lo);
+            a.hi = a.hi.max(b.hi);
+        };
+        for (a, b) in self.pos.iter_mut().zip(&other.pos) {
+            fold(a, b);
+        }
+        for (a, b) in self.neg.iter_mut().zip(&other.neg) {
+            fold(a, b);
+        }
+    }
+
+    /// Total emitted consumption.
+    pub fn total(&self) -> f64 {
+        self.pos.iter().chain(&self.neg).map(|b| b.w).sum()
+    }
+
+    /// The §5.2 reduce: walk buckets from the highest λ down; when the
+    /// cumulative consumption would cross the budget inside a bucket,
+    /// *interpolate within that bucket* (paper: "approximate the value of
+    /// v ... by interpolating within the bucket"): the fraction
+    /// `f = (budget − cum)/w` of the bucket's consumption still fits, so
+    /// return `hi − f·(hi − lo)`. Returns 0 when everything fits.
+    pub fn reduce(&self, budget: f64) -> f64 {
+        let mut cum = 0.0f64;
+        // descending λ: far-above buckets first, then near-above, then below
+        for b in self.pos.iter().rev().chain(self.neg.iter()) {
+            if b.w == 0.0 {
+                continue;
+            }
+            if cum + b.w > budget {
+                let f = ((budget - cum) / b.w).clamp(0.0, 1.0);
+                return (b.hi - f * (b.hi - b.lo)).max(0.0);
+            }
+            cum += b.w;
+        }
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::solver::scd::exact_threshold_reduce;
+
+    #[test]
+    fn single_candidate_is_exact() {
+        let mut h = BucketHist::new(1.0, 1e-6);
+        h.add(2.5, 3.0);
+        assert_eq!(h.reduce(1.0), 2.5); // 3.0 > budget → crossing bucket
+        assert_eq!(h.reduce(3.0), 0.0); // fits → λ = 0
+    }
+
+    #[test]
+    fn picks_crossing_bucket_top_down() {
+        let mut h = BucketHist::new(0.0, 1e-3);
+        h.add(10.0, 5.0); // far above
+        h.add(0.5, 5.0); // nearer
+        h.add(0.1, 5.0);
+        // budget 7: 5 (λ=10) fits, adding λ=0.5 bucket crosses → ≈0.5
+        let v = h.reduce(7.0);
+        assert!((v - 0.5).abs() < 0.2, "got {v}");
+        // budget 20: everything fits → 0
+        assert_eq!(h.reduce(20.0), 0.0);
+    }
+
+    #[test]
+    fn negative_side_order() {
+        let mut h = BucketHist::new(5.0, 1e-2);
+        h.add(4.0, 1.0); // below center
+        h.add(6.0, 1.0); // above center
+        // budget 0.5: the λ=6 bucket crosses first
+        assert!((h.reduce(0.5) - 6.0).abs() < 1e-9);
+        // budget 1.5: 6 fits, 4 crosses
+        assert!((h.reduce(1.5) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_combined_adds() {
+        let mut a = BucketHist::new(1.0, 1e-4);
+        let mut b = BucketHist::new(1.0, 1e-4);
+        let mut c = BucketHist::new(1.0, 1e-4);
+        for (i, (v1, v2)) in [(0.9, 1.0), (1.1, 2.0), (3.0, 1.5), (0.2, 0.5)].iter().enumerate() {
+            c.add(*v1, *v2);
+            if i % 2 == 0 {
+                a.add(*v1, *v2)
+            } else {
+                b.add(*v1, *v2)
+            }
+        }
+        a.merge(&b);
+        assert!((a.total() - c.total()).abs() < 1e-12);
+        assert_eq!(a.reduce(2.0), c.reduce(2.0));
+    }
+
+    #[test]
+    fn approximates_exact_reduce_when_centered_well() {
+        // center the histogram at the true answer: buckets are finest there
+        let mut rng = Xoshiro256pp::new(123);
+        for _ in 0..50 {
+            let n = 200;
+            let pairs: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.uniform(0.0, 2.0), rng.uniform(0.0, 1.0))).collect();
+            let budget = rng.uniform(5.0, 40.0);
+            let exact = exact_threshold_reduce(&mut pairs.clone(), budget);
+            let mut h = BucketHist::new(exact, 1e-5);
+            for &(v1, v2) in &pairs {
+                h.add(v1, v2);
+            }
+            let approx = h.reduce(budget);
+            assert!(
+                (approx - exact).abs() <= 0.05 * exact.max(0.05),
+                "exact {exact} vs bucketed {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn extreme_values_clamp_into_range() {
+        let mut h = BucketHist::new(1.0, 1e-9);
+        h.add(1e30, 1.0);
+        h.add(1e-30, 1.0);
+        assert!((h.total() - 2.0).abs() < 1e-12);
+        let v = h.reduce(0.5);
+        assert!(v > 1e20); // the huge candidate crosses first
+    }
+}

@@ -1,0 +1,167 @@
+//! **Algorithm 3** — candidate values for `λ_k` (general case).
+//!
+//! For group `i` and coordinate `k`, each item defines a line
+//! `z_j(λ_k) = a_j − λ_k b_jk` with `a_j = p_j − Σ_{k'≠k} λ_{k'} b_jk'`.
+//! The greedy solution depends only on the *relative order* of the `z_j`
+//! and their signs, so the solution can only change at:
+//!
+//! 1. pairwise intersections of the `M` lines, and
+//! 2. intersections with the horizontal axis.
+//!
+//! Screening those O(M²) positive values is exhaustive.
+
+use crate::instance::problem::{CostsBuf, GroupBuf};
+
+/// Per-coordinate line coefficients `(a_j, s_j)` with `s_j = b_jk`.
+pub fn line_coefficients(buf: &GroupBuf, lambda: &[f64], k: usize, a: &mut [f64], s: &mut [f64]) {
+    let m = buf.profits.len();
+    match &buf.costs {
+        CostsBuf::Dense(b) => {
+            let kk = lambda.len();
+            for j in 0..m {
+                let row = &b[j * kk..(j + 1) * kk];
+                let mut dot = 0.0f64;
+                for (kp, (&lam, &bc)) in lambda.iter().zip(row).enumerate() {
+                    if kp != k {
+                        dot += lam * bc as f64;
+                    }
+                }
+                a[j] = buf.profits[j] as f64 - dot;
+                s[j] = row[k] as f64;
+            }
+        }
+        CostsBuf::Sparse { knap, cost } => {
+            for j in 0..m {
+                if knap[j] as usize == k {
+                    a[j] = buf.profits[j] as f64;
+                    s[j] = cost[j] as f64;
+                } else {
+                    a[j] = buf.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
+                    s[j] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Collect the positive candidate values for `λ_k` into `out`
+/// (deduplicated, sorted **descending** — the order Algorithm 4's walk
+/// needs). `a`/`s` are the line coefficients from [`line_coefficients`].
+pub fn candidate_lambdas(a: &[f64], s: &[f64], out: &mut Vec<f64>) {
+    out.clear();
+    let m = a.len();
+    for j in 0..m {
+        // axis crossing: z_j(λ) = 0
+        if s[j] > 0.0 {
+            let lam = a[j] / s[j];
+            if lam > 0.0 {
+                out.push(lam);
+            }
+        }
+        // pairwise intersections
+        for jp in (j + 1)..m {
+            let ds = s[j] - s[jp];
+            if ds != 0.0 {
+                let lam = (a[j] - a[jp]) / ds;
+                if lam > 0.0 && lam.is_finite() {
+                    out.push(lam);
+                }
+            }
+        }
+    }
+    out.sort_unstable_by(|x, y| y.partial_cmp(x).unwrap());
+    out.dedup();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::problem::{Dims, GroupBuf};
+
+    fn dense_buf(p: &[f32], b: &[f32], k: usize) -> GroupBuf {
+        let m = p.len();
+        let mut buf = GroupBuf::new(Dims { n_groups: 1, n_items: m, n_global: k }, true);
+        buf.profits.copy_from_slice(p);
+        match &mut buf.costs {
+            CostsBuf::Dense(d) => d.copy_from_slice(b),
+            _ => unreachable!(),
+        }
+        buf
+    }
+
+    #[test]
+    fn two_lines_one_knapsack() {
+        // z_0 = 3 − λ, z_1 = 2 − 0.5λ ⇒ intersection λ = 2, axes at 3 and 4
+        let buf = dense_buf(&[3.0, 2.0], &[1.0, 0.5], 1);
+        let (mut a, mut s) = (vec![0.0; 2], vec![0.0; 2]);
+        line_coefficients(&buf, &[0.0], 0, &mut a, &mut s);
+        assert_eq!(a, vec![3.0, 2.0]);
+        assert_eq!(s, vec![1.0, 0.5]);
+        let mut out = Vec::new();
+        candidate_lambdas(&a, &s, &mut out);
+        assert_eq!(out, vec![4.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn other_coordinates_shift_intercepts() {
+        // K=2: a_j must subtract λ_1 b_j1 when screening k=0
+        let buf = dense_buf(&[3.0, 2.0], &[1.0, 2.0, 0.5, 0.0], 2);
+        let (mut a, mut s) = (vec![0.0; 2], vec![0.0; 2]);
+        line_coefficients(&buf, &[9.0, 0.5], 0, &mut a, &mut s);
+        assert_eq!(a, vec![3.0 - 0.5 * 2.0, 2.0]);
+        assert_eq!(s, vec![1.0, 0.5]);
+    }
+
+    #[test]
+    fn sparse_lines() {
+        let mut buf = GroupBuf::new(Dims { n_groups: 1, n_items: 2, n_global: 2 }, false);
+        buf.profits.copy_from_slice(&[3.0, 2.0]);
+        match &mut buf.costs {
+            CostsBuf::Sparse { knap, cost } => {
+                knap.copy_from_slice(&[0, 1]);
+                cost.copy_from_slice(&[1.5, 2.0]);
+            }
+            _ => unreachable!(),
+        }
+        let (mut a, mut s) = (vec![0.0; 2], vec![0.0; 2]);
+        line_coefficients(&buf, &[0.7, 0.3], 0, &mut a, &mut s);
+        // item0 maps to k=0: slope 1.5, intercept p=3
+        assert_eq!(a[0], 3.0);
+        assert_eq!(s[0], 1.5);
+        // item1 maps elsewhere: slope 0, intercept p − λ_1 b = 2 − 0.6
+        assert!((a[1] - 1.4).abs() < 1e-12);
+        assert_eq!(s[1], 0.0);
+    }
+
+    #[test]
+    fn negative_candidates_are_dropped() {
+        // parallel lines produce no intersection; negative axis crossing dropped
+        let (a, s) = (vec![-1.0, -2.0], vec![1.0, 1.0]);
+        let mut out = Vec::new();
+        candidate_lambdas(&a, &s, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn duplicates_removed_and_sorted_desc() {
+        // three identical axis crossings at λ=2
+        let (a, s) = (vec![2.0, 4.0, 6.0], vec![1.0, 2.0, 3.0]);
+        let mut out = Vec::new();
+        candidate_lambdas(&a, &s, &mut out);
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn candidate_count_is_at_most_m_choose_2_plus_m() {
+        let m = 8;
+        let a: Vec<f64> = (0..m).map(|j| 1.0 + j as f64 * 0.37).collect();
+        let s: Vec<f64> = (0..m).map(|j| 0.1 + j as f64 * 0.11).collect();
+        let mut out = Vec::new();
+        candidate_lambdas(&a, &s, &mut out);
+        assert!(out.len() <= m * (m - 1) / 2 + m);
+        // sorted descending
+        for w in out.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Coordinate-scheduling variants (§4.3.2): synchronous (all coordinates
+//! each round — the paper's best performer), cyclic (one at a time) and
+//! block (a fixed-size block per round).
+
+use crate::solver::config::CdMode;
+
+/// The coordinates updated at iteration `t` for `k` total coordinates.
+pub fn active_coords(mode: CdMode, t: usize, k: usize) -> Vec<usize> {
+    match mode {
+        CdMode::Synchronous => (0..k).collect(),
+        CdMode::Cyclic => vec![t % k],
+        CdMode::Block { block_size } => {
+            let bs = block_size.min(k).max(1);
+            let n_blocks = k.div_ceil(bs);
+            let b = t % n_blocks;
+            (b * bs..((b + 1) * bs).min(k)).collect()
+        }
+    }
+}
+
+/// Number of iterations forming one full sweep over all coordinates
+/// (convergence is only declared on sweep boundaries).
+pub fn sweep_len(mode: CdMode, k: usize) -> usize {
+    match mode {
+        CdMode::Synchronous => 1,
+        CdMode::Cyclic => k,
+        CdMode::Block { block_size } => k.div_ceil(block_size.min(k).max(1)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synchronous_covers_all() {
+        assert_eq!(active_coords(CdMode::Synchronous, 3, 4), vec![0, 1, 2, 3]);
+        assert_eq!(sweep_len(CdMode::Synchronous, 4), 1);
+    }
+
+    #[test]
+    fn cyclic_round_robin() {
+        assert_eq!(active_coords(CdMode::Cyclic, 0, 3), vec![0]);
+        assert_eq!(active_coords(CdMode::Cyclic, 4, 3), vec![1]);
+        assert_eq!(sweep_len(CdMode::Cyclic, 3), 3);
+    }
+
+    #[test]
+    fn block_partitions() {
+        let m = CdMode::Block { block_size: 2 };
+        assert_eq!(active_coords(m, 0, 5), vec![0, 1]);
+        assert_eq!(active_coords(m, 1, 5), vec![2, 3]);
+        assert_eq!(active_coords(m, 2, 5), vec![4]);
+        assert_eq!(active_coords(m, 3, 5), vec![0, 1]);
+        assert_eq!(sweep_len(m, 5), 3);
+    }
+
+    #[test]
+    fn every_coord_covered_within_a_sweep() {
+        for mode in [CdMode::Synchronous, CdMode::Cyclic, CdMode::Block { block_size: 3 }] {
+            let k = 7;
+            let mut seen = vec![false; k];
+            for t in 0..sweep_len(mode, k) {
+                for c in active_coords(mode, t, k) {
+                    seen[c] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_block_behaves_like_synchronous() {
+        let m = CdMode::Block { block_size: 99 };
+        assert_eq!(active_coords(m, 0, 4), vec![0, 1, 2, 3]);
+        assert_eq!(sweep_len(m, 4), 1);
+    }
+}

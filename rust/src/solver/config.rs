@@ -1,0 +1,211 @@
+//! Solver configuration.
+
+use crate::error::{Error, Result};
+
+/// How the SCD reducer aggregates `(v1, v2)` threshold emissions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReduceMode {
+    /// Keep every emission and sort — exact Algorithm 4 reduce. Memory is
+    /// O(total emissions); right for `N` up to a few million.
+    Exact,
+    /// §5.2 fine-tuned bucketing: fixed-size exponential histogram centred
+    /// on `λ_k^t`, `delta` is the finest bucket width. O(1) memory per
+    /// knapsack; the update is interpolated inside the crossing bucket.
+    Bucketed {
+        /// Finest bucket width `Δ`.
+        delta: f64,
+    },
+}
+
+/// Coordinate-descent scheduling (paper §4.3.2: synchronous performs best;
+/// cyclic and block are also supported "in our implementation").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CdMode {
+    /// Update every `λ_k` simultaneously each round (Algorithm 4).
+    Synchronous,
+    /// One coordinate per round, round-robin.
+    Cyclic,
+    /// `block_size` coordinates per round, round-robin blocks.
+    Block {
+        /// Coordinates updated per round.
+        block_size: usize,
+    },
+}
+
+/// Pre-solving (§5.3) settings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PresolveConfig {
+    /// Number of sampled groups `n` (paper: 10,000).
+    pub sample: usize,
+    /// Iteration cap for the sampled solve.
+    pub max_iters: usize,
+    /// Sampling seed.
+    pub seed: u64,
+}
+
+impl Default for PresolveConfig {
+    fn default() -> Self {
+        Self { sample: 10_000, max_iters: 50, seed: 0x9e37 }
+    }
+}
+
+/// Full solver configuration shared by DD and SCD.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Iteration cap `T`.
+    pub max_iters: usize,
+    /// Convergence: stop when `max_k |Δλ_k| / max(1,|λ_k|) <` this.
+    pub tol: f64,
+    /// Initial multiplier value (paper §6.3 starts at 1.0).
+    pub lambda0: f64,
+    /// DD learning rate `α` (ignored by SCD).
+    pub dd_alpha: f64,
+    /// SCD reduce mode.
+    pub reduce: ReduceMode,
+    /// Coordinate scheduling.
+    pub cd: CdMode,
+    /// Optional §5.3 pre-solve.
+    pub presolve: Option<PresolveConfig>,
+    /// Run §5.4 post-processing when the converged solution violates a
+    /// global constraint.
+    pub postprocess: bool,
+    /// Shard size override (default: derived from worker count).
+    pub shard_size: Option<usize>,
+    /// Use Algorithm 5 on eligible sparse instances (on by default;
+    /// disable to benchmark the general Algorithm 3 path — Fig 4).
+    pub use_sparse_fast_path: bool,
+    /// Under-relaxation β for the synchronous λ update:
+    /// `λ^{t+1} = λ^t + β(reduce − λ^t)`. `None` = auto (1.0 on sparse
+    /// instances, 0.5 on dense ones, whose coordinates couple strongly and
+    /// make the undamped Jacobi-style update 2-cycle between extremes).
+    pub damping: Option<f64>,
+    /// Record per-iteration stats (primal/dual/violation) in the report.
+    /// Costs one extra greedy evaluation per group per SCD round.
+    pub track_history: bool,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self {
+            max_iters: 60,
+            tol: 1e-4,
+            lambda0: 1.0,
+            dd_alpha: 1e-3,
+            reduce: ReduceMode::Exact,
+            cd: CdMode::Synchronous,
+            presolve: None,
+            postprocess: true,
+            shard_size: None,
+            use_sparse_fast_path: true,
+            damping: None,
+            track_history: true,
+        }
+    }
+}
+
+impl SolverConfig {
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_iters == 0 {
+            return Err(Error::InvalidConfig("max_iters must be ≥ 1".into()));
+        }
+        if !(self.tol > 0.0) {
+            return Err(Error::InvalidConfig("tol must be > 0".into()));
+        }
+        if self.lambda0 < 0.0 {
+            return Err(Error::InvalidConfig("lambda0 must be ≥ 0".into()));
+        }
+        if !(self.dd_alpha > 0.0) {
+            return Err(Error::InvalidConfig("dd_alpha must be > 0".into()));
+        }
+        if let ReduceMode::Bucketed { delta } = self.reduce {
+            if !(delta > 0.0) {
+                return Err(Error::InvalidConfig("bucketing delta must be > 0".into()));
+            }
+        }
+        if let CdMode::Block { block_size } = self.cd {
+            if block_size == 0 {
+                return Err(Error::InvalidConfig("block_size must be ≥ 1".into()));
+            }
+        }
+        if let Some(p) = &self.presolve {
+            if p.sample == 0 || p.max_iters == 0 {
+                return Err(Error::InvalidConfig("presolve sample/max_iters must be ≥ 1".into()));
+            }
+        }
+        if let Some(b) = self.damping {
+            if !(b > 0.0 && b <= 1.0) {
+                return Err(Error::InvalidConfig("damping must be in (0, 1]".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Builder-style setters (the common knobs).
+    pub fn with_max_iters(mut self, t: usize) -> Self {
+        self.max_iters = t;
+        self
+    }
+    /// Set the convergence tolerance.
+    pub fn with_tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+    /// Set DD's learning rate.
+    pub fn with_dd_alpha(mut self, a: f64) -> Self {
+        self.dd_alpha = a;
+        self
+    }
+    /// Enable §5.3 pre-solving.
+    pub fn with_presolve(mut self, p: PresolveConfig) -> Self {
+        self.presolve = Some(p);
+        self
+    }
+    /// Set the SCD reduce mode.
+    pub fn with_reduce(mut self, r: ReduceMode) -> Self {
+        self.reduce = r;
+        self
+    }
+}
+
+pub use PresolveConfig as Presolve;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SolverConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(SolverConfig { max_iters: 0, ..Default::default() }.validate().is_err());
+        assert!(SolverConfig { tol: 0.0, ..Default::default() }.validate().is_err());
+        assert!(SolverConfig { lambda0: -1.0, ..Default::default() }.validate().is_err());
+        assert!(SolverConfig { dd_alpha: 0.0, ..Default::default() }.validate().is_err());
+        assert!(SolverConfig {
+            reduce: ReduceMode::Bucketed { delta: 0.0 },
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(SolverConfig { cd: CdMode::Block { block_size: 0 }, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn builders_apply() {
+        let c = SolverConfig::default()
+            .with_max_iters(7)
+            .with_tol(1e-2)
+            .with_dd_alpha(0.5)
+            .with_reduce(ReduceMode::Bucketed { delta: 1e-3 });
+        assert_eq!(c.max_iters, 7);
+        assert_eq!(c.tol, 1e-2);
+        assert_eq!(c.dd_alpha, 0.5);
+        c.validate().unwrap();
+    }
+}

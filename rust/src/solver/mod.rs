@@ -1,0 +1,30 @@
+//! The paper's solvers and speedups.
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | Algorithm 1 (greedy per-group IP, laminar locals) | [`greedy`] |
+//! | Algorithm 2 (distributed dual descent)            | [`dd`] |
+//! | Algorithm 3 (candidate λ values, general)         | [`candidates`] |
+//! | Algorithm 4 (synchronous coordinate descent)      | [`scd`] |
+//! | Algorithm 5 (linear-time candidates, sparse)      | [`sparse_q`] |
+//! | §5.2 fine-tuned bucketing                         | [`bucketing`] |
+//! | §5.3 pre-solving by sampling                      | [`presolve`] |
+//! | §5.4 post-processing for feasibility              | [`postprocess`] |
+//! | cyclic / block coordinate descent variants        | [`cd_modes`] |
+
+pub mod adjusted;
+pub mod bucketing;
+pub mod candidates;
+pub mod cd_modes;
+pub mod config;
+pub mod dd;
+pub mod greedy;
+pub mod postprocess;
+pub mod presolve;
+pub mod rounds;
+pub mod scd;
+pub mod sparse_q;
+pub mod stats;
+
+pub use config::{CdMode, ReduceMode, SolverConfig};
+pub use stats::{IterStat, SolveReport};

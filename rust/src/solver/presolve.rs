@@ -1,0 +1,160 @@
+//! §5.3 — pre-solving by sampling.
+//!
+//! Sample `n ≪ N` groups, scale every budget by `n/N`, solve the sampled
+//! problem to convergence, and use its `λ` to warm-start the full solve.
+//! The paper reports 40–75% fewer SCD iterations (Table 2) — and that the
+//! sampled `λ` *alone* violates constraints when applied to the full data,
+//! which is why it is a warm start and not a solver.
+
+use crate::error::Result;
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{Dims, GroupBuf, GroupSource};
+use crate::mapreduce::Cluster;
+use crate::rng::Xoshiro256pp;
+use crate::solver::config::{PresolveConfig, SolverConfig};
+
+/// A uniformly-sampled sub-instance with proportionally scaled budgets.
+pub struct SampledSource<'a, S: GroupSource + ?Sized> {
+    inner: &'a S,
+    ids: Vec<usize>,
+    budgets: Vec<f64>,
+}
+
+impl<'a, S: GroupSource + ?Sized> SampledSource<'a, S> {
+    /// Sample `n` distinct groups (all of them when `n ≥ N`).
+    pub fn sample(inner: &'a S, n: usize, seed: u64) -> Self {
+        let total = inner.dims().n_groups;
+        let n = n.min(total);
+        let ids = if n == total {
+            (0..total).collect()
+        } else {
+            let mut rng = Xoshiro256pp::new(seed);
+            rng.sample_distinct(total, n)
+        };
+        let scale = n as f64 / total as f64;
+        let budgets = inner.budgets().iter().map(|b| b * scale).collect();
+        Self { inner, ids, budgets }
+    }
+
+    /// The sampled group ids.
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+}
+
+impl<S: GroupSource + ?Sized> GroupSource for SampledSource<'_, S> {
+    fn dims(&self) -> Dims {
+        Dims { n_groups: self.ids.len(), ..self.inner.dims() }
+    }
+    fn is_dense(&self) -> bool {
+        self.inner.is_dense()
+    }
+    fn locals(&self) -> &LaminarProfile {
+        self.inner.locals()
+    }
+    fn budgets(&self) -> &[f64] {
+        &self.budgets
+    }
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+        self.inner.fill_group(self.ids[i], buf)
+    }
+}
+
+/// Produce a warm-start `λ⁰` by solving the sampled instance with SCD.
+pub fn presolve_lambda<S: GroupSource + ?Sized>(
+    source: &S,
+    pcfg: &PresolveConfig,
+    parent: &SolverConfig,
+    cluster: &Cluster,
+) -> Result<Vec<f64>> {
+    let sampled = SampledSource::sample(source, pcfg.sample, pcfg.seed);
+    let cfg = SolverConfig {
+        max_iters: pcfg.max_iters,
+        presolve: None, // no recursion
+        postprocess: false,
+        track_history: false,
+        shard_size: None,
+        ..parent.clone()
+    };
+    // type-erase the sampled source: keeps the compiler from instantiating
+    // solve_scd::<SampledSource<SampledSource<...>>> recursively
+    let erased: &dyn GroupSource = &sampled;
+    let report = crate::solver::scd::solve_scd(erased, &cfg, cluster)?;
+    Ok(report.lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+    use crate::solver::scd::solve_scd;
+
+    #[test]
+    fn sampled_source_shape_and_budget_scaling() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(10_000, 10, 10).with_seed(1));
+        let s = SampledSource::sample(&p, 100, 7);
+        assert_eq!(s.dims().n_groups, 100);
+        assert_eq!(s.ids().len(), 100);
+        for (sb, fb) in s.budgets().iter().zip(p.budgets()) {
+            assert!((sb / fb - 0.01).abs() < 1e-12);
+        }
+        // sampling more than N clamps
+        let s = SampledSource::sample(&p, 1 << 30, 7);
+        assert_eq!(s.dims().n_groups, 10_000);
+    }
+
+    #[test]
+    fn sampled_groups_match_inner_data() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(1_000, 5, 5).with_seed(2));
+        let s = SampledSource::sample(&p, 10, 3);
+        let mut a = GroupBuf::new(s.dims(), false);
+        let mut b = GroupBuf::new(p.dims(), false);
+        for (si, &gi) in s.ids().iter().enumerate() {
+            s.fill_group(si, &mut a);
+            p.fill_group(gi, &mut b);
+            assert_eq!(a.profits, b.profits);
+        }
+    }
+
+    #[test]
+    fn presolve_lambda_is_near_full_solution() {
+        // the sampled multipliers should be in the ballpark of the full
+        // solve's multipliers (that is the whole point of §5.3)
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(20_000, 10, 10).with_seed(3));
+        let cfg = SolverConfig::default();
+        let warm = presolve_lambda(
+            &p,
+            &PresolveConfig { sample: 2_000, max_iters: 40, seed: 1 },
+            &cfg,
+            &Cluster::new(4),
+        )
+        .unwrap();
+        let full = solve_scd(&p, &cfg, &Cluster::new(4)).unwrap();
+        for (w, f) in warm.iter().zip(&full.lambda) {
+            assert!(
+                (w - f).abs() < 0.25 * f.abs().max(0.1),
+                "warm {w} vs full {f} (all: warm={warm:?} full={:?})",
+                full.lambda
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(20_000, 10, 10).with_seed(5));
+        let cold_cfg = SolverConfig { track_history: false, ..Default::default() };
+        let cold = solve_scd(&p, &cold_cfg, &Cluster::new(4)).unwrap();
+        let warm_cfg = SolverConfig {
+            presolve: Some(PresolveConfig { sample: 2_000, max_iters: 40, seed: 1 }),
+            track_history: false,
+            ..Default::default()
+        };
+        let warm = solve_scd(&p, &warm_cfg, &Cluster::new(4)).unwrap();
+        assert!(
+            warm.iterations <= cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+}

@@ -1,0 +1,175 @@
+//! **Algorithm 5** — linear-time candidate generation for the sparse
+//! special case (§5.1):
+//!
+//! * each item consumes from exactly one knapsack (one-to-one when `M = K`,
+//!   or an injective per-group mapping in general), and
+//! * one local constraint caps the number of chosen items at `Q`.
+//!
+//! Then for each item there is *at most one* candidate for its knapsack's
+//! multiplier: the value at which the item's adjusted profit crosses the
+//! top-`Q` threshold. Quickselect finds the `Q`-th / `(Q+1)`-th largest
+//! adjusted profits in O(M), independent of `Q`.
+
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{CostsBuf, GroupBuf, GroupSource};
+use crate::util::top_k_threshold;
+
+/// Scratch for the Algorithm-5 map step.
+#[derive(Debug, Clone, Default)]
+pub struct SparseQScratch {
+    ap: Vec<f64>,
+    sel: Vec<f64>,
+}
+
+/// Whether `source` satisfies Algorithm 5's structural preconditions:
+/// sparse costs and a single all-items local constraint. (The injectivity
+/// of each group's item→knapsack mapping is the generator's contract and is
+/// property-tested, not checked per group.)
+pub fn eligible<S: GroupSource + ?Sized>(source: &S) -> Option<u32> {
+    if source.is_dense() {
+        return None;
+    }
+    let locals: &LaminarProfile = source.locals();
+    if locals.len() != 1 {
+        return None;
+    }
+    let c = &locals.constraints()[0];
+    if c.items.len() != source.dims().n_items {
+        return None;
+    }
+    Some(c.cap)
+}
+
+/// The Algorithm-5 map step for one group: emit `(k, v1, v2)` candidate
+/// triples via `emit`. `q` is the local cap.
+///
+/// `v1` is the critical multiplier below which item `j` (consuming from
+/// knapsack `knap[j]`) is selected; `v2 = b_j` is the consumption it then
+/// adds.
+pub fn emit_candidates<F: FnMut(usize, f64, f64)>(
+    buf: &GroupBuf,
+    lambda: &[f64],
+    q: u32,
+    scratch: &mut SparseQScratch,
+    mut emit: F,
+) {
+    let m = buf.profits.len();
+    let (knap, cost) = match &buf.costs {
+        CostsBuf::Sparse { knap, cost } => (knap, cost),
+        CostsBuf::Dense(_) => panic!("Algorithm 5 requires the sparse layout"),
+    };
+    scratch.ap.clear();
+    scratch.ap.reserve(m);
+    for j in 0..m {
+        // f64 end-to-end: the same arithmetic as Algorithm 3's line
+        // coefficients, so the two candidate paths agree bit-exactly
+        let ap = buf.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
+        scratch.ap.push(ap.max(0.0));
+    }
+    let q = q as usize;
+    // Q-th and (Q+1)-th largest adjusted profits; beyond the array they
+    // fall back to 0 (profits are clamped at 0, so 0 is the no-op threshold)
+    let (q_th, q1_th) = if q >= m {
+        (0.0f64, 0.0f64)
+    } else {
+        let (a, b) = top_k_threshold(&scratch.ap, q, &mut scratch.sel);
+        (a, b.max(0.0))
+    };
+    for j in 0..m {
+        if cost[j] <= 0.0 {
+            continue; // zero-cost item: λ never changes its status
+        }
+        let p_bar = if scratch.ap[j] >= q_th { q1_th } else { q_th };
+        let p = buf.profits[j] as f64;
+        if p > p_bar {
+            let v1 = (p - p_bar) / cost[j] as f64;
+            emit(knap[j] as usize, v1, cost[j] as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+    use crate::instance::laminar::LaminarProfile;
+    use crate::instance::problem::{Dims, GroupBuf};
+
+    fn sparse_buf(p: &[f32], knap: &[u32], cost: &[f32], k: usize) -> GroupBuf {
+        let m = p.len();
+        let mut buf = GroupBuf::new(Dims { n_groups: 1, n_items: m, n_global: k }, false);
+        buf.profits.copy_from_slice(p);
+        match &mut buf.costs {
+            CostsBuf::Sparse { knap: dk, cost: dc } => {
+                dk.copy_from_slice(knap);
+                dc.copy_from_slice(cost);
+            }
+            _ => unreachable!(),
+        }
+        buf
+    }
+
+    fn collect(buf: &GroupBuf, lambda: &[f64], q: u32) -> Vec<(usize, f64, f64)> {
+        let mut out = Vec::new();
+        let mut scratch = SparseQScratch::default();
+        emit_candidates(buf, lambda, q, &mut scratch, |k, v1, v2| out.push((k, v1, v2)));
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    #[test]
+    fn identity_mapping_emits_per_item_thresholds() {
+        // M = K = 3, λ = 0, Q = 1: ap = p = [3, 2, 1]
+        // item0 (in top-1): p̄ = Q1th = 2 → v1 = (3−2)/1 = 1
+        // item1 (out):      p̄ = Qth = 3 → 2 > 3? no emit
+        // item2 (out):      p̄ = 3 → no emit
+        let buf = sparse_buf(&[3.0, 2.0, 1.0], &[0, 1, 2], &[1.0, 1.0, 1.0], 3);
+        let got = collect(&buf, &[0.0; 3], 1);
+        assert_eq!(got, vec![(0, 1.0, 1.0)]);
+    }
+
+    #[test]
+    fn out_of_top_item_can_emit_when_profit_beats_threshold() {
+        // λ = [5, 0]: ap = [max(3−5,0), 2] = [0, 2]; Q=1
+        // item0 out of top-1: p̄ = Qth = 2; p_0 = 3 > 2 → v1 = (3−2)/1 = 1
+        // item1 in top-1: p̄ = Q1th = 0; p_1 = 2 > 0 → v1 = 2/1 = 2
+        let buf = sparse_buf(&[3.0, 2.0], &[0, 1], &[1.0, 1.0], 2);
+        let got = collect(&buf, &[5.0, 0.0], 1);
+        assert_eq!(got, vec![(0, 1.0, 1.0), (1, 2.0, 1.0)]);
+    }
+
+    #[test]
+    fn q_at_least_m_uses_zero_threshold() {
+        let buf = sparse_buf(&[3.0, 2.0], &[0, 1], &[0.5, 2.0], 2);
+        let got = collect(&buf, &[0.0, 0.0], 5);
+        // every positive-profit item emits its axis crossing p/b
+        assert_eq!(got, vec![(0, 6.0, 0.5), (1, 1.0, 2.0)]);
+    }
+
+    #[test]
+    fn zero_cost_items_do_not_emit() {
+        let buf = sparse_buf(&[3.0], &[0], &[0.0], 1);
+        assert!(collect(&buf, &[0.0], 1).is_empty());
+    }
+
+    #[test]
+    fn eligibility() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(10, 5, 5));
+        assert_eq!(eligible(&p), Some(1));
+        let p = SyntheticProblem::new(GeneratorConfig::dense(10, 5, 5));
+        assert_eq!(eligible(&p), None);
+        let p = SyntheticProblem::new(
+            GeneratorConfig::sparse(10, 6, 6).with_locals(LaminarProfile::scenario_c223(6)),
+        );
+        assert_eq!(eligible(&p), None);
+        // single constraint over a strict subset: not eligible
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(10, 6, 6).with_locals(
+            LaminarProfile::new(vec![crate::instance::laminar::LocalConstraint::new(
+                vec![0, 1, 2],
+                1,
+            )])
+            .unwrap(),
+        ));
+        assert_eq!(eligible(&p), None);
+    }
+}

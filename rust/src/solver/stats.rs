@@ -1,0 +1,149 @@
+//! Solve reports: the quantities the paper evaluates (primal value, duality
+//! gap, constraint-violation ratios, iteration counts).
+
+/// One iteration's tracked statistics (Figures 5 & 6 plot these series).
+#[derive(Debug, Clone)]
+pub struct IterStat {
+    /// Iteration index (0-based).
+    pub iter: usize,
+    /// Primal objective `Σ p x` at this iteration's `λ`.
+    pub primal: f64,
+    /// Dual objective `g(λ)`.
+    pub dual: f64,
+    /// `max_k max(0, R_k − B_k) / B_k` (paper §6: "max constraint
+    /// violation ratio").
+    pub max_violation_ratio: f64,
+    /// Convergence residual `max_k |Δλ_k| / max(1, |λ_k|)`.
+    pub lambda_change: f64,
+    /// Wall time of the iteration (map + reduce + update), milliseconds.
+    pub wall_ms: f64,
+}
+
+impl IterStat {
+    /// Duality gap `g(λ) − primal` (paper footnote 5).
+    pub fn duality_gap(&self) -> f64 {
+        self.dual - self.primal
+    }
+}
+
+/// Final report of a DD/SCD solve.
+#[derive(Debug, Clone)]
+pub struct SolveReport {
+    /// Final multipliers `λ*`.
+    pub lambda: Vec<f64>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Whether the λ residual fell below tolerance.
+    pub converged: bool,
+    /// Final primal objective.
+    pub primal_value: f64,
+    /// Final dual objective `g(λ*)` (an upper bound on the IP optimum).
+    pub dual_value: f64,
+    /// Final per-knapsack consumption `R_k`.
+    pub consumption: Vec<f64>,
+    /// Budgets `B_k` (copied for ratio reporting).
+    pub budgets: Vec<f64>,
+    /// Total selected items.
+    pub n_selected: u64,
+    /// Groups zeroed by §5.4 post-processing (0 when it didn't run).
+    pub dropped_groups: u64,
+    /// Per-iteration series (empty when `track_history` is off).
+    pub history: Vec<IterStat>,
+    /// Total wall time, milliseconds.
+    pub wall_ms: f64,
+}
+
+impl SolveReport {
+    /// Duality gap `dual − primal` (≥ 0 up to numerical noise at
+    /// convergence; Table 1's third column).
+    pub fn duality_gap(&self) -> f64 {
+        self.dual_value - self.primal_value
+    }
+
+    /// `max_k max(0, R_k − B_k)/B_k`.
+    pub fn max_violation_ratio(&self) -> f64 {
+        max_violation_ratio(&self.consumption, &self.budgets)
+    }
+
+    /// Number of violated global constraints.
+    pub fn n_violations(&self) -> usize {
+        self.consumption
+            .iter()
+            .zip(&self.budgets)
+            .filter(|(r, b)| violates(**r, **b))
+            .count()
+    }
+
+    /// True when every global constraint holds (up to relative epsilon).
+    pub fn is_feasible(&self) -> bool {
+        self.n_violations() == 0
+    }
+}
+
+/// Relative violation tolerance: consumption within `1 + 1e-9` of budget
+/// counts as feasible (guards f32-accumulation noise at N=1e8 scale).
+const REL_EPS: f64 = 1e-9;
+
+fn violates(r: f64, b: f64) -> bool {
+    r > b * (1.0 + REL_EPS)
+}
+
+/// `max_k max(0, R_k − B_k)/B_k` over all knapsacks.
+pub fn max_violation_ratio(consumption: &[f64], budgets: &[f64]) -> f64 {
+    consumption
+        .iter()
+        .zip(budgets)
+        .map(|(&r, &b)| ((r - b) / b).max(0.0))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> SolveReport {
+        SolveReport {
+            lambda: vec![0.5, 0.0],
+            iterations: 10,
+            converged: true,
+            primal_value: 100.0,
+            dual_value: 101.5,
+            consumption: vec![9.0, 12.0],
+            budgets: vec![10.0, 10.0],
+            n_selected: 42,
+            dropped_groups: 0,
+            history: vec![],
+            wall_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn gap_and_violations() {
+        let r = report();
+        assert!((r.duality_gap() - 1.5).abs() < 1e-12);
+        assert_eq!(r.n_violations(), 1);
+        assert!(!r.is_feasible());
+        assert!((r.max_violation_ratio() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feasible_when_under_budget() {
+        let mut r = report();
+        r.consumption = vec![10.0, 9.9999];
+        assert!(r.is_feasible());
+        assert_eq!(r.max_violation_ratio(), 0.0);
+    }
+
+    #[test]
+    fn iter_stat_gap() {
+        let s = IterStat {
+            iter: 0,
+            primal: 5.0,
+            dual: 7.0,
+            max_violation_ratio: 0.0,
+            lambda_change: 1.0,
+            wall_ms: 0.0,
+        };
+        assert!((s.duality_gap() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,48 @@
+//! Small numeric / selection utilities shared across the solver.
+
+mod kahan;
+mod select;
+mod sort;
+
+pub use kahan::KahanSum;
+pub use select::{quickselect_kth_largest, top_k_threshold};
+pub use sort::{argsort_desc_by, sort_pairs_desc};
+
+/// Relative change between two multiplier vectors: `max_k |a_k - b_k| /
+/// max(1, |b_k|)`. Used as the SCD/DD convergence residual.
+pub fn rel_change(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() / y.abs().max(1.0))
+        .fold(0.0, f64::max)
+}
+
+/// Clamp NaN to 0.0 — used when normalizing ratios with possibly-zero
+/// denominators in reports.
+pub fn nan_to_zero(x: f64) -> f64 {
+    if x.is_nan() {
+        0.0
+    } else {
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_change_basics() {
+        assert_eq!(rel_change(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rel_change(&[1.1], &[1.0]) - 0.1).abs() < 1e-12);
+        // denominators below 1 are clamped to 1 (absolute change regime)
+        assert!((rel_change(&[0.3], &[0.1]) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_to_zero_works() {
+        assert_eq!(nan_to_zero(f64::NAN), 0.0);
+        assert_eq!(nan_to_zero(3.5), 3.5);
+    }
+}

@@ -1,0 +1,136 @@
+//! Order statistics: the O(K) quickselect the paper's Algorithm 5 relies on
+//! ("quick_select(array, n) finds the n-th largest element of a K-array;
+//! the overall complexity is O(K), independent of Q").
+
+/// Return the `k`-th largest element (1-based: `k = 1` is the maximum) of
+/// `xs`, or `None` if `k == 0` or `k > xs.len()`.
+///
+/// Average O(len); the scratch buffer is clobbered. Hoare-style 3-way
+/// partition on a median-of-three pivot, iterative to avoid stack growth.
+pub fn quickselect_kth_largest(xs: &mut [f64], k: usize) -> Option<f64> {
+    if k == 0 || k > xs.len() {
+        return None;
+    }
+    // select the (k-1)-th index in descending order == (len-k)-th ascending
+    let target = xs.len() - k;
+    let (mut lo, mut hi) = (0usize, xs.len());
+    loop {
+        if hi - lo <= 8 {
+            xs[lo..hi].sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            return Some(xs[target]);
+        }
+        let pivot = median_of_three(xs, lo, hi);
+        // 3-way partition: [< pivot | == pivot | > pivot]
+        let (mut lt, mut i, mut gt) = (lo, lo, hi);
+        while i < gt {
+            if xs[i] < pivot {
+                xs.swap(lt, i);
+                lt += 1;
+                i += 1;
+            } else if xs[i] > pivot {
+                gt -= 1;
+                xs.swap(i, gt);
+            } else {
+                i += 1;
+            }
+        }
+        if target < lt {
+            hi = lt;
+        } else if target >= gt {
+            lo = gt;
+        } else {
+            return Some(pivot);
+        }
+    }
+}
+
+fn median_of_three(xs: &[f64], lo: usize, hi: usize) -> f64 {
+    let mid = lo + (hi - lo) / 2;
+    let (a, b, c) = (xs[lo], xs[mid], xs[hi - 1]);
+    // branchless-ish median
+    if (a <= b) == (b <= c) {
+        b
+    } else if (b <= a) == (a <= c) {
+        a
+    } else {
+        c
+    }
+}
+
+/// Threshold for "top-k" membership: returns `(kth, k1th)` — the k-th and
+/// (k+1)-th largest values (the paper's `Q_th_largest` / `Q1_th_largest`).
+/// When `k >= len`, the k-th largest is the minimum and the (k+1)-th is
+/// `-inf` (everything is in the top-k).
+pub fn top_k_threshold(xs: &[f64], k: usize, scratch: &mut Vec<f64>) -> (f64, f64) {
+    scratch.clear();
+    scratch.extend_from_slice(xs);
+    let kth = quickselect_kth_largest(scratch, k.min(xs.len())).unwrap_or(f64::NEG_INFINITY);
+    let kth = if k >= xs.len() { scratch.iter().copied().fold(f64::INFINITY, f64::min) } else { kth };
+    scratch.clear();
+    scratch.extend_from_slice(xs);
+    let k1th = quickselect_kth_largest(scratch, k + 1).unwrap_or(f64::NEG_INFINITY);
+    (kth, k1th)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn kth_by_sort(xs: &[f64], k: usize) -> f64 {
+        let mut v = xs.to_vec();
+        v.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        v[k - 1]
+    }
+
+    #[test]
+    fn small_cases() {
+        let mut v = [3.0f64, 1.0, 2.0];
+        assert_eq!(quickselect_kth_largest(&mut v, 1), Some(3.0));
+        let mut v = [3.0f64, 1.0, 2.0];
+        assert_eq!(quickselect_kth_largest(&mut v, 2), Some(2.0));
+        let mut v = [3.0f64, 1.0, 2.0];
+        assert_eq!(quickselect_kth_largest(&mut v, 3), Some(1.0));
+        let mut v = [3.0f64, 1.0, 2.0];
+        assert_eq!(quickselect_kth_largest(&mut v, 4), None);
+        assert_eq!(quickselect_kth_largest(&mut [], 1), None);
+        let mut v = [5.0f64];
+        assert_eq!(quickselect_kth_largest(&mut v, 1), Some(5.0));
+    }
+
+    #[test]
+    fn with_duplicates() {
+        let mut v = [2.0f64, 2.0, 2.0, 1.0, 3.0];
+        assert_eq!(quickselect_kth_largest(&mut v, 2), Some(2.0));
+        let mut v = [2.0f64, 2.0, 2.0, 1.0, 3.0];
+        assert_eq!(quickselect_kth_largest(&mut v, 5), Some(1.0));
+    }
+
+    #[test]
+    fn randomized_against_sort() {
+        let mut rng = Xoshiro256pp::new(17);
+        for _ in 0..500 {
+            let n = 1 + rng.below(200) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| (rng.below(50) as f64) * 0.5).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let mut scratch = xs.clone();
+            let got = quickselect_kth_largest(&mut scratch, k).unwrap();
+            assert_eq!(got, kth_by_sort(&xs, k), "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn top_k_threshold_matches_paper_semantics() {
+        let xs = [5.0f64, 1.0, 4.0, 2.0, 3.0];
+        let mut scratch = Vec::new();
+        let (kth, k1th) = top_k_threshold(&xs, 2, &mut scratch);
+        assert_eq!((kth, k1th), (4.0, 3.0));
+        // k >= len: everything in top-k
+        let (kth, k1th) = top_k_threshold(&xs, 5, &mut scratch);
+        assert_eq!(kth, 1.0);
+        assert_eq!(k1th, f64::NEG_INFINITY);
+        let (kth, k1th) = top_k_threshold(&xs, 9, &mut scratch);
+        assert_eq!(kth, 1.0);
+        assert_eq!(k1th, f64::NEG_INFINITY);
+    }
+}

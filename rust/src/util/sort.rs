@@ -1,0 +1,42 @@
+//! Sorting helpers used by the greedy subproblem solver and the SCD reducer.
+
+/// Indices of `xs` sorted by `key(x)` in **descending** order; ties broken
+/// by ascending index so results are deterministic across worker counts.
+pub fn argsort_desc_by<T, F: Fn(&T) -> f64>(xs: &[T], key: F) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..xs.len() as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        let (ka, kb) = (key(&xs[a as usize]), key(&xs[b as usize]));
+        kb.partial_cmp(&ka).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Sort `(v1, v2)` pairs by `v1` descending (deterministic on ties via v2
+/// then original order is irrelevant because reducer only consumes prefix
+/// sums over equal-v1 runs).
+pub fn sort_pairs_desc(pairs: &mut [(f64, f64)]) {
+    pairs.sort_unstable_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argsort_orders_descending_with_stable_ties() {
+        let xs = [1.0f64, 3.0, 2.0, 3.0];
+        let idx = argsort_desc_by(&xs, |&x| x);
+        assert_eq!(idx, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn sort_pairs_descending() {
+        let mut p = vec![(1.0, 9.0), (3.0, 1.0), (2.0, 5.0)];
+        sort_pairs_desc(&mut p);
+        assert_eq!(p, vec![(3.0, 1.0), (2.0, 5.0), (1.0, 9.0)]);
+    }
+}

@@ -1,0 +1,90 @@
+//! CLI integration: drive `bskp::cli::run` end to end (argument parsing →
+//! coordinator → report), including the JSON report output.
+
+use bskp::cli::run;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn solve_sparse_default() {
+    assert_eq!(run(argv("bskp solve --n 800 --m 6 --k 6 --iters 15 --quiet")), 0);
+}
+
+#[test]
+fn solve_dense_with_hierarchy_and_presolve() {
+    assert_eq!(
+        run(argv(
+            "bskp solve --n 400 --m 10 --k 4 --class dense --locals c223 \
+             --presolve 100 --iters 25 --quiet"
+        )),
+        0
+    );
+}
+
+#[test]
+fn solve_dd_with_alpha() {
+    assert_eq!(
+        run(argv("bskp solve --n 500 --m 5 --k 5 --algo dd --alpha 0.002 --iters 20 --quiet")),
+        0
+    );
+}
+
+#[test]
+fn solve_bucketed_and_cd_modes() {
+    assert_eq!(
+        run(argv("bskp solve --n 500 --m 5 --k 5 --bucketed 1e-5 --iters 15 --quiet")),
+        0
+    );
+    assert_eq!(
+        run(argv("bskp solve --n 400 --m 5 --k 5 --cd cyclic --iters 40 --quiet")),
+        0
+    );
+    assert_eq!(
+        run(argv("bskp solve --n 400 --m 5 --k 5 --cd block:2 --iters 40 --quiet")),
+        0
+    );
+}
+
+#[test]
+fn json_report_is_written_and_valid_shape() {
+    let path = std::env::temp_dir().join(format!("bskp_cli_{}.json", std::process::id()));
+    let cmd = format!(
+        "bskp solve --n 300 --m 4 --k 4 --iters 10 --quiet --json {}",
+        path.display()
+    );
+    assert_eq!(run(argv(&cmd)), 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    for key in ["\"iterations\"", "\"primal_value\"", "\"lambda\"", "\"history\""] {
+        assert!(text.contains(key), "missing {key}");
+    }
+    assert!(text.starts_with('{') && text.ends_with('}'));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn lpbound_subcommand() {
+    assert_eq!(run(argv("bskp lpbound --n 200 --m 4 --k 3 --cuts 40")), 0);
+}
+
+#[test]
+fn inspect_subcommand() {
+    assert_eq!(run(argv("bskp inspect --n 50 --m 6 --k 3 --class dense --locals c223")), 0);
+}
+
+#[test]
+fn usage_errors_return_2() {
+    assert_eq!(run(argv("bskp solve --class nonsense")), 2);
+    assert_eq!(run(argv("bskp solve --algo nonsense")), 2);
+    assert_eq!(run(argv("bskp solve --cd nonsense")), 2);
+    assert_eq!(run(argv("bskp solve --locals nonsense")), 2);
+    assert_eq!(run(argv("bskp solve --n")), 2);
+    assert_eq!(run(argv("bskp wat")), 2);
+}
+
+#[test]
+fn invalid_solver_config_is_rejected() {
+    assert_eq!(run(argv("bskp solve --n 100 --iters 0 --quiet")), 2);
+    assert_eq!(run(argv("bskp solve --n 100 --damping 2.0 --quiet")), 2);
+}

@@ -1,0 +1,95 @@
+//! Integration tests for the MapReduce substrate under solver-shaped loads.
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::shard::Shards;
+use bskp::mapreduce::{Cluster, ThreadPool};
+use bskp::solver::rounds::{evaluation_round, RustEvaluator};
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn every_worker_count_gives_identical_solver_output() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(4_000, 8, 8).with_seed(21));
+    let cfg = SolverConfig { max_iters: 8, ..Default::default() };
+    let base = solve_scd(&p, &cfg, &Cluster::new(1)).unwrap();
+    for workers in [2, 3, 5, 16, 64] {
+        let r = solve_scd(&p, &cfg, &Cluster::new(workers)).unwrap();
+        assert_eq!(r.lambda, base.lambda, "workers={workers}");
+        assert_eq!(r.primal_value, base.primal_value, "workers={workers}");
+        assert_eq!(r.n_selected, base.n_selected, "workers={workers}");
+    }
+}
+
+#[test]
+fn shard_size_does_not_change_results() {
+    let p = SyntheticProblem::new(GeneratorConfig::dense(2_000, 6, 4).with_seed(22));
+    let eval = RustEvaluator::new(&p);
+    let cluster = Cluster::new(4);
+    let lambda = vec![0.1; 4];
+    let base = evaluation_round(&eval, Shards::new(2_000, 2_000), 4, &lambda, &cluster);
+    for sh in [1, 7, 100, 999, 1_024] {
+        let agg = evaluation_round(&eval, Shards::new(2_000, sh), 4, &lambda, &cluster);
+        assert_eq!(agg.n_selected, base.n_selected, "shard={sh}");
+        assert!((agg.primal.value() - base.primal.value()).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn work_stealing_balances_skewed_shards() {
+    // shards with wildly different costs must all be processed exactly once
+    let cluster = Cluster::new(8);
+    let processed = Arc::new(AtomicUsize::new(0));
+    let out = cluster.map_shards(64, |idx| {
+        processed.fetch_add(1, Ordering::SeqCst);
+        if idx % 16 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        idx
+    });
+    assert_eq!(processed.load(Ordering::SeqCst), 64);
+    assert_eq!(out, (0..64).collect::<Vec<_>>());
+}
+
+#[test]
+fn more_shards_than_groups_is_fine() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(10, 4, 4).with_seed(23));
+    let cfg = SolverConfig { shard_size: Some(1), max_iters: 5, ..Default::default() };
+    let r = solve_scd(&p, &cfg, &Cluster::new(32)).unwrap();
+    assert!(r.is_feasible());
+}
+
+#[test]
+fn thread_pool_handles_bursts() {
+    let pool = ThreadPool::new(4);
+    let counter = Arc::new(AtomicUsize::new(0));
+    for burst in 0..5 {
+        for _ in 0..200 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), (burst + 1) * 200);
+    }
+}
+
+#[test]
+fn combiner_shuffle_volume_is_worker_bound() {
+    // map_combine must call merge at most workers-1 times (map-side
+    // combining: the "shuffle" is per worker, not per shard)
+    let cluster = Cluster::new(4);
+    let merges = AtomicUsize::new(0);
+    cluster.map_combine(
+        1000,
+        || 0u64,
+        |acc, i| *acc += i as u64,
+        |a, b| {
+            merges.fetch_add(1, Ordering::SeqCst);
+            a + b
+        },
+    );
+    assert!(merges.load(Ordering::SeqCst) <= 3);
+}

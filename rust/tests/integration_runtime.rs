@@ -1,0 +1,122 @@
+//! Integration tests for the PJRT runtime: artifact loading and the XLA
+//! map phase versus the pure-rust reference.
+//!
+//! Requires `make artifacts` (the repo's default set); every test skips
+//! gracefully when the manifest is missing so `cargo test` works before
+//! the first artifact build.
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::shard::Shards;
+use bskp::mapreduce::Cluster;
+use bskp::runtime::evaluator::XlaSparseEvaluator;
+use bskp::runtime::{solve_scd_xla_sparse, ArtifactManifest, Runtime, XlaDenseEvaluator};
+use bskp::solver::rounds::{evaluation_round, RustEvaluator};
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+
+fn manifest() -> Option<ArtifactManifest> {
+    ArtifactManifest::load("artifacts").ok()
+}
+
+#[test]
+fn dense_artifact_matches_rust_evaluator() {
+    let Some(manifest) = manifest() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let p = SyntheticProblem::new(GeneratorConfig::dense(5_000, 10, 10).with_seed(31));
+    let cluster = Cluster::new(3);
+    let shards = Shards::new(5_000, 1_700); // deliberately ≠ artifact slab
+    for lambda in [vec![0.0; 10], vec![0.05; 10], vec![0.2; 10]] {
+        let rust = evaluation_round(&RustEvaluator::new(&p), shards, 10, &lambda, &cluster);
+        let xla = XlaDenseEvaluator::new(&p, &rt, &manifest).unwrap();
+        let got = evaluation_round(&xla, shards, 10, &lambda, &cluster);
+        assert_eq!(got.n_selected, rust.n_selected, "λ={lambda:?}");
+        let rel = (got.primal.value() - rust.primal.value()).abs()
+            / rust.primal.value().max(1.0);
+        assert!(rel < 1e-5, "λ={lambda:?} primal rel {rel}");
+        for (a, b) in got.consumption_values().iter().zip(rust.consumption_values()) {
+            assert!((a - b).abs() < 1e-4 * b.max(1.0));
+        }
+    }
+}
+
+#[test]
+fn sparse_artifact_matches_rust_evaluator() {
+    let Some(manifest) = manifest() else {
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(9_000, 10, 10).with_seed(32));
+    let cluster = Cluster::new(2);
+    let shards = Shards::new(9_000, 4_096);
+    let lambda = vec![0.4; 10];
+    let rust = evaluation_round(&RustEvaluator::new(&p), shards, 10, &lambda, &cluster);
+    let xla = XlaSparseEvaluator::new(&p, &rt, &manifest).unwrap();
+    let got = evaluation_round(&xla, shards, 10, &lambda, &cluster);
+    assert_eq!(got.n_selected, rust.n_selected);
+    let rel =
+        (got.primal.value() - rust.primal.value()).abs() / rust.primal.value().max(1.0);
+    assert!(rel < 1e-5, "primal rel {rel}");
+}
+
+#[test]
+fn scd_xla_sparse_end_to_end_agrees_with_rust() {
+    let Some(manifest) = manifest() else {
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(15_000, 10, 10).with_seed(33));
+    let cluster = Cluster::new(2);
+    let cfg = SolverConfig::default();
+    let rust = solve_scd(&p, &cfg, &cluster).unwrap();
+    let xla = solve_scd_xla_sparse(&p, &cfg, &cluster, &rt, &manifest).unwrap();
+    assert!(xla.is_feasible());
+    let rel = (xla.primal_value - rust.primal_value).abs() / rust.primal_value;
+    assert!(rel < 2e-3, "primal drift {rel}");
+}
+
+#[test]
+fn xla_evaluator_rejects_wrong_shapes() {
+    let Some(manifest) = manifest() else {
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    // sparse instance into the dense evaluator
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 10, 10));
+    assert!(XlaDenseEvaluator::new(&p, &rt, &manifest).is_err());
+    // no artifact for this M/K
+    let p = SyntheticProblem::new(GeneratorConfig::dense(100, 7, 3));
+    assert!(XlaDenseEvaluator::new(&p, &rt, &manifest).is_err());
+    // M != K sparse
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 5, 10));
+    assert!(XlaSparseEvaluator::new(&p, &rt, &manifest).is_err());
+}
+
+#[test]
+fn manifest_lists_default_artifacts() {
+    let Some(manifest) = manifest() else {
+        return;
+    };
+    assert!(manifest.find("eval_dense", 10, 10, 1).is_some());
+    assert!(manifest.find("eval_sparse", 10, 10, 1).is_some());
+    assert!(manifest.find("scd_sparse", 10, 10, 1).is_some());
+}
+
+#[test]
+fn padding_tail_slab_contributes_nothing() {
+    let Some(manifest) = manifest() else {
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    // 5 groups: far below the artifact slab of 2048 → heavy padding
+    let p = SyntheticProblem::new(GeneratorConfig::dense(5, 10, 10).with_seed(35));
+    let cluster = Cluster::single();
+    let shards = Shards::new(5, 5);
+    let lambda = vec![0.01; 10];
+    let rust = evaluation_round(&RustEvaluator::new(&p), shards, 10, &lambda, &cluster);
+    let xla = XlaDenseEvaluator::new(&p, &rt, &manifest).unwrap();
+    let got = evaluation_round(&xla, shards, 10, &lambda, &cluster);
+    assert_eq!(got.n_selected, rust.n_selected);
+}

@@ -1,0 +1,205 @@
+//! Integration tests across the full solver stack (instance → mapreduce →
+//! DD/SCD → presolve/postprocess → report).
+
+use bskp::coordinator::{Algorithm, Coordinator};
+use bskp::instance::generator::{CostClass, Dist, GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::LaminarProfile;
+use bskp::lp::lp_upper_bound;
+use bskp::mapreduce::Cluster;
+use bskp::solver::config::{CdMode, PresolveConfig, ReduceMode, SolverConfig};
+use bskp::solver::dd::solve_dd;
+use bskp::solver::scd::solve_scd;
+
+fn cluster() -> Cluster {
+    Cluster::new(4)
+}
+
+#[test]
+fn scd_beats_dd_on_violations_at_equal_iterations() {
+    // the Fig-5/6 claim as a test
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(5_000, 10, 10).with_seed(1));
+    let cfg = SolverConfig {
+        max_iters: 25,
+        tol: 1e-12,
+        postprocess: false,
+        ..Default::default()
+    };
+    let scd = solve_scd(&p, &cfg, &cluster()).unwrap();
+    let dd = solve_dd(&p, &cfg, &cluster()).unwrap();
+    let tail = |h: &[bskp::solver::IterStat]| {
+        let last = &h[h.len() - 5..];
+        last.iter().map(|s| s.max_violation_ratio).sum::<f64>() / 5.0
+    };
+    assert!(
+        tail(&scd.history) < 0.3 * tail(&dd.history).max(1e-9) + 1e-4,
+        "SCD tail violation {} must be far below DD {}",
+        tail(&scd.history),
+        tail(&dd.history)
+    );
+}
+
+#[test]
+fn near_optimality_vs_lp_bound_across_shapes() {
+    // the Fig-1 claim as a test, over several instance shapes
+    let shapes: Vec<(GeneratorConfig, f64)> = vec![
+        (GeneratorConfig::sparse(3_000, 10, 10), 0.97),
+        (GeneratorConfig::sparse(3_000, 5, 5).with_locals(LaminarProfile::single(5, 2)), 0.97),
+        (
+            GeneratorConfig::dense(1_500, 10, 5)
+                .with_locals(LaminarProfile::scenario_c223(10)),
+            0.95,
+        ),
+    ];
+    for (cfg, min_ratio) in shapes {
+        let p = SyntheticProblem::new(cfg.with_seed(3));
+        let r = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+        assert!(r.is_feasible());
+        let bound = lp_upper_bound(&p, &cluster(), 1e-4, 120).unwrap();
+        let ratio = r.primal_value / bound.value;
+        assert!(
+            ratio > min_ratio && ratio <= 1.0 + 1e-9,
+            "ratio {ratio} out of range for {:?}",
+            p.config().cost_class
+        );
+    }
+}
+
+#[test]
+fn presolve_preserves_solution_quality() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(30_000, 10, 10).with_seed(5));
+    let cold = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    let warm_cfg = SolverConfig {
+        presolve: Some(PresolveConfig { sample: 3_000, ..Default::default() }),
+        ..Default::default()
+    };
+    let warm = solve_scd(&p, &warm_cfg, &cluster()).unwrap();
+    assert!(warm.is_feasible());
+    let drift = (warm.primal_value - cold.primal_value).abs() / cold.primal_value;
+    assert!(drift < 0.01, "warm vs cold primal drift {drift}");
+    assert!(warm.iterations <= cold.iterations);
+}
+
+#[test]
+fn bucketed_reduce_scales_and_stays_close() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(20_000, 10, 10).with_seed(6));
+    let exact = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    for delta in [1e-4, 1e-6, 1e-8] {
+        let cfg = SolverConfig {
+            reduce: ReduceMode::Bucketed { delta },
+            ..Default::default()
+        };
+        let b = solve_scd(&p, &cfg, &cluster()).unwrap();
+        assert!(b.is_feasible());
+        let drift = (b.primal_value - exact.primal_value).abs() / exact.primal_value;
+        assert!(drift < 0.02, "delta {delta}: drift {drift}");
+    }
+}
+
+#[test]
+fn cd_modes_agree_on_the_optimum() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(3_000, 6, 6).with_seed(7));
+    let sync = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    for cd in [CdMode::Cyclic, CdMode::Block { block_size: 2 }] {
+        let cfg = SolverConfig { cd, max_iters: 300, ..Default::default() };
+        let r = solve_scd(&p, &cfg, &cluster()).unwrap();
+        assert!(r.is_feasible(), "{cd:?}");
+        let drift = (r.primal_value - sync.primal_value).abs() / sync.primal_value;
+        assert!(drift < 0.02, "{cd:?} drift {drift}");
+    }
+}
+
+#[test]
+fn categorical_style_caps_c_greater_than_one() {
+    // C=[3] locals: up to 3 items per group
+    let p = SyntheticProblem::new(
+        GeneratorConfig::sparse(2_000, 10, 10)
+            .with_locals(LaminarProfile::single(10, 3))
+            .with_seed(8),
+    );
+    let r = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    assert!(r.is_feasible());
+    assert!(r.n_selected <= 3 * 2_000);
+    assert!(r.n_selected > 2_000, "cap 3 should select more than cap 1 would");
+}
+
+#[test]
+fn mixture_cost_distribution_fig1_class() {
+    let p = SyntheticProblem::new(GeneratorConfig::fig1(
+        1_000,
+        5,
+        LaminarProfile::scenario_c223(10),
+    ));
+    assert!(matches!(p.config().cost_dist, Dist::MixUniform { .. }));
+    assert_eq!(p.config().cost_class, CostClass::Dense);
+    let r = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    assert!(r.is_feasible());
+    assert!(r.primal_value > 0.0);
+}
+
+#[test]
+fn coordinator_facade_matches_direct_call() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(2_000, 8, 8).with_seed(9));
+    let direct = solve_scd(&p, &SolverConfig::default(), &Cluster::new(3)).unwrap();
+    let via = Coordinator::new(Cluster::new(3))
+        .with_algorithm(Algorithm::Scd)
+        .solve(&p)
+        .unwrap();
+    assert_eq!(direct.primal_value, via.primal_value);
+    assert_eq!(direct.lambda, via.lambda);
+}
+
+#[test]
+fn tiny_edge_instances() {
+    // N=1 group
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(1, 4, 4).with_seed(10));
+    let r = solve_scd(&p, &SolverConfig::default(), &Cluster::single()).unwrap();
+    assert!(r.is_feasible());
+    // M=1, K=1 (degenerate MDKP corner)
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(500, 1, 1).with_seed(11));
+    let r = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    assert!(r.is_feasible());
+    // K=1 single knapsack (the Pinterest shape)
+    let p = SyntheticProblem::new(GeneratorConfig::dense(500, 5, 1).with_seed(12));
+    let r = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    assert!(r.is_feasible());
+}
+
+#[test]
+fn loose_budgets_mean_zero_multipliers() {
+    // with huge budgets every constraint is slack → λ* = 0, everything
+    // positive selected (complementary slackness end-to-end)
+    let p = SyntheticProblem::new(
+        GeneratorConfig::sparse(1_000, 6, 6).with_tightness(1e3).with_seed(13),
+    );
+    let r = solve_scd(&p, &SolverConfig::default(), &cluster()).unwrap();
+    assert!(r.is_feasible());
+    assert!(r.lambda.iter().all(|&l| l == 0.0), "λ = {:?}", r.lambda);
+    assert!((r.duality_gap() / r.primal_value).abs() < 1e-9);
+}
+
+#[test]
+fn dd_needs_its_learning_rate_scd_does_not() {
+    // DD with a bad α oscillates/violates; SCD with no tuning converges —
+    // the paper's §4.3.2 motivation
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(3_000, 10, 10).with_seed(14));
+    let bad_dd = SolverConfig {
+        dd_alpha: 5e-2,
+        max_iters: 25,
+        tol: 1e-12,
+        postprocess: false,
+        ..Default::default()
+    };
+    let dd = solve_dd(&p, &bad_dd, &cluster()).unwrap();
+    let scd = solve_scd(
+        &p,
+        &SolverConfig { max_iters: 25, postprocess: false, ..Default::default() },
+        &cluster(),
+    )
+    .unwrap();
+    assert!(
+        scd.max_violation_ratio() < dd.max_violation_ratio(),
+        "scd {} vs dd {}",
+        scd.max_violation_ratio(),
+        dd.max_violation_ratio()
+    );
+}

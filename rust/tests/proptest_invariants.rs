@@ -1,0 +1,252 @@
+//! Property-based invariant tests.
+//!
+//! The offline registry has no `proptest`, so this is a scratch-built
+//! harness: seeded xoshiro generators produce random instances/profiles,
+//! every case asserts the invariant, and failures print the seed for
+//! replay. Coverage is the same *shape* proptest would give: hundreds of
+//! randomized cases per invariant.
+
+use bskp::instance::generator::{CostClass, Dist, GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::{LaminarProfile, LocalConstraint};
+use bskp::instance::problem::{GroupBuf, GroupSource, MaterializedProblem};
+use bskp::lp::fractional::solve_group_fractional;
+use bskp::lp::{build_full_lp, lp_upper_bound, solve_simplex};
+use bskp::mapreduce::Cluster;
+use bskp::rng::Xoshiro256pp;
+use bskp::solver::adjusted::adjusted_profits;
+use bskp::solver::greedy::{greedy_select, GroupScratch};
+use bskp::solver::scd::{exact_threshold_reduce, solve_scd};
+use bskp::solver::SolverConfig;
+
+/// Random laminar family over [0, m): recursive interval splitting.
+fn random_laminar(rng: &mut Xoshiro256pp, m: usize) -> LaminarProfile {
+    fn split(rng: &mut Xoshiro256pp, lo: usize, hi: usize, cs: &mut Vec<LocalConstraint>) {
+        let width = hi - lo;
+        if width == 0 {
+            return;
+        }
+        if rng.coin(0.7) {
+            let cap = 1 + rng.below(width as u64) as u32;
+            cs.push(LocalConstraint::new((lo as u16..hi as u16).collect(), cap));
+        }
+        if width >= 2 && rng.coin(0.5) {
+            let mid = lo + 1 + rng.below((width - 1) as u64) as usize;
+            split(rng, lo, mid, cs);
+            split(rng, mid, hi, cs);
+        }
+    }
+    let mut cs = Vec::new();
+    split(rng, 0, m, &mut cs);
+    LaminarProfile::new(cs).expect("interval splitting is laminar")
+}
+
+fn random_config(rng: &mut Xoshiro256pp) -> GeneratorConfig {
+    let m = 2 + rng.below(9) as usize;
+    let k = 1 + rng.below(8) as usize;
+    let n = 50 + rng.below(400) as usize;
+    let sparse = rng.coin(0.5);
+    let mut cfg = if sparse {
+        GeneratorConfig::sparse(n, m, k)
+    } else {
+        GeneratorConfig::dense(n, m, k)
+    };
+    if rng.coin(0.5) {
+        cfg = cfg.with_locals(random_laminar(rng, m));
+    } else {
+        cfg = cfg.with_locals(LaminarProfile::single(m, 1 + rng.below(m as u64) as u32));
+    }
+    cfg.with_tightness(0.1 + rng.next_f64() * 0.8).with_seed(rng.next_u64())
+}
+
+#[test]
+fn prop_greedy_selection_always_respects_locals() {
+    let mut rng = Xoshiro256pp::new(0xA1);
+    for case in 0..300 {
+        let m = 2 + rng.below(10) as usize;
+        let locals = random_laminar(&mut rng, m);
+        let mut s = GroupScratch::new(m);
+        for j in 0..m {
+            s.ptilde[j] = rng.uniform(-1.0, 2.0);
+        }
+        greedy_select(&locals, &mut s);
+        assert!(locals.is_feasible(&s.x), "case {case}: infeasible greedy output");
+        // never selects non-positive items
+        for j in 0..m {
+            if s.x[j] != 0 {
+                assert!(s.ptilde[j] > 0.0, "case {case}: selected non-positive item");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fractional_greedy_never_below_integral() {
+    // LP ≥ IP per group, and for laminar caps they are equal
+    let mut rng = Xoshiro256pp::new(0xB2);
+    for case in 0..200 {
+        let m = 2 + rng.below(8) as usize;
+        let locals = random_laminar(&mut rng, m);
+        let ptilde: Vec<f64> = (0..m).map(|_| rng.uniform(-1.0, 2.0)).collect();
+        let mut s = GroupScratch::new(m);
+        s.ptilde.copy_from_slice(&ptilde);
+        greedy_select(&locals, &mut s);
+        let int_v: f64 =
+            ptilde.iter().zip(&s.x).filter(|(_, &x)| x != 0).map(|(&p, _)| p).sum();
+        let (_, frac_v) = solve_group_fractional(&ptilde, &locals);
+        assert!(
+            (frac_v - int_v).abs() < 1e-9,
+            "case {case}: fractional {frac_v} vs integral {int_v}"
+        );
+    }
+}
+
+#[test]
+fn prop_exact_reduce_picks_feasible_minimal_threshold() {
+    let mut rng = Xoshiro256pp::new(0xC3);
+    for case in 0..500 {
+        let n = 1 + rng.below(60) as usize;
+        let mut pairs: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.uniform(0.0, 3.0), rng.uniform(0.01, 1.0)))
+            .collect();
+        let budget = rng.uniform(0.1, 20.0);
+        let v = exact_threshold_reduce(&mut pairs.clone(), budget);
+        assert!(v >= 0.0);
+        // weak-inclusion consumption at any λ > v must fit the budget
+        let above: f64 = pairs.iter().filter(|(v1, _)| *v1 > v).map(|(_, v2)| v2).sum();
+        assert!(above <= budget + 1e-9, "case {case}: consumption above {v} is {above} > {budget}");
+        // and v is minimal among candidates: the next smaller candidate
+        // would overflow (when one exists with weak inclusion)
+        if v > 0.0 {
+            let at: f64 = pairs.iter().filter(|(v1, _)| *v1 >= v).map(|(_, v2)| v2).sum();
+            let next_lower =
+                pairs.iter().map(|(v1, _)| *v1).filter(|v1| *v1 < v).fold(f64::MIN, f64::max);
+            if next_lower > f64::MIN {
+                let at_lower: f64 =
+                    pairs.iter().filter(|(v1, _)| *v1 >= next_lower).map(|(_, v2)| v2).sum();
+                assert!(
+                    at > budget || at_lower > budget,
+                    "case {case}: {v} is not minimal"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scd_reports_are_internally_consistent() {
+    let mut rng = Xoshiro256pp::new(0xD4);
+    let cluster = Cluster::new(2);
+    for case in 0..25 {
+        let p = SyntheticProblem::new(random_config(&mut rng));
+        let cfg = SolverConfig { max_iters: 30, ..Default::default() };
+        let r = solve_scd(&p, &cfg, &cluster).unwrap();
+        // postprocess ran → feasible
+        assert!(r.is_feasible(), "case {case}");
+        // λ ≥ 0
+        assert!(r.lambda.iter().all(|&l| l >= 0.0));
+        // primal ≥ 0; dual ≥ primal when feasible (weak duality; allow f32
+        // accumulation noise relative to scale)
+        assert!(r.primal_value >= -1e-9);
+        if r.dropped_groups == 0 {
+            assert!(
+                r.dual_value >= r.primal_value - 1e-6 * r.primal_value.abs().max(1.0),
+                "case {case}: dual {} < primal {} ({:?})",
+                r.dual_value,
+                r.primal_value,
+                p.config().cost_class
+            );
+        }
+        // consumption non-negative and within budget after postprocess
+        for (c, b) in r.consumption.iter().zip(&r.budgets) {
+            assert!(*c >= -1e-9 && c <= &(b * (1.0 + 1e-9)), "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_dual_bound_sandwich_on_tiny_instances() {
+    // IP ≤ LP(simplex) ≤ dual bound evaluations, all consistent
+    let mut rng = Xoshiro256pp::new(0xE5);
+    let cluster = Cluster::new(2);
+    for case in 0..10 {
+        let m = 2 + rng.below(3) as usize;
+        let k = 1 + rng.below(3) as usize;
+        let n = 3 + rng.below(4) as usize;
+        if n * m > 18 {
+            continue;
+        }
+        let cfg = if rng.coin(0.5) {
+            GeneratorConfig::sparse(n, m, k)
+        } else {
+            GeneratorConfig::dense(n, m, k)
+        }
+        .with_tightness(0.3 + rng.next_f64() * 0.4)
+        .with_seed(rng.next_u64());
+        let synth = SyntheticProblem::new(cfg);
+        let mat = MaterializedProblem::from_source(&synth).unwrap();
+        let ip = bskp::exact::solve_ip_exact(&mat).unwrap();
+        let lp = solve_simplex(&build_full_lp(&mat).unwrap(), 100_000).unwrap().value;
+        let bound = lp_upper_bound(&mat, &cluster, 1e-6, 120).unwrap();
+        assert!(lp >= ip - 1e-7, "case {case}: LP {lp} < IP {ip}");
+        assert!(bound.value >= lp - 1e-6, "case {case}: bound {} < LP {lp}", bound.value);
+        assert!(
+            bound.value <= lp * (1.0 + 1e-3) + 1e-6,
+            "case {case}: bound {} far above LP {lp}",
+            bound.value
+        );
+    }
+}
+
+#[test]
+fn prop_generator_distributions_within_support() {
+    let mut rng = Xoshiro256pp::new(0xF6);
+    for _ in 0..20 {
+        let cfg = random_config(&mut rng);
+        let p = SyntheticProblem::new(cfg);
+        let dims = p.dims();
+        let mut buf = GroupBuf::new(dims, p.is_dense());
+        for i in (0..dims.n_groups).step_by(7) {
+            p.fill_group(i, &mut buf);
+            match p.config().profit_dist {
+                Dist::Uniform { lo, hi } => {
+                    assert!(buf.profits.iter().all(|&x| (lo as f32..hi as f32).contains(&x)))
+                }
+                Dist::MixUniform { .. } => {}
+            }
+            if p.config().cost_class == CostClass::Sparse {
+                for j in 0..dims.n_items {
+                    for k in 0..dims.n_global {
+                        let c = buf.cost(j, k, dims.n_global);
+                        assert!(c >= 0.0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_adjusted_profits_linear_in_lambda() {
+    // p̃(λa + (1-t)·0) interpolates: p̃ is affine in λ
+    let mut rng = Xoshiro256pp::new(0x17);
+    for _ in 0..50 {
+        let cfg = random_config(&mut rng);
+        let p = SyntheticProblem::new(cfg);
+        let dims = p.dims();
+        let mut buf = GroupBuf::new(dims, p.is_dense());
+        p.fill_group(rng.below(dims.n_groups as u64) as usize, &mut buf);
+        let lam_a: Vec<f64> = (0..dims.n_global).map(|_| rng.next_f64()).collect();
+        let zeros = vec![0.0; dims.n_global];
+        let half: Vec<f64> = lam_a.iter().map(|l| 0.5 * l).collect();
+        let mut pa = vec![0.0; dims.n_items];
+        let mut p0 = vec![0.0; dims.n_items];
+        let mut ph = vec![0.0; dims.n_items];
+        adjusted_profits(&buf, &lam_a, &mut pa);
+        adjusted_profits(&buf, &zeros, &mut p0);
+        adjusted_profits(&buf, &half, &mut ph);
+        for j in 0..dims.n_items {
+            let expect = 0.5 * (pa[j] + p0[j]);
+            assert!((ph[j] - expect).abs() < 1e-9, "affinity violated");
+        }
+    }
+}
