@@ -4,7 +4,7 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 
 /// Switches that take no value.
-const SWITCHES: &[&str] = &["quiet", "no-postprocess", "no-fastpath", "track-history"];
+const SWITCHES: &[&str] = &["quiet", "no-postprocess", "no-fastpath", "track-history", "verify"];
 
 /// Parsed arguments.
 #[derive(Debug, Clone, Default)]

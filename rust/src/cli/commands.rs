@@ -6,6 +6,7 @@ use crate::error::{Error, Result};
 use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
 use crate::instance::laminar::LaminarProfile;
 use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::instance::store::MmapProblem;
 use crate::lp::lp_upper_bound;
 use crate::mapreduce::Cluster;
 use crate::metrics::report_to_json;
@@ -16,12 +17,13 @@ pub const USAGE: &str = "\
 bskp — billion-scale knapsack solver (WWW'20 reproduction)
 
 SUBCOMMANDS
-  solve      generate a synthetic instance and solve it
+  gen        write a synthetic instance into an on-disk shard store
+  solve      solve a synthetic instance, or an on-disk store via --from
   lpbound    compute the LP-relaxation upper bound (Kelley cutting planes)
   inspect    print instance statistics and a sample group
   help       this text
 
-INSTANCE FLAGS (solve / lpbound / inspect)
+INSTANCE FLAGS (gen / solve / lpbound / inspect)
   --n <int>            groups (default 100000)
   --m <int>            items per group (default 10)
   --k <int>            global constraints (default 10)
@@ -29,6 +31,15 @@ INSTANCE FLAGS (solve / lpbound / inspect)
   --locals single:<cap>|c223|taxonomy:<levels>   (default single:1)
   --tightness <f>      budget tightness (default 0.25)
   --seed <int>         instance seed (default 0)
+
+GEN FLAGS
+  --out <dir>          store directory to create (required)
+  --shard <int>        groups per shard file (default 65536)
+
+STORE FLAGS (solve / lpbound / inspect)
+  --from <dir>         read the instance from a shard store (out-of-core);
+                       replaces the instance flags above
+  --verify             checksum every shard file before using it
 
 SOLVER FLAGS (solve)
   --algo scd|dd        algorithm (default scd)
@@ -53,6 +64,23 @@ LPBOUND FLAGS
   --lp-tol <f>         Kelley gap tolerance (default 1e-4)
   --cuts <int>         max cuts (default 200)
 ";
+
+/// Build the group source: `--from <dir>` opens an on-disk shard store
+/// (optionally checksum-verified), otherwise the synthetic instance flags
+/// apply.
+pub fn source_from_args(args: &Args) -> Result<Box<dyn GroupSource>> {
+    match args.get_opt::<String>("from")? {
+        Some(dir) => {
+            let p = if args.has("verify") {
+                MmapProblem::open_verified(&dir)?
+            } else {
+                MmapProblem::open(&dir)?
+            };
+            Ok(Box::new(p))
+        }
+        None => Ok(Box::new(instance_from_args(args)?)),
+    }
+}
 
 /// Build the instance described by the shared flags.
 pub fn instance_from_args(args: &Args) -> Result<SyntheticProblem> {
@@ -136,9 +164,40 @@ fn cluster_from_args(args: &Args) -> Result<Cluster> {
     })
 }
 
+/// `bskp gen`: stream a synthetic instance into an on-disk shard store.
+pub fn cmd_gen(args: &Args) -> Result<()> {
+    let problem = instance_from_args(args)?;
+    let out = args
+        .get_opt::<String>("out")?
+        .ok_or_else(|| Error::Usage("gen requires --out <dir>".into()))?;
+    let shard = args.get("shard", 65_536usize)?;
+    if shard == 0 {
+        return Err(Error::Usage("--shard must be positive".into()));
+    }
+    let cluster = cluster_from_args(args)?;
+    let t0 = std::time::Instant::now();
+    let summary = problem.write_shards(&out, shard, &cluster)?;
+    if !args.has("quiet") {
+        let dims = problem.dims();
+        println!(
+            "wrote N={} M={} K={} ({} class) to {}",
+            dims.n_groups,
+            dims.n_items,
+            dims.n_global,
+            if problem.is_dense() { "dense" } else { "sparse" },
+            summary.dir.display()
+        );
+        println!("  shard files     : {} × {} groups", summary.n_shards, shard);
+        println!("  bytes on disk   : {}", summary.bytes);
+        println!("  wall time       : {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+        println!("  solve it with   : bskp solve --from {out}");
+    }
+    Ok(())
+}
+
 /// `bskp solve`.
 pub fn cmd_solve(args: &Args) -> Result<()> {
-    let problem = instance_from_args(args)?;
+    let problem = source_from_args(args)?;
     let config = solver_config_from_args(args)?;
     let cluster = cluster_from_args(args)?;
     let algorithm = match args.get_str("algo", "scd").as_str() {
@@ -152,7 +211,7 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
         other => return Err(Error::Usage(format!("--backend must be rust|xla, got {other}"))),
     };
     let coord = Coordinator { cluster, config, algorithm, backend };
-    let report = coord.solve(&problem)?;
+    let report = coord.solve(problem.as_ref())?;
 
     if !args.has("quiet") {
         let dims = problem.dims();
@@ -187,11 +246,11 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
 
 /// `bskp lpbound`.
 pub fn cmd_lpbound(args: &Args) -> Result<()> {
-    let problem = instance_from_args(args)?;
+    let problem = source_from_args(args)?;
     let cluster = cluster_from_args(args)?;
     let tol = args.get("lp-tol", 1e-4f64)?;
     let cuts = args.get("cuts", 200usize)?;
-    let bound = lp_upper_bound(&problem, &cluster, tol, cuts)?;
+    let bound = lp_upper_bound(problem.as_ref(), &cluster, tol, cuts)?;
     println!("LP upper bound : {:.6}", bound.value);
     println!("lower certificate: {:.6} (gap {:.3e})", bound.lower, bound.gap());
     println!("cuts           : {}", bound.cuts);
@@ -201,7 +260,7 @@ pub fn cmd_lpbound(args: &Args) -> Result<()> {
 
 /// `bskp inspect`.
 pub fn cmd_inspect(args: &Args) -> Result<()> {
-    let problem = instance_from_args(args)?;
+    let problem = source_from_args(args)?;
     let dims = problem.dims();
     problem.validate()?;
     println!("instance: N={} M={} K={}", dims.n_groups, dims.n_items, dims.n_global);

@@ -1,7 +1,9 @@
 //! Command-line interface (hand-rolled — the offline registry has no clap).
 //!
 //! ```text
+//! bskp gen     --n 10000000 --m 10 --k 10 --out /data/store [...]
 //! bskp solve   --n 1000000 --m 10 --k 10 --class sparse --algo scd [...]
+//! bskp solve   --from /data/store --algo scd [...]
 //! bskp lpbound --n 10000 --m 10 --k 5 [...]
 //! bskp inspect --n 100 --m 10 --k 10 --class dense [...]
 //! bskp help
@@ -34,6 +36,7 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> i32 {
 fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand() {
+        "gen" => commands::cmd_gen(&args),
         "solve" => commands::cmd_solve(&args),
         "lpbound" => commands::cmd_lpbound(&args),
         "inspect" => commands::cmd_inspect(&args),
@@ -80,5 +83,28 @@ mod tests {
     #[test]
     fn bad_flag_value_is_usage_error() {
         assert_eq!(run(argv("bskp solve --n banana")), 2);
+    }
+
+    #[test]
+    fn gen_requires_out() {
+        assert_eq!(run(argv("bskp gen --n 100")), 2);
+    }
+
+    #[test]
+    fn gen_then_solve_from_store() {
+        let dir = std::env::temp_dir().join(format!("bskp_cli_store_{}", std::process::id()));
+        let dir_s = dir.display().to_string();
+        assert_eq!(
+            run(argv(&format!("bskp gen --n 600 --m 6 --k 6 --shard 128 --out {dir_s} --quiet"))),
+            0
+        );
+        assert_eq!(
+            run(argv(&format!("bskp solve --from {dir_s} --verify --iters 10 --quiet"))),
+            0
+        );
+        assert_eq!(run(argv(&format!("bskp inspect --from {dir_s}"))), 0);
+        // a store that does not exist is a clean error, not a panic
+        assert_eq!(run(argv("bskp solve --from /nonexistent_bskp_store --quiet")), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -11,7 +11,10 @@
 
 use crate::instance::laminar::LaminarProfile;
 use crate::instance::problem::{CostsBuf, Dims, GroupBuf, GroupSource};
+use crate::instance::store::{write_source, StoreSummary};
+use crate::mapreduce::Cluster;
 use crate::rng::{mix64, Xoshiro256pp};
+use std::path::Path;
 
 /// Global-constraint class (paper §6: "Two classes of global constraints
 /// (sparse and dense) are experimented with").
@@ -177,6 +180,21 @@ impl SyntheticProblem {
     pub fn with_budgets(mut self, budgets: Vec<f64>) -> Self {
         self.budgets = budgets;
         self
+    }
+
+    /// Stream the instance into an on-disk shard store at `dir` (see
+    /// [`crate::instance::store`]): cluster workers generate and write
+    /// whole shard files in parallel, each holding at most one shard's
+    /// buffers in memory, so arbitrarily large instances materialize to
+    /// disk in bounded RAM. Solve the result with
+    /// [`crate::instance::store::MmapProblem::open`].
+    pub fn write_shards<P: AsRef<Path>>(
+        &self,
+        dir: P,
+        shard_size: usize,
+        cluster: &Cluster,
+    ) -> crate::error::Result<StoreSummary> {
+        write_source(self, dir.as_ref(), shard_size, cluster)
     }
 }
 

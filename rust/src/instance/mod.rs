@@ -1,7 +1,7 @@
 //! Problem instances: the generalized knapsack data model (paper §2).
 //!
 //! The central abstraction is [`GroupSource`]: anything that can produce the
-//! per-group data `(p_ij, b_ijk)` for group `i` on demand. Two
+//! per-group data `(p_ij, b_ijk)` for group `i` on demand. Three
 //! implementations:
 //!
 //! * [`problem::MaterializedProblem`] — everything resident in memory
@@ -9,7 +9,10 @@
 //! * [`generator::SyntheticProblem`] — groups derived deterministically from
 //!   `(seed, group_id)` and never materialized, which is what lets a single
 //!   box exercise hundred-million-group instances the way the paper's
-//!   mappers stream them from a distributed store.
+//!   mappers stream them from a distributed store;
+//! * [`store::MmapProblem`] — groups memory-mapped from an on-disk columnar
+//!   shard store ([`store`]), the out-of-core path for instances bigger
+//!   than RAM.
 //!
 //! Local constraints are *hierarchical* ([`laminar::LaminarProfile`],
 //! Definition 2.1): any two index sets are disjoint or nested.
@@ -18,8 +21,10 @@ pub mod generator;
 pub mod laminar;
 pub mod problem;
 pub mod shard;
+pub mod store;
 
 pub use generator::{CostClass, GeneratorConfig, SyntheticProblem};
 pub use laminar::{LaminarProfile, LocalConstraint};
 pub use problem::{CostsBuf, Dims, GroupBuf, GroupSource, MaterializedProblem};
 pub use shard::{ShardRange, Shards};
+pub use store::{MmapProblem, ShardWriter};

@@ -114,6 +114,16 @@ pub trait GroupSource: Sync {
     /// Write group `i`'s `(p, b)` into `buf`.
     fn fill_group(&self, i: usize, buf: &mut GroupBuf);
 
+    /// Natural work-partition unit of the source, if it has one. Disk- or
+    /// network-backed sources (e.g. [`crate::instance::store::MmapProblem`])
+    /// return their file-shard size here so the solvers' map shards align
+    /// with storage shards — a map worker then touches whole files
+    /// (page-cache-friendly) and XLA slab padding never straddles a file
+    /// boundary. In-memory sources return `None`.
+    fn preferred_shard_size(&self) -> Option<usize> {
+        None
+    }
+
     /// Validate basic invariants; call once before solving.
     fn validate(&self) -> Result<()> {
         let d = self.dims();

@@ -52,6 +52,26 @@ impl Shards {
         Self::new(n, target)
     }
 
+    /// Plan the map partition for a solve: an explicit `--shard` override
+    /// wins; otherwise start from [`Shards::for_workers`] and, when the
+    /// source has a natural `unit` (a store's file-shard size), round the
+    /// target to a multiple of it so map shards never straddle storage
+    /// shards. Units at or above the load-balance target are used as-is —
+    /// one map shard per storage shard.
+    pub fn plan(n: usize, workers: usize, unit: Option<usize>, explicit: Option<usize>) -> Self {
+        if let Some(s) = explicit {
+            return Self::new(n, s);
+        }
+        let base = Self::for_workers(n, workers);
+        match unit {
+            None | Some(0) => base,
+            Some(u) => {
+                let mult = (base.shard_size() / u).max(1);
+                Self::new(n, (mult * u).min(n.max(1)).max(1))
+            }
+        }
+    }
+
     /// Number of shards.
     pub fn count(&self) -> usize {
         self.n.div_ceil(self.shard_size)
@@ -127,5 +147,25 @@ mod tests {
     #[should_panic]
     fn zero_shard_size_panics() {
         Shards::new(10, 0);
+    }
+
+    #[test]
+    fn plan_respects_override_and_unit() {
+        // explicit override wins over everything
+        assert_eq!(Shards::plan(10_000, 4, Some(128), Some(500)).shard_size(), 500);
+        // no unit: same as for_workers
+        assert_eq!(
+            Shards::plan(1_000_000, 8, None, None).shard_size(),
+            Shards::for_workers(1_000_000, 8).shard_size()
+        );
+        // small unit: target rounded to a multiple of it
+        let s = Shards::plan(1_000_000, 8, Some(1000), None);
+        assert_eq!(s.shard_size() % 1000, 0);
+        assert!(s.shard_size() >= 1000);
+        // unit above the load-balance target: one map shard per file shard
+        let big = Shards::for_workers(1_000_000, 8).shard_size() * 3;
+        assert_eq!(Shards::plan(1_000_000, 8, Some(big), None).shard_size(), big);
+        // degenerate inputs stay valid
+        assert!(Shards::plan(0, 4, Some(64), None).shard_size() >= 1);
     }
 }

@@ -1,0 +1,121 @@
+//! XXH64 checksum (Collet's xxHash, 64-bit variant).
+//!
+//! The shard files carry an XXH64 of their payload so a reader can detect
+//! truncation or bit rot before solving off a corrupt store. The offline
+//! registry has no `xxhash-rust`/`twox-hash`, so this is the reference
+//! algorithm transcribed directly (public domain); the test vectors below
+//! pin it to the published outputs.
+
+const PRIME64_1: u64 = 0x9E3779B185EBCA87;
+const PRIME64_2: u64 = 0xC2B2AE3D27D4EB4F;
+const PRIME64_3: u64 = 0x165667B19E3779F9;
+const PRIME64_4: u64 = 0x85EBCA77C2B2AE63;
+const PRIME64_5: u64 = 0x27D4EB2F165667C5;
+
+#[inline]
+fn round(acc: u64, lane: u64) -> u64 {
+    acc.wrapping_add(lane.wrapping_mul(PRIME64_2)).rotate_left(31).wrapping_mul(PRIME64_1)
+}
+
+#[inline]
+fn merge_round(acc: u64, val: u64) -> u64 {
+    (acc ^ round(0, val)).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4)
+}
+
+#[inline]
+fn read_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes(b[..8].try_into().unwrap())
+}
+
+#[inline]
+fn read_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().unwrap())
+}
+
+/// One-shot XXH64 of `data` with `seed`.
+pub fn xxh64(data: &[u8], seed: u64) -> u64 {
+    let len = data.len();
+    let mut h: u64;
+    let mut p = 0usize;
+
+    if len >= 32 {
+        let mut v1 = seed.wrapping_add(PRIME64_1).wrapping_add(PRIME64_2);
+        let mut v2 = seed.wrapping_add(PRIME64_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(PRIME64_1);
+        while p + 32 <= len {
+            v1 = round(v1, read_u64(&data[p..]));
+            v2 = round(v2, read_u64(&data[p + 8..]));
+            v3 = round(v3, read_u64(&data[p + 16..]));
+            v4 = round(v4, read_u64(&data[p + 24..]));
+            p += 32;
+        }
+        h = v1
+            .rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+        h = merge_round(h, v1);
+        h = merge_round(h, v2);
+        h = merge_round(h, v3);
+        h = merge_round(h, v4);
+    } else {
+        h = seed.wrapping_add(PRIME64_5);
+    }
+
+    h = h.wrapping_add(len as u64);
+
+    while p + 8 <= len {
+        h = (h ^ round(0, read_u64(&data[p..]))).rotate_left(27).wrapping_mul(PRIME64_1).wrapping_add(PRIME64_4);
+        p += 8;
+    }
+    if p + 4 <= len {
+        h = (h ^ (read_u32(&data[p..]) as u64).wrapping_mul(PRIME64_1))
+            .rotate_left(23)
+            .wrapping_mul(PRIME64_2)
+            .wrapping_add(PRIME64_3);
+        p += 4;
+    }
+    while p < len {
+        h = (h ^ (data[p] as u64).wrapping_mul(PRIME64_5)).rotate_left(11).wrapping_mul(PRIME64_1);
+        p += 1;
+    }
+
+    h ^= h >> 33;
+    h = h.wrapping_mul(PRIME64_2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(PRIME64_3);
+    h ^= h >> 32;
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_vectors() {
+        // xxHash's own test vectors (xxhsum / the reference README)
+        assert_eq!(xxh64(b"", 0), 0xEF46_DB37_51D8_E999);
+        assert_eq!(xxh64(b"abc", 0), 0x44BC_2CF5_AD77_0999);
+    }
+
+    #[test]
+    fn seed_and_content_sensitivity() {
+        let data = b"billion-scale knapsack shard payload";
+        assert_ne!(xxh64(data, 0), xxh64(data, 1));
+        let mut flipped = data.to_vec();
+        flipped[7] ^= 1;
+        assert_ne!(xxh64(data, 0), xxh64(&flipped, 0));
+    }
+
+    #[test]
+    fn covers_every_tail_length() {
+        // exercise the 32-byte stripe loop plus all finalization branches
+        let data: Vec<u8> = (0..=255u8).collect();
+        let mut seen = std::collections::HashSet::new();
+        for l in 0..data.len() {
+            assert!(seen.insert(xxh64(&data[..l], 42)), "collision at prefix {l}");
+        }
+    }
+}

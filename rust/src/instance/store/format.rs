@@ -1,0 +1,266 @@
+//! On-disk shard-file layout (see `docs/shard-format.md` for the spec).
+//!
+//! Every shard file is self-contained: a fixed 128-byte little-endian
+//! header, then 64-byte-aligned `laminar` / `prices` / `costs` sections.
+//! Self-containment is deliberate — a distributed map worker holding one
+//! shard file can reconstruct its groups without any other file, which is
+//! exactly how the paper's mappers stream rows out of a sharded store.
+//!
+//! All multi-byte values are little-endian. `f32` arrays are stored raw,
+//! so on little-endian hosts a memory-mapped section can be reinterpreted
+//! in place (the [`super::mmap`] reader's zero-copy path).
+
+use crate::error::{Error, Result};
+use crate::instance::laminar::{LaminarProfile, LocalConstraint};
+use crate::instance::store::checksum::xxh64;
+
+/// Shard-file magic bytes.
+pub const MAGIC: [u8; 8] = *b"BSKPSHRD";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 128;
+/// Section alignment in bytes (cache-line sized; keeps `f32`/`u32` arrays
+/// well over their 4-byte alignment requirement).
+pub const SECTION_ALIGN: usize = 64;
+/// Header flag bit: dense cost layout (unset ⇒ sparse).
+pub const FLAG_DENSE: u32 = 1;
+/// Manifest file name inside a store directory.
+pub const MANIFEST_NAME: &str = "store.manifest";
+/// Manifest format tag (first non-comment line must declare it).
+pub const MANIFEST_FORMAT: &str = "bskp-shard-v1";
+
+/// Round `off` up to the next multiple of [`SECTION_ALIGN`].
+pub fn align_up(off: usize) -> usize {
+    off.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+/// Shard-file name for shard index `idx` (zero-padded so lexicographic
+/// order equals shard order).
+pub fn shard_file_name(idx: usize) -> String {
+    format!("shard-{idx:06}.bskp")
+}
+
+/// Parsed (or to-be-written) shard-file header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardHeader {
+    /// Dense (`true`) or sparse cost layout.
+    pub dense: bool,
+    /// Global id of the shard's first group.
+    pub group_start: u64,
+    /// Live groups in the shard (`≤ rows`).
+    pub n_groups: u64,
+    /// Array row count including the zero-padded tail of the final shard.
+    pub rows: u64,
+    /// Items per group `M`.
+    pub n_items: u32,
+    /// Global constraints `K`.
+    pub n_global: u32,
+    /// Byte range of the laminar section.
+    pub laminar: (u64, u64),
+    /// Byte range of the prices section.
+    pub prices: (u64, u64),
+    /// Byte range of the costs section.
+    pub costs: (u64, u64),
+    /// XXH64 (seed 0) of the payload bytes `[HEADER_LEN, file_len)`.
+    pub payload_hash: u64,
+}
+
+impl ShardHeader {
+    /// Serialize to the fixed 128-byte header block.
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..8].copy_from_slice(&MAGIC);
+        h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+        let flags: u32 = if self.dense { FLAG_DENSE } else { 0 };
+        h[12..16].copy_from_slice(&flags.to_le_bytes());
+        h[16..24].copy_from_slice(&self.group_start.to_le_bytes());
+        h[24..32].copy_from_slice(&self.n_groups.to_le_bytes());
+        h[32..40].copy_from_slice(&self.rows.to_le_bytes());
+        h[40..44].copy_from_slice(&self.n_items.to_le_bytes());
+        h[44..48].copy_from_slice(&self.n_global.to_le_bytes());
+        h[48..56].copy_from_slice(&self.laminar.0.to_le_bytes());
+        h[56..64].copy_from_slice(&self.laminar.1.to_le_bytes());
+        h[64..72].copy_from_slice(&self.prices.0.to_le_bytes());
+        h[72..80].copy_from_slice(&self.prices.1.to_le_bytes());
+        h[80..88].copy_from_slice(&self.costs.0.to_le_bytes());
+        h[88..96].copy_from_slice(&self.costs.1.to_le_bytes());
+        h[96..104].copy_from_slice(&self.payload_hash.to_le_bytes());
+        let header_hash = xxh64(&h[0..104], 0);
+        h[104..112].copy_from_slice(&header_hash.to_le_bytes());
+        // bytes 112..128 reserved, zero
+        h
+    }
+
+    /// Parse and validate a header block (magic, version, header checksum,
+    /// section ranges within `file_len`).
+    pub fn decode(h: &[u8], file_len: u64, what: &str) -> Result<Self> {
+        let bad = |m: String| Error::InvalidProblem(format!("{what}: {m}"));
+        if h.len() < HEADER_LEN {
+            return Err(bad(format!("file too short for header ({} bytes)", h.len())));
+        }
+        if h[0..8] != MAGIC {
+            return Err(bad("bad magic (not a bskp shard file)".into()));
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(h[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(h[o..o + 8].try_into().unwrap());
+        let version = u32_at(8);
+        if version != VERSION {
+            return Err(bad(format!("unsupported shard format version {version} (want {VERSION})")));
+        }
+        let stored_header_hash = u64_at(104);
+        let actual = xxh64(&h[0..104], 0);
+        if stored_header_hash != actual {
+            return Err(bad(format!(
+                "header checksum mismatch (stored {stored_header_hash:016x}, computed {actual:016x})"
+            )));
+        }
+        let hdr = Self {
+            dense: u32_at(12) & FLAG_DENSE != 0,
+            group_start: u64_at(16),
+            n_groups: u64_at(24),
+            rows: u64_at(32),
+            n_items: u32_at(40),
+            n_global: u32_at(44),
+            laminar: (u64_at(48), u64_at(56)),
+            prices: (u64_at(64), u64_at(72)),
+            costs: (u64_at(80), u64_at(88)),
+            payload_hash: u64_at(96),
+        };
+        if hdr.n_groups > hdr.rows {
+            return Err(bad(format!("n_groups {} exceeds rows {}", hdr.n_groups, hdr.rows)));
+        }
+        for (name, (off, len)) in
+            [("laminar", hdr.laminar), ("prices", hdr.prices), ("costs", hdr.costs)]
+        {
+            let end = off.checked_add(len).ok_or_else(|| bad(format!("{name} range overflows")))?;
+            if off < HEADER_LEN as u64 || end > file_len {
+                return Err(bad(format!(
+                    "{name} section [{off}, {end}) outside file of {file_len} bytes"
+                )));
+            }
+        }
+        let m = hdr.n_items as u64;
+        if hdr.prices.1 != hdr.rows * m * 4 {
+            return Err(bad(format!(
+                "prices length {} does not match rows {} × M {}",
+                hdr.prices.1, hdr.rows, hdr.n_items
+            )));
+        }
+        let want_costs = if hdr.dense {
+            hdr.rows * m * hdr.n_global as u64 * 4
+        } else {
+            hdr.rows * m * 8 // u32 knap array + f32 cost array
+        };
+        if hdr.costs.1 != want_costs {
+            return Err(bad(format!(
+                "costs length {} does not match layout (want {want_costs})",
+                hdr.costs.1
+            )));
+        }
+        Ok(hdr)
+    }
+}
+
+/// Serialize a laminar profile: `u32 count`, then per constraint
+/// `u32 cap, u32 len, u16 items[len]`.
+pub fn encode_laminar(profile: &LaminarProfile) -> Vec<u8> {
+    let cs = profile.constraints();
+    let mut out = Vec::with_capacity(4 + cs.iter().map(|c| 8 + 2 * c.items.len()).sum::<usize>());
+    out.extend_from_slice(&(cs.len() as u32).to_le_bytes());
+    for c in cs {
+        out.extend_from_slice(&c.cap.to_le_bytes());
+        out.extend_from_slice(&(c.items.len() as u32).to_le_bytes());
+        for &j in &c.items {
+            out.extend_from_slice(&j.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_laminar`] (revalidates laminarity on the way in).
+pub fn decode_laminar(bytes: &[u8], what: &str) -> Result<LaminarProfile> {
+    fn truncated(what: &str) -> Error {
+        Error::InvalidProblem(format!("{what}: laminar section truncated"))
+    }
+    fn take_u32(bytes: &[u8], p: &mut usize, what: &str) -> Result<u32> {
+        let s = bytes.get(*p..*p + 4).ok_or_else(|| truncated(what))?;
+        *p += 4;
+        Ok(u32::from_le_bytes(s.try_into().unwrap()))
+    }
+    let mut p = 0usize;
+    let count = take_u32(bytes, &mut p, what)? as usize;
+    let mut cs = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        let cap = take_u32(bytes, &mut p, what)?;
+        let len = take_u32(bytes, &mut p, what)? as usize;
+        let raw = bytes.get(p..p + len * 2).ok_or_else(|| truncated(what))?;
+        p += len * 2;
+        let items: Vec<u16> =
+            raw.chunks_exact(2).map(|b| u16::from_le_bytes(b.try_into().unwrap())).collect();
+        cs.push(LocalConstraint::new(items, cap));
+    }
+    LaminarProfile::new(cs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> ShardHeader {
+        ShardHeader {
+            dense: true,
+            group_start: 4096,
+            n_groups: 100,
+            rows: 128,
+            n_items: 10,
+            n_global: 4,
+            laminar: (128, 44),
+            prices: (192, 128 * 10 * 4),
+            costs: (192 + align_up(128 * 10 * 4) as u64, 128 * 10 * 4 * 4),
+            payload_hash: 0xDEAD_BEEF_CAFE_F00D,
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = header();
+        let bytes = h.encode();
+        let file_len = (h.costs.0 + h.costs.1) as u64;
+        let back = ShardHeader::decode(&bytes, file_len, "test").unwrap();
+        assert_eq!(h, back);
+    }
+
+    #[test]
+    fn header_rejects_corruption() {
+        let h = header();
+        let file_len = h.costs.0 + h.costs.1;
+        let mut bytes = h.encode();
+        bytes[20] ^= 0xFF; // corrupt group_start → header checksum fails
+        assert!(ShardHeader::decode(&bytes, file_len, "test").is_err());
+
+        let mut bytes = h.encode();
+        bytes[0] = b'X';
+        assert!(ShardHeader::decode(&bytes, file_len, "test").is_err());
+
+        // section past end of file
+        assert!(ShardHeader::decode(&h.encode(), file_len - 1, "test").is_err());
+    }
+
+    #[test]
+    fn laminar_roundtrip() {
+        let p = LaminarProfile::scenario_c223(10);
+        let enc = encode_laminar(&p);
+        let back = decode_laminar(&enc, "test").unwrap();
+        assert_eq!(p.constraints(), back.constraints());
+        assert!(decode_laminar(&enc[..enc.len() - 1], "test").is_err());
+    }
+
+    #[test]
+    fn alignment() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 64);
+        assert_eq!(align_up(64), 64);
+        assert_eq!(align_up(65), 128);
+    }
+}

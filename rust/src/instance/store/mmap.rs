@@ -1,0 +1,245 @@
+//! Minimal read-only memory mapping.
+//!
+//! The offline registry has no `memmap2`/`libc`, so on 64-bit unix we
+//! declare the two libc symbols we need directly (every rust binary on
+//! these targets already links libc) and wrap them in an RAII handle. The
+//! hand-rolled declaration uses a 64-bit `off_t`, which only matches the
+//! C ABI on 64-bit platforms — 32-bit unix (and every non-unix target)
+//! falls back to reading the file into an owned buffer: still bounded by
+//! one shard at a time, just not zero-copy.
+//!
+//! Mappings are `MAP_PRIVATE` + `PROT_READ`: the kernel pages data in on
+//! demand and evicts it under memory pressure, which is what lets
+//! [`super::reader::MmapProblem`] serve instances larger than RAM.
+
+use crate::error::{Error, Result};
+use std::fs::File;
+use std::path::Path;
+
+/// A read-only byte view of a file: memory-mapped on 64-bit unix, owned
+/// on other platforms.
+pub struct Mmap {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    ptr: *const u8,
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    len: usize,
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    buf: Vec<u8>,
+}
+
+// SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime, so concurrent reads from any thread are safe.
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Send for Mmap {}
+#[cfg(all(unix, target_pointer_width = "64"))]
+unsafe impl Sync for Mmap {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+impl Mmap {
+    /// Map `path` read-only in its entirety.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path).map_err(|e| {
+            Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+        })?;
+        let len = file.metadata()?.len() as usize;
+        Self::from_file(&file, len, path)
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn from_file(file: &File, len: usize, path: &Path) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return Ok(Self { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+        }
+        // SAFETY: fd is valid for the duration of the call; we request a
+        // fresh private read-only mapping at a kernel-chosen address.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(Error::Runtime(format!(
+                "mmap of {} ({len} bytes) failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(Self { ptr: ptr as *const u8, len })
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn from_file(file: &File, len: usize, _path: &Path) -> Result<Self> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+        Ok(Self { buf })
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len come from a successful mmap that lives as
+            // long as `self`; the mapping is never written.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            &self.buf
+        }
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    /// True when the mapping is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: ptr/len are the exact values returned by mmap.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+    }
+}
+
+/// Reinterpret a little-endian `f32` byte region as `&[f32]` without
+/// copying. Panics if `bytes` is misaligned or has a ragged length — both
+/// impossible for sections written by [`super::writer::ShardWriter`]
+/// (64-byte-aligned offsets, exact lengths), so a panic here indicates a
+/// corrupt file that slipped past the checksum.
+#[cfg(target_endian = "little")]
+#[inline]
+pub fn cast_f32_slice(bytes: &[u8]) -> &[f32] {
+    assert_eq!(bytes.len() % 4, 0, "f32 section has ragged length");
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<f32>(), 0, "f32 section misaligned");
+    // SAFETY: alignment and length are checked above; any u32 bit pattern
+    // is a valid f32; the source is immutable for the borrow's lifetime.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, bytes.len() / 4) }
+}
+
+/// Reinterpret a little-endian `u32` byte region as `&[u32]` (see
+/// [`cast_f32_slice`]).
+#[cfg(target_endian = "little")]
+#[inline]
+pub fn cast_u32_slice(bytes: &[u8]) -> &[u32] {
+    assert_eq!(bytes.len() % 4, 0, "u32 section has ragged length");
+    assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<u32>(), 0, "u32 section misaligned");
+    // SAFETY: as above.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u32, bytes.len() / 4) }
+}
+
+/// Copy a little-endian `f32` byte region into `out` (endian-safe path;
+/// on little-endian hosts this is a plain memcpy via the zero-copy cast).
+#[inline]
+pub fn copy_f32_le(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len() * 4);
+    #[cfg(target_endian = "little")]
+    out.copy_from_slice(cast_f32_slice(bytes));
+    #[cfg(not(target_endian = "little"))]
+    for (o, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_le_bytes(b.try_into().unwrap());
+    }
+}
+
+/// Copy a little-endian `u32` byte region into `out` (see [`copy_f32_le`]).
+#[inline]
+pub fn copy_u32_le(bytes: &[u8], out: &mut [u32]) {
+    debug_assert_eq!(bytes.len(), out.len() * 4);
+    #[cfg(target_endian = "little")]
+    out.copy_from_slice(cast_u32_slice(bytes));
+    #[cfg(not(target_endian = "little"))]
+    for (o, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = u32::from_le_bytes(b.try_into().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bskp_mmap_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let path = tmp("basic");
+        let data: Vec<u8> = (0..=255u8).cycle().take(8192).collect();
+        std::fs::File::create(&path).unwrap().write_all(&data).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.bytes(), &data[..]);
+        assert_eq!(map.len(), 8192);
+        drop(map);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_empty_view() {
+        let path = tmp("empty");
+        std::fs::File::create(&path).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors_with_path() {
+        let err = Mmap::open(Path::new("/nonexistent/bskp_shard")).unwrap_err();
+        assert!(err.to_string().contains("bskp_shard"));
+    }
+
+    #[test]
+    fn f32_cast_and_copy_roundtrip() {
+        let vals: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut out = vec![0.0f32; vals.len()];
+        copy_f32_le(&bytes, &mut out);
+        assert_eq!(out, vals);
+        let ints: Vec<u32> = (0..64).collect();
+        let bytes: Vec<u8> = ints.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut out = vec![0u32; ints.len()];
+        copy_u32_le(&bytes, &mut out);
+        assert_eq!(out, ints);
+    }
+}

@@ -1,0 +1,31 @@
+//! Out-of-core instance store: solve instances bigger than RAM.
+//!
+//! The paper's billion-variable runs never materialize the instance on one
+//! node — mappers stream rows out of a sharded distributed store. This
+//! module is that store for a single box: a versioned, little-endian,
+//! columnar shard-file format ([`format`], spec in `docs/shard-format.md`)
+//! written by a streaming [`ShardWriter`] (or the parallel
+//! [`write_source`]) and read back by [`MmapProblem`], a memory-mapped
+//! [`crate::instance::GroupSource`] the solvers run against directly —
+//! `dd`, `scd` and the LP bound all solve straight off disk, with the
+//! kernel page cache as the only "RAM copy" of the data.
+//!
+//! Layout highlights:
+//!
+//! * one file per shard of `shard_size` groups, plus a text manifest;
+//! * each shard is **self-contained** (it carries the laminar profile), so
+//!   a distributed worker needs exactly one file to map its shard;
+//! * sections are 64-byte aligned raw `f32`/`u32` arrays — on
+//!   little-endian hosts the mapped bytes are reinterpreted in place;
+//! * XXH64 checksums ([`checksum`]) over every payload, verified on demand;
+//! * the final partial shard is zero-padded to full `shard_size` rows so
+//!   every file has identical geometry (what the XLA slab batching wants).
+
+pub mod checksum;
+pub mod format;
+pub mod mmap;
+pub mod reader;
+pub mod writer;
+
+pub use reader::MmapProblem;
+pub use writer::{write_source, ShardWriter, StoreMeta, StoreSummary};

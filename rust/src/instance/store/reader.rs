@@ -1,0 +1,393 @@
+//! Memory-mapped shard-store reader: [`MmapProblem`], a [`GroupSource`]
+//! whose groups live on disk.
+//!
+//! Opening a store parses the text manifest and the first shard's header;
+//! shard *data* is memory-mapped lazily, one file at a time, the first
+//! time a map worker touches a group of that shard. After initialization
+//! the per-shard `OnceLock` is a plain atomic load, so concurrent workers
+//! read disjoint shards with no shared lock and the kernel's page cache
+//! decides what stays resident — instances far larger than RAM solve with
+//! the working set bounded by the pages the current round touches.
+//!
+//! On little-endian hosts group data is read in place (no deserialization
+//! — the on-disk `f32` arrays *are* the in-memory arrays); big-endian
+//! hosts fall back to per-value conversion.
+
+use crate::error::{Error, Result};
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{CostsBuf, Dims, GroupBuf, GroupSource};
+use crate::instance::store::checksum::xxh64;
+use crate::instance::store::format::{
+    decode_laminar, shard_file_name, ShardHeader, HEADER_LEN, MANIFEST_FORMAT, MANIFEST_NAME,
+};
+use crate::instance::store::mmap::{copy_f32_le, copy_u32_le, Mmap};
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+/// One mapped shard file plus its validated header.
+struct ShardView {
+    map: Mmap,
+    hdr: ShardHeader,
+}
+
+impl ShardView {
+    fn open(path: &Path, expect: &MmapProblem, idx: usize) -> Result<Self> {
+        let map = Mmap::open(path)?;
+        let what = path.display().to_string();
+        let hdr = ShardHeader::decode(map.bytes(), map.len() as u64, &what)?;
+        let err = |m: String| Error::InvalidProblem(format!("{what}: {m}"));
+        if hdr.dense != expect.dense {
+            return Err(err("shard layout disagrees with manifest".into()));
+        }
+        if hdr.n_items as usize != expect.dims.n_items
+            || hdr.n_global as usize != expect.dims.n_global
+        {
+            return Err(err(format!(
+                "shard shape M={} K={} disagrees with manifest M={} K={}",
+                hdr.n_items, hdr.n_global, expect.dims.n_items, expect.dims.n_global
+            )));
+        }
+        if hdr.rows as usize != expect.shard_size {
+            return Err(err(format!(
+                "shard rows {} disagree with manifest shard_size {}",
+                hdr.rows, expect.shard_size
+            )));
+        }
+        let want_start = idx * expect.shard_size;
+        let want_live =
+            (expect.dims.n_groups - want_start).min(expect.shard_size);
+        if hdr.group_start as usize != want_start || hdr.n_groups as usize != want_live {
+            return Err(err(format!(
+                "shard covers groups [{}, {}) but manifest expects [{}, {})",
+                hdr.group_start,
+                hdr.group_start + hdr.n_groups,
+                want_start,
+                want_start + want_live
+            )));
+        }
+        if hdr.payload_hash != expect.manifest_hashes[idx] {
+            return Err(err(format!(
+                "shard payload hash {:016x} disagrees with manifest {:016x}",
+                hdr.payload_hash, expect.manifest_hashes[idx]
+            )));
+        }
+        Ok(Self { map, hdr })
+    }
+
+    fn section(&self, range: (u64, u64)) -> &[u8] {
+        &self.map.bytes()[range.0 as usize..(range.0 + range.1) as usize]
+    }
+}
+
+/// An instance solved straight off a shard-store directory.
+pub struct MmapProblem {
+    dir: PathBuf,
+    dims: Dims,
+    dense: bool,
+    shard_size: usize,
+    budgets: Vec<f64>,
+    locals: LaminarProfile,
+    manifest_hashes: Vec<u64>,
+    views: Vec<OnceLock<ShardView>>,
+}
+
+impl MmapProblem {
+    /// Open a store directory: parse `store.manifest`, map shard 0 for the
+    /// laminar profile, and validate every header lazily on first touch.
+    /// Shard payloads are *not* checksummed here — use [`open_verified`]
+    /// (or [`verify`]) when reading a store of unknown provenance.
+    ///
+    /// [`open_verified`]: MmapProblem::open_verified
+    /// [`verify`]: MmapProblem::verify
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::InvalidProblem(format!(
+                "cannot read {} (not a shard store? run `bskp gen --out <dir>` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let mut problem = Self::from_manifest(&text, dir, &manifest_path)?;
+        // shard 0 carries the laminar profile (every shard is
+        // self-contained; they are all identical by construction)
+        let v0 = problem.try_view(0)?;
+        let locals = decode_laminar(
+            v0.section(v0.hdr.laminar),
+            &problem.dir.join(shard_file_name(0)).display().to_string(),
+        )?;
+        problem.locals = locals;
+        Ok(problem)
+    }
+
+    /// [`open`](MmapProblem::open) plus a full payload-checksum pass over
+    /// every shard file.
+    pub fn open_verified<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let p = Self::open(dir)?;
+        p.verify()?;
+        Ok(p)
+    }
+
+    fn from_manifest(text: &str, dir: PathBuf, path: &Path) -> Result<Self> {
+        let bad =
+            |m: String| Error::InvalidProblem(format!("{}: {m}", path.display()));
+        let mut layout = None;
+        let mut n_groups = None;
+        let mut n_items = None;
+        let mut n_global = None;
+        let mut shard_size = None;
+        let mut n_shards = None;
+        let mut format_ok = false;
+        let mut budgets = Vec::new();
+        let mut shards: Vec<(usize, String, u64)> = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let key = parts.next().unwrap_or_default();
+            let mut next = |name: &str| {
+                parts
+                    .next()
+                    .ok_or_else(|| bad(format!("line {}: {key} missing {name}", ln + 1)))
+            };
+            match key {
+                "format" => {
+                    let f = next("value")?;
+                    if f != MANIFEST_FORMAT {
+                        return Err(bad(format!(
+                            "unsupported store format {f:?} (want {MANIFEST_FORMAT:?})"
+                        )));
+                    }
+                    format_ok = true;
+                }
+                "layout" => {
+                    layout = Some(match next("value")? {
+                        "dense" => true,
+                        "sparse" => false,
+                        other => return Err(bad(format!("unknown layout {other:?}"))),
+                    })
+                }
+                "n_groups" | "n_items" | "n_global" | "shard_size" | "n_shards" => {
+                    let v: usize = next("value")?
+                        .parse()
+                        .map_err(|_| bad(format!("line {}: bad number for {key}", ln + 1)))?;
+                    match key {
+                        "n_groups" => n_groups = Some(v),
+                        "n_items" => n_items = Some(v),
+                        "n_global" => n_global = Some(v),
+                        "shard_size" => shard_size = Some(v),
+                        _ => n_shards = Some(v),
+                    }
+                }
+                "budget" => {
+                    let v: f64 = next("value")?
+                        .parse()
+                        .map_err(|_| bad(format!("line {}: bad budget", ln + 1)))?;
+                    budgets.push(v);
+                }
+                "shard" => {
+                    let idx: usize = next("index")?
+                        .parse()
+                        .map_err(|_| bad(format!("line {}: bad shard index", ln + 1)))?;
+                    let name = next("filename")?.to_string();
+                    let hash = u64::from_str_radix(next("hash")?, 16)
+                        .map_err(|_| bad(format!("line {}: bad shard hash", ln + 1)))?;
+                    shards.push((idx, name, hash));
+                }
+                other => return Err(bad(format!("line {}: unknown key {other:?}", ln + 1))),
+            }
+        }
+        if !format_ok {
+            return Err(bad("missing format declaration".into()));
+        }
+        let dims = Dims {
+            n_groups: n_groups.ok_or_else(|| bad("missing n_groups".into()))?,
+            n_items: n_items.ok_or_else(|| bad("missing n_items".into()))?,
+            n_global: n_global.ok_or_else(|| bad("missing n_global".into()))?,
+        };
+        if dims.n_groups == 0 || dims.n_items == 0 || dims.n_global == 0 {
+            // the writer refuses to produce such a store; open() relies on
+            // shard 0 existing, so reject rather than panic downstream
+            return Err(bad(format!(
+                "dimensions must be positive, got N={} M={} K={}",
+                dims.n_groups, dims.n_items, dims.n_global
+            )));
+        }
+        let dense = layout.ok_or_else(|| bad("missing layout".into()))?;
+        let shard_size = shard_size.ok_or_else(|| bad("missing shard_size".into()))?;
+        if shard_size == 0 {
+            return Err(bad("shard_size must be positive".into()));
+        }
+        let n_shards = n_shards.ok_or_else(|| bad("missing n_shards".into()))?;
+        if n_shards != dims.n_groups.div_ceil(shard_size) {
+            return Err(bad(format!(
+                "n_shards {n_shards} inconsistent with N={} at shard_size {shard_size}",
+                dims.n_groups
+            )));
+        }
+        if budgets.len() != dims.n_global {
+            return Err(bad(format!(
+                "manifest has {} budgets but K={}",
+                budgets.len(),
+                dims.n_global
+            )));
+        }
+        if shards.len() != n_shards {
+            return Err(bad(format!("manifest lists {} of {n_shards} shards", shards.len())));
+        }
+        let mut manifest_hashes = vec![0u64; n_shards];
+        let mut seen = vec![false; n_shards];
+        for (idx, name, hash) in shards {
+            if idx >= n_shards || seen[idx] {
+                return Err(bad(format!("shard index {idx} out of range or duplicated")));
+            }
+            if name != shard_file_name(idx) {
+                return Err(bad(format!(
+                    "shard {idx} filename {name:?} (want {:?})",
+                    shard_file_name(idx)
+                )));
+            }
+            seen[idx] = true;
+            manifest_hashes[idx] = hash;
+        }
+        Ok(Self {
+            dir,
+            dims,
+            dense,
+            shard_size,
+            budgets,
+            locals: LaminarProfile::single(dims.n_items, 1), // replaced in open()
+            manifest_hashes,
+            views: (0..n_shards).map(|_| OnceLock::new()).collect(),
+        })
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Groups per shard file.
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// Number of shard files.
+    pub fn n_shards(&self) -> usize {
+        self.views.len()
+    }
+
+    /// Map + header-validate shard `idx`, returning errors instead of
+    /// panicking (the `Result`-flavored twin of the hot-path [`view`]).
+    ///
+    /// [`view`]: MmapProblem::view
+    fn try_view(&self, idx: usize) -> Result<&ShardView> {
+        if let Some(v) = self.views[idx].get() {
+            return Ok(v);
+        }
+        let v = ShardView::open(&self.dir.join(shard_file_name(idx)), self, idx)?;
+        // under a race another worker may have initialized concurrently;
+        // both opened the same immutable file, so either value is correct
+        Ok(self.views[idx].get_or_init(|| v))
+    }
+
+    /// Hot-path shard access for `fill_group` (which cannot return errors).
+    /// Panics with a descriptive message on I/O or validation failure;
+    /// callers that want a `Result` should [`preload`](MmapProblem::preload)
+    /// first.
+    fn view(&self, idx: usize) -> &ShardView {
+        match self.try_view(idx) {
+            Ok(v) => v,
+            Err(e) => panic!("shard store read failed mid-solve: {e}"),
+        }
+    }
+
+    /// Eagerly map and header-validate every shard, surfacing failures as
+    /// errors before a solve starts.
+    pub fn preload(&self) -> Result<()> {
+        for idx in 0..self.n_shards() {
+            self.try_view(idx)?;
+        }
+        Ok(())
+    }
+
+    /// Recompute every shard's payload checksum against the manifest.
+    /// Reads all data once, sequentially per shard — O(store size) I/O.
+    pub fn verify(&self) -> Result<()> {
+        for idx in 0..self.n_shards() {
+            let v = self.try_view(idx)?;
+            let actual = xxh64(&v.map.bytes()[HEADER_LEN..], 0);
+            if actual != self.manifest_hashes[idx] {
+                return Err(Error::InvalidProblem(format!(
+                    "{}: payload checksum mismatch (stored {:016x}, computed {actual:016x})",
+                    self.dir.join(shard_file_name(idx)).display(),
+                    self.manifest_hashes[idx]
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Zero-copy view of one group's profits (little-endian hosts).
+    #[cfg(target_endian = "little")]
+    pub fn group_prices(&self, i: usize) -> &[f32] {
+        let (v, row, m) = self.locate(i);
+        let off = v.hdr.prices.0 as usize + row * m * 4;
+        crate::instance::store::mmap::cast_f32_slice(&v.map.bytes()[off..off + m * 4])
+    }
+
+    #[inline]
+    fn locate(&self, i: usize) -> (&ShardView, usize, usize) {
+        debug_assert!(i < self.dims.n_groups, "group {i} out of range");
+        let idx = i / self.shard_size;
+        (self.view(idx), i % self.shard_size, self.dims.n_items)
+    }
+}
+
+impl GroupSource for MmapProblem {
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn is_dense(&self) -> bool {
+        self.dense
+    }
+
+    fn locals(&self) -> &LaminarProfile {
+        &self.locals
+    }
+
+    fn budgets(&self) -> &[f64] {
+        &self.budgets
+    }
+
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+        let (v, row, m) = self.locate(i);
+        let k = self.dims.n_global;
+        let bytes = v.map.bytes();
+        let p_off = v.hdr.prices.0 as usize + row * m * 4;
+        copy_f32_le(&bytes[p_off..p_off + m * 4], &mut buf.profits);
+        match &mut buf.costs {
+            CostsBuf::Dense(dst) => {
+                assert!(self.dense, "dense GroupBuf for a sparse store");
+                let w = m * k * 4;
+                let off = v.hdr.costs.0 as usize + row * w;
+                copy_f32_le(&bytes[off..off + w], dst);
+            }
+            CostsBuf::Sparse { knap, cost } => {
+                assert!(!self.dense, "sparse GroupBuf for a dense store");
+                let rows = v.hdr.rows as usize;
+                let knap_off = v.hdr.costs.0 as usize + row * m * 4;
+                let cost_off = v.hdr.costs.0 as usize + rows * m * 4 + row * m * 4;
+                copy_u32_le(&bytes[knap_off..knap_off + m * 4], knap);
+                copy_f32_le(&bytes[cost_off..cost_off + m * 4], cost);
+            }
+        }
+    }
+
+    fn preferred_shard_size(&self) -> Option<usize> {
+        Some(self.shard_size)
+    }
+}

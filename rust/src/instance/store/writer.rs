@@ -1,0 +1,422 @@
+//! Streaming shard-store writer.
+//!
+//! [`ShardWriter`] accepts groups one at a time (in group-id order) and
+//! flushes a shard file every `shard_size` groups, so the producer — the
+//! synthetic generator, an ETL job, anything that can emit [`GroupBuf`]s —
+//! never holds more than one shard in memory. [`write_source`] is the
+//! parallel fast path for [`GroupSource`]s whose groups are independently
+//! computable (the synthetic generator): each cluster worker encodes and
+//! writes whole shard files on its own.
+//!
+//! The final partial shard is zero-padded to the full `shard_size` rows so
+//! every shard file has an identical layout (fixed slab shapes are what
+//! the XLA map phase batches on); the header records the live group count.
+
+use crate::error::{Error, Result};
+use crate::instance::problem::{CostsBuf, Dims, GroupBuf, GroupSource};
+use crate::instance::store::checksum::xxh64;
+use crate::instance::store::format::{
+    align_up, encode_laminar, shard_file_name, ShardHeader, HEADER_LEN, MANIFEST_FORMAT,
+    MANIFEST_NAME,
+};
+use crate::instance::laminar::LaminarProfile;
+use crate::mapreduce::Cluster;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Instance-level metadata shared by every shard of a store.
+#[derive(Debug, Clone)]
+pub struct StoreMeta {
+    /// Instance dimensions.
+    pub dims: Dims,
+    /// Dense or sparse cost layout.
+    pub dense: bool,
+    /// Global budgets `B_k`.
+    pub budgets: Vec<f64>,
+    /// Hierarchical local constraints (replicated into every shard file so
+    /// each shard is self-contained).
+    pub locals: LaminarProfile,
+    /// Groups per shard file.
+    pub shard_size: usize,
+}
+
+impl StoreMeta {
+    /// Capture the metadata of an existing source.
+    pub fn of<S: GroupSource + ?Sized>(source: &S, shard_size: usize) -> Self {
+        Self {
+            dims: source.dims(),
+            dense: source.is_dense(),
+            budgets: source.budgets().to_vec(),
+            locals: source.locals().clone(),
+            shard_size,
+        }
+    }
+
+    /// Number of shard files for `n_groups` at `shard_size`.
+    pub fn n_shards(&self) -> usize {
+        self.dims.n_groups.div_ceil(self.shard_size)
+    }
+
+    /// Check dimensions, shard size and budget count (shared by
+    /// [`ShardWriter::create`] and [`write_source`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.dims.n_groups == 0 || self.dims.n_items == 0 || self.dims.n_global == 0 {
+            return Err(Error::InvalidProblem(format!(
+                "store dimensions must be positive, got N={} M={} K={}",
+                self.dims.n_groups, self.dims.n_items, self.dims.n_global
+            )));
+        }
+        if self.shard_size == 0 {
+            return Err(Error::InvalidProblem("store shard_size must be positive".into()));
+        }
+        if self.budgets.len() != self.dims.n_global {
+            return Err(Error::InvalidProblem(format!(
+                "store expects {} budgets, got {}",
+                self.dims.n_global,
+                self.budgets.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Summary returned by a completed write.
+#[derive(Debug, Clone)]
+pub struct StoreSummary {
+    /// Store directory.
+    pub dir: PathBuf,
+    /// Shard files written.
+    pub n_shards: usize,
+    /// Total bytes across shard files.
+    pub bytes: u64,
+}
+
+/// Encode one shard (header + sections) into a single buffer and return
+/// it with its payload hash. The staging arrays are `shard_size` rows
+/// with `n_live` live ones; the zeroed tail becomes the on-disk padding
+/// of the final partial shard.
+fn encode_shard(
+    meta: &StoreMeta,
+    group_start: usize,
+    profits: &[f32],
+    costs_dense: &[f32],
+    costs_knap: &[u32],
+    costs_cost: &[f32],
+    n_live: usize,
+) -> (Vec<u8>, u64) {
+    let m = meta.dims.n_items;
+    let k = meta.dims.n_global;
+    let rows = meta.shard_size;
+    let laminar_bytes = encode_laminar(&meta.locals);
+    let laminar_off = HEADER_LEN;
+    let prices_off = align_up(laminar_off + laminar_bytes.len());
+    let prices_len = rows * m * 4;
+    let costs_off = align_up(prices_off + prices_len);
+    let costs_len = if meta.dense { rows * m * k * 4 } else { rows * m * 8 };
+    let file_len = costs_off + costs_len;
+
+    let mut out = vec![0u8; file_len];
+    out[laminar_off..laminar_off + laminar_bytes.len()].copy_from_slice(&laminar_bytes);
+    {
+        let dst = &mut out[prices_off..prices_off + prices_len];
+        for (chunk, v) in dst.chunks_exact_mut(4).zip(profits) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+    if meta.dense {
+        let dst = &mut out[costs_off..costs_off + costs_len];
+        for (chunk, v) in dst.chunks_exact_mut(4).zip(costs_dense) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    } else {
+        let knap_len = rows * m * 4;
+        let (knap_dst, cost_dst) = out[costs_off..costs_off + costs_len].split_at_mut(knap_len);
+        for (chunk, v) in knap_dst.chunks_exact_mut(4).zip(costs_knap) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+        for (chunk, v) in cost_dst.chunks_exact_mut(4).zip(costs_cost) {
+            chunk.copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    let payload_hash = xxh64(&out[HEADER_LEN..], 0);
+    let header = ShardHeader {
+        dense: meta.dense,
+        group_start: group_start as u64,
+        n_groups: n_live as u64,
+        rows: rows as u64,
+        n_items: m as u32,
+        n_global: k as u32,
+        laminar: (laminar_off as u64, laminar_bytes.len() as u64),
+        prices: (prices_off as u64, prices_len as u64),
+        costs: (costs_off as u64, costs_len as u64),
+        payload_hash,
+    };
+    out[..HEADER_LEN].copy_from_slice(&header.encode());
+    (out, payload_hash)
+}
+
+/// Columnar staging buffers for the shard currently being filled
+/// (`shard_size` rows; the only per-shard allocation, reused throughout).
+struct ShardStage {
+    profits: Vec<f32>,
+    costs_dense: Vec<f32>,
+    costs_knap: Vec<u32>,
+    costs_cost: Vec<f32>,
+    n_live: usize,
+}
+
+impl ShardStage {
+    fn new(meta: &StoreMeta) -> Self {
+        let m = meta.dims.n_items;
+        let rows = meta.shard_size;
+        Self {
+            profits: vec![0.0; rows * m],
+            costs_dense: if meta.dense { vec![0.0; rows * m * meta.dims.n_global] } else { Vec::new() },
+            costs_knap: if meta.dense { Vec::new() } else { vec![0; rows * m] },
+            costs_cost: if meta.dense { Vec::new() } else { vec![0.0; rows * m] },
+            n_live: 0,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.profits.iter_mut().for_each(|v| *v = 0.0);
+        self.costs_dense.iter_mut().for_each(|v| *v = 0.0);
+        self.costs_knap.iter_mut().for_each(|v| *v = 0);
+        self.costs_cost.iter_mut().for_each(|v| *v = 0.0);
+        self.n_live = 0;
+    }
+
+    fn push(&mut self, meta: &StoreMeta, buf: &GroupBuf) {
+        let m = meta.dims.n_items;
+        let k = meta.dims.n_global;
+        let row = self.n_live;
+        self.profits[row * m..(row + 1) * m].copy_from_slice(&buf.profits);
+        match &buf.costs {
+            CostsBuf::Dense(b) => {
+                assert!(meta.dense, "dense GroupBuf appended to a sparse store");
+                self.costs_dense[row * m * k..(row + 1) * m * k].copy_from_slice(b);
+            }
+            CostsBuf::Sparse { knap, cost } => {
+                assert!(!meta.dense, "sparse GroupBuf appended to a dense store");
+                self.costs_knap[row * m..(row + 1) * m].copy_from_slice(knap);
+                self.costs_cost[row * m..(row + 1) * m].copy_from_slice(cost);
+            }
+        }
+        self.n_live += 1;
+    }
+}
+
+/// Streaming writer: groups in, shard files + manifest out.
+pub struct ShardWriter {
+    meta: StoreMeta,
+    dir: PathBuf,
+    stage: ShardStage,
+    next_group: usize,
+    shard_hashes: Vec<u64>,
+    bytes: u64,
+}
+
+impl ShardWriter {
+    /// Create the store directory (and parents) and start writing.
+    pub fn create<P: AsRef<Path>>(dir: P, meta: StoreMeta) -> Result<Self> {
+        meta.validate()?;
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let stage = ShardStage::new(&meta);
+        Ok(Self { meta, dir, stage, next_group: 0, shard_hashes: Vec::new(), bytes: 0 })
+    }
+
+    /// The store metadata.
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    /// Append the next group (ids are implicit and sequential). Flushes a
+    /// shard file automatically when the stage fills.
+    pub fn append_group(&mut self, buf: &GroupBuf) -> Result<()> {
+        if self.next_group >= self.meta.dims.n_groups {
+            return Err(Error::InvalidProblem(format!(
+                "appended more groups than the declared N={}",
+                self.meta.dims.n_groups
+            )));
+        }
+        self.stage.push(&self.meta, buf);
+        self.next_group += 1;
+        if self.stage.n_live == self.meta.shard_size {
+            self.flush_stage()?;
+        }
+        Ok(())
+    }
+
+    fn flush_stage(&mut self) -> Result<()> {
+        let idx = self.shard_hashes.len();
+        let group_start = idx * self.meta.shard_size;
+        let (encoded, payload_hash) = encode_shard(
+            &self.meta,
+            group_start,
+            &self.stage.profits,
+            &self.stage.costs_dense,
+            &self.stage.costs_knap,
+            &self.stage.costs_cost,
+            self.stage.n_live,
+        );
+        let path = self.dir.join(shard_file_name(idx));
+        std::fs::write(&path, &encoded)?;
+        self.bytes += encoded.len() as u64;
+        self.shard_hashes.push(payload_hash);
+        self.stage.clear();
+        Ok(())
+    }
+
+    /// Flush the final (padded) partial shard and write the manifest.
+    /// Errors if fewer groups than the declared `N` were appended.
+    pub fn finish(mut self) -> Result<StoreSummary> {
+        if self.next_group != self.meta.dims.n_groups {
+            return Err(Error::InvalidProblem(format!(
+                "store received {} of {} declared groups",
+                self.next_group, self.meta.dims.n_groups
+            )));
+        }
+        if self.stage.n_live > 0 {
+            self.flush_stage()?;
+        }
+        let hashes = std::mem::take(&mut self.shard_hashes);
+        write_manifest(&self.dir, &self.meta, &hashes)?;
+        Ok(StoreSummary { dir: self.dir, n_shards: hashes.len(), bytes: self.bytes })
+    }
+}
+
+/// Write `<dir>/store.manifest` (text, tab-separated — same idiom as the
+/// runtime's artifact manifest).
+fn write_manifest(dir: &Path, meta: &StoreMeta, shard_hashes: &[u64]) -> Result<()> {
+    let mut text = String::new();
+    text.push_str("# bskp shard store — see docs/shard-format.md\n");
+    text.push_str(&format!("format\t{MANIFEST_FORMAT}\n"));
+    text.push_str(&format!("layout\t{}\n", if meta.dense { "dense" } else { "sparse" }));
+    text.push_str(&format!("n_groups\t{}\n", meta.dims.n_groups));
+    text.push_str(&format!("n_items\t{}\n", meta.dims.n_items));
+    text.push_str(&format!("n_global\t{}\n", meta.dims.n_global));
+    text.push_str(&format!("shard_size\t{}\n", meta.shard_size));
+    text.push_str(&format!("n_shards\t{}\n", shard_hashes.len()));
+    for b in &meta.budgets {
+        // rust float formatting is shortest-roundtrip, so budgets survive
+        // the text manifest bit-exactly
+        text.push_str(&format!("budget\t{b}\n"));
+    }
+    for (idx, h) in shard_hashes.iter().enumerate() {
+        text.push_str(&format!("shard\t{idx}\t{}\t{h:016x}\n", shard_file_name(idx)));
+    }
+    let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+    }
+    // atomic publish: readers never observe a half-written manifest
+    std::fs::rename(&tmp, dir.join(MANIFEST_NAME))?;
+    Ok(())
+}
+
+/// Write every shard of `source` into `dir` in parallel: one cluster
+/// worker per shard file, each staging only its own shard (bounded memory
+/// per worker), then the manifest. This is the `gen --out` fast path.
+pub fn write_source<S: GroupSource + ?Sized>(
+    source: &S,
+    dir: &Path,
+    shard_size: usize,
+    cluster: &Cluster,
+) -> Result<StoreSummary> {
+    source.validate()?;
+    let meta = StoreMeta::of(source, shard_size);
+    meta.validate()?;
+    std::fs::create_dir_all(dir)?;
+    let n_shards = meta.n_shards();
+    let n = meta.dims.n_groups;
+
+    let results: Vec<Result<(u64, u64)>> = cluster.map_shards(n_shards, |idx| {
+        let group_start = idx * shard_size;
+        let group_end = ((idx + 1) * shard_size).min(n);
+        let mut stage = ShardStage::new(&meta);
+        let mut buf = GroupBuf::new(meta.dims, meta.dense);
+        for i in group_start..group_end {
+            source.fill_group(i, &mut buf);
+            stage.push(&meta, &buf);
+        }
+        let (encoded, hash) = encode_shard(
+            &meta,
+            group_start,
+            &stage.profits,
+            &stage.costs_dense,
+            &stage.costs_knap,
+            &stage.costs_cost,
+            stage.n_live,
+        );
+        std::fs::write(dir.join(shard_file_name(idx)), &encoded)?;
+        Ok((hash, encoded.len() as u64))
+    });
+
+    let mut hashes = Vec::with_capacity(n_shards);
+    let mut bytes = 0u64;
+    for r in results {
+        let (h, b) = r?;
+        hashes.push(h);
+        bytes += b;
+    }
+    write_manifest(dir, &meta, &hashes)?;
+    Ok(StoreSummary { dir: dir.to_path_buf(), n_shards, bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bskp_writer_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writer_rejects_wrong_counts() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(5, 3, 3));
+        let dir = tmp("counts");
+        let meta = StoreMeta::of(&p, 2);
+        let mut w = ShardWriter::create(&dir, meta).unwrap();
+        let mut buf = GroupBuf::new(p.dims(), false);
+        for i in 0..4 {
+            p.fill_group(i, &mut buf);
+            w.append_group(&buf).unwrap();
+        }
+        // finishing one group early must fail loudly
+        assert!(w.finish().is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_and_parallel_paths_write_identical_shards() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(25, 4, 4).with_seed(3));
+        let (da, db) = (tmp("stream"), tmp("par"));
+        let mut w = ShardWriter::create(&da, StoreMeta::of(&p, 8)).unwrap();
+        let mut buf = GroupBuf::new(p.dims(), false);
+        for i in 0..25 {
+            p.fill_group(i, &mut buf);
+            w.append_group(&buf).unwrap();
+        }
+        let sa = w.finish().unwrap();
+        let sb = write_source(&p, &db, 8, &Cluster::new(3)).unwrap();
+        assert_eq!(sa.n_shards, 4);
+        assert_eq!(sa.n_shards, sb.n_shards);
+        assert_eq!(sa.bytes, sb.bytes);
+        for idx in 0..4 {
+            let a = std::fs::read(da.join(shard_file_name(idx))).unwrap();
+            let b = std::fs::read(db.join(shard_file_name(idx))).unwrap();
+            assert_eq!(a, b, "shard {idx} differs between streaming and parallel writers");
+        }
+        assert_eq!(
+            std::fs::read(da.join(MANIFEST_NAME)).unwrap(),
+            std::fs::read(db.join(MANIFEST_NAME)).unwrap()
+        );
+        std::fs::remove_dir_all(&da).ok();
+        std::fs::remove_dir_all(&db).ok();
+    }
+}

@@ -17,7 +17,14 @@
 //!   the adjusted-profit contraction / top-C selection / consumption.
 //!
 //! At solve time only rust runs; [`runtime`] loads the AOT artifacts through
-//! the PJRT C API (`xla` crate) and executes them from the map workers.
+//! the PJRT C API (`xla` crate, behind the `xla` cargo feature — the
+//! default build has zero external dependencies and uses the pure-rust map
+//! phase) and executes them from the map workers.
+//!
+//! Instances larger than RAM solve through the out-of-core shard store
+//! ([`instance::store`]): `bskp gen --out <dir>` writes checksummed
+//! columnar shard files, `bskp solve --from <dir>` memory-maps them and
+//! runs the same solvers off disk.
 //!
 //! ## Quickstart
 //!

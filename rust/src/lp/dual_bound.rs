@@ -58,7 +58,8 @@ pub fn lp_upper_bound<S: GroupSource + ?Sized>(
     let dims = source.dims();
     let kk = dims.n_global;
     let budgets = source.budgets().to_vec();
-    let shards = Shards::for_workers(dims.n_groups, cluster.workers());
+    let shards =
+        Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None);
     let eval = RustEvaluator::new(source);
 
     // evaluate g and its subgradient at λ

@@ -5,7 +5,7 @@ use std::sync::Mutex;
 
 /// A simulated cluster: `workers` map workers plus the calling thread as
 /// leader. Phases use `std::thread::scope`, so map closures may borrow the
-//  problem data; spawn cost (~tens of µs) is negligible against a map round
+/// problem data; spawn cost (~tens of µs) is negligible against a map round
 /// over millions of groups.
 #[derive(Debug, Clone)]
 pub struct Cluster {

@@ -1,14 +1,24 @@
 //! PJRT client wrapper: compile-once executables with serialized execution.
+//!
+//! The real implementation wraps the `xla` crate (PJRT C API) and is gated
+//! behind the `xla` cargo feature, which the offline registry cannot
+//! satisfy by default. Without the feature an API-identical stub compiles
+//! in whose [`Runtime::cpu`] returns a descriptive error, so every caller
+//! (the coordinator's `Backend::Xla` arm) degrades gracefully and the rest
+//! of the crate builds with zero external dependencies.
 
 use crate::error::{Error, Result};
 use crate::runtime::artifacts::ArtifactEntry;
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
 /// A PJRT CPU client plus the executables loaded through it.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "xla")]
 impl Runtime {
     /// Create the CPU client (one per process is plenty).
     pub fn cpu() -> Result<Self> {
@@ -39,6 +49,7 @@ impl Runtime {
 /// A compiled artifact. Execution is serialized through the mutex (the
 /// `xla` wrappers are not `Sync`; XLA's CPU runtime parallelizes
 /// internally), while input marshaling stays on the calling worker.
+#[cfg(feature = "xla")]
 pub struct LoadedExecutable {
     exe: Mutex<xla::PjRtLoadedExecutable>,
     entry: ArtifactEntry,
@@ -47,9 +58,12 @@ pub struct LoadedExecutable {
 // SAFETY: the wrapped PJRT objects are only touched while the mutex is
 // held; PJRT itself is a thread-safe C API and the CPU client outlives the
 // executable (owned by the same struct that owns the Runtime).
+#[cfg(feature = "xla")]
 unsafe impl Send for LoadedExecutable {}
+#[cfg(feature = "xla")]
 unsafe impl Sync for LoadedExecutable {}
 
+#[cfg(feature = "xla")]
 impl LoadedExecutable {
     /// The artifact metadata this executable was compiled from.
     pub fn entry(&self) -> &ArtifactEntry {
@@ -86,5 +100,59 @@ impl LoadedExecutable {
             .iter()
             .map(|l| l.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}"))))
             .collect()
+    }
+}
+
+/// Stub runtime used when the crate is built without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    _priv: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    /// Always errors: the PJRT backend needs the `xla` feature, which in
+    /// turn needs a vendored `xla` crate added to `[dependencies]` in
+    /// `rust/Cargo.toml` (see the comment there). Use `Backend::Rust`
+    /// otherwise.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Runtime(
+            "bskp was built without the `xla` feature; the PJRT backend is \
+             unavailable. Add a vendored `xla` crate to [dependencies] in \
+             rust/Cargo.toml (see the comment there) and rebuild with \
+             `--features xla`, or use the pure-rust backend"
+                .into(),
+        ))
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Unreachable in practice ([`Runtime::cpu`] never hands out a stub),
+    /// but kept API-identical so callers compile unchanged.
+    pub fn load(&self, _entry: &ArtifactEntry) -> Result<LoadedExecutable> {
+        Err(Error::Runtime("xla feature disabled".into()))
+    }
+}
+
+/// Stub executable mirroring the real API; never constructible because the
+/// stub [`Runtime`] cannot be obtained.
+#[cfg(not(feature = "xla"))]
+pub struct LoadedExecutable {
+    entry: ArtifactEntry,
+}
+
+#[cfg(not(feature = "xla"))]
+impl LoadedExecutable {
+    /// The artifact metadata this executable was compiled from.
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Always errors (see [`Runtime::cpu`]).
+    pub fn execute_f32(&self, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        Err(Error::Runtime("xla feature disabled".into()))
     }
 }

@@ -85,7 +85,17 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
     let n_art = entry.n;
     let shards = match config.shard_size {
         Some(s) => Shards::new(dims.n_groups, s),
-        None => Shards::new(dims.n_groups, n_art),
+        None => {
+            // whole artifact slabs per map shard; for a store-backed
+            // source grow to the file-shard size (rounded up to whole
+            // slabs) so the zero-padded final slab of every map shard
+            // lands at a storage-shard boundary instead of mid-file
+            let unit = match source.preferred_shard_size() {
+                Some(u) if u >= n_art => u.div_ceil(n_art) * n_art,
+                _ => n_art,
+            };
+            Shards::new(dims.n_groups, unit)
+        }
     };
 
     let mut lambda = match &config.presolve {
@@ -195,7 +205,7 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
     let agg = if converged {
         crate::solver::rounds::evaluation_round(
             &eval,
-            Shards::for_workers(dims.n_groups, cluster.workers()),
+            Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None),
             kk,
             &lambda,
             cluster,

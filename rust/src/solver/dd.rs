@@ -43,10 +43,14 @@ pub fn solve_dd_with<S: GroupSource + ?Sized, E: ShardEvaluator>(
     let t0 = std::time::Instant::now();
     let dims = source.dims();
     let budgets = source.budgets().to_vec();
-    let shards = match config.shard_size {
-        Some(s) => Shards::new(dims.n_groups, s),
-        None => Shards::for_workers(dims.n_groups, cluster.workers()),
-    };
+    // align map shards with the source's storage shards (no-op for
+    // in-memory sources) so out-of-core workers touch whole files
+    let shards = Shards::plan(
+        dims.n_groups,
+        cluster.workers(),
+        source.preferred_shard_size(),
+        config.shard_size,
+    );
 
     let mut lambda = match &config.presolve {
         Some(p) => crate::solver::presolve::presolve_lambda(source, p, config, cluster)?,

@@ -11,6 +11,12 @@
 //! | §5.3 pre-solving by sampling                      | [`presolve`] |
 //! | §5.4 post-processing for feasibility              | [`postprocess`] |
 //! | cyclic / block coordinate descent variants        | [`cd_modes`] |
+//!
+//! Every solver consumes a [`crate::instance::GroupSource`], so the same
+//! code runs against in-memory, synthetic-on-the-fly, or out-of-core
+//! memory-mapped instances ([`crate::instance::store`]) — the latter is
+//! how instances bigger than RAM are solved, mirroring the paper's mappers
+//! streaming groups from a sharded distributed store.
 
 pub mod adjusted;
 pub mod bucketing;

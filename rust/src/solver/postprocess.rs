@@ -28,7 +28,8 @@ pub fn enforce_feasibility<S: GroupSource + ?Sized>(
     cluster: &Cluster,
 ) -> Result<()> {
     let dims = source.dims();
-    let shards = Shards::for_workers(dims.n_groups, cluster.workers());
+    let shards =
+        Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None);
     let lambda = report.lambda.clone();
 
     // map: gather (p̃_i, i) for every group with a non-empty selection

@@ -128,10 +128,14 @@ pub fn solve_scd<S: GroupSource + ?Sized>(
     let dims = source.dims();
     let kk = dims.n_global;
     let budgets = source.budgets().to_vec();
-    let shards = match config.shard_size {
-        Some(s) => Shards::new(dims.n_groups, s),
-        None => Shards::for_workers(dims.n_groups, cluster.workers()),
-    };
+    // align map shards with the source's storage shards (no-op for
+    // in-memory sources) so out-of-core workers touch whole files
+    let shards = Shards::plan(
+        dims.n_groups,
+        cluster.workers(),
+        source.preferred_shard_size(),
+        config.shard_size,
+    );
     let sparse_q = if config.use_sparse_fast_path { sparse_q::eligible(source) } else { None };
 
     let mut lambda = match &config.presolve {

@@ -1,0 +1,221 @@
+//! Out-of-core shard store: round-trip and solve-equivalence tests.
+//!
+//! The scratch-built property harness (the offline registry has no
+//! `proptest`; see `proptest_invariants.rs`) drives randomized configs
+//! through `generate → write_shards → MmapProblem` and asserts the mapped
+//! groups are **bit-identical** to the in-memory path — dense and sparse
+//! layouts, padded final partial shards, random laminar profiles. Failures
+//! print the case seed for replay.
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::LaminarProfile;
+use bskp::instance::problem::{CostsBuf, GroupBuf, GroupSource};
+use bskp::instance::store::format::{shard_file_name, MANIFEST_NAME};
+use bskp::instance::store::MmapProblem;
+use bskp::mapreduce::Cluster;
+use bskp::rng::Xoshiro256pp;
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+use std::path::PathBuf;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_store_it_{}_{name}", std::process::id()))
+}
+
+/// Assert every group read off disk is bit-identical to the generator's.
+fn assert_bit_identical(p: &SyntheticProblem, m: &MmapProblem, what: &str) {
+    assert_eq!(p.dims(), m.dims(), "{what}: dims");
+    assert_eq!(p.is_dense(), m.is_dense(), "{what}: layout");
+    assert_eq!(p.budgets(), m.budgets(), "{what}: budgets must survive the manifest bit-exactly");
+    assert_eq!(p.locals().constraints(), m.locals().constraints(), "{what}: laminar profile");
+    let dims = p.dims();
+    let mut a = GroupBuf::new(dims, p.is_dense());
+    let mut b = GroupBuf::new(dims, p.is_dense());
+    for i in 0..dims.n_groups {
+        p.fill_group(i, &mut a);
+        m.fill_group(i, &mut b);
+        // f32 equality here is exact: the store must round-trip bits
+        assert_eq!(a.profits, b.profits, "{what}: profits of group {i}");
+        match (&a.costs, &b.costs) {
+            (CostsBuf::Dense(x), CostsBuf::Dense(y)) => {
+                assert_eq!(x, y, "{what}: dense costs of group {i}")
+            }
+            (
+                CostsBuf::Sparse { knap: xk, cost: xc },
+                CostsBuf::Sparse { knap: yk, cost: yc },
+            ) => {
+                assert_eq!(xk, yk, "{what}: knap of group {i}");
+                assert_eq!(xc, yc, "{what}: sparse costs of group {i}");
+            }
+            _ => panic!("{what}: layout mismatch on group {i}"),
+        }
+    }
+}
+
+#[test]
+fn prop_roundtrip_bit_identical_random_configs() {
+    let mut rng = Xoshiro256pp::new(0x5704E);
+    for case in 0..30 {
+        let m = 2 + rng.below(9) as usize;
+        let k = 1 + rng.below(8) as usize;
+        let n = 20 + rng.below(500) as usize;
+        let dense = rng.coin(0.5);
+        let mut cfg = if dense {
+            GeneratorConfig::dense(n, m, k)
+        } else {
+            GeneratorConfig::sparse(n, m, k)
+        };
+        if rng.coin(0.3) {
+            cfg = cfg.with_locals(LaminarProfile::scenario_c223(m));
+        }
+        cfg = cfg.with_seed(rng.next_u64());
+        // shard sizes that divide n, exceed n, and leave ragged tails
+        let shard = 1 + rng.below(2 * n as u64) as usize;
+        let p = SyntheticProblem::new(cfg);
+        let dir = tmp_dir(&format!("prop{case}"));
+        let summary = p.write_shards(&dir, shard, &Cluster::new(4)).unwrap_or_else(|e| {
+            panic!("case {case} (n={n} m={m} k={k} dense={dense} shard={shard}): write: {e}")
+        });
+        assert_eq!(summary.n_shards, n.div_ceil(shard), "case {case}: shard count");
+        // open_verified additionally checksums every payload
+        let mm = MmapProblem::open_verified(&dir).unwrap_or_else(|e| {
+            panic!("case {case} (n={n} m={m} k={k} dense={dense} shard={shard}): open: {e}")
+        });
+        assert_bit_identical(&p, &mm, &format!("case {case}"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn padded_final_partial_shard_has_full_geometry() {
+    // 1000 groups at shard 256 → shards of 256/256/256/232 live groups,
+    // all four files zero-padded to identical byte size
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(1000, 7, 7).with_seed(99));
+    let dir = tmp_dir("padded");
+    let s = p.write_shards(&dir, 256, &Cluster::new(2)).unwrap();
+    assert_eq!(s.n_shards, 4);
+    let sizes: Vec<u64> = (0..4)
+        .map(|i| std::fs::metadata(dir.join(shard_file_name(i))).unwrap().len())
+        .collect();
+    assert!(sizes.windows(2).all(|w| w[0] == w[1]), "padded shards must be same size: {sizes:?}");
+    let mm = MmapProblem::open_verified(&dir).unwrap();
+    assert_eq!(mm.n_shards(), 4);
+    assert_eq!(mm.shard_size(), 256);
+    assert_bit_identical(&p, &mm, "padded");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn solve_from_store_matches_in_memory() {
+    for (dense, name) in [(false, "sparse"), (true, "dense")] {
+        let cfg = if dense {
+            GeneratorConfig::dense(2_000, 8, 4).with_seed(7)
+        } else {
+            GeneratorConfig::sparse(2_000, 8, 8).with_seed(7)
+        };
+        let p = SyntheticProblem::new(cfg);
+        let dir = tmp_dir(&format!("solve_{name}"));
+        p.write_shards(&dir, 300, &Cluster::new(4)).unwrap();
+        let mm = MmapProblem::open(&dir).unwrap();
+        mm.preload().unwrap();
+
+        // pin the map shard size and run single-worker so both solves see
+        // the identical partition in the identical order → bit-identical
+        // reductions; then also check the acceptance tolerance with each
+        // source's natural partition on a parallel cluster
+        let pinned = SolverConfig { shard_size: Some(512), ..Default::default() };
+        let single = Cluster::single();
+        let cluster = Cluster::new(4);
+        let a = solve_scd(&p, &pinned, &single).unwrap();
+        let b = solve_scd(&mm, &pinned, &single).unwrap();
+        assert_eq!(a.lambda, b.lambda, "{name}: λ must match exactly on a pinned partition");
+        assert_eq!(a.primal_value, b.primal_value, "{name}: primal");
+        assert_eq!(a.n_selected, b.n_selected, "{name}: selection count");
+
+        let free = SolverConfig::default();
+        let c = solve_scd(&p, &free, &cluster).unwrap();
+        let d = solve_scd(&mm, &free, &cluster).unwrap();
+        assert!(
+            (c.primal_value - d.primal_value).abs() <= 1e-6 * c.primal_value.abs().max(1.0),
+            "{name}: primal {} vs {}",
+            c.primal_value,
+            d.primal_value
+        );
+        assert!(
+            (c.duality_gap() - d.duality_gap()).abs() <= 1e-6 * c.primal_value.abs().max(1.0),
+            "{name}: gap {} vs {}",
+            c.duality_gap(),
+            d.duality_gap()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn store_shard_size_steers_map_partition() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(5_000, 6, 6).with_seed(1));
+    let dir = tmp_dir("prefer");
+    p.write_shards(&dir, 1_250, &Cluster::new(2)).unwrap();
+    let mm = MmapProblem::open(&dir).unwrap();
+    assert_eq!(mm.preferred_shard_size(), Some(1_250));
+    assert_eq!(p.preferred_shard_size(), None);
+}
+
+#[test]
+fn corruption_is_detected() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(200, 5, 5).with_seed(11));
+    let dir = tmp_dir("corrupt");
+    p.write_shards(&dir, 64, &Cluster::new(2)).unwrap();
+
+    // flip one payload byte in shard 1 → open_verified must fail
+    let path = dir.join(shard_file_name(1));
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() - 3;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = MmapProblem::open_verified(&dir).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "got: {err}");
+
+    // a truncated shard fails header/section validation even without verify
+    std::fs::write(&path, &bytes[..128]).unwrap();
+    let mm = MmapProblem::open(&dir).unwrap();
+    assert!(mm.preload().is_err());
+
+    // a missing manifest is a clear error mentioning `gen`
+    std::fs::remove_file(dir.join(MANIFEST_NAME)).unwrap();
+    let err = MmapProblem::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("gen"), "got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hand_written_zero_dim_manifest_is_an_error_not_a_panic() {
+    let dir = tmp_dir("zerodim");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join(MANIFEST_NAME),
+        "format\tbskp-shard-v1\nlayout\tsparse\nn_groups\t0\nn_items\t0\nn_global\t0\n\
+         shard_size\t1\nn_shards\t0\n",
+    )
+    .unwrap();
+    let err = MmapProblem::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("positive"), "got: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zero_copy_group_prices_match() {
+    #[cfg(target_endian = "little")]
+    {
+        let p = SyntheticProblem::new(GeneratorConfig::dense(150, 6, 3).with_seed(5));
+        let dir = tmp_dir("zerocopy");
+        p.write_shards(&dir, 64, &Cluster::new(2)).unwrap();
+        let mm = MmapProblem::open(&dir).unwrap();
+        let mut buf = GroupBuf::new(p.dims(), true);
+        for i in [0usize, 63, 64, 149] {
+            p.fill_group(i, &mut buf);
+            assert_eq!(mm.group_prices(i), &buf.profits[..], "group {i}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
