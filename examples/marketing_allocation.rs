@@ -11,10 +11,10 @@
 //! cargo run --release --example marketing_allocation
 //! ```
 
-use bskp::coordinator::Coordinator;
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::instance::laminar::LaminarProfile;
 use bskp::mapreduce::Cluster;
+use bskp::solve::Solve;
 use bskp::solver::config::{PresolveConfig, SolverConfig};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -35,12 +35,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         n_users * 16
     );
 
-    let coord = Coordinator::new(cluster).with_config(SolverConfig {
-        presolve: Some(PresolveConfig { sample: 1_000, ..Default::default() }),
-        max_iters: 80,
-        ..Default::default()
-    });
-    let report = coord.solve(&problem)?;
+    let report = Solve::on(&problem)
+        .cluster(cluster)
+        .config(SolverConfig {
+            presolve: Some(PresolveConfig { sample: 1_000, ..Default::default() }),
+            max_iters: 80,
+            ..Default::default()
+        })
+        .run()?;
 
     println!("\nconverged: {} in {} iterations ({:.0} ms)",
         report.converged, report.iterations, report.wall_ms);

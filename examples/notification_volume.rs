@@ -12,11 +12,11 @@
 //! cargo run --release --example notification_volume
 //! ```
 
-use bskp::coordinator::Coordinator;
 use bskp::instance::laminar::LaminarProfile;
 use bskp::instance::problem::{CostsBuf, Dims, GroupBuf, GroupSource};
 use bskp::mapreduce::Cluster;
 use bskp::rng::{mix64, Xoshiro256pp};
+use bskp::solve::Solve;
 use bskp::solver::SolverConfig;
 
 /// Per-user candidate notifications with engagement scores.
@@ -83,9 +83,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          budget {volume_budget} sends)...",
         n_candidates
     );
-    let report = Coordinator::new(cluster)
-        .with_config(SolverConfig { max_iters: 60, ..Default::default() })
-        .solve(&model)?;
+    let report = Solve::on(&model)
+        .cluster(cluster)
+        .config(SolverConfig { max_iters: 60, ..Default::default() })
+        .run()?;
 
     println!("\niterations: {} (converged: {})", report.iterations, report.converged);
     println!("expected clicks: {:.1}", report.primal_value);

@@ -14,11 +14,11 @@
 //! bskp solve --from /data/store --verify
 //! ```
 
-use bskp::coordinator::Coordinator;
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::instance::problem::GroupSource;
 use bskp::instance::store::MmapProblem;
 use bskp::mapreduce::Cluster;
+use bskp::solve::{Solve, WarmStart};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = std::env::temp_dir().join(format!("bskp_out_of_core_{}", std::process::id()));
@@ -45,17 +45,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         mapped.shard_size()
     );
 
-    // 3. solve straight off disk — same coordinator, same algorithms; the
-    //    solvers only see the GroupSource trait
-    let report = Coordinator::new(cluster.clone()).solve(&mapped)?;
+    // 3. solve straight off disk — same session API, same algorithms; the
+    //    solvers only see the GroupSource trait. checkpoint_auto drops
+    //    periodic λ checkpoints next to the shard files, so a long solve
+    //    killed mid-run resumes with WarmStart::from_checkpoint
+    let report = Solve::on(&mapped)
+        .cluster(cluster.clone())
+        .checkpoint_auto(5)
+        .run()?;
     println!(
         "mmap  : {:>3} iters, primal {:>12.2}, gap {:>8.2}, {:>6.0} ms",
         report.iterations, report.primal_value, report.duality_gap(), report.wall_ms
     );
+    let ckpt = dir.join("lambda.ckpt");
+    println!("ckpt  : {}", ckpt.display());
 
     // 4. cross-check against the in-memory path: bit-identical data, so
     //    the objective agrees to solver tolerance
-    let in_mem = Coordinator::new(cluster).solve(&problem)?;
+    let in_mem = Solve::on(&problem).cluster(cluster.clone()).run()?;
     println!(
         "inmem : {:>3} iters, primal {:>12.2}, gap {:>8.2}, {:>6.0} ms",
         in_mem.iterations, in_mem.primal_value, in_mem.duality_gap(), in_mem.wall_ms
@@ -65,6 +72,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("drift : {rel:.2e} (out-of-core vs in-memory)");
     assert!(rel <= 1e-6);
     assert!(report.is_feasible());
+
+    // 5. "next day": resume from the checkpoint — the warm start converges
+    //    in a fraction of the cold solve's rounds
+    let resumed = Solve::on(&mapped)
+        .cluster(cluster)
+        .warm(WarmStart::from_checkpoint(&ckpt)?)
+        .run()?;
+    println!(
+        "warm  : {:>3} iters (cold took {}), primal {:>12.2}",
+        resumed.iterations, report.iterations, resumed.primal_value
+    );
+    assert!(resumed.is_feasible());
 
     std::fs::remove_dir_all(&dir).ok();
     Ok(())

@@ -1,14 +1,17 @@
-//! Quickstart: generate a small sparse instance, solve it with SCD, and
-//! compare against dual descent and the LP upper bound.
+//! Quickstart: generate a small sparse instance, plan + run an SCD solve
+//! through the session API, compare against dual descent and the LP upper
+//! bound, then warm-start a changed-budget re-solve from the first
+//! report — the daily production pattern.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use bskp::coordinator::{Algorithm, Coordinator};
+use bskp::coordinator::Algorithm;
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::lp::lp_upper_bound;
 use bskp::mapreduce::Cluster;
+use bskp::solve::{ScaledBudgets, Solve, WarmStart};
 use bskp::solver::SolverConfig;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -18,15 +21,20 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("solving 1M decision variables on {} workers...\n", cluster.workers());
 
     // --- SCD (Algorithm 4): the paper's production algorithm ---
-    let scd = Coordinator::new(cluster.clone()).solve(&problem)?;
+    // plan() first: the dispatch (algorithm/backend/reduce/shards) is
+    // inspectable before anything heavy runs
+    let plan = Solve::on(&problem).cluster(cluster.clone()).plan()?;
+    print!("{plan}");
+    let scd = plan.run()?;
     println!("SCD : {:>3} iters, primal {:>12.2}, gap {:>8.2}, viol {:.2e}, {:>7.0} ms",
         scd.iterations, scd.primal_value, scd.duality_gap(), scd.max_violation_ratio(), scd.wall_ms);
 
     // --- DD (Algorithm 2): needs a tuned learning rate ---
-    let dd = Coordinator::new(cluster.clone())
-        .with_algorithm(Algorithm::Dd)
-        .with_config(SolverConfig { dd_alpha: 2e-3, ..Default::default() })
-        .solve(&problem)?;
+    let dd = Solve::on(&problem)
+        .cluster(cluster.clone())
+        .algorithm(Algorithm::Dd)
+        .config(SolverConfig { dd_alpha: 2e-3, ..Default::default() })
+        .run()?;
     println!("DD  : {:>3} iters, primal {:>12.2}, gap {:>8.2}, viol {:.2e}, {:>7.0} ms",
         dd.iterations, dd.primal_value, dd.duality_gap(), dd.max_violation_ratio(), dd.wall_ms);
 
@@ -37,5 +45,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("\noptimality ratio (SCD primal / LP bound): {:.4}%",
         100.0 * scd.primal_value / bound.value);
     assert!(scd.is_feasible());
+
+    // --- tomorrow: budgets drift 5%, warm-start from today's λ* ---
+    let drifted = ScaledBudgets::uniform(&problem, 1.05)?;
+    let warm = Solve::on(&drifted)
+        .cluster(cluster)
+        .warm(WarmStart::from_report(&scd))
+        .run()?;
+    println!(
+        "\nwarm re-solve after +5% budgets: {} iters (cold took {}), primal {:.2}",
+        warm.iterations, scd.iterations, warm.primal_value
+    );
+    assert!(warm.is_feasible());
     Ok(())
 }

@@ -4,7 +4,8 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 
 /// Switches that take no value.
-const SWITCHES: &[&str] = &["quiet", "no-postprocess", "no-fastpath", "track-history", "verify"];
+const SWITCHES: &[&str] =
+    &["quiet", "no-postprocess", "no-fastpath", "track-history", "verify", "plan-only"];
 
 /// Parsed arguments.
 #[derive(Debug, Clone, Default)]

@@ -1,7 +1,7 @@
 //! CLI subcommands.
 
 use crate::cli::args::Args;
-use crate::coordinator::{Algorithm, Backend, Coordinator};
+use crate::coordinator::{Algorithm, Backend};
 use crate::error::{Error, Result};
 use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
 use crate::instance::laminar::LaminarProfile;
@@ -9,7 +9,8 @@ use crate::instance::problem::{GroupBuf, GroupSource};
 use crate::instance::store::MmapProblem;
 use crate::lp::lp_upper_bound;
 use crate::mapreduce::Cluster;
-use crate::metrics::report_to_json;
+use crate::metrics::{plan_to_json, report_to_json, JsonValue};
+use crate::solve::{ScaledBudgets, Solve, WarmStart, DEFAULT_CHECKPOINT_EVERY};
 use crate::solver::config::{CdMode, PresolveConfig, ReduceMode, SolverConfig};
 
 /// Usage text for `bskp help`.
@@ -19,6 +20,8 @@ bskp — billion-scale knapsack solver (WWW'20 reproduction)
 SUBCOMMANDS
   gen        write a synthetic instance into an on-disk shard store
   solve      solve a synthetic instance, or an on-disk store via --from
+  resolve    re-solve with a warm-started λ (requires --warm); the daily
+             changed-budget production path, e.g. with --budget-scale
   lpbound    compute the LP-relaxation upper bound (Kelley cutting planes)
   inspect    print instance statistics and a sample group
   help       this text
@@ -41,9 +44,10 @@ STORE FLAGS (solve / lpbound / inspect)
                        replaces the instance flags above
   --verify             checksum every shard file before using it
 
-SOLVER FLAGS (solve)
+SOLVER FLAGS (solve / resolve)
   --algo scd|dd        algorithm (default scd)
-  --backend rust|xla   map-phase backend (default rust)
+  --backend rust|xla   map-phase backend (default rust; unsupported
+                       combinations fall back with a plan note)
   --artifacts <dir>    artifact dir for --backend xla (default artifacts)
   --iters <int>        max iterations (default 60)
   --tol <f>            convergence tolerance (default 1e-4)
@@ -55,10 +59,20 @@ SOLVER FLAGS (solve)
   --damping <f>        under-relaxation in (0,1]
   --workers <int>      map workers (default: all cores)
   --shard <int>        shard size override
-  --json <path>        write the full report as JSON
+  --track-history      record the per-iteration series in the report JSON
+  --json <path|->      write {plan, report} JSON to a file, or - for
+                       stdout (- implies --quiet so stdout stays JSON)
+  --plan-only          print the plan (and its JSON) without solving
   --no-postprocess     skip §5.4 feasibility projection
   --no-fastpath        disable Algorithm 5 (use Algorithm 3 everywhere)
-  --quiet              suppress the human-readable summary
+  --quiet              suppress the human-readable plan and summary
+
+WARM START / CHECKPOINT FLAGS (solve / resolve)
+  --warm <file>        seed λ from a checkpoint file (required by resolve)
+  --budget-scale <f>   scale all budgets by f (changed-budget re-solve)
+  --checkpoint <path|auto>   write periodic λ checkpoints; auto puts
+                       lambda.ckpt next to the --from shard store
+  --checkpoint-every <n>     checkpoint cadence in rounds (default 5)
 
 LPBOUND FLAGS
   --lp-tol <f>         Kelley gap tolerance (default 1e-4)
@@ -129,6 +143,9 @@ pub fn solver_config_from_args(args: &Args) -> Result<SolverConfig> {
         use_sparse_fast_path: !args.has("no-fastpath"),
         shard_size: args.get_opt("shard")?,
         damping: args.get_opt("damping")?,
+        // the CLI keeps reports lean unless the series is asked for
+        // (library default is on; see SolverConfig::track_history)
+        track_history: args.has("track-history"),
         ..SolverConfig::default()
     };
     if let Some(sample) = args.get_opt::<usize>("presolve")? {
@@ -197,6 +214,16 @@ pub fn cmd_gen(args: &Args) -> Result<()> {
 
 /// `bskp solve`.
 pub fn cmd_solve(args: &Args) -> Result<()> {
+    cmd_solve_impl(args, false)
+}
+
+/// `bskp resolve`: a warm-started re-solve — `solve` with `--warm`
+/// mandatory, because resolving without yesterday's λ is just a solve.
+pub fn cmd_resolve(args: &Args) -> Result<()> {
+    cmd_solve_impl(args, true)
+}
+
+fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
     let problem = source_from_args(args)?;
     let config = solver_config_from_args(args)?;
     let cluster = cluster_from_args(args)?;
@@ -210,11 +237,67 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
         "xla" => Backend::Xla { artifacts_dir: args.get_str("artifacts", "artifacts").into() },
         other => return Err(Error::Usage(format!("--backend must be rust|xla, got {other}"))),
     };
-    let coord = Coordinator { cluster, config, algorithm, backend };
-    let report = coord.solve(problem.as_ref())?;
 
-    if !args.has("quiet") {
-        let dims = problem.dims();
+    let warm = match args.get_opt::<String>("warm")? {
+        Some(path) => {
+            Some(WarmStart::from_checkpoint(&path).map_err(|e| Error::Usage(e.to_string()))?)
+        }
+        None if require_warm => {
+            return Err(Error::Usage(
+                "resolve requires --warm <checkpoint> (a prior solve's λ); \
+                 use `bskp solve --checkpoint ...` to produce one"
+                    .into(),
+            ))
+        }
+        None => None,
+    };
+
+    // budget-perturbed view (the changed-budget re-solve path)
+    let scaled;
+    let source: &dyn GroupSource = match args.get_opt::<f64>("budget-scale")? {
+        Some(f) if f != 1.0 => {
+            scaled = ScaledBudgets::uniform(problem.as_ref(), f)
+                .map_err(|e| Error::Usage(e.to_string()))?;
+            &scaled
+        }
+        _ => problem.as_ref(),
+    };
+
+    let mut session = Solve::on(source)
+        .algorithm(algorithm)
+        .backend(backend)
+        .config(config)
+        .cluster(cluster);
+    if let Some(w) = warm {
+        session = session.warm(w);
+    }
+    let every = args.get("checkpoint-every", DEFAULT_CHECKPOINT_EVERY)?;
+    match args.get_opt::<String>("checkpoint")?.as_deref() {
+        Some("auto") => session = session.checkpoint_auto(every),
+        Some(path) => session = session.checkpoint_to(path, every),
+        None => {}
+    }
+
+    let plan = session.plan()?;
+    let json_dest = args.get_opt::<String>("json")?;
+    // `--json -` owns stdout: suppress the human-readable plan/summary so
+    // the stream stays parseable without also passing --quiet
+    let quiet = args.has("quiet") || json_dest.as_deref() == Some("-");
+    if !quiet {
+        print!("{plan}");
+    }
+    let plan_json = plan_to_json(&plan);
+    if args.has("plan-only") {
+        if let Some(dest) = &json_dest {
+            emit_json(quiet, dest, JsonValue::Object(vec![("plan".to_string(), plan_json)]))?;
+        }
+        return Ok(());
+    }
+
+    let dims = source.dims();
+    let report = plan.run()?;
+
+    if !quiet {
         println!(
             "solved N={} M={} K={} ({} decision variables)",
             dims.n_groups,
@@ -235,10 +318,24 @@ pub fn cmd_solve(args: &Args) -> Result<()> {
         println!("  dropped groups  : {}", report.dropped_groups);
         println!("  wall time       : {:.1} ms", report.wall_ms);
     }
-    if let Some(path) = args.get_opt::<String>("json")? {
-        std::fs::write(&path, report_to_json(&report).to_string())?;
-        if !args.has("quiet") {
-            println!("  report written  : {path}");
+    if let Some(dest) = &json_dest {
+        let out = JsonValue::Object(vec![
+            ("plan".to_string(), plan_json),
+            ("report".to_string(), report_to_json(&report)),
+        ]);
+        emit_json(quiet, dest, out)?;
+    }
+    Ok(())
+}
+
+/// Write JSON to a file, or to stdout when the destination is `-`.
+fn emit_json(quiet: bool, dest: &str, value: JsonValue) -> Result<()> {
+    if dest == "-" {
+        println!("{value}");
+    } else {
+        std::fs::write(dest, value.to_string())?;
+        if !quiet {
+            println!("  json written    : {dest}");
         }
     }
     Ok(())

@@ -3,7 +3,9 @@
 //! ```text
 //! bskp gen     --n 10000000 --m 10 --k 10 --out /data/store [...]
 //! bskp solve   --n 1000000 --m 10 --k 10 --class sparse --algo scd [...]
-//! bskp solve   --from /data/store --algo scd [...]
+//! bskp solve   --from /data/store --checkpoint auto [...]
+//! bskp resolve --from /data/store --warm /data/store/lambda.ckpt \
+//!              --budget-scale 1.05 [...]
 //! bskp lpbound --n 10000 --m 10 --k 5 [...]
 //! bskp inspect --n 100 --m 10 --k 10 --class dense [...]
 //! bskp help
@@ -38,6 +40,7 @@ fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
     match args.subcommand() {
         "gen" => commands::cmd_gen(&args),
         "solve" => commands::cmd_solve(&args),
+        "resolve" => commands::cmd_resolve(&args),
         "lpbound" => commands::cmd_lpbound(&args),
         "inspect" => commands::cmd_inspect(&args),
         "help" | "" => {
@@ -88,6 +91,16 @@ mod tests {
     #[test]
     fn gen_requires_out() {
         assert_eq!(run(argv("bskp gen --n 100")), 2);
+    }
+
+    #[test]
+    fn resolve_requires_warm() {
+        assert_eq!(run(argv("bskp resolve --n 100 --m 4 --k 4 --quiet")), 2);
+    }
+
+    #[test]
+    fn plan_only_does_not_solve() {
+        assert_eq!(run(argv("bskp solve --n 200 --m 4 --k 4 --plan-only --quiet")), 0);
     }
 
     #[test]

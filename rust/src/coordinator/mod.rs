@@ -1,9 +1,13 @@
-//! The leader: one façade that binds an algorithm (DD / SCD), a map
-//! backend (pure rust / XLA artifacts) and a cluster, and drives a solve.
+//! The legacy leader façade: binds an algorithm (DD / SCD), a map backend
+//! (pure rust / XLA artifacts) and a cluster, and drives a solve.
 //!
-//! This is the entry point applications use (the CLI and the examples all
-//! go through it); the individual algorithm modules stay directly callable
-//! for benchmarks that need tighter control.
+//! **Prefer [`crate::solve::Solve`]** — the session API that replaced this
+//! as the application entry point (the CLI and the examples go through
+//! it). `Coordinator` keeps its original strict semantics for existing
+//! callers: it *errors* on an algorithm×backend×shape combination it
+//! cannot run, where `Solve::plan()` falls back with a recorded reason.
+//! The [`Algorithm`] and [`Backend`] enums defined here are shared by
+//! both paths. See `docs/solve-api.md` for migration notes.
 
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
@@ -84,25 +88,24 @@ impl Coordinator {
             (Algorithm::Scd, Backend::Rust) => scd::solve_scd(source, &self.config, &self.cluster),
             (Algorithm::Dd, Backend::Rust) => dd::solve_dd(source, &self.config, &self.cluster),
             (Algorithm::Scd, Backend::Xla { artifacts_dir }) => {
-                let manifest = ArtifactManifest::load(artifacts_dir)?;
-                let runtime = Runtime::cpu()?;
-                if crate::solver::sparse_q::eligible(source).is_some()
-                    && source.dims().n_items == source.dims().n_global
-                {
-                    crate::runtime::solve_scd_xla_sparse(
-                        source,
-                        &self.config,
-                        &self.cluster,
-                        &runtime,
-                        &manifest,
-                    )
-                } else {
-                    Err(Error::Runtime(
+                // shape gate first: the guidance error must fire whether or
+                // not the artifacts directory is present
+                if !crate::solver::sparse_q::xla_identity_eligible(source) {
+                    return Err(Error::Runtime(
                         "SCD XLA backend requires a sparse identity-mapped instance \
                          (M = K, single local cap); use Backend::Rust for this shape"
                             .into(),
-                    ))
+                    ));
                 }
+                let manifest = ArtifactManifest::load(artifacts_dir)?;
+                let runtime = Runtime::cpu()?;
+                crate::runtime::solve_scd_xla_sparse(
+                    source,
+                    &self.config,
+                    &self.cluster,
+                    &runtime,
+                    &manifest,
+                )
             }
             (Algorithm::Dd, Backend::Xla { artifacts_dir }) => {
                 let manifest = ArtifactManifest::load(artifacts_dir)?;
@@ -145,12 +148,17 @@ mod tests {
 
     #[test]
     fn xla_backend_rejects_ineligible_shapes() {
-        // dense instance on the SCD XLA path must error with guidance
+        // dense instance on the SCD XLA path must error with guidance; the
+        // shape gate fires before any artifact loading, so the message is
+        // deterministic even when no artifacts directory exists
         let p = SyntheticProblem::new(GeneratorConfig::dense(100, 4, 4));
         let coord = Coordinator::new(Cluster::new(1))
             .with_backend(Backend::Xla { artifacts_dir: "artifacts".into() });
-        // missing artifacts dir in test environments is also an acceptable
-        // error; either way, this must not panic
-        let _ = coord.solve(&p);
+        let err = coord.solve(&p).expect_err("ineligible shape must be rejected");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("sparse identity-mapped") && msg.contains("Backend::Rust"),
+            "missing guidance in error: {msg}"
+        );
     }
 }

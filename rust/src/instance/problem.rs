@@ -124,6 +124,15 @@ pub trait GroupSource: Sync {
         None
     }
 
+    /// On-disk home of the instance, if it has one (a shard-store
+    /// directory). The session API ([`crate::solve`]) writes periodic λ
+    /// checkpoints next to the data they belong to, so an interrupted
+    /// out-of-core solve resumes from the same directory it reads.
+    /// In-memory sources return `None`.
+    fn store_dir(&self) -> Option<std::path::PathBuf> {
+        None
+    }
+
     /// Validate basic invariants; call once before solving.
     fn validate(&self) -> Result<()> {
         let d = self.dims();

@@ -363,6 +363,10 @@ impl GroupSource for MmapProblem {
         &self.budgets
     }
 
+    fn store_dir(&self) -> Option<std::path::PathBuf> {
+        Some(self.dir.clone())
+    }
+
     fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
         let (v, row, m) = self.locate(i);
         let k = self.dims.n_global;

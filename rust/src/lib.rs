@@ -28,17 +28,40 @@
 //!
 //! ## Quickstart
 //!
+//! Every solve goes through the staged session API in [`solve`]: bind an
+//! instance, `plan()` (inspectable dispatch with a recorded reason for
+//! every fallback), then `run()`:
+//!
 //! ```no_run
 //! use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
-//! use bskp::solver::{SolverConfig, scd::solve_scd};
 //! use bskp::mapreduce::Cluster;
+//! use bskp::solve::Solve;
 //!
 //! let gen = GeneratorConfig::sparse(100_000, 10, 10).with_seed(7);
 //! let problem = SyntheticProblem::new(gen);
-//! let cluster = Cluster::new(8);
-//! let report = solve_scd(&problem, &SolverConfig::default(), &cluster).unwrap();
+//! let plan = Solve::on(&problem).cluster(Cluster::new(8)).plan().unwrap();
+//! println!("{plan}"); // algorithm/backend/reduce/shards + fallback notes
+//! let report = plan.run().unwrap();
 //! println!("primal={} gap={}", report.primal_value, report.duality_gap());
 //! ```
+//!
+//! Daily production re-solves warm-start from yesterday's multipliers and
+//! checkpoint λ next to the shard store so interrupted solves resume:
+//!
+//! ```no_run
+//! # use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+//! # use bskp::solve::{Solve, WarmStart};
+//! # let problem = SyntheticProblem::new(GeneratorConfig::sparse(1000, 10, 10));
+//! # let yesterday = Solve::on(&problem).run().unwrap();
+//! let report = Solve::on(&problem)
+//!     .warm(WarmStart::from_report(&yesterday))
+//!     .checkpoint_auto(5)
+//!     .run()
+//!     .unwrap();
+//! ```
+//!
+//! The free functions `solver::scd::solve_scd` / `solver::dd::solve_dd`
+//! remain as thin wrappers for benchmarks that need tight control.
 
 pub mod cli;
 pub mod coordinator;
@@ -50,6 +73,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod solve;
 pub mod solver;
 pub mod util;
 

@@ -7,7 +7,62 @@ mod timer;
 pub use json::JsonValue;
 pub use timer::{ScopedTimer, Stopwatch};
 
+use crate::solve::SolvePlan;
+use crate::solver::config::ReduceMode;
 use crate::solver::stats::SolveReport;
+
+/// Serialize a [`SolvePlan`] as JSON (stable key order): the dispatch
+/// decisions plus every fallback note, so CI can assert not just the
+/// result but *how* it was produced.
+pub fn plan_to_json(p: &SolvePlan<'_>) -> JsonValue {
+    let algorithm = match p.algorithm {
+        crate::coordinator::Algorithm::Scd => "scd",
+        crate::coordinator::Algorithm::Dd => "dd",
+    };
+    let reduce = match p.reduce() {
+        ReduceMode::Exact => "exact".to_string(),
+        ReduceMode::Bucketed { delta } => format!("bucketed:{delta:e}"),
+    };
+    JsonValue::Object(vec![
+        ("algorithm".to_string(), JsonValue::Str(algorithm.to_string())),
+        ("backend".to_string(), JsonValue::Str(p.backend.name().to_string())),
+        ("reduce".to_string(), JsonValue::Str(reduce)),
+        ("workers".to_string(), JsonValue::Num(p.cluster.workers() as f64)),
+        ("shard_count".to_string(), JsonValue::Num(p.shard_count as f64)),
+        ("shard_size".to_string(), JsonValue::Num(p.shard_size as f64)),
+        (
+            "warm_start".to_string(),
+            match &p.warm {
+                Some(w) => JsonValue::Str(w.provenance.clone()),
+                None => JsonValue::Null,
+            },
+        ),
+        (
+            "checkpoint".to_string(),
+            match &p.checkpoint {
+                Some(c) => JsonValue::Object(vec![
+                    ("path".to_string(), JsonValue::Str(c.path.display().to_string())),
+                    ("every".to_string(), JsonValue::Num(c.every as f64)),
+                ]),
+                None => JsonValue::Null,
+            },
+        ),
+        (
+            "notes".to_string(),
+            JsonValue::Array(
+                p.notes
+                    .iter()
+                    .map(|n| {
+                        JsonValue::Object(vec![
+                            ("stage".to_string(), JsonValue::Str(n.stage.to_string())),
+                            ("message".to_string(), JsonValue::Str(n.message.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
 
 /// Serialize a [`SolveReport`] as JSON (stable key order).
 pub fn report_to_json(r: &SolveReport) -> JsonValue {
@@ -78,6 +133,24 @@ mod tests {
         };
         let s = report_to_json(&r).to_string();
         for key in ["iterations", "duality_gap", "lambda", "wall_ms"] {
+            assert!(s.contains(key), "missing {key} in {s}");
+        }
+    }
+
+    #[test]
+    fn plan_json_carries_dispatch_and_notes() {
+        use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+        use crate::mapreduce::Cluster;
+        use crate::solve::Solve;
+
+        let p = SyntheticProblem::new(GeneratorConfig::dense(100, 4, 4).with_seed(1));
+        let plan = Solve::on(&p)
+            .cluster(Cluster::new(1))
+            .backend(crate::coordinator::Backend::Xla { artifacts_dir: "artifacts".into() })
+            .plan()
+            .unwrap();
+        let s = plan_to_json(&plan).to_string();
+        for key in ["\"algorithm\":\"scd\"", "\"backend\":\"rust\"", "\"notes\"", "\"stage\""] {
             assert!(s.contains(key), "missing {key} in {s}");
         }
     }

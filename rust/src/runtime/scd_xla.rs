@@ -19,7 +19,9 @@ use crate::solver::config::{ReduceMode, SolverConfig};
 use crate::solver::postprocess;
 use crate::solver::rounds::RoundAgg;
 use crate::solver::scd::exact_threshold_reduce;
-use crate::solver::stats::{max_violation_ratio, IterStat, SolveReport};
+use crate::solver::stats::{
+    max_violation_ratio, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+};
 use crate::util::rel_change;
 
 enum Thresholds {
@@ -74,6 +76,20 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
     runtime: &Runtime,
     manifest: &ArtifactManifest,
 ) -> Result<SolveReport> {
+    solve_scd_xla_sparse_driven(source, config, cluster, runtime, manifest, None, None)
+}
+
+/// [`solve_scd_xla_sparse`] with the session-API hooks: an optional
+/// warm-start λ and an optional per-round [`SolveObserver`].
+pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    runtime: &Runtime,
+    manifest: &ArtifactManifest,
+    init: Option<&[f64]>,
+    mut observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
     config.validate()?;
     source.validate()?;
     let t0 = std::time::Instant::now();
@@ -98,14 +114,12 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
         }
     };
 
-    let mut lambda = match &config.presolve {
-        Some(p) => crate::solver::presolve::presolve_lambda(source, p, config, cluster)?,
-        None => vec![config.lambda0; kk],
-    };
+    let mut lambda = crate::solver::scd::initial_lambda(source, config, cluster, init)?;
 
     let mut history = Vec::new();
     let mut lambda_2ago: Option<Vec<f64>> = None;
     let mut converged = false;
+    let mut stopped = false;
     let mut iterations = 0;
     let mut last_agg = RoundAgg::new(kk);
 
@@ -167,17 +181,27 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
 
         iterations = t + 1;
         let residual = rel_change(&new_lambda, &lambda);
+        let event = RoundEvent {
+            iter: t,
+            primal: round.primal.value(),
+            dual: round.dual_value(&lambda, &budgets),
+            max_violation_ratio: max_violation_ratio(&consumption, &budgets),
+            lambda_change: residual,
+            wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            lambda: &new_lambda,
+        };
         if config.track_history {
-            history.push(IterStat {
-                iter: t,
-                primal: round.primal.value(),
-                dual: round.dual_value(&lambda, &budgets),
-                max_violation_ratio: max_violation_ratio(&consumption, &budgets),
-                lambda_change: residual,
-                wall_ms: it0.elapsed().as_secs_f64() * 1e3,
-            });
+            history.push(event.to_iter_stat());
         }
         last_agg = round;
+
+        if let Some(obs) = observer.as_mut() {
+            if obs.on_round(&event) == ObserverControl::Stop {
+                lambda = new_lambda;
+                stopped = true;
+                break;
+            }
+        }
 
         if let Some(two_ago) = &lambda_2ago {
             if rel_change(&new_lambda, two_ago) < config.tol
@@ -199,10 +223,11 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
         }
     }
 
-    // final evaluation at the converged λ through the rust evaluator (the
-    // report is the contract; keep it backend-independent and f64-exact)
+    // final evaluation at the converged (or cancellation-adopted) λ
+    // through the rust evaluator — the report is the contract; keep it
+    // backend-independent, f64-exact, and consistent with report.lambda
     let eval = crate::solver::rounds::RustEvaluator::new(source);
-    let agg = if converged {
+    let agg = if converged || stopped {
         crate::solver::rounds::evaluation_round(
             &eval,
             Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None),
@@ -231,5 +256,8 @@ pub fn solve_scd_xla_sparse<S: GroupSource + ?Sized>(
         postprocess::enforce_feasibility(source, &mut report, cluster)?;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Some(obs) = observer.as_mut() {
+        obs.on_complete(&report);
+    }
     Ok(report)
 }

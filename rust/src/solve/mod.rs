@@ -1,0 +1,377 @@
+//! The solve session API: staged entry path for every solve.
+//!
+//! ```text
+//! Solve::on(&source)        // bind an instance (any GroupSource)
+//!     .algorithm(..)        // request DD / SCD        (default SCD)
+//!     .backend(..)          // request rust / XLA maps (default rust)
+//!     .config(..)           // solver parameters
+//!     .warm(..)             // seed λ from a prior solve / checkpoint
+//!     .checkpoint_auto(5)   // periodic λ checkpoints next to the store
+//!     .plan()?              // -> SolvePlan: inspectable, with fallback
+//!                           //    reasons for every unsupported combo
+//!     .run()                // or .run_observed(&mut observer)
+//! ```
+//!
+//! Planning is *capability-based*: a requested backend that cannot handle
+//! the instance shape (or is not compiled in, or has no artifacts) falls
+//! back to one that can, and the plan records a [`PlanNote`] saying why —
+//! the old `Coordinator::solve` behavior of erroring on unsupported
+//! combinations is gone from this path. (Genuine runtime faults after
+//! planning — PJRT init failure, artifacts deleted mid-session, I/O —
+//! still surface as errors from `run()`; dispatch itself never
+//! mismatches.) Warm starts ([`WarmStart`]) seed λ from a
+//! prior [`SolveReport`] or a checkpoint file; per-round
+//! [`SolveObserver`]s carry history recording, progress, cancellation and
+//! periodic λ checkpoints ([`CheckpointObserver`]) so interrupted
+//! out-of-core solves resume with `WarmStart::from_checkpoint`.
+//!
+//! The free functions `solve_scd` / `solve_dd` remain as thin wrappers
+//! for benchmarks that need tight control of a single algorithm.
+
+pub mod observers;
+pub mod plan;
+pub mod scaled;
+pub mod warm;
+
+pub use observers::{ChainObserver, CheckpointObserver, StopAfter};
+pub use plan::{CheckpointPlan, PlanNote, PlannedBackend, SolvePlan};
+pub use scaled::ScaledBudgets;
+pub use warm::{
+    default_checkpoint_path, read_checkpoint, write_checkpoint, Checkpoint, WarmStart,
+    CHECKPOINT_FILE,
+};
+
+// the observer vocabulary lives next to the solvers; re-export it here so
+// session users need only `use bskp::solve::*`
+pub use crate::solver::stats::{
+    HistoryObserver, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+};
+
+use crate::coordinator::{Algorithm, Backend};
+use crate::error::Result;
+use crate::instance::problem::GroupSource;
+use crate::instance::shard::Shards;
+use crate::mapreduce::Cluster;
+use crate::solver::config::{ReduceMode, SolverConfig};
+use crate::solver::sparse_q;
+use std::path::PathBuf;
+
+/// Default checkpoint cadence (rounds) when none is given.
+pub const DEFAULT_CHECKPOINT_EVERY: usize = 5;
+
+/// Advisory threshold: above this many decision variables an `Exact`
+/// reduce keeps every threshold emission in memory, which is usually the
+/// wrong trade — the plan suggests §5.2 bucketing.
+const EXACT_REDUCE_ADVISORY_VARS: usize = 50_000_000;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum CheckpointRequest {
+    Off,
+    /// Next to the source's shard store (disabled with a note when the
+    /// source has no on-disk home).
+    Auto { every: usize },
+    To { path: PathBuf, every: usize },
+}
+
+/// Builder for one solve session. See the [module docs](self).
+pub struct Solve<'a> {
+    source: &'a dyn GroupSource,
+    config: SolverConfig,
+    cluster: Option<Cluster>,
+    algorithm: Algorithm,
+    backend: Backend,
+    warm: Option<WarmStart>,
+    checkpoint: CheckpointRequest,
+}
+
+impl<'a> Solve<'a> {
+    /// Start a session on an instance (any [`GroupSource`]: synthetic,
+    /// materialized, or an out-of-core
+    /// [`crate::instance::store::MmapProblem`]).
+    pub fn on(source: &'a dyn GroupSource) -> Self {
+        Self {
+            source,
+            config: SolverConfig::default(),
+            cluster: None,
+            algorithm: Algorithm::Scd,
+            backend: Backend::Rust,
+            warm: None,
+            checkpoint: CheckpointRequest::Off,
+        }
+    }
+
+    /// Request DD or SCD (default: SCD, the paper's production choice).
+    pub fn algorithm(mut self, a: Algorithm) -> Self {
+        self.algorithm = a;
+        self
+    }
+
+    /// Request a map-phase backend (default: pure rust). Unsupported
+    /// combinations fall back with a plan note instead of erroring.
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    /// Replace the solver configuration.
+    pub fn config(mut self, c: SolverConfig) -> Self {
+        self.config = c;
+        self
+    }
+
+    /// Use this worker pool (default: [`Cluster::available`]).
+    pub fn cluster(mut self, c: Cluster) -> Self {
+        self.cluster = Some(c);
+        self
+    }
+
+    /// Seed λ from a warm start (overrides `lambda0` and §5.3 presolve).
+    pub fn warm(mut self, w: WarmStart) -> Self {
+        self.warm = Some(w);
+        self
+    }
+
+    /// Write λ checkpoints to `path` every `every` rounds (plus a final
+    /// one on completion).
+    pub fn checkpoint_to(mut self, path: impl Into<PathBuf>, every: usize) -> Self {
+        self.checkpoint = CheckpointRequest::To { path: path.into(), every };
+        self
+    }
+
+    /// Write λ checkpoints next to the source's shard store (the
+    /// [`GroupSource::store_dir`]) every `every` rounds. When the source
+    /// has no on-disk home, checkpointing is disabled with a plan note.
+    pub fn checkpoint_auto(mut self, every: usize) -> Self {
+        self.checkpoint = CheckpointRequest::Auto { every };
+        self
+    }
+
+    /// Resolve the session into an inspectable [`SolvePlan`]: validate
+    /// config and instance, length-check the warm start, pick a backend
+    /// the shape supports (recording a [`PlanNote`] for every fallback),
+    /// and fix the shard geometry.
+    pub fn plan(self) -> Result<SolvePlan<'a>> {
+        self.config.validate()?;
+        self.source.validate()?;
+        let dims = self.source.dims();
+        let mut notes = Vec::new();
+
+        // warm start: a K-mismatch or invalid multiplier is a data error,
+        // not a fallback — the user pointed at the wrong instance or a
+        // stale/corrupt λ source. Caught here so --plan-only never
+        // advertises a plan that cannot run. Same validator as the
+        // drivers (crate::solver::scd::check_warm_lambda), with the
+        // provenance added for context.
+        if let Some(w) = &self.warm {
+            if let Err(m) = crate::solver::scd::check_warm_lambda(&w.lambda, dims.n_global) {
+                return Err(crate::error::Error::InvalidConfig(format!(
+                    "warm start ({}) {m} — wrong λ source for this instance?",
+                    w.provenance
+                )));
+            }
+            if self.config.presolve.is_some() {
+                notes.push(PlanNote::new(
+                    "presolve",
+                    "§5.3 pre-solve configured but a warm start was supplied; \
+                     the warm λ wins and the pre-solve is skipped",
+                ));
+            }
+        }
+
+        let backend = self.plan_backend(&mut notes);
+
+        if self.config.reduce == ReduceMode::Exact && dims.n_vars() >= EXACT_REDUCE_ADVISORY_VARS
+        {
+            notes.push(PlanNote::new(
+                "reduce",
+                format!(
+                    "exact reduce keeps every threshold emission for {} decision variables in \
+                     memory; consider ReduceMode::Bucketed (§5.2) at this scale",
+                    dims.n_vars()
+                ),
+            ));
+        }
+
+        let cluster = self.cluster.unwrap_or_else(Cluster::available);
+        let shards = Shards::plan(
+            dims.n_groups,
+            cluster.workers(),
+            self.source.preferred_shard_size(),
+            self.config.shard_size,
+        );
+
+        let checkpoint = match self.checkpoint {
+            CheckpointRequest::Off => None,
+            CheckpointRequest::To { path, every } => Some(CheckpointPlan { path, every }),
+            CheckpointRequest::Auto { every } => match self.source.store_dir() {
+                Some(dir) => {
+                    Some(CheckpointPlan { path: warm::default_checkpoint_path(&dir), every })
+                }
+                None => {
+                    notes.push(PlanNote::new(
+                        "checkpoint",
+                        "checkpointing requested but the source has no on-disk store \
+                         directory and no explicit path was given; checkpoints disabled \
+                         (use checkpoint_to(path, every))",
+                    ));
+                    None
+                }
+            },
+        };
+
+        Ok(SolvePlan {
+            source: self.source,
+            cluster,
+            config: self.config,
+            algorithm: self.algorithm,
+            backend,
+            shard_count: shards.count(),
+            shard_size: shards.shard_size(),
+            warm: self.warm,
+            checkpoint,
+            notes,
+        })
+    }
+
+    /// Capability-based backend selection: every unsupported request falls
+    /// back to the pure-rust map phase with a note explaining why.
+    fn plan_backend(&self, notes: &mut Vec<PlanNote>) -> PlannedBackend {
+        let dims = self.source.dims();
+        let artifacts_dir = match &self.backend {
+            Backend::Rust => return PlannedBackend::Rust,
+            Backend::Xla { artifacts_dir } => artifacts_dir.clone(),
+        };
+        if !cfg!(feature = "xla") {
+            notes.push(PlanNote::new(
+                "backend",
+                "XLA backend requested but this build has no PJRT runtime (compile with \
+                 --features xla and a vendored xla crate); using the pure-rust map phase",
+            ));
+            return PlannedBackend::Rust;
+        }
+        // the artifacts must exist before we commit the solve to them
+        if let Err(e) = crate::runtime::ArtifactManifest::load(&artifacts_dir) {
+            notes.push(PlanNote::new(
+                "backend",
+                format!(
+                    "XLA backend requested but artifacts are unavailable ({e}); \
+                     using the pure-rust map phase"
+                ),
+            ));
+            return PlannedBackend::Rust;
+        }
+        match self.algorithm {
+            Algorithm::Scd => {
+                if sparse_q::xla_identity_eligible(self.source) {
+                    PlannedBackend::XlaScdSparse { artifacts_dir }
+                } else {
+                    notes.push(PlanNote::new(
+                        "backend",
+                        format!(
+                            "the SCD XLA map phase requires a sparse identity-mapped instance \
+                             (M = K, single local cap); this instance is {} with M={} K={}; \
+                             using the pure-rust map phase",
+                            if self.source.is_dense() { "dense" } else { "sparse" },
+                            dims.n_items,
+                            dims.n_global
+                        ),
+                    ));
+                    PlannedBackend::Rust
+                }
+            }
+            Algorithm::Dd => {
+                if self.source.is_dense() {
+                    PlannedBackend::XlaDdDense { artifacts_dir }
+                } else {
+                    PlannedBackend::XlaDdSparse { artifacts_dir }
+                }
+            }
+        }
+    }
+
+    /// [`Solve::plan`] + [`SolvePlan::run`] in one call.
+    pub fn run(self) -> Result<SolveReport> {
+        self.plan()?.run()
+    }
+
+    /// [`Solve::plan`] + [`SolvePlan::run_observed`] in one call.
+    pub fn run_observed(self, observer: &mut dyn SolveObserver) -> Result<SolveReport> {
+        self.plan()?.run_observed(observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+
+    #[test]
+    fn default_plan_is_scd_rust() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(500, 6, 6).with_seed(1));
+        let plan = Solve::on(&p).cluster(Cluster::new(2)).plan().unwrap();
+        assert_eq!(plan.algorithm, Algorithm::Scd);
+        assert_eq!(plan.backend, PlannedBackend::Rust);
+        assert!(plan.notes.is_empty(), "unexpected notes: {:?}", plan.notes);
+        assert!(plan.shard_count >= 1);
+        let text = plan.to_string();
+        assert!(text.contains("algorithm=scd"), "{text}");
+        assert!(text.contains("backend=rust"), "{text}");
+    }
+
+    #[test]
+    fn xla_request_falls_back_with_reason_not_error() {
+        // dense instance, SCD, XLA backend: the old Coordinator errors on
+        // this shape; the planner must fall back to rust with a note
+        let p = SyntheticProblem::new(GeneratorConfig::dense(200, 4, 4).with_seed(2));
+        let plan = Solve::on(&p)
+            .cluster(Cluster::new(1))
+            .backend(Backend::Xla { artifacts_dir: "artifacts".into() })
+            .plan()
+            .unwrap();
+        assert_eq!(plan.backend, PlannedBackend::Rust);
+        assert!(
+            plan.notes.iter().any(|n| n.stage == "backend"),
+            "missing backend fallback note: {:?}",
+            plan.notes
+        );
+        let r = plan.run().unwrap();
+        assert!(r.is_feasible());
+    }
+
+    #[test]
+    fn warm_length_mismatch_is_a_clear_error() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 4, 4).with_seed(3));
+        let err = Solve::on(&p)
+            .cluster(Cluster::new(1))
+            .warm(WarmStart::from_lambda(vec![1.0; 3]))
+            .plan()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("4 global constraints"), "{msg}");
+        assert!(msg.contains('3'), "{msg}");
+    }
+
+    #[test]
+    fn checkpoint_auto_without_store_is_noted_and_disabled() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 4, 4).with_seed(4));
+        let plan = Solve::on(&p).cluster(Cluster::new(1)).checkpoint_auto(5).plan().unwrap();
+        assert!(plan.checkpoint.is_none());
+        assert!(plan.notes.iter().any(|n| n.stage == "checkpoint"));
+        // and the solve still runs fine
+        assert!(plan.run().unwrap().is_feasible());
+    }
+
+    #[test]
+    fn run_observed_sees_every_round() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(400, 5, 5).with_seed(5));
+        let mut hist = HistoryObserver::new();
+        let cfg = SolverConfig { track_history: false, ..Default::default() };
+        let r = Solve::on(&p)
+            .cluster(Cluster::new(2))
+            .config(cfg)
+            .run_observed(&mut hist)
+            .unwrap();
+        assert!(r.history.is_empty(), "track_history off keeps the report lean");
+        assert_eq!(hist.history.len(), r.iterations);
+    }
+}

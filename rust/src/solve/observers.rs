@@ -1,0 +1,224 @@
+//! Built-in observers for the session API.
+//!
+//! [`crate::solver::stats::SolveObserver`] is the one per-round hook; these
+//! are the stock implementations the session wires in:
+//! [`CheckpointObserver`] (periodic λ checkpoints so interrupted
+//! out-of-core solves resume), [`StopAfter`] (cooperative cancellation
+//! after a round budget) and [`ChainObserver`] (fan-out to several
+//! observers — how a user observer composes with checkpointing).
+//! History recording lives next to the trait as
+//! [`crate::solver::stats::HistoryObserver`].
+
+use crate::error::Error;
+use crate::solve::warm::write_checkpoint;
+use crate::solver::stats::{ObserverControl, RoundEvent, SolveObserver, SolveReport};
+use std::path::PathBuf;
+
+/// Writes a λ checkpoint every `every` rounds, and a final one when the
+/// solve completes. Checkpoint I/O failures never abort the solve — the
+/// first one is reported on stderr and kept in
+/// [`CheckpointObserver::last_error`].
+#[derive(Debug)]
+pub struct CheckpointObserver {
+    path: PathBuf,
+    every: usize,
+    written: usize,
+    last_error: Option<Error>,
+}
+
+impl CheckpointObserver {
+    /// Checkpoint to `path` every `every` rounds (`every = 0` means only
+    /// the final checkpoint is written).
+    pub fn new<P: Into<PathBuf>>(path: P, every: usize) -> Self {
+        Self { path: path.into(), every, written: 0, last_error: None }
+    }
+
+    /// The checkpoint file path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// How many checkpoints were written so far.
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    /// The first I/O error hit while checkpointing, if any.
+    pub fn last_error(&self) -> Option<&Error> {
+        self.last_error.as_ref()
+    }
+
+    fn write(&mut self, iter: usize, lambda: &[f64]) {
+        match write_checkpoint(&self.path, iter, lambda) {
+            Ok(()) => self.written += 1,
+            Err(e) => {
+                // a failed checkpoint must not kill a long solve, but a
+                // user who asked for resumability needs to hear about it
+                // once — otherwise the resume they rely on never exists
+                if self.last_error.is_none() {
+                    eprintln!(
+                        "warning: λ checkpoint to {} failed ({e}); solve continues \
+                         without resumability",
+                        self.path.display()
+                    );
+                    self.last_error = Some(e);
+                }
+            }
+        }
+    }
+}
+
+impl SolveObserver for CheckpointObserver {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        if self.every > 0 && (event.iter + 1) % self.every == 0 {
+            self.write(event.iter, event.lambda);
+        }
+        ObserverControl::Continue
+    }
+
+    fn on_complete(&mut self, report: &SolveReport) {
+        // `iterations` counts executed rounds; the stored iter index is the
+        // last round's 0-based index
+        let iter = report.iterations.saturating_sub(1);
+        self.write(iter, &report.lambda);
+    }
+}
+
+/// Cancels the solve after `rounds` rounds — the cooperative-cancellation
+/// primitive (also what the tests use to simulate an interrupted solve).
+#[derive(Debug, Clone)]
+pub struct StopAfter {
+    rounds: usize,
+    seen: usize,
+}
+
+impl StopAfter {
+    /// Stop once `rounds` rounds have run.
+    pub fn new(rounds: usize) -> Self {
+        Self { rounds, seen: 0 }
+    }
+
+    /// Rounds observed so far.
+    pub fn seen(&self) -> usize {
+        self.seen
+    }
+}
+
+impl SolveObserver for StopAfter {
+    fn on_round(&mut self, _event: &RoundEvent<'_>) -> ObserverControl {
+        self.seen += 1;
+        if self.seen >= self.rounds {
+            ObserverControl::Stop
+        } else {
+            ObserverControl::Continue
+        }
+    }
+}
+
+/// Fans events out to several observers. The solve stops as soon as *any*
+/// part requests it (remaining parts still see the round first).
+#[derive(Default)]
+pub struct ChainObserver<'a> {
+    parts: Vec<&'a mut dyn SolveObserver>,
+}
+
+impl<'a> ChainObserver<'a> {
+    /// Empty chain; [`ChainObserver::push`] parts in call order.
+    pub fn new() -> Self {
+        Self { parts: Vec::new() }
+    }
+
+    /// Append an observer.
+    pub fn push(&mut self, obs: &'a mut dyn SolveObserver) {
+        self.parts.push(obs);
+    }
+
+    /// True when no observers are chained.
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+}
+
+impl SolveObserver for ChainObserver<'_> {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        let mut control = ObserverControl::Continue;
+        for part in &mut self.parts {
+            if part.on_round(event) == ObserverControl::Stop {
+                control = ObserverControl::Stop;
+            }
+        }
+        control
+    }
+
+    fn on_complete(&mut self, report: &SolveReport) {
+        for part in &mut self.parts {
+            part.on_complete(report);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solve::warm::read_checkpoint;
+    use crate::solver::stats::HistoryObserver;
+
+    fn event(iter: usize, lambda: &[f64]) -> RoundEvent<'_> {
+        RoundEvent {
+            iter,
+            primal: 1.0,
+            dual: 2.0,
+            max_violation_ratio: 0.0,
+            lambda_change: 0.5,
+            wall_ms: 0.1,
+            lambda,
+        }
+    }
+
+    #[test]
+    fn stop_after_counts_rounds() {
+        let mut s = StopAfter::new(2);
+        let l = [1.0];
+        assert_eq!(s.on_round(&event(0, &l)), ObserverControl::Continue);
+        assert_eq!(s.on_round(&event(1, &l)), ObserverControl::Stop);
+        assert_eq!(s.seen(), 2);
+    }
+
+    #[test]
+    fn checkpoint_observer_writes_on_cadence() {
+        let path = std::env::temp_dir()
+            .join(format!("bskp_obs_ckpt_{}.ckpt", std::process::id()));
+        let mut c = CheckpointObserver::new(&path, 2);
+        let l = [0.5, 0.25];
+        c.on_round(&event(0, &l)); // (0+1) % 2 != 0 → no write
+        assert_eq!(c.written(), 0);
+        c.on_round(&event(1, &l));
+        assert_eq!(c.written(), 1);
+        let ckpt = read_checkpoint(&path).unwrap();
+        assert_eq!(ckpt.iter, 1);
+        assert_eq!(ckpt.lambda, vec![0.5, 0.25]);
+        assert!(c.last_error().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_errors_do_not_stop_the_solve() {
+        let mut c = CheckpointObserver::new("/nonexistent_dir_bskp/x.ckpt", 1);
+        let l = [1.0];
+        assert_eq!(c.on_round(&event(0, &l)), ObserverControl::Continue);
+        assert_eq!(c.written(), 0);
+        assert!(c.last_error().is_some());
+    }
+
+    #[test]
+    fn chain_fans_out_and_stops_on_any() {
+        let mut hist = HistoryObserver::new();
+        let mut stop = StopAfter::new(1);
+        let mut chain = ChainObserver::new();
+        chain.push(&mut hist);
+        chain.push(&mut stop);
+        let l = [1.0];
+        assert_eq!(chain.on_round(&event(0, &l)), ObserverControl::Stop);
+        assert_eq!(hist.history.len(), 1);
+    }
+}

@@ -1,0 +1,233 @@
+//! The inspectable solve plan: what will run, where, and why.
+//!
+//! [`crate::solve::Solve::plan`] resolves the requested algorithm ×
+//! backend × instance shape into a concrete execution plan *before*
+//! anything heavy happens. Unsupported combinations never error — the
+//! planner falls back to a backend that can handle the shape and records
+//! a human-readable [`PlanNote`] for every such decision (this replaces
+//! the old `Coordinator` behavior of erroring on mismatch).
+
+use crate::coordinator::Algorithm;
+use crate::error::{Error, Result};
+use crate::instance::problem::GroupSource;
+use crate::mapreduce::Cluster;
+use crate::solve::observers::{ChainObserver, CheckpointObserver};
+use crate::solve::warm::WarmStart;
+use crate::solver::config::{ReduceMode, SolverConfig};
+use crate::solver::stats::{SolveObserver, SolveReport};
+use crate::solver::{dd, scd};
+use std::fmt;
+use std::path::PathBuf;
+
+/// One planning decision worth telling the user about — most importantly
+/// the reason for every fallback from a requested-but-unsupported
+/// combination.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanNote {
+    /// What the note is about: `"backend"`, `"warm"`, `"presolve"`,
+    /// `"checkpoint"`, `"reduce"`.
+    pub stage: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl PlanNote {
+    pub(crate) fn new(stage: &'static str, message: impl Into<String>) -> Self {
+        Self { stage, message: message.into() }
+    }
+}
+
+impl fmt::Display for PlanNote {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "note[{}]: {}", self.stage, self.message)
+    }
+}
+
+/// The concrete map-phase backend the planner chose (the requested
+/// [`crate::coordinator::Backend`] resolved against build features,
+/// artifact availability and instance shape).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlannedBackend {
+    /// Pure-rust greedy mappers (handles every instance shape).
+    Rust,
+    /// SCD map phase inside the `scd_sparse` AOT artifact (sparse
+    /// identity-mapped instances: `M = K`, single local cap).
+    XlaScdSparse {
+        /// Directory holding `manifest.txt` + `*.hlo.txt`.
+        artifacts_dir: PathBuf,
+    },
+    /// DD evaluation through the dense XLA artifact.
+    XlaDdDense {
+        /// Directory holding `manifest.txt` + `*.hlo.txt`.
+        artifacts_dir: PathBuf,
+    },
+    /// DD evaluation through the sparse XLA artifact.
+    XlaDdSparse {
+        /// Directory holding `manifest.txt` + `*.hlo.txt`.
+        artifacts_dir: PathBuf,
+    },
+}
+
+impl PlannedBackend {
+    /// Short name for logs and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannedBackend::Rust => "rust",
+            PlannedBackend::XlaScdSparse { .. } => "xla-scd-sparse",
+            PlannedBackend::XlaDdDense { .. } => "xla-dd-dense",
+            PlannedBackend::XlaDdSparse { .. } => "xla-dd-sparse",
+        }
+    }
+}
+
+/// Planned periodic λ checkpointing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointPlan {
+    /// Checkpoint file (written atomically; see [`crate::solve::warm`]).
+    pub path: PathBuf,
+    /// Write every this many rounds (a final checkpoint is always written
+    /// on completion).
+    pub every: usize,
+}
+
+/// A fully resolved solve: inspect it, print it, then [`SolvePlan::run`]
+/// it.
+pub struct SolvePlan<'a> {
+    pub(crate) source: &'a dyn GroupSource,
+    /// Worker pool the map phase will use.
+    pub cluster: Cluster,
+    /// Solver parameters (as passed; warm start overrides its `lambda0`).
+    pub config: SolverConfig,
+    /// DD or SCD.
+    pub algorithm: Algorithm,
+    /// The chosen map-phase backend.
+    pub backend: PlannedBackend,
+    /// Number of map shards the solve will dispatch per round.
+    pub shard_count: usize,
+    /// Groups per map shard.
+    pub shard_size: usize,
+    /// Warm-start multipliers, if any (already length-checked against `K`).
+    pub warm: Option<WarmStart>,
+    /// Periodic λ checkpointing, if enabled and resolvable.
+    pub checkpoint: Option<CheckpointPlan>,
+    /// Every fallback / advisory decision the planner made.
+    pub notes: Vec<PlanNote>,
+}
+
+impl fmt::Display for SolvePlan<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims = self.source.dims();
+        let algo = match self.algorithm {
+            Algorithm::Scd => "scd",
+            Algorithm::Dd => "dd",
+        };
+        let reduce = match self.config.reduce {
+            ReduceMode::Exact => "exact".to_string(),
+            ReduceMode::Bucketed { delta } => format!("bucketed(Δ={delta:e})"),
+        };
+        writeln!(
+            f,
+            "plan: algorithm={algo} backend={} reduce={reduce} shards={}×{} workers={} (N={} M={} K={})",
+            self.backend.name(),
+            self.shard_count,
+            self.shard_size,
+            self.cluster.workers(),
+            dims.n_groups,
+            dims.n_items,
+            dims.n_global,
+        )?;
+        match &self.warm {
+            Some(w) => writeln!(f, "  λ0: warm start from {}", w.provenance)?,
+            None => match &self.config.presolve {
+                Some(p) => writeln!(f, "  λ0: §5.3 pre-solve on {} sampled groups", p.sample)?,
+                None => writeln!(f, "  λ0: cold start at {}", self.config.lambda0)?,
+            },
+        }
+        if let Some(c) = &self.checkpoint {
+            writeln!(f, "  checkpoint: {} every {} rounds", c.path.display(), c.every)?;
+        }
+        for note in &self.notes {
+            writeln!(f, "  {note}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<'a> SolvePlan<'a> {
+    /// The SCD reduce mode the solve will use (from the config; exposed
+    /// so the plan is self-describing).
+    pub fn reduce(&self) -> ReduceMode {
+        self.config.reduce
+    }
+
+    /// Execute the plan.
+    ///
+    /// Planning already verified backend capability (shape, build
+    /// features, artifact presence), so dispatch itself cannot mismatch;
+    /// what can still fail here are genuine runtime faults — PJRT
+    /// initialization, artifacts deleted since planning, I/O — which
+    /// surface as [`crate::error::Error::Runtime`], not as opaque
+    /// shape errors.
+    pub fn run(self) -> Result<SolveReport> {
+        self.run_inner(None)
+    }
+
+    /// Execute the plan with a caller observer receiving per-round events
+    /// (composed with the plan's own checkpoint observer, if any).
+    pub fn run_observed(self, observer: &mut dyn SolveObserver) -> Result<SolveReport> {
+        self.run_inner(Some(observer))
+    }
+
+    fn run_inner(self, user: Option<&mut dyn SolveObserver>) -> Result<SolveReport> {
+        let mut ckpt =
+            self.checkpoint.as_ref().map(|c| CheckpointObserver::new(c.path.clone(), c.every));
+        let mut chain = ChainObserver::new();
+        if let Some(c) = ckpt.as_mut() {
+            chain.push(c);
+        }
+        if let Some(u) = user {
+            chain.push(u);
+        }
+        let observer: Option<&mut dyn SolveObserver> =
+            if chain.is_empty() { None } else { Some(&mut chain) };
+
+        let init = self.warm.as_ref().map(|w| w.lambda.as_slice());
+        let (source, config, cluster) = (self.source, &self.config, &self.cluster);
+        match (self.algorithm, &self.backend) {
+            (Algorithm::Scd, PlannedBackend::Rust) => {
+                scd::solve_scd_driven(source, config, cluster, init, observer)
+            }
+            (Algorithm::Dd, PlannedBackend::Rust) => {
+                dd::solve_dd_driven(source, config, cluster, init, observer)
+            }
+            (Algorithm::Scd, PlannedBackend::XlaScdSparse { artifacts_dir }) => {
+                let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;
+                let runtime = crate::runtime::Runtime::cpu()?;
+                crate::runtime::solve_scd_xla_sparse_driven(
+                    source, config, cluster, &runtime, &manifest, init, observer,
+                )
+            }
+            (Algorithm::Dd, PlannedBackend::XlaDdDense { artifacts_dir }) => {
+                let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;
+                let runtime = crate::runtime::Runtime::cpu()?;
+                let eval = crate::runtime::XlaDenseEvaluator::new(source, &runtime, &manifest)?;
+                dd::solve_dd_with_driven(source, &eval, config, cluster, init, observer)
+            }
+            (Algorithm::Dd, PlannedBackend::XlaDdSparse { artifacts_dir }) => {
+                let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;
+                let runtime = crate::runtime::Runtime::cpu()?;
+                let eval = crate::runtime::evaluator::XlaSparseEvaluator::new(
+                    source, &runtime, &manifest,
+                )?;
+                dd::solve_dd_with_driven(source, &eval, config, cluster, init, observer)
+            }
+            // the planner never produces these pairings; plan.backend is
+            // pub, so a hand-mutated plan must fail loudly instead of
+            // silently running the wrong algorithm
+            (algo, backend) => Err(Error::InvalidConfig(format!(
+                "plan pairs {algo:?} with backend {}, which cannot run it",
+                backend.name()
+            ))),
+        }
+    }
+}

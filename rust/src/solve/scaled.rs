@@ -1,0 +1,119 @@
+//! Budget-perturbed view of an instance.
+//!
+//! The daily production pattern is "same items, new budgets": campaign
+//! budgets and prices drift a few percent between runs. [`ScaledBudgets`]
+//! wraps any [`GroupSource`] and replaces only `B_k` — group data is
+//! untouched and still streams from the original source (in-memory or
+//! out-of-core) — which is exactly the shape a warm-started re-solve
+//! consumes.
+
+use crate::error::{Error, Result};
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{Dims, GroupBuf, GroupSource};
+
+/// A [`GroupSource`] with its global budgets scaled (uniformly or per
+/// constraint). Everything else delegates to the wrapped source.
+pub struct ScaledBudgets<'a> {
+    inner: &'a dyn GroupSource,
+    budgets: Vec<f64>,
+}
+
+impl<'a> ScaledBudgets<'a> {
+    /// Scale every budget by `factor` (> 0).
+    pub fn uniform(inner: &'a dyn GroupSource, factor: f64) -> Result<Self> {
+        if !(factor > 0.0) || !factor.is_finite() {
+            return Err(Error::InvalidConfig(format!(
+                "budget scale factor must be finite and > 0, got {factor}"
+            )));
+        }
+        let budgets = inner.budgets().iter().map(|b| b * factor).collect();
+        Ok(Self { inner, budgets })
+    }
+
+    /// Scale budget `k` by `factors[k]` (all > 0; length must be `K`).
+    pub fn per_constraint(inner: &'a dyn GroupSource, factors: &[f64]) -> Result<Self> {
+        let k = inner.dims().n_global;
+        if factors.len() != k {
+            return Err(Error::InvalidConfig(format!(
+                "expected {k} budget factors, got {}",
+                factors.len()
+            )));
+        }
+        if let Some(bad) = factors.iter().find(|f| !(**f > 0.0) || !f.is_finite()) {
+            return Err(Error::InvalidConfig(format!(
+                "budget factors must be finite and > 0, got {bad}"
+            )));
+        }
+        let budgets = inner.budgets().iter().zip(factors).map(|(b, f)| b * f).collect();
+        Ok(Self { inner, budgets })
+    }
+
+    /// The wrapped source.
+    pub fn inner(&self) -> &'a dyn GroupSource {
+        self.inner
+    }
+}
+
+impl GroupSource for ScaledBudgets<'_> {
+    fn dims(&self) -> Dims {
+        self.inner.dims()
+    }
+
+    fn is_dense(&self) -> bool {
+        self.inner.is_dense()
+    }
+
+    fn locals(&self) -> &LaminarProfile {
+        self.inner.locals()
+    }
+
+    fn budgets(&self) -> &[f64] {
+        &self.budgets
+    }
+
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+        self.inner.fill_group(i, buf)
+    }
+
+    fn preferred_shard_size(&self) -> Option<usize> {
+        self.inner.preferred_shard_size()
+    }
+
+    fn store_dir(&self) -> Option<std::path::PathBuf> {
+        self.inner.store_dir()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+
+    #[test]
+    fn scales_budgets_only() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 4, 4).with_seed(3));
+        let s = ScaledBudgets::uniform(&p, 1.25).unwrap();
+        assert_eq!(s.dims(), p.dims());
+        assert_eq!(s.is_dense(), p.is_dense());
+        for (a, b) in s.budgets().iter().zip(p.budgets()) {
+            assert!((a - b * 1.25).abs() < 1e-12);
+        }
+        let mut b1 = GroupBuf::new(p.dims(), p.is_dense());
+        let mut b2 = GroupBuf::new(p.dims(), p.is_dense());
+        p.fill_group(7, &mut b1);
+        s.fill_group(7, &mut b2);
+        assert_eq!(b1.profits, b2.profits);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn per_constraint_checks_inputs() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(50, 3, 3).with_seed(1));
+        assert!(ScaledBudgets::per_constraint(&p, &[1.0, 1.0]).is_err());
+        assert!(ScaledBudgets::per_constraint(&p, &[1.0, -1.0, 1.0]).is_err());
+        assert!(ScaledBudgets::uniform(&p, 0.0).is_err());
+        assert!(ScaledBudgets::uniform(&p, f64::NAN).is_err());
+        let s = ScaledBudgets::per_constraint(&p, &[0.9, 1.0, 1.1]).unwrap();
+        assert!((s.budgets()[2] - p.budgets()[2] * 1.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,261 @@
+//! Warm starts and λ checkpoint files.
+//!
+//! Production re-solves the same instance daily as budgets and prices
+//! drift; near-optimal λ varies smoothly with the budgets (Nakamura et
+//! al.'s statistical-mechanics analysis of multi-dimensional knapsacks),
+//! so yesterday's `λ*` is an excellent start for today's solve. A
+//! [`WarmStart`] carries such a vector — taken from a prior
+//! [`SolveReport`], a checkpoint file, or raw numbers — into
+//! [`crate::solve::Solve`].
+//!
+//! The checkpoint file is a tiny self-describing text format (the offline
+//! registry has no serde), XXH64-checksummed and written atomically
+//! (temp file + rename), so a checkpoint interrupted mid-write can never
+//! be mistaken for a valid one:
+//!
+//! ```text
+//! bskp-lambda v1
+//! iter 12
+//! k 3
+//! l 1.0
+//! l 0.0
+//! l 0.35
+//! sum 1f2e3d4c5b6a7988
+//! ```
+
+use crate::error::{Error, Result};
+use crate::instance::store::checksum::xxh64;
+use crate::solver::stats::SolveReport;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Magic first line of a checkpoint file.
+const MAGIC: &str = "bskp-lambda v1";
+/// Seed for the checkpoint checksum (any fixed value works; distinct from
+/// the shard-store seed so a file can't masquerade as both).
+const SUM_SEED: u64 = 0x6c61_6d62_6461_3031; // "lambda01"
+
+/// A λ vector to seed a solve with, plus human-readable provenance (shown
+/// in the plan summary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WarmStart {
+    /// The multipliers to start from (length must equal the instance's
+    /// `K`; checked by [`crate::solve::Solve::plan`]).
+    pub lambda: Vec<f64>,
+    /// Where the vector came from, for plan notes (e.g. `"checkpoint
+    /// /data/store/lambda.ckpt (round 12)"`).
+    pub provenance: String,
+}
+
+impl WarmStart {
+    /// Warm-start from a raw λ vector.
+    pub fn from_lambda(lambda: Vec<f64>) -> Self {
+        Self { lambda, provenance: "caller-supplied λ".into() }
+    }
+
+    /// Warm-start from a finished solve's final multipliers — the
+    /// `resolve`-with-changed-budgets path.
+    pub fn from_report(report: &SolveReport) -> Self {
+        Self {
+            lambda: report.lambda.clone(),
+            provenance: format!("prior solve ({} rounds)", report.iterations),
+        }
+    }
+
+    /// Warm-start from a checkpoint file written by
+    /// [`write_checkpoint`] / [`crate::solve::CheckpointObserver`].
+    pub fn from_checkpoint<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let ckpt = read_checkpoint(path)?;
+        Ok(Self {
+            lambda: ckpt.lambda,
+            provenance: format!("checkpoint {} (round {})", path.display(), ckpt.iter),
+        })
+    }
+}
+
+/// A parsed checkpoint: the round it was taken after and the multipliers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Iteration index the λ vector was adopted at (0-based).
+    pub iter: usize,
+    /// The multipliers `λ^{iter+1}`.
+    pub lambda: Vec<f64>,
+}
+
+/// The canonical checkpoint file name inside a shard-store directory.
+pub const CHECKPOINT_FILE: &str = "lambda.ckpt";
+
+/// Default checkpoint path for a source that lives in `store_dir`.
+pub fn default_checkpoint_path(store_dir: &Path) -> PathBuf {
+    store_dir.join(CHECKPOINT_FILE)
+}
+
+fn body_text(iter: usize, lambda: &[f64]) -> String {
+    let mut body = String::with_capacity(24 * lambda.len() + 64);
+    let _ = writeln!(body, "iter {iter}");
+    let _ = writeln!(body, "k {}", lambda.len());
+    for l in lambda {
+        // {:?} is rust's shortest-roundtrip float formatting: the parsed
+        // value is bit-identical to the written one
+        let _ = writeln!(body, "l {l:?}");
+    }
+    body
+}
+
+/// Write a λ checkpoint atomically: the content is written and fsynced to
+/// a process-unique temp file, then renamed into place — readers only
+/// ever see complete files, and concurrent writers to the same store
+/// cannot interleave (last completed rename wins, each with valid
+/// content).
+pub fn write_checkpoint(path: &Path, iter: usize, lambda: &[f64]) -> Result<()> {
+    if let Some(bad) = lambda.iter().find(|x| !x.is_finite()) {
+        return Err(Error::InvalidConfig(format!("refusing to checkpoint non-finite λ = {bad}")));
+    }
+    let body = body_text(iter, lambda);
+    let sum = xxh64(body.as_bytes(), SUM_SEED);
+    let text = format!("{MAGIC}\n{body}sum {sum:016x}\n");
+    // unique per process *and* per call, so concurrent sessions (across
+    // or within a process) each stage their own file; the final rename
+    // is atomic and last-writer-wins with valid content
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("ckpt.tmp.{}.{seq}", std::process::id()));
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+fn malformed(path: &Path, why: impl std::fmt::Display) -> Error {
+    Error::InvalidConfig(format!("malformed checkpoint {}: {why}", path.display()))
+}
+
+/// Read and verify a λ checkpoint written by [`write_checkpoint`].
+pub fn read_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::InvalidConfig(format!("cannot read checkpoint {}: {e}", path.display()))
+    })?;
+    let mut lines = text.lines();
+    if lines.next() != Some(MAGIC) {
+        return Err(malformed(path, format!("missing {MAGIC:?} header")));
+    }
+    let mut iter: Option<usize> = None;
+    let mut k: Option<usize> = None;
+    let mut lambda = Vec::new();
+    let mut sum: Option<u64> = None;
+    // the checksum covers the *literal* body lines (LF-normalized), not a
+    // canonical re-serialization, so any writer whose float formatting
+    // differs from rust's `{:?}` (e.g. the Python mirror's `repr`) still
+    // produces checkpoints this reader accepts
+    let mut body = String::new();
+    for line in lines {
+        let trimmed = line.trim();
+        if let Some(v) = trimmed.strip_prefix("sum ") {
+            sum =
+                Some(u64::from_str_radix(v, 16).map_err(|_| malformed(path, "bad checksum"))?);
+            break;
+        }
+        body.push_str(line);
+        body.push('\n');
+        let (key, val) = trimmed
+            .split_once(' ')
+            .ok_or_else(|| malformed(path, format!("bad line {trimmed:?}")))?;
+        match key {
+            "iter" => {
+                iter = Some(val.parse().map_err(|_| malformed(path, "bad iter"))?);
+            }
+            "k" => {
+                k = Some(val.parse().map_err(|_| malformed(path, "bad k"))?);
+            }
+            "l" => {
+                lambda.push(val.parse().map_err(|_| malformed(path, "bad λ value"))?);
+            }
+            other => return Err(malformed(path, format!("unknown key {other:?}"))),
+        }
+    }
+    let iter = iter.ok_or_else(|| malformed(path, "missing iter"))?;
+    let k = k.ok_or_else(|| malformed(path, "missing k"))?;
+    if lambda.len() != k {
+        return Err(malformed(path, format!("declared k={k} but found {} λ lines", lambda.len())));
+    }
+    // same λ domain rule as the drivers (finite, ≥ 0) — one validator,
+    // so the reader and initial_lambda can never drift
+    if let Err(m) = crate::solver::scd::check_warm_lambda(&lambda, k) {
+        return Err(malformed(path, format!("λ {m}")));
+    }
+    let sum = sum.ok_or_else(|| malformed(path, "missing checksum"))?;
+    let expect = xxh64(body.as_bytes(), SUM_SEED);
+    if sum != expect {
+        return Err(malformed(
+            path,
+            format!("checksum mismatch (file {sum:016x}, computed {expect:016x})"),
+        ));
+    }
+    Ok(Checkpoint { iter, lambda })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bskp_warm_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_exact() {
+        let path = tmp("roundtrip.ckpt");
+        let lambda = vec![0.0, 1.0, 0.123456789012345, 1e-12, 3.5e8];
+        write_checkpoint(&path, 7, &lambda).unwrap();
+        let ckpt = read_checkpoint(&path).unwrap();
+        assert_eq!(ckpt.iter, 7);
+        assert_eq!(ckpt.lambda, lambda); // bit-exact via {:?} round-trip
+        let warm = WarmStart::from_checkpoint(&path).unwrap();
+        assert_eq!(warm.lambda, lambda);
+        assert!(warm.provenance.contains("round 7"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let path = tmp("corrupt.ckpt");
+        write_checkpoint(&path, 3, &[1.0, 2.0]).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replace("l 1.0", "l 1.5");
+        std::fs::write(&path, text).unwrap();
+        let err = read_checkpoint(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "unexpected error: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_and_missing_files_are_clean_errors() {
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, "not a checkpoint\n").unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        assert!(read_checkpoint(Path::new("/nonexistent/bskp.ckpt")).is_err());
+        assert!(WarmStart::from_checkpoint("/nonexistent/bskp.ckpt").is_err());
+    }
+
+    #[test]
+    fn rejects_negative_and_nonfinite_lambda() {
+        let path = tmp("neg.ckpt");
+        assert!(write_checkpoint(&path, 0, &[f64::NAN]).is_err());
+        // hand-craft a negative λ with a valid checksum: reader must still
+        // refuse it
+        let body = "iter 0\nk 1\nl -1.0\n";
+        let sum = xxh64(body.as_bytes(), SUM_SEED);
+        std::fs::write(&path, format!("{MAGIC}\n{body}sum {sum:016x}\n")).unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -50,7 +50,7 @@ impl Default for PresolveConfig {
 }
 
 /// Full solver configuration shared by DD and SCD.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SolverConfig {
     /// Iteration cap `T`.
     pub max_iters: usize,
@@ -80,7 +80,10 @@ pub struct SolverConfig {
     /// make the undamped Jacobi-style update 2-cycle between extremes).
     pub damping: Option<f64>,
     /// Record per-iteration stats (primal/dual/violation) in the report.
-    /// Costs one extra greedy evaluation per group per SCD round.
+    /// Kept for the thin `solve_scd`/`solve_dd` wrappers; the session API
+    /// expresses the same thing (and more) through
+    /// [`crate::solver::stats::SolveObserver`] — history recording is the
+    /// built-in [`crate::solver::stats::HistoryObserver`].
     pub track_history: bool,
 }
 
@@ -167,8 +170,6 @@ impl SolverConfig {
         self
     }
 }
-
-pub use PresolveConfig as Presolve;
 
 #[cfg(test)]
 mod tests {

@@ -17,7 +17,9 @@ use crate::mapreduce::Cluster;
 use crate::solver::config::SolverConfig;
 use crate::solver::postprocess;
 use crate::solver::rounds::{evaluation_round, RoundAgg, RustEvaluator, ShardEvaluator};
-use crate::solver::stats::{max_violation_ratio, IterStat, SolveReport};
+use crate::solver::stats::{
+    max_violation_ratio, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+};
 use crate::util::rel_change;
 
 /// Solve with dual descent using the pure-rust evaluator.
@@ -30,6 +32,20 @@ pub fn solve_dd<S: GroupSource + ?Sized>(
     solve_dd_with(source, &eval, config, cluster)
 }
 
+/// [`solve_dd`] with the session-API hooks: an optional warm-start λ
+/// (overrides `lambda0` *and* pre-solving) and an optional per-round
+/// [`SolveObserver`] (progress, checkpoints, cancellation).
+pub fn solve_dd_driven<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
+    let eval = RustEvaluator::new(source);
+    solve_dd_with_driven(source, &eval, config, cluster, init, observer)
+}
+
 /// Solve with dual descent using a caller-supplied evaluator (e.g. the
 /// XLA-backed dense path).
 pub fn solve_dd_with<S: GroupSource + ?Sized, E: ShardEvaluator>(
@@ -37,6 +53,19 @@ pub fn solve_dd_with<S: GroupSource + ?Sized, E: ShardEvaluator>(
     evaluator: &E,
     config: &SolverConfig,
     cluster: &Cluster,
+) -> Result<SolveReport> {
+    solve_dd_with_driven(source, evaluator, config, cluster, None, None)
+}
+
+/// The full dual-descent driver: caller-supplied evaluator, optional
+/// warm-start λ and optional per-round observer.
+pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
+    source: &S,
+    evaluator: &E,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    init: Option<&[f64]>,
+    mut observer: Option<&mut dyn SolveObserver>,
 ) -> Result<SolveReport> {
     config.validate()?;
     source.validate()?;
@@ -52,14 +81,12 @@ pub fn solve_dd_with<S: GroupSource + ?Sized, E: ShardEvaluator>(
         config.shard_size,
     );
 
-    let mut lambda = match &config.presolve {
-        Some(p) => crate::solver::presolve::presolve_lambda(source, p, config, cluster)?,
-        None => vec![config.lambda0; dims.n_global],
-    };
+    let mut lambda = crate::solver::scd::initial_lambda(source, config, cluster, init)?;
 
     let mut history = Vec::new();
     let mut last_agg: Option<RoundAgg> = None;
     let mut converged = false;
+    let mut stopped = false;
     let mut iterations = 0;
 
     for t in 0..config.max_iters {
@@ -74,25 +101,43 @@ pub fn solve_dd_with<S: GroupSource + ?Sized, E: ShardEvaluator>(
         }
         let residual = rel_change(&new_lambda, &lambda);
         iterations = t + 1;
+        let event = RoundEvent {
+            iter: t,
+            primal: agg.primal.value(),
+            dual: agg.dual_value(&lambda, &budgets),
+            max_violation_ratio: max_violation_ratio(&consumption, &budgets),
+            lambda_change: residual,
+            wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            lambda: &new_lambda,
+        };
         if config.track_history {
-            history.push(IterStat {
-                iter: t,
-                primal: agg.primal.value(),
-                dual: agg.dual_value(&lambda, &budgets),
-                max_violation_ratio: max_violation_ratio(&consumption, &budgets),
-                lambda_change: residual,
-                wall_ms: it0.elapsed().as_secs_f64() * 1e3,
-            });
+            history.push(event.to_iter_stat());
         }
         last_agg = Some(agg);
+        let stop = match observer.as_mut() {
+            Some(obs) => obs.on_round(&event) == ObserverControl::Stop,
+            None => false,
+        };
         lambda = new_lambda;
+        if stop {
+            stopped = true;
+            break;
+        }
         if residual < config.tol {
             converged = true;
             break;
         }
     }
 
-    let agg = last_agg.expect("max_iters ≥ 1 ran at least one round");
+    // DD's recorded aggregate is for the λ the round *started* from; on
+    // cancellation re-evaluate at the adopted λ so the report (and the
+    // feasibility decision post-processing makes) match report.lambda —
+    // the same self-consistency contract the SCD drivers keep
+    let agg = if stopped {
+        evaluation_round(evaluator, shards, dims.n_global, &lambda, cluster)
+    } else {
+        last_agg.expect("max_iters ≥ 1 ran at least one round")
+    };
     let mut report = SolveReport {
         dual_value: agg.dual_value(&lambda, &budgets),
         primal_value: agg.primal.value(),
@@ -110,6 +155,9 @@ pub fn solve_dd_with<S: GroupSource + ?Sized, E: ShardEvaluator>(
         postprocess::enforce_feasibility(source, &mut report, cluster)?;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Some(obs) = observer.as_mut() {
+        obs.on_complete(&report);
+    }
     Ok(report)
 }
 

@@ -29,8 +29,49 @@ use crate::solver::greedy::{greedy_select, greedy_select_warm, reset_order, Grou
 use crate::solver::postprocess;
 use crate::solver::rounds::RoundAgg;
 use crate::solver::sparse_q::{self, SparseQScratch};
-use crate::solver::stats::{max_violation_ratio, IterStat, SolveReport};
+use crate::solver::stats::{
+    max_violation_ratio, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+};
 use crate::util::rel_change;
+
+/// The one warm-start λ validator (length, finiteness, non-negativity) —
+/// shared by [`initial_lambda`] and the session planner so the two stages
+/// can never drift. Returns the defect description; callers add context.
+pub(crate) fn check_warm_lambda(l: &[f64], kk: usize) -> std::result::Result<(), String> {
+    if l.len() != kk {
+        return Err(format!(
+            "has {} multipliers but the instance has {kk} global constraints",
+            l.len()
+        ));
+    }
+    if let Some(bad) = l.iter().find(|x| !x.is_finite() || **x < 0.0) {
+        return Err(format!("must be finite and ≥ 0, got {bad}"));
+    }
+    Ok(())
+}
+
+/// Resolve the starting multipliers shared by every driver: an explicit
+/// warm-start vector wins over §5.3 pre-solving, which wins over the cold
+/// `lambda0` fill. Errors when the warm vector fails [`check_warm_lambda`].
+pub(crate) fn initial_lambda<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    init: Option<&[f64]>,
+) -> crate::error::Result<Vec<f64>> {
+    let kk = source.dims().n_global;
+    match init {
+        Some(l) => {
+            check_warm_lambda(l, kk)
+                .map_err(|m| crate::error::Error::InvalidConfig(format!("warm-start λ {m}")))?;
+            Ok(l.to_vec())
+        }
+        None => match &config.presolve {
+            Some(p) => crate::solver::presolve::presolve_lambda(source, p, config, cluster),
+            None => Ok(vec![config.lambda0; kk]),
+        },
+    }
+}
 
 /// The exact Algorithm-4 reduce: the minimal threshold `v` such that
 /// `Σ_{v1 ≥ v} v2 ≤ budget`, i.e. the smallest emitted candidate that keeps
@@ -122,6 +163,19 @@ pub fn solve_scd<S: GroupSource + ?Sized>(
     config: &SolverConfig,
     cluster: &Cluster,
 ) -> Result<SolveReport> {
+    solve_scd_driven(source, config, cluster, None, None)
+}
+
+/// [`solve_scd`] with the session-API hooks: an optional warm-start λ
+/// (overrides `lambda0` *and* pre-solving) and an optional per-round
+/// [`SolveObserver`] (progress, checkpoints, cancellation).
+pub fn solve_scd_driven<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    init: Option<&[f64]>,
+    mut observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
     config.validate()?;
     source.validate()?;
     let t0 = std::time::Instant::now();
@@ -138,10 +192,7 @@ pub fn solve_scd<S: GroupSource + ?Sized>(
     );
     let sparse_q = if config.use_sparse_fast_path { sparse_q::eligible(source) } else { None };
 
-    let mut lambda = match &config.presolve {
-        Some(p) => crate::solver::presolve::presolve_lambda(source, p, config, cluster)?,
-        None => vec![config.lambda0; kk],
-    };
+    let mut lambda = initial_lambda(source, config, cluster, init)?;
 
     // under-relaxation: dense instances couple every coordinate with every
     // other (an item consumes all K knapsacks), so the undamped synchronous
@@ -206,15 +257,26 @@ pub fn solve_scd<S: GroupSource + ?Sized>(
 
         iterations = t + 1;
         let residual = rel_change(&new_lambda, &lambda);
+        let event = RoundEvent {
+            iter: t,
+            primal: round.primal.value(),
+            dual: round.dual_value(&lambda, &budgets),
+            max_violation_ratio: max_violation_ratio(&consumption, &budgets),
+            lambda_change: residual,
+            wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            lambda: &new_lambda,
+        };
         if config.track_history {
-            history.push(IterStat {
-                iter: t,
-                primal: round.primal.value(),
-                dual: round.dual_value(&lambda, &budgets),
-                max_violation_ratio: max_violation_ratio(&consumption, &budgets),
-                lambda_change: residual,
-                wall_ms: it0.elapsed().as_secs_f64() * 1e3,
-            });
+            history.push(event.to_iter_stat());
+        }
+        if let Some(obs) = observer.as_mut() {
+            if obs.on_round(&event) == ObserverControl::Stop {
+                // adopt the round's update so a checkpoint written from
+                // this event resumes exactly where the solve stopped
+                lambda = new_lambda;
+                final_agg = Some(round);
+                break;
+            }
         }
         final_agg = Some(round);
 
@@ -284,6 +346,9 @@ pub fn solve_scd<S: GroupSource + ?Sized>(
         postprocess::enforce_feasibility(source, &mut report, cluster)?;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Some(obs) = observer.as_mut() {
+        obs.on_complete(&report);
+    }
     Ok(report)
 }
 

@@ -40,6 +40,15 @@ pub fn eligible<S: GroupSource + ?Sized>(source: &S) -> Option<u32> {
     Some(c.cap)
 }
 
+/// Whether `source` is the shape the `scd_sparse` XLA artifact compiles
+/// for: Algorithm-5 eligible *and* identity-mapped (`M = K`). The single
+/// gate shared by the session planner and the legacy `Coordinator` so the
+/// two dispatch paths can never drift.
+pub fn xla_identity_eligible<S: GroupSource + ?Sized>(source: &S) -> bool {
+    let dims = source.dims();
+    eligible(source).is_some() && dims.n_items == dims.n_global
+}
+
 /// The Algorithm-5 map step for one group: emit `(k, v1, v2)` candidate
 /// triples via `emit`. `q` is the local cap.
 ///

@@ -1,5 +1,7 @@
 //! Solve reports: the quantities the paper evaluates (primal value, duality
-//! gap, constraint-violation ratios, iteration counts).
+//! gap, constraint-violation ratios, iteration counts) — plus the
+//! [`SolveObserver`] trait the iterative solvers report per-round events
+//! through (the session API's progress/cancellation/checkpoint hook).
 
 /// One iteration's tracked statistics (Figures 5 & 6 plot these series).
 #[derive(Debug, Clone)]
@@ -80,6 +82,101 @@ impl SolveReport {
     }
 }
 
+/// One round of an iterative solve, as reported to a [`SolveObserver`].
+///
+/// `primal`/`dual`/`max_violation_ratio` are evaluated at the multipliers
+/// the round *started* from (`λ^t`); [`RoundEvent::lambda`] is the updated
+/// vector the solver is about to adopt (`λ^{t+1}`) — the right thing to
+/// checkpoint, and what a warm start should resume from.
+#[derive(Debug)]
+pub struct RoundEvent<'a> {
+    /// Iteration index (0-based).
+    pub iter: usize,
+    /// Primal objective at `λ^t`.
+    pub primal: f64,
+    /// Dual objective `g(λ^t)`.
+    pub dual: f64,
+    /// `max_k max(0, R_k − B_k)/B_k` at `λ^t`.
+    pub max_violation_ratio: f64,
+    /// Convergence residual `max_k |Δλ_k| / max(1, |λ_k|)`.
+    pub lambda_change: f64,
+    /// Wall time of the round, milliseconds.
+    pub wall_ms: f64,
+    /// The updated multipliers `λ^{t+1}`.
+    pub lambda: &'a [f64],
+}
+
+impl RoundEvent<'_> {
+    /// Copy the round into an owned [`IterStat`] (what history recording
+    /// stores).
+    pub fn to_iter_stat(&self) -> IterStat {
+        IterStat {
+            iter: self.iter,
+            primal: self.primal,
+            dual: self.dual,
+            max_violation_ratio: self.max_violation_ratio,
+            lambda_change: self.lambda_change,
+            wall_ms: self.wall_ms,
+        }
+    }
+}
+
+/// What an observer tells the solver to do after a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObserverControl {
+    /// Keep iterating.
+    Continue,
+    /// Stop after this round. The solver adopts the round's `λ^{t+1}`,
+    /// reports `converged = false`, and still runs its final evaluation
+    /// (and post-processing) so the returned report is self-consistent.
+    Stop,
+}
+
+/// Per-round hook into an iterative solve (DD, SCD, or the XLA-backed SCD).
+///
+/// Observers subsume the old `track_history` bool: history recording is
+/// just [`HistoryObserver`], and the same mechanism carries progress
+/// display, periodic λ checkpointing
+/// ([`crate::solve::CheckpointObserver`]) and cooperative cancellation.
+pub trait SolveObserver {
+    /// Called once per iteration, after the leader computed `λ^{t+1}` but
+    /// before the next map round. Return [`ObserverControl::Stop`] to
+    /// cancel the solve.
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        let _ = event;
+        ObserverControl::Continue
+    }
+
+    /// Called once with the final report (after the closing evaluation and
+    /// any §5.4 post-processing), whether the solve converged, hit its
+    /// iteration cap, or was cancelled.
+    fn on_complete(&mut self, report: &SolveReport) {
+        let _ = report;
+    }
+}
+
+/// Built-in observer that records the per-iteration series — the observer
+/// form of `SolverConfig::track_history`.
+#[derive(Debug, Default)]
+pub struct HistoryObserver {
+    /// The recorded series, one entry per round.
+    pub history: Vec<IterStat>,
+}
+
+impl HistoryObserver {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SolveObserver for HistoryObserver {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        self.history.push(event.to_iter_stat());
+        ObserverControl::Continue
+    }
+}
+
 /// Relative violation tolerance: consumption within `1 + 1e-9` of budget
 /// counts as feasible (guards f32-accumulation noise at N=1e8 scale).
 const REL_EPS: f64 = 1e-9;
@@ -132,6 +229,27 @@ mod tests {
         r.consumption = vec![10.0, 9.9999];
         assert!(r.is_feasible());
         assert_eq!(r.max_violation_ratio(), 0.0);
+    }
+
+    #[test]
+    fn history_observer_records_rounds() {
+        let mut obs = HistoryObserver::new();
+        let lambda = vec![0.5, 0.25];
+        for t in 0..3 {
+            let ev = RoundEvent {
+                iter: t,
+                primal: t as f64,
+                dual: t as f64 + 1.0,
+                max_violation_ratio: 0.0,
+                lambda_change: 0.1,
+                wall_ms: 1.0,
+                lambda: &lambda,
+            };
+            assert_eq!(obs.on_round(&ev), ObserverControl::Continue);
+        }
+        assert_eq!(obs.history.len(), 3);
+        assert_eq!(obs.history[2].iter, 2);
+        assert!((obs.history[1].duality_gap() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Session-API integration: planned dispatch with fallback reasons, warm
+//! starts, observers/cancellation, and λ checkpoint/resume — the
+//! production "solve the same instance daily" scenarios from the paper's
+//! deployment story.
+
+use bskp::coordinator::{Algorithm, Backend};
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::problem::GroupSource;
+use bskp::mapreduce::Cluster;
+use bskp::rng::Xoshiro256pp;
+use bskp::solve::{
+    read_checkpoint, PlannedBackend, ScaledBudgets, Solve, StopAfter, WarmStart,
+};
+use bskp::solver::stats::{HistoryObserver, ObserverControl, RoundEvent, SolveObserver};
+use bskp::solver::SolverConfig;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("bskp_solveapi_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// ±10% per-constraint budget drift, seeded.
+fn drift_factors(seed: u64, k: usize) -> Vec<f64> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..k).map(|_| 0.9 + 0.2 * rng.next_f64()).collect()
+}
+
+#[test]
+fn plan_never_errors_on_unsupported_combos() {
+    // every algorithm × backend on both cost classes: plan() must succeed
+    // and any unsupported request must leave a reason note
+    for dense in [false, true] {
+        let cfg = if dense {
+            GeneratorConfig::dense(300, 5, 5)
+        } else {
+            GeneratorConfig::sparse(300, 5, 5)
+        };
+        let p = SyntheticProblem::new(cfg.with_seed(1));
+        for algo in [Algorithm::Scd, Algorithm::Dd] {
+            for backend in
+                [Backend::Rust, Backend::Xla { artifacts_dir: "no_such_dir".into() }]
+            {
+                let requested_xla = matches!(backend, Backend::Xla { .. });
+                let plan = Solve::on(&p)
+                    .cluster(Cluster::new(2))
+                    .algorithm(algo)
+                    .backend(backend)
+                    .plan()
+                    .unwrap_or_else(|e| panic!("plan must not error ({algo:?}): {e}"));
+                if requested_xla && plan.backend == PlannedBackend::Rust {
+                    assert!(
+                        plan.notes.iter().any(|n| n.stage == "backend"),
+                        "fallback without a reason: {:?}",
+                        plan.notes
+                    );
+                }
+                let r = plan.run().unwrap();
+                assert!(r.is_feasible());
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_started_changed_budget_resolve_halves_rounds() {
+    // acceptance: across seeded budget drifts, a warm-started re-solve
+    // never needs more rounds than the cold solve, and at least one drift
+    // demonstrates convergence in ≤ half the cold rounds
+    let p = SyntheticProblem::new(
+        GeneratorConfig::sparse(3_000, 10, 10).with_tightness(0.2).with_seed(11),
+    );
+    let cluster = Cluster::new(4);
+    let cfg = SolverConfig { tol: 1e-7, max_iters: 300, track_history: false, ..Default::default() };
+    let base = Solve::on(&p).cluster(cluster.clone()).config(cfg.clone()).run().unwrap();
+    assert!(base.is_feasible());
+
+    let mut any_halved = false;
+    for seed in [101u64, 202, 303] {
+        let factors = drift_factors(seed, 10);
+        let scaled = ScaledBudgets::per_constraint(&p, &factors).unwrap();
+        let cold =
+            Solve::on(&scaled).cluster(cluster.clone()).config(cfg.clone()).run().unwrap();
+        let warm = Solve::on(&scaled)
+            .cluster(cluster.clone())
+            .config(cfg.clone())
+            .warm(WarmStart::from_report(&base))
+            .run()
+            .unwrap();
+        assert!(warm.is_feasible(), "seed {seed}: warm re-solve infeasible");
+        assert!(
+            warm.iterations <= cold.iterations,
+            "seed {seed}: warm took {} rounds vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        let rel = (warm.primal_value - cold.primal_value).abs() / cold.primal_value.abs();
+        assert!(
+            rel < 0.02,
+            "seed {seed}: warm objective drifted {rel:.4} from cold ({} vs {})",
+            warm.primal_value,
+            cold.primal_value
+        );
+        if warm.iterations * 2 <= cold.iterations {
+            any_halved = true;
+        }
+    }
+    assert!(any_halved, "no seeded drift converged in ≤ half the cold rounds");
+}
+
+#[test]
+fn interrupted_solve_resumes_from_checkpoint() {
+    let dir = tmpdir("resume");
+    let ckpt = dir.join("lambda.ckpt");
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(2_000, 8, 8).with_seed(7));
+    let cluster = Cluster::new(4);
+    let cfg = SolverConfig { tol: 1e-6, max_iters: 200, ..Default::default() };
+
+    // the uninterrupted reference
+    let full = Solve::on(&p).cluster(cluster.clone()).config(cfg.clone()).run().unwrap();
+
+    // interrupt after 2 rounds, checkpointing every round
+    let mut stop = StopAfter::new(2);
+    let interrupted = Solve::on(&p)
+        .cluster(cluster.clone())
+        .config(cfg.clone())
+        .checkpoint_to(&ckpt, 1)
+        .run_observed(&mut stop)
+        .unwrap();
+    assert_eq!(interrupted.iterations, 2);
+    assert!(!interrupted.converged, "a cancelled solve must not claim convergence");
+    let saved = read_checkpoint(&ckpt).unwrap();
+    assert_eq!(saved.lambda.len(), 8);
+    // the final checkpoint (written on_complete) carries the adopted λ
+    assert_eq!(saved.lambda, interrupted.lambda);
+
+    // resume from the checkpoint file: must land where the full solve did
+    let resumed = Solve::on(&p)
+        .cluster(cluster)
+        .config(cfg)
+        .warm(WarmStart::from_checkpoint(&ckpt).unwrap())
+        .run()
+        .unwrap();
+    assert!(resumed.is_feasible());
+    let rel = (resumed.primal_value - full.primal_value).abs() / full.primal_value.abs();
+    assert!(rel < 0.02, "resumed solve drifted {rel:.4} from the full solve");
+    assert!(
+        interrupted.iterations + resumed.iterations <= full.iterations + 4,
+        "resume wasted work: {} + {} vs full {}",
+        interrupted.iterations,
+        resumed.iterations,
+        full.iterations
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoints_land_next_to_the_shard_store() {
+    let dir = tmpdir("store_auto");
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(600, 5, 5).with_seed(9));
+    let cluster = Cluster::new(2);
+    p.write_shards(&dir, 128, &cluster).unwrap();
+    let mapped = bskp::instance::store::MmapProblem::open(&dir).unwrap();
+    assert_eq!(mapped.store_dir().as_deref(), Some(dir.as_path()));
+
+    let plan = Solve::on(&mapped).cluster(cluster).checkpoint_auto(1).plan().unwrap();
+    let planned_path =
+        plan.checkpoint.as_ref().expect("store-backed source must resolve a path").path.clone();
+    assert_eq!(planned_path, dir.join("lambda.ckpt"));
+    let r = plan.run().unwrap();
+    assert!(r.is_feasible());
+    let saved = read_checkpoint(&planned_path).unwrap();
+    assert_eq!(saved.lambda, r.lambda);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn observers_see_rounds_and_cancel_dd_too() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(500, 5, 5).with_seed(3));
+    let cluster = Cluster::new(2);
+
+    // history observer == report history, event by event
+    let mut hist = HistoryObserver::new();
+    let r = Solve::on(&p)
+        .cluster(cluster.clone())
+        .algorithm(Algorithm::Dd)
+        .run_observed(&mut hist)
+        .unwrap();
+    assert_eq!(hist.history.len(), r.iterations);
+    assert_eq!(hist.history.len(), r.history.len());
+    for (a, b) in hist.history.iter().zip(&r.history) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.primal, b.primal);
+        assert_eq!(a.dual, b.dual);
+    }
+
+    // cancellation applies to DD as well
+    let mut stop = StopAfter::new(1);
+    let r = Solve::on(&p)
+        .cluster(cluster)
+        .algorithm(Algorithm::Dd)
+        .run_observed(&mut stop)
+        .unwrap();
+    assert_eq!(r.iterations, 1);
+    assert!(!r.converged);
+}
+
+#[test]
+fn round_events_carry_the_adopted_lambda() {
+    // the event's λ is what the next round starts from: re-running with a
+    // warm start from any round's event must reproduce the remaining tail
+    struct Capture {
+        at: usize,
+        lambda: Option<Vec<f64>>,
+    }
+    impl SolveObserver for Capture {
+        fn on_round(&mut self, ev: &RoundEvent<'_>) -> ObserverControl {
+            if ev.iter == self.at {
+                self.lambda = Some(ev.lambda.to_vec());
+            }
+            ObserverControl::Continue
+        }
+    }
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(800, 6, 6).with_seed(5));
+    let cluster = Cluster::new(2);
+    let cfg = SolverConfig { track_history: false, ..Default::default() };
+    let mut cap = Capture { at: 1, lambda: None };
+    let full = Solve::on(&p)
+        .cluster(cluster.clone())
+        .config(cfg.clone())
+        .run_observed(&mut cap)
+        .unwrap();
+    let Some(mid) = cap.lambda else {
+        // converged in a single round; nothing to resume from
+        return;
+    };
+    let resumed = Solve::on(&p)
+        .cluster(cluster)
+        .config(cfg.clone())
+        .warm(WarmStart::from_lambda(mid))
+        .run()
+        .unwrap();
+    // the resumed tail replays the same deterministic iteration, so the
+    // final multipliers agree to convergence tolerance (termination right
+    // at the capture point can shift the stop round by one)
+    for (a, b) in resumed.lambda.iter().zip(&full.lambda) {
+        assert!(
+            (a - b).abs() <= 100.0 * cfg.tol * a.abs().max(1.0),
+            "resumed λ diverged: {:?} vs {:?}",
+            resumed.lambda,
+            full.lambda
+        );
+    }
+    let rel = (resumed.primal_value - full.primal_value).abs() / full.primal_value.abs();
+    assert!(rel < 1e-3, "resumed primal drifted {rel}");
+}

@@ -226,6 +226,62 @@ fn prop_generator_distributions_within_support() {
 }
 
 #[test]
+fn prop_warm_start_matches_cold_after_budget_perturbation() {
+    // the production re-solve invariant: after a ±10% budget drift, a
+    // warm start from the unperturbed λ* reaches (within tolerance) the
+    // same objective as a cold solve of the perturbed instance — and
+    // never needs more rounds; across cases it needs strictly fewer
+    use bskp::solve::{ScaledBudgets, Solve, WarmStart};
+
+    let mut rng = Xoshiro256pp::new(0xD4);
+    let cluster = Cluster::new(4);
+    let cfg = SolverConfig { tol: 1e-6, max_iters: 200, track_history: false, ..Default::default() };
+    let (mut warm_rounds, mut cold_rounds) = (0usize, 0usize);
+    for case in 0..8 {
+        let n = 300 + rng.below(700) as usize;
+        let m = 4 + rng.below(6) as usize;
+        let k = 4 + rng.below(6) as usize;
+        let p = SyntheticProblem::new(
+            GeneratorConfig::sparse(n, m, k)
+                .with_tightness(0.15 + rng.next_f64() * 0.3)
+                .with_seed(rng.next_u64()),
+        );
+        let base =
+            Solve::on(&p).cluster(cluster.clone()).config(cfg.clone()).run().unwrap();
+        let factors: Vec<f64> = (0..k).map(|_| 0.9 + 0.2 * rng.next_f64()).collect();
+        let scaled = ScaledBudgets::per_constraint(&p, &factors).unwrap();
+        let cold =
+            Solve::on(&scaled).cluster(cluster.clone()).config(cfg.clone()).run().unwrap();
+        let warm = Solve::on(&scaled)
+            .cluster(cluster.clone())
+            .config(cfg.clone())
+            .warm(WarmStart::from_report(&base))
+            .run()
+            .unwrap();
+        assert!(warm.is_feasible(), "case {case}: warm re-solve infeasible");
+        assert!(
+            warm.iterations <= cold.iterations + 1,
+            "case {case}: warm {} rounds vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        let rel = (warm.primal_value - cold.primal_value).abs() / cold.primal_value.abs();
+        assert!(
+            rel < 0.05,
+            "case {case}: warm objective {} vs cold {} (rel {rel:.4})",
+            warm.primal_value,
+            cold.primal_value
+        );
+        warm_rounds += warm.iterations;
+        cold_rounds += cold.iterations;
+    }
+    assert!(
+        warm_rounds < cold_rounds,
+        "warm starts saved no rounds overall: {warm_rounds} vs {cold_rounds}"
+    );
+}
+
+#[test]
 fn prop_adjusted_profits_linear_in_lambda() {
     // p̃(λa + (1-t)·0) interpolates: p̃ is affine in λ
     let mut rng = Xoshiro256pp::new(0x17);
