@@ -1,0 +1,66 @@
+#!/usr/bin/env bash
+# Cluster smoke test: two real `bskp worker` processes solve a generated
+# shard-store instance through `solve --cluster`, and the JSON report must
+# match the single-process run field for field (λ, objective, iterations).
+# Run from the repo root; requires a release build (or set BIN).
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bskp}
+SCRATCH=$(mktemp -d)
+STORE="$SCRATCH/store"
+
+cleanup() {
+  # pid files, not a shell array: start_worker runs inside $(...) command
+  # substitution, so variable mutations there never reach this shell
+  for f in "$SCRATCH"/*.pid; do
+    [ -e "$f" ] && kill "$(cat "$f")" 2>/dev/null || true
+  done
+  rm -rf "$SCRATCH"
+}
+trap cleanup EXIT
+
+"$BIN" gen --n 20000 --m 8 --k 8 --seed 5 --shard 1024 --out "$STORE" --quiet
+
+start_worker() { # $1: log file
+  "$BIN" worker --listen 127.0.0.1:0 --store "$STORE" --workers 2 >"$1" &
+  echo $! >"$1.pid"
+  for _ in $(seq 50); do
+    addr=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$1")
+    [ -n "$addr" ] && { echo "$addr"; return; }
+    sleep 0.1
+  done
+  echo "worker failed to announce ($1):" >&2
+  cat "$1" >&2
+  exit 1
+}
+
+ADDR1=$(start_worker "$SCRATCH/w1.log")
+ADDR2=$(start_worker "$SCRATCH/w2.log")
+echo "workers up at $ADDR1 and $ADDR2"
+
+"$BIN" solve --from "$STORE" --iters 10 --shard 256 \
+  --json "$SCRATCH/single.json" --quiet
+"$BIN" solve --from "$STORE" --iters 10 --shard 256 \
+  --cluster "$ADDR1,$ADDR2" --json "$SCRATCH/cluster.json" --quiet
+
+python3 - "$SCRATCH/single.json" "$SCRATCH/cluster.json" <<'EOF'
+import json, sys
+
+single = json.load(open(sys.argv[1]))
+cluster = json.load(open(sys.argv[2]))
+
+assert cluster["plan"]["executor"] == "distributed", cluster["plan"]
+assert single["plan"]["executor"] == "in-process", single["plan"]
+assert cluster["plan"]["notes"] == [], cluster["plan"]["notes"]
+
+a, b = single["report"], cluster["report"]
+for key in ["lambda", "primal_value", "dual_value", "n_selected",
+            "iterations", "converged", "consumption", "dropped_groups"]:
+    assert a[key] == b[key], f"report.{key} differs: {a[key]} vs {b[key]}"
+
+net = cluster["cluster"]
+assert net["workers_total"] == 2 and net["workers_lost"] == 0, net
+assert net["rounds"] >= b["iterations"] and net["bytes_sent"] > 0, net
+print(f"cluster smoke OK: {b['iterations']} iters, primal {b['primal_value']:.2f}, "
+      f"{net['rounds']} gathers, {net['bytes_sent']}B out / {net['bytes_received']}B in")
+EOF

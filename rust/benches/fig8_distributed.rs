@@ -1,0 +1,114 @@
+//! **Figure 8** (repo extension, not in the paper) — distributed scaling.
+//!
+//! The paper's production runs spread the map phase over a real cluster;
+//! this bench reproduces the topology on one box: a leader plus {1, 2, 4}
+//! `bskp worker` OS processes, each memory-mapping the same shard store
+//! and speaking the checksummed TCP protocol. The interesting numbers are
+//! the scaling curve (wall time vs worker count — on one box this mostly
+//! measures protocol overhead, since the workers share the same cores)
+//! and the per-round network cost: bytes moved and gather latency, which
+//! is what the map-side combine keeps independent of N.
+//!
+//! Scaled default: N = 200k sparse groups. `BSKP_FULL=1` raises N to 2M.
+//! `BSKP_STORE_DIR` overrides the scratch directory.
+
+#[path = "common.rs"]
+mod common;
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::store::MmapProblem;
+use bskp::solve::Solve;
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+fn spawn_worker(store: &std::path::Path) -> Worker {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_bskp"))
+        .args(["worker", "--listen", "127.0.0.1:0", "--store", store.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn bskp worker");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("stdout")).read_line(&mut line).expect("announce");
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .expect("worker announcement")
+        .to_string();
+    Worker { child, addr }
+}
+
+fn main() {
+    let n: usize = if common::full_scale() { 2_000_000 } else { 200_000 };
+    common::banner(
+        "Figure 8: distributed scaling (leader + {1,2,4} worker processes over TCP)",
+        &format!("N={n} M=10 K=10 sparse, 12 SCD rounds, loopback wire"),
+    );
+    let dir = std::env::var("BSKP_STORE_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::env::temp_dir().join(format!("bskp_fig8_{}", std::process::id())));
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(n, 10, 10).with_seed(8));
+    p.write_shards(&dir, 1 << 14, &common::cluster()).expect("write store");
+    let mm = MmapProblem::open(&dir).expect("open store");
+    // pin the map partition to the store's file shards so every executor
+    // (and every fleet size) folds the identical shard sequence — the
+    // precondition for the bit-identical λ assertion below
+    let cfg = SolverConfig {
+        max_iters: 12,
+        tol: 1e-15,
+        shard_size: Some(1 << 14),
+        ..Default::default()
+    };
+
+    let (base, t_base) =
+        common::time(|| solve_scd(&mm, &cfg, &common::cluster()).expect("in-process solve"));
+    println!(
+        "inproc: {:>2} iters, primal {:>14.2}, {:>6.2} s  (reference)",
+        base.iterations, base.primal_value, t_base
+    );
+
+    for fleet_size in [1usize, 2, 4] {
+        let workers: Vec<Worker> = (0..fleet_size).map(|_| spawn_worker(&dir)).collect();
+        let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+        let plan = Solve::on(&mm)
+            .config(cfg.clone())
+            .distributed(addrs)
+            .plan()
+            .expect("plan distributed");
+        let fleet = plan.remote_handle().expect("fleet attached");
+        let (report, t) = common::time(|| plan.run().expect("distributed solve"));
+        let s = fleet.stats();
+        let per_round_kb = (s.bytes_sent + s.bytes_received) as f64 / s.rounds.max(1) as f64 / 1024.0;
+        println!(
+            "w={fleet_size}:   {:>2} iters, primal {:>14.2}, {:>6.2} s, {:>3} gathers, \
+             {:>8.1} KiB/round, {:>6.1} ms/gather, speedup vs inproc {:.2}×",
+            report.iterations,
+            report.primal_value,
+            t,
+            s.rounds,
+            per_round_kb,
+            s.round_ms / s.rounds.max(1) as f64,
+            t_base / t,
+        );
+        assert_eq!(
+            report.lambda, base.lambda,
+            "distributed λ must match the in-process solve bit-exactly"
+        );
+        for mut w in workers {
+            w.child.kill().ok();
+            w.child.wait().ok();
+        }
+    }
+
+    if std::env::var("BSKP_STORE_DIR").is_err() {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

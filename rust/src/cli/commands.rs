@@ -22,6 +22,7 @@ SUBCOMMANDS
   solve      solve a synthetic instance, or an on-disk store via --from
   resolve    re-solve with a warm-started λ (requires --warm); the daily
              changed-budget production path, e.g. with --budget-scale
+  worker     serve a shard-store replica to a cluster leader (L4)
   lpbound    compute the LP-relaxation upper bound (Kelley cutting planes)
   inspect    print instance statistics and a sample group
   help       this text
@@ -57,8 +58,13 @@ SOLVER FLAGS (solve / resolve)
   --bucketed <delta>   §5.2 bucketed reduce with finest width delta
   --cd sync|cyclic|block:<n>   coordinate schedule (default sync)
   --damping <f>        under-relaxation in (0,1]
-  --workers <int>      map workers (default: all cores)
+  --workers <int>      map workers (default: $PALLAS_WORKERS, else all
+                       cores; also sizes a worker process's pool)
   --shard <int>        shard size override
+  --cluster <addrs>    run the map rounds on pallas worker processes at
+                       host:port[,host:port...]; requires --from (workers
+                       mmap their replica of the same store). Unreachable
+                       fleet => in-process fallback with a plan note
   --track-history      record the per-iteration series in the report JSON
   --json <path|->      write {plan, report} JSON to a file, or - for
                        stdout (- implies --quiet so stdout stays JSON)
@@ -73,6 +79,12 @@ WARM START / CHECKPOINT FLAGS (solve / resolve)
   --checkpoint <path|auto>   write periodic λ checkpoints; auto puts
                        lambda.ckpt next to the --from shard store
   --checkpoint-every <n>     checkpoint cadence in rounds (default 5)
+
+WORKER FLAGS
+  --listen <addr>      bind address (default 127.0.0.1:0; the actual
+                       address is announced on stdout)
+  --store <dir>        shard-store replica to serve (required)
+  --workers <int>      map threads to advertise (default as above)
 
 LPBOUND FLAGS
   --lp-tol <f>         Kelley gap tolerance (default 1e-4)
@@ -177,8 +189,29 @@ pub fn solver_config_from_args(args: &Args) -> Result<SolverConfig> {
 fn cluster_from_args(args: &Args) -> Result<Cluster> {
     Ok(match args.get_opt::<usize>("workers")? {
         Some(w) => Cluster::new(w),
-        None => Cluster::available(),
+        None => Cluster::configured(),
     })
+}
+
+/// `bskp worker`: bind, announce the actual address on stdout (so scripts
+/// can use `--listen 127.0.0.1:0` for an ephemeral port), then serve the
+/// store replica to leader sessions until killed.
+pub fn cmd_worker(args: &Args) -> Result<()> {
+    let store = args.get_opt::<String>("store")?.ok_or_else(|| {
+        Error::Usage("worker requires --store <dir> (a shard-store replica)".into())
+    })?;
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    let pool = cluster_from_args(args)?;
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| Error::Runtime(format!("cannot listen on {listen}: {e}")))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "pallas worker listening on {addr} (store {store}, {} map threads)",
+        pool.workers()
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    crate::cluster::worker::serve(listener, std::path::Path::new(&store), &pool)
 }
 
 /// `bskp gen`: stream a synthetic instance into an on-disk shard store.
@@ -268,6 +301,17 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
         .backend(backend)
         .config(config)
         .cluster(cluster);
+    if let Some(spec) = args.get_opt::<String>("cluster")? {
+        let addrs: Vec<String> = spec
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if addrs.is_empty() {
+            return Err(Error::Usage("--cluster needs host:port[,host:port...]".into()));
+        }
+        session = session.distributed(addrs);
+    }
     if let Some(w) = warm {
         session = session.warm(w);
     }
@@ -295,6 +339,8 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
     }
 
     let dims = source.dims();
+    // keep a fleet handle so wire statistics survive the consuming run()
+    let remote = plan.remote_handle();
     let report = plan.run()?;
 
     if !quiet {
@@ -317,13 +363,32 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
         println!("  selected items  : {}", report.n_selected);
         println!("  dropped groups  : {}", report.dropped_groups);
         println!("  wall time       : {:.1} ms", report.wall_ms);
+        if let Some(r) = &remote {
+            let s = r.stats();
+            println!(
+                "  cluster         : {}/{} workers live, {} rounds, {} B out / {} B in{}",
+                s.workers_live,
+                s.workers_total,
+                s.rounds,
+                s.bytes_sent,
+                s.bytes_received,
+                if s.redispatches > 0 {
+                    format!(", {} chunks re-dispatched", s.redispatches)
+                } else {
+                    String::new()
+                }
+            );
+        }
     }
     if let Some(dest) = &json_dest {
-        let out = JsonValue::Object(vec![
+        let mut out = vec![
             ("plan".to_string(), plan_json),
             ("report".to_string(), report_to_json(&report)),
-        ]);
-        emit_json(quiet, dest, out)?;
+        ];
+        if let Some(r) = &remote {
+            out.push(("cluster".to_string(), crate::metrics::cluster_to_json(&r.stats())));
+        }
+        emit_json(quiet, dest, JsonValue::Object(out))?;
     }
     Ok(())
 }

@@ -4,6 +4,8 @@
 //! bskp gen     --n 10000000 --m 10 --k 10 --out /data/store [...]
 //! bskp solve   --n 1000000 --m 10 --k 10 --class sparse --algo scd [...]
 //! bskp solve   --from /data/store --checkpoint auto [...]
+//! bskp worker  --listen 0.0.0.0:7400 --store /data/store
+//! bskp solve   --from /data/store --cluster host1:7400,host2:7400 [...]
 //! bskp resolve --from /data/store --warm /data/store/lambda.ckpt \
 //!              --budget-scale 1.05 [...]
 //! bskp lpbound --n 10000 --m 10 --k 5 [...]
@@ -41,6 +43,7 @@ fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
         "gen" => commands::cmd_gen(&args),
         "solve" => commands::cmd_solve(&args),
         "resolve" => commands::cmd_resolve(&args),
+        "worker" => commands::cmd_worker(&args),
         "lpbound" => commands::cmd_lpbound(&args),
         "inspect" => commands::cmd_inspect(&args),
         "help" | "" => {
@@ -96,6 +99,22 @@ mod tests {
     #[test]
     fn resolve_requires_warm() {
         assert_eq!(run(argv("bskp resolve --n 100 --m 4 --k 4 --quiet")), 2);
+    }
+
+    #[test]
+    fn worker_requires_store() {
+        assert_eq!(run(argv("bskp worker")), 2);
+    }
+
+    #[test]
+    fn cluster_on_synthetic_source_falls_back_in_process() {
+        // no shard store → the plan notes the fallback and solves locally
+        assert_eq!(
+            run(argv(
+                "bskp solve --n 300 --m 4 --k 4 --iters 5 --cluster 127.0.0.1:9 --quiet"
+            )),
+            0
+        );
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! The executor seam between the solvers and the two runtimes.
+//!
+//! Every solver round is one of three map shapes (evaluate, SCD
+//! threshold-emit, §5.4 rank). [`Exec`] dispatches each shape either to
+//! the in-process thread pool — exactly the code path the solvers always
+//! had — or to a [`RemoteCluster`] of worker processes. The drivers
+//! (`solve_scd_exec`, `solve_dd_exec`) are written against this seam and
+//! do not know which one they are on.
+
+use crate::cluster::leader::RemoteCluster;
+use crate::error::Result;
+use crate::instance::problem::GroupSource;
+use crate::instance::shard::Shards;
+use crate::mapreduce::Cluster;
+use crate::solver::postprocess;
+use crate::solver::rounds::{evaluation_chunk, RoundAgg, RustEvaluator};
+use crate::solver::scd::{scd_round_chunk, ScdAcc, ScdRoundSpec};
+
+/// Where map rounds run: the in-process pool or a TCP worker fleet.
+///
+/// With `Local`, `source` is read by the pool's threads directly. With
+/// `Remote`, `source` is the **leader's replica** of the instance (used
+/// only for leader-local phases); the heavy per-group reads happen on the
+/// workers' own memory-mapped stores, verified equal by the handshake
+/// fingerprint.
+pub enum Exec<'e> {
+    /// The single-box thread pool.
+    Local(&'e Cluster),
+    /// A connected worker fleet.
+    Remote(&'e RemoteCluster),
+}
+
+impl Exec<'_> {
+    /// Map parallelism for shard planning: pool threads, or the fleet's
+    /// advertised thread capacity.
+    pub fn map_parallelism(&self) -> usize {
+        match self {
+            Exec::Local(c) => c.workers(),
+            Exec::Remote(r) => r.capacity(),
+        }
+    }
+
+    /// The pool for work that stays on the leader regardless of executor
+    /// (§5.3 pre-solve sampling, §5.4's sequential drop walk).
+    pub fn local_pool(&self) -> &Cluster {
+        match self {
+            Exec::Local(c) => c,
+            Exec::Remote(r) => r.leader_pool(),
+        }
+    }
+
+    /// Short name for plans and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Exec::Local(_) => "in-process",
+            Exec::Remote(_) => "distributed",
+        }
+    }
+
+    /// One full evaluation round at fixed λ.
+    pub(crate) fn eval_round<S: GroupSource + ?Sized>(
+        &self,
+        source: &S,
+        shards: Shards,
+        kk: usize,
+        lambda: &[f64],
+    ) -> Result<RoundAgg> {
+        match self {
+            Exec::Local(c) => Ok(evaluation_chunk(
+                &RustEvaluator::new(source),
+                shards,
+                0,
+                shards.count(),
+                kk,
+                lambda,
+                c,
+            )),
+            Exec::Remote(r) => r.eval_round(shards, kk, lambda),
+        }
+    }
+
+    /// One full SCD round.
+    pub(crate) fn scd_round<S: GroupSource + ?Sized>(
+        &self,
+        source: &S,
+        shards: Shards,
+        spec: &ScdRoundSpec<'_>,
+    ) -> Result<ScdAcc> {
+        match self {
+            Exec::Local(c) => Ok(scd_round_chunk(source, shards, 0, shards.count(), spec, c)),
+            Exec::Remote(r) => r.scd_round(shards, spec),
+        }
+    }
+
+    /// One full §5.4 ranking round.
+    pub(crate) fn rank_round<S: GroupSource + ?Sized>(
+        &self,
+        source: &S,
+        shards: Shards,
+        lambda: &[f64],
+    ) -> Result<Vec<(f32, u32)>> {
+        match self {
+            Exec::Local(c) => {
+                Ok(postprocess::rank_chunk(source, shards, 0, shards.count(), lambda, c))
+            }
+            Exec::Remote(r) => r.rank_round(shards, lambda),
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Frame layer: length-prefixed, checksummed messages on a byte stream.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic      0x53_4C_4C_50 ("PLLS" little-endian)
+//! 4       2     version    wire protocol version (1)
+//! 6       2     kind       message kind (see protocol::Msg)
+//! 8       8     len        payload length in bytes
+//! 16      len   payload    message body (little-endian, wire::Enc)
+//! 16+len  8     checksum   XXH64(payload, seed = kind)
+//! ```
+//!
+//! The checksum reuses the shard store's XXH64
+//! ([`crate::instance::store::xxh64`]) with the message kind as the seed,
+//! so a payload replayed under the wrong kind fails verification too.
+//! Checksum or header violations are hard errors: the leader treats them
+//! as a lost worker (the chunk is re-dispatched elsewhere), the worker
+//! drops the connection.
+
+use crate::error::{Error, Result};
+use crate::instance::store::xxh64;
+use std::io::{Read, Write};
+
+/// `"PLLS"` as a little-endian u32.
+pub(crate) const MAGIC: u32 = u32::from_le_bytes(*b"PLLS");
+
+/// Wire protocol version. Bump on any frame- or message-layout change;
+/// the handshake refuses mismatched peers.
+pub(crate) const VERSION: u16 = 1;
+
+/// Upper bound on a frame payload (1 GiB). Real partials are far smaller;
+/// the cap stops a corrupt length prefix from provoking an absurd
+/// allocation.
+pub(crate) const MAX_PAYLOAD: u64 = 1 << 30;
+
+const HEADER_LEN: usize = 16;
+
+/// Write one frame; returns the total bytes put on the wire. Enforces the
+/// same payload cap the reader does, so an oversized message fails at the
+/// sender (where it can be reported) instead of poisoning the peer's
+/// stream.
+pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u16, payload: &[u8]) -> Result<usize> {
+    if payload.len() as u64 > MAX_PAYLOAD {
+        return Err(Error::Runtime(format!(
+            "cluster wire: refusing to send a {}-byte payload (cap {MAX_PAYLOAD})",
+            payload.len()
+        )));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6..8].copy_from_slice(&kind.to_le_bytes());
+    header[8..16].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.write_all(&xxh64(payload, kind as u64).to_le_bytes())?;
+    w.flush()?;
+    Ok(HEADER_LEN + payload.len() + 8)
+}
+
+/// Read one frame; returns `(kind, payload, bytes_read)` after verifying
+/// magic, version, length bound and checksum.
+pub(crate) fn read_frame<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>, usize)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(Error::Runtime(format!(
+            "cluster wire: bad frame magic {magic:#010x} (not a pallas peer?)"
+        )));
+    }
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::Runtime(format!(
+            "cluster wire: protocol version {version} (this binary speaks {VERSION})"
+        )));
+    }
+    let kind = u16::from_le_bytes(header[6..8].try_into().unwrap());
+    let len = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(Error::Runtime(format!(
+            "cluster wire: frame payload of {len} bytes exceeds the {MAX_PAYLOAD} cap"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum)?;
+    let expect = u64::from_le_bytes(sum);
+    let got = xxh64(&payload, kind as u64);
+    if got != expect {
+        return Err(Error::Runtime(format!(
+            "cluster wire: payload checksum mismatch (got {got:#018x}, frame says \
+             {expect:#018x}) — corrupt or truncated frame"
+        )));
+    }
+    Ok((kind, payload, HEADER_LEN + len as usize + 8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, 7, b"payload bytes").unwrap();
+        assert_eq!(n, buf.len());
+        let (kind, payload, read) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(kind, 7);
+        assert_eq!(payload, b"payload bytes");
+        assert_eq!(read, n);
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"").unwrap();
+        let (kind, payload, _) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(kind, 1);
+        assert!(payload.is_empty());
+    }
+
+    #[test]
+    fn detects_payload_corruption() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, b"sensitive numbers").unwrap();
+        buf[HEADER_LEN + 4] ^= 0x40;
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn detects_kind_replay() {
+        // same payload re-framed under a different kind must not verify,
+        // because the kind seeds the checksum
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, b"task body").unwrap();
+        buf[6] = 4; // kind 3 → 4
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_giant_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"x").unwrap();
+        let mut bad = buf.clone();
+        bad[0] = 0;
+        assert!(read_frame(&mut bad.as_slice()).is_err());
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(read_frame(&mut bad.as_slice())
+            .unwrap_err()
+            .to_string()
+            .contains("version"));
+        let mut bad = buf;
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_frame(&mut bad.as_slice()).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn truncated_stream_is_io_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 2, b"abcdef").unwrap();
+        let err = read_frame(&mut &buf[..buf.len() - 3]).unwrap_err();
+        assert!(matches!(err, Error::Io(_)));
+    }
+}

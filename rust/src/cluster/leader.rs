@@ -1,0 +1,407 @@
+//! The leader-side remote executor.
+//!
+//! [`RemoteCluster`] owns one [`WorkerLink`](super::membership::WorkerLink)
+//! per configured worker and drives synchronous rounds: the global shard
+//! partition is cut into contiguous **chunks** (a fixed function of the
+//! round, independent of which worker computes what), chunks are dealt to
+//! workers from a shared queue (work stealing across machines, like the
+//! thread pool's stealing across cores), and the partials are merged **in
+//! chunk order** with compensated sums — so the result does not depend on
+//! worker count, scheduling, or mid-round failures.
+//!
+//! **Failure handling.** A worker that errors or times out on a chunk is
+//! marked dead for the session; its chunk goes back on the queue and a
+//! survivor re-executes it. Because every task frame carries the round's
+//! full broadcast state (λ, active mask, reduce mode), re-dispatch resumes
+//! from the λ the round started with — a lost worker costs one chunk of
+//! recomputation. Only when *every* worker is gone does the round (and the
+//! solve) fail; with checkpointing enabled the λ trail survives for a
+//! warm-started retry.
+
+use crate::cluster::env_ms;
+use crate::cluster::membership::{NetCounters, WorkerLink};
+use crate::cluster::protocol::{Geometry, InstanceFingerprint, Msg};
+use crate::error::{Error, Result};
+use crate::instance::problem::GroupSource;
+use crate::instance::shard::Shards;
+use crate::mapreduce::Cluster;
+use crate::solver::config::ReduceMode;
+use crate::solver::rounds::RoundAgg;
+use crate::solver::scd::{ScdAcc, ScdRoundSpec, ThresholdAcc};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+/// Default per-exchange timeout. This is the *only* detector for a worker
+/// that is silently partitioned (process death shows up immediately as
+/// RST/EOF), so it must comfortably exceed the slowest honest chunk: at
+/// N = 1e9 a chunk is ~N/64 groups, minutes of folding on a loaded box.
+/// 10 minutes trades partition-detection latency for never killing a
+/// healthy-but-slow fleet; tighten via `PALLAS_CLUSTER_TIMEOUT_MS` when
+/// chunks are known to be fast.
+const DEFAULT_TIMEOUT_MS: u64 = 600_000;
+
+/// Default connect/handshake timeout (seconds, not minutes: planning must
+/// reach its in-process fallback promptly when a fleet is blackholed).
+const DEFAULT_CONNECT_TIMEOUT_MS: u64 = 5_000;
+
+/// Chunks per round: a pure function of the shard count — deliberately
+/// **independent of worker count and liveness**, so the chunk partition
+/// (and with it the merge order of every compensated sum) is identical
+/// for any fleet size and any mid-round failure pattern. 64 chunks give
+/// fine-grained stealing and re-dispatch for any realistic fleet while
+/// keeping per-round frame counts and per-chunk accumulators bounded.
+const CHUNKS_PER_ROUND: usize = 64;
+
+fn chunk_count(n_shards: usize) -> usize {
+    n_shards.min(CHUNKS_PER_ROUND)
+}
+
+/// Point-in-time wire statistics of a [`RemoteCluster`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetSnapshot {
+    /// Task bytes written to workers (frames included).
+    pub bytes_sent: u64,
+    /// Partial bytes read from workers (frames included).
+    pub bytes_received: u64,
+    /// Gather rounds completed.
+    pub rounds: u64,
+    /// Total wall time inside gathers, milliseconds.
+    pub round_ms: f64,
+    /// Chunks re-dispatched after a worker loss.
+    pub redispatches: u64,
+    /// Workers lost during the session.
+    pub workers_lost: u64,
+    /// Workers still live.
+    pub workers_live: usize,
+    /// Workers the session started with.
+    pub workers_total: usize,
+    /// Advertised map-thread capacity across all started workers.
+    pub capacity: usize,
+}
+
+/// A fleet of `pallas worker` processes, driven over TCP with the same
+/// map→combine→reduce contract as the in-process
+/// [`Cluster`] (see [`super::Exec`]).
+pub struct RemoteCluster {
+    slots: Vec<Mutex<WorkerLink>>,
+    leader_pool: Cluster,
+    capacity: usize,
+    counters: NetCounters,
+}
+
+impl RemoteCluster {
+    /// Connect to `addrs` and handshake each against `source`'s
+    /// fingerprint. Unreachable or mismatched workers are skipped with a
+    /// human-readable note; connecting to **zero** workers is the only
+    /// hard error (callers fall back to the in-process pool on it).
+    pub fn connect<S: GroupSource + ?Sized>(
+        addrs: &[String],
+        source: &S,
+    ) -> Result<(Self, Vec<String>)> {
+        let fingerprint = InstanceFingerprint::of(source);
+        let exchange_timeout = env_ms("PALLAS_CLUSTER_TIMEOUT_MS", DEFAULT_TIMEOUT_MS);
+        let connect_timeout =
+            env_ms("PALLAS_CLUSTER_CONNECT_TIMEOUT_MS", DEFAULT_CONNECT_TIMEOUT_MS);
+        // dial concurrently: N blackholed hosts must cost one connect
+        // timeout, not N, before planning can fall back in-process
+        let dials: Vec<Result<WorkerLink>> = std::thread::scope(|s| {
+            let handles: Vec<_> = addrs
+                .iter()
+                .map(|addr| {
+                    let fingerprint = &fingerprint;
+                    s.spawn(move || {
+                        WorkerLink::connect(addr, fingerprint, connect_timeout, exchange_timeout)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(Error::Runtime("worker dial thread panicked".into()))
+                    })
+                })
+                .collect()
+        });
+        let mut slots = Vec::new();
+        let mut skipped = Vec::new();
+        for (addr, dial) in addrs.iter().zip(dials) {
+            match dial {
+                Ok(link) => slots.push(Mutex::new(link)),
+                Err(e) => skipped.push(format!("worker {addr} skipped: {e}")),
+            }
+        }
+        if slots.is_empty() {
+            return Err(Error::Runtime(format!(
+                "no cluster workers reachable at [{}]{}",
+                addrs.join(", "),
+                skipped
+                    .iter()
+                    .map(|s| format!("; {s}"))
+                    .collect::<String>(),
+            )));
+        }
+        let capacity = slots.iter().map(|s| s.lock().unwrap().threads).sum();
+        let leader_pool = Cluster::configured();
+        Ok((Self { slots, leader_pool, capacity, counters: NetCounters::default() }, skipped))
+    }
+
+    /// Replace the pool used for leader-local phases (§5.3 pre-solve
+    /// sampling, §5.4's sequential walk). The session planner threads the
+    /// session's own `--workers` pool through here so distributed solves
+    /// honor it; the default is [`Cluster::configured`].
+    pub fn with_leader_pool(mut self, pool: Cluster) -> Self {
+        self.leader_pool = pool;
+        self
+    }
+
+    /// Workers the session started with.
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Workers still live.
+    pub fn workers_live(&self) -> usize {
+        self.slots.iter().filter(|s| s.lock().unwrap().is_live()).count()
+    }
+
+    /// Total advertised map-thread capacity (drives shard planning).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The configured worker addresses.
+    pub fn addrs(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.lock().unwrap().addr.clone()).collect()
+    }
+
+    /// The leader-local pool used for the phases that stay on the leader
+    /// (§5.3 pre-solve sampling, the sequential part of §5.4).
+    pub(crate) fn leader_pool(&self) -> &Cluster {
+        &self.leader_pool
+    }
+
+    /// Wire statistics so far.
+    pub fn stats(&self) -> NetSnapshot {
+        let c = &self.counters;
+        NetSnapshot {
+            bytes_sent: c.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: c.bytes_received.load(Ordering::Relaxed),
+            rounds: c.rounds.load(Ordering::Relaxed),
+            round_ms: c.round_us.load(Ordering::Relaxed) as f64 / 1e3,
+            redispatches: c.redispatches.load(Ordering::Relaxed),
+            workers_lost: c.workers_lost.load(Ordering::Relaxed),
+            workers_live: self.workers_live(),
+            workers_total: self.slots.len(),
+            capacity: self.capacity,
+        }
+    }
+
+    /// Dispatch one round: cut `[0, n_shards)` into chunks, deal them to
+    /// live workers, gather the partials **indexed by chunk**. Lost
+    /// workers re-queue their chunk; the round only fails when no live
+    /// worker remains (or a worker reports a protocol-level abort).
+    fn gather<F>(&self, n_shards: usize, task: F) -> Result<Vec<Msg>>
+    where
+        F: Fn(usize, usize) -> Msg + Sync,
+    {
+        if n_shards == 0 {
+            return Ok(Vec::new());
+        }
+        let t0 = std::time::Instant::now();
+        let n_chunks = chunk_count(n_shards);
+        let per = n_shards.div_ceil(n_chunks);
+        let n_chunks = n_shards.div_ceil(per);
+        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..n_chunks).collect());
+        let results: Mutex<Vec<Option<Msg>>> =
+            Mutex::new((0..n_chunks).map(|_| None).collect());
+        let fatal: Mutex<Option<Error>> = Mutex::new(None);
+        let mut last_loss = String::new();
+
+        loop {
+            let live: Vec<usize> = (0..self.slots.len())
+                .filter(|&i| self.slots[i].lock().unwrap().is_live())
+                .collect();
+            if live.is_empty() {
+                return Err(Error::Runtime(format!(
+                    "all cluster workers lost mid-round ({} of {} chunks done){}",
+                    results.lock().unwrap().iter().filter(|r| r.is_some()).count(),
+                    n_chunks,
+                    if last_loss.is_empty() {
+                        String::new()
+                    } else {
+                        format!("; last failure: {last_loss}")
+                    },
+                )));
+            }
+            let losses: Mutex<Vec<String>> = Mutex::new(Vec::new());
+            std::thread::scope(|s| {
+                for &slot in &live {
+                    let (queue, results, fatal, losses) = (&queue, &results, &fatal, &losses);
+                    let task = &task;
+                    s.spawn(move || {
+                        let mut link = self.slots[slot].lock().unwrap();
+                        loop {
+                            if fatal.lock().unwrap().is_some() {
+                                break;
+                            }
+                            let Some(chunk) = queue.lock().unwrap().pop_front() else {
+                                break;
+                            };
+                            let lo = chunk * per;
+                            let hi = (lo + per).min(n_shards);
+                            match link.exchange(&task(lo, hi), &self.counters) {
+                                Ok(Msg::Abort { message }) => {
+                                    *fatal.lock().unwrap() = Some(Error::Runtime(format!(
+                                        "worker {} aborted the round: {message}",
+                                        link.addr
+                                    )));
+                                    break;
+                                }
+                                Ok(reply) => {
+                                    results.lock().unwrap()[chunk] = Some(reply);
+                                }
+                                Err(e) => {
+                                    // dead worker: back on the queue for a
+                                    // survivor (possibly one still looping
+                                    // in this very scope)
+                                    losses
+                                        .lock()
+                                        .unwrap()
+                                        .push(format!("worker {}: {e}", link.addr));
+                                    link.kill();
+                                    queue.lock().unwrap().push_back(chunk);
+                                    self.counters
+                                        .count(&self.counters.workers_lost, 1);
+                                    self.counters
+                                        .count(&self.counters.redispatches, 1);
+                                    break;
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            if let Some(e) = fatal.lock().unwrap().take() {
+                return Err(e);
+            }
+            if let Some(loss) = losses.lock().unwrap().last() {
+                last_loss = loss.clone();
+            }
+            let done = queue.lock().unwrap().is_empty()
+                && results.lock().unwrap().iter().all(|r| r.is_some());
+            if done {
+                break;
+            }
+        }
+
+        self.counters.count(&self.counters.rounds, 1);
+        self.counters
+            .count(&self.counters.round_us, t0.elapsed().as_micros() as u64);
+        let out = results.into_inner().unwrap();
+        Ok(out.into_iter().map(|r| r.expect("all chunks gathered")).collect())
+    }
+
+    /// Distributed evaluation round (DD rounds, final evaluations).
+    pub(crate) fn eval_round(
+        &self,
+        shards: Shards,
+        kk: usize,
+        lambda: &[f64],
+    ) -> Result<RoundAgg> {
+        let geo = Geometry::of(shards);
+        let parts = self.gather(shards.count(), |lo, hi| Msg::EvalTask {
+            geo,
+            lo: lo as u64,
+            hi: hi as u64,
+            lambda: lambda.to_vec(),
+        })?;
+        let mut agg = RoundAgg::new(kk);
+        for part in parts {
+            match part {
+                Msg::EvalPartial(a) if a.consumption.len() == kk => agg = agg.merge(a),
+                other => return Err(unexpected("eval-partial", &other)),
+            }
+        }
+        Ok(agg)
+    }
+
+    /// Distributed SCD round.
+    pub(crate) fn scd_round(&self, shards: Shards, spec: &ScdRoundSpec<'_>) -> Result<ScdAcc> {
+        let geo = Geometry::of(shards);
+        let kk = spec.lambda.len();
+        let parts = self.gather(shards.count(), |lo, hi| Msg::ScdTask {
+            geo,
+            lo: lo as u64,
+            hi: hi as u64,
+            lambda: spec.lambda.to_vec(),
+            active: spec.active_mask.to_vec(),
+            sparse_q: spec.sparse_q,
+            reduce: spec.reduce,
+        })?;
+        let mut acc = ScdAcc::new(spec.reduce, spec.lambda);
+        for part in parts {
+            match part {
+                Msg::ScdPartial(a)
+                    if a.round.consumption.len() == kk
+                        && thresholds_fit(&a.thresholds, spec.reduce, kk) =>
+                {
+                    acc = acc.merge(a)
+                }
+                other => return Err(unexpected("scd-partial", &other)),
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Distributed §5.4 ranking round.
+    pub(crate) fn rank_round(&self, shards: Shards, lambda: &[f64]) -> Result<Vec<(f32, u32)>> {
+        let geo = Geometry::of(shards);
+        let parts = self.gather(shards.count(), |lo, hi| Msg::RankTask {
+            geo,
+            lo: lo as u64,
+            hi: hi as u64,
+            lambda: lambda.to_vec(),
+        })?;
+        let n_groups = shards.n_total() as u32;
+        let mut ranked = Vec::new();
+        for part in parts {
+            match part {
+                Msg::RankPartial(r) if r.iter().all(|&(_, i)| i < n_groups) => ranked.extend(r),
+                other => return Err(unexpected("rank-partial", &other)),
+            }
+        }
+        Ok(ranked)
+    }
+}
+
+/// Does a shipped threshold accumulator have the variant and width the
+/// round expects? (A fingerprint-verified worker always satisfies this;
+/// the check turns a hypothetical protocol bug into a clean error instead
+/// of a mis-merge.)
+fn thresholds_fit(t: &ThresholdAcc, reduce: ReduceMode, kk: usize) -> bool {
+    match (t, reduce) {
+        (ThresholdAcc::Exact(v), ReduceMode::Exact) => v.len() == kk,
+        (ThresholdAcc::Bucketed(h), ReduceMode::Bucketed { .. }) => h.len() == kk,
+        _ => false,
+    }
+}
+
+fn unexpected(want: &str, got: &Msg) -> Error {
+    Error::Runtime(format!(
+        "cluster protocol violation: expected a well-formed {want}, got {} \
+         (mismatched binaries?)",
+        got.name()
+    ))
+}
+
+impl Drop for RemoteCluster {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            if let Ok(mut link) = slot.lock() {
+                link.shutdown();
+            }
+        }
+    }
+}

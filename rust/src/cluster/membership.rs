@@ -1,0 +1,135 @@
+//! Leader-side worker membership: one link per configured worker address,
+//! with handshake, liveness and best-effort shutdown.
+
+use crate::cluster::protocol::{recv_msg, send_msg, InstanceFingerprint, Msg};
+use crate::error::{Error, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Shared wire counters (updated by every link, read by
+/// [`super::leader::RemoteCluster::stats`]). All loads/stores are relaxed:
+/// the counters are telemetry, not synchronization.
+#[derive(Debug, Default)]
+pub(crate) struct NetCounters {
+    pub(crate) bytes_sent: AtomicU64,
+    pub(crate) bytes_received: AtomicU64,
+    pub(crate) rounds: AtomicU64,
+    pub(crate) round_us: AtomicU64,
+    pub(crate) redispatches: AtomicU64,
+    pub(crate) workers_lost: AtomicU64,
+}
+
+impl NetCounters {
+    pub(crate) fn count(&self, counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// One leader→worker connection. Dead links keep their slot (and their
+/// address, for reporting) but `stream` is gone; a link never resurrects
+/// within a session — re-dispatch moves work to survivors instead.
+pub(crate) struct WorkerLink {
+    pub(crate) addr: String,
+    pub(crate) threads: usize,
+    stream: Option<TcpStream>,
+}
+
+impl WorkerLink {
+    /// Connect and run the `Hello`/`Welcome` handshake: protocol version
+    /// is enforced by the frame layer, the instance fingerprint here —
+    /// a worker serving a different store is refused before any task.
+    /// `connect_timeout` bounds the dial + handshake (short, so planning
+    /// reaches its fallback promptly); `exchange_timeout` is the per-task
+    /// bound installed for the rest of the session.
+    pub(crate) fn connect(
+        addr: &str,
+        fingerprint: &InstanceFingerprint,
+        connect_timeout: Duration,
+        exchange_timeout: Duration,
+    ) -> Result<Self> {
+        // try every resolved address (dual-stack hosts often resolve ::1
+        // first while the worker bound IPv4), keeping the last error
+        let socks: Vec<_> = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Runtime(format!("cannot resolve {addr}: {e}")))?
+            .collect();
+        if socks.is_empty() {
+            return Err(Error::Runtime(format!("{addr} resolves to no address")));
+        }
+        let mut stream = None;
+        let mut last_err = String::new();
+        for sock in &socks {
+            match TcpStream::connect_timeout(sock, connect_timeout) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = e.to_string(),
+            }
+        }
+        let mut stream = stream
+            .ok_or_else(|| Error::Runtime(format!("connect {addr}: {last_err}")))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(connect_timeout))?;
+        stream.set_write_timeout(Some(connect_timeout))?;
+        send_msg(&mut stream, &Msg::Hello { fingerprint: fingerprint.clone() })?;
+        let (reply, _) = recv_msg(&mut stream)?;
+        stream.set_read_timeout(Some(exchange_timeout))?;
+        stream.set_write_timeout(Some(exchange_timeout))?;
+        match reply {
+            Msg::Welcome { threads, fingerprint: theirs } => {
+                if &theirs != fingerprint {
+                    return Err(Error::Runtime(format!(
+                        "worker {addr} serves a different instance: leader has \
+                         [{fingerprint}], worker has [{theirs}]"
+                    )));
+                }
+                Ok(Self {
+                    addr: addr.to_string(),
+                    threads: threads.max(1) as usize,
+                    stream: Some(stream),
+                })
+            }
+            Msg::Abort { message } => {
+                Err(Error::Runtime(format!("worker {addr} refused the session: {message}")))
+            }
+            other => Err(Error::Runtime(format!(
+                "worker {addr} answered hello with {}",
+                other.name()
+            ))),
+        }
+    }
+
+    pub(crate) fn is_live(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    /// Drop the connection; the link stays dead for the session.
+    pub(crate) fn kill(&mut self) {
+        self.stream = None;
+    }
+
+    /// One synchronous request/response exchange. Any wire error leaves
+    /// the link intact for the caller to [`WorkerLink::kill`] — the caller
+    /// owns the re-dispatch decision.
+    pub(crate) fn exchange(&mut self, msg: &Msg, counters: &NetCounters) -> Result<Msg> {
+        let stream = self
+            .stream
+            .as_mut()
+            .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
+        let sent = send_msg(stream, msg)?;
+        counters.count(&counters.bytes_sent, sent as u64);
+        let (reply, received) = recv_msg(stream)?;
+        counters.count(&counters.bytes_received, received as u64);
+        Ok(reply)
+    }
+
+    /// Best-effort session close so the worker returns to accepting.
+    pub(crate) fn shutdown(&mut self) {
+        if let Some(stream) = self.stream.as_mut() {
+            let _ = send_msg(stream, &Msg::Shutdown);
+        }
+        self.stream = None;
+    }
+}

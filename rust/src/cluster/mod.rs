@@ -1,0 +1,56 @@
+//! L4 — the distributed cluster runtime.
+//!
+//! The paper runs its solvers on "off-the-shelf distributed computing
+//! frameworks (e.g. MPI, Hadoop, Spark)" (§4, footnote 2). This module is
+//! that layer for real machines: a zero-dependency MPI-style runtime on
+//! `std::net::TcpStream` that executes the same *map → combine → reduce*
+//! contract as the in-process [`crate::mapreduce::Cluster`], so
+//! `solve_scd` / `solve_dd` run unchanged on either executor
+//! (see [`Exec`]).
+//!
+//! * **Workers** (`pallas worker --listen <addr> --store <dir>`) memory-map
+//!   their copy of the PR-1 shard store and wait for task frames; each task
+//!   names a contiguous chunk of the global shard partition, and the worker
+//!   folds it with its own thread pool ([`worker`]).
+//! * **The leader** ([`RemoteCluster`]) broadcasts the per-round state
+//!   (λ, active coordinates, reduce mode) inside each task, gathers the
+//!   map-side-combined partials, and merges them **in chunk order** with
+//!   compensated sums — the same deterministic merge discipline as the
+//!   thread pool, so results are reproducible across worker counts and
+//!   across executors.
+//! * **The wire** (`frames`, `protocol`) is length-prefixed binary
+//!   frames, each payload protected by the store's XXH64
+//!   ([`crate::instance::store::xxh64`]); a version + instance fingerprint
+//!   handshake ([`InstanceFingerprint`]) refuses mismatched binaries or
+//!   mismatched stores before any work is dispatched.
+//!   `docs/cluster-protocol.md` is the normative spec.
+//! * **Failure handling** (`membership`, `leader`): a worker that times
+//!   out or drops its connection is marked dead, its in-flight chunk goes
+//!   back on the round's queue, and survivors re-execute it — the round
+//!   resumes from the λ it was dispatched with, so a lost worker costs one
+//!   chunk of recomputation, not the solve.
+
+pub(crate) mod exec;
+pub(crate) mod frames;
+pub(crate) mod leader;
+pub(crate) mod membership;
+pub(crate) mod protocol;
+pub(crate) mod wire;
+pub mod worker;
+
+pub use exec::Exec;
+pub use leader::{NetSnapshot, RemoteCluster};
+pub use protocol::InstanceFingerprint;
+
+/// Read a `PALLAS_*` millisecond knob, ignoring unparsable or zero
+/// values. Shared by the leader's exchange/connect timeouts and the
+/// worker's session idle bound so the knobs can never drift in parsing.
+pub(crate) fn env_ms(var: &str, default_ms: u64) -> std::time::Duration {
+    std::time::Duration::from_millis(
+        std::env::var(var)
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&ms| ms > 0)
+            .unwrap_or(default_ms),
+    )
+}

@@ -1,0 +1,570 @@
+//! Message vocabulary of the cluster wire protocol.
+//!
+//! Ten message kinds ride the [`super::frames`] layer: a two-message
+//! handshake (`Hello`/`Welcome`) that pins the protocol version and the
+//! instance fingerprint, three task kinds (one per map-round flavor:
+//! evaluation, SCD threshold emission, §5.4 ranking), their three partial
+//! kinds, plus `Abort` and `Shutdown`. Tasks are *self-contained*: shard
+//! geometry, chunk bounds and the full per-round broadcast state (λ,
+//! active mask, reduce mode) travel in every task, so a worker is
+//! stateless between frames and any task can be re-dispatched to any
+//! surviving worker after a failure.
+//!
+//! `docs/cluster-protocol.md` is the normative byte-level spec.
+
+use crate::cluster::wire::{corrupt, Dec, Enc};
+use crate::error::Result;
+use crate::instance::problem::{CostsBuf, GroupBuf, GroupSource};
+use crate::instance::shard::Shards;
+use crate::instance::store::xxh64;
+use crate::solver::bucketing::BucketHist;
+use crate::solver::config::ReduceMode;
+use crate::solver::rounds::RoundAgg;
+use crate::solver::scd::{ScdAcc, ThresholdAcc};
+use crate::util::KahanSum;
+use std::io::{Read, Write};
+
+/// Seed for the local-constraint hash.
+const LOCALS_SEED: u64 = 0x1A;
+/// Seed for the sampled-group data hash.
+const SAMPLE_SEED: u64 = 0xDA;
+
+/// Compact identity of an instance: dimensions, cost class, and hashes of
+/// the laminar local-constraint profile and three sampled groups' raw
+/// coefficients (first, middle, last). Exchanged in the handshake so a
+/// leader never dispatches work to a worker that mmap'd a different store
+/// — same-shape lookalikes included, since the sampled-data hash reads the
+/// actual coefficients.
+///
+/// Budgets are deliberately **not** part of the identity: the map phase
+/// never reads them (they enter only the leader-side reduce), and the
+/// production changed-budget re-solve (`resolve --budget-scale`) solves a
+/// budget-perturbed *view* of the same store — workers serving the
+/// unscaled replica are exactly right for it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstanceFingerprint {
+    pub(crate) n_groups: u64,
+    pub(crate) n_items: u32,
+    pub(crate) n_global: u32,
+    pub(crate) dense: bool,
+    pub(crate) locals_hash: u64,
+    pub(crate) sample_hash: u64,
+}
+
+impl InstanceFingerprint {
+    /// Fingerprint of any [`GroupSource`].
+    pub fn of<S: GroupSource + ?Sized>(source: &S) -> Self {
+        let dims = source.dims();
+        let mut locals_bytes = Vec::new();
+        for c in source.locals().constraints() {
+            locals_bytes.extend_from_slice(&(c.items.len() as u32).to_le_bytes());
+            for &j in &c.items {
+                locals_bytes.extend_from_slice(&j.to_le_bytes());
+            }
+            locals_bytes.extend_from_slice(&c.cap.to_le_bytes());
+        }
+        let mut sample_bytes = Vec::new();
+        if dims.n_groups > 0 {
+            let mut buf = GroupBuf::new(dims, source.is_dense());
+            for i in [0, dims.n_groups / 2, dims.n_groups - 1] {
+                source.fill_group(i, &mut buf);
+                for p in &buf.profits {
+                    sample_bytes.extend_from_slice(&p.to_le_bytes());
+                }
+                match &buf.costs {
+                    CostsBuf::Dense(b) => {
+                        for v in b {
+                            sample_bytes.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                    CostsBuf::Sparse { knap, cost } => {
+                        for k in knap {
+                            sample_bytes.extend_from_slice(&k.to_le_bytes());
+                        }
+                        for v in cost {
+                            sample_bytes.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        Self {
+            n_groups: dims.n_groups as u64,
+            n_items: dims.n_items as u32,
+            n_global: dims.n_global as u32,
+            dense: source.is_dense(),
+            locals_hash: xxh64(&locals_bytes, LOCALS_SEED),
+            sample_hash: xxh64(&sample_bytes, SAMPLE_SEED),
+        }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.n_groups)
+            .u32(self.n_items)
+            .u32(self.n_global)
+            .u8(self.dense as u8)
+            .u64(self.locals_hash)
+            .u64(self.sample_hash);
+    }
+
+    fn decode(d: &mut Dec<'_>) -> Result<Self> {
+        Ok(Self {
+            n_groups: d.u64()?,
+            n_items: d.u32()?,
+            n_global: d.u32()?,
+            dense: d.u8()? != 0,
+            locals_hash: d.u64()?,
+            sample_hash: d.u64()?,
+        })
+    }
+}
+
+impl std::fmt::Display for InstanceFingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "N={} M={} K={} {} locals#{:08x} data#{:08x}",
+            self.n_groups,
+            self.n_items,
+            self.n_global,
+            if self.dense { "dense" } else { "sparse" },
+            self.locals_hash as u32,
+            self.sample_hash as u32,
+        )
+    }
+}
+
+/// The global map-shard partition a task chunk refers to. Fixed by the
+/// leader's plan; workers rebuild the identical [`Shards`] from it so a
+/// chunk means the same group ranges on every machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Geometry {
+    pub(crate) n_total: u64,
+    pub(crate) shard_size: u64,
+}
+
+impl Geometry {
+    pub(crate) fn of(shards: Shards) -> Self {
+        Self { n_total: shards.n_total() as u64, shard_size: shards.shard_size() as u64 }
+    }
+
+    pub(crate) fn shards(&self) -> Result<Shards> {
+        if self.shard_size == 0 {
+            return Err(corrupt("zero shard size in task geometry"));
+        }
+        Ok(Shards::new(self.n_total as usize, self.shard_size as usize))
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.n_total).u64(self.shard_size);
+    }
+
+    fn decode(d: &mut Dec<'_>) -> Result<Self> {
+        Ok(Self { n_total: d.u64()?, shard_size: d.u64()? })
+    }
+}
+
+/// One protocol message. Kinds 1–2 handshake, 3–5 tasks (leader→worker),
+/// 6–8 partials (worker→leader), 9 abort, 10 shutdown.
+pub(crate) enum Msg {
+    /// Leader → worker: open the session. The worker refuses a fingerprint
+    /// that does not match its own store.
+    Hello { fingerprint: InstanceFingerprint },
+    /// Worker → leader: session accepted; advertises map-thread capacity.
+    Welcome { threads: u32, fingerprint: InstanceFingerprint },
+    /// Evaluate shard chunk `[lo, hi)` at fixed λ (DD round / final eval).
+    EvalTask { geo: Geometry, lo: u64, hi: u64, lambda: Vec<f64> },
+    /// One SCD round over shard chunk `[lo, hi)`.
+    ScdTask {
+        geo: Geometry,
+        lo: u64,
+        hi: u64,
+        lambda: Vec<f64>,
+        active: Vec<bool>,
+        sparse_q: Option<u32>,
+        reduce: ReduceMode,
+    },
+    /// §5.4 ranking over shard chunk `[lo, hi)`.
+    RankTask { geo: Geometry, lo: u64, hi: u64, lambda: Vec<f64> },
+    /// Reply to `EvalTask`.
+    EvalPartial(RoundAgg),
+    /// Reply to `ScdTask`.
+    ScdPartial(ScdAcc),
+    /// Reply to `RankTask`: `(p̃_i, group id)` pairs.
+    RankPartial(Vec<(f32, u32)>),
+    /// Either side: unrecoverable session error (mismatched store, invalid
+    /// task). The connection closes after this frame.
+    Abort { message: String },
+    /// Leader → worker: end the session; the worker returns to accepting.
+    Shutdown,
+}
+
+impl Msg {
+    pub(crate) fn kind(&self) -> u16 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Welcome { .. } => 2,
+            Msg::EvalTask { .. } => 3,
+            Msg::ScdTask { .. } => 4,
+            Msg::RankTask { .. } => 5,
+            Msg::EvalPartial(_) => 6,
+            Msg::ScdPartial(_) => 7,
+            Msg::RankPartial(_) => 8,
+            Msg::Abort { .. } => 9,
+            Msg::Shutdown => 10,
+        }
+    }
+
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Welcome { .. } => "welcome",
+            Msg::EvalTask { .. } => "eval-task",
+            Msg::ScdTask { .. } => "scd-task",
+            Msg::RankTask { .. } => "rank-task",
+            Msg::EvalPartial(_) => "eval-partial",
+            Msg::ScdPartial(_) => "scd-partial",
+            Msg::RankPartial(_) => "rank-partial",
+            Msg::Abort { .. } => "abort",
+            Msg::Shutdown => "shutdown",
+        }
+    }
+
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Msg::Hello { fingerprint } => fingerprint.encode(&mut e),
+            Msg::Welcome { threads, fingerprint } => {
+                e.u32(*threads);
+                fingerprint.encode(&mut e);
+            }
+            Msg::EvalTask { geo, lo, hi, lambda } | Msg::RankTask { geo, lo, hi, lambda } => {
+                geo.encode(&mut e);
+                e.u64(*lo).u64(*hi).f64s(lambda);
+            }
+            Msg::ScdTask { geo, lo, hi, lambda, active, sparse_q, reduce } => {
+                geo.encode(&mut e);
+                e.u64(*lo).u64(*hi).f64s(lambda);
+                e.u64(active.len() as u64);
+                for &a in active {
+                    e.u8(a as u8);
+                }
+                match sparse_q {
+                    Some(q) => e.u8(1).u32(*q),
+                    None => e.u8(0),
+                };
+                match reduce {
+                    ReduceMode::Exact => e.u8(0),
+                    ReduceMode::Bucketed { delta } => e.u8(1).f64(*delta),
+                };
+            }
+            Msg::EvalPartial(agg) => encode_agg(&mut e, agg),
+            Msg::ScdPartial(acc) => {
+                encode_agg(&mut e, &acc.round);
+                encode_thresholds(&mut e, &acc.thresholds);
+            }
+            Msg::RankPartial(ranked) => {
+                e.u64(ranked.len() as u64);
+                for &(v, i) in ranked {
+                    e.f32(v).u32(i);
+                }
+            }
+            Msg::Abort { message } => {
+                e.str(message);
+            }
+            Msg::Shutdown => {}
+        }
+        e.into_bytes()
+    }
+
+    pub(crate) fn decode(kind: u16, payload: &[u8]) -> Result<Msg> {
+        let mut d = Dec::new(payload);
+        let msg = match kind {
+            1 => Msg::Hello { fingerprint: InstanceFingerprint::decode(&mut d)? },
+            2 => Msg::Welcome {
+                threads: d.u32()?,
+                fingerprint: InstanceFingerprint::decode(&mut d)?,
+            },
+            3 | 5 => {
+                let geo = Geometry::decode(&mut d)?;
+                let (lo, hi) = (d.u64()?, d.u64()?);
+                let lambda = d.f64s()?;
+                if kind == 3 {
+                    Msg::EvalTask { geo, lo, hi, lambda }
+                } else {
+                    Msg::RankTask { geo, lo, hi, lambda }
+                }
+            }
+            4 => {
+                let geo = Geometry::decode(&mut d)?;
+                let (lo, hi) = (d.u64()?, d.u64()?);
+                let lambda = d.f64s()?;
+                let n_active = d.len()?;
+                let mut active = Vec::with_capacity(n_active);
+                for _ in 0..n_active {
+                    active.push(d.u8()? != 0);
+                }
+                let sparse_q = if d.u8()? != 0 { Some(d.u32()?) } else { None };
+                let reduce = match d.u8()? {
+                    0 => ReduceMode::Exact,
+                    1 => {
+                        let delta = d.f64()?;
+                        if !(delta > 0.0) {
+                            return Err(corrupt("non-positive bucketing delta"));
+                        }
+                        ReduceMode::Bucketed { delta }
+                    }
+                    _ => return Err(corrupt("unknown reduce mode")),
+                };
+                Msg::ScdTask { geo, lo, hi, lambda, active, sparse_q, reduce }
+            }
+            6 => Msg::EvalPartial(decode_agg(&mut d)?),
+            7 => {
+                let round = decode_agg(&mut d)?;
+                let thresholds = decode_thresholds(&mut d)?;
+                Msg::ScdPartial(ScdAcc { round, thresholds })
+            }
+            8 => {
+                let n = d.len_of(8)?;
+                let mut ranked = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let v = d.f32()?;
+                    let i = d.u32()?;
+                    ranked.push((v, i));
+                }
+                Msg::RankPartial(ranked)
+            }
+            9 => Msg::Abort { message: d.str()? },
+            10 => Msg::Shutdown,
+            other => return Err(corrupt(&format!("unknown message kind {other}"))),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+fn encode_kahan(e: &mut Enc, k: &KahanSum) {
+    let (sum, comp) = k.parts();
+    e.f64(sum).f64(comp);
+}
+
+fn decode_kahan(d: &mut Dec<'_>) -> Result<KahanSum> {
+    Ok(KahanSum::from_parts(d.f64()?, d.f64()?))
+}
+
+fn encode_agg(e: &mut Enc, agg: &RoundAgg) {
+    e.u64(agg.consumption.len() as u64);
+    for k in &agg.consumption {
+        encode_kahan(e, k);
+    }
+    encode_kahan(e, &agg.primal);
+    encode_kahan(e, &agg.dual_inner);
+    e.u64(agg.n_selected);
+}
+
+fn decode_agg(d: &mut Dec<'_>) -> Result<RoundAgg> {
+    let k = d.len_of(16)?;
+    let mut agg = RoundAgg::new(0);
+    agg.consumption = (0..k).map(|_| decode_kahan(d)).collect::<Result<_>>()?;
+    agg.primal = decode_kahan(d)?;
+    agg.dual_inner = decode_kahan(d)?;
+    agg.n_selected = d.u64()?;
+    Ok(agg)
+}
+
+fn encode_thresholds(e: &mut Enc, t: &ThresholdAcc) {
+    match t {
+        ThresholdAcc::Exact(per_k) => {
+            e.u8(0).u64(per_k.len() as u64);
+            for pairs in per_k {
+                e.u64(pairs.len() as u64);
+                for &(v1, v2) in pairs {
+                    e.f64(v1).f64(v2);
+                }
+            }
+        }
+        ThresholdAcc::Bucketed(hists) => {
+            e.u8(1).u64(hists.len() as u64);
+            let mut words = Vec::with_capacity(BucketHist::wire_len());
+            for h in hists {
+                words.clear();
+                h.to_wire(&mut words);
+                for &w in &words {
+                    e.f64(w);
+                }
+            }
+        }
+    }
+}
+
+fn decode_thresholds(d: &mut Dec<'_>) -> Result<ThresholdAcc> {
+    match d.u8()? {
+        0 => {
+            let k = d.len_of(8)?;
+            let mut per_k = Vec::with_capacity(k);
+            for _ in 0..k {
+                // the count prefix is checked against the remaining payload
+                // (so a corrupt prefix cannot force a huge allocation);
+                // every pair read below is bounds-checked besides
+                let n = d.len_of(16)?;
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let v1 = d.f64()?;
+                    let v2 = d.f64()?;
+                    pairs.push((v1, v2));
+                }
+                per_k.push(pairs);
+            }
+            Ok(ThresholdAcc::Exact(per_k))
+        }
+        1 => {
+            let k = d.len_of(BucketHist::wire_len() * 8)?;
+            let mut hists = Vec::with_capacity(k);
+            let mut words = vec![0.0f64; BucketHist::wire_len()];
+            for _ in 0..k {
+                for w in words.iter_mut() {
+                    *w = d.f64()?;
+                }
+                hists.push(
+                    BucketHist::from_wire(&words)
+                        .ok_or_else(|| corrupt("invalid bucket histogram"))?,
+                );
+            }
+            Ok(ThresholdAcc::Bucketed(hists))
+        }
+        _ => Err(corrupt("unknown threshold accumulator tag")),
+    }
+}
+
+/// Send one message; returns bytes written.
+pub(crate) fn send_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<usize> {
+    let payload = msg.encode();
+    super::frames::write_frame(w, msg.kind(), &payload)
+}
+
+/// Receive one message; returns it with the bytes read.
+pub(crate) fn recv_msg<R: Read>(r: &mut R) -> Result<(Msg, usize)> {
+    let (kind, payload, n) = super::frames::read_frame(r)?;
+    Ok((Msg::decode(kind, &payload)?, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+    use crate::util::KahanSum;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        send_msg(&mut buf, msg).unwrap();
+        let (back, n) = recv_msg(&mut buf.as_slice()).unwrap();
+        assert_eq!(n, buf.len());
+        back
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_lookalike_instances() {
+        let a = SyntheticProblem::new(GeneratorConfig::sparse(500, 6, 6).with_seed(1));
+        let b = SyntheticProblem::new(GeneratorConfig::sparse(500, 6, 6).with_seed(2));
+        let (fa, fb) = (InstanceFingerprint::of(&a), InstanceFingerprint::of(&b));
+        // same dims, class and locals: only the sampled-data hash differs
+        assert_ne!(fa, fb);
+        assert_ne!(fa.sample_hash, fb.sample_hash);
+        assert_eq!(fa.locals_hash, fb.locals_hash);
+
+        // a budget-perturbed view of the same instance keeps its identity —
+        // that is what lets `resolve --budget-scale` run distributed
+        // against workers serving the unscaled store
+        let scaled = crate::solve::ScaledBudgets::uniform(&a, 1.05).unwrap();
+        assert_eq!(InstanceFingerprint::of(&scaled), fa);
+        assert_eq!(fa, InstanceFingerprint::of(&a));
+    }
+
+    #[test]
+    fn task_messages_roundtrip() {
+        let geo = Geometry { n_total: 10_000, shard_size: 256 };
+        let msg = Msg::ScdTask {
+            geo,
+            lo: 3,
+            hi: 9,
+            lambda: vec![0.5, 0.0, 2.25],
+            active: vec![true, false, true],
+            sparse_q: Some(7),
+            reduce: ReduceMode::Bucketed { delta: 1e-6 },
+        };
+        match roundtrip(&msg) {
+            Msg::ScdTask { geo: g, lo, hi, lambda, active, sparse_q, reduce } => {
+                assert_eq!(g, geo);
+                assert_eq!((lo, hi), (3, 9));
+                assert_eq!(lambda, vec![0.5, 0.0, 2.25]);
+                assert_eq!(active, vec![true, false, true]);
+                assert_eq!(sparse_q, Some(7));
+                assert_eq!(reduce, ReduceMode::Bucketed { delta: 1e-6 });
+            }
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn partials_roundtrip_bit_exact() {
+        let mut agg = RoundAgg::new(2);
+        agg.consumption[0].add(1e16);
+        agg.consumption[0].add(1.0); // non-zero compensation term
+        agg.consumption[1].add(-3.5);
+        agg.primal.add(42.0);
+        agg.dual_inner.add(41.5);
+        agg.n_selected = 17;
+        let back = match roundtrip(&Msg::EvalPartial(agg.clone())) {
+            Msg::EvalPartial(a) => a,
+            other => panic!("wrong kind back: {}", other.name()),
+        };
+        let bits = |k: &KahanSum| {
+            let (s, c) = k.parts();
+            (s.to_bits(), c.to_bits())
+        };
+        assert_eq!(bits(&back.primal), bits(&agg.primal));
+        assert_eq!(bits(&back.dual_inner), bits(&agg.dual_inner));
+        for (x, y) in back.consumption.iter().zip(&agg.consumption) {
+            assert_eq!(bits(x), bits(y));
+        }
+        assert_eq!(back.n_selected, 17);
+
+        let mut thresholds = ThresholdAcc::new(ReduceMode::Exact, &[1.0, 1.0]);
+        match &mut thresholds {
+            ThresholdAcc::Exact(v) => {
+                v[0].push((2.5, 0.75));
+                v[1].push((0.125, 3.0));
+            }
+            _ => unreachable!(),
+        }
+        let acc = ScdAcc { round: agg, thresholds };
+        match roundtrip(&Msg::ScdPartial(acc)) {
+            Msg::ScdPartial(back) => match back.thresholds {
+                ThresholdAcc::Exact(v) => {
+                    assert_eq!(v[0], vec![(2.5, 0.75)]);
+                    assert_eq!(v[1], vec![(0.125, 3.0)]);
+                }
+                _ => panic!("wrong threshold variant"),
+            },
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn handshake_and_control_roundtrip() {
+        let p = SyntheticProblem::new(GeneratorConfig::dense(50, 4, 3).with_seed(9));
+        let fp = InstanceFingerprint::of(&p);
+        match roundtrip(&Msg::Welcome { threads: 8, fingerprint: fp.clone() }) {
+            Msg::Welcome { threads, fingerprint } => {
+                assert_eq!(threads, 8);
+                assert_eq!(fingerprint, fp);
+            }
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+        assert!(matches!(roundtrip(&Msg::Shutdown), Msg::Shutdown));
+        match roundtrip(&Msg::Abort { message: "nope".into() }) {
+            Msg::Abort { message } => assert_eq!(message, "nope"),
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Little-endian payload encoding.
+//!
+//! The offline registry has no serde; messages are packed by hand with
+//! these two helpers. Floats travel as raw IEEE-754 bits, so partial
+//! accumulators (Kahan sums, bucket histograms) survive the trip
+//! bit-for-bit — a prerequisite for the determinism contract.
+
+use crate::error::{Error, Result};
+
+pub(crate) fn corrupt(what: &str) -> Error {
+    Error::Runtime(format!("cluster wire: malformed frame payload ({what})"))
+}
+
+/// Append-only payload builder.
+#[derive(Default)]
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub(crate) fn f32(&mut self, v: f32) -> &mut Self {
+        self.u32(v.to_bits())
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) -> &mut Self {
+        self.u64(v.to_bits())
+    }
+
+    pub(crate) fn f64s(&mut self, vs: &[f64]) -> &mut Self {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.f64(v);
+        }
+        self
+    }
+
+    pub(crate) fn str(&mut self, s: &str) -> &mut Self {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor over a received payload; every read is bounds-checked so a
+/// truncated or hostile frame surfaces as a clean error, never a panic.
+pub(crate) struct Dec<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Self {
+        Self { b }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() < n {
+            return Err(corrupt("truncated"));
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A `u64` that will be used as an element count: capped so a corrupt
+    /// length prefix cannot trigger a huge allocation before the data runs
+    /// out anyway.
+    pub(crate) fn len(&mut self) -> Result<usize> {
+        self.len_of(1)
+    }
+
+    /// An element count for elements of `elem_bytes` wire bytes each —
+    /// rejects any count the remaining payload cannot possibly hold.
+    pub(crate) fn len_of(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(elem_bytes.max(1)) > self.b.len() {
+            return Err(corrupt("length prefix exceeds payload"));
+        }
+        Ok(n)
+    }
+
+    pub(crate) fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_of(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| corrupt("non-utf8 string"))
+    }
+
+    pub(crate) fn finish(self) -> Result<()> {
+        if self.b.is_empty() {
+            Ok(())
+        } else {
+            Err(corrupt("trailing bytes"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut e = Enc::new();
+        e.u8(7).u32(70_000).u64(1 << 40).f32(1.5).f64(-0.1).f64s(&[1.0, 2.0]).str("héllo");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), 1 << 40);
+        assert_eq!(d.f32().unwrap(), 1.5);
+        assert_eq!(d.f64().unwrap(), -0.1);
+        assert_eq!(d.f64s().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(d.str().unwrap(), "héllo");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.u64(5);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..4]);
+        assert!(d.u64().is_err());
+        // absurd length prefix: rejected before allocation
+        let mut e = Enc::new();
+        e.u64(u64::MAX);
+        let bytes = e.into_bytes();
+        assert!(Dec::new(&bytes).f64s().is_err());
+        assert!(Dec::new(&bytes).str().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut e = Enc::new();
+        e.u8(1).u8(2);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        d.u8().unwrap();
+        assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn float_bits_are_preserved() {
+        // NaN payloads and signed zero must survive (Kahan compensation
+        // terms can be -0.0; bucket bounds start at ±inf)
+        for v in [f64::NAN, -0.0, f64::INFINITY, f64::NEG_INFINITY, 1e-308] {
+            let mut e = Enc::new();
+            e.f64(v);
+            let bytes = e.into_bytes();
+            let got = Dec::new(&bytes).f64().unwrap();
+            assert_eq!(got.to_bits(), v.to_bits());
+        }
+    }
+}

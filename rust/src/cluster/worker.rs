@@ -1,0 +1,212 @@
+//! The worker process loop (`pallas worker --listen <addr> --store <dir>`).
+//!
+//! A worker memory-maps its replica of the shard store once, then serves
+//! leader sessions one at a time: handshake (protocol version at the frame
+//! layer, instance fingerprint here), then a stream of task frames, each
+//! naming a chunk of the global shard partition plus the round's full
+//! broadcast state. Workers are **stateless between frames** — that is
+//! what makes leader-side re-dispatch after a failure safe — and survive
+//! leader disconnects by returning to `accept`.
+
+use crate::cluster::frames;
+use crate::cluster::protocol::{recv_msg, send_msg, InstanceFingerprint, Msg};
+use crate::error::{Error, Result};
+use crate::instance::problem::GroupSource;
+use crate::instance::store::MmapProblem;
+use crate::mapreduce::Cluster;
+use crate::solver::postprocess::rank_chunk;
+use crate::solver::rounds::{evaluation_chunk, RustEvaluator};
+use crate::solver::scd::{scd_round_chunk, ScdRoundSpec};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+/// Open the store under `dir` and serve leader sessions on `listener`
+/// forever (returns only if the listener itself fails, or on a store-open
+/// error). `pool` is the worker's map thread pool; its size is what the
+/// handshake advertises as capacity.
+pub fn serve(listener: TcpListener, dir: &Path, pool: &Cluster) -> Result<()> {
+    let problem = MmapProblem::open(dir)?;
+    serve_source(listener, &problem, pool)
+}
+
+/// [`serve`] over an already-open source — what tests use to run loopback
+/// workers in-thread against a store they just wrote.
+pub fn serve_source<S: GroupSource + ?Sized>(
+    listener: TcpListener,
+    source: &S,
+    pool: &Cluster,
+) -> Result<()> {
+    source.validate()?;
+    let fingerprint = InstanceFingerprint::of(source);
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else {
+            // persistent accept failure (fd exhaustion, ...) must not
+            // become a 100%-CPU spin; breathe, then retry
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            continue;
+        };
+        // a failed session (leader vanished, corrupt frame) ends the
+        // connection, never the worker
+        let _ = session(stream, source, &fingerprint, pool);
+    }
+    Ok(())
+}
+
+/// Idle bound on one leader session: a leader that vanished without
+/// FIN/RST (host power loss, network partition) must not wedge the
+/// worker's single accept loop forever. Within a live solve the leader
+/// sends the next task as soon as a reply lands, so real gaps are round-
+/// scale, far below this. Override with `PALLAS_WORKER_IDLE_TIMEOUT_MS`.
+const DEFAULT_IDLE_TIMEOUT_MS: u64 = 600_000;
+
+/// One leader session: loop over frames until shutdown, error, or idle
+/// timeout (after which the worker returns to `accept`). Tasks are only
+/// served after a successful `Hello` handshake — the fingerprint check
+/// happens *before any work*, as the protocol spec requires.
+fn session<S: GroupSource + ?Sized>(
+    mut stream: TcpStream,
+    source: &S,
+    fingerprint: &InstanceFingerprint,
+    pool: &Cluster,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let idle = crate::cluster::env_ms("PALLAS_WORKER_IDLE_TIMEOUT_MS", DEFAULT_IDLE_TIMEOUT_MS);
+    stream.set_read_timeout(Some(idle))?;
+    let mut greeted = false;
+    loop {
+        let (msg, _) = recv_msg(&mut stream)?;
+        if !greeted && !matches!(msg, Msg::Hello { .. } | Msg::Shutdown) {
+            let abort = Msg::Abort {
+                message: format!("{} frame before the hello handshake", msg.name()),
+            };
+            send_msg(&mut stream, &abort)?;
+            return Ok(());
+        }
+        let reply = match msg {
+            Msg::Hello { fingerprint: leaders } => {
+                if &leaders != fingerprint {
+                    let abort = Msg::Abort {
+                        message: format!(
+                            "instance fingerprint mismatch: leader has [{leaders}], this \
+                             worker's store has [{fingerprint}]"
+                        ),
+                    };
+                    send_msg(&mut stream, &abort)?;
+                    return Ok(());
+                }
+                greeted = true;
+                Msg::Welcome { threads: pool.workers() as u32, fingerprint: fingerprint.clone() }
+            }
+            Msg::EvalTask { geo, lo, hi, lambda } => {
+                match check_task(source, geo, lo, hi, &lambda) {
+                    Err(e) => abort(e),
+                    Ok((shards, lo, hi)) => {
+                        let kk = source.dims().n_global;
+                        Msg::EvalPartial(evaluation_chunk(
+                            &RustEvaluator::new(source),
+                            shards,
+                            lo,
+                            hi,
+                            kk,
+                            &lambda,
+                            pool,
+                        ))
+                    }
+                }
+            }
+            Msg::ScdTask { geo, lo, hi, lambda, active, sparse_q, reduce } => {
+                match check_task(source, geo, lo, hi, &lambda) {
+                    Err(e) => abort(e),
+                    Ok(_) if active.len() != lambda.len() => {
+                        abort(Error::Runtime("active mask length != λ length".into()))
+                    }
+                    Ok((shards, lo, hi)) => {
+                        let spec = ScdRoundSpec {
+                            lambda: &lambda,
+                            active_mask: &active,
+                            sparse_q,
+                            reduce,
+                        };
+                        Msg::ScdPartial(scd_round_chunk(source, shards, lo, hi, &spec, pool))
+                    }
+                }
+            }
+            Msg::RankTask { geo, lo, hi, lambda } => {
+                match check_task(source, geo, lo, hi, &lambda) {
+                    Err(e) => abort(e),
+                    Ok((shards, lo, hi)) => {
+                        Msg::RankPartial(rank_chunk(source, shards, lo, hi, &lambda, pool))
+                    }
+                }
+            }
+            Msg::Shutdown => return Ok(()),
+            other => abort(Error::Runtime(format!(
+                "unexpected {} frame from the leader",
+                other.name()
+            ))),
+        };
+        // an oversized partial (exact-mode threshold lists at extreme N)
+        // must become a diagnosable Abort, not a torn connection the
+        // leader would misread as a dead worker and cascade through the
+        // fleet
+        let mut reply = reply;
+        let mut payload = reply.encode();
+        if payload.len() as u64 > frames::MAX_PAYLOAD {
+            reply = abort(Error::Runtime(format!(
+                "chunk partial of {} bytes exceeds the {} B frame cap — use \
+                 ReduceMode::Bucketed (§5.2) for distributed solves at this scale",
+                payload.len(),
+                frames::MAX_PAYLOAD
+            )));
+            payload = reply.encode();
+        }
+        let is_abort = matches!(reply, Msg::Abort { .. });
+        frames::write_frame(&mut stream, reply.kind(), &payload)?;
+        if is_abort {
+            return Ok(());
+        }
+    }
+}
+
+fn abort(e: Error) -> Msg {
+    Msg::Abort { message: e.to_string() }
+}
+
+/// Validate a task against the local store: the geometry must be sane and
+/// describe this instance, the chunk must lie inside it, λ must be K-wide.
+/// Every violation becomes an `Abort` reply (not a dropped connection), so
+/// the leader reports the real defect instead of a chain of "dead"
+/// workers. (A fingerprint-verified leader always passes; this guards the
+/// session against protocol bugs without trusting the network.)
+fn check_task<S: GroupSource + ?Sized>(
+    source: &S,
+    geo: crate::cluster::protocol::Geometry,
+    lo: u64,
+    hi: u64,
+    lambda: &[f64],
+) -> Result<(crate::instance::shard::Shards, usize, usize)> {
+    let shards = geo.shards()?;
+    let dims = source.dims();
+    if shards.n_total() != dims.n_groups {
+        return Err(Error::Runtime(format!(
+            "task geometry covers {} groups, this store has {}",
+            shards.n_total(),
+            dims.n_groups
+        )));
+    }
+    if lambda.len() != dims.n_global {
+        return Err(Error::Runtime(format!(
+            "task λ has {} entries, this store has K={}",
+            lambda.len(),
+            dims.n_global
+        )));
+    }
+    let (lo, hi) = (lo as usize, hi as usize);
+    if lo > hi || hi > shards.count() {
+        return Err(Error::Runtime(format!(
+            "task chunk [{lo}, {hi}) outside the {}-shard partition",
+            shards.count()
+        )));
+    }
+    Ok((shards, lo, hi))
+}

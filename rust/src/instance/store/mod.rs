@@ -27,5 +27,6 @@ pub mod mmap;
 pub mod reader;
 pub mod writer;
 
+pub use checksum::xxh64;
 pub use reader::MmapProblem;
 pub use writer::{write_source, ShardWriter, StoreMeta, StoreSummary};

@@ -6,8 +6,13 @@
 //! problems with global knapsack constraints and hierarchical (laminar)
 //! per-group local constraints.
 //!
-//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//! The crate is the **Layer-3 rust coordinator** of a four-layer stack:
 //!
+//! * **L4 ([`cluster`])** — the distributed runtime: `pallas worker`
+//!   processes serving their shard-store replicas over a checksummed TCP
+//!   wire protocol, driven by a leader that re-dispatches work around
+//!   failures. `bskp solve --cluster host:port,...` runs the same solvers
+//!   across machines.
 //! * **L3 (this crate)** — problem model, MapReduce-style execution engine,
 //!   the paper's algorithms (Alg 1–5 plus the §5 speedups), LP-relaxation
 //!   bound, metrics and a CLI.
@@ -64,6 +69,7 @@
 //! remain as thin wrappers for benchmarks that need tight control.
 
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod error;
 pub mod exact;

@@ -30,6 +30,24 @@ impl Cluster {
         )
     }
 
+    /// The environment-configured pool: `PALLAS_WORKERS=<n>` overrides the
+    /// hardware-thread default (useful for pinning worker processes to a
+    /// core budget, and for reproducing a fixed-parallelism run). Ignores
+    /// unparsable or zero values and falls back to [`Cluster::available`].
+    pub fn configured() -> Self {
+        Self::from_env_override(std::env::var("PALLAS_WORKERS").ok().as_deref())
+    }
+
+    /// [`Cluster::configured`]'s parsing, separated so tests never have to
+    /// mutate the process environment (set_var racing getenv is UB on
+    /// glibc).
+    fn from_env_override(value: Option<&str>) -> Self {
+        match value.and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n > 0 => Self::new(n),
+            _ => Self::available(),
+        }
+    }
+
     /// Number of map workers.
     pub fn workers(&self) -> usize {
         self.workers
@@ -190,6 +208,17 @@ mod tests {
         let c = Cluster::new(4);
         let out = c.map_shards(10, |i| data[i * 10..(i + 1) * 10].iter().sum::<u64>());
         assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn env_override_parsing() {
+        // exercised through the pure helper so the parallel test runner
+        // never mutates the process environment
+        assert_eq!(Cluster::from_env_override(Some("3")).workers(), 3);
+        let cores = Cluster::available().workers();
+        assert_eq!(Cluster::from_env_override(Some("zero?")).workers(), cores);
+        assert_eq!(Cluster::from_env_override(Some("0")).workers(), cores);
+        assert_eq!(Cluster::from_env_override(None).workers(), cores);
     }
 
     #[test]

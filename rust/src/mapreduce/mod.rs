@@ -16,6 +16,10 @@
 //! Determinism: shard results are merged in shard order, and floating-point
 //! reductions use compensated sums, so solver output is reproducible for
 //! any worker count.
+//!
+//! The multi-machine sibling lives in [`crate::cluster`]: the same
+//! map→combine→reduce contract over TCP worker processes, selected per
+//! solve through [`crate::cluster::Exec`].
 
 mod engine;
 mod pool;

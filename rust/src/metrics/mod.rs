@@ -26,6 +26,7 @@ pub fn plan_to_json(p: &SolvePlan<'_>) -> JsonValue {
     JsonValue::Object(vec![
         ("algorithm".to_string(), JsonValue::Str(algorithm.to_string())),
         ("backend".to_string(), JsonValue::Str(p.backend.name().to_string())),
+        ("executor".to_string(), JsonValue::Str(p.executor().to_string())),
         ("reduce".to_string(), JsonValue::Str(reduce)),
         ("workers".to_string(), JsonValue::Num(p.cluster.workers() as f64)),
         ("shard_count".to_string(), JsonValue::Num(p.shard_count as f64)),
@@ -61,6 +62,24 @@ pub fn plan_to_json(p: &SolvePlan<'_>) -> JsonValue {
                     .collect(),
             ),
         ),
+    ])
+}
+
+/// Serialize a cluster wire-statistics snapshot
+/// ([`crate::cluster::NetSnapshot`]) as JSON (stable key order) — what
+/// `solve --cluster --json` appends so CI and benches can assert on
+/// per-round network cost, not just the solution.
+pub fn cluster_to_json(s: &crate::cluster::NetSnapshot) -> JsonValue {
+    JsonValue::Object(vec![
+        ("workers_total".to_string(), JsonValue::Num(s.workers_total as f64)),
+        ("workers_live".to_string(), JsonValue::Num(s.workers_live as f64)),
+        ("capacity".to_string(), JsonValue::Num(s.capacity as f64)),
+        ("rounds".to_string(), JsonValue::Num(s.rounds as f64)),
+        ("round_ms".to_string(), JsonValue::Num(s.round_ms)),
+        ("bytes_sent".to_string(), JsonValue::Num(s.bytes_sent as f64)),
+        ("bytes_received".to_string(), JsonValue::Num(s.bytes_received as f64)),
+        ("redispatches".to_string(), JsonValue::Num(s.redispatches as f64)),
+        ("workers_lost".to_string(), JsonValue::Num(s.workers_lost as f64)),
     ])
 }
 

@@ -253,7 +253,8 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
         wall_ms: 0.0,
     };
     if config.postprocess && !report.is_feasible() {
-        postprocess::enforce_feasibility(source, &mut report, cluster)?;
+        let exec = crate::cluster::Exec::Local(cluster);
+        postprocess::enforce_feasibility(source, &mut report, &exec)?;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(obs) = observer.as_mut() {

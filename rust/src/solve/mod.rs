@@ -47,6 +47,7 @@ pub use crate::solver::stats::{
     HistoryObserver, ObserverControl, RoundEvent, SolveObserver, SolveReport,
 };
 
+use crate::cluster::RemoteCluster;
 use crate::coordinator::{Algorithm, Backend};
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
@@ -55,6 +56,7 @@ use crate::mapreduce::Cluster;
 use crate::solver::config::{ReduceMode, SolverConfig};
 use crate::solver::sparse_q;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Default checkpoint cadence (rounds) when none is given.
 pub const DEFAULT_CHECKPOINT_EVERY: usize = 5;
@@ -78,6 +80,7 @@ pub struct Solve<'a> {
     source: &'a dyn GroupSource,
     config: SolverConfig,
     cluster: Option<Cluster>,
+    cluster_addrs: Vec<String>,
     algorithm: Algorithm,
     backend: Backend,
     warm: Option<WarmStart>,
@@ -93,6 +96,7 @@ impl<'a> Solve<'a> {
             source,
             config: SolverConfig::default(),
             cluster: None,
+            cluster_addrs: Vec::new(),
             algorithm: Algorithm::Scd,
             backend: Backend::Rust,
             warm: None,
@@ -119,9 +123,25 @@ impl<'a> Solve<'a> {
         self
     }
 
-    /// Use this worker pool (default: [`Cluster::available`]).
+    /// Use this worker pool (default: [`Cluster::configured`], i.e. all
+    /// hardware threads unless `PALLAS_WORKERS` says otherwise).
     pub fn cluster(mut self, c: Cluster) -> Self {
         self.cluster = Some(c);
+        self
+    }
+
+    /// Run the map rounds on a fleet of `pallas worker` processes at these
+    /// `host:port` addresses (each serving its replica of the instance's
+    /// shard store). Planning is capability-based, like the backend: when
+    /// the source has no on-disk store, or no worker is reachable, the
+    /// plan falls back to the in-process pool and records a
+    /// [`PlanNote`] saying why.
+    pub fn distributed<I, A>(mut self, addrs: I) -> Self
+    where
+        I: IntoIterator<Item = A>,
+        A: Into<String>,
+    {
+        self.cluster_addrs = addrs.into_iter().map(Into::into).collect();
         self
     }
 
@@ -178,24 +198,71 @@ impl<'a> Solve<'a> {
             }
         }
 
-        let backend = self.plan_backend(&mut notes);
+        let mut backend = self.plan_backend(&mut notes);
+        let cluster = self.cluster.unwrap_or_else(Cluster::configured);
+
+        // distributed executor: capability-checked like the backend — every
+        // reason it cannot run lands in the notes and the solve proceeds
+        // in-process instead of erroring. The backend override happens only
+        // once a fleet actually attaches, so a failed attach leaves the
+        // planned (possibly XLA) backend intact for the in-process run.
+        let mut remote: Option<Arc<RemoteCluster>> = None;
+        if !self.cluster_addrs.is_empty() {
+            if self.source.store_dir().is_none() {
+                notes.push(PlanNote::new(
+                    "executor",
+                    "distributed solve requires an on-disk shard store (workers mmap their \
+                     replica of it); this source has none — using the in-process pool",
+                ));
+            } else {
+                match RemoteCluster::connect(&self.cluster_addrs, self.source) {
+                    Ok((rc, skipped)) => {
+                        for s in skipped {
+                            notes.push(PlanNote::new("executor", s));
+                        }
+                        if backend != PlannedBackend::Rust {
+                            notes.push(PlanNote::new(
+                                "executor",
+                                format!(
+                                    "distributed execution drives the pure-rust map phase; \
+                                     overriding the planned {} backend",
+                                    backend.name()
+                                ),
+                            ));
+                            backend = PlannedBackend::Rust;
+                        }
+                        remote = Some(Arc::new(rc.with_leader_pool(cluster.clone())));
+                    }
+                    Err(e) => notes.push(PlanNote::new(
+                        "executor",
+                        format!("{e} — using the in-process pool"),
+                    )),
+                }
+            }
+        }
 
         if self.config.reduce == ReduceMode::Exact && dims.n_vars() >= EXACT_REDUCE_ADVISORY_VARS
         {
+            let wire = if remote.is_some() {
+                " — and, distributed, ships every emission over the wire \
+                 (bucketed partials are O(K) per chunk, immune to the frame cap)"
+            } else {
+                ""
+            };
             notes.push(PlanNote::new(
                 "reduce",
                 format!(
                     "exact reduce keeps every threshold emission for {} decision variables in \
-                     memory; consider ReduceMode::Bucketed (§5.2) at this scale",
+                     memory{wire}; consider ReduceMode::Bucketed (§5.2) at this scale",
                     dims.n_vars()
                 ),
             ));
         }
 
-        let cluster = self.cluster.unwrap_or_else(Cluster::available);
+        let map_parallelism = remote.as_ref().map_or(cluster.workers(), |r| r.capacity());
         let shards = Shards::plan(
             dims.n_groups,
-            cluster.workers(),
+            map_parallelism,
             self.source.preferred_shard_size(),
             self.config.shard_size,
         );
@@ -222,6 +289,7 @@ impl<'a> Solve<'a> {
         Ok(SolvePlan {
             source: self.source,
             cluster,
+            remote,
             config: self.config,
             algorithm: self.algorithm,
             backend,
@@ -358,6 +426,27 @@ mod tests {
         assert!(plan.checkpoint.is_none());
         assert!(plan.notes.iter().any(|n| n.stage == "checkpoint"));
         // and the solve still runs fine
+        assert!(plan.run().unwrap().is_feasible());
+    }
+
+    #[test]
+    fn distributed_without_store_falls_back_with_note() {
+        // synthetic sources have no on-disk store for workers to mmap, so
+        // the planner must fall back in-process before touching the
+        // network (the bogus address is never dialed)
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(200, 4, 4).with_seed(9));
+        let plan = Solve::on(&p)
+            .cluster(Cluster::new(1))
+            .distributed(["127.0.0.1:9"])
+            .plan()
+            .unwrap();
+        assert_eq!(plan.executor(), "in-process");
+        assert!(plan.remote_handle().is_none());
+        assert!(
+            plan.notes.iter().any(|n| n.stage == "executor"),
+            "missing executor note: {:?}",
+            plan.notes
+        );
         assert!(plan.run().unwrap().is_feasible());
     }
 

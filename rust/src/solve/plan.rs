@@ -7,6 +7,7 @@
 //! a human-readable [`PlanNote`] for every such decision (this replaces
 //! the old `Coordinator` behavior of erroring on mismatch).
 
+use crate::cluster::{Exec, RemoteCluster};
 use crate::coordinator::Algorithm;
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
@@ -18,6 +19,7 @@ use crate::solver::stats::{SolveObserver, SolveReport};
 use crate::solver::{dd, scd};
 use std::fmt;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// One planning decision worth telling the user about — most importantly
 /// the reason for every fallback from a requested-but-unsupported
@@ -94,8 +96,12 @@ pub struct CheckpointPlan {
 /// it.
 pub struct SolvePlan<'a> {
     pub(crate) source: &'a dyn GroupSource,
-    /// Worker pool the map phase will use.
+    /// Worker pool the map phase will use (when no remote fleet is
+    /// attached — and, either way, the pool for leader-local phases).
     pub cluster: Cluster,
+    /// A connected `pallas worker` fleet, when the session asked for
+    /// [`crate::solve::Solve::distributed`] and a worker was reachable.
+    pub(crate) remote: Option<Arc<RemoteCluster>>,
     /// Solver parameters (as passed; warm start overrides its `lambda0`).
     pub config: SolverConfig,
     /// DD or SCD.
@@ -136,6 +142,15 @@ impl fmt::Display for SolvePlan<'_> {
             dims.n_items,
             dims.n_global,
         )?;
+        if let Some(r) = &self.remote {
+            writeln!(
+                f,
+                "  executor: distributed ({} workers at [{}], capacity {})",
+                r.workers(),
+                r.addrs().join(", "),
+                r.capacity()
+            )?;
+        }
         match &self.warm {
             Some(w) => writeln!(f, "  λ0: warm start from {}", w.provenance)?,
             None => match &self.config.presolve {
@@ -158,6 +173,22 @@ impl<'a> SolvePlan<'a> {
     /// so the plan is self-describing).
     pub fn reduce(&self) -> ReduceMode {
         self.config.reduce
+    }
+
+    /// `"distributed"` when a worker fleet is attached, else
+    /// `"in-process"`.
+    pub fn executor(&self) -> &'static str {
+        if self.remote.is_some() {
+            "distributed"
+        } else {
+            "in-process"
+        }
+    }
+
+    /// A handle on the attached worker fleet, if any — clone it before
+    /// [`SolvePlan::run`] to read [`RemoteCluster::stats`] afterwards.
+    pub fn remote_handle(&self) -> Option<Arc<RemoteCluster>> {
+        self.remote.clone()
     }
 
     /// Execute the plan.
@@ -193,12 +224,18 @@ impl<'a> SolvePlan<'a> {
 
         let init = self.warm.as_ref().map(|w| w.lambda.as_slice());
         let (source, config, cluster) = (self.source, &self.config, &self.cluster);
+        // the planner only attaches a remote fleet to the pure-rust
+        // backend; XLA paths below always run on the in-process pool
+        let exec = match &self.remote {
+            Some(r) => Exec::Remote(r.as_ref()),
+            None => Exec::Local(cluster),
+        };
         match (self.algorithm, &self.backend) {
             (Algorithm::Scd, PlannedBackend::Rust) => {
-                scd::solve_scd_driven(source, config, cluster, init, observer)
+                scd::solve_scd_exec(source, config, &exec, init, observer)
             }
             (Algorithm::Dd, PlannedBackend::Rust) => {
-                dd::solve_dd_driven(source, config, cluster, init, observer)
+                dd::solve_dd_exec(source, config, &exec, init, observer)
             }
             (Algorithm::Scd, PlannedBackend::XlaScdSparse { artifacts_dir }) => {
                 let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;

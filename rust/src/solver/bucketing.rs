@@ -104,6 +104,37 @@ impl BucketHist {
         self.pos.iter().chain(&self.neg).map(|b| b.w).sum()
     }
 
+    /// Number of `f64` words [`BucketHist::to_wire`] emits: center, delta,
+    /// then `(w, wv, lo, hi)` for every positive- and negative-side bucket.
+    pub(crate) const fn wire_len() -> usize {
+        2 + 2 * HALF * 4
+    }
+
+    /// Flatten the histogram into `out` for the cluster wire protocol
+    /// (exactly [`BucketHist::wire_len`] words, bit-preserving).
+    pub(crate) fn to_wire(&self, out: &mut Vec<f64>) {
+        out.push(self.center);
+        out.push(self.delta);
+        for b in self.pos.iter().chain(&self.neg) {
+            out.extend_from_slice(&[b.w, b.wv, b.lo, b.hi]);
+        }
+    }
+
+    /// Rebuild a histogram from [`BucketHist::to_wire`] words. Returns
+    /// `None` when `v` is shorter than [`BucketHist::wire_len`] or the
+    /// delta is not positive (corrupt or hostile frame).
+    pub(crate) fn from_wire(v: &[f64]) -> Option<Self> {
+        if v.len() < Self::wire_len() || !(v[1] > 0.0) {
+            return None;
+        }
+        let mut h = BucketHist::new(v[0], v[1]);
+        for (i, b) in h.pos.iter_mut().chain(&mut h.neg).enumerate() {
+            let at = 2 + i * 4;
+            *b = Bucket { w: v[at], wv: v[at + 1], lo: v[at + 2], hi: v[at + 3] };
+        }
+        Some(h)
+    }
+
     /// The §5.2 reduce: walk buckets from the highest λ down; when the
     /// cumulative consumption would cross the budget inside a bucket,
     /// *interpolate within that bucket* (paper: "approximate the value of
@@ -203,6 +234,27 @@ mod tests {
                 "exact {exact} vs bucketed {approx}"
             );
         }
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_reduce_bits() {
+        let mut h = BucketHist::new(1.25, 1e-5);
+        for (v1, v2) in [(0.9, 1.0), (1.2500001, 2.0), (7.0, 1.5), (0.0, 0.5)] {
+            h.add(v1, v2);
+        }
+        let mut words = Vec::new();
+        h.to_wire(&mut words);
+        assert_eq!(words.len(), BucketHist::wire_len());
+        let back = BucketHist::from_wire(&words).expect("valid wire form");
+        assert_eq!(back.total().to_bits(), h.total().to_bits());
+        for budget in [0.1, 1.0, 2.4, 10.0] {
+            assert_eq!(back.reduce(budget).to_bits(), h.reduce(budget).to_bits());
+        }
+        // truncated and corrupt forms are rejected
+        assert!(BucketHist::from_wire(&words[..words.len() - 1]).is_none());
+        let mut bad = words.clone();
+        bad[1] = 0.0; // delta must stay positive
+        assert!(BucketHist::from_wire(&bad).is_none());
     }
 
     #[test]

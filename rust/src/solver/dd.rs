@@ -10,6 +10,7 @@
 //! The paper's critique (§4.3.2) — α must be tuned and the iterates are
 //! prone to constraint violations — is reproduced by the Fig 5/6 bench.
 
+use crate::cluster::Exec;
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
@@ -65,6 +66,49 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
     config: &SolverConfig,
     cluster: &Cluster,
     init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
+    let k = source.dims().n_global;
+    dd_drive(
+        source,
+        config,
+        &Exec::Local(cluster),
+        &|shards, lambda| Ok(evaluation_round(evaluator, shards, k, lambda, cluster)),
+        init,
+        observer,
+    )
+}
+
+/// Dual descent on the executor abstraction: the pure-rust map phase runs
+/// on the in-process pool ([`Exec::Local`]) or a TCP worker fleet
+/// ([`Exec::Remote`]) — leader-side update and reporting are identical.
+/// (The XLA-evaluator path stays on [`solve_dd_with_driven`]: custom
+/// evaluators cannot cross a process boundary.)
+pub fn solve_dd_exec<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    exec: &Exec<'_>,
+    init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
+    let k = source.dims().n_global;
+    dd_drive(
+        source,
+        config,
+        exec,
+        &|shards, lambda| exec.eval_round(source, shards, k, lambda),
+        init,
+        observer,
+    )
+}
+
+/// Shared Algorithm-2 loop; `round` evaluates one map round at fixed λ.
+fn dd_drive<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    exec: &Exec<'_>,
+    round: &dyn Fn(Shards, &[f64]) -> Result<RoundAgg>,
+    init: Option<&[f64]>,
     mut observer: Option<&mut dyn SolveObserver>,
 ) -> Result<SolveReport> {
     config.validate()?;
@@ -76,12 +120,13 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
     // in-memory sources) so out-of-core workers touch whole files
     let shards = Shards::plan(
         dims.n_groups,
-        cluster.workers(),
+        exec.map_parallelism(),
         source.preferred_shard_size(),
         config.shard_size,
     );
 
-    let mut lambda = crate::solver::scd::initial_lambda(source, config, cluster, init)?;
+    let mut lambda =
+        crate::solver::scd::initial_lambda(source, config, exec.local_pool(), init)?;
 
     let mut history = Vec::new();
     let mut last_agg: Option<RoundAgg> = None;
@@ -91,7 +136,7 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
 
     for t in 0..config.max_iters {
         let it0 = std::time::Instant::now();
-        let agg = evaluation_round(evaluator, shards, dims.n_global, &lambda, cluster);
+        let agg = round(shards, &lambda)?;
         let consumption = agg.consumption_values();
 
         // leader-side dual-descent update
@@ -134,7 +179,7 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
     // feasibility decision post-processing makes) match report.lambda —
     // the same self-consistency contract the SCD drivers keep
     let agg = if stopped {
-        evaluation_round(evaluator, shards, dims.n_global, &lambda, cluster)
+        round(shards, &lambda)?
     } else {
         last_agg.expect("max_iters ≥ 1 ran at least one round")
     };
@@ -152,7 +197,7 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
         wall_ms: 0.0,
     };
     if config.postprocess && !report.is_feasible() {
-        postprocess::enforce_feasibility(source, &mut report, cluster)?;
+        postprocess::enforce_feasibility(source, &mut report, exec)?;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(obs) = observer.as_mut() {

@@ -11,6 +11,7 @@
 //! (the group's contribution to the dual objective) and zero out groups in
 //! non-decreasing order of `p̃_i` until every global constraint holds.
 
+use crate::cluster::Exec;
 use crate::error::Result;
 use crate::instance::problem::{GroupBuf, GroupSource};
 use crate::instance::shard::Shards;
@@ -19,30 +20,28 @@ use crate::solver::adjusted::{accumulate_selection, adjusted_profits};
 use crate::solver::greedy::{greedy_select, GroupScratch};
 use crate::solver::stats::SolveReport;
 
-/// Zero out lowest-`p̃_i` groups until the report's consumption fits the
-/// budgets; updates `consumption`, `primal_value`, `n_selected` and
-/// `dropped_groups` in place.
-pub fn enforce_feasibility<S: GroupSource + ?Sized>(
+/// Rank the contiguous shard chunk `[lo, hi)`: gather `(p̃_i, i)` for every
+/// group with a non-empty selection — the map phase of §5.4, and the unit
+/// a cluster worker executes for one rank task frame.
+pub(crate) fn rank_chunk<S: GroupSource + ?Sized>(
     source: &S,
-    report: &mut SolveReport,
+    shards: Shards,
+    lo: usize,
+    hi: usize,
+    lambda: &[f64],
     cluster: &Cluster,
-) -> Result<()> {
+) -> Vec<(f32, u32)> {
     let dims = source.dims();
-    let shards =
-        Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None);
-    let lambda = report.lambda.clone();
-
-    // map: gather (p̃_i, i) for every group with a non-empty selection
-    let mut ranked: Vec<(f32, u32)> = cluster.map_combine(
-        shards.count(),
+    cluster.map_combine(
+        hi.saturating_sub(lo),
         Vec::new,
         |acc: &mut Vec<(f32, u32)>, idx| {
-            let shard = shards.get(idx);
+            let shard = shards.get(lo + idx);
             let mut buf = GroupBuf::new(dims, source.is_dense());
             let mut scratch = GroupScratch::new(dims.n_items);
             for i in shard.iter() {
                 source.fill_group(i, &mut buf);
-                adjusted_profits(&buf, &lambda, &mut scratch.ptilde);
+                adjusted_profits(&buf, lambda, &mut scratch.ptilde);
                 greedy_select(source.locals(), &mut scratch);
                 let ptilde_i: f64 = scratch
                     .ptilde
@@ -60,7 +59,26 @@ pub fn enforce_feasibility<S: GroupSource + ?Sized>(
             a.extend(b);
             a
         },
-    );
+    )
+}
+
+/// Zero out lowest-`p̃_i` groups until the report's consumption fits the
+/// budgets; updates `consumption`, `primal_value`, `n_selected` and
+/// `dropped_groups` in place. The ranking map phase runs on the executor
+/// (distributed when the solve is); the drop walk below is inherently
+/// sequential and stays on the leader, which holds the source either way.
+pub fn enforce_feasibility<S: GroupSource + ?Sized>(
+    source: &S,
+    report: &mut SolveReport,
+    exec: &Exec<'_>,
+) -> Result<()> {
+    let dims = source.dims();
+    let shards =
+        Shards::plan(dims.n_groups, exec.map_parallelism(), source.preferred_shard_size(), None);
+    let lambda = report.lambda.clone();
+
+    // map: gather (p̃_i, i) for every group with a non-empty selection
+    let mut ranked: Vec<(f32, u32)> = exec.rank_round(source, shards, &lambda)?;
     // ascending cost-adjusted group profit; ties by id for determinism
     ranked.sort_unstable_by(|a, b| {
         a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
@@ -139,7 +157,7 @@ mod tests {
         let mut r = report_at(&p, vec![0.05; 10], &cluster);
         assert!(!r.is_feasible(), "premise: must start infeasible");
         let before_primal = r.primal_value;
-        enforce_feasibility(&p, &mut r, &cluster).unwrap();
+        enforce_feasibility(&p, &mut r, &Exec::Local(&cluster)).unwrap();
         assert!(r.is_feasible());
         assert!(r.dropped_groups > 0);
         assert!(r.primal_value < before_primal);
@@ -153,7 +171,7 @@ mod tests {
         let mut r = report_at(&p, vec![50.0; 8], &cluster); // λ huge → tiny selection
         assert!(r.is_feasible());
         let primal = r.primal_value;
-        enforce_feasibility(&p, &mut r, &cluster).unwrap();
+        enforce_feasibility(&p, &mut r, &Exec::Local(&cluster)).unwrap();
         assert_eq!(r.dropped_groups, 0);
         assert_eq!(r.primal_value, primal);
     }
@@ -168,7 +186,7 @@ mod tests {
         if r.is_feasible() {
             return; // unlucky seed; premise gone
         }
-        enforce_feasibility(&p, &mut r, &cluster).unwrap();
+        enforce_feasibility(&p, &mut r, &Exec::Local(&cluster)).unwrap();
         for (c, b) in r.consumption.iter().zip(&r.budgets) {
             assert!(c <= b, "consumption {c} exceeds budget {b}");
         }

@@ -133,10 +133,25 @@ pub fn evaluation_round<E: ShardEvaluator>(
     lambda: &[f64],
     cluster: &Cluster,
 ) -> RoundAgg {
+    evaluation_chunk(evaluator, shards, 0, shards.count(), n_global, lambda, cluster)
+}
+
+/// Evaluate the contiguous shard chunk `[lo, hi)` of the global partition —
+/// the unit a cluster worker executes for one evaluation task frame. The
+/// full-round case is `lo = 0, hi = shards.count()` ([`evaluation_round`]).
+pub(crate) fn evaluation_chunk<E: ShardEvaluator>(
+    evaluator: &E,
+    shards: Shards,
+    lo: usize,
+    hi: usize,
+    n_global: usize,
+    lambda: &[f64],
+    cluster: &Cluster,
+) -> RoundAgg {
     cluster.map_combine(
-        shards.count(),
+        hi.saturating_sub(lo),
         || RoundAgg::new(n_global),
-        |agg, idx| evaluator.eval_shard(shards.get(idx), lambda, agg),
+        |agg, idx| evaluator.eval_shard(shards.get(lo + idx), lambda, agg),
         RoundAgg::merge,
     )
 }

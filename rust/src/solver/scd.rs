@@ -16,6 +16,7 @@
 //! is why SCD's constraint violations are near-zero and smooth where DD's
 //! are large and ragged (Figures 5–6).
 
+use crate::cluster::Exec;
 use crate::error::Result;
 use crate::instance::problem::{GroupBuf, GroupSource};
 use crate::instance::shard::Shards;
@@ -104,14 +105,18 @@ pub fn exact_threshold_reduce(pairs: &mut [(f64, f64)], budget: f64) -> f64 {
     0.0
 }
 
-/// Per-coordinate threshold accumulators (the shuffle state).
-enum ThresholdAcc {
+/// Per-coordinate threshold accumulators (the shuffle state). Crate-public
+/// so the cluster wire protocol can ship a worker's partial back to the
+/// leader ([`crate::cluster::protocol`]).
+pub(crate) enum ThresholdAcc {
+    /// Every `(v1, v2)` emission, per coordinate (exact Algorithm-4 reduce).
     Exact(Vec<Vec<(f64, f64)>>),
+    /// §5.2 exponential histograms, per coordinate.
     Bucketed(Vec<BucketHist>),
 }
 
 impl ThresholdAcc {
-    fn new(mode: ReduceMode, lambda: &[f64]) -> Self {
+    pub(crate) fn new(mode: ReduceMode, lambda: &[f64]) -> Self {
         match mode {
             ReduceMode::Exact => ThresholdAcc::Exact(vec![Vec::new(); lambda.len()]),
             ReduceMode::Bucketed { delta } => ThresholdAcc::Bucketed(
@@ -128,7 +133,7 @@ impl ThresholdAcc {
         }
     }
 
-    fn merge(&mut self, other: ThresholdAcc) {
+    pub(crate) fn merge(&mut self, other: ThresholdAcc) {
         match (self, other) {
             (ThresholdAcc::Exact(a), ThresholdAcc::Exact(b)) => {
                 for (x, y) in a.iter_mut().zip(b) {
@@ -152,9 +157,70 @@ impl ThresholdAcc {
     }
 }
 
-struct ScdAcc {
-    round: RoundAgg,
-    thresholds: ThresholdAcc,
+/// One SCD map partial: evaluation aggregate plus threshold emissions.
+/// This is the map→combine unit for both executors — an in-process worker
+/// thread folds shards into one, and a remote worker ships one per chunk.
+pub(crate) struct ScdAcc {
+    pub(crate) round: RoundAgg,
+    pub(crate) thresholds: ThresholdAcc,
+}
+
+impl ScdAcc {
+    pub(crate) fn new(reduce: ReduceMode, lambda: &[f64]) -> Self {
+        Self {
+            round: RoundAgg::new(lambda.len()),
+            thresholds: ThresholdAcc::new(reduce, lambda),
+        }
+    }
+
+    /// Merge `other` into `self` (call in shard/chunk order for
+    /// reproducible floating-point results).
+    pub(crate) fn merge(mut self, other: ScdAcc) -> Self {
+        self.round = std::mem::replace(&mut self.round, RoundAgg::new(0)).merge(other.round);
+        self.thresholds.merge(other.thresholds);
+        self
+    }
+}
+
+/// Everything a mapper needs to know about one SCD round beyond the shard
+/// geometry: the broadcast λ, the active-coordinate mask, the Algorithm-5
+/// eligibility decision and the reduce mode. The leader builds one per
+/// round; the cluster protocol ships it verbatim so remote workers run the
+/// exact computation the in-process pool would.
+pub(crate) struct ScdRoundSpec<'a> {
+    pub(crate) lambda: &'a [f64],
+    pub(crate) active_mask: &'a [bool],
+    pub(crate) sparse_q: Option<u32>,
+    pub(crate) reduce: ReduceMode,
+}
+
+/// Map the contiguous shard chunk `[lo, hi)` of the global partition for
+/// one SCD round — the unit a cluster worker executes for one SCD task
+/// frame, and (with `lo = 0, hi = shards.count()`) the whole in-process
+/// round.
+pub(crate) fn scd_round_chunk<S: GroupSource + ?Sized>(
+    source: &S,
+    shards: Shards,
+    lo: usize,
+    hi: usize,
+    spec: &ScdRoundSpec<'_>,
+    cluster: &Cluster,
+) -> ScdAcc {
+    cluster.map_combine(
+        hi.saturating_sub(lo),
+        || ScdAcc::new(spec.reduce, spec.lambda),
+        |acc, idx| {
+            scd_map_shard(
+                source,
+                shards.get(lo + idx),
+                spec.lambda,
+                spec.active_mask,
+                spec.sparse_q,
+                acc,
+            )
+        },
+        ScdAcc::merge,
+    )
 }
 
 /// Solve with synchronous (or cyclic/block) coordinate descent.
@@ -174,6 +240,20 @@ pub fn solve_scd_driven<S: GroupSource + ?Sized>(
     config: &SolverConfig,
     cluster: &Cluster,
     init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
+    solve_scd_exec(source, config, &Exec::Local(cluster), init, observer)
+}
+
+/// The full SCD driver, parameterized over the round executor: the same
+/// map→combine→reduce contract runs on the in-process pool
+/// ([`Exec::Local`]) or on a TCP worker fleet ([`Exec::Remote`]); the
+/// leader-side λ update, convergence logic and reporting are identical.
+pub fn solve_scd_exec<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    exec: &Exec<'_>,
+    init: Option<&[f64]>,
     mut observer: Option<&mut dyn SolveObserver>,
 ) -> Result<SolveReport> {
     config.validate()?;
@@ -186,13 +266,14 @@ pub fn solve_scd_driven<S: GroupSource + ?Sized>(
     // in-memory sources) so out-of-core workers touch whole files
     let shards = Shards::plan(
         dims.n_groups,
-        cluster.workers(),
+        exec.map_parallelism(),
         source.preferred_shard_size(),
         config.shard_size,
     );
     let sparse_q = if config.use_sparse_fast_path { sparse_q::eligible(source) } else { None };
 
-    let mut lambda = initial_lambda(source, config, cluster, init)?;
+    // §5.3 pre-solving samples a few thousand groups — always leader-local
+    let mut lambda = initial_lambda(source, config, exec.local_pool(), init)?;
 
     // under-relaxation: dense instances couple every coordinate with every
     // other (an item consumes all K knapsacks), so the undamped synchronous
@@ -224,28 +305,13 @@ pub fn solve_scd_driven<S: GroupSource + ?Sized>(
             active_mask[k] = true;
         }
 
-        let acc = cluster.map_combine(
-            shards.count(),
-            || ScdAcc {
-                round: RoundAgg::new(kk),
-                thresholds: ThresholdAcc::new(config.reduce, &lambda),
-            },
-            |acc, idx| {
-                scd_map_shard(
-                    source,
-                    shards.get(idx),
-                    &lambda,
-                    &active_mask,
-                    sparse_q,
-                    acc,
-                )
-            },
-            |mut a, b| {
-                a.round = std::mem::replace(&mut a.round, RoundAgg::new(0)).merge(b.round);
-                a.thresholds.merge(b.thresholds);
-                a
-            },
-        );
+        let spec = ScdRoundSpec {
+            lambda: &lambda,
+            active_mask: &active_mask,
+            sparse_q,
+            reduce: config.reduce,
+        };
+        let acc = exec.scd_round(source, shards, &spec)?;
         let ScdAcc { round, mut thresholds } = acc;
         let consumption = round.consumption_values();
 
@@ -316,15 +382,14 @@ pub fn solve_scd_driven<S: GroupSource + ?Sized>(
 
     // the recorded aggregate is for λ^{T-1}; re-evaluate at the final λ so
     // the report is self-consistent
-    let eval = crate::solver::rounds::RustEvaluator::new(source);
     let agg = if converged && iterations > 0 {
         // λ barely moved; the last aggregate is within tolerance, but the
         // final evaluation keeps the primal/consumption exactly matched to
         // the reported λ
-        crate::solver::rounds::evaluation_round(&eval, shards, kk, &lambda, cluster)
+        exec.eval_round(source, shards, kk, &lambda)?
     } else {
         match final_agg {
-            Some(_) => crate::solver::rounds::evaluation_round(&eval, shards, kk, &lambda, cluster),
+            Some(_) => exec.eval_round(source, shards, kk, &lambda)?,
             None => RoundAgg::new(kk),
         }
     };
@@ -343,7 +408,7 @@ pub fn solve_scd_driven<S: GroupSource + ?Sized>(
         wall_ms: 0.0,
     };
     if config.postprocess && !report.is_feasible() {
-        postprocess::enforce_feasibility(source, &mut report, cluster)?;
+        postprocess::enforce_feasibility(source, &mut report, exec)?;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(obs) = observer.as_mut() {

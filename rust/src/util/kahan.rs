@@ -42,6 +42,22 @@ impl KahanSum {
     pub fn value(&self) -> f64 {
         self.sum + self.comp
     }
+
+    /// The raw `(sum, compensation)` state. Together with
+    /// [`KahanSum::from_parts`] this lets partial accumulators cross a
+    /// process boundary (the cluster wire protocol) without losing the
+    /// compensation term — merging shipped partials then produces exactly
+    /// the bits an in-process merge would.
+    #[inline]
+    pub fn parts(&self) -> (f64, f64) {
+        (self.sum, self.comp)
+    }
+
+    /// Rebuild an accumulator from its [`KahanSum::parts`] state.
+    #[inline]
+    pub fn from_parts(sum: f64, comp: f64) -> Self {
+        Self { sum, comp }
+    }
 }
 
 impl std::iter::FromIterator<f64> for KahanSum {

@@ -1,0 +1,278 @@
+//! L4 distributed runtime: loopback end-to-end, determinism and failure
+//! recovery.
+//!
+//! Three executor configurations solve the *same* shard-store instance:
+//! the in-process pool at several worker counts, an in-thread loopback
+//! fleet (workers running `serve_source` inside this process), and real
+//! `bskp worker` **OS processes** driven over TCP. λ and the objective
+//! must agree bit-for-bit everywhere — the merge discipline (chunk-order,
+//! compensated sums) is what makes that hold, and these tests are its
+//! contract. The kill test SIGKILLs one of three worker processes
+//! mid-solve and requires the leader to re-dispatch the lost chunks and
+//! finish with the untouched answer.
+
+use bskp::cluster::{worker, Exec, RemoteCluster};
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::store::MmapProblem;
+use bskp::mapreduce::Cluster;
+use bskp::solve::Solve;
+use bskp::solver::dd::solve_dd;
+use bskp::solver::scd::{solve_scd, solve_scd_exec};
+use bskp::solver::stats::{ObserverControl, RoundEvent, SolveObserver};
+use bskp::solver::SolverConfig;
+use std::io::{BufRead, BufReader};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_cluster_it_{}_{name}", std::process::id()))
+}
+
+/// Generate a sparse instance and write its shard store; returns the dir.
+fn write_store(name: &str, n: usize, seed: u64) -> (PathBuf, SyntheticProblem) {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(n, 6, 6).with_seed(seed));
+    let dir = tmp_dir(name);
+    std::fs::remove_dir_all(&dir).ok();
+    p.write_shards(&dir, 256, &Cluster::new(2)).expect("write store");
+    (dir, p)
+}
+
+/// Spawn an in-thread loopback worker on an ephemeral port.
+fn spawn_thread_worker(dir: &Path, threads: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let dir = dir.to_path_buf();
+    std::thread::spawn(move || {
+        let problem = MmapProblem::open(&dir).expect("worker opens store");
+        let pool = Cluster::new(threads);
+        let _ = worker::serve_source(listener, &problem, &pool);
+    });
+    addr
+}
+
+/// A real `bskp worker` OS process; killed on drop.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(store: &Path) -> Self {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_bskp"))
+            .args([
+                "worker",
+                "--listen",
+                "127.0.0.1:0",
+                "--store",
+                store.to_str().unwrap(),
+                "--workers",
+                "1",
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn bskp worker");
+        // the worker announces its ephemeral port on the first stdout line
+        let mut line = String::new();
+        BufReader::new(child.stdout.take().expect("worker stdout"))
+            .read_line(&mut line)
+            .expect("read worker announcement");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable worker announcement: {line:?}"))
+            .to_string();
+        Self { child, addr }
+    }
+
+    fn kill(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn fixed_rounds_config(iters: usize) -> SolverConfig {
+    // tol low enough that the solver always runs exactly `iters` rounds,
+    // so λ trajectories are comparable step by step
+    SolverConfig { max_iters: iters, tol: 1e-15, shard_size: Some(64), ..Default::default() }
+}
+
+/// The acceptance-criteria test: ≥ 2 real worker processes vs the
+/// in-process pool at worker counts {1, 2, 8} — identical λ trajectory
+/// endpoint and objective, bit for bit; and the report reaches the CLI
+/// layer with the executor recorded in the plan.
+#[test]
+fn two_worker_processes_match_in_process_bitwise() {
+    let (dir, _) = write_store("e2e", 2_500, 41);
+    let mm = MmapProblem::open(&dir).expect("leader opens store");
+    let cfg = fixed_rounds_config(8);
+
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(1)).unwrap();
+    for w in [2usize, 8] {
+        let r = solve_scd(&mm, &cfg, &Cluster::new(w)).unwrap();
+        assert_eq!(r.lambda, baseline.lambda, "λ drifted at {w} in-process workers");
+        assert_eq!(r.primal_value, baseline.primal_value, "objective drifted at {w} workers");
+        assert_eq!(r.n_selected, baseline.n_selected);
+    }
+
+    let mut w1 = WorkerProc::spawn(&dir);
+    let mut w2 = WorkerProc::spawn(&dir);
+    let plan = Solve::on(&mm)
+        .config(cfg.clone())
+        .cluster(Cluster::new(2))
+        .distributed([w1.addr.clone(), w2.addr.clone()])
+        .plan()
+        .expect("plan distributed");
+    assert_eq!(plan.executor(), "distributed");
+    assert!(
+        plan.notes.is_empty(),
+        "reachable fleet must plan without fallback notes: {:?}",
+        plan.notes
+    );
+    let fleet = plan.remote_handle().expect("fleet handle");
+    let distributed = plan.run().expect("distributed solve");
+
+    assert_eq!(distributed.lambda, baseline.lambda, "distributed λ must be bit-identical");
+    assert_eq!(distributed.primal_value, baseline.primal_value);
+    assert_eq!(distributed.dual_value, baseline.dual_value);
+    assert_eq!(distributed.n_selected, baseline.n_selected);
+    assert_eq!(distributed.iterations, baseline.iterations);
+
+    let stats = fleet.stats();
+    assert_eq!(stats.workers_total, 2);
+    assert_eq!(stats.workers_lost, 0);
+    assert!(
+        stats.rounds >= (distributed.iterations + 1) as u64,
+        "every solver round plus the final evaluation crossed the wire ({} gathers, {} iters)",
+        stats.rounds,
+        distributed.iterations
+    );
+    assert!(stats.bytes_sent > 0 && stats.bytes_received > 0);
+
+    w1.kill();
+    w2.kill();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Determinism across executors and worker counts for DD as well, using
+/// cheap in-thread loopback workers.
+#[test]
+fn dd_loopback_matches_in_process() {
+    let (dir, _) = write_store("dd", 1_500, 7);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = SolverConfig {
+        max_iters: 6,
+        dd_alpha: 2e-3,
+        tol: 1e-15,
+        shard_size: Some(64),
+        ..Default::default()
+    };
+    let baseline = solve_dd(&mm, &cfg, &Cluster::new(1)).unwrap();
+    let other = solve_dd(&mm, &cfg, &Cluster::new(8)).unwrap();
+    assert_eq!(baseline.lambda, other.lambda);
+
+    let addrs = [spawn_thread_worker(&dir, 1), spawn_thread_worker(&dir, 2)];
+    let report = Solve::on(&mm)
+        .algorithm(bskp::coordinator::Algorithm::Dd)
+        .config(cfg)
+        .distributed(addrs)
+        .run()
+        .expect("distributed dd");
+    assert_eq!(report.lambda, baseline.lambda, "DD λ must be bit-identical across executors");
+    assert_eq!(report.primal_value, baseline.primal_value);
+    assert_eq!(report.dropped_groups, baseline.dropped_groups, "§5.4 must agree too");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Observer that SIGKILLs a worker process after a given round, simulating
+/// a machine loss mid-solve.
+struct KillWorkerAt {
+    at: usize,
+    victim: Option<WorkerProc>,
+}
+
+impl SolveObserver for KillWorkerAt {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        if event.iter == self.at {
+            if let Some(mut w) = self.victim.take() {
+                w.kill();
+            }
+        }
+        ObserverControl::Continue
+    }
+}
+
+/// Kill one of three worker processes mid-solve: the leader must mark it
+/// dead, re-dispatch its chunks to the survivors, and end with the exact
+/// single-process answer.
+#[test]
+fn worker_loss_mid_solve_redispatches_and_matches() {
+    let (dir, _) = write_store("kill", 2_500, 13);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds_config(6);
+
+    let expected = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    let w1 = WorkerProc::spawn(&dir);
+    let w2 = WorkerProc::spawn(&dir);
+    let victim = WorkerProc::spawn(&dir);
+    let addrs =
+        vec![w1.addr.clone(), victim.addr.clone(), w2.addr.clone()];
+    let (fleet, skipped) = RemoteCluster::connect(&addrs, &mm).expect("connect fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    assert_eq!(fleet.workers(), 3);
+
+    let mut killer = KillWorkerAt { at: 1, victim: Some(victim) };
+    let report =
+        solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, Some(&mut killer)).unwrap();
+
+    let stats = fleet.stats();
+    assert_eq!(stats.workers_lost, 1, "exactly the victim must be lost");
+    assert_eq!(stats.workers_live, 2);
+    assert!(stats.redispatches >= 1, "the victim's chunk must be re-dispatched");
+
+    assert_eq!(report.lambda, expected.lambda, "λ must survive the worker loss bit-exactly");
+    assert_eq!(report.primal_value, expected.primal_value);
+    assert_eq!(report.n_selected, expected.n_selected);
+    assert_eq!(report.iterations, expected.iterations);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker serving a *different* store must be refused by the handshake,
+/// and a fully unreachable fleet must fall back in-process with a plan
+/// note — never an error.
+#[test]
+fn mismatched_store_and_unreachable_fleet_are_handled() {
+    let (dir_a, _) = write_store("fp_a", 600, 1);
+    let (dir_b, _) = write_store("fp_b", 600, 2);
+    let mm_a = MmapProblem::open(&dir_a).expect("open A");
+
+    // same dims, class, budgets and locals, different data: the worker
+    // compares fingerprints (sampled-data hash differs) and aborts the
+    // handshake; with no other workers the connect as a whole fails
+    let addr_b = spawn_thread_worker(&dir_b, 1);
+    let err = RemoteCluster::connect(&[addr_b], &mm_a).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("fingerprint mismatch"), "{msg}");
+
+    // unreachable fleet: capability fallback, not failure
+    let plan = Solve::on(&mm_a)
+        .config(SolverConfig { max_iters: 4, ..Default::default() })
+        .distributed(["127.0.0.1:9"])
+        .plan()
+        .expect("plan still succeeds");
+    assert_eq!(plan.executor(), "in-process");
+    assert!(plan.notes.iter().any(|n| n.stage == "executor"), "{:?}", plan.notes);
+    assert!(plan.run().expect("in-process fallback run").is_feasible());
+
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
