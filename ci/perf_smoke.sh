@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Perf smoke: run the hot-path microbench and emit BENCH_scd.json (the
+# groups/sec + λ-skip-rate trajectory point CI archives per commit). The
+# job fails only on build/run errors or a malformed artifact — never on
+# timing noise; the numbers are for the trajectory, not a gate.
+# Run from the repo root.
+set -euo pipefail
+
+OUT=${BENCH_OUT:-BENCH_scd.json}
+cd rust
+
+# keep the smoke bounded on shared runners; BSKP_FULL=1 locally for the
+# 10⁶-group version
+BENCH_OUT="$OUT" BSKP_WORKERS="${BSKP_WORKERS:-2}" cargo bench --bench perf_microbench
+
+test -s "$OUT" || { echo "missing $OUT" >&2; exit 1; }
+
+python3 - "$OUT" <<'EOF'
+import json, sys
+
+b = json.load(open(sys.argv[1]))
+for key in ["n_groups", "rounds", "groups_per_sec", "legacy_groups_per_sec",
+            "speedup_vs_per_group", "skip_rate", "k1_groups_per_sec",
+            "k1_legacy_groups_per_sec", "k1_skip_rate"]:
+    assert key in b, f"BENCH_scd.json missing {key}: {b}"
+    assert isinstance(b[key], (int, float)), f"{key} not numeric: {b[key]}"
+assert b["groups_per_sec"] > 0 and b["legacy_groups_per_sec"] > 0, b
+# K=1 replays every walk after round one; a broken cache would show ~0 here
+assert b["k1_skip_rate"] > 0.5, f"λ-stability cache inert: {b}"
+print(f"perf smoke OK: {b['groups_per_sec']:.0f} groups/s "
+      f"({b['speedup_vs_per_group']:.2f}x vs per-group staging, "
+      f"skip {100 * b['skip_rate']:.1f}%, K=1 skip {100 * b['k1_skip_rate']:.1f}%)")
+EOF

@@ -33,3 +33,31 @@ pub fn banner(what: &str, setup: &str) {
     println!("{setup}");
     println!("================================================================");
 }
+
+/// Hide a source's `fill_block`/`block_end` overrides so solves run the
+/// per-group staging path — the pre-overhaul data movement — for A/B
+/// comparisons against the zero-copy block path.
+pub struct PerGroupOnly<'a, S: bskp::instance::problem::GroupSource + ?Sized>(pub &'a S);
+
+impl<S: bskp::instance::problem::GroupSource + ?Sized> bskp::instance::problem::GroupSource
+    for PerGroupOnly<'_, S>
+{
+    fn dims(&self) -> bskp::instance::problem::Dims {
+        self.0.dims()
+    }
+    fn is_dense(&self) -> bool {
+        self.0.is_dense()
+    }
+    fn locals(&self) -> &bskp::instance::laminar::LaminarProfile {
+        self.0.locals()
+    }
+    fn budgets(&self) -> &[f64] {
+        self.0.budgets()
+    }
+    fn fill_group(&self, i: usize, buf: &mut bskp::instance::problem::GroupBuf) {
+        self.0.fill_group(i, buf)
+    }
+    fn preferred_shard_size(&self) -> Option<usize> {
+        self.0.preferred_shard_size()
+    }
+}

@@ -1,19 +1,25 @@
 //! Hot-path microbenchmarks — the profiling substrate for the §Perf pass
-//! (not a paper artifact). Times each stage of the map phase in isolation
-//! so EXPERIMENTS.md §Perf can attribute end-to-end changes.
+//! (not a paper artifact). Times each stage of the map phase in isolation,
+//! then runs the headline **dense 10⁵-group SCD map** A/B: the zero-copy
+//! block path with λ-stability skipping against the per-group staging
+//! path, and writes `BENCH_scd.json` (path from `$BENCH_OUT`) so CI can
+//! track the groups/sec trajectory across commits.
 
 #[path = "common.rs"]
 mod common;
 
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::instance::laminar::LaminarProfile;
-use bskp::instance::problem::{GroupBuf, GroupSource};
+use bskp::instance::problem::{BlockBuf, GroupBuf, GroupSource, MaterializedProblem};
 use bskp::instance::shard::Shards;
-use bskp::solver::adjusted::adjusted_profits;
+use bskp::metrics::JsonValue;
+use bskp::solver::adjusted::{adjusted_profits, adjusted_profits_row};
 use bskp::solver::candidates::{candidate_lambdas, line_coefficients};
 use bskp::solver::greedy::{greedy_select, greedy_select_warm, reset_order, GroupScratch};
 use bskp::solver::rounds::{evaluation_round, RustEvaluator};
+use bskp::solver::scd::solve_scd;
 use bskp::solver::sparse_q::{emit_candidates, SparseQScratch};
+use bskp::solver::SolverConfig;
 
 fn bench<F: FnMut()>(name: &str, per: usize, mut f: F) {
     // warmup + timed
@@ -31,6 +37,19 @@ fn bench<F: FnMut()>(name: &str, per: usize, mut f: F) {
     );
 }
 
+/// One timed SCD run; returns (groups/sec over all map rounds, skip rate).
+fn scd_rate<S: GroupSource + ?Sized>(
+    p: &S,
+    cfg: &SolverConfig,
+    cluster: &bskp::mapreduce::Cluster,
+) -> (f64, f64, usize) {
+    let t0 = std::time::Instant::now();
+    let r = solve_scd(p, cfg, cluster).expect("bench solve");
+    let secs = t0.elapsed().as_secs_f64();
+    let mapped = p.dims().n_groups as f64 * r.iterations as f64;
+    (mapped / secs, r.phases.skip_rate(), r.iterations)
+}
+
 fn main() {
     common::banner("perf microbench: map-phase stage costs", "per-group costs, 1 thread");
     let n = 50_000;
@@ -46,12 +65,33 @@ fn main() {
                 sp.fill_group(i, &mut buf);
             }
         });
+        let mut block = BlockBuf::new();
+        bench("sparse: fill_block (synthetic regen, SoA)", n, || {
+            let mut pos = 0;
+            while pos < n {
+                let end = sp.block_end(pos, n);
+                std::hint::black_box(sp.fill_block(pos, end, &mut block).len());
+                pos = end;
+            }
+        });
         let mut scratch = GroupScratch::new(10);
-        bench("sparse: fill + adjusted + greedy", n, || {
+        bench("sparse: fill + adjusted + greedy (group)", n, || {
             for i in 0..n {
                 sp.fill_group(i, &mut buf);
                 adjusted_profits(&buf, &lambda, &mut scratch.ptilde);
                 greedy_select(sp.locals(), &mut scratch);
+            }
+        });
+        bench("sparse: fill + adjusted + greedy (block)", n, || {
+            let mut pos = 0;
+            while pos < n {
+                let end = sp.block_end(pos, n);
+                let blk = sp.fill_block(pos, end, &mut block);
+                for g in 0..blk.len() {
+                    adjusted_profits_row(blk.row(g), &lambda, &mut scratch.ptilde);
+                    greedy_select(sp.locals(), &mut scratch);
+                }
+                pos = end;
             }
         });
         let mut sq = SparseQScratch::default();
@@ -122,7 +162,88 @@ fn main() {
         let agg = evaluation_round(&eval, Shards::new(n, 8_192), 10, &lambda, &cluster);
         std::hint::black_box(agg.n_selected);
     });
+
+    // ------------------------------------------------------------------
+    // headline: dense 10⁵-group SCD map — block + λ-skip vs per-group
+    // ------------------------------------------------------------------
+    let hn = if common::full_scale() { 1_000_000 } else { 100_000 };
+    let rounds = 3usize;
+    // NOTE on the baseline: `PerGroupOnly` forces the trait-default
+    // staging path (fill_group + one SoA copy per group), which carries
+    // slightly more data movement than the pre-overhaul direct-GroupBuf
+    // kernels did — so `speedup_vs_per_group` mildly overstates the win
+    // from zero-copy alone (the dense Alg-3 walk dominates either way).
+    // The honest "vs main" measure is the cross-commit trajectory of
+    // `groups_per_sec` in the archived BENCH_scd.json artifacts.
+    common::banner(
+        "perf microbench: dense 10⁵-group SCD map (A/B)",
+        "materialized dense N×10×10, C=[2,2,3]; fixed rounds; workers = pool",
+    );
+    let synth = SyntheticProblem::new(
+        GeneratorConfig::dense(hn, 10, 10)
+            .with_locals(LaminarProfile::scenario_c223(10))
+            .with_seed(7),
+    );
+    let mat = MaterializedProblem::from_source(&synth).expect("materialize");
+    let cfg = SolverConfig {
+        max_iters: rounds,
+        postprocess: false,
+        track_history: false,
+        ..Default::default()
+    };
+    let legacy_cfg = SolverConfig { lambda_skip: false, ..cfg.clone() };
+
+    let (legacy_rate, _, _) = scd_rate(&common::PerGroupOnly(&mat), &legacy_cfg, &cluster);
+    let (block_rate, skip_rate, iters) = scd_rate(&mat, &cfg, &cluster);
+    println!("per-group staging path : {:>9.0} groups/s", legacy_rate);
+    println!(
+        "block + λ-skip path    : {:>9.0} groups/s   ({iters} rounds, skip {:.1}%)",
+        block_rate,
+        100.0 * skip_rate
+    );
+    println!("speedup                : {:>9.2}×", block_rate / legacy_rate);
+
+    // K = 1 (single global budget): the λ-stability showcase — every walk
+    // after round one replays from cache
+    let k1 = SyntheticProblem::new(GeneratorConfig::dense(hn, 10, 1).with_seed(8));
+    let k1m = MaterializedProblem::from_source(&k1).expect("materialize k1");
+    let k1_cfg = SolverConfig {
+        max_iters: 6,
+        tol: 1e-12,
+        postprocess: false,
+        track_history: false,
+        ..Default::default()
+    };
+    let (k1_legacy, _, _) = scd_rate(
+        &common::PerGroupOnly(&k1m),
+        &SolverConfig { lambda_skip: false, ..k1_cfg.clone() },
+        &cluster,
+    );
+    let (k1_rate, k1_skip, _) = scd_rate(&k1m, &k1_cfg, &cluster);
+    println!("K=1 per-group path     : {:>9.0} groups/s", k1_legacy);
+    println!(
+        "K=1 block + λ-skip     : {:>9.0} groups/s   (skip {:.1}%)",
+        k1_rate,
+        100.0 * k1_skip
+    );
+
+    // machine-readable trajectory point for CI
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_scd.json".to_string());
+    let json = JsonValue::Object(vec![
+        ("bench".to_string(), JsonValue::Str("scd_dense_map".to_string())),
+        ("n_groups".to_string(), JsonValue::Num(hn as f64)),
+        ("rounds".to_string(), JsonValue::Num(rounds as f64)),
+        ("workers".to_string(), JsonValue::Num(cluster.workers() as f64)),
+        ("groups_per_sec".to_string(), JsonValue::Num(block_rate)),
+        ("legacy_groups_per_sec".to_string(), JsonValue::Num(legacy_rate)),
+        ("speedup_vs_per_group".to_string(), JsonValue::Num(block_rate / legacy_rate)),
+        ("skip_rate".to_string(), JsonValue::Num(skip_rate)),
+        ("k1_groups_per_sec".to_string(), JsonValue::Num(k1_rate)),
+        ("k1_legacy_groups_per_sec".to_string(), JsonValue::Num(k1_legacy)),
+        ("k1_skip_rate".to_string(), JsonValue::Num(k1_skip)),
+    ]);
+    std::fs::write(&out, format!("{json}\n")).expect("write BENCH_scd.json");
+    println!("wrote {out}");
 }
-// (appended by the perf pass) — XLA vs rust map throughput lives in
-// examples/e2e_billion_scale.rs; the microbench stays artifact-free so it
-// runs before `make artifacts`.
+// XLA vs rust map throughput lives in examples/e2e_billion_scale.rs; the
+// microbench stays artifact-free so it runs before `make artifacts`.

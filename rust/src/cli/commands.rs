@@ -363,6 +363,21 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
         println!("  selected items  : {}", report.n_selected);
         println!("  dropped groups  : {}", report.dropped_groups);
         println!("  wall time       : {:.1} ms", report.wall_ms);
+        println!(
+            "  phase breakdown : map {:.1} ms, reduce {:.1} ms, final eval {:.1} ms{}",
+            report.phases.map_ms,
+            report.phases.reduce_ms,
+            report.phases.final_eval_ms,
+            if report.phases.walks_total > 0 {
+                format!(
+                    ", λ-skip {:.1}% of {} walks",
+                    100.0 * report.phases.skip_rate(),
+                    report.phases.walks_total
+                )
+            } else {
+                String::new()
+            }
+        );
         if let Some(r) = &remote {
             let s = r.stats();
             println!(

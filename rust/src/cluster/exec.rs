@@ -14,7 +14,7 @@ use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
 use crate::solver::postprocess;
 use crate::solver::rounds::{evaluation_chunk, RoundAgg, RustEvaluator};
-use crate::solver::scd::{scd_round_chunk, ScdAcc, ScdRoundSpec};
+use crate::solver::scd::{scd_round_chunk, ScdAcc, ScdRoundCtx, ScdRoundSpec};
 
 /// Where map rounds run: the in-process pool or a TCP worker fleet.
 ///
@@ -79,15 +79,19 @@ impl Exec<'_> {
         }
     }
 
-    /// One full SCD round.
+    /// One full SCD round. `ctx` carries the leader-local λ-stability
+    /// cache and buffer arena; it is consumed by the in-process path only
+    /// (remote workers are stateless between frames, and replay vs.
+    /// recompute is bit-identical, so results agree across executors).
     pub(crate) fn scd_round<S: GroupSource + ?Sized>(
         &self,
         source: &S,
         shards: Shards,
         spec: &ScdRoundSpec<'_>,
+        ctx: ScdRoundCtx<'_>,
     ) -> Result<ScdAcc> {
         match self {
-            Exec::Local(c) => Ok(scd_round_chunk(source, shards, 0, shards.count(), spec, c)),
+            Exec::Local(c) => Ok(scd_round_chunk(source, shards, 0, shards.count(), spec, c, ctx)),
             Exec::Remote(r) => r.scd_round(shards, spec),
         }
     }

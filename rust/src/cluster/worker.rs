@@ -16,7 +16,7 @@ use crate::instance::store::MmapProblem;
 use crate::mapreduce::Cluster;
 use crate::solver::postprocess::rank_chunk;
 use crate::solver::rounds::{evaluation_chunk, RustEvaluator};
-use crate::solver::scd::{scd_round_chunk, ScdRoundSpec};
+use crate::solver::scd::{scd_round_chunk, ScdRoundCtx, ScdRoundSpec};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 
@@ -127,7 +127,15 @@ fn session<S: GroupSource + ?Sized>(
                             sparse_q,
                             reduce,
                         };
-                        Msg::ScdPartial(scd_round_chunk(source, shards, lo, hi, &spec, pool))
+                        Msg::ScdPartial(scd_round_chunk(
+                            source,
+                            shards,
+                            lo,
+                            hi,
+                            &spec,
+                            pool,
+                            ScdRoundCtx::none(),
+                        ))
                     }
                 }
             }

@@ -242,6 +242,41 @@ impl GroupSource for SyntheticProblem {
             }
         }
     }
+
+    /// Generate the whole block straight into the SoA columns — the same
+    /// per-group RNG streams as [`GroupSource::fill_group`] (each group is
+    /// seeded independently from `(seed, id)`), minus the per-group
+    /// staging copy.
+    fn fill_block<'a>(
+        &'a self,
+        start: usize,
+        end: usize,
+        buf: &'a mut crate::instance::problem::BlockBuf,
+    ) -> crate::instance::problem::GroupBlock<'a> {
+        let m = self.config.n_items;
+        let k = self.config.n_global;
+        let dense = self.is_dense();
+        let len = end - start;
+        buf.ensure(len, m, k, dense);
+        for g in 0..len {
+            let mut rng = Xoshiro256pp::new(mix64(self.config.seed, (start + g) as u64));
+            for p in &mut buf.profits[g * m..(g + 1) * m] {
+                *p = self.config.profit_dist.sample(&mut rng) as f32;
+            }
+            if dense {
+                for v in &mut buf.dense[g * m * k..(g + 1) * m * k] {
+                    *v = self.config.cost_dist.sample(&mut rng) as f32;
+                }
+            } else {
+                for j in 0..m {
+                    buf.knap[g * m + j] =
+                        if m == k { j as u32 } else { rng.below(k as u64) as u32 };
+                    buf.cost[g * m + j] = self.config.cost_dist.sample(&mut rng) as f32;
+                }
+            }
+        }
+        buf.block(start, len, m, k, dense)
+    }
 }
 
 #[cfg(test)]
@@ -330,5 +365,36 @@ mod tests {
     fn validates() {
         let p = SyntheticProblem::new(GeneratorConfig::dense(10, 4, 3));
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn block_generation_matches_fill_group_bitwise() {
+        use crate::instance::problem::{BlockBuf, RowCosts};
+        for cfg in [
+            GeneratorConfig::sparse(64, 5, 3).with_seed(9),
+            GeneratorConfig::dense(64, 4, 6).with_seed(9),
+        ] {
+            let p = SyntheticProblem::new(cfg);
+            let dense = p.is_dense();
+            let mut bb = BlockBuf::new();
+            let block = p.fill_block(10, 30, &mut bb);
+            let mut buf = GroupBuf::new(p.dims(), dense);
+            for g in 0..block.len() {
+                p.fill_group(10 + g, &mut buf);
+                let row = block.row(g);
+                assert_eq!(row.profits, &buf.profits[..]);
+                match (row.costs, &buf.costs) {
+                    (RowCosts::Dense(b), CostsBuf::Dense(want)) => assert_eq!(b, &want[..]),
+                    (
+                        RowCosts::Sparse { knap, cost },
+                        CostsBuf::Sparse { knap: wk, cost: wc },
+                    ) => {
+                        assert_eq!(knap, &wk[..]);
+                        assert_eq!(cost, &wc[..]);
+                    }
+                    _ => panic!("layout mismatch"),
+                }
+            }
+        }
     }
 }

@@ -25,6 +25,9 @@ pub mod store;
 
 pub use generator::{CostClass, GeneratorConfig, SyntheticProblem};
 pub use laminar::{LaminarProfile, LocalConstraint};
-pub use problem::{CostsBuf, Dims, GroupBuf, GroupSource, MaterializedProblem};
+pub use problem::{
+    for_each_row, BlockBuf, BlockCosts, CostsBuf, Dims, GroupBlock, GroupBuf, GroupRow,
+    GroupSource, MaterializedProblem, RowCosts,
+};
 pub use shard::{ShardRange, Shards};
 pub use store::{MmapProblem, ShardWriter};

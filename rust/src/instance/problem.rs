@@ -97,11 +97,196 @@ impl GroupBuf {
     }
 }
 
+/// Borrowed SoA cost columns for a contiguous run of groups (the block
+/// analogue of [`CostsBuf`]).
+#[derive(Debug, Clone, Copy)]
+pub enum BlockCosts<'a> {
+    /// Dense `len×M×K`, row-major `[g][j][k]`.
+    Dense(&'a [f32]),
+    /// Sparse parallel columns, `len×M` each.
+    Sparse {
+        /// Knapsack index per item.
+        knap: &'a [u32],
+        /// Consumption per item.
+        cost: &'a [f32],
+    },
+}
+
+/// One group's borrowed slices inside a [`GroupBlock`] — what the SoA
+/// kernels ([`crate::solver::adjusted`], [`crate::solver::candidates`])
+/// consume directly, with no per-group copy in between.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupRow<'a> {
+    /// `p_j` for the group's `M` items.
+    pub profits: &'a [f32],
+    /// `b_jk` in the layout the source stores.
+    pub costs: RowCosts<'a>,
+}
+
+/// Cost slices of a single group (row view of [`BlockCosts`]).
+#[derive(Debug, Clone, Copy)]
+pub enum RowCosts<'a> {
+    /// Dense `M×K` row-major block.
+    Dense(&'a [f32]),
+    /// One (knapsack, cost) pair per item.
+    Sparse {
+        /// Knapsack index per item.
+        knap: &'a [u32],
+        /// Consumption per item.
+        cost: &'a [f32],
+    },
+}
+
+impl GroupBuf {
+    /// Row view of the buffered group (bridges the per-group API into the
+    /// SoA kernels).
+    #[inline]
+    pub fn row(&self) -> GroupRow<'_> {
+        GroupRow {
+            profits: &self.profits,
+            costs: match &self.costs {
+                CostsBuf::Dense(b) => RowCosts::Dense(b),
+                CostsBuf::Sparse { knap, cost } => RowCosts::Sparse { knap, cost },
+            },
+        }
+    }
+}
+
+/// A zero-copy structure-of-arrays view over the contiguous groups
+/// `[start, start+len)` — the unit the hot-path map kernels operate on.
+/// Served without copying by [`MaterializedProblem`] and the memory-mapped
+/// store ([`crate::instance::store::MmapProblem`]); owned-buffer sources
+/// (the synthetic generator, any [`GroupSource`] using the default
+/// [`GroupSource::fill_block`]) back it with a caller-provided
+/// [`BlockBuf`].
+#[derive(Debug, Clone, Copy)]
+pub struct GroupBlock<'a> {
+    start: usize,
+    len: usize,
+    n_items: usize,
+    profits: &'a [f32],
+    costs: BlockCosts<'a>,
+}
+
+impl<'a> GroupBlock<'a> {
+    /// Assemble a block from raw slices; `profits.len()` must be
+    /// `len·n_items` and the cost slices must match the layout
+    /// (`len·n_items·n_global` dense, `len·n_items` sparse columns).
+    pub fn new(
+        start: usize,
+        n_items: usize,
+        n_global: usize,
+        profits: &'a [f32],
+        costs: BlockCosts<'a>,
+    ) -> Self {
+        assert!(n_items > 0, "block needs n_items > 0");
+        assert_eq!(profits.len() % n_items, 0, "ragged profits slice");
+        let len = profits.len() / n_items;
+        match &costs {
+            BlockCosts::Dense(b) => {
+                assert_eq!(b.len(), len * n_items * n_global, "dense cost slice length")
+            }
+            BlockCosts::Sparse { knap, cost } => {
+                assert_eq!(knap.len(), len * n_items, "sparse knap slice length");
+                assert_eq!(cost.len(), len * n_items, "sparse cost slice length");
+            }
+        }
+        Self { start, len, n_items, profits, costs }
+    }
+
+    /// Global id of the block's first group.
+    #[inline]
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Number of groups in the block.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the block holds no groups.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Row view of local group `g` (`0 ≤ g < len`).
+    #[inline]
+    pub fn row(&self, g: usize) -> GroupRow<'a> {
+        let m = self.n_items;
+        let profits = &self.profits[g * m..(g + 1) * m];
+        let costs = match self.costs {
+            BlockCosts::Dense(b) => {
+                let w = b.len() / self.len;
+                RowCosts::Dense(&b[g * w..(g + 1) * w])
+            }
+            BlockCosts::Sparse { knap, cost } => {
+                RowCosts::Sparse { knap: &knap[g * m..(g + 1) * m], cost: &cost[g * m..(g + 1) * m] }
+            }
+        };
+        GroupRow { profits, costs }
+    }
+}
+
+/// Owned backing storage for [`GroupSource::fill_block`] on sources that
+/// cannot serve borrowed views (the synthetic generator, samplers). One
+/// lives per map worker and is reused across blocks and rounds — the hot
+/// path performs no per-block allocation after warm-up.
+#[derive(Debug, Default)]
+pub struct BlockBuf {
+    /// `len×M` profits, filled by the source.
+    pub profits: Vec<f32>,
+    /// `len×M×K` dense costs (dense layout only).
+    pub dense: Vec<f32>,
+    /// `len×M` knapsack indices (sparse layout only).
+    pub knap: Vec<u32>,
+    /// `len×M` costs (sparse layout only).
+    pub cost: Vec<f32>,
+    staging: Option<GroupBuf>,
+}
+
+impl BlockBuf {
+    /// Empty buffer; sized lazily by [`BlockBuf::ensure`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize the SoA columns for `len` groups of shape `(m, k)`;
+    /// capacity is kept across calls.
+    pub fn ensure(&mut self, len: usize, m: usize, k: usize, dense: bool) {
+        self.profits.resize(len * m, 0.0);
+        if dense {
+            self.dense.resize(len * m * k, 0.0);
+        } else {
+            self.knap.resize(len * m, 0);
+            self.cost.resize(len * m, 0.0);
+        }
+    }
+
+    /// View the filled columns as a [`GroupBlock`] (after
+    /// [`BlockBuf::ensure`] + filling).
+    pub fn block(&self, start: usize, len: usize, m: usize, k: usize, dense: bool) -> GroupBlock<'_> {
+        let costs = if dense {
+            BlockCosts::Dense(&self.dense[..len * m * k])
+        } else {
+            BlockCosts::Sparse { knap: &self.knap[..len * m], cost: &self.cost[..len * m] }
+        };
+        GroupBlock::new(start, m, k, &self.profits[..len * m], costs)
+    }
+}
+
+/// Default cap on the number of f32 values a staged (owned) block holds —
+/// keeps the per-worker [`BlockBuf`] around 1 MiB so blocks stay
+/// cache-resident.
+const BLOCK_STAGING_F32: usize = 262_144;
+
 /// A source of group data: the solver's view of an instance.
 ///
 /// Implementations must be `Sync` — the MapReduce engine calls
-/// `fill_group` concurrently from worker threads, each with its own
-/// [`GroupBuf`].
+/// `fill_group` / `fill_block` concurrently from worker threads, each with
+/// its own [`GroupBuf`] / [`BlockBuf`].
 pub trait GroupSource: Sync {
     /// Instance dimensions.
     fn dims(&self) -> Dims;
@@ -113,6 +298,64 @@ pub trait GroupSource: Sync {
     fn budgets(&self) -> &[f64];
     /// Write group `i`'s `(p, b)` into `buf`.
     fn fill_group(&self, i: usize, buf: &mut GroupBuf);
+
+    /// Largest `e ≤ end` such that `[start, e)` can be served as one
+    /// [`GroupBlock`] by [`GroupSource::fill_block`]. Zero-copy sources
+    /// return the next internal boundary (a storage-shard edge, or `end`
+    /// when the data is fully contiguous); the default caps owned staging
+    /// at ~1 MiB of coefficients. Callers iterate a shard as
+    /// `pos = block_end(pos, shard.end)` steps. Must return `> start`
+    /// whenever `start < end`.
+    fn block_end(&self, start: usize, end: usize) -> usize {
+        let d = self.dims();
+        let per_group = if self.is_dense() {
+            d.n_items * (d.n_global + 1)
+        } else {
+            3 * d.n_items
+        };
+        let cap = (BLOCK_STAGING_F32 / per_group.max(1)).max(1);
+        end.min(start + cap)
+    }
+
+    /// Serve groups `[start, end)` as one SoA [`GroupBlock`]. `end` must
+    /// respect [`GroupSource::block_end`]'s contract. Zero-copy sources
+    /// ignore `buf` and return borrowed views of their own storage; the
+    /// default implementation stages each group through
+    /// [`GroupSource::fill_group`] into `buf` (no allocation after the
+    /// first call at a given shape).
+    fn fill_block<'a>(&'a self, start: usize, end: usize, buf: &'a mut BlockBuf) -> GroupBlock<'a> {
+        let d = self.dims();
+        let (m, k) = (d.n_items, d.n_global);
+        let dense = self.is_dense();
+        let len = end - start;
+        buf.ensure(len, m, k, dense);
+        let staging_fits = |s: &GroupBuf| {
+            s.profits.len() == m
+                && match &s.costs {
+                    CostsBuf::Dense(b) => dense && b.len() == m * k,
+                    CostsBuf::Sparse { knap, .. } => !dense && knap.len() == m,
+                }
+        };
+        let mut staging = match buf.staging.take() {
+            Some(s) if staging_fits(&s) => s,
+            _ => GroupBuf::new(Dims { n_groups: 1, n_items: m, n_global: k }, dense),
+        };
+        for g in 0..len {
+            self.fill_group(start + g, &mut staging);
+            buf.profits[g * m..(g + 1) * m].copy_from_slice(&staging.profits);
+            match &staging.costs {
+                CostsBuf::Dense(b) => {
+                    buf.dense[g * m * k..(g + 1) * m * k].copy_from_slice(b);
+                }
+                CostsBuf::Sparse { knap, cost } => {
+                    buf.knap[g * m..(g + 1) * m].copy_from_slice(knap);
+                    buf.cost[g * m..(g + 1) * m].copy_from_slice(cost);
+                }
+            }
+        }
+        buf.staging = Some(staging);
+        buf.block(start, len, m, k, dense)
+    }
 
     /// Natural work-partition unit of the source, if it has one. Disk- or
     /// network-backed sources (e.g. [`crate::instance::store::MmapProblem`])
@@ -154,6 +397,29 @@ pub trait GroupSource: Sync {
         }
         self.locals().check_items_in_range(d.n_items)?;
         Ok(())
+    }
+}
+
+/// Stream the groups `[start, end)` of `source` through `f` in ascending
+/// id order, pulling zero-copy blocks via [`GroupSource::block_end`] /
+/// [`GroupSource::fill_block`] — **the** canonical hot-path loop, shared
+/// by every map kernel so the block-clipping contract lives in one place.
+/// (A free function rather than a trait method so `dyn GroupSource`
+/// sources stream too.)
+#[inline]
+pub fn for_each_row<S, F>(source: &S, start: usize, end: usize, buf: &mut BlockBuf, mut f: F)
+where
+    S: GroupSource + ?Sized,
+    F: FnMut(usize, GroupRow<'_>),
+{
+    let mut pos = start;
+    while pos < end {
+        let bend = source.block_end(pos, end).clamp(pos + 1, end);
+        let blk = source.fill_block(pos, bend, buf);
+        for g in 0..blk.len() {
+            f(blk.start() + g, blk.row(g));
+        }
+        pos = bend;
     }
 }
 
@@ -325,6 +591,23 @@ impl GroupSource for MaterializedProblem {
             _ => panic!("GroupBuf layout does not match problem layout"),
         }
     }
+
+    /// Fully contiguous in memory: any range is one zero-copy block.
+    fn block_end(&self, _start: usize, end: usize) -> usize {
+        end
+    }
+
+    fn fill_block<'a>(&'a self, start: usize, end: usize, _buf: &'a mut BlockBuf) -> GroupBlock<'a> {
+        let (m, k) = (self.dims.n_items, self.dims.n_global);
+        let costs = match &self.costs {
+            MaterializedCosts::Dense(b) => BlockCosts::Dense(&b[start * m * k..end * m * k]),
+            MaterializedCosts::Sparse { knap, cost } => BlockCosts::Sparse {
+                knap: &knap[start * m..end * m],
+                cost: &cost[start * m..end * m],
+            },
+        };
+        GroupBlock::new(start, m, k, &self.profits[start * m..end * m], costs)
+    }
 }
 
 #[cfg(test)]
@@ -394,6 +677,83 @@ mod tests {
         )
         .unwrap();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn materialized_block_is_zero_copy_and_matches_fill_group() {
+        let mut p =
+            MaterializedProblem::zeroed_dense(dims(), vec![1.0, 1.0], LaminarProfile::single(2, 1))
+                .unwrap();
+        p.set_profit(1, 0, 3.5);
+        p.set_cost(1, 0, 1, 0.25);
+        let mut bb = BlockBuf::new();
+        assert_eq!(p.block_end(0, 3), 3);
+        let block = p.fill_block(0, 3, &mut bb);
+        assert_eq!(block.start(), 0);
+        assert_eq!(block.len(), 3);
+        // the zero-copy path must not have touched the staging buffer
+        assert!(bb.profits.is_empty());
+        let mut buf = GroupBuf::new(dims(), true);
+        for i in 0..3 {
+            p.fill_group(i, &mut buf);
+            let row = block.row(i);
+            assert_eq!(row.profits, &buf.profits[..]);
+            match (row.costs, &buf.costs) {
+                (RowCosts::Dense(b), CostsBuf::Dense(g)) => assert_eq!(b, &g[..]),
+                _ => panic!("layout mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn default_fill_block_stages_through_fill_group() {
+        // wrapper that hides the optimized overrides, forcing the trait
+        // default (the path external sources get)
+        struct PerGroup<'a>(&'a MaterializedProblem);
+        impl GroupSource for PerGroup<'_> {
+            fn dims(&self) -> Dims {
+                self.0.dims()
+            }
+            fn is_dense(&self) -> bool {
+                self.0.is_dense()
+            }
+            fn locals(&self) -> &LaminarProfile {
+                self.0.locals()
+            }
+            fn budgets(&self) -> &[f64] {
+                self.0.budgets()
+            }
+            fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+                self.0.fill_group(i, buf)
+            }
+        }
+        let mut p = MaterializedProblem::zeroed_sparse(
+            dims(),
+            vec![1.0, 2.0],
+            LaminarProfile::single(2, 1),
+        )
+        .unwrap();
+        p.set_sparse_cost(2, 1, 1, 0.75);
+        p.set_profit(0, 0, 9.0);
+        let w = PerGroup(&p);
+        let mut bb = BlockBuf::new();
+        let end = w.block_end(1, 3);
+        assert!(end > 1 && end <= 3);
+        let block = w.fill_block(1, 3, &mut bb);
+        assert_eq!(block.start(), 1);
+        let mut buf = GroupBuf::new(dims(), false);
+        for g in 0..block.len() {
+            p.fill_group(1 + g, &mut buf);
+            let row = block.row(g);
+            assert_eq!(row.profits, &buf.profits[..]);
+            match (row.costs, &buf.costs) {
+                (RowCosts::Sparse { knap, cost }, CostsBuf::Sparse { knap: gk, cost: gc }) => {
+                    assert_eq!(knap, &gk[..]);
+                    assert_eq!(cost, &gc[..]);
+                }
+                _ => panic!("layout mismatch"),
+            }
+        }
     }
 
     #[test]

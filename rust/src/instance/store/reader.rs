@@ -394,4 +394,59 @@ impl GroupSource for MmapProblem {
     fn preferred_shard_size(&self) -> Option<usize> {
         Some(self.shard_size)
     }
+
+    /// Blocks never cross a shard-file boundary, so every block is one
+    /// contiguous region of one mapping.
+    fn block_end(&self, start: usize, end: usize) -> usize {
+        let boundary = (start / self.shard_size + 1) * self.shard_size;
+        end.min(boundary)
+    }
+
+    /// Zero-copy block: the on-disk little-endian `f32`/`u32` sections are
+    /// reinterpreted in place (the mmap *is* the block). Solver map
+    /// workers read straight from the page cache with no per-group copy.
+    #[cfg(target_endian = "little")]
+    fn fill_block<'a>(
+        &'a self,
+        start: usize,
+        end: usize,
+        _buf: &'a mut crate::instance::problem::BlockBuf,
+    ) -> crate::instance::problem::GroupBlock<'a> {
+        use crate::instance::problem::{BlockCosts, GroupBlock};
+        use crate::instance::store::mmap::{cast_f32_slice, cast_u32_slice};
+        // real asserts, not debug: a caller ignoring block_end (or the
+        // n_groups bound) would otherwise read zero-padded tail rows or
+        // run past the prices section into the costs section of the same
+        // mapping — in-bounds bytes, silently wrong numbers. Two compares
+        // per block, amortized over thousands of groups.
+        assert!(
+            end <= self.dims.n_groups,
+            "block [{start}, {end}) reaches past the {} live groups into shard padding",
+            self.dims.n_groups
+        );
+        let (v, row, m) = self.locate(start);
+        let len = end - start;
+        assert!(
+            row + len <= v.hdr.rows as usize,
+            "block [{start}, {end}) crosses a shard-file boundary (see GroupSource::block_end)"
+        );
+        let k = self.dims.n_global;
+        let bytes = v.map.bytes();
+        let p_off = v.hdr.prices.0 as usize + row * m * 4;
+        let profits = cast_f32_slice(&bytes[p_off..p_off + len * m * 4]);
+        let costs = if self.dense {
+            let w = m * k * 4;
+            let off = v.hdr.costs.0 as usize + row * w;
+            BlockCosts::Dense(cast_f32_slice(&bytes[off..off + len * w]))
+        } else {
+            let rows = v.hdr.rows as usize;
+            let knap_off = v.hdr.costs.0 as usize + row * m * 4;
+            let cost_off = v.hdr.costs.0 as usize + (rows + row) * m * 4;
+            BlockCosts::Sparse {
+                knap: cast_u32_slice(&bytes[knap_off..knap_off + len * m * 4]),
+                cost: cast_f32_slice(&bytes[cost_off..cost_off + len * m * 4]),
+            }
+        };
+        GroupBlock::new(start, m, k, profits, costs)
+    }
 }

@@ -96,6 +96,19 @@ pub fn report_to_json(r: &SolveReport) -> JsonValue {
     obj.push(("dropped_groups".to_string(), JsonValue::Num(r.dropped_groups as f64)));
     obj.push(("wall_ms".to_string(), JsonValue::Num(r.wall_ms)));
     obj.push((
+        "phases".to_string(),
+        JsonValue::Object(vec![
+            ("broadcast_ms".to_string(), JsonValue::Num(r.phases.broadcast_ms)),
+            ("map_ms".to_string(), JsonValue::Num(r.phases.map_ms)),
+            ("reduce_ms".to_string(), JsonValue::Num(r.phases.reduce_ms)),
+            ("final_eval_ms".to_string(), JsonValue::Num(r.phases.final_eval_ms)),
+            ("postprocess_ms".to_string(), JsonValue::Num(r.phases.postprocess_ms)),
+            ("walks_total".to_string(), JsonValue::Num(r.phases.walks_total as f64)),
+            ("walks_skipped".to_string(), JsonValue::Num(r.phases.walks_skipped as f64)),
+            ("skip_rate".to_string(), JsonValue::Num(r.phases.skip_rate())),
+        ]),
+    ));
+    obj.push((
         "lambda".to_string(),
         JsonValue::Array(r.lambda.iter().map(|&l| JsonValue::Num(l)).collect()),
     ));
@@ -123,6 +136,9 @@ pub fn report_to_json(r: &SolveReport) -> JsonValue {
                         ),
                         ("lambda_change".to_string(), JsonValue::Num(h.lambda_change)),
                         ("wall_ms".to_string(), JsonValue::Num(h.wall_ms)),
+                        ("map_ms".to_string(), JsonValue::Num(h.map_ms)),
+                        ("reduce_ms".to_string(), JsonValue::Num(h.reduce_ms)),
+                        ("skip_rate".to_string(), JsonValue::Num(h.skip_rate)),
                     ])
                 })
                 .collect(),
@@ -149,9 +165,10 @@ mod tests {
             dropped_groups: 0,
             history: vec![],
             wall_ms: 1.5,
+            phases: Default::default(),
         };
         let s = report_to_json(&r).to_string();
-        for key in ["iterations", "duality_gap", "lambda", "wall_ms"] {
+        for key in ["iterations", "duality_gap", "lambda", "wall_ms", "phases", "skip_rate"] {
             assert!(s.contains(key), "missing {key} in {s}");
         }
     }

@@ -20,7 +20,7 @@ use crate::solver::postprocess;
 use crate::solver::rounds::RoundAgg;
 use crate::solver::scd::exact_threshold_reduce;
 use crate::solver::stats::{
-    max_violation_ratio, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+    max_violation_ratio, ObserverControl, PhaseTimings, RoundEvent, SolveObserver, SolveReport,
 };
 use crate::util::rel_change;
 
@@ -122,6 +122,7 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
     let mut stopped = false;
     let mut iterations = 0;
     let mut last_agg = RoundAgg::new(kk);
+    let mut phases = PhaseTimings::default();
 
     for t in 0..config.max_iters {
         let it0 = std::time::Instant::now();
@@ -172,12 +173,17 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
                 (agg, th)
             },
         );
+        let map_ms = it0.elapsed().as_secs_f64() * 1e3;
+        phases.map_ms += map_ms;
+        let r0 = std::time::Instant::now();
         let consumption = round.consumption_values();
 
         let mut new_lambda = lambda.clone();
         for k in 0..kk {
             new_lambda[k] = thresholds.reduce(k, budgets[k]);
         }
+        let reduce_ms = r0.elapsed().as_secs_f64() * 1e3;
+        phases.reduce_ms += reduce_ms;
 
         iterations = t + 1;
         let residual = rel_change(&new_lambda, &lambda);
@@ -188,6 +194,9 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
             wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            map_ms,
+            reduce_ms,
+            skip_rate: 0.0,
             lambda: &new_lambda,
         };
         if config.track_history {
@@ -228,13 +237,16 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
     // backend-independent, f64-exact, and consistent with report.lambda
     let eval = crate::solver::rounds::RustEvaluator::new(source);
     let agg = if converged || stopped {
-        crate::solver::rounds::evaluation_round(
+        let e0 = std::time::Instant::now();
+        let agg = crate::solver::rounds::evaluation_round(
             &eval,
             Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None),
             kk,
             &lambda,
             cluster,
-        )
+        );
+        phases.final_eval_ms = e0.elapsed().as_secs_f64() * 1e3;
+        agg
     } else {
         last_agg
     };
@@ -251,10 +263,13 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
         dropped_groups: 0,
         history,
         wall_ms: 0.0,
+        phases,
     };
     if config.postprocess && !report.is_feasible() {
         let exec = crate::cluster::Exec::Local(cluster);
+        let p0 = std::time::Instant::now();
         postprocess::enforce_feasibility(source, &mut report, &exec)?;
+        report.phases.postprocess_ms = p0.elapsed().as_secs_f64() * 1e3;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(obs) = observer.as_mut() {

@@ -171,6 +171,9 @@ mod tests {
             max_violation_ratio: 0.0,
             lambda_change: 0.5,
             wall_ms: 0.1,
+            map_ms: 0.08,
+            reduce_ms: 0.01,
+            skip_rate: 0.0,
             lambda,
         }
     }

@@ -75,6 +75,19 @@ impl GroupSource for ScaledBudgets<'_> {
         self.inner.fill_group(i, buf)
     }
 
+    fn block_end(&self, start: usize, end: usize) -> usize {
+        self.inner.block_end(start, end)
+    }
+
+    fn fill_block<'a>(
+        &'a self,
+        start: usize,
+        end: usize,
+        buf: &'a mut crate::instance::problem::BlockBuf,
+    ) -> crate::instance::problem::GroupBlock<'a> {
+        self.inner.fill_block(start, end, buf)
+    }
+
     fn preferred_shard_size(&self) -> Option<usize> {
         self.inner.preferred_shard_size()
     }

@@ -4,70 +4,83 @@
 //! p̃_ij = p_ij − Σ_k λ_k b_ijk            (per item; §4.2)
 //! p̃_i  = Σ_j (p_ij − Σ_k λ_k b_ijk) x_ij  (per group; §5.4)
 //! ```
+//!
+//! The kernels consume [`GroupRow`] slices straight out of a
+//! [`crate::instance::problem::GroupBlock`] — zero-copy on block-capable
+//! sources — and are written as flat slice passes (no per-item branching
+//! on layout) so the compiler can unroll and vectorize the inner loops.
+//! The [`GroupBuf`] entry points are thin wrappers over the same code, so
+//! the two paths cannot drift numerically.
 
-use crate::instance::problem::{CostsBuf, GroupBuf};
+use crate::instance::problem::{CostsBuf, GroupBuf, GroupRow, RowCosts};
 
-/// Compute `p̃_j` for one buffered group into `out` (len `M`).
+/// Compute `p̃_j` for one group row into `out` (len `M`).
 ///
 /// Dense: a length-`K` dot product per item (this is exactly the
 /// contraction the L1 Pallas kernel performs batched on the MXU).
 /// Sparse: one multiply per item.
 #[inline]
-pub fn adjusted_profits(buf: &GroupBuf, lambda: &[f64], out: &mut [f64]) {
-    let m = buf.profits.len();
+pub fn adjusted_profits_row(row: GroupRow<'_>, lambda: &[f64], out: &mut [f64]) {
+    let m = row.profits.len();
     debug_assert_eq!(out.len(), m);
-    match &buf.costs {
-        CostsBuf::Dense(b) => {
+    match row.costs {
+        RowCosts::Dense(b) => {
             let k = lambda.len();
             debug_assert_eq!(b.len(), m * k);
-            for j in 0..m {
-                let row = &b[j * k..(j + 1) * k];
+            for (j, (o, &p)) in out.iter_mut().zip(row.profits).enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
                 let mut dot = 0.0f64;
-                for (lam, &bc) in lambda.iter().zip(row) {
+                for (lam, &bc) in lambda.iter().zip(brow) {
                     dot += lam * bc as f64;
                 }
-                out[j] = buf.profits[j] as f64 - dot;
+                *o = p as f64 - dot;
             }
         }
-        CostsBuf::Sparse { knap, cost } => {
-            for j in 0..m {
-                out[j] = buf.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
+        RowCosts::Sparse { knap, cost } => {
+            for (((o, &p), &kn), &c) in out.iter_mut().zip(row.profits).zip(knap).zip(cost) {
+                *o = p as f64 - lambda[kn as usize] * c as f64;
             }
         }
     }
+}
+
+/// [`adjusted_profits_row`] through the per-group buffer API.
+#[inline]
+pub fn adjusted_profits(buf: &GroupBuf, lambda: &[f64], out: &mut [f64]) {
+    adjusted_profits_row(buf.row(), lambda, out)
 }
 
 /// Add the selected items' consumption `Σ_j b_jk x_j` into `acc[k]`,
 /// and return `(primal, dual)` group contributions:
 /// `primal = Σ p_j x_j`, `dual = Σ p̃_j x_j`.
 #[inline]
-pub fn accumulate_selection(
-    buf: &GroupBuf,
+pub fn accumulate_selection_row(
+    row: GroupRow<'_>,
     ptilde: &[f64],
     x: &[u8],
     acc: &mut [f64],
 ) -> (f64, f64) {
-    let m = buf.profits.len();
+    let m = row.profits.len();
     let mut primal = 0.0f64;
     let mut dual = 0.0f64;
-    match &buf.costs {
-        CostsBuf::Dense(b) => {
+    match row.costs {
+        RowCosts::Dense(b) => {
             let k = acc.len();
             for j in 0..m {
                 if x[j] != 0 {
-                    primal += buf.profits[j] as f64;
+                    primal += row.profits[j] as f64;
                     dual += ptilde[j];
-                    let row = &b[j * k..(j + 1) * k];
-                    for (a, &bc) in acc.iter_mut().zip(row) {
+                    let brow = &b[j * k..(j + 1) * k];
+                    for (a, &bc) in acc.iter_mut().zip(brow) {
                         *a += bc as f64;
                     }
                 }
             }
         }
-        CostsBuf::Sparse { knap, cost } => {
+        RowCosts::Sparse { knap, cost } => {
             for j in 0..m {
                 if x[j] != 0 {
-                    primal += buf.profits[j] as f64;
+                    primal += row.profits[j] as f64;
                     dual += ptilde[j];
                     acc[knap[j] as usize] += cost[j] as f64;
                 }
@@ -77,6 +90,17 @@ pub fn accumulate_selection(
     (primal, dual)
 }
 
+/// [`accumulate_selection_row`] through the per-group buffer API.
+#[inline]
+pub fn accumulate_selection(
+    buf: &GroupBuf,
+    ptilde: &[f64],
+    x: &[u8],
+    acc: &mut [f64],
+) -> (f64, f64) {
+    accumulate_selection_row(buf.row(), ptilde, x, acc)
+}
+
 /// Consumption of a single knapsack `k` by the selection (used by the SCD
 /// candidate walk, which only tracks the coordinate being updated).
 #[inline]
@@ -84,10 +108,7 @@ pub fn consumption_of(buf: &GroupBuf, x: &[u8], k: usize) -> f64 {
     let m = buf.profits.len();
     match &buf.costs {
         CostsBuf::Dense(b) => {
-            let kk = match &buf.costs {
-                CostsBuf::Dense(_) => b.len() / m,
-                _ => unreachable!(),
-            };
+            let kk = b.len() / m;
             (0..m)
                 .filter(|&j| x[j] != 0)
                 .map(|j| b[j * kk + k] as f64)
@@ -140,6 +161,22 @@ mod tests {
         adjusted_profits(&buf, &[3.0, 9.0, 2.0], &mut out);
         assert!((out[0] - (1.0 - 2.0 * 0.5)).abs() < 1e-9);
         assert!((out[1] - (2.0 - 3.0 * 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_and_buf_paths_agree_bitwise() {
+        let buf = dense_buf();
+        let lambda = [0.3, 1.7];
+        let (mut a, mut b) = ([0.0; 2], [0.0; 2]);
+        adjusted_profits(&buf, &lambda, &mut a);
+        adjusted_profits_row(buf.row(), &lambda, &mut b);
+        assert_eq!(a, b);
+        let mut acc_a = [0.0; 2];
+        let mut acc_b = [0.0; 2];
+        let ra = accumulate_selection(&buf, &a, &[1, 1], &mut acc_a);
+        let rb = accumulate_selection_row(buf.row(), &b, &[1, 1], &mut acc_b);
+        assert_eq!(ra, rb);
+        assert_eq!(acc_a, acc_b);
     }
 
     #[test]

@@ -10,38 +10,50 @@
 //!
 //! Screening those O(M²) positive values is exhaustive.
 
-use crate::instance::problem::{CostsBuf, GroupBuf};
+use crate::instance::problem::{GroupBuf, GroupRow, RowCosts};
 
-/// Per-coordinate line coefficients `(a_j, s_j)` with `s_j = b_jk`.
-pub fn line_coefficients(buf: &GroupBuf, lambda: &[f64], k: usize, a: &mut [f64], s: &mut [f64]) {
-    let m = buf.profits.len();
-    match &buf.costs {
-        CostsBuf::Dense(b) => {
+/// Per-coordinate line coefficients `(a_j, s_j)` with `s_j = b_jk`,
+/// consuming a zero-copy [`GroupRow`] — the block-path kernel.
+pub fn line_coefficients_row(
+    row: GroupRow<'_>,
+    lambda: &[f64],
+    k: usize,
+    a: &mut [f64],
+    s: &mut [f64],
+) {
+    let m = row.profits.len();
+    match row.costs {
+        RowCosts::Dense(b) => {
             let kk = lambda.len();
             for j in 0..m {
-                let row = &b[j * kk..(j + 1) * kk];
+                let brow = &b[j * kk..(j + 1) * kk];
                 let mut dot = 0.0f64;
-                for (kp, (&lam, &bc)) in lambda.iter().zip(row).enumerate() {
+                for (kp, (&lam, &bc)) in lambda.iter().zip(brow).enumerate() {
                     if kp != k {
                         dot += lam * bc as f64;
                     }
                 }
-                a[j] = buf.profits[j] as f64 - dot;
-                s[j] = row[k] as f64;
+                a[j] = row.profits[j] as f64 - dot;
+                s[j] = brow[k] as f64;
             }
         }
-        CostsBuf::Sparse { knap, cost } => {
+        RowCosts::Sparse { knap, cost } => {
             for j in 0..m {
                 if knap[j] as usize == k {
-                    a[j] = buf.profits[j] as f64;
+                    a[j] = row.profits[j] as f64;
                     s[j] = cost[j] as f64;
                 } else {
-                    a[j] = buf.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
+                    a[j] = row.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
                     s[j] = 0.0;
                 }
             }
         }
     }
+}
+
+/// [`line_coefficients_row`] through the per-group buffer API.
+pub fn line_coefficients(buf: &GroupBuf, lambda: &[f64], k: usize, a: &mut [f64], s: &mut [f64]) {
+    line_coefficients_row(buf.row(), lambda, k, a, s)
 }
 
 /// Collect the positive candidate values for `λ_k` into `out`
@@ -76,7 +88,7 @@ pub fn candidate_lambdas(a: &[f64], s: &[f64], out: &mut Vec<f64>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::instance::problem::{Dims, GroupBuf};
+    use crate::instance::problem::{CostsBuf, Dims, GroupBuf};
 
     fn dense_buf(p: &[f32], b: &[f32], k: usize) -> GroupBuf {
         let m = p.len();

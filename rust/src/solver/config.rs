@@ -74,6 +74,12 @@ pub struct SolverConfig {
     /// Use Algorithm 5 on eligible sparse instances (on by default;
     /// disable to benchmark the general Algorithm 3 path — Fig 4).
     pub use_sparse_fast_path: bool,
+    /// λ-stability skipping: cache each group's Algorithm-3 emissions per
+    /// coordinate and replay them while no *other* coordinate's multiplier
+    /// has moved bit-wise (on by default; in-process executor only, memory
+    /// gated by `PALLAS_SKIP_CACHE_MB`). Replays are exact, so results are
+    /// bit-identical either way — this knob only trades memory for work.
+    pub lambda_skip: bool,
     /// Under-relaxation β for the synchronous λ update:
     /// `λ^{t+1} = λ^t + β(reduce − λ^t)`. `None` = auto (1.0 on sparse
     /// instances, 0.5 on dense ones, whose coordinates couple strongly and
@@ -100,6 +106,7 @@ impl Default for SolverConfig {
             postprocess: true,
             shard_size: None,
             use_sparse_fast_path: true,
+            lambda_skip: true,
             damping: None,
             track_history: true,
         }

@@ -19,7 +19,7 @@ use crate::solver::config::SolverConfig;
 use crate::solver::postprocess;
 use crate::solver::rounds::{evaluation_round, RoundAgg, RustEvaluator, ShardEvaluator};
 use crate::solver::stats::{
-    max_violation_ratio, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+    max_violation_ratio, ObserverControl, PhaseTimings, RoundEvent, SolveObserver, SolveReport,
 };
 use crate::util::rel_change;
 
@@ -133,10 +133,14 @@ fn dd_drive<S: GroupSource + ?Sized>(
     let mut converged = false;
     let mut stopped = false;
     let mut iterations = 0;
+    let mut phases = PhaseTimings::default();
 
     for t in 0..config.max_iters {
         let it0 = std::time::Instant::now();
         let agg = round(shards, &lambda)?;
+        let map_ms = it0.elapsed().as_secs_f64() * 1e3;
+        phases.map_ms += map_ms;
+        let r0 = std::time::Instant::now();
         let consumption = agg.consumption_values();
 
         // leader-side dual-descent update
@@ -144,6 +148,8 @@ fn dd_drive<S: GroupSource + ?Sized>(
         for k in 0..dims.n_global {
             new_lambda[k] = (lambda[k] + config.dd_alpha * (consumption[k] - budgets[k])).max(0.0);
         }
+        let reduce_ms = r0.elapsed().as_secs_f64() * 1e3;
+        phases.reduce_ms += reduce_ms;
         let residual = rel_change(&new_lambda, &lambda);
         iterations = t + 1;
         let event = RoundEvent {
@@ -153,6 +159,9 @@ fn dd_drive<S: GroupSource + ?Sized>(
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
             wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            map_ms,
+            reduce_ms,
+            skip_rate: 0.0,
             lambda: &new_lambda,
         };
         if config.track_history {
@@ -179,7 +188,10 @@ fn dd_drive<S: GroupSource + ?Sized>(
     // feasibility decision post-processing makes) match report.lambda —
     // the same self-consistency contract the SCD drivers keep
     let agg = if stopped {
-        round(shards, &lambda)?
+        let e0 = std::time::Instant::now();
+        let agg = round(shards, &lambda)?;
+        phases.final_eval_ms = e0.elapsed().as_secs_f64() * 1e3;
+        agg
     } else {
         last_agg.expect("max_iters ≥ 1 ran at least one round")
     };
@@ -195,9 +207,12 @@ fn dd_drive<S: GroupSource + ?Sized>(
         dropped_groups: 0,
         history,
         wall_ms: 0.0,
+        phases,
     };
     if config.postprocess && !report.is_feasible() {
+        let p0 = std::time::Instant::now();
         postprocess::enforce_feasibility(source, &mut report, exec)?;
+        report.phases.postprocess_ms = p0.elapsed().as_secs_f64() * 1e3;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(obs) = observer.as_mut() {

@@ -79,9 +79,10 @@ pub fn greedy_select(locals: &LaminarProfile, scratch: &mut GroupScratch) {
 pub fn greedy_select_warm(locals: &LaminarProfile, scratch: &mut GroupScratch) {
     let m = scratch.ptilde.len();
     debug_assert_eq!(scratch.order.len(), m, "seed scratch.order before warm calls");
-    // init: select iff p̃ > 0
-    for j in 0..m {
-        scratch.x[j] = (scratch.ptilde[j] > 0.0) as u8;
+    // init: select iff p̃ > 0 — branchless byte stores, bounds checks
+    // elided by the zip (this runs once per candidate on the SCD walk)
+    for (x, &pt) in scratch.x.iter_mut().zip(scratch.ptilde.iter()) {
+        *x = (pt > 0.0) as u8;
     }
     if locals.is_empty() {
         return;

@@ -30,7 +30,8 @@ pub mod presolve;
 pub mod rounds;
 pub mod scd;
 pub mod sparse_q;
+pub(crate) mod stability;
 pub mod stats;
 
 pub use config::{CdMode, ReduceMode, SolverConfig};
-pub use stats::{IterStat, SolveReport};
+pub use stats::{IterStat, PhaseTimings, SolveReport};

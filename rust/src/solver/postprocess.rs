@@ -13,16 +13,18 @@
 
 use crate::cluster::Exec;
 use crate::error::Result;
-use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::instance::problem::{for_each_row, BlockBuf, GroupBuf, GroupSource};
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
-use crate::solver::adjusted::{accumulate_selection, adjusted_profits};
+use crate::solver::adjusted::{accumulate_selection, adjusted_profits, adjusted_profits_row};
 use crate::solver::greedy::{greedy_select, GroupScratch};
 use crate::solver::stats::SolveReport;
 
 /// Rank the contiguous shard chunk `[lo, hi)`: gather `(p̃_i, i)` for every
 /// group with a non-empty selection — the map phase of §5.4, and the unit
-/// a cluster worker executes for one rank task frame.
+/// a cluster worker executes for one rank task frame. Groups stream
+/// through the zero-copy block path with worker-held scratch (no per-shard
+/// allocation).
 pub(crate) fn rank_chunk<S: GroupSource + ?Sized>(
     source: &S,
     shards: Shards,
@@ -36,24 +38,36 @@ pub(crate) fn rank_chunk<S: GroupSource + ?Sized>(
         hi.saturating_sub(lo),
         Vec::new,
         |acc: &mut Vec<(f32, u32)>, idx| {
-            let shard = shards.get(lo + idx);
-            let mut buf = GroupBuf::new(dims, source.is_dense());
-            let mut scratch = GroupScratch::new(dims.n_items);
-            for i in shard.iter() {
-                source.fill_group(i, &mut buf);
-                adjusted_profits(&buf, lambda, &mut scratch.ptilde);
-                greedy_select(source.locals(), &mut scratch);
-                let ptilde_i: f64 = scratch
-                    .ptilde
-                    .iter()
-                    .zip(&scratch.x)
-                    .filter(|(_, &x)| x != 0)
-                    .map(|(&p, _)| p)
-                    .sum();
-                if scratch.x.iter().any(|&x| x != 0) {
-                    acc.push((ptilde_i as f32, i as u32));
-                }
+            thread_local! {
+                static BUFS: std::cell::RefCell<Option<(BlockBuf, GroupScratch)>> =
+                    const { std::cell::RefCell::new(None) };
             }
+            BUFS.with(|cell| {
+                let mut slot = cell.borrow_mut();
+                let needs_new = match slot.as_ref() {
+                    Some((_, s)) => s.ptilde.len() != dims.n_items,
+                    None => true,
+                };
+                if needs_new {
+                    *slot = Some((BlockBuf::new(), GroupScratch::new(dims.n_items)));
+                }
+                let (block, scratch) = slot.as_mut().unwrap();
+                let shard = shards.get(lo + idx);
+                for_each_row(source, shard.start, shard.end, block, |i, row| {
+                    adjusted_profits_row(row, lambda, &mut scratch.ptilde);
+                    greedy_select(source.locals(), scratch);
+                    let ptilde_i: f64 = scratch
+                        .ptilde
+                        .iter()
+                        .zip(&scratch.x)
+                        .filter(|(_, &x)| x != 0)
+                        .map(|(&p, _)| p)
+                        .sum();
+                    if scratch.x.iter().any(|&x| x != 0) {
+                        acc.push((ptilde_i as f32, i as u32));
+                    }
+                });
+            });
         },
         |mut a, b| {
             a.extend(b);
@@ -146,6 +160,7 @@ mod tests {
             dropped_groups: 0,
             history: vec![],
             wall_ms: 0.0,
+            phases: Default::default(),
         }
     }
 

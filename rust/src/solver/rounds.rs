@@ -2,10 +2,10 @@
 //! groups, aggregating consumption / primal / dual — the body of every DD
 //! iteration (Algorithm 2's `Map` + `Reduce`) and of SCD's bookkeeping.
 
-use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::instance::problem::{for_each_row, BlockBuf, GroupSource};
 use crate::instance::shard::{ShardRange, Shards};
 use crate::mapreduce::Cluster;
-use crate::solver::adjusted::{accumulate_selection, adjusted_profits};
+use crate::solver::adjusted::{accumulate_selection_row, adjusted_profits_row};
 use crate::solver::greedy::{greedy_select, GroupScratch};
 use crate::util::KahanSum;
 
@@ -84,43 +84,38 @@ impl<S: GroupSource + ?Sized> ShardEvaluator for RustEvaluator<'_, S> {
     fn eval_shard(&self, shard: ShardRange, lambda: &[f64], agg: &mut RoundAgg) {
         let dims = self.source.dims();
         let locals = self.source.locals();
-        // thread-local reusable buffers (one pair per worker-held call)
+        // thread-local reusable buffers (one set per worker-held call);
+        // groups stream through the zero-copy block path
         thread_local! {
-            static BUFS: std::cell::RefCell<Option<(GroupBuf, GroupScratch, Vec<f64>)>> =
+            static BUFS: std::cell::RefCell<Option<(BlockBuf, GroupScratch, Vec<f64>)>> =
                 const { std::cell::RefCell::new(None) };
         }
         BUFS.with(|cell| {
             let mut slot = cell.borrow_mut();
             let needs_new = match slot.as_ref() {
-                Some((b, s, acc)) => {
-                    b.profits.len() != dims.n_items
-                        || s.ptilde.len() != dims.n_items
-                        || acc.len() != dims.n_global
-                        || b.costs.is_dense() != self.source.is_dense()
+                Some((_, s, acc)) => {
+                    s.ptilde.len() != dims.n_items || acc.len() != dims.n_global
                 }
                 None => true,
             };
             if needs_new {
-                *slot = Some((
-                    GroupBuf::new(dims, self.source.is_dense()),
-                    GroupScratch::new(dims.n_items),
-                    vec![0.0; dims.n_global],
-                ));
+                let acc = vec![0.0; dims.n_global];
+                *slot = Some((BlockBuf::new(), GroupScratch::new(dims.n_items), acc));
             }
-            let (buf, scratch, acc) = slot.as_mut().unwrap();
-            for i in shard.iter() {
-                self.source.fill_group(i, buf);
-                adjusted_profits(buf, lambda, &mut scratch.ptilde);
+            let (block, scratch, acc) = slot.as_mut().unwrap();
+            for_each_row(self.source, shard.start, shard.end, block, |_, row| {
+                adjusted_profits_row(row, lambda, &mut scratch.ptilde);
                 greedy_select(locals, scratch);
                 acc.iter_mut().for_each(|a| *a = 0.0);
-                let (primal, dual) = accumulate_selection(buf, &scratch.ptilde, &scratch.x, acc);
+                let (primal, dual) =
+                    accumulate_selection_row(row, &scratch.ptilde, &scratch.x, acc);
                 for (sum, &a) in agg.consumption.iter_mut().zip(acc.iter()) {
                     sum.add(a);
                 }
                 agg.primal.add(primal);
                 agg.dual_inner.add(dual);
                 agg.n_selected += scratch.x.iter().map(|&x| x as u64).sum::<u64>();
-            }
+            });
         });
     }
 }

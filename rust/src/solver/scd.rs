@@ -18,22 +18,24 @@
 
 use crate::cluster::Exec;
 use crate::error::Result;
-use crate::instance::problem::{GroupBuf, GroupSource};
+use crate::instance::problem::{for_each_row, BlockBuf, GroupSource, RowCosts};
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
-use crate::solver::adjusted::{accumulate_selection, adjusted_profits};
+use crate::solver::adjusted::{accumulate_selection_row, adjusted_profits_row};
 use crate::solver::bucketing::BucketHist;
-use crate::solver::candidates::{candidate_lambdas, line_coefficients};
+use crate::solver::candidates::{candidate_lambdas, line_coefficients_row};
 use crate::solver::cd_modes::{active_coords, sweep_len};
 use crate::solver::config::{ReduceMode, SolverConfig};
 use crate::solver::greedy::{greedy_select, greedy_select_warm, reset_order, GroupScratch};
 use crate::solver::postprocess;
 use crate::solver::rounds::RoundAgg;
 use crate::solver::sparse_q::{self, SparseQScratch};
+use crate::solver::stability::ScdStability;
 use crate::solver::stats::{
-    max_violation_ratio, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+    max_violation_ratio, ObserverControl, PhaseTimings, RoundEvent, SolveObserver, SolveReport,
 };
 use crate::util::rel_change;
+use std::sync::Mutex;
 
 /// The one warm-start λ validator (length, finiteness, non-negativity) —
 /// shared by [`initial_lambda`] and the session planner so the two stages
@@ -105,6 +107,63 @@ pub fn exact_threshold_reduce(pairs: &mut [(f64, f64)], budget: f64) -> f64 {
     0.0
 }
 
+/// A recycling arena for the exact reduce's `(v1, v2)` pair buffers. The
+/// per-worker accumulators and the leader's merged accumulator used to be
+/// re-allocated every round (`K` vectors per worker per round, growing to
+/// the round's full emission volume); the pool hands the same warmed
+/// buffers back out round after round, so the steady-state hot path makes
+/// zero pair-buffer allocations. Leader-local: never crosses the wire.
+pub(crate) struct PairPool(Mutex<Vec<Vec<(f64, f64)>>>);
+
+impl PairPool {
+    /// Empty pool.
+    pub(crate) fn new() -> Self {
+        Self(Mutex::new(Vec::new()))
+    }
+
+    /// Take `n` cleared buffers (allocating only what the pool lacks).
+    fn take_n(&self, n: usize) -> Vec<Vec<(f64, f64)>> {
+        let mut pool = self.0.lock().unwrap();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(pool.pop().unwrap_or_default());
+        }
+        out
+    }
+
+    /// Return one buffer (cleared, capacity kept).
+    fn put(&self, mut v: Vec<(f64, f64)>) {
+        v.clear();
+        self.0.lock().unwrap().push(v);
+    }
+
+    /// Return many buffers at once.
+    fn put_all<I: IntoIterator<Item = Vec<(f64, f64)>>>(&self, vs: I) {
+        let mut pool = self.0.lock().unwrap();
+        for mut v in vs {
+            v.clear();
+            pool.push(v);
+        }
+    }
+}
+
+/// Leader-local context for one SCD map round — state that never crosses
+/// the wire: the λ-stability cache and the pair-buffer arena. Remote
+/// workers run with [`ScdRoundCtx::none`] (they are stateless between
+/// frames by design; replay vs. recompute is bit-identical either way).
+#[derive(Clone, Copy)]
+pub(crate) struct ScdRoundCtx<'a> {
+    pub(crate) stability: Option<&'a ScdStability>,
+    pub(crate) pool: Option<&'a PairPool>,
+}
+
+impl ScdRoundCtx<'_> {
+    /// The stateless context (worker processes, tests).
+    pub(crate) fn none() -> Self {
+        Self { stability: None, pool: None }
+    }
+}
+
 /// Per-coordinate threshold accumulators (the shuffle state). Crate-public
 /// so the cluster wire protocol can ship a worker's partial back to the
 /// leader ([`crate::cluster::protocol`]).
@@ -117,8 +176,15 @@ pub(crate) enum ThresholdAcc {
 
 impl ThresholdAcc {
     pub(crate) fn new(mode: ReduceMode, lambda: &[f64]) -> Self {
+        Self::new_pooled(mode, lambda, None)
+    }
+
+    fn new_pooled(mode: ReduceMode, lambda: &[f64], pool: Option<&PairPool>) -> Self {
         match mode {
-            ReduceMode::Exact => ThresholdAcc::Exact(vec![Vec::new(); lambda.len()]),
+            ReduceMode::Exact => ThresholdAcc::Exact(match pool {
+                Some(p) => p.take_n(lambda.len()),
+                None => vec![Vec::new(); lambda.len()],
+            }),
             ReduceMode::Bucketed { delta } => ThresholdAcc::Bucketed(
                 lambda.iter().map(|&c| BucketHist::new(c, delta)).collect(),
             ),
@@ -134,10 +200,25 @@ impl ThresholdAcc {
     }
 
     pub(crate) fn merge(&mut self, other: ThresholdAcc) {
+        self.merge_pooled(other, None)
+    }
+
+    /// [`ThresholdAcc::merge`], recycling the drained right-hand buffers
+    /// into `pool` instead of dropping their allocations. Emission order
+    /// is preserved exactly (left's pairs, then right's), so pooling never
+    /// perturbs the reduce inputs.
+    fn merge_pooled(&mut self, other: ThresholdAcc, pool: Option<&PairPool>) {
         match (self, other) {
             (ThresholdAcc::Exact(a), ThresholdAcc::Exact(b)) => {
-                for (x, y) in a.iter_mut().zip(b) {
-                    x.extend(y);
+                for (x, mut y) in a.iter_mut().zip(b) {
+                    if x.is_empty() && y.capacity() > x.capacity() {
+                        std::mem::swap(x, &mut y);
+                    } else {
+                        x.append(&mut y);
+                    }
+                    if let Some(p) = pool {
+                        p.put(y);
+                    }
                 }
             }
             (ThresholdAcc::Bucketed(a), ThresholdAcc::Bucketed(b)) => {
@@ -146,6 +227,14 @@ impl ThresholdAcc {
                 }
             }
             _ => unreachable!("reduce modes agree within a round"),
+        }
+    }
+
+    /// Hand every pair buffer back to the arena after the leader's reduce
+    /// consumed the round.
+    fn recycle(self, pool: &PairPool) {
+        if let ThresholdAcc::Exact(vs) = self {
+            pool.put_all(vs);
         }
     }
 
@@ -167,17 +256,25 @@ pub(crate) struct ScdAcc {
 
 impl ScdAcc {
     pub(crate) fn new(reduce: ReduceMode, lambda: &[f64]) -> Self {
+        Self::new_pooled(reduce, lambda, None)
+    }
+
+    fn new_pooled(reduce: ReduceMode, lambda: &[f64], pool: Option<&PairPool>) -> Self {
         Self {
             round: RoundAgg::new(lambda.len()),
-            thresholds: ThresholdAcc::new(reduce, lambda),
+            thresholds: ThresholdAcc::new_pooled(reduce, lambda, pool),
         }
     }
 
     /// Merge `other` into `self` (call in shard/chunk order for
     /// reproducible floating-point results).
-    pub(crate) fn merge(mut self, other: ScdAcc) -> Self {
+    pub(crate) fn merge(self, other: ScdAcc) -> Self {
+        self.merge_pooled(other, None)
+    }
+
+    fn merge_pooled(mut self, other: ScdAcc, pool: Option<&PairPool>) -> Self {
         self.round = std::mem::replace(&mut self.round, RoundAgg::new(0)).merge(other.round);
-        self.thresholds.merge(other.thresholds);
+        self.thresholds.merge_pooled(other.thresholds, pool);
         self
     }
 }
@@ -197,7 +294,8 @@ pub(crate) struct ScdRoundSpec<'a> {
 /// Map the contiguous shard chunk `[lo, hi)` of the global partition for
 /// one SCD round — the unit a cluster worker executes for one SCD task
 /// frame, and (with `lo = 0, hi = shards.count()`) the whole in-process
-/// round.
+/// round. `ctx` carries the leader-local λ-stability cache and buffer
+/// arena (use [`ScdRoundCtx::none`] on worker processes).
 pub(crate) fn scd_round_chunk<S: GroupSource + ?Sized>(
     source: &S,
     shards: Shards,
@@ -205,21 +303,13 @@ pub(crate) fn scd_round_chunk<S: GroupSource + ?Sized>(
     hi: usize,
     spec: &ScdRoundSpec<'_>,
     cluster: &Cluster,
+    ctx: ScdRoundCtx<'_>,
 ) -> ScdAcc {
     cluster.map_combine(
         hi.saturating_sub(lo),
-        || ScdAcc::new(spec.reduce, spec.lambda),
-        |acc, idx| {
-            scd_map_shard(
-                source,
-                shards.get(lo + idx),
-                spec.lambda,
-                spec.active_mask,
-                spec.sparse_q,
-                acc,
-            )
-        },
-        ScdAcc::merge,
+        || ScdAcc::new_pooled(spec.reduce, spec.lambda, ctx.pool),
+        |acc, idx| scd_map_shard(source, shards.get(lo + idx), lo + idx, spec, ctx.stability, acc),
+        |a, b| a.merge_pooled(b, ctx.pool),
     )
 }
 
@@ -275,6 +365,28 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
     // §5.3 pre-solving samples a few thousand groups — always leader-local
     let mut lambda = initial_lambda(source, config, exec.local_pool(), init)?;
 
+    // λ-stability cache: in-process Algorithm-3 rounds only (remote
+    // workers are stateless between frames; Algorithm 5's emissions depend
+    // on the full λ vector, so there is nothing provably stable to replay)
+    let mut stability = if config.lambda_skip
+        && sparse_q.is_none()
+        && matches!(exec, Exec::Local(_))
+    {
+        ScdStability::try_new(shards, kk)
+    } else {
+        None
+    };
+    // the λ the previous round was mapped at (bit-equality tracking)
+    let mut last_broadcast: Option<Vec<f64>> = None;
+    // the pair-buffer arena only cycles on the in-process executor — the
+    // remote path builds its accumulators worker-side, so recycling into
+    // a pool nothing ever drains would just grow leader memory per round
+    let pool = match exec {
+        Exec::Local(_) => Some(PairPool::new()),
+        Exec::Remote(_) => None,
+    };
+    let mut phases = PhaseTimings::default();
+
     // under-relaxation: dense instances couple every coordinate with every
     // other (an item consumes all K knapsacks), so the undamped synchronous
     // (Jacobi-style) update overshoots collectively and 2-cycles between
@@ -311,7 +423,23 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             sparse_q,
             reduce: config.reduce,
         };
-        let acc = exec.scd_round(source, shards, &spec)?;
+        if let Some(st) = stability.as_mut() {
+            st.begin_round(last_broadcast.as_deref(), &lambda);
+            last_broadcast = Some(lambda.clone());
+        }
+        phases.broadcast_ms += it0.elapsed().as_secs_f64() * 1e3;
+
+        let m0 = std::time::Instant::now();
+        let ctx = ScdRoundCtx { stability: stability.as_ref(), pool: pool.as_ref() };
+        let acc = exec.scd_round(source, shards, &spec, ctx)?;
+        let map_ms = m0.elapsed().as_secs_f64() * 1e3;
+        phases.map_ms += map_ms;
+        let (walks, skipped) = stability.as_ref().map_or((0, 0), |st| st.take_counts());
+        phases.walks_total += walks;
+        phases.walks_skipped += skipped;
+        let skip_rate = if walks == 0 { 0.0 } else { skipped as f64 / walks as f64 };
+
+        let r0 = std::time::Instant::now();
         let ScdAcc { round, mut thresholds } = acc;
         let consumption = round.consumption_values();
 
@@ -320,6 +448,11 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             let reduced = thresholds.reduce(k, budgets[k]);
             new_lambda[k] = (lambda[k] + beta * (reduced - lambda[k])).max(0.0);
         }
+        if let Some(p) = &pool {
+            thresholds.recycle(p);
+        }
+        let reduce_ms = r0.elapsed().as_secs_f64() * 1e3;
+        phases.reduce_ms += reduce_ms;
 
         iterations = t + 1;
         let residual = rel_change(&new_lambda, &lambda);
@@ -330,6 +463,9 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
             wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            map_ms,
+            reduce_ms,
+            skip_rate,
             lambda: &new_lambda,
         };
         if config.track_history {
@@ -382,6 +518,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
 
     // the recorded aggregate is for λ^{T-1}; re-evaluate at the final λ so
     // the report is self-consistent
+    let e0 = std::time::Instant::now();
     let agg = if converged && iterations > 0 {
         // λ barely moved; the last aggregate is within tolerance, but the
         // final evaluation keeps the primal/consumption exactly matched to
@@ -393,6 +530,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             None => RoundAgg::new(kk),
         }
     };
+    phases.final_eval_ms = e0.elapsed().as_secs_f64() * 1e3;
 
     let mut report = SolveReport {
         dual_value: agg.dual_value(&lambda, &budgets),
@@ -406,9 +544,12 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
         dropped_groups: 0,
         history,
         wall_ms: 0.0,
+        phases,
     };
     if config.postprocess && !report.is_feasible() {
+        let p0 = std::time::Instant::now();
         postprocess::enforce_feasibility(source, &mut report, exec)?;
+        report.phases.postprocess_ms = p0.elapsed().as_secs_f64() * 1e3;
     }
     report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(obs) = observer.as_mut() {
@@ -418,18 +559,22 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
 }
 
 /// Map one shard: evaluate at `λ^t` (stats) and emit threshold candidates
-/// for the active coordinates.
+/// for the active coordinates. Groups stream through the zero-copy block
+/// path ([`GroupSource::fill_block`]); all scratch is arena-reused across
+/// groups, blocks and rounds. `shard_idx` is the shard's global index in
+/// the round's partition (the λ-stability cache is keyed by it).
 fn scd_map_shard<S: GroupSource + ?Sized>(
     source: &S,
     shard: crate::instance::shard::ShardRange,
-    lambda: &[f64],
-    active_mask: &[bool],
-    sparse_q: Option<u32>,
+    shard_idx: usize,
+    spec: &ScdRoundSpec<'_>,
+    stability: Option<&ScdStability>,
     acc: &mut ScdAcc,
 ) {
     let dims = source.dims();
     let locals = source.locals();
     let kk = dims.n_global;
+    let (lambda, active_mask) = (spec.lambda, spec.active_mask);
     thread_local! {
         static SCRATCH: std::cell::RefCell<Option<ScdScratch>> =
             const { std::cell::RefCell::new(None) };
@@ -437,52 +582,77 @@ fn scd_map_shard<S: GroupSource + ?Sized>(
     SCRATCH.with(|cell| {
         let mut slot = cell.borrow_mut();
         let fresh = match slot.as_ref() {
-            Some(s) => {
-                s.buf.profits.len() != dims.n_items
-                    || s.buf.costs.is_dense() != source.is_dense()
-                    || s.acc_cons.len() != kk
-            }
+            Some(s) => s.greedy.ptilde.len() != dims.n_items || s.acc_cons.len() != kk,
             None => true,
         };
         if fresh {
-            *slot = Some(ScdScratch::new(dims.n_items, kk, source.is_dense()));
+            *slot = Some(ScdScratch::new(dims.n_items, kk));
         }
-        let s = slot.as_mut().unwrap();
-        for i in shard.iter() {
-            source.fill_group(i, &mut s.buf);
+        let ScdScratch { block, greedy, sparse, acc_cons, a, s: slopes, cand, emits } =
+            slot.as_mut().unwrap();
+        let mut guard = stability.map(|st| st.shard(shard_idx));
 
+        for_each_row(source, shard.start, shard.end, block, |i, row| {
             // --- stats / consumption at the current λ ---
-            adjusted_profits(&s.buf, lambda, &mut s.greedy.ptilde);
-            greedy_select(locals, &mut s.greedy);
-            s.acc_cons.iter_mut().for_each(|a| *a = 0.0);
-            let (primal, dual) =
-                accumulate_selection(&s.buf, &s.greedy.ptilde, &s.greedy.x, &mut s.acc_cons);
-            for (sum, &a) in acc.round.consumption.iter_mut().zip(s.acc_cons.iter()) {
-                sum.add(a);
+            adjusted_profits_row(row, lambda, &mut greedy.ptilde);
+            greedy_select(locals, greedy);
+            acc_cons.iter_mut().for_each(|v| *v = 0.0);
+            let (primal, dual) = accumulate_selection_row(row, &greedy.ptilde, &greedy.x, acc_cons);
+            for (sum, &v) in acc.round.consumption.iter_mut().zip(acc_cons.iter()) {
+                sum.add(v);
             }
             acc.round.primal.add(primal);
             acc.round.dual_inner.add(dual);
-            acc.round.n_selected += s.greedy.x.iter().map(|&x| x as u64).sum::<u64>();
+            acc.round.n_selected += greedy.x.iter().map(|&x| x as u64).sum::<u64>();
 
             // --- candidate emissions ---
-            match sparse_q {
+            match spec.sparse_q {
                 Some(q) => {
-                    sparse_q::emit_candidates(&s.buf, lambda, q, &mut s.sparse, |k, v1, v2| {
-                        if active_mask[k] {
-                            acc.thresholds.add(k, v1, v2);
+                    let (knap, cost) = match row.costs {
+                        RowCosts::Sparse { knap, cost } => (knap, cost),
+                        RowCosts::Dense(_) => {
+                            unreachable!("Algorithm 5 requires the sparse layout")
                         }
-                    });
+                    };
+                    sparse_q::emit_candidates_row(
+                        row.profits,
+                        knap,
+                        cost,
+                        lambda,
+                        q,
+                        sparse,
+                        |k, v1, v2| {
+                            if active_mask[k] {
+                                acc.thresholds.add(k, v1, v2);
+                            }
+                        },
+                    );
                 }
                 None => {
                     for k in 0..kk {
                         if !active_mask[k] {
                             continue;
                         }
-                        line_coefficients(&s.buf, lambda, k, &mut s.a, &mut s.s);
-                        candidate_lambdas(&s.a, &s.s, &mut s.cand);
+                        // λ-stability: replay the cached walk when no
+                        // *other* coordinate moved since it was taken
+                        if let Some(gd) = guard.as_mut() {
+                            if gd.replay(i, k, |v1, v2| acc.thresholds.add(k, v1, v2)) {
+                                continue;
+                            }
+                        }
+                        line_coefficients_row(row, lambda, k, a, slopes);
+                        candidate_lambdas(a, slopes, cand);
                         // walk with a warm sort order: adjacent candidates
                         // differ by ~one transposition
-                        reset_order(&mut s.greedy);
+                        reset_order(greedy);
+                        // capture emissions only when a cache exists AND
+                        // caching this coordinate can pay off (λ_{-k} was
+                        // quiet) — stateless workers and churning
+                        // coordinates skip the bookkeeping entirely
+                        let caching = guard.as_ref().is_some_and(|g| g.store_useful(k));
+                        if caching {
+                            emits.clear();
+                        }
                         // walk candidate *intervals* from high λ_k to low.
                         // The greedy solution is constant on the open
                         // interval between consecutive candidates, so we
@@ -491,53 +661,62 @@ fn scd_map_shard<S: GroupSource + ?Sized>(
                         // the transition) and emit the increment with the
                         // interval's upper endpoint as the threshold.
                         let mut prev = 0.0f64;
-                        for ci in 0..s.cand.len() {
-                            let hi = s.cand[ci];
-                            let lo = s.cand.get(ci + 1).copied().unwrap_or(0.0);
+                        for ci in 0..cand.len() {
+                            let hi = cand[ci];
+                            let lo = cand.get(ci + 1).copied().unwrap_or(0.0);
                             let mid = 0.5 * (hi + lo);
-                            for j in 0..dims.n_items {
-                                s.greedy.ptilde[j] = s.a[j] - mid * s.s[j];
+                            for (pt, (&aj, &sj)) in
+                                greedy.ptilde.iter_mut().zip(a.iter().zip(slopes.iter()))
+                            {
+                                *pt = aj - mid * sj;
                             }
-                            greedy_select_warm(locals, &mut s.greedy);
+                            greedy_select_warm(locals, greedy);
                             let cur: f64 = (0..dims.n_items)
-                                .filter(|&j| s.greedy.x[j] != 0)
-                                .map(|j| s.s[j])
+                                .filter(|&j| greedy.x[j] != 0)
+                                .map(|j| slopes[j])
                                 .sum();
                             if cur > prev {
                                 acc.thresholds.add(k, hi, cur - prev);
+                                if caching {
+                                    emits.push((hi, cur - prev));
+                                }
                                 prev = cur;
+                            }
+                        }
+                        if caching {
+                            if let Some(gd) = guard.as_mut() {
+                                gd.store(i, k, emits);
                             }
                         }
                     }
                 }
             }
-        }
+        });
     });
 }
 
 struct ScdScratch {
-    buf: GroupBuf,
+    block: BlockBuf,
     greedy: GroupScratch,
     sparse: SparseQScratch,
     acc_cons: Vec<f64>,
     a: Vec<f64>,
     s: Vec<f64>,
     cand: Vec<f64>,
+    emits: Vec<(f64, f64)>,
 }
 
 impl ScdScratch {
-    fn new(m: usize, k: usize, dense: bool) -> Self {
+    fn new(m: usize, k: usize) -> Self {
         Self {
-            buf: GroupBuf::new(
-                crate::instance::problem::Dims { n_groups: 1, n_items: m, n_global: k },
-                dense,
-            ),
+            block: BlockBuf::new(),
             greedy: GroupScratch::new(m),
             sparse: SparseQScratch::default(),
             acc_cons: vec![0.0; k],
             a: vec![0.0; m],
             s: vec![0.0; m],
             cand: Vec::new(),
+            emits: Vec::new(),
         }
     }
 }

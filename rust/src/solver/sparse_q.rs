@@ -49,30 +49,30 @@ pub fn xla_identity_eligible<S: GroupSource + ?Sized>(source: &S) -> bool {
     eligible(source).is_some() && dims.n_items == dims.n_global
 }
 
-/// The Algorithm-5 map step for one group: emit `(k, v1, v2)` candidate
-/// triples via `emit`. `q` is the local cap.
+/// The Algorithm-5 map step for one group row: emit `(k, v1, v2)`
+/// candidate triples via `emit`. `q` is the local cap. The slices come
+/// straight out of a [`crate::instance::problem::GroupBlock`] — zero-copy
+/// on block-capable sources.
 ///
 /// `v1` is the critical multiplier below which item `j` (consuming from
 /// knapsack `knap[j]`) is selected; `v2 = b_j` is the consumption it then
 /// adds.
-pub fn emit_candidates<F: FnMut(usize, f64, f64)>(
-    buf: &GroupBuf,
+pub fn emit_candidates_row<F: FnMut(usize, f64, f64)>(
+    profits: &[f32],
+    knap: &[u32],
+    cost: &[f32],
     lambda: &[f64],
     q: u32,
     scratch: &mut SparseQScratch,
     mut emit: F,
 ) {
-    let m = buf.profits.len();
-    let (knap, cost) = match &buf.costs {
-        CostsBuf::Sparse { knap, cost } => (knap, cost),
-        CostsBuf::Dense(_) => panic!("Algorithm 5 requires the sparse layout"),
-    };
+    let m = profits.len();
     scratch.ap.clear();
     scratch.ap.reserve(m);
     for j in 0..m {
         // f64 end-to-end: the same arithmetic as Algorithm 3's line
         // coefficients, so the two candidate paths agree bit-exactly
-        let ap = buf.profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
+        let ap = profits[j] as f64 - lambda[knap[j] as usize] * cost[j] as f64;
         scratch.ap.push(ap.max(0.0));
     }
     let q = q as usize;
@@ -89,12 +89,28 @@ pub fn emit_candidates<F: FnMut(usize, f64, f64)>(
             continue; // zero-cost item: λ never changes its status
         }
         let p_bar = if scratch.ap[j] >= q_th { q1_th } else { q_th };
-        let p = buf.profits[j] as f64;
+        let p = profits[j] as f64;
         if p > p_bar {
             let v1 = (p - p_bar) / cost[j] as f64;
             emit(knap[j] as usize, v1, cost[j] as f64);
         }
     }
+}
+
+/// [`emit_candidates_row`] through the per-group buffer API. Panics on a
+/// dense buffer (Algorithm 5's precondition).
+pub fn emit_candidates<F: FnMut(usize, f64, f64)>(
+    buf: &GroupBuf,
+    lambda: &[f64],
+    q: u32,
+    scratch: &mut SparseQScratch,
+    emit: F,
+) {
+    let (knap, cost) = match &buf.costs {
+        CostsBuf::Sparse { knap, cost } => (knap, cost),
+        CostsBuf::Dense(_) => panic!("Algorithm 5 requires the sparse layout"),
+    };
+    emit_candidates_row(&buf.profits, knap, cost, lambda, q, scratch, emit)
 }
 
 #[cfg(test)]

@@ -1,0 +1,393 @@
+//! λ-stability skipping for the SCD map phase.
+//!
+//! Algorithm 3's candidate walk for coordinate `k` never reads `λ_k`
+//! itself: the line coefficients are `a_j = p_j − Σ_{k'≠k} λ_{k'} b_jk'`,
+//! `s_j = b_jk`, and the walk enumerates *every* positive candidate from
+//! high `λ_k` to low. A group's emitted `(v1, v2)` set for coordinate `k`
+//! is therefore a pure function of the group data and `λ_{-k}` — it is
+//! provably unchanged on the whole interval `λ_k ∈ [0, ∞)` as long as no
+//! *other* coordinate moved, and is invalidated the moment one does (the
+//! interval collapses to empty). This is the flip side of the paper's
+//! observation that each exact line-search update moves one coordinate
+//! while most group decisions stay fixed: once coordinates freeze (the
+//! convergence tail, cyclic sweeps over a quiet region, or the ubiquitous
+//! single-global-constraint case `K = 1`, where `λ_{-k}` is empty and the
+//! cache never invalidates), the O(M²·K) walk is pure recomputation.
+//!
+//! [`ScdStability`] caches each group's emissions per coordinate and
+//! *replays* them — same values, same order — when the validity rule
+//! holds, so the reduce receives bit-identical inputs whether a walk was
+//! skipped or recomputed. Bit-equality of multipliers is tracked with
+//! round tags (`last_change[k]` = last round whose broadcast λ_k differed
+//! bit-wise from the previous round's), which makes the validity check
+//! O(1) per (group, coordinate): `other_change[k] ≤ computed_round`.
+//! The tag rule is deliberately one-sided: a coordinate that oscillates
+//! A→B→A is treated as changed even though its bits match the cache
+//! round again, so an occasional valid replay is conservatively
+//! recomputed — never the other way around (a stale replay is
+//! impossible; the invariant was brute-force checked against bitwise
+//! λ-history equality over randomized histories).
+//!
+//! Capturing walks has a cost of its own, so it is gated per coordinate
+//! by the same signal ([`ShardGuard::store_useful`]): a walk for `k` is
+//! cached only when the *other* coordinates were already quiet entering
+//! the round — mid-descent churn (synchronous or cyclic) pays no capture
+//! overhead, while `K = 1` and quiet tails capture and replay from the
+//! next round on.
+//!
+//! The cache lives on the leader's in-process executor only — remote
+//! workers are stateless between task frames by design — and is memory-
+//! gated: it engages only when the instance is small enough for the
+//! bookkeeping to fit `PALLAS_SKIP_CACHE_MB` (default 512), and stops
+//! inserting when the stored emissions would exceed the budget. Skipping
+//! never changes results, only work: everything here is an exact replay.
+
+use crate::instance::shard::Shards;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Default cache budget in MiB (override with `PALLAS_SKIP_CACHE_MB`).
+const DEFAULT_CACHE_MB: usize = 512;
+
+/// Per-(group, coordinate) cached emissions for one group.
+#[derive(Debug)]
+struct GroupCache {
+    /// Round at which coordinate `k`'s walk was cached (0 = never).
+    computed: Vec<u32>,
+    /// The cached `(v1, v2)` emissions, per coordinate, in walk order.
+    emits: Vec<Vec<(f64, f64)>>,
+}
+
+impl GroupCache {
+    fn new(kk: usize) -> Self {
+        Self { computed: vec![0; kk], emits: vec![Vec::new(); kk] }
+    }
+}
+
+/// Approximate resident bytes of one empty [`GroupCache`] (headers +
+/// per-coordinate bookkeeping), used for the memory gate.
+fn group_overhead(kk: usize) -> usize {
+    std::mem::size_of::<GroupCache>() + kk * (4 + std::mem::size_of::<Vec<(f64, f64)>>()) + 16
+}
+
+/// The solve-lifetime λ-stability cache. One per in-process SCD solve;
+/// shared read-only across map workers (each shard is processed by exactly
+/// one worker per round, so the per-shard mutexes are uncontended).
+pub(crate) struct ScdStability {
+    shards: Shards,
+    kk: usize,
+    /// Current round, 1-based (0 = before the first `begin_round`).
+    round: u32,
+    /// Per coordinate: last round whose broadcast λ_k changed bit-wise.
+    last_change: Vec<u32>,
+    /// Per coordinate: `max_{k'≠k} last_change[k']` for the current round.
+    other_change: Vec<u32>,
+    caches: Vec<Mutex<Vec<Option<Box<GroupCache>>>>>,
+    walks_total: AtomicU64,
+    walks_skipped: AtomicU64,
+    mem_used: AtomicUsize,
+    mem_cap: usize,
+}
+
+impl ScdStability {
+    /// Build a cache for the solve's shard partition, or `None` when the
+    /// bookkeeping alone would blow the memory budget (billion-scale
+    /// instances simply run uncached).
+    pub(crate) fn try_new(shards: Shards, kk: usize) -> Option<Self> {
+        let mem_cap = std::env::var("PALLAS_SKIP_CACHE_MB")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CACHE_MB)
+            .saturating_mul(1 << 20);
+        // upfront floor: one Option slot per group plus per-shard mutexes;
+        // require the fully-populated overhead (no emissions yet) to fit
+        // half the budget, leaving room for the emissions themselves
+        let n = shards.n_total();
+        let floor = n.checked_mul(8 + group_overhead(kk))?;
+        if mem_cap == 0 || floor > mem_cap / 2 {
+            return None;
+        }
+        Some(Self {
+            shards,
+            kk,
+            round: 0,
+            last_change: vec![0; kk],
+            other_change: vec![0; kk],
+            caches: (0..shards.count()).map(|_| Mutex::new(Vec::new())).collect(),
+            walks_total: AtomicU64::new(0),
+            walks_skipped: AtomicU64::new(0),
+            mem_used: AtomicUsize::new(0),
+            mem_cap,
+        })
+    }
+
+    /// Advance to the next round with its broadcast multipliers. `prev` is
+    /// the previous round's broadcast λ (None before the first round —
+    /// every coordinate counts as changed).
+    pub(crate) fn begin_round(&mut self, prev: Option<&[f64]>, lambda: &[f64]) {
+        debug_assert_eq!(lambda.len(), self.kk);
+        self.round += 1;
+        match prev {
+            None => self.last_change.iter_mut().for_each(|c| *c = self.round),
+            Some(p) => {
+                for (c, (a, b)) in self.last_change.iter_mut().zip(p.iter().zip(lambda)) {
+                    if a.to_bits() != b.to_bits() {
+                        *c = self.round;
+                    }
+                }
+            }
+        }
+        // other_change[k] = max over k'≠k of last_change[k'] — computed
+        // with the (max, second-max) trick so a round costs O(K), not O(K²)
+        let (mut max1, mut max2, mut argmax) = (0u32, 0u32, usize::MAX);
+        for (k, &c) in self.last_change.iter().enumerate() {
+            if c > max1 {
+                max2 = max1;
+                max1 = c;
+                argmax = k;
+            } else if c > max2 {
+                max2 = c;
+            }
+        }
+        for (k, o) in self.other_change.iter_mut().enumerate() {
+            *o = if k == argmax { max2 } else { max1 };
+        }
+    }
+
+    /// Lock shard `idx`'s cache for this round's map pass.
+    pub(crate) fn shard(&self, idx: usize) -> ShardGuard<'_> {
+        let shard = self.shards.get(idx);
+        let mut groups = self.caches[idx].lock().unwrap();
+        if groups.len() != shard.len() {
+            groups.resize_with(shard.len(), || None);
+        }
+        ShardGuard { st: self, groups, base: shard.start, total: 0, skipped: 0 }
+    }
+
+    /// Drain the per-round walk counters `(total, skipped)`.
+    pub(crate) fn take_counts(&self) -> (u64, u64) {
+        (self.walks_total.swap(0, Ordering::Relaxed), self.walks_skipped.swap(0, Ordering::Relaxed))
+    }
+}
+
+/// One worker's exclusive view of a shard's caches during a map pass.
+pub(crate) struct ShardGuard<'a> {
+    st: &'a ScdStability,
+    groups: MutexGuard<'a, Vec<Option<Box<GroupCache>>>>,
+    base: usize,
+    total: u64,
+    skipped: u64,
+}
+
+impl ShardGuard<'_> {
+    /// Replay group `i`'s cached emissions for coordinate `k` when they
+    /// are provably current (no *other* coordinate's λ changed bit-wise
+    /// since they were computed). Returns true when the walk was skipped;
+    /// the caller must recompute (and [`ShardGuard::store`]) otherwise.
+    #[inline]
+    pub(crate) fn replay<F: FnMut(f64, f64)>(&mut self, i: usize, k: usize, mut emit: F) -> bool {
+        self.total += 1;
+        let Some(g) = self.groups[i - self.base].as_deref() else {
+            return false;
+        };
+        let at = g.computed[k];
+        if at == 0 || self.st.other_change[k] > at {
+            return false; // never cached, or the stability interval collapsed
+        }
+        for &(v1, v2) in &g.emits[k] {
+            emit(v1, v2);
+        }
+        self.skipped += 1;
+        true
+    }
+
+    /// Whether caching coordinate `k`'s walk this round can ever pay off:
+    /// a cache written now stays valid only while `λ_{-k}` holds still, so
+    /// capturing is useful exactly when the *other* coordinates were
+    /// already quiet entering this round (`other_change[k] < round`).
+    /// This single predicate covers every schedule — synchronous churn
+    /// (all coordinates moving ⇒ capture nothing), cyclic sweeps (the
+    /// round-robin mover keeps invalidating everyone else ⇒ capture
+    /// nothing until the region quiets), `K = 1` (no other coordinates ⇒
+    /// always capture), and the convergence tail (quiet ⇒ capture, replay
+    /// from the next round on). Callers use it to skip the
+    /// emission-capture bookkeeping, not just the store.
+    #[inline]
+    pub(crate) fn store_useful(&self, k: usize) -> bool {
+        self.st.other_change[k] < self.st.round
+    }
+
+    /// Record a freshly computed walk for `(i, k)`; a no-op when capturing
+    /// cannot pay off ([`ShardGuard::store_useful`]) or once the cache
+    /// budget is exhausted (the group then simply keeps recomputing).
+    pub(crate) fn store(&mut self, i: usize, k: usize, emits: &[(f64, f64)]) {
+        if !self.store_useful(k) {
+            return;
+        }
+        let round = self.st.round;
+        let slot = &mut self.groups[i - self.base];
+        if slot.is_none() {
+            let overhead = group_overhead(self.st.kk);
+            if self.st.mem_used.fetch_add(overhead, Ordering::Relaxed) + overhead
+                > self.st.mem_cap
+            {
+                self.st.mem_used.fetch_sub(overhead, Ordering::Relaxed);
+                return;
+            }
+            *slot = Some(Box::new(GroupCache::new(self.st.kk)));
+        }
+        let g = slot.as_deref_mut().unwrap();
+        let stored = &mut g.emits[k];
+        stored.clear();
+        // grow with reserve_exact so the charged bytes equal the real
+        // allocation (extend_from_slice's amortized doubling would let the
+        // cache silently overshoot the budget by ~2×)
+        let grow = emits.len().saturating_sub(stored.capacity())
+            * std::mem::size_of::<(f64, f64)>();
+        if grow > 0
+            && self.st.mem_used.fetch_add(grow, Ordering::Relaxed) + grow > self.st.mem_cap
+        {
+            self.st.mem_used.fetch_sub(grow, Ordering::Relaxed);
+            g.computed[k] = 0;
+            return;
+        }
+        stored.reserve_exact(emits.len());
+        stored.extend_from_slice(emits);
+        g.computed[k] = round;
+    }
+}
+
+impl Drop for ShardGuard<'_> {
+    fn drop(&mut self) {
+        self.st.walks_total.fetch_add(self.total, Ordering::Relaxed);
+        self.st.walks_skipped.fetch_add(self.skipped, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(guard: &mut ShardGuard<'_>, i: usize, k: usize) -> Option<Vec<(f64, f64)>> {
+        let mut out = Vec::new();
+        guard.replay(i, k, |v1, v2| out.push((v1, v2))).then_some(out)
+    }
+
+    #[test]
+    fn replays_only_while_other_coordinates_hold_still() {
+        let mut st = ScdStability::try_new(Shards::new(10, 4), 2).unwrap();
+        // round 1: everything counts as changed → capturing cannot pay off
+        st.begin_round(None, &[1.0, 1.0]);
+        {
+            let mut g = st.shard(0);
+            assert!(collect(&mut g, 2, 0).is_none(), "nothing cached yet");
+            assert!(!g.store_useful(0) && !g.store_useful(1));
+            g.store(2, 0, &[(9.0, 9.0)]); // gated no-op
+        }
+        // round 2: only λ_0 moved → λ_1 (coordinate 0's dependency) is
+        // quiet, so coordinate 0 captures; coordinate 1 cannot pay off
+        st.begin_round(Some(&[1.0, 1.0]), &[0.5, 1.0]);
+        {
+            let mut g = st.shard(0);
+            assert!(collect(&mut g, 2, 0).is_none(), "round-1 store was gated off");
+            assert!(g.store_useful(0));
+            assert!(!g.store_useful(1));
+            g.store(2, 0, &[(3.0, 0.5), (1.0, 0.25)]);
+        }
+        // round 3: λ_0 moved again — its own movement never invalidates
+        // its interval, so the cached walk replays
+        st.begin_round(Some(&[0.5, 1.0]), &[0.25, 1.0]);
+        {
+            let mut g = st.shard(0);
+            assert_eq!(collect(&mut g, 2, 0), Some(vec![(3.0, 0.5), (1.0, 0.25)]));
+        }
+        // round 4: λ_1 moved → interval invalidated, must recompute
+        st.begin_round(Some(&[0.25, 1.0]), &[0.25, 0.75]);
+        {
+            let mut g = st.shard(0);
+            assert!(collect(&mut g, 2, 0).is_none(), "other-coordinate movement must invalidate");
+        }
+        // round 5 (frozen): capture again; round 6 replays it
+        st.begin_round(Some(&[0.25, 0.75]), &[0.25, 0.75]);
+        st.shard(0).store(2, 0, &[(2.0, 0.5)]);
+        st.begin_round(Some(&[0.25, 0.75]), &[0.25, 0.75]);
+        {
+            let mut g = st.shard(0);
+            assert_eq!(collect(&mut g, 2, 0), Some(vec![(2.0, 0.5)]));
+        }
+        let (total, skipped) = st.take_counts();
+        assert_eq!(total, 5);
+        assert_eq!(skipped, 2);
+        assert_eq!(st.take_counts(), (0, 0), "counters drain per round");
+    }
+
+    #[test]
+    fn single_constraint_never_invalidates() {
+        // K = 1: λ_{-k} is empty, so a cached walk stays valid forever
+        let mut st = ScdStability::try_new(Shards::new(4, 4), 1).unwrap();
+        st.begin_round(None, &[2.0]);
+        st.shard(0).store(0, 0, &[(1.0, 1.0)]);
+        for l in [1.5, 0.7, 0.1] {
+            let prev = [2.0 * l]; // arbitrary moving λ_0
+            st.begin_round(Some(&prev), &[l]);
+            let mut g = st.shard(0);
+            assert_eq!(collect(&mut g, 0, 0), Some(vec![(1.0, 1.0)]));
+        }
+    }
+
+    #[test]
+    fn empty_emission_sets_replay_too() {
+        let mut st = ScdStability::try_new(Shards::new(4, 2), 2).unwrap();
+        st.begin_round(None, &[1.0, 1.0]);
+        // round 2 (quiet): capturing pays off → an *empty* walk is cached
+        st.begin_round(Some(&[1.0, 1.0]), &[1.0, 1.0]);
+        st.shard(1).store(3, 1, &[]);
+        st.begin_round(Some(&[1.0, 1.0]), &[1.0, 1.0]);
+        let mut g = st.shard(1);
+        assert_eq!(collect(&mut g, 3, 1), Some(vec![]));
+    }
+
+    #[test]
+    fn churning_schedules_never_pay_capture_cost() {
+        // synchronous churn: both coordinates move every round → no store
+        // can pay off, and none happens (mem_used stays untouched)
+        let mut st = ScdStability::try_new(Shards::new(4, 4), 2).unwrap();
+        let mut prev: Option<Vec<f64>> = None;
+        for r in 1..=5u32 {
+            let cur = vec![r as f64, r as f64 + 0.5];
+            st.begin_round(prev.as_deref(), &cur);
+            let mut g = st.shard(0);
+            assert!(!g.store_useful(0) && !g.store_useful(1), "round {r}");
+            g.store(0, 0, &[(9.0, 9.0)]);
+            g.store(0, 1, &[(9.0, 9.0)]);
+        }
+        assert_eq!(st.mem_used.load(Ordering::Relaxed), 0, "gated stores must not allocate");
+        // cyclic churn: each round updates one coordinate round-robin, and
+        // only the *active* coordinate's walk runs. Mid-churn the previous
+        // round's mover always invalidates the current active coordinate,
+        // so the gate is false exactly where a store would otherwise happen
+        let mut st = ScdStability::try_new(Shards::new(4, 4), 3).unwrap();
+        let mut lam = vec![1.0, 1.0, 1.0];
+        st.begin_round(None, &lam); // round 1 ↔ t = 0, active coordinate 0
+        for t in 1..=6usize {
+            let prev = lam.clone();
+            lam[(t - 1) % 3] += 0.25; // last round's active coordinate moved
+            st.begin_round(Some(&prev), &lam);
+            let active = t % 3;
+            assert!(!st.shard(0).store_useful(active), "cyclic churn, t={t}");
+        }
+        // ...until the sweep goes quiet: then capture resumes and replays
+        let frozen = lam.clone();
+        st.begin_round(Some(&frozen), &lam);
+        st.shard(0).store(2, 1, &[(1.0, 1.0)]);
+        st.begin_round(Some(&frozen), &lam);
+        assert_eq!(collect(&mut st.shard(0), 2, 1), Some(vec![(1.0, 1.0)]));
+    }
+
+    #[test]
+    fn memory_gate_refuses_oversized_instances() {
+        // a billion groups would need ~GBs of Option slots alone
+        assert!(ScdStability::try_new(Shards::new(1_000_000_000, 1 << 20), 10).is_none());
+        assert!(ScdStability::try_new(Shards::new(100_000, 4_096), 10).is_some());
+    }
+}

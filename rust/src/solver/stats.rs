@@ -19,6 +19,47 @@ pub struct IterStat {
     pub lambda_change: f64,
     /// Wall time of the iteration (map + reduce + update), milliseconds.
     pub wall_ms: f64,
+    /// Map-phase wall time (dispatch + per-group kernels + combine;
+    /// includes the λ broadcast on a distributed executor), milliseconds.
+    pub map_ms: f64,
+    /// Leader-side reduce + λ-update wall time, milliseconds.
+    pub reduce_ms: f64,
+    /// Fraction of candidate walks served from the λ-stability cache this
+    /// round (0 when the cache is off or the round had no walks).
+    pub skip_rate: f64,
+}
+
+/// Cumulative per-phase breakdown of a solve — what `solve --json`
+/// surfaces so speedups and λ-stability skipping are observable in
+/// production runs, not just in benches.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseTimings {
+    /// Leader-side round preparation (active-coordinate mask + round spec
+    /// construction — the broadcast payload), milliseconds.
+    pub broadcast_ms: f64,
+    /// Total map-phase wall time across rounds, milliseconds.
+    pub map_ms: f64,
+    /// Total leader-side reduce + λ-update wall time, milliseconds.
+    pub reduce_ms: f64,
+    /// Closing evaluation at the final λ, milliseconds.
+    pub final_eval_ms: f64,
+    /// §5.4 feasibility projection, milliseconds (0 when it didn't run).
+    pub postprocess_ms: f64,
+    /// Candidate walks requested across all rounds (Algorithm-3 path).
+    pub walks_total: u64,
+    /// Walks served by replaying the λ-stability cache.
+    pub walks_skipped: u64,
+}
+
+impl PhaseTimings {
+    /// Overall fraction of candidate walks skipped.
+    pub fn skip_rate(&self) -> f64 {
+        if self.walks_total == 0 {
+            0.0
+        } else {
+            self.walks_skipped as f64 / self.walks_total as f64
+        }
+    }
 }
 
 impl IterStat {
@@ -53,6 +94,8 @@ pub struct SolveReport {
     pub history: Vec<IterStat>,
     /// Total wall time, milliseconds.
     pub wall_ms: f64,
+    /// Per-phase timing breakdown and λ-stability skip counters.
+    pub phases: PhaseTimings,
 }
 
 impl SolveReport {
@@ -102,6 +145,12 @@ pub struct RoundEvent<'a> {
     pub lambda_change: f64,
     /// Wall time of the round, milliseconds.
     pub wall_ms: f64,
+    /// Map-phase wall time of the round, milliseconds.
+    pub map_ms: f64,
+    /// Leader-side reduce + λ-update wall time of the round, milliseconds.
+    pub reduce_ms: f64,
+    /// Fraction of candidate walks served from the λ-stability cache.
+    pub skip_rate: f64,
     /// The updated multipliers `λ^{t+1}`.
     pub lambda: &'a [f64],
 }
@@ -117,6 +166,9 @@ impl RoundEvent<'_> {
             max_violation_ratio: self.max_violation_ratio,
             lambda_change: self.lambda_change,
             wall_ms: self.wall_ms,
+            map_ms: self.map_ms,
+            reduce_ms: self.reduce_ms,
+            skip_rate: self.skip_rate,
         }
     }
 }
@@ -211,6 +263,7 @@ mod tests {
             dropped_groups: 0,
             history: vec![],
             wall_ms: 1.0,
+            phases: PhaseTimings::default(),
         }
     }
 
@@ -243,6 +296,9 @@ mod tests {
                 max_violation_ratio: 0.0,
                 lambda_change: 0.1,
                 wall_ms: 1.0,
+                map_ms: 0.8,
+                reduce_ms: 0.1,
+                skip_rate: 0.0,
                 lambda: &lambda,
             };
             assert_eq!(obs.on_round(&ev), ObserverControl::Continue);
@@ -261,7 +317,19 @@ mod tests {
             max_violation_ratio: 0.0,
             lambda_change: 1.0,
             wall_ms: 0.0,
+            map_ms: 0.0,
+            reduce_ms: 0.0,
+            skip_rate: 0.0,
         };
         assert!((s.duality_gap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_skip_rate() {
+        let mut p = PhaseTimings::default();
+        assert_eq!(p.skip_rate(), 0.0);
+        p.walks_total = 8;
+        p.walks_skipped = 2;
+        assert!((p.skip_rate() - 0.25).abs() < 1e-12);
     }
 }

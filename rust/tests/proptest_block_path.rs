@@ -1,0 +1,175 @@
+//! Hot-path overhaul invariants: the zero-copy block kernels and the
+//! λ-stability cache must be *bit-identical* to the plain per-group path.
+//!
+//! `PerGroupOnly` wraps any source and hides its `fill_block`/`block_end`
+//! overrides, forcing the trait-default staging path (fill_group into an
+//! owned `BlockBuf`) — the exact data movement the pre-overhaul kernels
+//! performed. Solving through the wrapper and through the raw source must
+//! produce the same λ, objective and report bits on dense, sparse and
+//! zero-padded-final-shard (out-of-core) instances; flipping
+//! `lambda_skip` must change nothing but the work counters.
+
+// the one PerGroupOnly wrapper definition, shared with the perf bench
+#[path = "../benches/common.rs"]
+mod common;
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::laminar::LaminarProfile;
+use bskp::instance::store::MmapProblem;
+use bskp::mapreduce::Cluster;
+use bskp::solver::dd::solve_dd;
+use bskp::solver::scd::solve_scd;
+use bskp::solver::stats::SolveReport;
+use bskp::solver::{ReduceMode, SolverConfig};
+use common::PerGroupOnly;
+use std::path::PathBuf;
+
+fn assert_reports_bit_identical(a: &SolveReport, b: &SolveReport, what: &str) {
+    assert_eq!(a.lambda, b.lambda, "{what}: λ must be bit-identical");
+    assert_eq!(
+        a.primal_value.to_bits(),
+        b.primal_value.to_bits(),
+        "{what}: primal ({} vs {})",
+        a.primal_value,
+        b.primal_value
+    );
+    assert_eq!(
+        a.dual_value.to_bits(),
+        b.dual_value.to_bits(),
+        "{what}: dual ({} vs {})",
+        a.dual_value,
+        b.dual_value
+    );
+    let ac: Vec<u64> = a.consumption.iter().map(|c| c.to_bits()).collect();
+    let bc: Vec<u64> = b.consumption.iter().map(|c| c.to_bits()).collect();
+    assert_eq!(ac, bc, "{what}: consumption");
+    assert_eq!(a.n_selected, b.n_selected, "{what}: n_selected");
+    assert_eq!(a.iterations, b.iterations, "{what}: iterations");
+    assert_eq!(a.converged, b.converged, "{what}: converged");
+    assert_eq!(a.dropped_groups, b.dropped_groups, "{what}: dropped_groups");
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_block_it_{}_{name}", std::process::id()))
+}
+
+#[test]
+fn block_path_matches_per_group_path_dense_and_sparse() {
+    let cluster = Cluster::new(2);
+    let cases: Vec<(&str, SyntheticProblem)> = vec![
+        (
+            "dense c223",
+            SyntheticProblem::new(
+                GeneratorConfig::dense(700, 10, 4)
+                    .with_locals(LaminarProfile::scenario_c223(10))
+                    .with_seed(31),
+            ),
+        ),
+        ("sparse Q=1", SyntheticProblem::new(GeneratorConfig::sparse(1_200, 8, 8).with_seed(32))),
+        (
+            // forces the general Algorithm-3 path on a sparse layout
+            "sparse c223 (Alg 3)",
+            SyntheticProblem::new(
+                GeneratorConfig::sparse(600, 6, 5)
+                    .with_locals(LaminarProfile::scenario_c223(6))
+                    .with_seed(33),
+            ),
+        ),
+    ];
+    for (what, p) in &cases {
+        let cfg = SolverConfig { max_iters: 8, ..Default::default() };
+        let direct = solve_scd(p, &cfg, &cluster).unwrap();
+        let staged = solve_scd(&PerGroupOnly(p), &cfg, &cluster).unwrap();
+        assert_reports_bit_identical(&direct, &staged, &format!("scd {what}"));
+
+        let dd_cfg = SolverConfig { max_iters: 6, dd_alpha: 1e-3, ..Default::default() };
+        let direct = solve_dd(p, &dd_cfg, &cluster).unwrap();
+        let staged = solve_dd(&PerGroupOnly(p), &dd_cfg, &cluster).unwrap();
+        assert_reports_bit_identical(&direct, &staged, &format!("dd {what}"));
+    }
+}
+
+#[test]
+fn block_path_matches_per_group_on_bucketed_reduce() {
+    let cluster = Cluster::new(3);
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(900, 7, 7).with_seed(41));
+    let cfg = SolverConfig {
+        max_iters: 6,
+        reduce: ReduceMode::Bucketed { delta: 1e-5 },
+        ..Default::default()
+    };
+    let direct = solve_scd(&p, &cfg, &cluster).unwrap();
+    let staged = solve_scd(&PerGroupOnly(&p), &cfg, &cluster).unwrap();
+    assert_reports_bit_identical(&direct, &staged, "scd bucketed");
+}
+
+#[test]
+fn mmap_zero_copy_blocks_match_per_group_incl_padded_final_shard() {
+    let cluster = Cluster::new(2);
+    // 1003 % 128 ≠ 0 → the final shard file is zero-padded; blocks must
+    // stop at the live-group boundary
+    for (what, cfg) in [
+        ("sparse", GeneratorConfig::sparse(1_003, 6, 6).with_seed(51)),
+        (
+            "dense",
+            GeneratorConfig::dense(517, 5, 3)
+                .with_locals(LaminarProfile::scenario_c223(5))
+                .with_seed(52),
+        ),
+    ] {
+        let p = SyntheticProblem::new(cfg);
+        let dir = tmp_dir(&format!("padded_{what}"));
+        p.write_shards(&dir, 128, &cluster).unwrap();
+        let mm = MmapProblem::open(&dir).unwrap();
+        let solver_cfg = SolverConfig { max_iters: 6, ..Default::default() };
+        let zero_copy = solve_scd(&mm, &solver_cfg, &cluster).unwrap();
+        let staged = solve_scd(&PerGroupOnly(&mm), &solver_cfg, &cluster).unwrap();
+        assert_reports_bit_identical(&zero_copy, &staged, &format!("mmap {what}"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn lambda_skip_is_invisible_in_results_but_visible_in_counters() {
+    let cluster = Cluster::new(2);
+    let p = SyntheticProblem::new(
+        GeneratorConfig::dense(500, 8, 3)
+            .with_locals(LaminarProfile::scenario_c223(8))
+            .with_seed(61),
+    );
+    let on = SolverConfig { max_iters: 12, lambda_skip: true, ..Default::default() };
+    let off = SolverConfig { max_iters: 12, lambda_skip: false, ..Default::default() };
+    let with_skip = solve_scd(&p, &on, &cluster).unwrap();
+    let without = solve_scd(&p, &off, &cluster).unwrap();
+    assert_reports_bit_identical(&with_skip, &without, "λ-skip on/off");
+    assert!(with_skip.phases.walks_total > 0, "dense Alg-3 rounds must count walks");
+    assert_eq!(without.phases.walks_total, 0, "cache off → no counters");
+}
+
+#[test]
+fn single_constraint_skips_every_walk_after_round_one() {
+    // K = 1: a walk for the only coordinate depends on no other λ, so the
+    // cache never invalidates — every round after the first replays
+    let cluster = Cluster::new(2);
+    let p = SyntheticProblem::new(GeneratorConfig::dense(300, 6, 1).with_seed(71));
+    let cfg = SolverConfig {
+        max_iters: 6,
+        tol: 1e-12,
+        postprocess: false,
+        ..Default::default()
+    };
+    let r = solve_scd(&p, &cfg, &cluster).unwrap();
+    assert!(r.iterations >= 2, "need at least two rounds to observe replay");
+    let per_round = 300u64; // one walk per group per round (K = 1)
+    assert_eq!(r.phases.walks_total, per_round * r.iterations as u64);
+    assert_eq!(
+        r.phases.walks_skipped,
+        per_round * (r.iterations as u64 - 1),
+        "every walk after round one must be a replay (skip rate {:.3})",
+        r.phases.skip_rate()
+    );
+    // and skipping must not change the answer
+    let off = SolverConfig { lambda_skip: false, ..cfg };
+    let plain = solve_scd(&p, &off, &cluster).unwrap();
+    assert_reports_bit_identical(&r, &plain, "K=1 skip on/off");
+}
