@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Chaos suite on the deterministic cluster simulator.
+#
+# Runs the full simulator test file once (fixed scenarios + the default
+# chaos seed), then re-runs the random-fault-plan property across a fixed
+# seed matrix. Every failing case prints its (seed, fault plan) and the
+# event trace; reproduce any red run with exactly one command:
+#
+#   PALLAS_SIM_SEED=<seed> cargo test --release --test proptest_cluster_sim \
+#       -- random_fault_plans_never_hang_or_diverge --exact
+#
+# No sockets, no real sleeps: timeouts fire in virtual time, so the whole
+# matrix is CPU-bound. See docs/simulation.md.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "=== cluster-sim: full simulator suite (default seed) ==="
+cargo test --release --test proptest_cluster_sim
+
+for seed in 1 77 983; do
+  echo "=== cluster-sim: chaos property, PALLAS_SIM_SEED=$seed ==="
+  PALLAS_SIM_SEED=$seed cargo test --release --test proptest_cluster_sim \
+    -- random_fault_plans_never_hang_or_diverge --exact
+done
+
+echo "cluster-sim OK"

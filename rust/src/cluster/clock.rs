@@ -1,0 +1,101 @@
+//! Time as a capability.
+//!
+//! Every cluster-layer timeout, retry pause and duration metric goes
+//! through [`Clock`] instead of bare `Instant::now()` / `thread::sleep`,
+//! so the deterministic simulator ([`super::sim`]) can substitute a
+//! [`VirtualClock`] and no test ever sleeps wall-clock time. Stream-level
+//! read/write deadlines stay expressed as `Duration`s on
+//! [`super::transport::NetStream`]; what changes per transport is how
+//! those durations elapse — against the OS clock on TCP, against virtual
+//! nanoseconds under the simulator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Monotonic time source for the cluster layer.
+pub trait Clock: Send + Sync {
+    /// Nanoseconds since an arbitrary (per-process) epoch. Monotone
+    /// non-decreasing.
+    fn now_ns(&self) -> u64;
+
+    /// Pause the caller for `d` — wall-clock on the system clock, a pure
+    /// virtual-time advance on the simulator's.
+    fn sleep(&self, d: Duration);
+}
+
+/// The production clock: `Instant` against a process-wide epoch, real
+/// `thread::sleep`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SystemClock;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+impl Clock for SystemClock {
+    fn now_ns(&self) -> u64 {
+        EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// A virtual clock: time is a counter, advanced only by simulation events
+/// (frame deliveries, fired timeouts, explicit sleeps). Two runs that
+/// process the same event sequence read the same timestamps, and a
+/// 10-minute timeout "elapses" in microseconds of wall time.
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    now_ns: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A clock starting at virtual zero.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Move the clock forward to `t` (no-op when it is already past —
+    /// `fetch_max`, so concurrent advances commute and the final reading
+    /// is order-independent).
+    pub fn advance_to(&self, t_ns: u64) {
+        self.now_ns.fetch_max(t_ns, Ordering::Relaxed);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ns(&self) -> u64 {
+        self.now_ns.load(Ordering::Relaxed)
+    }
+
+    fn sleep(&self, d: Duration) {
+        self.now_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotone() {
+        let c = SystemClock;
+        let a = c.now_ns();
+        let b = c.now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_never_really_sleeps() {
+        let c = VirtualClock::new();
+        let wall = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(wall.elapsed() < Duration::from_secs(1), "virtual sleep must not block");
+        assert_eq!(c.now_ns(), 3600 * 1_000_000_000);
+        c.advance_to(10); // already past: no-op
+        assert_eq!(c.now_ns(), 3600 * 1_000_000_000);
+        c.advance_to(u64::MAX - 1);
+        assert_eq!(c.now_ns(), u64::MAX - 1);
+    }
+}

@@ -5,7 +5,10 @@
 //! the in-process thread pool — exactly the code path the solvers always
 //! had — or to a [`RemoteCluster`] of worker processes. The drivers
 //! (`solve_scd_exec`, `solve_dd_exec`) are written against this seam and
-//! do not know which one they are on.
+//! do not know which one they are on. A `RemoteCluster` itself speaks
+//! through the transport seam ([`super::transport`]), so `Exec::Remote`
+//! covers both production TCP fleets and the deterministic simulator's
+//! in-process fleets ([`super::sim`]) without the drivers changing.
 
 use crate::cluster::leader::RemoteCluster;
 use crate::error::Result;

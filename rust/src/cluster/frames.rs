@@ -16,6 +16,13 @@
 //! Checksum or header violations are hard errors: the leader treats them
 //! as a lost worker (the chunk is re-dispatched elsewhere), the worker
 //! drops the connection.
+//!
+//! Frames are written to any `io::Write` and read from any `io::Read` —
+//! the transport seam ([`super::transport`]) decides whether those are
+//! TCP sockets or the deterministic simulator's in-memory streams; the
+//! bytes are identical either way, and the simulator's corruption faults
+//! are what exercise the checksum rejection path end to end
+//! (`docs/simulation.md`).
 
 use crate::error::{Error, Result};
 use crate::instance::store::xxh64;

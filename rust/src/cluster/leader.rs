@@ -3,24 +3,37 @@
 //! [`RemoteCluster`] owns one [`WorkerLink`](super::membership::WorkerLink)
 //! per configured worker and drives synchronous rounds: the global shard
 //! partition is cut into contiguous **chunks** (a fixed function of the
-//! round, independent of which worker computes what), chunks are dealt to
-//! workers from a shared queue (work stealing across machines, like the
-//! thread pool's stealing across cores), and the partials are merged **in
-//! chunk order** with compensated sums — so the result does not depend on
-//! worker count, scheduling, or mid-round failures.
+//! round, independent of which worker computes what), and chunks are dealt
+//! to live workers in *waves* — one chunk per live worker per wave, slot
+//! order, from a pending queue. The deal is a pure function of (pending
+//! chunks, live set): which worker computes which chunk never depends on
+//! thread scheduling, so a simulated run's event trace is replayable from
+//! its seed, and a production run's assignment is auditable from its logs.
+//! Partials are merged **in chunk order** with compensated sums — the
+//! result does not depend on worker count, scheduling, or mid-round
+//! failures. (Versus the earlier work-stealing queue this trades intra-
+//! round rebalancing for per-wave barriers; with the partition's equal-
+//! size chunks the straggler cost is one chunk per wave, and homogeneous
+//! fleets — the deployment target — lose nothing.)
 //!
 //! **Failure handling.** A worker that errors or times out on a chunk is
 //! marked dead for the session; its chunk goes back on the queue and a
-//! survivor re-executes it. Because every task frame carries the round's
-//! full broadcast state (λ, active mask, reduce mode), re-dispatch resumes
-//! from the λ the round started with — a lost worker costs one chunk of
-//! recomputation. Only when *every* worker is gone does the round (and the
-//! solve) fail; with checkpointing enabled the λ trail survives for a
-//! warm-started retry.
+//! survivor re-executes it in a later wave. Because every task frame
+//! carries the round's full broadcast state (λ, active mask, reduce mode),
+//! re-dispatch resumes from the λ the round started with — a lost worker
+//! costs one chunk of recomputation. Only when *every* worker is gone does
+//! the round (and the solve) fail; with checkpointing enabled the λ trail
+//! survives for a warm-started retry.
+//!
+//! All timing goes through the transport's [`Clock`]: wall time on TCP,
+//! virtual time under [`super::sim`] — which is how a 10-minute exchange
+//! timeout can fire in microseconds of test time.
 
+use crate::cluster::clock::Clock;
 use crate::cluster::env_ms;
 use crate::cluster::membership::{NetCounters, WorkerLink};
 use crate::cluster::protocol::{Geometry, InstanceFingerprint, Msg};
+use crate::cluster::transport::{TcpTransport, Transport};
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
@@ -30,7 +43,8 @@ use crate::solver::rounds::RoundAgg;
 use crate::solver::scd::{ScdAcc, ScdRoundSpec, ThresholdAcc};
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Default per-exchange timeout. This is the *only* detector for a worker
 /// that is silently partitioned (process death shows up immediately as
@@ -49,12 +63,44 @@ const DEFAULT_CONNECT_TIMEOUT_MS: u64 = 5_000;
 /// **independent of worker count and liveness**, so the chunk partition
 /// (and with it the merge order of every compensated sum) is identical
 /// for any fleet size and any mid-round failure pattern. 64 chunks give
-/// fine-grained stealing and re-dispatch for any realistic fleet while
+/// fine-grained dealing and re-dispatch for any realistic fleet while
 /// keeping per-round frame counts and per-chunk accumulators bounded.
 const CHUNKS_PER_ROUND: usize = 64;
 
 fn chunk_count(n_shards: usize) -> usize {
     n_shards.min(CHUNKS_PER_ROUND)
+}
+
+/// Session timeout policy, resolved once at connect time. [`Default`]
+/// reads the `PALLAS_CLUSTER_TIMEOUT_MS` / `PALLAS_CLUSTER_CONNECT_TIMEOUT_MS`
+/// knobs; tests inject explicit values instead of mutating the process
+/// environment.
+#[derive(Debug, Clone, Copy)]
+pub struct ConnectOptions {
+    /// Bound on dial + handshake per worker.
+    pub connect_timeout: Duration,
+    /// Bound on each task/partial exchange for the rest of the session.
+    pub exchange_timeout: Duration,
+}
+
+impl ConnectOptions {
+    /// The environment-configured policy (documented defaults when the
+    /// knobs are unset).
+    pub fn from_env() -> Self {
+        Self {
+            connect_timeout: env_ms(
+                "PALLAS_CLUSTER_CONNECT_TIMEOUT_MS",
+                DEFAULT_CONNECT_TIMEOUT_MS,
+            ),
+            exchange_timeout: env_ms("PALLAS_CLUSTER_TIMEOUT_MS", DEFAULT_TIMEOUT_MS),
+        }
+    }
+}
+
+impl Default for ConnectOptions {
+    fn default() -> Self {
+        Self::from_env()
+    }
 }
 
 /// Point-in-time wire statistics of a [`RemoteCluster`].
@@ -66,7 +112,8 @@ pub struct NetSnapshot {
     pub bytes_received: u64,
     /// Gather rounds completed.
     pub rounds: u64,
-    /// Total wall time inside gathers, milliseconds.
+    /// Total time inside gathers, milliseconds (virtual under the
+    /// simulator).
     pub round_ms: f64,
     /// Chunks re-dispatched after a worker loss.
     pub redispatches: u64,
@@ -80,29 +127,51 @@ pub struct NetSnapshot {
     pub capacity: usize,
 }
 
-/// A fleet of `pallas worker` processes, driven over TCP with the same
-/// map→combine→reduce contract as the in-process
+/// What one wave exchange produced (processed in deal order, so queue
+/// re-adds and counters are deterministic).
+enum WaveOutcome {
+    /// The chunk's partial arrived.
+    Done(usize, Msg),
+    /// The worker died on this chunk; re-queue it for a survivor.
+    Lost(usize, String),
+    /// A protocol-level abort: the round (and solve) must fail.
+    Fatal(String),
+}
+
+/// A fleet of `pallas worker` processes, driven over a [`Transport`] with
+/// the same map→combine→reduce contract as the in-process
 /// [`Cluster`] (see [`super::Exec`]).
 pub struct RemoteCluster {
     slots: Vec<Mutex<WorkerLink>>,
     leader_pool: Cluster,
     capacity: usize,
     counters: NetCounters,
+    clock: Arc<dyn Clock>,
 }
 
 impl RemoteCluster {
-    /// Connect to `addrs` and handshake each against `source`'s
-    /// fingerprint. Unreachable or mismatched workers are skipped with a
-    /// human-readable note; connecting to **zero** workers is the only
-    /// hard error (callers fall back to the in-process pool on it).
+    /// Connect over TCP to `addrs` and handshake each against `source`'s
+    /// fingerprint, with environment-configured timeouts. Unreachable or
+    /// mismatched workers are skipped with a human-readable note;
+    /// connecting to **zero** workers is the only hard error (callers
+    /// fall back to the in-process pool on it).
     pub fn connect<S: GroupSource + ?Sized>(
         addrs: &[String],
         source: &S,
     ) -> Result<(Self, Vec<String>)> {
+        Self::connect_with(&TcpTransport, addrs, source, ConnectOptions::from_env())
+    }
+
+    /// [`RemoteCluster::connect`] over an explicit [`Transport`] and
+    /// timeout policy — the entry point the deterministic simulator (and
+    /// any future transport) uses; TCP behavior is unchanged.
+    pub fn connect_with<S: GroupSource + ?Sized>(
+        transport: &dyn Transport,
+        addrs: &[String],
+        source: &S,
+        opts: ConnectOptions,
+    ) -> Result<(Self, Vec<String>)> {
         let fingerprint = InstanceFingerprint::of(source);
-        let exchange_timeout = env_ms("PALLAS_CLUSTER_TIMEOUT_MS", DEFAULT_TIMEOUT_MS);
-        let connect_timeout =
-            env_ms("PALLAS_CLUSTER_CONNECT_TIMEOUT_MS", DEFAULT_CONNECT_TIMEOUT_MS);
         // dial concurrently: N blackholed hosts must cost one connect
         // timeout, not N, before planning can fall back in-process
         let dials: Vec<Result<WorkerLink>> = std::thread::scope(|s| {
@@ -110,9 +179,7 @@ impl RemoteCluster {
                 .iter()
                 .map(|addr| {
                     let fingerprint = &fingerprint;
-                    s.spawn(move || {
-                        WorkerLink::connect(addr, fingerprint, connect_timeout, exchange_timeout)
-                    })
+                    s.spawn(move || WorkerLink::connect(transport, addr, fingerprint, opts))
                 })
                 .collect();
             handles
@@ -143,8 +210,14 @@ impl RemoteCluster {
             )));
         }
         let capacity = slots.iter().map(|s| s.lock().unwrap().threads).sum();
-        let leader_pool = Cluster::configured();
-        Ok((Self { slots, leader_pool, capacity, counters: NetCounters::default() }, skipped))
+        let fleet = Self {
+            slots,
+            leader_pool: Cluster::configured(),
+            capacity,
+            counters: NetCounters::default(),
+            clock: transport.clock(),
+        };
+        Ok((fleet, skipped))
     }
 
     /// Replace the pool used for leader-local phases (§5.3 pre-solve
@@ -199,9 +272,10 @@ impl RemoteCluster {
     }
 
     /// Dispatch one round: cut `[0, n_shards)` into chunks, deal them to
-    /// live workers, gather the partials **indexed by chunk**. Lost
-    /// workers re-queue their chunk; the round only fails when no live
-    /// worker remains (or a worker reports a protocol-level abort).
+    /// live workers wave by wave, gather the partials **indexed by
+    /// chunk**. Lost workers re-queue their chunk; the round only fails
+    /// when no live worker remains (or a worker reports a protocol-level
+    /// abort).
     fn gather<F>(&self, n_shards: usize, task: F) -> Result<Vec<Msg>>
     where
         F: Fn(usize, usize) -> Msg + Sync,
@@ -209,24 +283,22 @@ impl RemoteCluster {
         if n_shards == 0 {
             return Ok(Vec::new());
         }
-        let t0 = std::time::Instant::now();
+        let t0 = self.clock.now_ns();
         let n_chunks = chunk_count(n_shards);
         let per = n_shards.div_ceil(n_chunks);
         let n_chunks = n_shards.div_ceil(per);
-        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..n_chunks).collect());
-        let results: Mutex<Vec<Option<Msg>>> =
-            Mutex::new((0..n_chunks).map(|_| None).collect());
-        let fatal: Mutex<Option<Error>> = Mutex::new(None);
+        let mut pending: VecDeque<usize> = (0..n_chunks).collect();
+        let mut results: Vec<Option<Msg>> = (0..n_chunks).map(|_| None).collect();
         let mut last_loss = String::new();
 
-        loop {
+        while !pending.is_empty() {
             let live: Vec<usize> = (0..self.slots.len())
                 .filter(|&i| self.slots[i].lock().unwrap().is_live())
                 .collect();
             if live.is_empty() {
                 return Err(Error::Runtime(format!(
                     "all cluster workers lost mid-round ({} of {} chunks done){}",
-                    results.lock().unwrap().iter().filter(|r| r.is_some()).count(),
+                    results.iter().filter(|r| r.is_some()).count(),
                     n_chunks,
                     if last_loss.is_empty() {
                         String::new()
@@ -235,72 +307,64 @@ impl RemoteCluster {
                     },
                 )));
             }
-            let losses: Mutex<Vec<String>> = Mutex::new(Vec::new());
-            std::thread::scope(|s| {
-                for &slot in &live {
-                    let (queue, results, fatal, losses) = (&queue, &results, &fatal, &losses);
-                    let task = &task;
-                    s.spawn(move || {
-                        let mut link = self.slots[slot].lock().unwrap();
-                        loop {
-                            if fatal.lock().unwrap().is_some() {
-                                break;
-                            }
-                            let Some(chunk) = queue.lock().unwrap().pop_front() else {
-                                break;
-                            };
+            // the wave deal: one pending chunk per live worker, slot
+            // order — a pure function of (pending, live)
+            let deals: Vec<(usize, usize)> = live
+                .iter()
+                .map_while(|&slot| pending.pop_front().map(|chunk| (slot, chunk)))
+                .collect();
+            let outcomes: Vec<WaveOutcome> = std::thread::scope(|s| {
+                let handles: Vec<_> = deals
+                    .iter()
+                    .map(|&(slot, chunk)| {
+                        let task = &task;
+                        s.spawn(move || {
                             let lo = chunk * per;
                             let hi = (lo + per).min(n_shards);
+                            let mut link = self.slots[slot].lock().unwrap();
                             match link.exchange(&task(lo, hi), &self.counters) {
-                                Ok(Msg::Abort { message }) => {
-                                    *fatal.lock().unwrap() = Some(Error::Runtime(format!(
-                                        "worker {} aborted the round: {message}",
-                                        link.addr
-                                    )));
-                                    break;
-                                }
-                                Ok(reply) => {
-                                    results.lock().unwrap()[chunk] = Some(reply);
-                                }
+                                Ok(Msg::Abort { message }) => WaveOutcome::Fatal(format!(
+                                    "worker {} aborted the round: {message}",
+                                    link.addr
+                                )),
+                                Ok(reply) => WaveOutcome::Done(chunk, reply),
                                 Err(e) => {
-                                    // dead worker: back on the queue for a
-                                    // survivor (possibly one still looping
-                                    // in this very scope)
-                                    losses
-                                        .lock()
-                                        .unwrap()
-                                        .push(format!("worker {}: {e}", link.addr));
+                                    // dead worker: back on the queue for
+                                    // a survivor in the next wave
                                     link.kill();
-                                    queue.lock().unwrap().push_back(chunk);
-                                    self.counters
-                                        .count(&self.counters.workers_lost, 1);
-                                    self.counters
-                                        .count(&self.counters.redispatches, 1);
-                                    break;
+                                    WaveOutcome::Lost(chunk, format!("worker {}: {e}", link.addr))
                                 }
                             }
-                        }
-                    });
-                }
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            WaveOutcome::Fatal("worker exchange thread panicked".into())
+                        })
+                    })
+                    .collect()
             });
-            if let Some(e) = fatal.lock().unwrap().take() {
-                return Err(e);
-            }
-            if let Some(loss) = losses.lock().unwrap().last() {
-                last_loss = loss.clone();
-            }
-            let done = queue.lock().unwrap().is_empty()
-                && results.lock().unwrap().iter().all(|r| r.is_some());
-            if done {
-                break;
+            for outcome in outcomes {
+                match outcome {
+                    WaveOutcome::Done(chunk, reply) => results[chunk] = Some(reply),
+                    WaveOutcome::Lost(chunk, loss) => {
+                        last_loss = loss;
+                        pending.push_back(chunk);
+                        self.counters.count(&self.counters.workers_lost, 1);
+                        self.counters.count(&self.counters.redispatches, 1);
+                    }
+                    WaveOutcome::Fatal(message) => return Err(Error::Runtime(message)),
+                }
             }
         }
 
         self.counters.count(&self.counters.rounds, 1);
         self.counters
-            .count(&self.counters.round_us, t0.elapsed().as_micros() as u64);
-        let out = results.into_inner().unwrap();
-        Ok(out.into_iter().map(|r| r.expect("all chunks gathered")).collect())
+            .count(&self.counters.round_us, self.clock.now_ns().saturating_sub(t0) / 1_000);
+        Ok(results.into_iter().map(|r| r.expect("all chunks gathered")).collect())
     }
 
     /// Distributed evaluation round (DD rounds, final evaluations).

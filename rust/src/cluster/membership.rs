@@ -1,11 +1,16 @@
 //! Leader-side worker membership: one link per configured worker address,
 //! with handshake, liveness and best-effort shutdown.
+//!
+//! Links are generic over the [`Transport`] seam: a link holds a boxed
+//! [`NetStream`](crate::cluster::transport::NetStream) and never names
+//! TCP — the same handshake and exchange discipline runs on production
+//! sockets and on the deterministic simulator.
 
+use crate::cluster::leader::ConnectOptions;
 use crate::cluster::protocol::{recv_msg, send_msg, InstanceFingerprint, Msg};
+use crate::cluster::transport::{NetStream, Transport};
 use crate::error::{Error, Result};
-use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
 
 /// Shared wire counters (updated by every link, read by
 /// [`super::leader::RemoteCluster::stats`]). All loads/stores are relaxed:
@@ -32,51 +37,30 @@ impl NetCounters {
 pub(crate) struct WorkerLink {
     pub(crate) addr: String,
     pub(crate) threads: usize,
-    stream: Option<TcpStream>,
+    stream: Option<Box<dyn NetStream>>,
 }
 
 impl WorkerLink {
-    /// Connect and run the `Hello`/`Welcome` handshake: protocol version
-    /// is enforced by the frame layer, the instance fingerprint here —
-    /// a worker serving a different store is refused before any task.
-    /// `connect_timeout` bounds the dial + handshake (short, so planning
-    /// reaches its fallback promptly); `exchange_timeout` is the per-task
-    /// bound installed for the rest of the session.
+    /// Dial through `transport` and run the `Hello`/`Welcome` handshake:
+    /// protocol version is enforced by the frame layer, the instance
+    /// fingerprint here — a worker serving a different store is refused
+    /// before any task. `opts.connect_timeout` bounds the dial + handshake
+    /// (short, so planning reaches its fallback promptly);
+    /// `opts.exchange_timeout` is the per-task bound installed for the
+    /// rest of the session.
     pub(crate) fn connect(
+        transport: &dyn Transport,
         addr: &str,
         fingerprint: &InstanceFingerprint,
-        connect_timeout: Duration,
-        exchange_timeout: Duration,
+        opts: ConnectOptions,
     ) -> Result<Self> {
-        // try every resolved address (dual-stack hosts often resolve ::1
-        // first while the worker bound IPv4), keeping the last error
-        let socks: Vec<_> = addr
-            .to_socket_addrs()
-            .map_err(|e| Error::Runtime(format!("cannot resolve {addr}: {e}")))?
-            .collect();
-        if socks.is_empty() {
-            return Err(Error::Runtime(format!("{addr} resolves to no address")));
-        }
-        let mut stream = None;
-        let mut last_err = String::new();
-        for sock in &socks {
-            match TcpStream::connect_timeout(sock, connect_timeout) {
-                Ok(s) => {
-                    stream = Some(s);
-                    break;
-                }
-                Err(e) => last_err = e.to_string(),
-            }
-        }
-        let mut stream = stream
-            .ok_or_else(|| Error::Runtime(format!("connect {addr}: {last_err}")))?;
-        stream.set_nodelay(true).ok();
-        stream.set_read_timeout(Some(connect_timeout))?;
-        stream.set_write_timeout(Some(connect_timeout))?;
+        let mut stream = transport.dial(addr, opts.connect_timeout)?;
+        stream.set_read_timeout(Some(opts.connect_timeout))?;
+        stream.set_write_timeout(Some(opts.connect_timeout))?;
         send_msg(&mut stream, &Msg::Hello { fingerprint: fingerprint.clone() })?;
         let (reply, _) = recv_msg(&mut stream)?;
-        stream.set_read_timeout(Some(exchange_timeout))?;
-        stream.set_write_timeout(Some(exchange_timeout))?;
+        stream.set_read_timeout(Some(opts.exchange_timeout))?;
+        stream.set_write_timeout(Some(opts.exchange_timeout))?;
         match reply {
             Msg::Welcome { threads, fingerprint: theirs } => {
                 if &theirs != fingerprint {

@@ -2,45 +2,56 @@
 //!
 //! The paper runs its solvers on "off-the-shelf distributed computing
 //! frameworks (e.g. MPI, Hadoop, Spark)" (§4, footnote 2). This module is
-//! that layer for real machines: a zero-dependency MPI-style runtime on
-//! `std::net::TcpStream` that executes the same *map → combine → reduce*
-//! contract as the in-process [`crate::mapreduce::Cluster`], so
-//! `solve_scd` / `solve_dd` run unchanged on either executor
-//! (see [`Exec`]).
+//! that layer for real machines: a zero-dependency MPI-style runtime that
+//! executes the same *map → combine → reduce* contract as the in-process
+//! [`crate::mapreduce::Cluster`], so `solve_scd` / `solve_dd` run
+//! unchanged on either executor (see [`Exec`]).
 //!
 //! * **Workers** (`pallas worker --listen <addr> --store <dir>`) memory-map
 //!   their copy of the PR-1 shard store and wait for task frames; each task
 //!   names a contiguous chunk of the global shard partition, and the worker
 //!   folds it with its own thread pool ([`worker`]).
 //! * **The leader** ([`RemoteCluster`]) broadcasts the per-round state
-//!   (λ, active coordinates, reduce mode) inside each task, gathers the
-//!   map-side-combined partials, and merges them **in chunk order** with
-//!   compensated sums — the same deterministic merge discipline as the
-//!   thread pool, so results are reproducible across worker counts and
-//!   across executors.
+//!   (λ, active coordinates, reduce mode) inside each task, deals chunks
+//!   to workers deterministically, and merges the gathered partials **in
+//!   chunk order** with compensated sums — the same deterministic merge
+//!   discipline as the thread pool, so results are reproducible across
+//!   worker counts and across executors.
 //! * **The wire** (`frames`, `protocol`) is length-prefixed binary
 //!   frames, each payload protected by the store's XXH64
 //!   ([`crate::instance::store::xxh64`]); a version + instance fingerprint
 //!   handshake ([`InstanceFingerprint`]) refuses mismatched binaries or
 //!   mismatched stores before any work is dispatched.
 //!   `docs/cluster-protocol.md` is the normative spec.
+//! * **The transport seam** ([`transport`], [`clock`]): framing, the
+//!   handshake, dispatch and failure detection are written against
+//!   [`Transport`]/[`NetListener`]/[`NetStream`] and a [`Clock`] — TCP
+//!   ([`TcpTransport`]) in production, and a deterministic in-memory
+//!   simulator ([`sim`]) in tests, where any drop/delay/corruption/crash
+//!   schedule is replayable from a seed (`docs/simulation.md`).
 //! * **Failure handling** (`membership`, `leader`): a worker that times
 //!   out or drops its connection is marked dead, its in-flight chunk goes
 //!   back on the round's queue, and survivors re-execute it — the round
 //!   resumes from the λ it was dispatched with, so a lost worker costs one
 //!   chunk of recomputation, not the solve.
 
+pub mod clock;
 pub(crate) mod exec;
 pub(crate) mod frames;
 pub(crate) mod leader;
 pub(crate) mod membership;
 pub(crate) mod protocol;
+pub mod sim;
+pub mod transport;
 pub(crate) mod wire;
 pub mod worker;
 
+pub use clock::{Clock, SystemClock, VirtualClock};
 pub use exec::Exec;
-pub use leader::{NetSnapshot, RemoteCluster};
+pub use leader::{ConnectOptions, NetSnapshot, RemoteCluster};
 pub use protocol::InstanceFingerprint;
+pub use sim::{Dir, FaultPlan, LinkFaults, SimNet, SimTransport, TraceEvent, TraceKind};
+pub use transport::{NetListener, NetStream, TcpNetListener, TcpTransport, Transport};
 
 /// Read a `PALLAS_*` millisecond knob, ignoring unparsable or zero
 /// values. Shared by the leader's exchange/connect timeouts and the

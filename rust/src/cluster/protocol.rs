@@ -10,7 +10,11 @@
 //! stateless between frames and any task can be re-dispatched to any
 //! surviving worker after a failure.
 //!
-//! `docs/cluster-protocol.md` is the normative byte-level spec.
+//! `docs/cluster-protocol.md` is the normative byte-level spec. The
+//! protocol is transport-agnostic (see [`super::transport`]): the same
+//! message bytes flow over production TCP and over the deterministic
+//! simulator, which is how the chaos suite replays handshake refusals,
+//! corrupt frames and mid-round crashes from a seed.
 
 use crate::cluster::wire::{corrupt, Dec, Enc};
 use crate::error::Result;

@@ -1,0 +1,1114 @@
+//! Deterministic cluster simulation: an in-memory [`Transport`] with a
+//! virtual clock and seeded fault injection.
+//!
+//! [`SimNet`] hosts N in-process workers (each a real
+//! [`worker::serve_net`](super::worker::serve_net) loop on its own thread,
+//! memory-mapping its shard-store replica) and hands the leader a
+//! [`SimTransport`] whose streams carry the *unchanged* frame bytes of the
+//! TCP protocol. A whole `solve_scd_exec` / `solve_dd_exec` — handshake,
+//! rounds, failures, re-dispatch — runs without a socket, and every
+//! failure is replayable from `(seed, FaultPlan)` alone.
+//!
+//! ## Fault model
+//!
+//! The production transport is TCP: a *reliable, ordered* stream. The
+//! simulator therefore injects faults the way they reach a TCP
+//! application, not the way they happen on the wire:
+//!
+//! * **drop** — a lost segment is retransmitted: the frame arrives late
+//!   (one RTO per loss). More than [`MAX_RETRANSMITS`] consecutive losses
+//!   breaks the connection (both ends see EOF), like a TCP give-up.
+//! * **delay / jitter** — added one-way latency, per frame.
+//! * **duplicate / reorder** — the reliable layer suppresses duplicates
+//!   and resequences out-of-order segments; both surface purely as extra
+//!   head-of-line latency (and as flags in the trace).
+//! * **corrupt** — a flipped byte that *escaped* TCP's weak 16-bit
+//!   checksum (or a bad NIC / middlebox). It is delivered, and the frame
+//!   layer's XXH64 **must** reject it — that is the check the chaos suite
+//!   exercises.
+//! * **crash / stall** — a worker dies when a chosen frame sequence
+//!   number is hit (or on demand via [`SimNet::crash_worker`], e.g. from a
+//!   `SolveObserver` at a chosen round); a stalled worker's replies are
+//!   delayed past the leader's exchange timeout, which then fires in
+//!   **virtual** time — no test ever sleeps wall-clock time. A crashed
+//!   worker can [`SimNet::rejoin_worker`] and accept new sessions (the
+//!   leader's policy of never resurrecting a link *within* a session is
+//!   itself under test).
+//!
+//! Every per-frame decision is a pure function of
+//! `(seed, worker, connection, direction, frame seq)` — independent of
+//! thread interleaving — and chunk dealing on the leader is a pure
+//! function of round state, so two runs with the same `(seed, plan)`
+//! produce identical per-link event traces ([`SimNet::trace`]) and
+//! bit-identical `SolveReport`s.
+//!
+//! ## Virtual time
+//!
+//! Each link carries its own virtual clock, advanced by deliveries and
+//! fired timeouts; the global [`VirtualClock`] is the running maximum.
+//! A blocking read decides *virtually* whether its deadline fires: it
+//! waits (wall-clock) only while the peer is genuinely computing, and
+//! resolves instantly once the peer is blocked too or the next arrival
+//! is known — a 10-minute exchange timeout costs microseconds of test
+//! time. A real-time guard (`PALLAS_SIM_HANG_SECS`, default 30 s)
+//! panics with the full trace if the simulation ever truly wedges, so a
+//! protocol deadlock fails loudly instead of hanging CI.
+//!
+//! `docs/simulation.md` is the user guide; `rust/tests/
+//! proptest_cluster_sim.rs` is the chaos suite built on this module.
+
+use crate::cluster::clock::{Clock, VirtualClock};
+use crate::cluster::transport::{NetListener, NetStream, Transport};
+use crate::cluster::worker;
+use crate::error::{Error, Result};
+use crate::instance::store::MmapProblem;
+use crate::mapreduce::Cluster;
+use crate::rng::{mix64, Xoshiro256pp};
+use std::collections::VecDeque;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Retransmission timeout: the virtual latency a dropped segment costs.
+pub const RETRANSMIT_NS: u64 = 200_000_000;
+
+/// Consecutive losses of one frame before the connection is declared
+/// broken (TCP give-up).
+pub const MAX_RETRANSMITS: u32 = 5;
+
+/// Frame direction on a link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// Leader → worker (hello, tasks, shutdown).
+    ToWorker = 0,
+    /// Worker → leader (welcome, partials, aborts).
+    ToLeader = 1,
+}
+
+/// Which end of a link a stream is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Side {
+    Leader,
+    Worker,
+}
+
+impl Side {
+    fn inbound(self) -> Dir {
+        match self {
+            Side::Leader => Dir::ToLeader,
+            Side::Worker => Dir::ToWorker,
+        }
+    }
+
+    fn outbound(self) -> Dir {
+        match self {
+            Side::Leader => Dir::ToWorker,
+            Side::Worker => Dir::ToLeader,
+        }
+    }
+}
+
+/// Per-worker-link fault schedule. Frame sequence numbers count flushed
+/// frames per direction per connection, starting at 0 — so seq 0 is the
+/// handshake frame (`Hello` / `Welcome`) and tasks/partials start at 1.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkFaults {
+    /// Base one-way latency, virtual nanoseconds.
+    pub delay_ns: u64,
+    /// Seeded uniform extra latency in `[0, jitter_ns]`.
+    pub jitter_ns: u64,
+    /// Per-transmission segment-loss probability (recovered by
+    /// retransmission: +[`RETRANSMIT_NS`] each; > [`MAX_RETRANSMITS`]
+    /// consecutive losses breaks the link).
+    pub drop_prob: f64,
+    /// Probability a frame is duplicated in flight (suppressed by the
+    /// reliable layer; traced, costs a little extra latency).
+    pub dup_prob: f64,
+    /// Probability a frame's segments arrive out of order (resequenced;
+    /// traced, costs head-of-line latency).
+    pub reorder_prob: f64,
+    /// Random per-frame corruption probability (payload byte flip that
+    /// escaped the transport checksum; the frame layer's XXH64 must
+    /// reject it).
+    pub corrupt_prob: f64,
+    /// Corrupt exactly these `(direction, frame seq)` frames.
+    pub corrupt_frames: Vec<(Dir, u64)>,
+    /// Crash the worker when the leader flushes task-direction frame
+    /// `seq` (the frame vanishes; the worker is dead from then on).
+    pub crash_on_task: Option<u64>,
+    /// Crash the worker when it flushes reply-direction frame `seq`
+    /// (received the task, died before answering — the mid-round case).
+    pub crash_on_reply: Option<u64>,
+    /// From reply frame `.0` on, add `.1` virtual ns to every reply — a
+    /// stalled worker; set `.1` beyond the exchange timeout to make the
+    /// leader's detector fire.
+    pub stall_after: Option<(u64, u64)>,
+    /// Refuse new connections (dial fails; the planner should skip this
+    /// worker with a note).
+    pub refuse_dials: bool,
+}
+
+/// A fault-free link.
+pub const NO_FAULTS: LinkFaults = LinkFaults {
+    delay_ns: 0,
+    jitter_ns: 0,
+    drop_prob: 0.0,
+    dup_prob: 0.0,
+    reorder_prob: 0.0,
+    corrupt_prob: 0.0,
+    corrupt_frames: Vec::new(),
+    crash_on_task: None,
+    crash_on_reply: None,
+    stall_after: None,
+    refuse_dials: false,
+};
+
+/// The fault plan DSL: one [`LinkFaults`] per worker (by the order
+/// workers were added); missing entries are fault-free.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Per-worker fault schedules.
+    pub links: Vec<LinkFaults>,
+}
+
+impl FaultPlan {
+    /// No faults anywhere: the simulator as a plain loopback transport.
+    pub fn healthy() -> Self {
+        Self::default()
+    }
+
+    fn faults_for(&self, worker: usize) -> &LinkFaults {
+        self.links.get(worker).unwrap_or(&NO_FAULTS)
+    }
+}
+
+/// One simulation event, attributed to `(worker, conn, dir, seq)` and
+/// stamped with link-local virtual time. Event order within a link is the
+/// link's own causal order; [`SimNet::trace`] returns links in canonical
+/// `(worker, conn)` order, so two equal traces mean two identical runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Worker endpoint index (order of [`SimNet::add_worker`] calls).
+    pub worker: usize,
+    /// Connection ordinal on that worker (0 = first dial).
+    pub conn: u64,
+    /// Frame direction, when the event concerns a frame.
+    pub dir: Option<Dir>,
+    /// Frame sequence number in that direction (0 when not a frame).
+    pub seq: u64,
+    /// Link-local virtual time of the event, nanoseconds.
+    pub at_ns: u64,
+    /// What happened.
+    pub kind: TraceKind,
+}
+
+/// Event kinds in a simulation trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Leader dialed this worker. (Acceptance is not a separate event:
+    /// its real-time order against the leader's first flush is arbitrary,
+    /// and traces must not record scheduling accidents.)
+    Dialed,
+    /// A frame was (eventually) delivered, with its injected faults.
+    Delivered {
+        /// Total one-way latency, nanoseconds.
+        delay_ns: u64,
+        /// Segments lost and retransmitted.
+        retransmits: u32,
+        /// A duplicate was suppressed by the reliable layer.
+        duplicated: bool,
+        /// Segments were resequenced.
+        reordered: bool,
+        /// A payload byte flip escaped the transport checksum (the frame
+        /// layer's XXH64 must reject the frame).
+        corrupted: bool,
+    },
+    /// Too many consecutive losses: the connection broke.
+    LinkBroken {
+        /// Retransmits attempted before giving up.
+        retransmits: u32,
+    },
+    /// A blocked read's virtual deadline fired before the next arrival.
+    TimedOut {
+        /// The virtual deadline that fired.
+        deadline_ns: u64,
+    },
+    /// The worker crashed (fault-plan trigger or [`SimNet::crash_worker`]).
+    Crashed,
+    /// The worker came back and accepts again ([`SimNet::rejoin_worker`]).
+    Rejoined,
+}
+
+/// What a blocking receive resolved to.
+enum RecvOutcome {
+    /// A frame arrived at `at_ns`.
+    Frame { bytes: Vec<u8>, at_ns: u64 },
+    /// No more frames will ever arrive (peer closed / crashed / broken).
+    Eof,
+    /// The reader's virtual deadline fired first.
+    TimedOut,
+}
+
+struct PipeState {
+    /// Delivered frames: `(virtual arrival, bytes)`, arrival-ordered.
+    buf: VecDeque<(u64, Vec<u8>)>,
+    /// Frames flushed into this pipe (the per-direction seq counter).
+    sent: u64,
+    /// Frames popped by the reader.
+    received: u64,
+    /// In-order delivery floor.
+    last_arrival: u64,
+    /// No further frames will be delivered.
+    closed: bool,
+    /// A reader is blocked on this pipe…
+    reader_waiting: bool,
+    /// …with this virtual deadline (`u64::MAX` = none).
+    reader_deadline: u64,
+}
+
+impl PipeState {
+    fn new() -> Self {
+        Self {
+            buf: VecDeque::new(),
+            sent: 0,
+            received: 0,
+            last_arrival: 0,
+            closed: false,
+            reader_waiting: false,
+            reader_deadline: u64::MAX,
+        }
+    }
+}
+
+struct LinkState {
+    ep: usize,
+    ordinal: u64,
+    /// Link-local virtual clock (advanced by deliveries and timeouts).
+    vnow_ns: u64,
+    broken: bool,
+    /// `pipes[Dir as usize]`.
+    pipes: [PipeState; 2],
+    events: Vec<TraceEvent>,
+}
+
+impl LinkState {
+    fn push_event(&mut self, dir: Option<Dir>, seq: u64, at_ns: u64, kind: TraceKind) {
+        self.events.push(TraceEvent { worker: self.ep, conn: self.ordinal, dir, seq, at_ns, kind });
+    }
+
+    fn close_pipes(&mut self) {
+        self.pipes[0].closed = true;
+        self.pipes[1].closed = true;
+    }
+}
+
+struct EpState {
+    addr: String,
+    alive: bool,
+    /// Dialed, not yet accepted link ids.
+    pending: VecDeque<usize>,
+    /// Connection ordinal counter.
+    conns: u64,
+}
+
+struct SimState {
+    closed: bool,
+    eps: Vec<EpState>,
+    links: Vec<LinkState>,
+    /// Events not tied to one connection ([`SimNet::crash_worker`] /
+    /// [`SimNet::rejoin_worker`] calls, which happen on the driving
+    /// thread at deterministic points).
+    admin: Vec<TraceEvent>,
+}
+
+struct Hub {
+    seed: u64,
+    plan: FaultPlan,
+    clock: Arc<VirtualClock>,
+    state: Mutex<SimState>,
+    cv: Condvar,
+    hang_guard: Duration,
+}
+
+fn hang_guard_from_env() -> Duration {
+    let secs = std::env::var("PALLAS_SIM_HANG_SECS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&s| s > 0)
+        .unwrap_or(30);
+    Duration::from_secs(secs)
+}
+
+fn broken_pipe(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::BrokenPipe, format!("sim: {what}"))
+}
+
+impl Hub {
+    /// Seeded per-frame fault RNG: a pure function of the frame identity,
+    /// immune to thread interleaving.
+    fn frame_rng(&self, ep: usize, ordinal: u64, dir: Dir, seq: u64) -> Xoshiro256pp {
+        let link_seed = mix64(self.seed, ((ep as u64) << 32) ^ ordinal);
+        Xoshiro256pp::new(mix64(link_seed, ((dir as u64) << 48) ^ seq))
+    }
+
+    fn crash_ep(st: &mut SimState, ep: usize) {
+        st.eps[ep].alive = false;
+        st.eps[ep].pending.clear();
+        for link in st.links.iter_mut().filter(|l| l.ep == ep) {
+            link.close_pipes();
+        }
+    }
+
+    /// Open a connection to the endpoint serving `addr`. (Associated fn:
+    /// the stream it builds must hold the hub's `Arc`.)
+    fn dial(hub: &Arc<Hub>, addr: &str) -> Result<Box<dyn NetStream>> {
+        let mut st = hub.state.lock().unwrap();
+        if st.closed {
+            return Err(Error::Runtime("sim: network is shut down".into()));
+        }
+        let ep = st
+            .eps
+            .iter()
+            .position(|e| e.addr == addr)
+            .ok_or_else(|| Error::Runtime(format!("sim: no worker endpoint at {addr}")))?;
+        if hub.plan.faults_for(ep).refuse_dials {
+            return Err(Error::Runtime(format!("sim: {addr} refused the connection")));
+        }
+        if !st.eps[ep].alive {
+            return Err(Error::Runtime(format!("sim: {addr} is down (crashed worker)")));
+        }
+        let ordinal = st.eps[ep].conns;
+        st.eps[ep].conns += 1;
+        let mut link = LinkState {
+            ep,
+            ordinal,
+            vnow_ns: 0,
+            broken: false,
+            pipes: [PipeState::new(), PipeState::new()],
+            events: Vec::new(),
+        };
+        link.push_event(None, 0, 0, TraceKind::Dialed);
+        st.links.push(link);
+        let id = st.links.len() - 1;
+        st.eps[ep].pending.push_back(id);
+        hub.cv.notify_all();
+        Ok(Box::new(SimStream {
+            hub: Arc::clone(hub),
+            link: id,
+            ep,
+            ordinal,
+            side: Side::Leader,
+            last_vnow: 0,
+            read_buf: Vec::new(),
+            read_pos: 0,
+            write_buf: Vec::new(),
+            read_timeout: None,
+        }))
+    }
+
+    /// Block for the next inbound connection on `ep` (worker accept).
+    fn accept(hub: &Arc<Hub>, ep: usize) -> Option<Box<dyn NetStream>> {
+        let mut st = hub.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return None;
+            }
+            if st.eps[ep].alive {
+                if let Some(id) = st.eps[ep].pending.pop_front() {
+                    let ordinal = st.links[id].ordinal;
+                    return Some(Box::new(SimStream {
+                        hub: Arc::clone(hub),
+                        link: id,
+                        ep,
+                        ordinal,
+                        side: Side::Worker,
+                        last_vnow: 0,
+                        read_buf: Vec::new(),
+                        read_pos: 0,
+                        write_buf: Vec::new(),
+                        read_timeout: None,
+                    }));
+                }
+            }
+            // idle accept loops are legitimate (a worker may sit unused
+            // for the whole test), so no hang panic here
+            let (guard, _) = hub.cv.wait_timeout(st, hub.hang_guard).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Flush one complete frame onto a link; returns the virtual send
+    /// time. Applies the fault plan: a pure function of the frame
+    /// identity.
+    fn send_frame(&self, link: usize, side: Side, frame: Vec<u8>) -> io::Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(broken_pipe("network is shut down"));
+        }
+        let (ep, ordinal) = {
+            let l = &st.links[link];
+            if l.broken {
+                return Err(broken_pipe("link is broken"));
+            }
+            (l.ep, l.ordinal)
+        };
+        if !st.eps[ep].alive {
+            return Err(broken_pipe("worker is down"));
+        }
+        let dir = side.outbound();
+        if st.links[link].pipes[dir as usize].closed {
+            return Err(broken_pipe("peer closed the stream"));
+        }
+        let seq = st.links[link].pipes[dir as usize].sent;
+        st.links[link].pipes[dir as usize].sent += 1;
+        let faults = self.plan.faults_for(ep);
+        let send_vnow = st.links[link].vnow_ns;
+
+        // crash triggers: the worker process dies on this very frame
+        if side == Side::Leader && faults.crash_on_task == Some(seq) {
+            st.links[link].push_event(Some(dir), seq, send_vnow, TraceKind::Crashed);
+            Self::crash_ep(&mut st, ep);
+            self.cv.notify_all();
+            // TCP accepts the bytes into its buffer; the sender learns on
+            // its next read
+            return Ok(send_vnow);
+        }
+        if side == Side::Worker && faults.crash_on_reply == Some(seq) {
+            st.links[link].push_event(Some(dir), seq, send_vnow, TraceKind::Crashed);
+            Self::crash_ep(&mut st, ep);
+            self.cv.notify_all();
+            return Err(broken_pipe("worker crashed mid-reply"));
+        }
+
+        let mut rng = self.frame_rng(ep, ordinal, dir, seq);
+        let mut retransmits = 0u32;
+        while faults.drop_prob > 0.0 && rng.coin(faults.drop_prob) {
+            retransmits += 1;
+            if retransmits > MAX_RETRANSMITS {
+                let l = &mut st.links[link];
+                l.broken = true;
+                l.close_pipes();
+                l.push_event(Some(dir), seq, send_vnow, TraceKind::LinkBroken { retransmits });
+                self.cv.notify_all();
+                // the write itself "succeeded" into the local buffer; the
+                // failure surfaces on the next read, as on real TCP
+                return Ok(send_vnow);
+            }
+        }
+        let mut delay = faults.delay_ns.saturating_add(retransmits as u64 * RETRANSMIT_NS);
+        if faults.jitter_ns > 0 {
+            delay = delay.saturating_add(rng.below(faults.jitter_ns + 1));
+        }
+        let duplicated = faults.dup_prob > 0.0 && rng.coin(faults.dup_prob);
+        if duplicated {
+            delay = delay.saturating_add(RETRANSMIT_NS / 4);
+        }
+        let reordered = faults.reorder_prob > 0.0 && rng.coin(faults.reorder_prob);
+        if reordered {
+            delay = delay.saturating_add(RETRANSMIT_NS / 2);
+        }
+        if side == Side::Worker {
+            if let Some((from_seq, extra_ns)) = faults.stall_after {
+                if seq >= from_seq {
+                    delay = delay.saturating_add(extra_ns);
+                }
+            }
+        }
+        let corrupted = faults.corrupt_frames.iter().any(|&(d, s)| d == dir && s == seq)
+            || (faults.corrupt_prob > 0.0 && rng.coin(faults.corrupt_prob));
+        let mut bytes = frame;
+        if corrupted && bytes.len() >= 24 {
+            // flip inside the payload (or, for empty payloads, inside the
+            // trailing checksum) so the XXH64 verification must trip —
+            // never inside the header, whose violations have their own
+            // error paths
+            let payload_len = bytes.len() - 24;
+            let idx = if payload_len > 0 {
+                16 + rng.below(payload_len as u64) as usize
+            } else {
+                16 + rng.below(8) as usize
+            };
+            bytes[idx] ^= 0xA5;
+        }
+        let l = &mut st.links[link];
+        let arrival = (l.vnow_ns.saturating_add(delay)).max(l.pipes[dir as usize].last_arrival);
+        l.pipes[dir as usize].last_arrival = arrival;
+        l.pipes[dir as usize].buf.push_back((arrival, bytes));
+        l.push_event(
+            Some(dir),
+            seq,
+            arrival,
+            TraceKind::Delivered { delay_ns: delay, retransmits, duplicated, reordered, corrupted },
+        );
+        self.cv.notify_all();
+        Ok(send_vnow)
+    }
+
+    /// Block until a frame arrives, the pipe is finished, or the virtual
+    /// `deadline` fires. The wall-clock wait only lasts while the peer is
+    /// genuinely running; once the peer is blocked too (or the next
+    /// arrival is already known) the outcome is decided instantly in
+    /// virtual time. Panics (with the trace) if nothing happens for
+    /// `hang_guard` of real time — the "never hang" backstop.
+    fn recv_frame(&self, link: usize, side: Side, deadline: u64) -> RecvOutcome {
+        let mut st = self.state.lock().unwrap();
+        let dir = side.inbound();
+        loop {
+            let front_arrival = st.links[link].pipes[dir as usize].buf.front().map(|(a, _)| *a);
+            if let Some(arrival) = front_arrival {
+                if arrival <= deadline {
+                    let l = &mut st.links[link];
+                    let (at, bytes) = l.pipes[dir as usize].buf.pop_front().unwrap();
+                    l.pipes[dir as usize].received += 1;
+                    l.vnow_ns = l.vnow_ns.max(at);
+                    self.clock.advance_to(l.vnow_ns);
+                    return RecvOutcome::Frame { bytes, at_ns: at };
+                }
+                // the next arrival is already past the deadline: the
+                // timeout fires first, in virtual time
+                self.fire_timeout(&mut st, link, dir, deadline);
+                return RecvOutcome::TimedOut;
+            }
+            {
+                let l = &st.links[link];
+                if l.pipes[dir as usize].closed || l.broken || st.closed || !st.eps[l.ep].alive {
+                    return RecvOutcome::Eof;
+                }
+            }
+            // mutual block: both ends waiting, nothing in flight — the
+            // earlier virtual deadline fires (leader on ties, so the
+            // outcome never depends on which thread checks first)
+            let peer_dir = side.outbound();
+            let (peer_waiting, peer_deadline) = {
+                let p = &st.links[link].pipes[peer_dir as usize];
+                (p.reader_waiting, p.reader_deadline)
+            };
+            if peer_waiting
+                && (deadline < peer_deadline
+                    || (deadline == peer_deadline && side == Side::Leader))
+            {
+                if deadline == u64::MAX {
+                    panic!(
+                        "sim deadlock: both link ends blocked with no timeout\n{}",
+                        Self::dump(&st)
+                    );
+                }
+                self.fire_timeout(&mut st, link, dir, deadline);
+                return RecvOutcome::TimedOut;
+            }
+            {
+                let p = &mut st.links[link].pipes[dir as usize];
+                p.reader_waiting = true;
+                p.reader_deadline = deadline;
+            }
+            if peer_waiting {
+                // registering may hand the peer the earlier-deadline role;
+                // wake it to re-check. No livelock: of two blocked ends
+                // exactly one satisfies the fire predicate, so each
+                // notify either ends in a delivery or in that end firing.
+                self.cv.notify_all();
+            }
+            let (guard, wait) = self.cv.wait_timeout(st, self.hang_guard).unwrap();
+            st = guard;
+            st.links[link].pipes[dir as usize].reader_waiting = false;
+            if wait.timed_out() {
+                panic!(
+                    "sim hang: no event for {:?} of real time (is a worker thread dead?)\n{}",
+                    self.hang_guard,
+                    Self::dump(&st)
+                );
+            }
+        }
+    }
+
+    fn fire_timeout(&self, st: &mut SimState, link: usize, dir: Dir, deadline: u64) {
+        let l = &mut st.links[link];
+        l.vnow_ns = l.vnow_ns.max(deadline);
+        let seq = l.pipes[dir as usize].received;
+        l.push_event(Some(dir), seq, deadline, TraceKind::TimedOut { deadline_ns: deadline });
+        self.clock.advance_to(l.vnow_ns);
+        self.cv.notify_all();
+    }
+
+    /// One side hung up: no more frames in either direction.
+    fn close_stream(&self, link: usize) {
+        let Ok(mut st) = self.state.lock() else { return };
+        st.links[link].close_pipes();
+        self.cv.notify_all();
+    }
+
+    fn dump(st: &SimState) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (i, e) in st.eps.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "worker {i} ({}): alive={} pending={} conns={}",
+                e.addr,
+                e.alive,
+                e.pending.len(),
+                e.conns
+            );
+        }
+        for l in &st.links {
+            let _ = writeln!(
+                out,
+                "link w{}#{}: vnow={}ns broken={} to_worker(sent={} recv={} buf={} closed={} \
+                 waiting={}) to_leader(sent={} recv={} buf={} closed={} waiting={})",
+                l.ep,
+                l.ordinal,
+                l.vnow_ns,
+                l.broken,
+                l.pipes[0].sent,
+                l.pipes[0].received,
+                l.pipes[0].buf.len(),
+                l.pipes[0].closed,
+                l.pipes[0].reader_waiting,
+                l.pipes[1].sent,
+                l.pipes[1].received,
+                l.pipes[1].buf.len(),
+                l.pipes[1].closed,
+                l.pipes[1].reader_waiting,
+            );
+        }
+        out
+    }
+}
+
+/// One end of a simulated connection. Reads serve frame bytes byte-wise
+/// (the frame layer does its usual `read_exact` dance); writes buffer
+/// until `flush`, which is exactly one frame in the cluster protocol.
+struct SimStream {
+    hub: Arc<Hub>,
+    link: usize,
+    ep: usize,
+    ordinal: u64,
+    side: Side,
+    /// Virtual time of this side's last own action on the link (send,
+    /// delivery, fired timeout). Read deadlines anchor here, which makes
+    /// them independent of thread interleaving.
+    last_vnow: u64,
+    read_buf: Vec<u8>,
+    read_pos: usize,
+    write_buf: Vec<u8>,
+    read_timeout: Option<Duration>,
+}
+
+impl io::Read for SimStream {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        if self.read_pos >= self.read_buf.len() {
+            let deadline = match self.read_timeout {
+                Some(t) => self.last_vnow.saturating_add(t.as_nanos() as u64),
+                None => u64::MAX,
+            };
+            match self.hub.recv_frame(self.link, self.side, deadline) {
+                RecvOutcome::Frame { bytes, at_ns } => {
+                    self.last_vnow = at_ns;
+                    self.read_buf = bytes;
+                    self.read_pos = 0;
+                }
+                RecvOutcome::Eof => return Ok(0),
+                RecvOutcome::TimedOut => {
+                    self.last_vnow = deadline;
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "sim: virtual read deadline fired",
+                    ));
+                }
+            }
+        }
+        let n = out.len().min(self.read_buf.len() - self.read_pos);
+        out[..n].copy_from_slice(&self.read_buf[self.read_pos..self.read_pos + n]);
+        self.read_pos += n;
+        Ok(n)
+    }
+}
+
+impl io::Write for SimStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.write_buf.extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if self.write_buf.is_empty() {
+            return Ok(());
+        }
+        let frame = std::mem::take(&mut self.write_buf);
+        let sent_at = self.hub.send_frame(self.link, self.side, frame)?;
+        self.last_vnow = self.last_vnow.max(sent_at);
+        Ok(())
+    }
+}
+
+impl NetStream for SimStream {
+    fn set_read_timeout(&mut self, t: Option<Duration>) -> io::Result<()> {
+        self.read_timeout = t;
+        Ok(())
+    }
+
+    fn set_write_timeout(&mut self, _t: Option<Duration>) -> io::Result<()> {
+        // sim writes complete instantly (the latency is modeled on
+        // delivery), so a write deadline can never fire
+        Ok(())
+    }
+
+    fn peer(&self) -> String {
+        match self.side {
+            Side::Leader => format!("sim://{}#{}", self.ep, self.ordinal),
+            Side::Worker => format!("sim-leader://{}#{}", self.ep, self.ordinal),
+        }
+    }
+}
+
+impl Drop for SimStream {
+    fn drop(&mut self) {
+        self.hub.close_stream(self.link);
+    }
+}
+
+/// The leader-side dialer into a [`SimNet`].
+#[derive(Clone)]
+pub struct SimTransport {
+    hub: Arc<Hub>,
+}
+
+impl Transport for SimTransport {
+    fn dial(&self, addr: &str, _connect_timeout: Duration) -> Result<Box<dyn NetStream>> {
+        Hub::dial(&self.hub, addr)
+    }
+
+    fn clock(&self) -> Arc<dyn Clock> {
+        self.hub.clock.clone()
+    }
+}
+
+/// The accept side of one simulated worker endpoint.
+struct SimListener {
+    hub: Arc<Hub>,
+    ep: usize,
+}
+
+impl NetListener for SimListener {
+    fn accept_stream(&self) -> io::Result<Option<Box<dyn NetStream>>> {
+        Ok(Hub::accept(&self.hub, self.ep))
+    }
+
+    fn local_addr(&self) -> String {
+        self.hub.state.lock().unwrap().eps[self.ep].addr.clone()
+    }
+
+    fn clock(&self) -> Arc<dyn Clock> {
+        self.hub.clock.clone()
+    }
+}
+
+/// A deterministic in-memory cluster: N in-process workers, a leader-side
+/// [`SimTransport`], a shared [`VirtualClock`], a [`FaultPlan`], and the
+/// resulting event trace. See the [module docs](self).
+pub struct SimNet {
+    hub: Arc<Hub>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl SimNet {
+    /// A network with the given fault RNG seed and plan.
+    pub fn new(seed: u64, plan: FaultPlan) -> Self {
+        Self {
+            hub: Arc::new(Hub {
+                seed,
+                plan,
+                clock: VirtualClock::new(),
+                state: Mutex::new(SimState {
+                    closed: false,
+                    eps: Vec::new(),
+                    links: Vec::new(),
+                    admin: Vec::new(),
+                }),
+                cv: Condvar::new(),
+                hang_guard: hang_guard_from_env(),
+            }),
+            threads: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Add one worker serving the shard store under `store`, with a
+    /// `threads`-wide map pool, and return its dialable address
+    /// (`sim://<index>`). The worker runs the real
+    /// [`worker::serve_net`] loop on its own thread.
+    ///
+    /// Panics if the store does not open — a worker silently serving
+    /// nothing would otherwise surface as an opaque "sim hang" panic a
+    /// hang-guard later, not as the store problem it is.
+    pub fn add_worker(&self, store: &Path, threads: usize) -> String {
+        // validate eagerly on the caller (the thread re-opens; mmaps are
+        // not moved across threads so non-unix fallbacks keep working)
+        if let Err(e) = MmapProblem::open(store) {
+            panic!("sim worker cannot open the store {}: {e}", store.display());
+        }
+        let (ep, addr) = {
+            let mut st = self.hub.state.lock().unwrap();
+            let ep = st.eps.len();
+            let addr = format!("sim://{ep}");
+            st.eps.push(EpState {
+                addr: addr.clone(),
+                alive: true,
+                pending: VecDeque::new(),
+                conns: 0,
+            });
+            (ep, addr)
+        };
+        let hub = Arc::clone(&self.hub);
+        let dir: PathBuf = store.to_path_buf();
+        let handle = std::thread::spawn(move || {
+            let problem = MmapProblem::open(&dir)
+                .unwrap_or_else(|e| panic!("sim worker {ep}: store vanished: {e}"));
+            let pool = Cluster::new(threads);
+            let listener = SimListener { hub, ep };
+            let _ = worker::serve_net(&listener, &problem, &pool);
+        });
+        self.threads.lock().unwrap().push(handle);
+        addr
+    }
+
+    /// The dialer to hand to
+    /// [`RemoteCluster::connect_with`](super::RemoteCluster::connect_with)
+    /// (or [`crate::solve::Solve::transport`]).
+    pub fn transport(&self) -> SimTransport {
+        SimTransport { hub: Arc::clone(&self.hub) }
+    }
+
+    /// The shared virtual clock.
+    pub fn clock(&self) -> Arc<VirtualClock> {
+        Arc::clone(&self.hub.clock)
+    }
+
+    /// Kill worker `index` now: pending and future frames vanish, its
+    /// links EOF, dials are refused until [`SimNet::rejoin_worker`].
+    /// Deterministic when called from a deterministic point — e.g. a
+    /// `SolveObserver` at a chosen round, the sim analogue of SIGKILL in
+    /// the TCP integration test.
+    pub fn crash_worker(&self, index: usize) {
+        let mut st = self.hub.state.lock().unwrap();
+        if !st.eps[index].alive {
+            return;
+        }
+        let at = self.hub.clock.now_ns();
+        let conn = st.eps[index].conns;
+        Hub::crash_ep(&mut st, index);
+        st.admin.push(TraceEvent {
+            worker: index,
+            conn,
+            dir: None,
+            seq: 0,
+            at_ns: at,
+            kind: TraceKind::Crashed,
+        });
+        self.hub.cv.notify_all();
+    }
+
+    /// Revive a crashed worker: it accepts new connections again (a
+    /// leader session in flight will *not* redial it — links never
+    /// resurrect within a session — but a new connect sees it).
+    pub fn rejoin_worker(&self, index: usize) {
+        let mut st = self.hub.state.lock().unwrap();
+        if st.eps[index].alive {
+            return;
+        }
+        st.eps[index].alive = true;
+        let at = self.hub.clock.now_ns();
+        let conn = st.eps[index].conns;
+        st.admin.push(TraceEvent {
+            worker: index,
+            conn,
+            dir: None,
+            seq: 0,
+            at_ns: at,
+            kind: TraceKind::Rejoined,
+        });
+        self.hub.cv.notify_all();
+    }
+
+    /// Is worker `index` currently accepting?
+    pub fn worker_alive(&self, index: usize) -> bool {
+        self.hub.state.lock().unwrap().eps[index].alive
+    }
+
+    /// Retire the network: all blocked operations resolve, worker threads
+    /// exit and are joined. Idempotent; also runs on drop. Call it before
+    /// [`SimNet::trace`] when comparing full runs, so late worker-side
+    /// events are flushed.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.hub.state.lock().unwrap();
+            st.closed = true;
+            for link in st.links.iter_mut() {
+                link.close_pipes();
+            }
+            self.hub.cv.notify_all();
+        }
+        let handles: Vec<_> = self.threads.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// The run's event trace in canonical order: links sorted by
+    /// `(worker, conn)`, each link's events in causal order, admin events
+    /// (crash/rejoin calls) appended. Two runs with the same
+    /// `(seed, plan)` and the same driving program produce equal traces.
+    pub fn trace(&self) -> Vec<TraceEvent> {
+        let st = self.hub.state.lock().unwrap();
+        let mut order: Vec<usize> = (0..st.links.len()).collect();
+        order.sort_by_key(|&i| (st.links[i].ep, st.links[i].ordinal));
+        let mut out = Vec::new();
+        for i in order {
+            out.extend(st.links[i].events.iter().cloned());
+        }
+        out.extend(st.admin.iter().cloned());
+        out
+    }
+
+    /// [`SimNet::trace`] rendered one event per line (for failure
+    /// messages and replay diffs).
+    pub fn trace_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for e in self.trace() {
+            let _ = writeln!(
+                out,
+                "w{}#{} {:>9}ns {:?} seq={} {:?}",
+                e.worker, e.conn, e.at_ns, e.dir, e.seq, e.kind
+            );
+        }
+        out
+    }
+}
+
+impl Drop for SimNet {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::frames;
+    use std::io::Write as _;
+
+    /// A hub with one endpoint and no worker thread — unit tests drive
+    /// both ends by hand.
+    fn bare_hub(seed: u64, plan: FaultPlan) -> (Arc<Hub>, String) {
+        let net = SimNet::new(seed, plan);
+        let hub = Arc::clone(&net.hub);
+        {
+            let mut st = hub.state.lock().unwrap();
+            st.eps.push(EpState {
+                addr: "sim://0".into(),
+                alive: true,
+                pending: VecDeque::new(),
+                conns: 0,
+            });
+        }
+        std::mem::forget(net); // keep the hub open: these tests own both ends
+        (hub, "sim://0".into())
+    }
+
+    #[test]
+    fn frames_cross_the_sim_verbatim() {
+        let (hub, addr) = bare_hub(1, FaultPlan::healthy());
+        let mut leader = Hub::dial(&hub, &addr).unwrap();
+        let mut worker = Hub::accept(&hub, 0).expect("pending conn");
+        frames::write_frame(&mut leader, 4, b"task payload").unwrap();
+        let (kind, payload, _) = frames::read_frame(&mut worker).unwrap();
+        assert_eq!(kind, 4);
+        assert_eq!(payload, b"task payload");
+        // and the reply direction
+        frames::write_frame(&mut worker, 7, b"partial").unwrap();
+        let (kind, payload, _) = frames::read_frame(&mut leader).unwrap();
+        assert_eq!(kind, 7);
+        assert_eq!(payload, b"partial");
+    }
+
+    #[test]
+    fn corruption_trips_the_checksum() {
+        let plan = FaultPlan {
+            links: vec![LinkFaults {
+                corrupt_frames: vec![(Dir::ToWorker, 0)],
+                ..NO_FAULTS
+            }],
+        };
+        let (hub, addr) = bare_hub(2, plan);
+        let mut leader = Hub::dial(&hub, &addr).unwrap();
+        let mut worker = Hub::accept(&hub, 0).expect("pending conn");
+        frames::write_frame(&mut leader, 3, b"sensitive numbers").unwrap();
+        let err = frames::read_frame(&mut worker).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn delay_past_deadline_fires_virtually_not_really() {
+        let plan = FaultPlan {
+            links: vec![LinkFaults { delay_ns: 2_000_000_000, ..NO_FAULTS }],
+        };
+        let (hub, addr) = bare_hub(3, plan);
+        let mut leader = Hub::dial(&hub, &addr).unwrap();
+        let mut worker = Hub::accept(&hub, 0).expect("pending conn");
+        worker.set_read_timeout(Some(Duration::from_secs(1))).unwrap();
+        let wall = std::time::Instant::now();
+        frames::write_frame(&mut leader, 3, b"late").unwrap();
+        let err = frames::read_frame(&mut worker).unwrap_err();
+        let err = match err {
+            crate::error::Error::Io(e) => e,
+            other => panic!("expected io error, got {other}"),
+        };
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        assert!(wall.elapsed() < Duration::from_secs(5), "timeout must not sleep for real");
+        assert_eq!(hub.clock.now_ns(), 1_000_000_000, "clock advanced to the fired deadline");
+    }
+
+    #[test]
+    fn drop_storms_break_the_link_and_readers_see_eof() {
+        let plan = FaultPlan {
+            links: vec![LinkFaults { drop_prob: 1.0, ..NO_FAULTS }],
+        };
+        let (hub, addr) = bare_hub(4, plan);
+        let mut leader = Hub::dial(&hub, &addr).unwrap();
+        let mut worker = Hub::accept(&hub, 0).expect("pending conn");
+        // the write "succeeds" (TCP buffers locally)…
+        frames::write_frame(&mut leader, 3, b"doomed").unwrap();
+        // …the peer sees EOF…
+        let err = frames::read_frame(&mut worker).unwrap_err();
+        assert!(matches!(err, crate::error::Error::Io(_)), "{err}");
+        // …and the next write fails
+        let e = leader.write_all(b"x").and_then(|_| leader.flush()).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn same_seed_same_faults_different_seed_differs() {
+        let plan = FaultPlan {
+            links: vec![LinkFaults { jitter_ns: 1_000_000, drop_prob: 0.4, ..NO_FAULTS }],
+        };
+        let run = |seed: u64| -> Vec<TraceEvent> {
+            let (hub, addr) = bare_hub(seed, plan.clone());
+            let mut leader = Hub::dial(&hub, &addr).unwrap();
+            let mut worker = Hub::accept(&hub, 0).expect("pending conn");
+            for i in 0..8u8 {
+                frames::write_frame(&mut leader, 3, &[i; 9]).unwrap();
+                if frames::read_frame(&mut worker).is_err() {
+                    break;
+                }
+            }
+            let st = hub.state.lock().unwrap();
+            st.links[0].events.clone()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay the same trace");
+        assert_ne!(run(7), run(8), "jittered delays must depend on the seed");
+    }
+}

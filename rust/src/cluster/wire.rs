@@ -3,7 +3,9 @@
 //! The offline registry has no serde; messages are packed by hand with
 //! these two helpers. Floats travel as raw IEEE-754 bits, so partial
 //! accumulators (Kahan sums, bucket histograms) survive the trip
-//! bit-for-bit — a prerequisite for the determinism contract.
+//! bit-for-bit — a prerequisite for the determinism contract (and for
+//! the simulator's replay guarantee: the same payload bytes cross TCP
+//! and the in-memory transport alike).
 
 use crate::error::{Error, Result};
 

@@ -7,9 +7,17 @@
 //! broadcast state. Workers are **stateless between frames** — that is
 //! what makes leader-side re-dispatch after a failure safe — and survive
 //! leader disconnects by returning to `accept`.
+//!
+//! The loop is generic over the [`NetListener`] seam: production workers
+//! accept real TCP connections ([`serve`]/[`serve_source`]); the
+//! deterministic simulator runs the *same* session code over in-memory
+//! streams ([`serve_net`]), which is how chaos tests exercise this file
+//! without sockets or wall-clock timeouts.
 
+use crate::cluster::clock::Clock;
 use crate::cluster::frames;
 use crate::cluster::protocol::{recv_msg, send_msg, InstanceFingerprint, Msg};
+use crate::cluster::transport::{NetListener, NetStream, TcpNetListener};
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::store::MmapProblem;
@@ -17,7 +25,7 @@ use crate::mapreduce::Cluster;
 use crate::solver::postprocess::rank_chunk;
 use crate::solver::rounds::{evaluation_chunk, RustEvaluator};
 use crate::solver::scd::{scd_round_chunk, ScdRoundCtx, ScdRoundSpec};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::Path;
 
 /// Open the store under `dir` and serve leader sessions on `listener`
@@ -36,20 +44,35 @@ pub fn serve_source<S: GroupSource + ?Sized>(
     source: &S,
     pool: &Cluster,
 ) -> Result<()> {
+    serve_net(&TcpNetListener::new(listener), source, pool)
+}
+
+/// The transport-generic accept loop: serve leader sessions until the
+/// listener is retired (`accept_stream() == Ok(None)`, which TCP never
+/// reports but the simulator does on shutdown).
+pub fn serve_net<S: GroupSource + ?Sized>(
+    listener: &dyn NetListener,
+    source: &S,
+    pool: &Cluster,
+) -> Result<()> {
     source.validate()?;
     let fingerprint = InstanceFingerprint::of(source);
-    for stream in listener.incoming() {
-        let Ok(stream) = stream else {
-            // persistent accept failure (fd exhaustion, ...) must not
-            // become a 100%-CPU spin; breathe, then retry
-            std::thread::sleep(std::time::Duration::from_millis(100));
-            continue;
-        };
-        // a failed session (leader vanished, corrupt frame) ends the
-        // connection, never the worker
-        let _ = session(stream, source, &fingerprint, pool);
+    let clock = listener.clock();
+    loop {
+        match listener.accept_stream() {
+            // a failed session (leader vanished, corrupt frame) ends the
+            // connection, never the worker
+            Ok(Some(stream)) => {
+                let _ = session(stream, source, &fingerprint, pool);
+            }
+            Ok(None) => return Ok(()),
+            Err(_) => {
+                // persistent accept failure (fd exhaustion, ...) must not
+                // become a 100%-CPU spin; breathe, then retry
+                clock.sleep(std::time::Duration::from_millis(100));
+            }
+        }
     }
-    Ok(())
 }
 
 /// Idle bound on one leader session: a leader that vanished without
@@ -64,12 +87,11 @@ const DEFAULT_IDLE_TIMEOUT_MS: u64 = 600_000;
 /// served after a successful `Hello` handshake — the fingerprint check
 /// happens *before any work*, as the protocol spec requires.
 fn session<S: GroupSource + ?Sized>(
-    mut stream: TcpStream,
+    mut stream: Box<dyn NetStream>,
     source: &S,
     fingerprint: &InstanceFingerprint,
     pool: &Cluster,
 ) -> Result<()> {
-    stream.set_nodelay(true).ok();
     let idle = crate::cluster::env_ms("PALLAS_WORKER_IDLE_TIMEOUT_MS", DEFAULT_IDLE_TIMEOUT_MS);
     stream.set_read_timeout(Some(idle))?;
     let mut greeted = false;

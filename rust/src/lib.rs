@@ -12,7 +12,11 @@
 //!   processes serving their shard-store replicas over a checksummed TCP
 //!   wire protocol, driven by a leader that re-dispatches work around
 //!   failures. `bskp solve --cluster host:port,...` runs the same solvers
-//!   across machines.
+//!   across machines. The runtime is generic over a transport seam, so the
+//!   identical code also runs on a deterministic in-memory simulator
+//!   ([`cluster::SimNet`]) with seeded fault injection and a virtual
+//!   clock — every distributed failure is replayable from a seed
+//!   (`docs/simulation.md`).
 //! * **L3 (this crate)** — problem model, MapReduce-style execution engine,
 //!   the paper's algorithms (Alg 1–5 plus the §5 speedups), LP-relaxation
 //!   bound, metrics and a CLI.

@@ -47,7 +47,7 @@ pub use crate::solver::stats::{
     HistoryObserver, ObserverControl, RoundEvent, SolveObserver, SolveReport,
 };
 
-use crate::cluster::RemoteCluster;
+use crate::cluster::{ConnectOptions, RemoteCluster, TcpTransport, Transport};
 use crate::coordinator::{Algorithm, Backend};
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
@@ -81,6 +81,8 @@ pub struct Solve<'a> {
     config: SolverConfig,
     cluster: Option<Cluster>,
     cluster_addrs: Vec<String>,
+    transport: Option<Arc<dyn Transport>>,
+    connect_opts: Option<ConnectOptions>,
     algorithm: Algorithm,
     backend: Backend,
     warm: Option<WarmStart>,
@@ -97,6 +99,8 @@ impl<'a> Solve<'a> {
             config: SolverConfig::default(),
             cluster: None,
             cluster_addrs: Vec::new(),
+            transport: None,
+            connect_opts: None,
             algorithm: Algorithm::Scd,
             backend: Backend::Rust,
             warm: None,
@@ -142,6 +146,25 @@ impl<'a> Solve<'a> {
         A: Into<String>,
     {
         self.cluster_addrs = addrs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Dial [`Solve::distributed`] workers through this transport instead
+    /// of TCP — how the deterministic simulator
+    /// ([`crate::cluster::SimNet`]) runs a full planned session, capability
+    /// checks included, without sockets. Production code never needs this:
+    /// the default is [`crate::cluster::TcpTransport`].
+    pub fn transport(mut self, t: Arc<dyn Transport>) -> Self {
+        self.transport = Some(t);
+        self
+    }
+
+    /// Override the cluster session's dial/exchange timeout policy
+    /// (default: the `PALLAS_CLUSTER_*_MS` environment knobs). Tests
+    /// inject explicit values here so their behavior can never depend on
+    /// what the host environment happens to export.
+    pub fn connect_options(mut self, opts: ConnectOptions) -> Self {
+        self.connect_opts = Some(opts);
         self
     }
 
@@ -215,7 +238,18 @@ impl<'a> Solve<'a> {
                      replica of it); this source has none — using the in-process pool",
                 ));
             } else {
-                match RemoteCluster::connect(&self.cluster_addrs, self.source) {
+                let transport: &dyn Transport = match &self.transport {
+                    Some(t) => t.as_ref(),
+                    None => &TcpTransport,
+                };
+                let opts = self.connect_opts.unwrap_or_else(ConnectOptions::from_env);
+                let connected = RemoteCluster::connect_with(
+                    transport,
+                    &self.cluster_addrs,
+                    self.source,
+                    opts,
+                );
+                match connected {
                     Ok((rc, skipped)) => {
                         for s in skipped {
                             notes.push(PlanNote::new("executor", s));

@@ -1,0 +1,89 @@
+//! Differential oracle: on random tiny instances, the exact IP optimum
+//! (branch-and-bound over full group subsets, `bskp::exact`) must sit
+//! inside every solver's reported duality bracket:
+//!
+//! ```text
+//!     primal  ≤  exact  ≤  dual
+//! ```
+//!
+//! — the feasible primal can never beat the true optimum, and the
+//! Lagrangian dual `g(λ)` upper-bounds it at *any* λ ≥ 0 (weak duality),
+//! converged or not. Equivalently: the solver's objective lands within
+//! its own reported duality gap of the exact optimum. This wires the
+//! `exact` module into the default `cargo test` tier as a semantic
+//! cross-check of SCD and DD end to end (map kernels, reduce, λ updates,
+//! §5.4 post-processing), not just of their determinism.
+//!
+//! Instances are capped at `N·M ≤ 24` — the exact solver's enumeration
+//! bound — with mixed dense/sparse cost classes. Failures print the
+//! trial's full shape and seed for replay.
+
+use bskp::exact::solve_ip_exact;
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::problem::MaterializedProblem;
+use bskp::mapreduce::Cluster;
+use bskp::rng::Xoshiro256pp;
+use bskp::solver::dd::solve_dd;
+use bskp::solver::scd::solve_scd;
+use bskp::solver::SolverConfig;
+
+/// `primal ≤ exact ≤ dual`, with a small relative epsilon for the
+/// f32-coefficient / f64-accumulation rounding difference between the
+/// solver's sums and the oracle's.
+fn check_bracket(ctx: &str, exact: f64, primal: f64, dual: f64, feasible: bool) {
+    let eps = 1e-5 * (1.0 + exact.abs());
+    assert!(feasible, "{ctx}: final selection must be feasible (primal {primal})");
+    assert!(
+        primal <= exact + eps,
+        "{ctx}: feasible primal {primal} beats the exact optimum {exact} — infeasible \
+         selection or mis-merged objective"
+    );
+    assert!(
+        exact <= dual + eps,
+        "{ctx}: dual bound {dual} is below the exact optimum {exact} — weak duality violated"
+    );
+    assert!(dual - primal >= -eps, "{ctx}: negative duality gap [{primal}, {dual}]");
+}
+
+#[test]
+fn scd_and_dd_bracket_the_exact_optimum_on_random_tiny_instances() {
+    let cluster = Cluster::new(2);
+    let mut rng = Xoshiro256pp::new(0xEAAC7);
+    for trial in 0..200 {
+        let m = 2 + rng.below(3) as usize; // 2..=4 items per group
+        let n = 2 + rng.below((24 / m - 1) as u64) as usize; // N·M ≤ 24
+        let dense = rng.coin(0.4);
+        let k = if dense { 1 + rng.below(3) as usize } else { m };
+        let seed = rng.next_u64();
+        let gen = if dense {
+            GeneratorConfig::dense(n, m, k)
+        } else {
+            GeneratorConfig::sparse(n, m, k)
+        }
+        .with_seed(seed);
+        let p = SyntheticProblem::new(gen);
+        let mat = MaterializedProblem::from_source(&p).expect("materialize tiny instance");
+        let exact = solve_ip_exact(&mat).expect("exact oracle");
+
+        let scd = solve_scd(&p, &SolverConfig::default(), &cluster)
+            .unwrap_or_else(|e| panic!("trial {trial}: scd failed: {e}"));
+        check_bracket(
+            &format!("trial {trial} (scd, n={n} m={m} k={k} dense={dense} seed={seed:#x})"),
+            exact,
+            scd.primal_value,
+            scd.dual_value,
+            scd.is_feasible(),
+        );
+
+        let dd_cfg = SolverConfig { dd_alpha: 1e-2, ..Default::default() };
+        let dd = solve_dd(&p, &dd_cfg, &cluster)
+            .unwrap_or_else(|e| panic!("trial {trial}: dd failed: {e}"));
+        check_bracket(
+            &format!("trial {trial} (dd, n={n} m={m} k={k} dense={dense} seed={seed:#x})"),
+            exact,
+            dd.primal_value,
+            dd.dual_value,
+            dd.is_feasible(),
+        );
+    }
+}

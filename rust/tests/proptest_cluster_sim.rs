@@ -1,0 +1,486 @@
+//! Chaos suite for the distributed runtime, on the deterministic
+//! simulator (`bskp::cluster::sim`).
+//!
+//! Real leader + real in-process `worker::serve_net` loops run whole
+//! `solve_scd_exec` / `solve_dd_exec` sessions over an in-memory
+//! transport with seeded fault injection. The contract under test:
+//!
+//! * any run that completes is **bit-identical** to the in-process
+//!   executor (λ, objective, consumption, selection);
+//! * any run that cannot complete fails with a **typed error** — never a
+//!   hang (the simulator panics with its trace if nothing happens for
+//!   `PALLAS_SIM_HANG_SECS` of real time), never a silent divergence;
+//! * corrupted frames are rejected by the XXH64 check; crashed workers'
+//!   chunks are re-queued to survivors; timeouts fire in **virtual** time
+//!   (no test sleeps wall-clock);
+//! * two runs with the same `(seed, fault plan)` produce identical event
+//!   traces and identical reports.
+//!
+//! The random-plan property prints the failing `(seed, plan)`; re-run any
+//! red case with `PALLAS_SIM_SEED=<seed> cargo test --test
+//! proptest_cluster_sim` (see `docs/simulation.md`).
+
+use bskp::cluster::{
+    Clock, ConnectOptions, Dir, Exec, FaultPlan, LinkFaults, RemoteCluster, SimNet, TraceKind,
+};
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::store::MmapProblem;
+use bskp::mapreduce::Cluster;
+use bskp::rng::{mix64, Xoshiro256pp};
+use bskp::solve::Solve;
+use bskp::solver::dd::{solve_dd, solve_dd_exec};
+use bskp::solver::scd::{solve_scd, solve_scd_exec};
+use bskp::solver::stats::{ObserverControl, RoundEvent, SolveObserver, SolveReport};
+use bskp::solver::SolverConfig;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_sim_it_{}_{name}", std::process::id()))
+}
+
+/// Generate a sparse instance and write its shard store; returns the dir.
+fn write_store(name: &str, n: usize, seed: u64) -> PathBuf {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(n, 6, 6).with_seed(seed));
+    let dir = tmp_dir(name);
+    std::fs::remove_dir_all(&dir).ok();
+    p.write_shards(&dir, 256, &Cluster::new(2)).expect("write store");
+    dir
+}
+
+/// tol low enough that the solver always runs exactly `iters` rounds and
+/// an explicit shard size so the chunk partition (and with it the merge
+/// order) is identical across executors and worker counts.
+fn fixed_rounds(iters: usize) -> SolverConfig {
+    SolverConfig { max_iters: iters, tol: 1e-15, shard_size: Some(64), ..Default::default() }
+}
+
+/// The determinism contract: timing fields are wall-clock noise, every
+/// numeric result must agree to the bit.
+fn assert_reports_match(a: &SolveReport, b: &SolveReport, ctx: &str) {
+    assert_eq!(a.lambda, b.lambda, "{ctx}: λ must be bit-identical");
+    assert_eq!(
+        a.primal_value.to_bits(),
+        b.primal_value.to_bits(),
+        "{ctx}: primal ({} vs {})",
+        a.primal_value,
+        b.primal_value
+    );
+    assert_eq!(
+        a.dual_value.to_bits(),
+        b.dual_value.to_bits(),
+        "{ctx}: dual ({} vs {})",
+        a.dual_value,
+        b.dual_value
+    );
+    let ac: Vec<u64> = a.consumption.iter().map(|c| c.to_bits()).collect();
+    let bc: Vec<u64> = b.consumption.iter().map(|c| c.to_bits()).collect();
+    assert_eq!(ac, bc, "{ctx}: consumption");
+    assert_eq!(a.n_selected, b.n_selected, "{ctx}: n_selected");
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(a.converged, b.converged, "{ctx}: converged");
+    assert_eq!(a.dropped_groups, b.dropped_groups, "{ctx}: dropped_groups");
+}
+
+/// Spin up a sim fleet of `n` single-thread workers over `dir`.
+fn sim_fleet(seed: u64, plan: FaultPlan, dir: &Path, n: usize) -> (SimNet, Vec<String>) {
+    let sim = SimNet::new(seed, plan);
+    let addrs: Vec<String> = (0..n).map(|_| sim.add_worker(dir, 1)).collect();
+    (sim, addrs)
+}
+
+/// Explicit timeout policy (the production defaults, pinned): the
+/// suite's outcomes must be a function of `(seed, plan)` alone, never of
+/// `PALLAS_CLUSTER_*_MS` variables the host environment happens to
+/// export.
+fn sim_opts() -> ConnectOptions {
+    ConnectOptions {
+        connect_timeout: Duration::from_secs(5),
+        exchange_timeout: Duration::from_secs(600),
+    }
+}
+
+/// Two runs with the same `(seed, fault plan)` must produce identical
+/// event traces, identical wire statistics and bit-identical reports —
+/// the acceptance criterion of the simulator. A different seed must
+/// produce a different trace (the jitter is really seeded).
+#[test]
+fn same_seed_and_plan_replay_identically() {
+    let dir = write_store("det", 1_800, 11);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(1)).unwrap();
+
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults { delay_ns: 300_000, jitter_ns: 900_000, ..Default::default() },
+            LinkFaults {
+                drop_prob: 0.15,
+                jitter_ns: 500_000,
+                corrupt_frames: vec![(Dir::ToLeader, 3)],
+                ..Default::default()
+            },
+            LinkFaults { reorder_prob: 0.4, dup_prob: 0.3, ..Default::default() },
+            LinkFaults::default(),
+        ],
+    };
+
+    let run = |seed: u64| {
+        let (sim, addrs) = sim_fleet(seed, plan.clone(), &dir, 4);
+        let (fleet, skipped) =
+            RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts())
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+            .expect("sim solve completes");
+        let stats = fleet.stats();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats, sim.trace())
+    };
+
+    let (r1, s1, t1) = run(42);
+    let (r2, s2, t2) = run(42);
+    assert_eq!(t1, t2, "same (seed, plan) must replay the identical event trace");
+    assert_eq!(s1, s2, "wire statistics (virtual round times included) must replay");
+    assert_reports_match(&r1, &r2, "replay");
+    assert_reports_match(&r1, &baseline, "sim vs in-process");
+    // the corrupt reply killed exactly worker 1; the chunk was re-queued
+    assert_eq!(s1.workers_lost, 1, "{s1:?}");
+    assert!(s1.redispatches >= 1, "{s1:?}");
+
+    let (r3, _, t3) = run(43);
+    assert_ne!(t1, t3, "a different seed must schedule different faults");
+    assert_reports_match(&r1, &r3, "results are seed-independent when the run completes");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The ISSUE's single-solve acceptance case: drops (with retransmits),
+/// reordering, frame corruption *and* a mid-round crash in one solve —
+/// which must still finish bit-identical to the in-process executor,
+/// with the corrupted frame rejected by checksum and the crashed
+/// worker's chunks re-queued to survivors.
+#[test]
+fn drop_reorder_corrupt_and_crash_in_one_solve_still_matches() {
+    let dir = write_store("combo", 2_000, 41);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    // drop_prob stays low enough that a full link break (> MAX_RETRANSMITS
+    // consecutive losses, p ≈ 1e-6 per frame) is effectively impossible —
+    // the assertion below wants retransmits, not a third lost worker
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults { drop_prob: 0.1, delay_ns: 100_000, ..Default::default() },
+            LinkFaults { corrupt_frames: vec![(Dir::ToLeader, 3)], ..Default::default() },
+            LinkFaults { reorder_prob: 0.5, jitter_ns: 400_000, ..Default::default() },
+            LinkFaults { crash_on_reply: Some(4), ..Default::default() },
+        ],
+    };
+    let (sim, addrs) = sim_fleet(7, plan, &dir, 4);
+    let (fleet, skipped) =
+        RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts())
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+        .expect("solve survives the chaos");
+    let stats = fleet.stats();
+    drop(fleet);
+    sim.shutdown();
+
+    assert_reports_match(&report, &baseline, "chaos combo");
+    assert_eq!(stats.workers_lost, 2, "corrupt link + crashed worker: {stats:?}");
+    assert_eq!(stats.workers_live, 2, "{stats:?}");
+    assert!(stats.redispatches >= 2, "both lost chunks must re-queue: {stats:?}");
+
+    let trace = sim.trace();
+    assert!(
+        trace.iter().any(|e| matches!(e.kind, TraceKind::Delivered { corrupted: true, .. })),
+        "a corrupted frame must appear in the trace\n{}",
+        sim.trace_text()
+    );
+    assert!(
+        trace.iter().any(|e| matches!(e.kind, TraceKind::Delivered { retransmits: 1.., .. })),
+        "dropped segments must appear as retransmits\n{}",
+        sim.trace_text()
+    );
+    assert!(
+        trace.iter().any(|e| matches!(e.kind, TraceKind::Delivered { reordered: true, .. })),
+        "reordered segments must appear in the trace\n{}",
+        sim.trace_text()
+    );
+    assert!(
+        trace.iter().any(|e| matches!(e.kind, TraceKind::Crashed)),
+        "the crash must appear in the trace\n{}",
+        sim.trace_text()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A stalled worker trips the leader's exchange timeout in *virtual*
+/// time: the 10-minute default detector fires without the test sleeping,
+/// the chunk re-dispatches, and the answer is untouched.
+#[test]
+fn stalled_worker_times_out_virtually_without_real_sleep() {
+    let dir = write_store("stall", 1_200, 13);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(4);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(1)).unwrap();
+
+    // replies from seq 1 on arrive 700 virtual seconds late — beyond the
+    // 600 s default exchange timeout (the Welcome at seq 0 stays prompt)
+    let plan = FaultPlan {
+        links: vec![LinkFaults { stall_after: Some((1, 700_000_000_000)), ..Default::default() }],
+    };
+    let (sim, addrs) = sim_fleet(5, plan, &dir, 2);
+    let wall = Instant::now();
+    let (fleet, skipped) =
+        RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts())
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+        .expect("survivor finishes the solve");
+    let stats = fleet.stats();
+    drop(fleet);
+    sim.shutdown();
+
+    assert!(
+        wall.elapsed() < Duration::from_secs(20),
+        "a 600 s timeout must fire virtually, not by sleeping ({:?})",
+        wall.elapsed()
+    );
+    assert!(
+        sim.clock().now_ns() >= 600_000_000_000,
+        "virtual time must have advanced past the fired deadline"
+    );
+    assert!(
+        sim.trace().iter().any(|e| matches!(e.kind, TraceKind::TimedOut { .. })),
+        "the fired deadline must be traced\n{}",
+        sim.trace_text()
+    );
+    assert_eq!(stats.workers_lost, 1, "{stats:?}");
+    assert_reports_match(&report, &baseline, "stall");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Observer that crashes a sim worker after a chosen round — the
+/// simulator analogue of SIGKILLing a worker process, addressing
+/// crash/stall faults "at chosen rounds" deterministically.
+struct CrashAt<'a> {
+    sim: &'a SimNet,
+    at: usize,
+    victim: usize,
+    done: bool,
+}
+
+impl SolveObserver for CrashAt<'_> {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        if event.iter == self.at && !self.done {
+            self.done = true;
+            self.sim.crash_worker(self.victim);
+        }
+        ObserverControl::Continue
+    }
+}
+
+/// Crash a worker at a chosen round (mid-solve), finish on survivors
+/// with the exact answer; then rejoin it and verify a *new* session sees
+/// the full fleet again — while the old session correctly never
+/// resurrected the link.
+#[test]
+fn crash_at_round_redispatches_and_rejoin_serves_new_sessions() {
+    let dir = write_store("crash", 2_000, 17);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    let (sim, addrs) = sim_fleet(3, FaultPlan::healthy(), &dir, 3);
+    let (fleet, skipped) =
+        RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts())
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    assert_eq!(fleet.workers(), 3);
+
+    let mut killer = CrashAt { sim: &sim, at: 1, victim: 1, done: false };
+    let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, Some(&mut killer))
+        .expect("survivors finish");
+    let stats = fleet.stats();
+    assert_eq!(stats.workers_lost, 1, "exactly the victim must be lost: {stats:?}");
+    assert_eq!(stats.workers_live, 2, "the session must not resurrect the link: {stats:?}");
+    assert!(stats.redispatches >= 1, "the victim's chunk must re-queue: {stats:?}");
+    assert_reports_match(&report, &baseline, "crash at round 1");
+    drop(fleet);
+
+    // rejoin: a crashed worker comes back and *new* sessions see it
+    assert!(!sim.worker_alive(1));
+    sim.rejoin_worker(1);
+    assert!(sim.worker_alive(1));
+    let (fleet2, skipped2) =
+        RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts())
+            .expect("reconnect after rejoin");
+    assert!(skipped2.is_empty(), "rejoined worker must handshake: {skipped2:?}");
+    assert_eq!(fleet2.workers(), 3);
+    let again = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet2), None, None)
+        .expect("full fleet solves again");
+    assert_eq!(fleet2.stats().workers_lost, 0);
+    assert_reports_match(&again, &baseline, "after rejoin");
+    drop(fleet2);
+    sim.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The full planned session API runs under the simulator too (the
+/// `Solve::transport` seam): capability planning, executor selection and
+/// fallback notes — a refused worker is skipped with a note, and the
+/// solve still matches.
+#[test]
+fn planned_session_runs_on_the_simulator() {
+    let dir = write_store("plan", 1_500, 29);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(5);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults::default(),
+            LinkFaults { refuse_dials: true, ..Default::default() },
+        ],
+    };
+    let (sim, addrs) = sim_fleet(9, plan, &dir, 2);
+    let solve_plan = Solve::on(&mm)
+        .config(cfg)
+        .cluster(Cluster::new(2))
+        .transport(Arc::new(sim.transport()))
+        .connect_options(sim_opts())
+        .distributed(addrs)
+        .plan()
+        .expect("plan");
+    assert_eq!(solve_plan.executor(), "distributed");
+    assert!(
+        solve_plan
+            .notes
+            .iter()
+            .any(|n| n.stage == "executor" && n.message.contains("refused")),
+        "the refused worker must be noted: {:?}",
+        solve_plan.notes
+    );
+    let report = solve_plan.run().expect("planned sim solve");
+    assert_reports_match(&report, &baseline, "planned session");
+    sim.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Build a random fault plan — the generator of the chaos property.
+fn random_plan(rng: &mut Xoshiro256pp, workers: usize) -> FaultPlan {
+    let mut links = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let mut f = LinkFaults::default();
+        if rng.coin(0.7) {
+            f.delay_ns = rng.below(2_000_000);
+        }
+        if rng.coin(0.5) {
+            f.jitter_ns = rng.below(1_000_000);
+        }
+        if rng.coin(0.3) {
+            f.drop_prob = 0.3 * rng.next_f64();
+        }
+        if rng.coin(0.25) {
+            f.dup_prob = 0.3 * rng.next_f64();
+        }
+        if rng.coin(0.25) {
+            f.reorder_prob = 0.3 * rng.next_f64();
+        }
+        if rng.coin(0.15) {
+            f.corrupt_prob = 0.03 * rng.next_f64();
+        }
+        if rng.coin(0.15) {
+            f.corrupt_frames.push((Dir::ToLeader, 1 + rng.below(6)));
+        }
+        if rng.coin(0.12) {
+            f.crash_on_task = Some(1 + rng.below(10));
+        }
+        if rng.coin(0.12) {
+            f.crash_on_reply = Some(1 + rng.below(10));
+        }
+        if rng.coin(0.1) {
+            f.stall_after = Some((1 + rng.below(6), 700_000_000_000));
+        }
+        if rng.coin(0.07) {
+            f.refuse_dials = true;
+        }
+        links.push(f);
+    }
+    FaultPlan { links }
+}
+
+/// The chaos property: random fault plans over {1, 2, 4, 8} sim workers
+/// must either complete bit-identical to the in-process executor or fail
+/// with a typed error — never hang (enforced by the simulator's real-time
+/// guard), never silently diverge. Failures print the `(seed, plan)` for
+/// one-command replay via `PALLAS_SIM_SEED`.
+#[test]
+fn random_fault_plans_never_hang_or_diverge() {
+    let dir = write_store("chaos", 1_200, 23);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let scd_cfg = fixed_rounds(5);
+    let dd_cfg = SolverConfig { dd_alpha: 2e-3, ..fixed_rounds(5) };
+    let scd_base = solve_scd(&mm, &scd_cfg, &Cluster::new(1)).unwrap();
+    let dd_base = solve_dd(&mm, &dd_cfg, &Cluster::new(1)).unwrap();
+
+    let base_seed: u64 = std::env::var("PALLAS_SIM_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE);
+
+    let worker_counts = [1usize, 2, 4, 8];
+    for case in 0..24u64 {
+        let case_seed = mix64(base_seed, case);
+        let mut rng = Xoshiro256pp::new(case_seed);
+        let workers = worker_counts[rng.below(4) as usize];
+        let use_dd = rng.coin(0.25);
+        let plan = random_plan(&mut rng, workers);
+        let ctx = format!(
+            "case {case} (base seed {base_seed}, case seed {case_seed}, {workers} workers, \
+             {}) — replay with PALLAS_SIM_SEED={base_seed}\nplan: {plan:#?}",
+            if use_dd { "dd" } else { "scd" },
+        );
+
+        let (sim, addrs) = sim_fleet(case_seed, plan, &dir, workers);
+        let connected =
+            RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts());
+        let outcome = match &connected {
+            Ok((fleet, _skipped)) => {
+                if use_dd {
+                    solve_dd_exec(&mm, &dd_cfg, &Exec::Remote(fleet), None, None)
+                } else {
+                    solve_scd_exec(&mm, &scd_cfg, &Exec::Remote(fleet), None, None)
+                }
+            }
+            Err(e) => Err(bskp::Error::Runtime(e.to_string())),
+        };
+        match outcome {
+            Ok(report) => {
+                let base = if use_dd { &dd_base } else { &scd_base };
+                assert_reports_match(&report, base, &ctx);
+            }
+            Err(e) => {
+                // a typed, diagnosable error naming the fleet — the only
+                // acceptable alternative to a bit-identical answer
+                assert!(
+                    matches!(e, bskp::Error::Runtime(_) | bskp::Error::Io(_)),
+                    "{ctx}\nunexpected error class: {e}"
+                );
+                assert!(
+                    e.to_string().contains("worker"),
+                    "{ctx}\nerror must name the fleet failure: {e}"
+                );
+            }
+        }
+        drop(connected);
+        sim.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
