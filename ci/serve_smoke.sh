@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# Serve smoke test: a real `bskp serve` daemon on a generated shard store
+# must answer a served solve **bit-identically** to `bskp solve` on the
+# same store, warm-start a budget-scaled resolve from its kept λ in at
+# most half the cold rounds, and answer point queries at the λ it
+# reports. Run from the repo root; requires a release build (or set BIN).
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bskp}
+SCRATCH=$(mktemp -d)
+STORE="$SCRATCH/store"
+
+cleanup() {
+  for f in "$SCRATCH"/*.pid; do
+    [ -e "$f" ] && kill "$(cat "$f")" 2>/dev/null || true
+  done
+  rm -rf "$SCRATCH"
+}
+trap cleanup EXIT
+
+"$BIN" gen --n 20000 --m 8 --k 8 --seed 5 --tightness 0.2 --shard 1024 \
+  --out "$STORE" --quiet
+
+"$BIN" serve --listen 127.0.0.1:0 --store "$STORE" --admission 2 \
+  --workers 2 >"$SCRATCH/serve.log" &
+echo $! >"$SCRATCH/serve.pid"
+for _ in $(seq 50); do
+  ADDR=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$SCRATCH/serve.log")
+  [ -n "$ADDR" ] && break
+  sleep 0.1
+done
+if [ -z "${ADDR:-}" ]; then
+  echo "serve daemon failed to announce:" >&2
+  cat "$SCRATCH/serve.log" >&2
+  exit 1
+fi
+echo "serve daemon up at $ADDR"
+
+# the same solve, locally and served (same config, same pinned map
+# partition — the bit-identity precondition, as for the cluster)
+"$BIN" solve --from "$STORE" --iters 300 --shard 256 \
+  --json "$SCRATCH/local.json" --quiet
+"$BIN" request --to "$ADDR" --op solve --iters 300 --shard 256 \
+  --json "$SCRATCH/served.json" --quiet
+
+# budgets drift 5%: warm resolve (seeded from the daemon's λ) vs a cold
+# solve of the same scaled instance
+"$BIN" request --to "$ADDR" --op resolve --budget-scale 1.05 \
+  --iters 300 --shard 256 --json "$SCRATCH/warm.json" --quiet
+"$BIN" request --to "$ADDR" --op solve --budget-scale 1.05 \
+  --iters 300 --shard 256 --json "$SCRATCH/cold.json" --quiet
+
+# point queries at the daemon's current λ
+"$BIN" request --to "$ADDR" --op query --groups 0,7,19999 \
+  --json "$SCRATCH/query.json" --quiet
+
+python3 - "$SCRATCH/local.json" "$SCRATCH/served.json" "$SCRATCH/warm.json" \
+  "$SCRATCH/cold.json" "$SCRATCH/query.json" <<'EOF'
+import json, sys
+
+local = json.load(open(sys.argv[1]))["report"]
+served = json.load(open(sys.argv[2]))
+warm = json.load(open(sys.argv[3]))
+cold = json.load(open(sys.argv[4]))
+query = json.load(open(sys.argv[5]))
+
+# 1. the served solve is the local solve, bit for bit (wall_ms and the
+#    phase breakdown are diagnostics and stay server-side)
+assert not served["warm_used"], "first served solve cannot be warm"
+a, b = local, served["report"]
+for key in ["lambda", "primal_value", "dual_value", "n_selected",
+            "iterations", "converged", "consumption", "dropped_groups"]:
+    assert a[key] == b[key], f"report.{key} differs: {a[key]} vs {b[key]}"
+assert b["converged"], "smoke instance must converge within the round cap"
+
+# 2. the warm resolve used the daemon's λ and halved the cold rounds
+assert warm["warm_used"], "resolve must seed from the server's warm λ"
+assert not cold["warm_used"]
+w, c = warm["report"], cold["report"]
+assert w["converged"] and c["converged"], (w["converged"], c["converged"])
+assert w["iterations"] * 2 <= c["iterations"], \
+    f"warm resolve took {w['iterations']} rounds vs {c['iterations']} cold"
+
+# 3. point queries answer at the λ of the last converged solve (the cold
+#    scaled one), one allocation per requested group, in request order
+assert query["lambda"] == c["lambda"], "query λ is not the daemon's current λ"
+allocs = query["allocations"]
+assert [x["group"] for x in allocs] == [0, 7, 19999], allocs
+for x in allocs:
+    assert len(x["x"]) == 8 and len(x["consumption"]) == 8, x
+
+print(f"serve smoke OK: served {b['iterations']} iters bit-identical, "
+      f"warm resolve {w['iterations']} vs {c['iterations']} cold rounds, "
+      f"{len(allocs)} point queries")
+EOF

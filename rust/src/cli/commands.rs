@@ -23,6 +23,9 @@ SUBCOMMANDS
   resolve    re-solve with a warm-started λ (requires --warm); the daily
              changed-budget production path, e.g. with --budget-scale
   worker     serve a shard-store replica to a cluster leader (L4)
+  serve      long-lived solve-as-a-service daemon over a shard store:
+             warm-λ re-solves, point queries, progress streaming
+  request    one request against a running serve daemon
   lpbound    compute the LP-relaxation upper bound (Kelley cutting planes)
   inspect    print instance statistics and a sample group
   help       this text
@@ -85,6 +88,28 @@ WORKER FLAGS
                        address is announced on stdout)
   --store <dir>        shard-store replica to serve (required)
   --workers <int>      map threads to advertise (default as above)
+
+SERVE FLAGS (see docs/serve-api.md)
+  --store <dir>        shard store to host (required; mmapped once)
+  --listen <addr>      bind address (default 127.0.0.1:0; the actual
+                       address is announced on stdout)
+  --admission <int>    concurrent-solve bound (default 2); excess
+                       solves get a typed busy reply
+  --workers <int>      map threads per solve (default as above)
+
+REQUEST FLAGS
+  --to <addr>          serve daemon address (required)
+  --op <op>            info|solve|resolve|query|progress (default info);
+                       resolve = solve seeded from the server's warm λ
+  --algo scd|dd        solve/resolve algorithm (default scd)
+  --iters/--tol/--alpha/--shard   as under SOLVER FLAGS
+  --budget-scale <f>   scale the hosted budgets for this solve
+  --tag <int>          progress tag: on solve, register the round series
+                       under it; on --op progress, poll it
+  --after <int>        first progress event to return (default 0)
+  --groups <ids>       comma-separated group ids for --op query
+  --json <path|->      write the reply JSON to a file, or - for stdout
+  --quiet              suppress the human-readable summary
 
 LPBOUND FLAGS
   --lp-tol <f>         Kelley gap tolerance (default 1e-4)
@@ -212,6 +237,247 @@ pub fn cmd_worker(args: &Args) -> Result<()> {
     use std::io::Write as _;
     std::io::stdout().flush().ok();
     crate::cluster::worker::serve(listener, std::path::Path::new(&store), &pool)
+}
+
+/// `bskp serve`: bind, announce the actual address on stdout, then host
+/// the shard store as a solve-as-a-service daemon until killed
+/// (`docs/serve-api.md`).
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let store = args
+        .get_opt::<String>("store")?
+        .ok_or_else(|| Error::Usage("serve requires --store <dir> (a shard store)".into()))?;
+    let listen = args.get_str("listen", "127.0.0.1:0");
+    let opts = crate::serve::ServeOptions {
+        admission: args.get("admission", 2usize)?,
+        threads: args.get_opt::<usize>("workers")?.unwrap_or(0),
+    };
+    let listener = std::net::TcpListener::bind(&listen)
+        .map_err(|e| Error::Runtime(format!("cannot listen on {listen}: {e}")))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "pallas serve listening on {addr} (store {store}, admission {})",
+        opts.admission.max(1)
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    crate::serve::serve(listener, std::path::Path::new(&store), &opts)
+}
+
+/// `bskp request`: one request/reply against a running serve daemon.
+pub fn cmd_request(args: &Args) -> Result<()> {
+    use crate::serve::{ServeClient, SolveOutcome, SolveSpec};
+
+    let to = args
+        .get_opt::<String>("to")?
+        .ok_or_else(|| Error::Usage("request requires --to <addr> (a serve daemon)".into()))?;
+    let op = args.get_str("op", "info");
+    if !matches!(op.as_str(), "info" | "solve" | "resolve" | "query" | "progress") {
+        return Err(Error::Usage(format!(
+            "--op must be info|solve|resolve|query|progress, got {op}"
+        )));
+    }
+    let json_dest = args.get_opt::<String>("json")?;
+    let quiet = args.has("quiet") || json_dest.as_deref() == Some("-");
+    let mut client = ServeClient::connect_tcp(&to)?;
+
+    match op.as_str() {
+        "info" => {
+            let info = client.info()?;
+            if !quiet {
+                println!("serve daemon at {to}");
+                println!("  instance     : {}", info.fingerprint);
+                println!(
+                    "  warm λ       : {}",
+                    if info.warm_lambda.is_empty() { "none".to_string() } else { format!("{:?}", info.warm_lambda) }
+                );
+                println!("  solves       : {}/{} running", info.active, info.limit);
+            }
+            if let Some(dest) = &json_dest {
+                emit_json(
+                    quiet,
+                    dest,
+                    JsonValue::Object(vec![
+                        ("fingerprint".to_string(), JsonValue::Str(info.fingerprint.to_string())),
+                        (
+                            "warm_lambda".to_string(),
+                            JsonValue::Array(
+                                info.warm_lambda.iter().map(|&l| JsonValue::Num(l)).collect(),
+                            ),
+                        ),
+                        ("active".to_string(), JsonValue::Num(info.active as f64)),
+                        ("limit".to_string(), JsonValue::Num(info.limit as f64)),
+                    ]),
+                )?;
+            }
+            Ok(())
+        }
+        "solve" | "resolve" => {
+            let defaults = SolveSpec::default();
+            let spec = SolveSpec {
+                tag: args.get("tag", 0u64)?,
+                algorithm: match args.get_str("algo", "scd").as_str() {
+                    "scd" => 0,
+                    "dd" => 1,
+                    other => {
+                        return Err(Error::Usage(format!("--algo must be scd|dd, got {other}")))
+                    }
+                },
+                budget_scale: args.get("budget-scale", 1.0f64)?,
+                // a resolve without the server's warm λ is just a solve
+                warm: op == "resolve",
+                max_iters: args.get("iters", 60u64)?,
+                tol: args.get("tol", defaults.tol)?,
+                dd_alpha: args.get("alpha", defaults.dd_alpha)?,
+                shard_size: args.get("shard", 0u64)?,
+            };
+            let served = match client.solve(spec)? {
+                SolveOutcome::Done(s) => s,
+                SolveOutcome::Busy { active, limit } => {
+                    return Err(Error::Runtime(format!(
+                        "server busy: {active}/{limit} solves running — retry later"
+                    )))
+                }
+            };
+            let report = &served.report;
+            if !quiet {
+                println!(
+                    "served {op} from {to}{}",
+                    if served.warm_used { " (warm λ)" } else { "" }
+                );
+                println!(
+                    "  iterations      : {}{}",
+                    report.iterations,
+                    if report.converged { " (converged)" } else { " (iteration cap)" }
+                );
+                println!("  primal value    : {:.4}", report.primal_value);
+                println!("  dual value      : {:.4}", report.dual_value);
+                println!("  duality gap     : {:.4}", report.duality_gap());
+                println!("  selected items  : {}", report.n_selected);
+            }
+            if let Some(dest) = &json_dest {
+                emit_json(
+                    quiet,
+                    dest,
+                    JsonValue::Object(vec![
+                        ("warm_used".to_string(), JsonValue::Bool(served.warm_used)),
+                        ("report".to_string(), report_to_json(report)),
+                    ]),
+                )?;
+            }
+            Ok(())
+        }
+        "query" => {
+            let spec = args.get_opt::<String>("groups")?.ok_or_else(|| {
+                Error::Usage("request --op query needs --groups <id,id,...>".into())
+            })?;
+            let mut groups = Vec::new();
+            for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                groups.push(
+                    part.parse::<u64>()
+                        .map_err(|_| Error::Usage(format!("bad group id in --groups: {part}")))?,
+                );
+            }
+            let (lambda, allocs) = client.query(&groups)?;
+            if !quiet {
+                let primal: f64 = allocs.iter().map(|a| a.primal).sum();
+                let picked: usize =
+                    allocs.iter().map(|a| a.x.iter().filter(|&&b| b != 0).count()).sum();
+                println!("{} groups under λ={lambda:?}", allocs.len());
+                println!("  Σ primal     : {primal:.4}");
+                println!("  items picked : {picked}");
+            }
+            if let Some(dest) = &json_dest {
+                let allocs_json = allocs
+                    .iter()
+                    .map(|a| {
+                        JsonValue::Object(vec![
+                            ("group".to_string(), JsonValue::Num(a.group as f64)),
+                            (
+                                "x".to_string(),
+                                JsonValue::Array(
+                                    a.x.iter().map(|&b| JsonValue::Num(b as f64)).collect(),
+                                ),
+                            ),
+                            ("primal".to_string(), JsonValue::Num(a.primal)),
+                            ("dual_inner".to_string(), JsonValue::Num(a.dual_inner)),
+                            (
+                                "consumption".to_string(),
+                                JsonValue::Array(
+                                    a.consumption.iter().map(|&c| JsonValue::Num(c)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect();
+                emit_json(
+                    quiet,
+                    dest,
+                    JsonValue::Object(vec![
+                        (
+                            "lambda".to_string(),
+                            JsonValue::Array(lambda.iter().map(|&l| JsonValue::Num(l)).collect()),
+                        ),
+                        ("allocations".to_string(), JsonValue::Array(allocs_json)),
+                    ]),
+                )?;
+            }
+            Ok(())
+        }
+        "progress" => {
+            let tag = args.get_opt::<u64>("tag")?.ok_or_else(|| {
+                Error::Usage("request --op progress needs --tag <int>".into())
+            })?;
+            let after = args.get("after", 0u64)?;
+            let snap = client.progress(tag, after)?;
+            if !quiet {
+                println!(
+                    "tag {tag}: {} events{}",
+                    snap.total,
+                    if snap.done { " (done)" } else { "" }
+                );
+                for (i, ev) in snap.events.iter().enumerate() {
+                    println!(
+                        "  [{}] iter {} primal {:.4} dual {:.4} viol {:.3e} Δλ {:.3e}",
+                        after as usize + i,
+                        ev.iter,
+                        ev.primal,
+                        ev.dual,
+                        ev.max_violation_ratio,
+                        ev.lambda_change
+                    );
+                }
+            }
+            if let Some(dest) = &json_dest {
+                let events = snap
+                    .events
+                    .iter()
+                    .map(|ev| {
+                        JsonValue::Object(vec![
+                            ("iter".to_string(), JsonValue::Num(ev.iter as f64)),
+                            ("primal".to_string(), JsonValue::Num(ev.primal)),
+                            ("dual".to_string(), JsonValue::Num(ev.dual)),
+                            (
+                                "max_violation_ratio".to_string(),
+                                JsonValue::Num(ev.max_violation_ratio),
+                            ),
+                            ("lambda_change".to_string(), JsonValue::Num(ev.lambda_change)),
+                        ])
+                    })
+                    .collect();
+                emit_json(
+                    quiet,
+                    dest,
+                    JsonValue::Object(vec![
+                        ("total".to_string(), JsonValue::Num(snap.total as f64)),
+                        ("done".to_string(), JsonValue::Bool(snap.done)),
+                        ("events".to_string(), JsonValue::Array(events)),
+                    ]),
+                )?;
+            }
+            Ok(())
+        }
+        _ => unreachable!("op validated above"),
+    }
 }
 
 /// `bskp gen`: stream a synthetic instance into an on-disk shard store.

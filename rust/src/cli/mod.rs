@@ -6,6 +6,8 @@
 //! bskp solve   --from /data/store --checkpoint auto [...]
 //! bskp worker  --listen 0.0.0.0:7400 --store /data/store
 //! bskp solve   --from /data/store --cluster host1:7400,host2:7400 [...]
+//! bskp serve   --listen 0.0.0.0:7500 --store /data/store --admission 2
+//! bskp request --to host:7500 --op resolve --budget-scale 1.05 --json -
 //! bskp resolve --from /data/store --warm /data/store/lambda.ckpt \
 //!              --budget-scale 1.05 [...]
 //! bskp lpbound --n 10000 --m 10 --k 5 [...]
@@ -44,6 +46,8 @@ fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
         "solve" => commands::cmd_solve(&args),
         "resolve" => commands::cmd_resolve(&args),
         "worker" => commands::cmd_worker(&args),
+        "serve" => commands::cmd_serve(&args),
+        "request" => commands::cmd_request(&args),
         "lpbound" => commands::cmd_lpbound(&args),
         "inspect" => commands::cmd_inspect(&args),
         "help" | "" => {
@@ -104,6 +108,22 @@ mod tests {
     #[test]
     fn worker_requires_store() {
         assert_eq!(run(argv("bskp worker")), 2);
+    }
+
+    #[test]
+    fn serve_requires_store() {
+        assert_eq!(run(argv("bskp serve")), 2);
+    }
+
+    #[test]
+    fn request_requires_to() {
+        assert_eq!(run(argv("bskp request --op info")), 2);
+    }
+
+    #[test]
+    fn request_rejects_unknown_op() {
+        // op validation happens before the dial, so no daemon is needed
+        assert_eq!(run(argv("bskp request --to 127.0.0.1:1 --op frob --quiet")), 2);
     }
 
     #[test]

@@ -42,6 +42,37 @@ pub(crate) const MAX_PAYLOAD: u64 = 1 << 30;
 
 const HEADER_LEN: usize = 16;
 
+/// Frame kinds of the serve plane (`bskp serve`, [`crate::serve`]). The
+/// worker plane owns kinds 1–10 ([`super::protocol::Msg`]); serve kinds
+/// start at 32 so the two request vocabularies can never be confused —
+/// and because the kind seeds the frame checksum, a frame replayed across
+/// planes fails verification outright.
+pub(crate) mod serve_kind {
+    /// Client → server: describe the hosted instance and warm-λ state.
+    pub const INFO: u16 = 32;
+    /// Server → client: instance fingerprint, dims, warm-λ summary.
+    pub const INFO_REPLY: u16 = 33;
+    /// Client → server: run a solve / warm re-solve (budget scaling,
+    /// warm-λ reuse, progress tag).
+    pub const SOLVE: u16 = 34;
+    /// Server → client: the finished [`crate::solve::SolveReport`].
+    pub const SOLVE_REPLY: u16 = 35;
+    /// Client → server: batched point query — per-group allocations under
+    /// the server's current λ.
+    pub const QUERY: u16 = 36;
+    /// Server → client: the λ applied plus one allocation per group.
+    pub const QUERY_REPLY: u16 = 37;
+    /// Client → server: poll progress events for a tagged solve.
+    pub const PROGRESS: u16 = 38;
+    /// Server → client: progress events after the polled offset.
+    pub const PROGRESS_REPLY: u16 = 39;
+    /// Server → client: admission control refused the solve (typed
+    /// backpressure, never an unbounded queue).
+    pub const BUSY: u16 = 40;
+    /// Server → client: typed request failure (message text).
+    pub const ABORT: u16 = 41;
+}
+
 /// Write one frame; returns the total bytes put on the wire. Enforces the
 /// same payload cap the reader does, so an oversized message fails at the
 /// sender (where it can be reported) instead of poisoning the peer's

@@ -102,7 +102,7 @@ impl InstanceFingerprint {
         }
     }
 
-    fn encode(&self, e: &mut Enc) {
+    pub(crate) fn encode(&self, e: &mut Enc) {
         e.u64(self.n_groups)
             .u32(self.n_items)
             .u32(self.n_global)
@@ -111,7 +111,7 @@ impl InstanceFingerprint {
             .u64(self.sample_hash);
     }
 
-    fn decode(d: &mut Dec<'_>) -> Result<Self> {
+    pub(crate) fn decode(d: &mut Dec<'_>) -> Result<Self> {
         Ok(Self {
             n_groups: d.u64()?,
             n_items: d.u32()?,

@@ -875,6 +875,31 @@ impl SimNet {
         addr
     }
 
+    /// Register a bare endpoint — a dialable `sim://<index>` address plus
+    /// its accept side — without spawning anything on it. This is how a
+    /// non-worker server (the `bskp serve` daemon) is hosted on the
+    /// simulated network: the caller runs its own accept loop against the
+    /// returned [`NetListener`] on a thread it owns (and joins after
+    /// [`SimNet::shutdown`], which makes `accept_stream` return
+    /// `Ok(None)`), while clients dial the address through
+    /// [`SimNet::transport`]. The endpoint participates in the
+    /// [`FaultPlan`] by its index, exactly like a worker added with
+    /// [`SimNet::add_worker`].
+    pub fn add_endpoint(&self) -> (String, Box<dyn NetListener>) {
+        let ep = {
+            let mut st = self.hub.state.lock().unwrap();
+            let ep = st.eps.len();
+            st.eps.push(EpState {
+                addr: format!("sim://{ep}"),
+                alive: true,
+                pending: VecDeque::new(),
+                conns: 0,
+            });
+            ep
+        };
+        (format!("sim://{ep}"), Box::new(SimListener { hub: Arc::clone(&self.hub), ep }))
+    }
+
     /// The dialer to hand to
     /// [`RemoteCluster::connect_with`](super::RemoteCluster::connect_with)
     /// (or [`crate::solve::Solve::transport`]).

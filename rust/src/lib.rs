@@ -16,7 +16,10 @@
 //!   identical code also runs on a deterministic in-memory simulator
 //!   ([`cluster::SimNet`]) with seeded fault injection and a virtual
 //!   clock — every distributed failure is replayable from a seed
-//!   (`docs/simulation.md`).
+//!   (`docs/simulation.md`). The same frame layer hosts the [`serve`]
+//!   plane: `bskp serve` keeps a store mmapped and the last converged λ
+//!   warm, answering solve/resolve, point-query and progress requests
+//!   (`docs/serve-api.md`).
 //! * **L3 (this crate)** — problem model, MapReduce-style execution engine,
 //!   the paper's algorithms (Alg 1–5 plus the §5 speedups), LP-relaxation
 //!   bound, metrics and a CLI.
@@ -83,6 +86,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solve;
 pub mod solver;
 pub mod util;

@@ -5,7 +5,7 @@ mod json;
 mod timer;
 
 pub use json::JsonValue;
-pub use timer::{ScopedTimer, Stopwatch};
+pub use timer::{ClockStopwatch, ScopedTimer, Stopwatch};
 
 use crate::solve::SolvePlan;
 use crate::solver::config::ReduceMode;

@@ -1,6 +1,41 @@
 //! Timing helpers for the benches and iteration logs.
+//!
+//! Two families: the raw [`Instant`]-based [`Stopwatch`]/[`ScopedTimer`]
+//! for benches (where real wall time is the point), and the
+//! [`ClockStopwatch`] over the [`Clock`] seam — the one the solver
+//! drivers use, so a daemon-hosted solve under the deterministic
+//! simulator measures *virtual* time instead of smuggling real time into
+//! an otherwise virtual-time test.
 
+use crate::cluster::Clock;
 use std::time::Instant;
+
+/// A stopwatch over the [`Clock`] seam: identical to reading
+/// `Instant::now()` under [`crate::cluster::SystemClock`], virtual-time
+/// under [`crate::cluster::VirtualClock`].
+pub struct ClockStopwatch<'c> {
+    clock: &'c dyn Clock,
+    start_ns: u64,
+}
+
+impl<'c> ClockStopwatch<'c> {
+    /// Start timing now (per the given clock).
+    pub fn start(clock: &'c dyn Clock) -> Self {
+        Self { clock, start_ns: clock.now_ns() }
+    }
+
+    /// Milliseconds since start (0 if the clock went backwards, which a
+    /// virtual clock shared across sessions may appear to do from a
+    /// reader that cached an older origin).
+    pub fn elapsed_ms(&self) -> f64 {
+        self.clock.now_ns().saturating_sub(self.start_ns) as f64 / 1e6
+    }
+
+    /// Re-arm at the clock's current instant.
+    pub fn restart(&mut self) {
+        self.start_ns = self.clock.now_ns();
+    }
+}
 
 /// Accumulating stopwatch: start/stop many times, read the total.
 #[derive(Debug, Clone)]

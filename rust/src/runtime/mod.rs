@@ -24,4 +24,6 @@ pub mod scd_xla;
 pub use artifacts::{ArtifactEntry, ArtifactManifest};
 pub use client::{LoadedExecutable, Runtime};
 pub use evaluator::XlaDenseEvaluator;
-pub use scd_xla::{solve_scd_xla_sparse, solve_scd_xla_sparse_driven};
+pub use scd_xla::{
+    solve_scd_xla_sparse, solve_scd_xla_sparse_driven, solve_scd_xla_sparse_driven_clocked,
+};

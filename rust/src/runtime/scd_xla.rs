@@ -7,10 +7,12 @@
 //! the paper's production shape. Everything else: use
 //! [`crate::solver::scd::solve_scd`].
 
+use crate::cluster::{Clock, SystemClock};
 use crate::error::Result;
 use crate::instance::problem::{GroupBuf, GroupSource};
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
+use crate::metrics::ClockStopwatch;
 use crate::runtime::artifacts::ArtifactManifest;
 use crate::runtime::client::Runtime;
 use crate::runtime::evaluator::{marshal_sparse, sparse_artifact};
@@ -88,11 +90,39 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
     runtime: &Runtime,
     manifest: &ArtifactManifest,
     init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
+    solve_scd_xla_sparse_driven_clocked(
+        source,
+        config,
+        cluster,
+        runtime,
+        manifest,
+        init,
+        observer,
+        &SystemClock,
+    )
+}
+
+/// [`solve_scd_xla_sparse_driven`] with the phase timings read through an
+/// explicit [`Clock`]: under [`SystemClock`] the behavior is byte-for-byte
+/// the production one, under a virtual clock the reported
+/// `wall_ms`/phases are virtual-time — nothing in the driver touches
+/// `Instant` directly.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_scd_xla_sparse_driven_clocked<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    runtime: &Runtime,
+    manifest: &ArtifactManifest,
+    init: Option<&[f64]>,
     mut observer: Option<&mut dyn SolveObserver>,
+    clock: &dyn Clock,
 ) -> Result<SolveReport> {
     config.validate()?;
     source.validate()?;
-    let t0 = std::time::Instant::now();
+    let t0 = ClockStopwatch::start(clock);
     let dims = source.dims();
     let (m, kk) = (dims.n_items, dims.n_global);
     let budgets = source.budgets().to_vec();
@@ -125,7 +155,7 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
     let mut phases = PhaseTimings::default();
 
     for t in 0..config.max_iters {
-        let it0 = std::time::Instant::now();
+        let it0 = ClockStopwatch::start(clock);
         let lam32: Vec<f32> = lambda.iter().map(|&l| l as f32).collect();
 
         let (round, mut thresholds) = cluster.map_combine(
@@ -173,16 +203,16 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
                 (agg, th)
             },
         );
-        let map_ms = it0.elapsed().as_secs_f64() * 1e3;
+        let map_ms = it0.elapsed_ms();
         phases.map_ms += map_ms;
-        let r0 = std::time::Instant::now();
+        let r0 = ClockStopwatch::start(clock);
         let consumption = round.consumption_values();
 
         let mut new_lambda = lambda.clone();
         for k in 0..kk {
             new_lambda[k] = thresholds.reduce(k, budgets[k]);
         }
-        let reduce_ms = r0.elapsed().as_secs_f64() * 1e3;
+        let reduce_ms = r0.elapsed_ms();
         phases.reduce_ms += reduce_ms;
 
         iterations = t + 1;
@@ -193,7 +223,7 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
             dual: round.dual_value(&lambda, &budgets),
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
-            wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            wall_ms: it0.elapsed_ms(),
             map_ms,
             reduce_ms,
             skip_rate: 0.0,
@@ -237,7 +267,7 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
     // backend-independent, f64-exact, and consistent with report.lambda
     let eval = crate::solver::rounds::RustEvaluator::new(source);
     let agg = if converged || stopped {
-        let e0 = std::time::Instant::now();
+        let e0 = ClockStopwatch::start(clock);
         let agg = crate::solver::rounds::evaluation_round(
             &eval,
             Shards::plan(dims.n_groups, cluster.workers(), source.preferred_shard_size(), None),
@@ -245,7 +275,7 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
             &lambda,
             cluster,
         );
-        phases.final_eval_ms = e0.elapsed().as_secs_f64() * 1e3;
+        phases.final_eval_ms = e0.elapsed_ms();
         agg
     } else {
         last_agg
@@ -267,11 +297,11 @@ pub fn solve_scd_xla_sparse_driven<S: GroupSource + ?Sized>(
     };
     if config.postprocess && !report.is_feasible() {
         let exec = crate::cluster::Exec::Local(cluster);
-        let p0 = std::time::Instant::now();
+        let p0 = ClockStopwatch::start(clock);
         postprocess::enforce_feasibility(source, &mut report, &exec)?;
-        report.phases.postprocess_ms = p0.elapsed().as_secs_f64() * 1e3;
+        report.phases.postprocess_ms = p0.elapsed_ms();
     }
-    report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    report.wall_ms = t0.elapsed_ms();
     if let Some(obs) = observer.as_mut() {
         obs.on_complete(&report);
     }

@@ -1,0 +1,151 @@
+//! Client side of the serve plane: a thin, blocking request/reply
+//! wrapper over one connection to a `bskp serve` daemon.
+//!
+//! One [`ServeClient`] owns one stream; requests are sequential on it
+//! (the protocol is strict request → reply). Concurrency is a matter of
+//! opening more clients — which is exactly how the admission-control
+//! tests provoke a typed `Busy`. An `Abort` reply surfaces as
+//! [`crate::error::Error::Runtime`] prefixed with `server:`; a `Busy`
+//! reply to a solve is *not* an error — it is the typed
+//! [`SolveOutcome::Busy`] variant, so callers can back off and retry.
+
+use crate::cluster::transport::{NetStream, Transport};
+use crate::cluster::{InstanceFingerprint, TcpTransport};
+use crate::error::{Error, Result};
+use crate::serve::protocol::{recv_serve, send_serve, ProgressEvent, ServeMsg, SolveSpec};
+use crate::solver::pointquery::GroupAllocation;
+use crate::solver::stats::SolveReport;
+use std::time::Duration;
+
+/// What the daemon said about itself ([`ServeClient::info`]).
+#[derive(Debug, Clone)]
+pub struct ServeInfo {
+    /// Fingerprint of the hosted instance.
+    pub fingerprint: InstanceFingerprint,
+    /// The server's current warm λ (empty = no converged solve yet).
+    pub warm_lambda: Vec<f64>,
+    /// Solves running right now.
+    pub active: u32,
+    /// The admission bound.
+    pub limit: u32,
+}
+
+/// A completed served solve.
+#[derive(Debug, Clone)]
+pub struct ServedSolve {
+    /// Whether the server's warm λ seeded it.
+    pub warm_used: bool,
+    /// The report, bit-identical to a local solve's (history and phase
+    /// timings stay server-side).
+    pub report: SolveReport,
+}
+
+/// Reply to a solve request: done, or typed admission backpressure.
+#[derive(Debug, Clone)]
+pub enum SolveOutcome {
+    /// The solve ran to completion.
+    Done(ServedSolve),
+    /// Admission control refused it; retry after a running solve ends.
+    Busy {
+        /// Solves running at refusal time.
+        active: u32,
+        /// The admission bound.
+        limit: u32,
+    },
+}
+
+/// A progress poll's answer ([`ServeClient::progress`]).
+#[derive(Debug, Clone)]
+pub struct ProgressSnapshot {
+    /// Events recorded so far for the tag.
+    pub total: u64,
+    /// Whether the tagged solve has finished (either way).
+    pub done: bool,
+    /// The events from the polled offset on.
+    pub events: Vec<ProgressEvent>,
+}
+
+/// One blocking connection to a serve daemon.
+pub struct ServeClient {
+    stream: Box<dyn NetStream>,
+}
+
+impl ServeClient {
+    /// Dial `addr` through `transport` (production: [`TcpTransport`];
+    /// tests: the simulator's). `timeout` bounds the dial and every
+    /// subsequent read — pass the longest a solve may take, or `None`
+    /// reads forever.
+    pub fn connect(
+        transport: &dyn Transport,
+        addr: &str,
+        dial_timeout: Duration,
+        read_timeout: Option<Duration>,
+    ) -> Result<Self> {
+        let mut stream = transport.dial(addr, dial_timeout)?;
+        stream.set_read_timeout(read_timeout)?;
+        Ok(Self { stream })
+    }
+
+    /// [`ServeClient::connect`] over production TCP with a 5 s dial bound
+    /// and no read bound (solves may run long).
+    pub fn connect_tcp(addr: &str) -> Result<Self> {
+        Self::connect(&TcpTransport, addr, Duration::from_secs(5), None)
+    }
+
+    fn roundtrip(&mut self, req: &ServeMsg) -> Result<ServeMsg> {
+        send_serve(&mut self.stream, req)?;
+        let (reply, _) = recv_serve(&mut self.stream)?;
+        if let ServeMsg::Abort { message } = reply {
+            return Err(Error::Runtime(format!("server: {message}")));
+        }
+        Ok(reply)
+    }
+
+    fn unexpected(&self, got: &ServeMsg, wanted: &str) -> Error {
+        Error::Runtime(format!(
+            "server replied {} where a {wanted} was expected",
+            got.name()
+        ))
+    }
+
+    /// Ask the daemon what it hosts and how busy it is.
+    pub fn info(&mut self) -> Result<ServeInfo> {
+        match self.roundtrip(&ServeMsg::Info)? {
+            ServeMsg::InfoReply { fingerprint, warm_lambda, active, limit } => {
+                Ok(ServeInfo { fingerprint, warm_lambda, active, limit })
+            }
+            other => Err(self.unexpected(&other, "info-reply")),
+        }
+    }
+
+    /// Run a solve (blocks until the report, a `Busy`, or an error).
+    pub fn solve(&mut self, spec: SolveSpec) -> Result<SolveOutcome> {
+        match self.roundtrip(&ServeMsg::Solve { spec })? {
+            ServeMsg::SolveReply { warm_used, report } => {
+                Ok(SolveOutcome::Done(ServedSolve { warm_used, report }))
+            }
+            ServeMsg::Busy { active, limit } => Ok(SolveOutcome::Busy { active, limit }),
+            other => Err(self.unexpected(&other, "solve-reply")),
+        }
+    }
+
+    /// Batched point query: allocations of `groups` at the server's
+    /// current λ. Returns `(λ, allocations)`, in request order.
+    pub fn query(&mut self, groups: &[u64]) -> Result<(Vec<f64>, Vec<GroupAllocation>)> {
+        match self.roundtrip(&ServeMsg::Query { groups: groups.to_vec() })? {
+            ServeMsg::QueryReply { lambda, allocations } => Ok((lambda, allocations)),
+            other => Err(self.unexpected(&other, "query-reply")),
+        }
+    }
+
+    /// Poll progress events of the solve tagged `tag`, starting at event
+    /// index `after`.
+    pub fn progress(&mut self, tag: u64, after: u64) -> Result<ProgressSnapshot> {
+        match self.roundtrip(&ServeMsg::Progress { tag, after })? {
+            ServeMsg::ProgressReply { total, done, events } => {
+                Ok(ProgressSnapshot { total, done, events })
+            }
+            other => Err(self.unexpected(&other, "progress-reply")),
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! `bskp serve` — the long-lived solve-as-a-service daemon.
+//!
+//! The paper's production loop re-solves the *same* instance daily as
+//! budgets drift a few percent (§6: warm-started re-solves converge in a
+//! fraction of the cold rounds). This module hosts that loop as a
+//! daemon: mmap the shard store **once**, keep the last converged λ per
+//! instance fingerprint, and answer three request kinds over the cluster
+//! frame layer (kinds 32–41; see [`protocol`] and `docs/serve-api.md`):
+//!
+//! * **Solve / warm re-solve** — a [`protocol::SolveSpec`] names the
+//!   algorithm, a uniform budget scale (served through
+//!   [`crate::solve::ScaledBudgets`], which keeps the fingerprint —
+//!   budgets are not part of instance identity) and whether to seed from
+//!   the server's warm λ ([`crate::solve::WarmStart`]).
+//! * **Point queries** — per-group allocations under the current λ, one
+//!   greedy pass per group through the PR-4 row kernels
+//!   ([`crate::solver::pointquery`]); batched, bounded by
+//!   [`protocol::MAX_QUERY_BATCH`].
+//! * **Progress streaming** — a client-tagged solve publishes per-round
+//!   events into a registry; any connection can poll them while the
+//!   solve runs.
+//!
+//! **Admission control**: at most `ServeOptions::admission` solves run
+//! concurrently; an excess solve gets a typed `Busy` reply immediately —
+//! never an unbounded queue, never a dropped connection. Info, queries
+//! and progress polls are cheap and always served.
+//!
+//! The loop is generic over the PR-5 transport seam: production is
+//! byte-for-byte [`crate::cluster::TcpTransport`]/`SystemClock`
+//! ([`serve`]/[`serve_source`]); the chaos suite drives the *same*
+//! session code in-process over [`crate::cluster::SimNet`] with virtual
+//! time ([`serve_net`]), which is how drops, corruption, client crashes
+//! and stalls are replayed from a seed.
+
+pub mod client;
+pub mod protocol;
+
+pub use client::{ProgressSnapshot, ServeClient, ServeInfo, ServedSolve, SolveOutcome};
+pub use protocol::{ProgressEvent, SolveSpec, MAX_QUERY_BATCH};
+
+use crate::cluster::transport::{NetListener, NetStream, TcpNetListener};
+use crate::cluster::{Clock, InstanceFingerprint};
+use crate::coordinator::Algorithm;
+use crate::error::{Error, Result};
+use crate::instance::problem::GroupSource;
+use crate::instance::store::MmapProblem;
+use crate::mapreduce::Cluster;
+use crate::solve::{ScaledBudgets, Solve, WarmStart};
+use crate::solver::config::SolverConfig;
+use crate::solver::pointquery::allocations_at;
+use crate::solver::stats::{ObserverControl, RoundEvent, SolveObserver, SolveReport};
+use protocol::{recv_serve, send_serve, ProgressEvent as Ev, ServeMsg, SolveSpec as Spec};
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Daemon configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Concurrent-solve bound; the `admission + 1`-th concurrent solve
+    /// gets a typed `Busy` reply. Clamped to ≥ 1.
+    pub admission: usize,
+    /// Map-phase thread-pool size; 0 = [`Cluster::configured`] (all
+    /// hardware threads unless `PALLAS_WORKERS` says otherwise).
+    pub threads: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { admission: 2, threads: 0 }
+    }
+}
+
+/// Idle bound on one client session: a client that vanished without
+/// FIN/RST must not hold a session thread forever. Override with
+/// `PALLAS_SERVE_IDLE_TIMEOUT_MS`.
+const DEFAULT_IDLE_TIMEOUT_MS: u64 = 600_000;
+
+/// Open the store under `dir` and serve clients on `listener` until the
+/// listener fails (TCP never retires cleanly; the simulator does).
+pub fn serve(listener: TcpListener, dir: &Path, opts: &ServeOptions) -> Result<()> {
+    let problem = MmapProblem::open(dir)?;
+    serve_source(listener, &problem, opts)
+}
+
+/// [`serve`] over an already-open source — what tests use to host an
+/// instance they just wrote (or generated) without a store round-trip.
+pub fn serve_source<S: GroupSource>(
+    listener: TcpListener,
+    source: &S,
+    opts: &ServeOptions,
+) -> Result<()> {
+    serve_net(&TcpNetListener::new(listener), source, opts)
+}
+
+/// The transport-generic daemon loop: serve client sessions concurrently
+/// (one scoped thread each — concurrency is what admission control
+/// bounds, so it must exist) until the listener is retired
+/// (`accept_stream() == Ok(None)`). Every session thread is joined
+/// before this returns, so a simulator shutdown leaves nothing running.
+pub fn serve_net(
+    listener: &dyn NetListener,
+    source: &dyn GroupSource,
+    opts: &ServeOptions,
+) -> Result<()> {
+    source.validate()?;
+    let fingerprint = InstanceFingerprint::of(source);
+    let pool =
+        if opts.threads == 0 { Cluster::configured() } else { Cluster::new(opts.threads) };
+    let clock = listener.clock();
+    let state = ServeState::new(opts.admission.max(1));
+    std::thread::scope(|scope| {
+        loop {
+            match listener.accept_stream() {
+                Ok(Some(stream)) => {
+                    // a failed session (client vanished, corrupt frame)
+                    // ends that connection, never the daemon
+                    let (state, fp, pool) = (&state, &fingerprint, &pool);
+                    let clock = Arc::clone(&clock);
+                    scope.spawn(move || {
+                        let _ = session(stream, source, fp, pool, state, clock);
+                    });
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    // persistent accept failure must not become a
+                    // 100%-CPU spin; breathe, then retry
+                    clock.sleep(std::time::Duration::from_millis(100));
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Progress registry entry for one tagged solve.
+#[derive(Default)]
+struct ProgressState {
+    events: Vec<Ev>,
+    done: bool,
+}
+
+/// Shared daemon state: the admission counter, the warm-λ store keyed by
+/// instance fingerprint, and the progress registry.
+struct ServeState {
+    limit: usize,
+    active: Mutex<usize>,
+    /// Tiny association list, not a map: the daemon hosts one store, so
+    /// this holds the hosted fingerprint plus its budget-scaled aliases
+    /// (which share it — budgets are excluded from identity).
+    warm: Mutex<Vec<(InstanceFingerprint, Vec<f64>)>>,
+    progress: Mutex<HashMap<u64, ProgressState>>,
+}
+
+impl ServeState {
+    fn new(limit: usize) -> Self {
+        Self {
+            limit,
+            active: Mutex::new(0),
+            warm: Mutex::new(Vec::new()),
+            progress: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Admit a solve, or report the live count for a `Busy` reply.
+    fn try_admit(&self) -> std::result::Result<AdmitGuard<'_>, usize> {
+        let mut a = self.active.lock().unwrap();
+        if *a < self.limit {
+            *a += 1;
+            Ok(AdmitGuard { state: self })
+        } else {
+            Err(*a)
+        }
+    }
+
+    fn active(&self) -> usize {
+        *self.active.lock().unwrap()
+    }
+
+    fn warm_for(&self, fp: &InstanceFingerprint) -> Option<Vec<f64>> {
+        self.warm.lock().unwrap().iter().find(|(f, _)| f == fp).map(|(_, l)| l.clone())
+    }
+
+    fn store_warm(&self, fp: &InstanceFingerprint, lambda: Vec<f64>) {
+        let mut w = self.warm.lock().unwrap();
+        match w.iter_mut().find(|(f, _)| f == fp) {
+            Some((_, l)) => *l = lambda,
+            None => w.push((fp.clone(), lambda)),
+        }
+    }
+
+    fn mark_done(&self, tag: u64) {
+        if tag != 0 {
+            if let Some(p) = self.progress.lock().unwrap().get_mut(&tag) {
+                p.done = true;
+            }
+        }
+    }
+}
+
+/// RAII admission slot: released even when a solve errors or panics.
+struct AdmitGuard<'a> {
+    state: &'a ServeState,
+}
+
+impl Drop for AdmitGuard<'_> {
+    fn drop(&mut self) {
+        *self.state.active.lock().unwrap() -= 1;
+    }
+}
+
+/// Feeds a tagged solve's rounds into the progress registry.
+struct RegistryObserver<'a> {
+    state: &'a ServeState,
+    tag: u64,
+}
+
+impl SolveObserver for RegistryObserver<'_> {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        if self.tag != 0 {
+            if let Some(p) = self.state.progress.lock().unwrap().get_mut(&self.tag) {
+                p.events.push(Ev {
+                    iter: event.iter as u64,
+                    primal: event.primal,
+                    dual: event.dual,
+                    max_violation_ratio: event.max_violation_ratio,
+                    lambda_change: event.lambda_change,
+                });
+            }
+        }
+        ObserverControl::Continue
+    }
+
+    fn on_complete(&mut self, _report: &SolveReport) {
+        self.state.mark_done(self.tag);
+    }
+}
+
+/// One client session: loop over request frames until the client hangs
+/// up, the idle bound fires, or a write fails. Unlike a worker session,
+/// an `Abort` reply is a *per-request* error — the session stays open so
+/// the client can correct and retry (e.g. query again after a solve).
+fn session(
+    mut stream: Box<dyn NetStream>,
+    source: &dyn GroupSource,
+    fp: &InstanceFingerprint,
+    pool: &Cluster,
+    state: &ServeState,
+    clock: Arc<dyn Clock>,
+) -> Result<()> {
+    let idle = crate::cluster::env_ms("PALLAS_SERVE_IDLE_TIMEOUT_MS", DEFAULT_IDLE_TIMEOUT_MS);
+    stream.set_read_timeout(Some(idle))?;
+    loop {
+        // a dead/corrupt/idle client ends the session, never the daemon
+        let msg = match recv_serve(&mut stream) {
+            Ok((msg, _)) => msg,
+            Err(_) => return Ok(()),
+        };
+        let reply = match msg {
+            ServeMsg::Info => ServeMsg::InfoReply {
+                fingerprint: fp.clone(),
+                warm_lambda: state.warm_for(fp).unwrap_or_default(),
+                active: state.active() as u32,
+                limit: state.limit as u32,
+            },
+            ServeMsg::Solve { spec } => handle_solve(&spec, source, fp, pool, state, &clock),
+            ServeMsg::Query { groups } => handle_query(&groups, source, fp, state),
+            ServeMsg::Progress { tag, after } => handle_progress(tag, after, state),
+            other => ServeMsg::Abort {
+                message: format!("unexpected {} frame from a client", other.name()),
+            },
+        };
+        send_serve(&mut stream, &reply)?;
+    }
+}
+
+fn handle_solve(
+    spec: &Spec,
+    source: &dyn GroupSource,
+    fp: &InstanceFingerprint,
+    pool: &Cluster,
+    state: &ServeState,
+    clock: &Arc<dyn Clock>,
+) -> ServeMsg {
+    let _guard = match state.try_admit() {
+        Ok(g) => g,
+        Err(active) => {
+            return ServeMsg::Busy { active: active as u32, limit: state.limit as u32 }
+        }
+    };
+    // the tag goes live before any solve work so a concurrent poller can
+    // observe admission deterministically
+    if spec.tag != 0 {
+        state.progress.lock().unwrap().insert(spec.tag, ProgressState::default());
+    }
+    let out = run_solve(spec, source, fp, pool, state, clock);
+    state.mark_done(spec.tag);
+    match out {
+        Ok((warm_used, report)) => ServeMsg::SolveReply { warm_used, report },
+        Err(e) => ServeMsg::Abort { message: e.to_string() },
+    }
+}
+
+fn run_solve(
+    spec: &Spec,
+    source: &dyn GroupSource,
+    fp: &InstanceFingerprint,
+    pool: &Cluster,
+    state: &ServeState,
+    clock: &Arc<dyn Clock>,
+) -> Result<(bool, SolveReport)> {
+    let algorithm = match spec.algorithm {
+        0 => Algorithm::Scd,
+        1 => Algorithm::Dd,
+        a => {
+            return Err(Error::InvalidConfig(format!(
+                "solve spec algorithm {a} (0 = scd, 1 = dd)"
+            )))
+        }
+    };
+    let config = SolverConfig {
+        max_iters: spec.max_iters as usize,
+        tol: spec.tol,
+        dd_alpha: spec.dd_alpha,
+        shard_size: (spec.shard_size != 0).then_some(spec.shard_size as usize),
+        track_history: false,
+        ..Default::default()
+    };
+    // a budget-scaled view keeps the fingerprint (budgets are excluded
+    // from identity), so its warm λ and the store's are the same slot
+    let scaled;
+    let src: &dyn GroupSource = if spec.budget_scale != 1.0 {
+        scaled = ScaledBudgets::uniform(source, spec.budget_scale)?;
+        &scaled
+    } else {
+        source
+    };
+    let warm = if spec.warm { state.warm_for(fp) } else { None };
+    let warm_used = warm.is_some();
+    let mut session = Solve::on(src)
+        .cluster(pool.clone())
+        .config(config)
+        .algorithm(algorithm)
+        .clock(Arc::clone(clock));
+    if let Some(lambda) = warm {
+        session = session.warm(WarmStart { lambda, provenance: "server warm λ".into() });
+    }
+    let mut observer = RegistryObserver { state, tag: spec.tag };
+    let report = session.run_observed(&mut observer)?;
+    // only a *converged* λ becomes the warm seed — a cancelled or
+    // iteration-capped λ would poison every later warm re-solve
+    if report.converged {
+        state.store_warm(fp, report.lambda.clone());
+    }
+    Ok((warm_used, report))
+}
+
+fn handle_query(
+    groups: &[u64],
+    source: &dyn GroupSource,
+    fp: &InstanceFingerprint,
+    state: &ServeState,
+) -> ServeMsg {
+    if groups.len() > protocol::MAX_QUERY_BATCH {
+        return ServeMsg::Abort {
+            message: format!(
+                "point-query batch of {} groups exceeds the {} cap — split the batch",
+                groups.len(),
+                protocol::MAX_QUERY_BATCH
+            ),
+        };
+    }
+    let Some(lambda) = state.warm_for(fp) else {
+        return ServeMsg::Abort {
+            message: "no converged λ yet — run a solve before point queries".into(),
+        };
+    };
+    match allocations_at(source, &lambda, groups) {
+        Ok(allocations) => ServeMsg::QueryReply { lambda, allocations },
+        Err(e) => ServeMsg::Abort { message: e.to_string() },
+    }
+}
+
+fn handle_progress(tag: u64, after: u64, state: &ServeState) -> ServeMsg {
+    let reg = state.progress.lock().unwrap();
+    match reg.get(&tag) {
+        Some(p) => {
+            let after = (after as usize).min(p.events.len());
+            ServeMsg::ProgressReply {
+                total: p.events.len() as u64,
+                done: p.done,
+                events: p.events[after..].to_vec(),
+            }
+        }
+        // a tag the daemon has not seen yet: empty, not-done — pollers
+        // racing the solve's admission just poll again
+        None => ServeMsg::ProgressReply { total: 0, done: false, events: Vec::new() },
+    }
+}

@@ -1,0 +1,473 @@
+//! Message vocabulary of the serve plane (`bskp serve`).
+//!
+//! Ten message kinds ride the same frame layer as the worker protocol
+//! ([`crate::cluster`]'s frames: magic, version, kind, length, payload,
+//! kind-seeded XXH64 trailer) under kinds 32–41
+//! (`frames::serve_kind`) — disjoint from the worker plane's 1–10, and
+//! since the kind seeds the checksum, a frame replayed across planes
+//! fails verification outright. `docs/serve-api.md` is the normative
+//! spec; `docs/cluster-protocol.md` §serve cross-references it.
+//!
+//! Requests are *self-contained* (a [`SolveSpec`] carries every solver
+//! parameter the server honors) and every request gets exactly one reply
+//! frame: the matching `*Reply`, `Busy` (typed admission backpressure on
+//! solves), or `Abort` (typed failure). Floats travel as raw IEEE-754
+//! bits, so a served [`SolveReport`] is bit-identical to the one a local
+//! solve returns — the differential tests assert exactly that.
+
+use crate::cluster::frames::{self, serve_kind as k};
+use crate::cluster::wire::{corrupt, Dec, Enc};
+use crate::cluster::InstanceFingerprint;
+use crate::error::Result;
+use crate::solver::pointquery::GroupAllocation;
+use crate::solver::stats::SolveReport;
+use std::io::{Read, Write};
+
+/// Largest point-query batch one `Query` frame may carry. Far above any
+/// sensible interactive batch; bounds the per-request allocation the same
+/// way the frame cap bounds payload bytes.
+pub const MAX_QUERY_BATCH: usize = 4096;
+
+/// Everything the server honors about one solve request. Budgets scale
+/// against the hosted store ([`crate::solve::ScaledBudgets`]); `warm`
+/// asks for the server's last converged λ as the starting point
+/// ([`crate::solve::WarmStart`]) — silently a cold start when the server
+/// has none yet (the reply says which happened).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveSpec {
+    /// Client-chosen progress tag: `Progress { tag }` polls this solve's
+    /// per-round events while it runs. 0 = no progress wanted.
+    pub tag: u64,
+    /// 0 = SCD (Algorithm 4, the default), 1 = DD (Algorithm 2).
+    pub algorithm: u8,
+    /// Uniform budget scale (1.0 = the store's budgets as written).
+    pub budget_scale: f64,
+    /// Reuse the server's warm λ for this fingerprint, if any.
+    pub warm: bool,
+    /// `SolverConfig::max_iters`.
+    pub max_iters: u64,
+    /// `SolverConfig::tol`.
+    pub tol: f64,
+    /// `SolverConfig::dd_alpha` (DD only).
+    pub dd_alpha: f64,
+    /// `SolverConfig::shard_size` override; 0 = the planner's choice.
+    pub shard_size: u64,
+}
+
+impl Default for SolveSpec {
+    fn default() -> Self {
+        let cfg = crate::solver::config::SolverConfig::default();
+        Self {
+            tag: 0,
+            algorithm: 0,
+            budget_scale: 1.0,
+            warm: true,
+            max_iters: cfg.max_iters as u64,
+            tol: cfg.tol,
+            dd_alpha: cfg.dd_alpha,
+            shard_size: 0,
+        }
+    }
+}
+
+impl SolveSpec {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.tag)
+            .u8(self.algorithm)
+            .f64(self.budget_scale)
+            .u8(self.warm as u8)
+            .u64(self.max_iters)
+            .f64(self.tol)
+            .f64(self.dd_alpha)
+            .u64(self.shard_size);
+    }
+
+    fn decode(d: &mut Dec<'_>) -> Result<Self> {
+        Ok(Self {
+            tag: d.u64()?,
+            algorithm: d.u8()?,
+            budget_scale: d.f64()?,
+            warm: d.u8()? != 0,
+            max_iters: d.u64()?,
+            tol: d.f64()?,
+            dd_alpha: d.f64()?,
+            shard_size: d.u64()?,
+        })
+    }
+}
+
+/// One per-round progress sample, as streamed to `Progress` pollers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgressEvent {
+    /// Iteration index (0-based).
+    pub iter: u64,
+    /// Primal objective at the round's starting λ.
+    pub primal: f64,
+    /// Dual objective at the round's starting λ.
+    pub dual: f64,
+    /// Max violation ratio at the round's starting λ.
+    pub max_violation_ratio: f64,
+    /// Convergence residual of the round's λ update.
+    pub lambda_change: f64,
+}
+
+impl ProgressEvent {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.iter)
+            .f64(self.primal)
+            .f64(self.dual)
+            .f64(self.max_violation_ratio)
+            .f64(self.lambda_change);
+    }
+
+    fn decode(d: &mut Dec<'_>) -> Result<Self> {
+        Ok(Self {
+            iter: d.u64()?,
+            primal: d.f64()?,
+            dual: d.f64()?,
+            max_violation_ratio: d.f64()?,
+            lambda_change: d.f64()?,
+        })
+    }
+}
+
+fn encode_report(r: &SolveReport, e: &mut Enc) {
+    e.f64s(&r.lambda);
+    e.u64(r.iterations as u64).u8(r.converged as u8);
+    e.f64(r.primal_value).f64(r.dual_value);
+    e.f64s(&r.consumption).f64s(&r.budgets);
+    e.u64(r.n_selected).u64(r.dropped_groups).f64(r.wall_ms);
+}
+
+/// History and the phase breakdown stay server-side: they are observer /
+/// diagnostics surface, not part of the solution contract the
+/// determinism tests compare.
+fn decode_report(d: &mut Dec<'_>) -> Result<SolveReport> {
+    Ok(SolveReport {
+        lambda: d.f64s()?,
+        iterations: d.u64()? as usize,
+        converged: d.u8()? != 0,
+        primal_value: d.f64()?,
+        dual_value: d.f64()?,
+        consumption: d.f64s()?,
+        budgets: d.f64s()?,
+        n_selected: d.u64()?,
+        dropped_groups: d.u64()?,
+        wall_ms: d.f64()?,
+        history: Vec::new(),
+        phases: Default::default(),
+    })
+}
+
+fn encode_alloc(a: &GroupAllocation, e: &mut Enc) {
+    e.u64(a.group);
+    e.u64(a.x.len() as u64);
+    for &x in &a.x {
+        e.u8(x);
+    }
+    e.f64(a.primal).f64(a.dual_inner).f64s(&a.consumption);
+}
+
+fn decode_alloc(d: &mut Dec<'_>) -> Result<GroupAllocation> {
+    let group = d.u64()?;
+    let m = d.len()?;
+    let x = (0..m).map(|_| d.u8()).collect::<Result<Vec<u8>>>()?;
+    Ok(GroupAllocation {
+        group,
+        x,
+        primal: d.f64()?,
+        dual_inner: d.f64()?,
+        consumption: d.f64s()?,
+    })
+}
+
+/// A serve-plane message (request or reply). See the module docs for the
+/// one-reply-per-request discipline.
+#[derive(Debug, Clone)]
+pub(crate) enum ServeMsg {
+    /// What instance does this daemon host, and in what state?
+    Info,
+    /// The hosted instance plus serving state.
+    InfoReply {
+        fingerprint: InstanceFingerprint,
+        /// The server's current warm λ for the hosted fingerprint
+        /// (empty = no converged solve yet).
+        warm_lambda: Vec<f64>,
+        /// Admission: solves currently running / the concurrent bound.
+        active: u32,
+        limit: u32,
+    },
+    /// Run a solve (cold, warm, budget-scaled — see [`SolveSpec`]).
+    Solve { spec: SolveSpec },
+    /// The finished solve.
+    SolveReply {
+        /// Whether the server's warm λ actually seeded this solve.
+        warm_used: bool,
+        report: SolveReport,
+    },
+    /// Batched point query: allocations of these groups at the current λ.
+    Query { groups: Vec<u64> },
+    /// The λ the query was answered at, plus one allocation per queried
+    /// group (in request order).
+    QueryReply { lambda: Vec<f64>, allocations: Vec<GroupAllocation> },
+    /// Poll progress events of the solve tagged `tag`, starting at event
+    /// index `after`.
+    Progress { tag: u64, after: u64 },
+    /// Snapshot: total events so far, whether the solve finished, and the
+    /// events from `after` on.
+    ProgressReply { total: u64, done: bool, events: Vec<ProgressEvent> },
+    /// Admission control refused the solve; retry after a running solve
+    /// finishes.
+    Busy { active: u32, limit: u32 },
+    /// Typed request failure.
+    Abort { message: String },
+}
+
+impl ServeMsg {
+    pub(crate) fn kind(&self) -> u16 {
+        match self {
+            ServeMsg::Info => k::INFO,
+            ServeMsg::InfoReply { .. } => k::INFO_REPLY,
+            ServeMsg::Solve { .. } => k::SOLVE,
+            ServeMsg::SolveReply { .. } => k::SOLVE_REPLY,
+            ServeMsg::Query { .. } => k::QUERY,
+            ServeMsg::QueryReply { .. } => k::QUERY_REPLY,
+            ServeMsg::Progress { .. } => k::PROGRESS,
+            ServeMsg::ProgressReply { .. } => k::PROGRESS_REPLY,
+            ServeMsg::Busy { .. } => k::BUSY,
+            ServeMsg::Abort { .. } => k::ABORT,
+        }
+    }
+
+    /// Human name, for diagnostics.
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            ServeMsg::Info => "info",
+            ServeMsg::InfoReply { .. } => "info-reply",
+            ServeMsg::Solve { .. } => "solve",
+            ServeMsg::SolveReply { .. } => "solve-reply",
+            ServeMsg::Query { .. } => "query",
+            ServeMsg::QueryReply { .. } => "query-reply",
+            ServeMsg::Progress { .. } => "progress",
+            ServeMsg::ProgressReply { .. } => "progress-reply",
+            ServeMsg::Busy { .. } => "busy",
+            ServeMsg::Abort { .. } => "abort",
+        }
+    }
+
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            ServeMsg::Info => {}
+            ServeMsg::InfoReply { fingerprint, warm_lambda, active, limit } => {
+                fingerprint.encode(&mut e);
+                e.f64s(warm_lambda).u32(*active).u32(*limit);
+            }
+            ServeMsg::Solve { spec } => spec.encode(&mut e),
+            ServeMsg::SolveReply { warm_used, report } => {
+                e.u8(*warm_used as u8);
+                encode_report(report, &mut e);
+            }
+            ServeMsg::Query { groups } => {
+                e.u64(groups.len() as u64);
+                for &g in groups {
+                    e.u64(g);
+                }
+            }
+            ServeMsg::QueryReply { lambda, allocations } => {
+                e.f64s(lambda);
+                e.u64(allocations.len() as u64);
+                for a in allocations {
+                    encode_alloc(a, &mut e);
+                }
+            }
+            ServeMsg::Progress { tag, after } => {
+                e.u64(*tag).u64(*after);
+            }
+            ServeMsg::ProgressReply { total, done, events } => {
+                e.u64(*total).u8(*done as u8);
+                e.u64(events.len() as u64);
+                for ev in events {
+                    ev.encode(&mut e);
+                }
+            }
+            ServeMsg::Busy { active, limit } => {
+                e.u32(*active).u32(*limit);
+            }
+            ServeMsg::Abort { message } => {
+                e.str(message);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub(crate) fn decode(kind: u16, payload: &[u8]) -> Result<ServeMsg> {
+        let mut d = Dec::new(payload);
+        let msg = match kind {
+            k::INFO => ServeMsg::Info,
+            k::INFO_REPLY => ServeMsg::InfoReply {
+                fingerprint: InstanceFingerprint::decode(&mut d)?,
+                warm_lambda: d.f64s()?,
+                active: d.u32()?,
+                limit: d.u32()?,
+            },
+            k::SOLVE => ServeMsg::Solve { spec: SolveSpec::decode(&mut d)? },
+            k::SOLVE_REPLY => ServeMsg::SolveReply {
+                warm_used: d.u8()? != 0,
+                report: decode_report(&mut d)?,
+            },
+            k::QUERY => {
+                let n = d.len_of(8)?;
+                let groups = (0..n).map(|_| d.u64()).collect::<Result<Vec<u64>>>()?;
+                ServeMsg::Query { groups }
+            }
+            k::QUERY_REPLY => {
+                let lambda = d.f64s()?;
+                let n = d.len()?;
+                let allocations =
+                    (0..n).map(|_| decode_alloc(&mut d)).collect::<Result<Vec<_>>>()?;
+                ServeMsg::QueryReply { lambda, allocations }
+            }
+            k::PROGRESS => ServeMsg::Progress { tag: d.u64()?, after: d.u64()? },
+            k::PROGRESS_REPLY => {
+                let total = d.u64()?;
+                let done = d.u8()? != 0;
+                let n = d.len()?;
+                let events =
+                    (0..n).map(|_| ProgressEvent::decode(&mut d)).collect::<Result<Vec<_>>>()?;
+                ServeMsg::ProgressReply { total, done, events }
+            }
+            k::BUSY => ServeMsg::Busy { active: d.u32()?, limit: d.u32()? },
+            k::ABORT => ServeMsg::Abort { message: d.str()? },
+            other => return Err(corrupt(&format!("unknown serve message kind {other}"))),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Send one serve message as a frame; returns the bytes written.
+pub(crate) fn send_serve<W: Write>(w: &mut W, msg: &ServeMsg) -> Result<usize> {
+    frames::write_frame(w, msg.kind(), &msg.encode())
+}
+
+/// Receive one serve message; returns it with the bytes read.
+pub(crate) fn recv_serve<R: Read>(r: &mut R) -> Result<(ServeMsg, usize)> {
+    let (kind, payload, n) = frames::read_frame(r)?;
+    Ok((ServeMsg::decode(kind, &payload)?, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+
+    fn roundtrip(msg: &ServeMsg) -> ServeMsg {
+        let mut buf = Vec::new();
+        send_serve(&mut buf, msg).unwrap();
+        let (got, n) = recv_serve(&mut buf.as_slice()).unwrap();
+        assert_eq!(n, buf.len());
+        got
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(20, 4, 4).with_seed(1));
+        let fp = InstanceFingerprint::of(&p);
+        let report = SolveReport {
+            lambda: vec![0.5, -0.0],
+            iterations: 7,
+            converged: true,
+            primal_value: 10.0,
+            dual_value: 11.0,
+            consumption: vec![5.0, f64::NEG_INFINITY],
+            budgets: vec![6.0, 1.0],
+            n_selected: 3,
+            dropped_groups: 1,
+            history: Vec::new(),
+            wall_ms: 1.25,
+            phases: Default::default(),
+        };
+        let alloc = GroupAllocation {
+            group: 9,
+            x: vec![1, 0, 1],
+            primal: 2.5,
+            dual_inner: 2.0,
+            consumption: vec![0.5, 0.25],
+        };
+        let msgs = [
+            ServeMsg::Info,
+            ServeMsg::InfoReply {
+                fingerprint: fp,
+                warm_lambda: vec![0.1, 0.2],
+                active: 1,
+                limit: 2,
+            },
+            ServeMsg::Solve { spec: SolveSpec { tag: 42, warm: false, ..Default::default() } },
+            ServeMsg::SolveReply { warm_used: true, report },
+            ServeMsg::Query { groups: vec![0, 9, 3] },
+            ServeMsg::QueryReply { lambda: vec![0.5, 0.5], allocations: vec![alloc] },
+            ServeMsg::Progress { tag: 42, after: 3 },
+            ServeMsg::ProgressReply {
+                total: 5,
+                done: false,
+                events: vec![ProgressEvent {
+                    iter: 4,
+                    primal: 1.0,
+                    dual: 2.0,
+                    max_violation_ratio: 0.1,
+                    lambda_change: 1e-3,
+                }],
+            },
+            ServeMsg::Busy { active: 2, limit: 2 },
+            ServeMsg::Abort { message: "nope".into() },
+        ];
+        for m in &msgs {
+            let got = roundtrip(m);
+            assert_eq!(got.kind(), m.kind(), "{}", m.name());
+            // re-encoding the decoded message must reproduce the original
+            // payload byte-for-byte (fields compared through the codec)
+            assert_eq!(got.encode(), m.encode(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn report_floats_survive_bit_exact() {
+        let report = SolveReport {
+            lambda: vec![f64::from_bits(0x7FF0_0000_0000_0001)], // a NaN payload
+            iterations: 1,
+            converged: false,
+            primal_value: -0.0,
+            dual_value: 1e-308,
+            consumption: vec![],
+            budgets: vec![],
+            n_selected: 0,
+            dropped_groups: 0,
+            history: Vec::new(),
+            wall_ms: 0.0,
+            phases: Default::default(),
+        };
+        let m = ServeMsg::SolveReply { warm_used: false, report };
+        let got = roundtrip(&m);
+        let (ServeMsg::SolveReply { report: a, .. }, ServeMsg::SolveReply { report: b, .. }) =
+            (&m, &got)
+        else {
+            panic!("kind changed in roundtrip")
+        };
+        assert_eq!(a.lambda[0].to_bits(), b.lambda[0].to_bits());
+        assert_eq!(a.primal_value.to_bits(), b.primal_value.to_bits());
+        assert_eq!(a.dual_value.to_bits(), b.dual_value.to_bits());
+    }
+
+    #[test]
+    fn worker_plane_frame_is_rejected_by_checksum() {
+        // a serve-kind frame re-tagged as a worker kind must fail the
+        // kind-seeded checksum, not decode as something else
+        let mut buf = Vec::new();
+        send_serve(&mut buf, &ServeMsg::Progress { tag: 1, after: 0 }).unwrap();
+        buf[6] = 2; // kind PROGRESS(38) → worker kind 2
+        buf[7] = 0;
+        let err = recv_serve(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+}

@@ -47,7 +47,7 @@ pub use crate::solver::stats::{
     HistoryObserver, ObserverControl, RoundEvent, SolveObserver, SolveReport,
 };
 
-use crate::cluster::{ConnectOptions, RemoteCluster, TcpTransport, Transport};
+use crate::cluster::{Clock, ConnectOptions, RemoteCluster, SystemClock, TcpTransport, Transport};
 use crate::coordinator::{Algorithm, Backend};
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
@@ -87,6 +87,7 @@ pub struct Solve<'a> {
     backend: Backend,
     warm: Option<WarmStart>,
     checkpoint: CheckpointRequest,
+    clock: Option<Arc<dyn Clock>>,
 }
 
 impl<'a> Solve<'a> {
@@ -105,6 +106,7 @@ impl<'a> Solve<'a> {
             backend: Backend::Rust,
             warm: None,
             checkpoint: CheckpointRequest::Off,
+            clock: None,
         }
     }
 
@@ -165,6 +167,16 @@ impl<'a> Solve<'a> {
     /// what the host environment happens to export.
     pub fn connect_options(mut self, opts: ConnectOptions) -> Self {
         self.connect_opts = Some(opts);
+        self
+    }
+
+    /// Read phase timings through this [`Clock`] instead of the system
+    /// clock — how a daemon-hosted solve under the deterministic
+    /// simulator reports *virtual* wall time. Production never needs
+    /// this: the default is [`SystemClock`], byte-for-byte the old
+    /// behavior.
+    pub fn clock(mut self, c: Arc<dyn Clock>) -> Self {
+        self.clock = Some(c);
         self
     }
 
@@ -332,6 +344,7 @@ impl<'a> Solve<'a> {
             warm: self.warm,
             checkpoint,
             notes,
+            clock: self.clock.unwrap_or_else(|| Arc::new(SystemClock)),
         })
     }
 

@@ -7,7 +7,7 @@
 //! a human-readable [`PlanNote`] for every such decision (this replaces
 //! the old `Coordinator` behavior of erroring on mismatch).
 
-use crate::cluster::{Exec, RemoteCluster};
+use crate::cluster::{Clock, Exec, RemoteCluster};
 use crate::coordinator::Algorithm;
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
@@ -118,6 +118,9 @@ pub struct SolvePlan<'a> {
     pub checkpoint: Option<CheckpointPlan>,
     /// Every fallback / advisory decision the planner made.
     pub notes: Vec<PlanNote>,
+    /// Clock the drivers read phase timings through (the system clock
+    /// unless [`crate::solve::Solve::clock`] injected a virtual one).
+    pub(crate) clock: Arc<dyn Clock>,
 }
 
 impl fmt::Display for SolvePlan<'_> {
@@ -224,6 +227,8 @@ impl<'a> SolvePlan<'a> {
 
         let init = self.warm.as_ref().map(|w| w.lambda.as_slice());
         let (source, config, cluster) = (self.source, &self.config, &self.cluster);
+        let clock = Arc::clone(&self.clock);
+        let clock = clock.as_ref();
         // the planner only attaches a remote fleet to the pure-rust
         // backend; XLA paths below always run on the in-process pool
         let exec = match &self.remote {
@@ -232,23 +237,25 @@ impl<'a> SolvePlan<'a> {
         };
         match (self.algorithm, &self.backend) {
             (Algorithm::Scd, PlannedBackend::Rust) => {
-                scd::solve_scd_exec(source, config, &exec, init, observer)
+                scd::solve_scd_exec_clocked(source, config, &exec, init, observer, clock)
             }
             (Algorithm::Dd, PlannedBackend::Rust) => {
-                dd::solve_dd_exec(source, config, &exec, init, observer)
+                dd::solve_dd_exec_clocked(source, config, &exec, init, observer, clock)
             }
             (Algorithm::Scd, PlannedBackend::XlaScdSparse { artifacts_dir }) => {
                 let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;
                 let runtime = crate::runtime::Runtime::cpu()?;
-                crate::runtime::solve_scd_xla_sparse_driven(
-                    source, config, cluster, &runtime, &manifest, init, observer,
+                crate::runtime::solve_scd_xla_sparse_driven_clocked(
+                    source, config, cluster, &runtime, &manifest, init, observer, clock,
                 )
             }
             (Algorithm::Dd, PlannedBackend::XlaDdDense { artifacts_dir }) => {
                 let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;
                 let runtime = crate::runtime::Runtime::cpu()?;
                 let eval = crate::runtime::XlaDenseEvaluator::new(source, &runtime, &manifest)?;
-                dd::solve_dd_with_driven(source, &eval, config, cluster, init, observer)
+                dd::solve_dd_with_driven_clocked(
+                    source, &eval, config, cluster, init, observer, clock,
+                )
             }
             (Algorithm::Dd, PlannedBackend::XlaDdSparse { artifacts_dir }) => {
                 let manifest = crate::runtime::ArtifactManifest::load(artifacts_dir)?;
@@ -256,7 +263,9 @@ impl<'a> SolvePlan<'a> {
                 let eval = crate::runtime::evaluator::XlaSparseEvaluator::new(
                     source, &runtime, &manifest,
                 )?;
-                dd::solve_dd_with_driven(source, &eval, config, cluster, init, observer)
+                dd::solve_dd_with_driven_clocked(
+                    source, &eval, config, cluster, init, observer, clock,
+                )
             }
             // the planner never produces these pairings; plan.backend is
             // pub, so a hand-mutated plan must fail loudly instead of

@@ -10,11 +10,12 @@
 //! The paper's critique (§4.3.2) — α must be tuned and the iterates are
 //! prone to constraint violations — is reproduced by the Fig 5/6 bench.
 
-use crate::cluster::Exec;
+use crate::cluster::{Clock, Exec, SystemClock};
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
+use crate::metrics::ClockStopwatch;
 use crate::solver::config::SolverConfig;
 use crate::solver::postprocess;
 use crate::solver::rounds::{evaluation_round, RoundAgg, RustEvaluator, ShardEvaluator};
@@ -68,6 +69,22 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
     init: Option<&[f64]>,
     observer: Option<&mut dyn SolveObserver>,
 ) -> Result<SolveReport> {
+    solve_dd_with_driven_clocked(source, evaluator, config, cluster, init, observer, &SystemClock)
+}
+
+/// [`solve_dd_with_driven`] with the phase timings read through an
+/// explicit [`Clock`] — how a daemon-hosted solve stays fully
+/// virtual-time testable under the deterministic simulator.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_dd_with_driven_clocked<S: GroupSource + ?Sized, E: ShardEvaluator>(
+    source: &S,
+    evaluator: &E,
+    config: &SolverConfig,
+    cluster: &Cluster,
+    init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+    clock: &dyn Clock,
+) -> Result<SolveReport> {
     let k = source.dims().n_global;
     dd_drive(
         source,
@@ -76,6 +93,7 @@ pub fn solve_dd_with_driven<S: GroupSource + ?Sized, E: ShardEvaluator>(
         &|shards, lambda| Ok(evaluation_round(evaluator, shards, k, lambda, cluster)),
         init,
         observer,
+        clock,
     )
 }
 
@@ -91,6 +109,21 @@ pub fn solve_dd_exec<S: GroupSource + ?Sized>(
     init: Option<&[f64]>,
     observer: Option<&mut dyn SolveObserver>,
 ) -> Result<SolveReport> {
+    solve_dd_exec_clocked(source, config, exec, init, observer, &SystemClock)
+}
+
+/// [`solve_dd_exec`] with the phase timings read through an explicit
+/// [`Clock`]: under [`SystemClock`] the behavior is byte-for-byte the
+/// production one, under a virtual clock the reported `wall_ms`/phases
+/// are virtual-time — nothing in the driver touches `Instant` directly.
+pub fn solve_dd_exec_clocked<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    exec: &Exec<'_>,
+    init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+    clock: &dyn Clock,
+) -> Result<SolveReport> {
     let k = source.dims().n_global;
     dd_drive(
         source,
@@ -99,10 +132,12 @@ pub fn solve_dd_exec<S: GroupSource + ?Sized>(
         &|shards, lambda| exec.eval_round(source, shards, k, lambda),
         init,
         observer,
+        clock,
     )
 }
 
 /// Shared Algorithm-2 loop; `round` evaluates one map round at fixed λ.
+#[allow(clippy::too_many_arguments)]
 fn dd_drive<S: GroupSource + ?Sized>(
     source: &S,
     config: &SolverConfig,
@@ -110,10 +145,11 @@ fn dd_drive<S: GroupSource + ?Sized>(
     round: &dyn Fn(Shards, &[f64]) -> Result<RoundAgg>,
     init: Option<&[f64]>,
     mut observer: Option<&mut dyn SolveObserver>,
+    clock: &dyn Clock,
 ) -> Result<SolveReport> {
     config.validate()?;
     source.validate()?;
-    let t0 = std::time::Instant::now();
+    let t0 = ClockStopwatch::start(clock);
     let dims = source.dims();
     let budgets = source.budgets().to_vec();
     // align map shards with the source's storage shards (no-op for
@@ -136,11 +172,11 @@ fn dd_drive<S: GroupSource + ?Sized>(
     let mut phases = PhaseTimings::default();
 
     for t in 0..config.max_iters {
-        let it0 = std::time::Instant::now();
+        let it0 = ClockStopwatch::start(clock);
         let agg = round(shards, &lambda)?;
-        let map_ms = it0.elapsed().as_secs_f64() * 1e3;
+        let map_ms = it0.elapsed_ms();
         phases.map_ms += map_ms;
-        let r0 = std::time::Instant::now();
+        let r0 = ClockStopwatch::start(clock);
         let consumption = agg.consumption_values();
 
         // leader-side dual-descent update
@@ -148,7 +184,7 @@ fn dd_drive<S: GroupSource + ?Sized>(
         for k in 0..dims.n_global {
             new_lambda[k] = (lambda[k] + config.dd_alpha * (consumption[k] - budgets[k])).max(0.0);
         }
-        let reduce_ms = r0.elapsed().as_secs_f64() * 1e3;
+        let reduce_ms = r0.elapsed_ms();
         phases.reduce_ms += reduce_ms;
         let residual = rel_change(&new_lambda, &lambda);
         iterations = t + 1;
@@ -158,7 +194,7 @@ fn dd_drive<S: GroupSource + ?Sized>(
             dual: agg.dual_value(&lambda, &budgets),
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
-            wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            wall_ms: it0.elapsed_ms(),
             map_ms,
             reduce_ms,
             skip_rate: 0.0,
@@ -188,9 +224,9 @@ fn dd_drive<S: GroupSource + ?Sized>(
     // feasibility decision post-processing makes) match report.lambda —
     // the same self-consistency contract the SCD drivers keep
     let agg = if stopped {
-        let e0 = std::time::Instant::now();
+        let e0 = ClockStopwatch::start(clock);
         let agg = round(shards, &lambda)?;
-        phases.final_eval_ms = e0.elapsed().as_secs_f64() * 1e3;
+        phases.final_eval_ms = e0.elapsed_ms();
         agg
     } else {
         last_agg.expect("max_iters ≥ 1 ran at least one round")
@@ -210,11 +246,11 @@ fn dd_drive<S: GroupSource + ?Sized>(
         phases,
     };
     if config.postprocess && !report.is_feasible() {
-        let p0 = std::time::Instant::now();
+        let p0 = ClockStopwatch::start(clock);
         postprocess::enforce_feasibility(source, &mut report, exec)?;
-        report.phases.postprocess_ms = p0.elapsed().as_secs_f64() * 1e3;
+        report.phases.postprocess_ms = p0.elapsed_ms();
     }
-    report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    report.wall_ms = t0.elapsed_ms();
     if let Some(obs) = observer.as_mut() {
         obs.on_complete(&report);
     }

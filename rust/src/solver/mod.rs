@@ -25,6 +25,7 @@ pub mod cd_modes;
 pub mod config;
 pub mod dd;
 pub mod greedy;
+pub mod pointquery;
 pub mod postprocess;
 pub mod presolve;
 pub mod rounds;

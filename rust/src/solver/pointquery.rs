@@ -1,0 +1,184 @@
+//! Point queries: per-group allocations under a *fixed* λ.
+//!
+//! A converged solve pins the multipliers; after that, "what does group
+//! `i` get?" is a single Algorithm-1 greedy pass over that group — no
+//! rounds, no reduce. This is the read side of a hosted solve
+//! ([`crate::serve`]): the daemon answers batched allocation queries at
+//! its current warm λ in microseconds per group, through exactly the
+//! same row kernels the map phase runs ([`adjusted_profits_row`] →
+//! [`greedy_select`] → [`accumulate_selection_row`]), so a point query
+//! can never drift from what a full evaluation round would select.
+
+use crate::error::{Error, Result};
+use crate::instance::problem::{for_each_row, BlockBuf, GroupSource};
+use crate::solver::adjusted::{accumulate_selection_row, adjusted_profits_row};
+use crate::solver::greedy::{greedy_select, GroupScratch};
+use crate::util::KahanSum;
+
+/// One group's allocation under a fixed λ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupAllocation {
+    /// Group id (as queried).
+    pub group: u64,
+    /// Selection `x_j ∈ {0,1}` per item.
+    pub x: Vec<u8>,
+    /// `Σ_j p_j x_j` — the group's primal contribution.
+    pub primal: f64,
+    /// `Σ_j p̃_j x_j` — the group's inner dual contribution (dual
+    /// objective minus the `Σ λ_k B_k` term).
+    pub dual_inner: f64,
+    /// `Σ_j b_jk x_j` per knapsack — the group's consumption.
+    pub consumption: Vec<f64>,
+}
+
+/// Evaluate the greedy allocation of each queried group at fixed λ.
+///
+/// Groups may repeat and arrive in any order; the answer for a given
+/// `(group, λ)` is a pure function of the instance, so batching and
+/// ordering are presentation choices. Errors on a λ that fails the warm
+/// validator (wrong length, negative or non-finite entries) and on group
+/// ids out of range — both are caller data errors, reported before any
+/// evaluation work happens.
+pub fn allocations_at(
+    source: &dyn GroupSource,
+    lambda: &[f64],
+    groups: &[u64],
+) -> Result<Vec<GroupAllocation>> {
+    let dims = source.dims();
+    if let Err(m) = crate::solver::scd::check_warm_lambda(lambda, dims.n_global) {
+        return Err(Error::InvalidConfig(format!("point query λ {m}")));
+    }
+    if let Some(&bad) = groups.iter().find(|&&g| g >= dims.n_groups as u64) {
+        return Err(Error::InvalidConfig(format!(
+            "point query asks for group {bad} but the instance has {} groups",
+            dims.n_groups
+        )));
+    }
+    let locals = source.locals();
+    let mut block = BlockBuf::new();
+    let mut scratch = GroupScratch::new(dims.n_items);
+    let mut out = Vec::with_capacity(groups.len());
+    for &g in groups {
+        let mut acc = vec![0.0f64; dims.n_global];
+        let mut got: Option<GroupAllocation> = None;
+        for_each_row(source, g as usize, g as usize + 1, &mut block, |_, row| {
+            adjusted_profits_row(row, lambda, &mut scratch.ptilde);
+            greedy_select(locals, &mut scratch);
+            let (primal, dual_inner) =
+                accumulate_selection_row(row, &scratch.ptilde, &scratch.x, &mut acc);
+            got = Some(GroupAllocation {
+                group: g,
+                x: scratch.x.clone(),
+                primal,
+                dual_inner,
+                consumption: std::mem::take(&mut acc),
+            });
+        });
+        out.push(got.expect("for_each_row visits exactly the requested group"));
+    }
+    Ok(out)
+}
+
+/// Whole-query aggregate, for bracketing a batch against a full round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryAggregate {
+    /// `Σ` primal over the queried groups.
+    pub primal: f64,
+    /// `Σ` dual_inner + `Σ_k λ_k B_k` — when the query covers *all*
+    /// groups this is the dual objective `g(λ)`, an upper bound on the
+    /// exact optimum for any λ ≥ 0 (weak duality).
+    pub dual: f64,
+    /// Summed consumption per knapsack.
+    pub consumption: Vec<f64>,
+    /// Total selected items.
+    pub n_selected: u64,
+}
+
+/// Aggregate a batch of allocations (Kahan-compensated, ascending input
+/// order — callers wanting the solver's bit pattern pass groups in
+/// ascending id order, matching the single-chunk evaluation sum).
+pub fn aggregate(allocs: &[GroupAllocation], lambda: &[f64], budgets: &[f64]) -> QueryAggregate {
+    let k = budgets.len();
+    let mut consumption = vec![KahanSum::new(); k];
+    let mut primal = KahanSum::new();
+    let mut dual = KahanSum::new();
+    let mut n_selected = 0u64;
+    for a in allocs {
+        primal.add(a.primal);
+        dual.add(a.dual_inner);
+        for (s, &c) in consumption.iter_mut().zip(&a.consumption) {
+            s.add(c);
+        }
+        n_selected += a.x.iter().map(|&x| x as u64).sum::<u64>();
+    }
+    let mut g = KahanSum::new();
+    g.add(dual.value());
+    for (l, b) in lambda.iter().zip(budgets) {
+        g.add(l * b);
+    }
+    QueryAggregate {
+        primal: primal.value(),
+        dual: g.value(),
+        consumption: consumption.iter().map(|s| s.value()).collect(),
+        n_selected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+    use crate::instance::shard::Shards;
+    use crate::mapreduce::Cluster;
+    use crate::solver::rounds::{evaluation_round, RustEvaluator};
+
+    #[test]
+    fn full_query_matches_evaluation_round_exactly() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(300, 8, 8).with_seed(3));
+        let dims = p.dims();
+        let lambda: Vec<f64> = (0..dims.n_global).map(|k| 0.3 + 0.1 * k as f64).collect();
+        let groups: Vec<u64> = (0..dims.n_groups as u64).collect();
+        let allocs = allocations_at(&p, &lambda, &groups).unwrap();
+        let agg = aggregate(&allocs, &lambda, p.budgets());
+
+        let cluster = Cluster::new(1);
+        let round = evaluation_round(
+            &RustEvaluator::new(&p),
+            Shards::new(dims.n_groups, dims.n_groups),
+            dims.n_global,
+            &lambda,
+            &cluster,
+        );
+        // one chunk, ascending group order on both sides ⇒ identical
+        // Kahan summation order ⇒ bit-identical aggregates
+        assert_eq!(agg.primal.to_bits(), round.primal.value().to_bits());
+        assert_eq!(agg.n_selected, round.n_selected);
+        for (a, b) in agg.consumption.iter().zip(round.consumption_values()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(
+            agg.dual.to_bits(),
+            round.dual_value(&lambda, p.budgets()).to_bits()
+        );
+    }
+
+    #[test]
+    fn repeats_and_order_are_pure() {
+        let p = SyntheticProblem::new(GeneratorConfig::dense(50, 5, 4).with_seed(5));
+        let lambda = vec![0.5; p.dims().n_global];
+        let a = allocations_at(&p, &lambda, &[7, 3, 7]).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0], a[2]);
+        let b = allocations_at(&p, &lambda, &[3]).unwrap();
+        assert_eq!(a[1], b[0]);
+    }
+
+    #[test]
+    fn rejects_bad_lambda_and_bad_group() {
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(10, 3, 3).with_seed(1));
+        assert!(allocations_at(&p, &[0.1; 2], &[0]).is_err());
+        assert!(allocations_at(&p, &[-1.0, 0.0, 0.0], &[0]).is_err());
+        assert!(allocations_at(&p, &[0.1; 3], &[10]).is_err());
+        assert!(allocations_at(&p, &[0.1; 3], &[]).unwrap().is_empty());
+    }
+}

@@ -16,8 +16,9 @@
 //! is why SCD's constraint violations are near-zero and smooth where DD's
 //! are large and ragged (Figures 5–6).
 
-use crate::cluster::Exec;
+use crate::cluster::{Clock, Exec, SystemClock};
 use crate::error::Result;
+use crate::metrics::ClockStopwatch;
 use crate::instance::problem::{for_each_row, BlockBuf, GroupSource, RowCosts};
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
@@ -344,11 +345,28 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
     config: &SolverConfig,
     exec: &Exec<'_>,
     init: Option<&[f64]>,
+    observer: Option<&mut dyn SolveObserver>,
+) -> Result<SolveReport> {
+    solve_scd_exec_clocked(source, config, exec, init, observer, &SystemClock)
+}
+
+/// [`solve_scd_exec`] with the phase timings read through an explicit
+/// [`Clock`]: under [`SystemClock`] the behavior is byte-for-byte the
+/// production one, under a virtual clock the reported `wall_ms`/phases
+/// are virtual-time — nothing in the driver touches `Instant` directly.
+/// (The serve daemon passes its listener's clock here, so daemon-hosted
+/// solves are fully virtual-time testable under the simulator.)
+pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
+    source: &S,
+    config: &SolverConfig,
+    exec: &Exec<'_>,
+    init: Option<&[f64]>,
     mut observer: Option<&mut dyn SolveObserver>,
+    clock: &dyn Clock,
 ) -> Result<SolveReport> {
     config.validate()?;
     source.validate()?;
-    let t0 = std::time::Instant::now();
+    let t0 = ClockStopwatch::start(clock);
     let dims = source.dims();
     let kk = dims.n_global;
     let budgets = source.budgets().to_vec();
@@ -410,7 +428,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
     let mut final_agg: Option<RoundAgg> = None;
 
     for t in 0..config.max_iters {
-        let it0 = std::time::Instant::now();
+        let it0 = ClockStopwatch::start(clock);
         let active = active_coords(config.cd, t, kk);
         let mut active_mask = vec![false; kk];
         for &k in &active {
@@ -427,19 +445,19 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             st.begin_round(last_broadcast.as_deref(), &lambda);
             last_broadcast = Some(lambda.clone());
         }
-        phases.broadcast_ms += it0.elapsed().as_secs_f64() * 1e3;
+        phases.broadcast_ms += it0.elapsed_ms();
 
-        let m0 = std::time::Instant::now();
+        let m0 = ClockStopwatch::start(clock);
         let ctx = ScdRoundCtx { stability: stability.as_ref(), pool: pool.as_ref() };
         let acc = exec.scd_round(source, shards, &spec, ctx)?;
-        let map_ms = m0.elapsed().as_secs_f64() * 1e3;
+        let map_ms = m0.elapsed_ms();
         phases.map_ms += map_ms;
         let (walks, skipped) = stability.as_ref().map_or((0, 0), |st| st.take_counts());
         phases.walks_total += walks;
         phases.walks_skipped += skipped;
         let skip_rate = if walks == 0 { 0.0 } else { skipped as f64 / walks as f64 };
 
-        let r0 = std::time::Instant::now();
+        let r0 = ClockStopwatch::start(clock);
         let ScdAcc { round, mut thresholds } = acc;
         let consumption = round.consumption_values();
 
@@ -451,7 +469,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
         if let Some(p) = &pool {
             thresholds.recycle(p);
         }
-        let reduce_ms = r0.elapsed().as_secs_f64() * 1e3;
+        let reduce_ms = r0.elapsed_ms();
         phases.reduce_ms += reduce_ms;
 
         iterations = t + 1;
@@ -462,7 +480,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             dual: round.dual_value(&lambda, &budgets),
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
-            wall_ms: it0.elapsed().as_secs_f64() * 1e3,
+            wall_ms: it0.elapsed_ms(),
             map_ms,
             reduce_ms,
             skip_rate,
@@ -518,7 +536,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
 
     // the recorded aggregate is for λ^{T-1}; re-evaluate at the final λ so
     // the report is self-consistent
-    let e0 = std::time::Instant::now();
+    let e0 = ClockStopwatch::start(clock);
     let agg = if converged && iterations > 0 {
         // λ barely moved; the last aggregate is within tolerance, but the
         // final evaluation keeps the primal/consumption exactly matched to
@@ -530,7 +548,7 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
             None => RoundAgg::new(kk),
         }
     };
-    phases.final_eval_ms = e0.elapsed().as_secs_f64() * 1e3;
+    phases.final_eval_ms = e0.elapsed_ms();
 
     let mut report = SolveReport {
         dual_value: agg.dual_value(&lambda, &budgets),
@@ -547,11 +565,11 @@ pub fn solve_scd_exec<S: GroupSource + ?Sized>(
         phases,
     };
     if config.postprocess && !report.is_feasible() {
-        let p0 = std::time::Instant::now();
+        let p0 = ClockStopwatch::start(clock);
         postprocess::enforce_feasibility(source, &mut report, exec)?;
-        report.phases.postprocess_ms = p0.elapsed().as_secs_f64() * 1e3;
+        report.phases.postprocess_ms = p0.elapsed_ms();
     }
-    report.wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    report.wall_ms = t0.elapsed_ms();
     if let Some(obs) = observer.as_mut() {
         obs.on_complete(&report);
     }

@@ -20,10 +20,11 @@
 
 use bskp::exact::solve_ip_exact;
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
-use bskp::instance::problem::MaterializedProblem;
+use bskp::instance::problem::{GroupSource, MaterializedProblem};
 use bskp::mapreduce::Cluster;
 use bskp::rng::Xoshiro256pp;
 use bskp::solver::dd::solve_dd;
+use bskp::solver::pointquery::{aggregate, allocations_at};
 use bskp::solver::scd::solve_scd;
 use bskp::solver::SolverConfig;
 
@@ -85,5 +86,91 @@ fn scd_and_dd_bracket_the_exact_optimum_on_random_tiny_instances() {
             dd.dual_value,
             dd.is_feasible(),
         );
+    }
+}
+
+/// The serve plane's read path ([`allocations_at`] / [`aggregate`]),
+/// differentially checked against the exact oracle: a point query that
+/// covers *every* group at the solver's final λ is a full evaluation of
+/// the Lagrangian, so its aggregate dual is `g(λ)` — an upper bound on
+/// the exact optimum at **any** λ ≥ 0 (weak duality, converged or not) —
+/// and, whenever the raw greedy selection happens to be feasible, its
+/// aggregate primal can never beat the exact optimum. On top of the
+/// bracket, whenever §5.4 dropped nothing the reported solve and the
+/// point query describe the *same* selection, so their primal,
+/// consumption and selection count must agree (summation-order rounding
+/// aside).
+#[test]
+fn full_coverage_point_query_brackets_the_exact_optimum() {
+    let cluster = Cluster::new(2);
+    let mut rng = Xoshiro256pp::new(0x9E1EC7);
+    for trial in 0..200 {
+        let m = 2 + rng.below(3) as usize; // 2..=4 items per group
+        let n = 2 + rng.below((24 / m - 1) as u64) as usize; // N·M ≤ 24
+        let dense = rng.coin(0.4);
+        let k = if dense { 1 + rng.below(3) as usize } else { m };
+        let seed = rng.next_u64();
+        let gen = if dense {
+            GeneratorConfig::dense(n, m, k)
+        } else {
+            GeneratorConfig::sparse(n, m, k)
+        }
+        .with_seed(seed);
+        let p = SyntheticProblem::new(gen);
+        let ctx = format!("trial {trial} (pq, n={n} m={m} k={k} dense={dense} seed={seed:#x})");
+        let mat = MaterializedProblem::from_source(&p).expect("materialize tiny instance");
+        let exact = solve_ip_exact(&mat).expect("exact oracle");
+        let report = solve_scd(&p, &SolverConfig::default(), &cluster)
+            .unwrap_or_else(|e| panic!("{ctx}: scd failed: {e}"));
+
+        let groups: Vec<u64> = (0..p.dims().n_groups as u64).collect();
+        let allocs = allocations_at(&p, &report.lambda, &groups)
+            .unwrap_or_else(|e| panic!("{ctx}: point query rejected the solver's λ: {e}"));
+        let agg = aggregate(&allocs, &report.lambda, p.budgets());
+        let eps = 1e-5 * (1.0 + exact.abs());
+
+        // dual side needs nothing from the solver but λ ≥ 0
+        assert!(
+            exact <= agg.dual + eps,
+            "{ctx}: query dual {} is below the exact optimum {exact} — weak duality violated",
+            agg.dual
+        );
+        // primal side only binds when the raw greedy selection (no §5.4
+        // repair) is itself feasible
+        let feasible = agg
+            .consumption
+            .iter()
+            .zip(p.budgets())
+            .all(|(&c, &b)| c <= b + 1e-9 * (1.0 + b.abs()));
+        if feasible {
+            assert!(
+                agg.primal <= exact + eps,
+                "{ctx}: feasible query primal {} beats the exact optimum {exact}",
+                agg.primal
+            );
+        }
+
+        // nothing dropped ⇒ the report *is* the greedy selection at its
+        // own λ ⇒ the query must reproduce it (different summation
+        // order, hence relative tolerance rather than bit equality)
+        if report.dropped_groups == 0 {
+            assert_eq!(agg.n_selected, report.n_selected, "{ctx}: selection count drifted");
+            let rel = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+            assert!(
+                rel(agg.primal, report.primal_value),
+                "{ctx}: query primal {} vs reported {}",
+                agg.primal,
+                report.primal_value
+            );
+            assert!(
+                rel(agg.dual, report.dual_value),
+                "{ctx}: query dual {} vs reported {}",
+                agg.dual,
+                report.dual_value
+            );
+            for (i, (&c, &r)) in agg.consumption.iter().zip(&report.consumption).enumerate() {
+                assert!(rel(c, r), "{ctx}: consumption[{i}] {c} vs reported {r}");
+            }
+        }
     }
 }

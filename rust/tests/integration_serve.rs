@@ -1,0 +1,281 @@
+//! Serve plane end-to-end over real TCP: a served solve must be
+//! bit-identical to a local one-shot, a warm budget-scaled re-solve must
+//! converge in a fraction of the cold rounds, point queries must match a
+//! local re-evaluation at the same λ, and admission control must answer
+//! the over-limit solve with a typed `Busy` — never a queue or a dropped
+//! connection. The deterministic-chaos twin of this file is
+//! `proptest_serve_sim.rs`, which drives the same daemon code over the
+//! fault-injecting simulator.
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::store::MmapProblem;
+use bskp::mapreduce::Cluster;
+use bskp::serve::{self, ServeClient, ServeOptions, SolveOutcome, SolveSpec, MAX_QUERY_BATCH};
+use bskp::solve::Solve;
+use bskp::solver::pointquery::allocations_at;
+use bskp::solver::SolverConfig;
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_serve_it_{}_{name}", std::process::id()))
+}
+
+/// Generate a sparse instance and write its shard store; returns the dir.
+fn write_store(name: &str, n: usize, seed: u64) -> PathBuf {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(n, 6, 6).with_seed(seed));
+    let dir = tmp_dir(name);
+    std::fs::remove_dir_all(&dir).ok();
+    p.write_shards(&dir, 256, &Cluster::new(2)).expect("write store");
+    dir
+}
+
+/// Host a shard store on an ephemeral port from a detached thread.
+fn spawn_serve_store(dir: &Path, admission: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let dir = dir.to_path_buf();
+    std::thread::spawn(move || {
+        let opts = ServeOptions { admission, threads: 2 };
+        let _ = serve::serve(listener, &dir, &opts);
+    });
+    addr
+}
+
+/// Host a synthetic instance (no store round-trip) the same way.
+fn spawn_serve_synthetic(cfg: GeneratorConfig, admission: usize) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let p = SyntheticProblem::new(cfg);
+        let opts = ServeOptions { admission, threads: 2 };
+        let _ = serve::serve_source(listener, &p, &opts);
+    });
+    addr
+}
+
+fn fixed_rounds_spec(iters: u64) -> SolveSpec {
+    // tol low enough that the solver runs exactly `iters` rounds, with a
+    // pinned shard size so chunk-order merges are comparable bit for bit
+    SolveSpec { warm: false, max_iters: iters, tol: 1e-15, shard_size: 64, ..Default::default() }
+}
+
+fn fixed_rounds_config(iters: usize) -> SolverConfig {
+    SolverConfig { max_iters: iters, tol: 1e-15, shard_size: Some(64), ..Default::default() }
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn done(outcome: SolveOutcome) -> serve::ServedSolve {
+    match outcome {
+        SolveOutcome::Done(s) => s,
+        SolveOutcome::Busy { active, limit } => {
+            panic!("unexpected Busy ({active}/{limit}) from an idle daemon")
+        }
+    }
+}
+
+/// Acceptance: a served solve answers with the *same bits* a local
+/// one-shot `solve --from` produces — for SCD and DD.
+#[test]
+fn served_solve_is_bit_identical_to_local() {
+    let dir = write_store("bitid", 2_500, 41);
+    let addr = spawn_serve_store(&dir, 2);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let mut client = ServeClient::connect_tcp(&addr).expect("connect");
+
+    // SCD
+    let local = Solve::on(&mm).config(fixed_rounds_config(8)).run().unwrap();
+    let served = done(client.solve(fixed_rounds_spec(8)).unwrap());
+    assert!(!served.warm_used, "nothing to warm-start from yet");
+    let r = &served.report;
+    assert_eq!(bits(&r.lambda), bits(&local.lambda), "served λ must be bit-identical");
+    assert_eq!(r.primal_value.to_bits(), local.primal_value.to_bits());
+    assert_eq!(r.dual_value.to_bits(), local.dual_value.to_bits());
+    assert_eq!(bits(&r.consumption), bits(&local.consumption));
+    assert_eq!(bits(&r.budgets), bits(&local.budgets));
+    assert_eq!(r.n_selected, local.n_selected);
+    assert_eq!(r.dropped_groups, local.dropped_groups);
+    assert_eq!(r.iterations, local.iterations);
+
+    // DD over the same session (the daemon serves both algorithms)
+    let dd_cfg =
+        SolverConfig { dd_alpha: 2e-3, ..fixed_rounds_config(6) };
+    let local_dd =
+        Solve::on(&mm).algorithm(bskp::coordinator::Algorithm::Dd).config(dd_cfg).run().unwrap();
+    let served_dd = done(
+        client
+            .solve(SolveSpec { algorithm: 1, dd_alpha: 2e-3, ..fixed_rounds_spec(6) })
+            .unwrap(),
+    );
+    assert_eq!(bits(&served_dd.report.lambda), bits(&local_dd.lambda));
+    assert_eq!(served_dd.report.primal_value.to_bits(), local_dd.primal_value.to_bits());
+    assert_eq!(served_dd.report.n_selected, local_dd.n_selected);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Acceptance: warm re-solves after a ±10% budget change converge in
+/// ≤ half the cold rounds (for at least one of the drifts — mirroring the
+/// session-API warm test, convergence speedups vary by instance), and the
+/// warm λ the daemon advertises is the converged one.
+#[test]
+fn warm_resolve_beats_cold_after_budget_drift() {
+    let gen = GeneratorConfig::sparse(3_000, 10, 10).with_tightness(0.2).with_seed(11);
+    let addr = spawn_serve_synthetic(gen, 2);
+    let mut client = ServeClient::connect_tcp(&addr).expect("connect");
+
+    let base_spec =
+        SolveSpec { warm: false, max_iters: 300, tol: 1e-7, ..Default::default() };
+    let info = client.info().expect("info");
+    assert!(info.warm_lambda.is_empty(), "fresh daemon must have no warm λ");
+
+    let base = done(client.solve(base_spec.clone()).unwrap());
+    assert!(base.report.converged, "base solve must converge for a warm λ to exist");
+    let info = client.info().expect("info after solve");
+    assert_eq!(
+        bits(&info.warm_lambda),
+        bits(&base.report.lambda),
+        "daemon must advertise the converged λ as its warm seed"
+    );
+
+    let mut any_halved = false;
+    for scale in [1.1, 0.9, 1.05] {
+        // re-anchor the warm slot at the base λ* (a warm re-solve at
+        // scale 1.0 converges almost immediately and re-stores it)
+        let anchor =
+            done(client.solve(SolveSpec { warm: true, ..base_spec.clone() }).unwrap());
+        assert!(anchor.warm_used && anchor.report.converged);
+
+        let warm = done(
+            client
+                .solve(SolveSpec { warm: true, budget_scale: scale, ..base_spec.clone() })
+                .unwrap(),
+        );
+        assert!(warm.warm_used, "scaled budgets share the fingerprint, so warm λ applies");
+        assert!(warm.report.converged, "warm re-solve at scale {scale} must converge");
+
+        let cold = done(
+            client
+                .solve(SolveSpec { warm: false, budget_scale: scale, ..base_spec.clone() })
+                .unwrap(),
+        );
+        assert!(!cold.warm_used);
+        assert!(cold.report.converged, "cold solve at scale {scale} must converge");
+        if warm.report.iterations * 2 <= cold.report.iterations {
+            any_halved = true;
+        }
+    }
+    assert!(any_halved, "no ±10% budget drift re-solved in ≤ half the cold rounds");
+}
+
+/// Point queries answer from the daemon's current λ and must match a
+/// local re-evaluation of the same groups at that λ, allocation for
+/// allocation, bit for bit. Query errors are typed `Abort`s and the
+/// session survives them.
+#[test]
+fn point_queries_match_local_reevaluation() {
+    let dir = write_store("query", 2_500, 43);
+    let addr = spawn_serve_store(&dir, 2);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let mut client = ServeClient::connect_tcp(&addr).expect("connect");
+
+    // before any solve there is no λ to answer under: a typed error…
+    let err = client.query(&[0, 1]).unwrap_err();
+    assert!(err.to_string().contains("no converged λ"), "{err}");
+    // …and the session is still usable afterwards (Abort ≠ hangup)
+    client.info().expect("session must survive a refused query");
+
+    let served = done(
+        client
+            .solve(SolveSpec { warm: false, max_iters: 200, tol: 1e-6, ..Default::default() })
+            .unwrap(),
+    );
+    assert!(served.report.converged);
+
+    // a mixed batch: boundary groups, an interior one, and a repeat
+    let groups = [0u64, 7, 1_234, 2_499, 7];
+    let (lambda, allocs) = client.query(&groups).expect("query");
+    assert_eq!(
+        bits(&lambda),
+        bits(&served.report.lambda),
+        "queries must be answered under the solve's converged λ"
+    );
+    let expected = allocations_at(&mm, &lambda, &groups).expect("local re-evaluation");
+    assert_eq!(allocs, expected, "served allocations must match the local kernels bit-for-bit");
+    assert_eq!(allocs.len(), groups.len());
+    assert_eq!(allocs[1], allocs[4], "repeated group ⇒ repeated allocation");
+
+    // the batch cap is a typed error too, and keeps the session open
+    let oversized = vec![0u64; MAX_QUERY_BATCH + 1];
+    let err = client.query(&oversized).unwrap_err();
+    assert!(err.to_string().contains("exceeds"), "{err}");
+    let (_, again) = client.query(&groups).expect("session must survive a refused batch");
+    assert_eq!(again, expected);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Admission control: with a bound of 1, a second concurrent solve gets a
+/// typed `Busy` while the first runs, and succeeds once it finishes.
+/// Progress polls synchronize the race: the running solve registers its
+/// tag before any solve work, and publishes an event per round.
+#[test]
+fn concurrent_solve_beyond_admission_gets_typed_busy() {
+    let dir = write_store("busy", 20_000, 47);
+    let addr = spawn_serve_store(&dir, 1);
+
+    // client A: a long solve (iteration-capped, tol unreachable) with a
+    // progress tag, on its own connection and thread
+    let addr_a = addr.clone();
+    let a = std::thread::spawn(move || {
+        let mut client = ServeClient::connect_tcp(&addr_a).expect("connect A");
+        let spec = SolveSpec { tag: 7, ..fixed_rounds_spec(400) };
+        done(client.solve(spec).unwrap())
+    });
+
+    // client B: wait until A's solve is demonstrably running (≥ 1 round
+    // published under its tag), then ask for a solve of its own
+    let mut client = ServeClient::connect_tcp(&addr).expect("connect B");
+    let mut observed_running = false;
+    for _ in 0..30_000 {
+        let snap = client.progress(7, 0).expect("progress poll");
+        if snap.done {
+            break; // A finished before we could collide — asserted below
+        }
+        if snap.total >= 1 {
+            observed_running = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(observed_running, "A's 400-round solve ended before publishing a single round");
+
+    match client.solve(fixed_rounds_spec(2)).expect("solve request while busy") {
+        SolveOutcome::Busy { active, limit } => {
+            assert_eq!(limit, 1);
+            assert!(active >= 1);
+        }
+        SolveOutcome::Done(_) => panic!("admission bound of 1 must refuse the second solve"),
+    }
+
+    let a_report = a.join().expect("client A thread").report;
+    assert_eq!(a_report.iterations, 400, "A must have run its full iteration budget");
+
+    // A's slot is free again: the retry is served, and the tag's stream
+    // is complete — one event per round, in order, marked done
+    let retry = done(client.solve(fixed_rounds_spec(2)).unwrap());
+    assert_eq!(retry.report.iterations, 2);
+    let snap = client.progress(7, 0).expect("final progress poll");
+    assert!(snap.done, "the tag must be marked done after A completes");
+    assert_eq!(snap.total, a_report.iterations as u64, "one progress event per round");
+    assert!(snap.events.windows(2).all(|w| w[0].iter < w[1].iter), "events must be ordered");
+    // resuming the poll mid-stream returns exactly the tail
+    let tail = client.progress(7, snap.total - 5).expect("tail poll");
+    assert_eq!(tail.events.len(), 5);
+    assert_eq!(tail.events, snap.events[snap.events.len() - 5..]);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

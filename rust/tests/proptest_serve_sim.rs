@@ -1,0 +1,473 @@
+//! Chaos suite for the serve plane, on the deterministic simulator.
+//!
+//! A real `serve_net` daemon loop runs on a [`SimNet`] endpoint with
+//! seeded fault injection; clients drive it through the public
+//! [`ServeClient`] over the simulated transport with **virtual** read
+//! timeouts. The contract under test:
+//!
+//! * every request gets a correct reply — a served cold solve is
+//!   **bit-identical** to the in-process session API, a point query
+//!   matches a local re-evaluation at the served λ — or a **typed
+//!   error**; never a wedged session (the daemon thread must join after
+//!   `shutdown()`, with the simulator's real-time hang guard as the
+//!   backstop) and never a corrupted warm λ;
+//! * a client that crashes mid-request (partial frame, or a full request
+//!   it never reads the answer to) costs the daemon nothing: the
+//!   orphaned solve completes, its admission slot is released, and the
+//!   next client is served from clean state;
+//! * a stalled daemon reply trips the client's read timeout in virtual
+//!   time — no test sleeps wall-clock;
+//! * two runs with the same `(seed, fault plan)` produce **identical
+//!   transcripts** — every reply and every error, verbatim.
+//!
+//! The random-plan property prints the failing `(seed, plan)`; re-run a
+//! red case with `PALLAS_SIM_SEED=<seed> cargo test --test
+//! proptest_serve_sim` (see `docs/simulation.md`).
+
+use bskp::cluster::{Clock, Dir, FaultPlan, LinkFaults, SimNet, Transport};
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::store::xxh64;
+use bskp::instance::GroupSource;
+use bskp::rng::{mix64, Xoshiro256pp};
+use bskp::serve::{self, ServeClient, ServeOptions, SolveOutcome, SolveSpec};
+use bskp::solve::{ScaledBudgets, Solve};
+use bskp::solver::pointquery::allocations_at;
+use bskp::solver::stats::SolveReport;
+use bskp::solver::SolverConfig;
+use std::io::Write as _;
+use std::time::Duration;
+
+/// The hosted instance — small enough that a full solve is cheap, real
+/// enough that λ has every constraint in play.
+fn chaos_gen() -> GeneratorConfig {
+    GeneratorConfig::sparse(400, 6, 6).with_seed(5)
+}
+
+/// The one solve configuration the suite requests, as a wire spec…
+fn chaos_spec() -> SolveSpec {
+    SolveSpec { warm: false, max_iters: 120, tol: 1e-4, shard_size: 64, ..Default::default() }
+}
+
+/// …and as the equivalent local config for the bit-identity baselines.
+fn chaos_config() -> SolverConfig {
+    SolverConfig { max_iters: 120, tol: 1e-4, shard_size: Some(64), ..Default::default() }
+}
+
+/// Start a `serve_net` daemon on a fresh sim endpoint (index = order of
+/// `add_endpoint`/`add_worker` calls; its faults come from that slot of
+/// the plan). Join the handle after `sim.shutdown()` — a session that
+/// wedges turns that join into a hang-guard panic instead of a pass.
+fn start_daemon(sim: &SimNet, admission: usize) -> (String, std::thread::JoinHandle<()>) {
+    let (addr, listener) = sim.add_endpoint();
+    let handle = std::thread::spawn(move || {
+        let problem = SyntheticProblem::new(chaos_gen());
+        let opts = ServeOptions { admission, threads: 1 };
+        let _ = serve::serve_net(listener.as_ref(), &problem, &opts);
+    });
+    (addr, handle)
+}
+
+fn connect(sim: &SimNet, addr: &str) -> bskp::Result<ServeClient> {
+    // the 600 s virtual read bound is what a stalled reply must trip
+    ServeClient::connect(
+        &sim.transport(),
+        addr,
+        Duration::from_secs(5),
+        Some(Duration::from_secs(600)),
+    )
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Render a served report with floats as bits — the transcript currency.
+fn fmt_solve(warm_used: bool, r: &SolveReport) -> String {
+    format!(
+        "warm={warm_used} iters={} conv={} sel={} drop={} λ={:x?} primal={:016x} \
+         dual={:016x} cons={:x?}",
+        r.iterations,
+        r.converged,
+        r.n_selected,
+        r.dropped_groups,
+        bits(&r.lambda),
+        r.primal_value.to_bits(),
+        r.dual_value.to_bits(),
+        bits(&r.consumption),
+    )
+}
+
+/// λ must always be a usable multiplier vector: the right arity, finite,
+/// non-negative — the "never a corrupted warm λ" invariant.
+fn assert_lambda_sane(lambda: &[f64], k: usize, ctx: &str) {
+    assert!(
+        lambda.is_empty() || lambda.len() == k,
+        "{ctx}\nλ has arity {} (instance has {k} constraints)",
+        lambda.len()
+    );
+    for (i, &l) in lambda.iter().enumerate() {
+        assert!(l.is_finite() && l >= 0.0, "{ctx}\nλ[{i}] = {l} is not a valid multiplier");
+    }
+}
+
+fn assert_solve_matches(r: &SolveReport, base: &SolveReport, ctx: &str) {
+    assert_eq!(bits(&r.lambda), bits(&base.lambda), "{ctx}: served λ must be bit-identical");
+    assert_eq!(r.primal_value.to_bits(), base.primal_value.to_bits(), "{ctx}: primal");
+    assert_eq!(r.dual_value.to_bits(), base.dual_value.to_bits(), "{ctx}: dual");
+    assert_eq!(bits(&r.consumption), bits(&base.consumption), "{ctx}: consumption");
+    assert_eq!(r.n_selected, base.n_selected, "{ctx}: n_selected");
+    assert_eq!(r.iterations, base.iterations, "{ctx}: iterations");
+    assert_eq!(r.converged, base.converged, "{ctx}: converged");
+    assert_eq!(r.dropped_groups, base.dropped_groups, "{ctx}: dropped_groups");
+}
+
+/// Build one random single-endpoint fault schedule. Crash triggers are
+/// deliberately absent: on the serve plane they would kill the daemon
+/// process itself, which is the *host's* failure domain — client crashes
+/// (the interesting case) are injected by the driver instead.
+fn random_faults(rng: &mut Xoshiro256pp) -> LinkFaults {
+    let mut f = LinkFaults::default();
+    if rng.coin(0.7) {
+        f.delay_ns = rng.below(2_000_000);
+    }
+    if rng.coin(0.5) {
+        f.jitter_ns = rng.below(1_000_000);
+    }
+    if rng.coin(0.3) {
+        f.drop_prob = 0.25 * rng.next_f64();
+    }
+    if rng.coin(0.25) {
+        f.dup_prob = 0.3 * rng.next_f64();
+    }
+    if rng.coin(0.25) {
+        f.reorder_prob = 0.3 * rng.next_f64();
+    }
+    if rng.coin(0.15) {
+        f.corrupt_prob = 0.02 * rng.next_f64();
+    }
+    if rng.coin(0.2) {
+        // a corrupted *request* kills that session before any work
+        f.corrupt_frames.push((Dir::ToWorker, 1 + rng.below(3)));
+    }
+    if rng.coin(0.2) {
+        // a corrupted *reply* reaches a client that already got its work
+        f.corrupt_frames.push((Dir::ToLeader, rng.below(3)));
+    }
+    if rng.coin(0.1) {
+        // replies stall past the client's 600 s virtual read bound
+        f.stall_after = Some((1 + rng.below(3), 700_000_000_000));
+    }
+    if rng.coin(0.05) {
+        f.refuse_dials = true;
+    }
+    f
+}
+
+struct Baselines {
+    problem: SyntheticProblem,
+    cold: SolveReport,
+    scaled: SolveReport,
+}
+
+fn baselines() -> Baselines {
+    let problem = SyntheticProblem::new(chaos_gen());
+    let cold = Solve::on(&problem).config(chaos_config()).run().unwrap();
+    let scaled_view = ScaledBudgets::uniform(&problem, 1.1).unwrap();
+    let scaled = Solve::on(&scaled_view).config(chaos_config()).run().unwrap();
+    Baselines { problem, cold, scaled }
+}
+
+/// Drive one full case: a fresh daemon under `(seed, faults)`, a fixed
+/// number of randomized sequential requests (each on a fresh connection,
+/// so one broken session never infects the next op), every outcome —
+/// reply or typed error — appended verbatim to the returned transcript.
+///
+/// Sequential driving is what makes the transcript a pure function of
+/// `(seed, plan)`: the client blocks on every reply, and the simulator
+/// only unblocks it after the daemon's session has finished with the
+/// request (answered it, rejected it, or never received it) — so no
+/// server-side work ever races a later op.
+fn run_case(seed: u64, faults: &LinkFaults, base: &Baselines, ctx: &str) -> Vec<String> {
+    let sim = SimNet::new(seed, FaultPlan { links: vec![faults.clone()] });
+    let (addr, daemon) = start_daemon(&sim, 2);
+    let mut rng = Xoshiro256pp::new(mix64(seed, 0x5E17E));
+    let mut transcript = Vec::new();
+    let dims_k = base.problem.dims().n_global;
+
+    for op in 0..10u64 {
+        let roll = rng.below(12);
+        let groups = [rng.below(400), rng.below(400), rng.below(400)];
+        let mut client = match connect(&sim, &addr) {
+            Ok(c) => c,
+            Err(e) => {
+                transcript.push(format!("op{op} dial err: {e}"));
+                continue;
+            }
+        };
+        let line = match roll {
+            // info — and the warm-λ sanity invariant rides every reply
+            0 | 1 => match client.info() {
+                Ok(info) => {
+                    assert_lambda_sane(&info.warm_lambda, dims_k, ctx);
+                    assert_eq!(info.limit, 2, "{ctx}\nadmission limit drifted");
+                    format!(
+                        "op{op} info fp={} warmλ={:x?} active={}",
+                        info.fingerprint,
+                        bits(&info.warm_lambda),
+                        info.active
+                    )
+                }
+                Err(e) => format!("op{op} info err: {e}"),
+            },
+            // cold solve: when it answers, the answer has no freedom
+            2..=4 => match client.solve(chaos_spec()) {
+                Ok(SolveOutcome::Done(s)) => {
+                    assert!(!s.warm_used, "{ctx}\ncold solve reported a warm start");
+                    assert_solve_matches(&s.report, &base.cold, ctx);
+                    format!("op{op} solve {}", fmt_solve(s.warm_used, &s.report))
+                }
+                Ok(SolveOutcome::Busy { active, limit }) => {
+                    panic!("{ctx}\nsequential driving can never see Busy ({active}/{limit})")
+                }
+                Err(e) => format!("op{op} solve err: {e}"),
+            },
+            // budget-scaled cold solve
+            5 => match client.solve(SolveSpec { budget_scale: 1.1, ..chaos_spec() }) {
+                Ok(SolveOutcome::Done(s)) => {
+                    assert_solve_matches(&s.report, &base.scaled, ctx);
+                    format!("op{op} scaled {}", fmt_solve(s.warm_used, &s.report))
+                }
+                Ok(SolveOutcome::Busy { .. }) => panic!("{ctx}\nunexpected Busy"),
+                Err(e) => format!("op{op} scaled err: {e}"),
+            },
+            // warm solve: outcome depends on the (deterministic) history
+            6 | 7 => match client.solve(SolveSpec { warm: true, ..chaos_spec() }) {
+                Ok(SolveOutcome::Done(s)) => {
+                    assert_lambda_sane(&s.report.lambda, dims_k, ctx);
+                    format!("op{op} warm {}", fmt_solve(s.warm_used, &s.report))
+                }
+                Ok(SolveOutcome::Busy { .. }) => panic!("{ctx}\nunexpected Busy"),
+                Err(e) => format!("op{op} warm err: {e}"),
+            },
+            // point query: must equal a local re-evaluation at the served λ
+            8 | 9 => match client.query(&groups) {
+                Ok((lambda, allocs)) => {
+                    assert_lambda_sane(&lambda, dims_k, ctx);
+                    let expected = allocations_at(&base.problem, &lambda, &groups)
+                        .unwrap_or_else(|e| panic!("{ctx}\nserved λ rejected locally: {e}"));
+                    assert_eq!(allocs, expected, "{ctx}\nquery must match the local kernels");
+                    let pb: Vec<u64> = allocs.iter().map(|a| a.primal.to_bits()).collect();
+                    format!("op{op} query g={groups:?} λ={:x?} p={pb:x?}", bits(&lambda))
+                }
+                Err(e) => format!("op{op} query err: {e}"),
+            },
+            // tagged solve + immediate progress poll of the finished tag
+            10 => {
+                let tag = 1 + op;
+                match client.solve(SolveSpec { tag, ..chaos_spec() }) {
+                    Ok(SolveOutcome::Done(s)) => {
+                        let snap = match client.progress(tag, 0) {
+                            Ok(s) => format!(
+                                "total={} done={} last_iter={:?}",
+                                s.total,
+                                s.done,
+                                s.events.last().map(|e| e.iter)
+                            ),
+                            Err(e) => format!("err: {e}"),
+                        };
+                        format!(
+                            "op{op} tagged iters={} progress {snap}",
+                            s.report.iterations
+                        )
+                    }
+                    Ok(SolveOutcome::Busy { .. }) => panic!("{ctx}\nunexpected Busy"),
+                    Err(e) => format!("op{op} tagged err: {e}"),
+                }
+            }
+            // client crash mid-request: half a frame header, then gone.
+            // No reply is owed; the daemon's session must just end.
+            _ => {
+                let mut raw = sim
+                    .transport()
+                    .dial(&addr, Duration::from_secs(5))
+                    .expect("crash-op dial");
+                let _ = raw.write_all(b"PLLS\x01\x00\x22").and_then(|_| raw.flush());
+                drop(raw);
+                format!("op{op} crashed mid-frame")
+            }
+        };
+        transcript.push(line);
+    }
+
+    sim.shutdown();
+    daemon.join().expect("daemon must exit at shutdown — a wedged session hangs this join");
+    transcript
+}
+
+/// The chaos property: random fault plans, randomized request sequences.
+/// Each case runs **twice** with the same `(seed, plan)` — the
+/// transcripts (every reply bit and every error string) must be equal —
+/// and all per-reply invariants are asserted inside the runs.
+#[test]
+fn random_fault_plans_replay_identically_and_never_wedge() {
+    let base = baselines();
+    let base_seed: u64 = std::env::var("PALLAS_SIM_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE);
+
+    for case in 0..10u64 {
+        let case_seed = mix64(base_seed, case);
+        let mut rng = Xoshiro256pp::new(case_seed);
+        let faults = random_faults(&mut rng);
+        let ctx = format!(
+            "case {case} (base seed {base_seed}, case seed {case_seed}) — replay with \
+             PALLAS_SIM_SEED={base_seed}\nfaults: {faults:#?}"
+        );
+        let t1 = run_case(case_seed, &faults, &base, &ctx);
+        let t2 = run_case(case_seed, &faults, &base, &ctx);
+        assert_eq!(t1, t2, "{ctx}\nsame (seed, plan) must produce the same transcript");
+    }
+}
+
+/// A client that dies after sending a *complete, valid* solve request —
+/// the worst mid-request crash: the daemon is already committed to the
+/// work. The orphaned solve must run to completion, release its
+/// admission slot (bound = 1 here, so a stuck slot would starve the
+/// daemon forever), keep its warm λ, and leave every later client a
+/// clean, bit-identical service.
+#[test]
+fn client_crash_after_full_request_releases_admission_and_state() {
+    let base = baselines();
+    let sim = SimNet::new(77, FaultPlan::healthy());
+    let (addr, daemon) = start_daemon(&sim, 1);
+
+    // hand-build the frame a crashing client leaves behind: a Solve
+    // (kind 34) carrying the suite's spec with progress tag 777
+    let spec = chaos_spec();
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&777u64.to_le_bytes()); // tag
+    payload.push(spec.algorithm);
+    payload.extend_from_slice(&spec.budget_scale.to_bits().to_le_bytes());
+    payload.push(spec.warm as u8);
+    payload.extend_from_slice(&spec.max_iters.to_le_bytes());
+    payload.extend_from_slice(&spec.tol.to_bits().to_le_bytes());
+    payload.extend_from_slice(&spec.dd_alpha.to_bits().to_le_bytes());
+    payload.extend_from_slice(&spec.shard_size.to_le_bytes());
+    let mut frame = Vec::new();
+    frame.extend_from_slice(b"PLLS");
+    frame.extend_from_slice(&1u16.to_le_bytes()); // version
+    frame.extend_from_slice(&34u16.to_le_bytes()); // serve kind: Solve
+    frame.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame.extend_from_slice(&xxh64(&payload, 34).to_le_bytes());
+
+    let mut dying = sim.transport().dial(&addr, Duration::from_secs(5)).expect("dial");
+    dying.write_all(&frame).expect("send request");
+    dying.flush().expect("flush request");
+    drop(dying); // …and the client is gone before any reply
+
+    // the tag goes live at admission, so polling it observes the orphan's
+    // full lifecycle; bounded loop, with the sim hang guard as backstop
+    let mut client = connect(&sim, &addr).expect("connect health client");
+    let mut finished = false;
+    for _ in 0..100_000 {
+        let snap = client.progress(777, 0).expect("progress poll");
+        if snap.done {
+            assert!(snap.total >= 1, "the orphaned solve must have published rounds");
+            finished = true;
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(finished, "the orphaned solve never completed");
+
+    // the admission slot (bound 1) must be free again — a leaked guard
+    // would answer Busy here forever
+    let served = match client.solve(chaos_spec()).expect("post-crash solve") {
+        SolveOutcome::Done(s) => s,
+        SolveOutcome::Busy { active, limit } => {
+            panic!("crashed client leaked its admission slot ({active}/{limit})")
+        }
+    };
+    assert_solve_matches(&served.report, &base.cold, "post-crash solve");
+
+    // and the warm λ the orphan left behind is the real converged one
+    let info = client.info().expect("post-crash info");
+    if served.report.converged {
+        assert_eq!(bits(&info.warm_lambda), bits(&served.report.lambda));
+    }
+    let (lambda, allocs) = match client.query(&[0, 399, 7]) {
+        Ok(ok) => ok,
+        Err(e) => panic!("post-crash query failed: {e}"),
+    };
+    let expected = allocations_at(&base.problem, &lambda, &[0, 399, 7]).unwrap();
+    assert_eq!(allocs, expected);
+
+    drop(client);
+    sim.shutdown();
+    daemon.join().expect("daemon must exit cleanly after a client crash");
+}
+
+/// A stalled daemon reply fires the client's 600 s read bound in
+/// *virtual* time: the test must not sleep wall-clock, the error must be
+/// typed, and the daemon must still shut down cleanly.
+#[test]
+fn stalled_reply_trips_the_virtual_read_timeout() {
+    let plan = FaultPlan {
+        // every reply from seq 0 arrives 700 virtual seconds late
+        links: vec![LinkFaults { stall_after: Some((0, 700_000_000_000)), ..Default::default() }],
+    };
+    let sim = SimNet::new(9, plan);
+    let (addr, daemon) = start_daemon(&sim, 2);
+    let wall = std::time::Instant::now();
+
+    let mut client = connect(&sim, &addr).expect("connect");
+    let err = client.info().expect_err("the stalled reply must time the client out");
+    assert!(matches!(err, bskp::Error::Io(_)), "typed io timeout, got: {err}");
+
+    assert!(
+        wall.elapsed() < Duration::from_secs(20),
+        "a 600 s timeout must fire virtually, not by sleeping ({:?})",
+        wall.elapsed()
+    );
+    assert!(
+        sim.clock().now_ns() >= 600_000_000_000,
+        "virtual time must have advanced past the fired deadline"
+    );
+
+    drop(client);
+    sim.shutdown();
+    daemon.join().expect("daemon must exit despite the stalled session");
+}
+
+/// A corrupted request frame (escaping the transport checksum) is caught
+/// by the frame layer's XXH64: that session dies with a typed error on
+/// the client, and a fresh connection is served as if nothing happened.
+#[test]
+fn corrupt_request_ends_only_that_session() {
+    let plan = FaultPlan {
+        // second request frame of every connection is corrupted in flight
+        links: vec![LinkFaults {
+            corrupt_frames: vec![(Dir::ToWorker, 1)],
+            ..Default::default()
+        }],
+    };
+    let sim = SimNet::new(21, plan);
+    let (addr, daemon) = start_daemon(&sim, 2);
+
+    let mut client = connect(&sim, &addr).expect("connect");
+    let first = client.info().expect("frame 0 is clean");
+    let err = client.info().expect_err("the corrupted frame must kill this session");
+    assert!(matches!(err, bskp::Error::Io(_)), "typed error, got: {err}");
+
+    // the daemon dropped one session, not the service
+    let mut fresh = connect(&sim, &addr).expect("reconnect");
+    let again = fresh.info().expect("fresh session is served");
+    assert_eq!(again.fingerprint, first.fingerprint);
+
+    drop(client);
+    drop(fresh);
+    sim.shutdown();
+    daemon.join().expect("daemon must exit cleanly");
+}
