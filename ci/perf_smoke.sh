@@ -1,13 +1,22 @@
 #!/usr/bin/env bash
-# Perf smoke: run the hot-path microbench and emit BENCH_scd.json (the
-# groups/sec + λ-skip-rate trajectory point CI archives per commit). The
-# job fails only on build/run errors or a malformed artifact — never on
-# timing noise; the numbers are for the trajectory, not a gate.
+# Perf smoke: run the hot-path microbench and the fig7 I/O A/B, emit
+# BENCH_scd.json + BENCH_io.json (the groups/sec trajectory points CI
+# archives per commit), and diff the fresh numbers against the committed
+# rust/BENCH_scd.json trend snapshot. The job fails only on build/run
+# errors, a malformed artifact, or schema drift vs the snapshot — never
+# on timing noise; the numbers are for the trajectory, not a gate.
 # Run from the repo root.
 set -euo pipefail
 
 OUT=${BENCH_OUT:-BENCH_scd.json}
+IO_OUT=${BENCH_IO_OUT:-BENCH_io.json}
 cd rust
+
+# the committed trend snapshot (refreshed deliberately, with a commit,
+# when the hot path changes) — stash it before the bench overwrites the
+# working-tree copy
+SNAPSHOT=$(mktemp)
+cp BENCH_scd.json "$SNAPSHOT"
 
 # keep the smoke bounded on shared runners; BSKP_FULL=1 locally for the
 # 10⁶-group version
@@ -15,10 +24,11 @@ BENCH_OUT="$OUT" BSKP_WORKERS="${BSKP_WORKERS:-2}" cargo bench --bench perf_micr
 
 test -s "$OUT" || { echo "missing $OUT" >&2; exit 1; }
 
-python3 - "$OUT" <<'EOF'
+python3 - "$OUT" "$SNAPSHOT" <<'EOF'
 import json, sys
 
 b = json.load(open(sys.argv[1]))
+snap = json.load(open(sys.argv[2]))
 for key in ["n_groups", "rounds", "groups_per_sec", "legacy_groups_per_sec",
             "speedup_vs_per_group", "skip_rate", "k1_groups_per_sec",
             "k1_legacy_groups_per_sec", "k1_skip_rate"]:
@@ -27,7 +37,46 @@ for key in ["n_groups", "rounds", "groups_per_sec", "legacy_groups_per_sec",
 assert b["groups_per_sec"] > 0 and b["legacy_groups_per_sec"] > 0, b
 # K=1 replays every walk after round one; a broken cache would show ~0 here
 assert b["k1_skip_rate"] > 0.5, f"λ-stability cache inert: {b}"
+
+# schema drift vs the committed snapshot is a hard failure (a silently
+# renamed or dropped key breaks the cross-commit trajectory); value
+# drift is reported, not gated
+missing = sorted(set(snap) - set(b))
+assert not missing, f"keys in the committed snapshot vanished from the artifact: {missing}"
+for key in ("groups_per_sec", "k1_groups_per_sec", "skip_rate", "k1_skip_rate"):
+    ref = snap.get(key)
+    if isinstance(ref, (int, float)) and ref:
+        print(f"trend {key}: {b[key]:.3g} vs snapshot {ref:.3g} ({b[key] / ref:.2f}x)")
+
 print(f"perf smoke OK: {b['groups_per_sec']:.0f} groups/s "
       f"({b['speedup_vs_per_group']:.2f}x vs per-group staging, "
       f"skip {100 * b['skip_rate']:.1f}%, K=1 skip {100 * b['k1_skip_rate']:.1f}%)")
+EOF
+
+# fig7 I/O A/B column: staged (lookahead off) vs prefetched serving of
+# the same shard store — the bench itself asserts λ bit-identity across
+# mmap/staged/prefetched before writing the artifact
+BSKP_SMOKE=1 BENCH_IO_OUT="$IO_OUT" BSKP_WORKERS="${BSKP_WORKERS:-2}" \
+    cargo bench --bench fig7_out_of_core
+
+test -s "$IO_OUT" || { echo "missing $IO_OUT" >&2; exit 1; }
+
+python3 - "$IO_OUT" <<'EOF'
+import json, sys
+
+b = json.load(open(sys.argv[1]))
+for key in ["n_groups", "workers", "depth", "mmap_groups_per_sec",
+            "staged_groups_per_sec", "prefetched_groups_per_sec",
+            "prefetch_speedup_vs_staged", "io_bytes", "io_read_ms",
+            "io_wait_ms", "prefetch_hits", "prefetch_misses"]:
+    assert key in b, f"BENCH_io.json missing {key}: {b}"
+assert b["backend"] in ("threadpool", "io_uring"), b
+assert b["io_bytes"] > 0, f"staged solves read nothing: {b}"
+assert b["depth"] >= 1, b
+# lookahead must actually land ahead of demand; throughput is trajectory
+assert b["prefetch_hits"] >= 1, f"prefetch lookahead inert: {b}"
+print(f"io smoke OK: staged {b['staged_groups_per_sec']:.0f} → prefetched "
+      f"{b['prefetched_groups_per_sec']:.0f} groups/s "
+      f"({b['prefetch_speedup_vs_staged']:.2f}x, backend {b['backend']}, "
+      f"hits {b['prefetch_hits']:.0f}/{b['prefetch_hits'] + b['prefetch_misses']:.0f})")
 EOF

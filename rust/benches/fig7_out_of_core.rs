@@ -11,20 +11,36 @@
 //! Scaled default: N = 1M sparse groups (~120 MB store). `BSKP_FULL=1`
 //! raises N to 20M (~2.4 GB — exercise it on a box where that exceeds
 //! free RAM to see the kernel page in/out mid-solve; the solve still
-//! completes, which is the point). `BSKP_STORE_DIR` overrides the
-//! scratch directory (point it at a real disk, not tmpfs, for honest
-//! out-of-core numbers).
+//! completes, which is the point); `BSKP_SMOKE=1` shrinks it for CI.
+//! `BSKP_STORE_DIR` overrides the scratch directory (point it at a real
+//! disk, not tmpfs, for honest out-of-core numbers).
+//!
+//! The **I/O A/B column** solves the same store twice more through the
+//! async subsystem ([`bskp::io`]): staged with lookahead off (depth 0 —
+//! every shard a synchronous demand read) against prefetched (reads
+//! running ahead of the kernels). Both must match the mmap solve
+//! bit-for-bit; the groups/sec delta is the overlap win. Set
+//! `BENCH_IO_OUT` to also write the machine-readable `BENCH_io.json`
+//! trajectory point.
 
 #[path = "common.rs"]
 mod common;
 
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
-use bskp::instance::store::MmapProblem;
+use bskp::instance::store::{MmapProblem, StagedProblem};
+use bskp::io::{prefetch_depth_from_env, IoBackendKind, IoMode};
+use bskp::metrics::JsonValue;
 use bskp::solver::scd::solve_scd;
 use bskp::solver::SolverConfig;
 
 fn main() {
-    let n: usize = if common::full_scale() { 20_000_000 } else { 1_000_000 };
+    let n: usize = if common::full_scale() {
+        20_000_000
+    } else if std::env::var("BSKP_SMOKE").is_ok() {
+        200_000
+    } else {
+        1_000_000
+    };
     let shard: usize = 1 << 16;
     common::banner(
         "Figure 7: out-of-core shard store (gen → mmap → SCD) vs in-memory",
@@ -75,6 +91,82 @@ fn main() {
         t_disk / t_mem
     );
     assert!(rel <= 1e-6, "out-of-core solve drifted from in-memory solve");
+
+    // ---- I/O A/B: staged (no lookahead) vs prefetched serving --------
+    // honor PALLAS_IO_BACKEND when it names a prefetch backend so the
+    // same bench drives io_uring on capable kernels
+    let kind = match IoMode::resolve_auto().0 {
+        IoMode::Prefetch(k) => k,
+        _ => IoBackendKind::ThreadPool,
+    };
+    let depth = prefetch_depth_from_env().max(1);
+    let workers = cluster.workers();
+
+    let (st0, _) = StagedProblem::open(&dir, kind, 0, workers).expect("open staged depth-0");
+    let (staged, t_staged) =
+        common::time(|| solve_scd(&st0, &cfg, &cluster).expect("solve staged"));
+    let staged_rate = n as f64 * staged.iterations as f64 / t_staged;
+    let s0 = st0.io_stats();
+    println!(
+        "stage0: {:>3} iters, {:>7.2} s  ({:>9.0} groups/s, {} via {}, wait {:.0} ms)",
+        staged.iterations,
+        t_staged,
+        staged_rate,
+        s0.reads,
+        st0.backend_name(),
+        s0.wait_ms
+    );
+
+    let (stp, notes) =
+        StagedProblem::open(&dir, kind, depth, workers).expect("open staged prefetched");
+    for note in &notes {
+        println!("note  : {note}");
+    }
+    let (pf, t_pf) = common::time(|| solve_scd(&stp, &cfg, &cluster).expect("solve prefetched"));
+    let pf_rate = n as f64 * pf.iterations as f64 / t_pf;
+    let sp = stp.io_stats();
+    println!(
+        "pflook: {:>3} iters, {:>7.2} s  ({:>9.0} groups/s, depth {}, hits {}/{} first \
+         touches, wait {:.0} ms)",
+        pf.iterations,
+        t_pf,
+        pf_rate,
+        stp.depth(),
+        sp.prefetch_hits,
+        sp.prefetch_hits + sp.prefetch_misses,
+        sp.wait_ms
+    );
+    println!(
+        "check : prefetch/staged throughput {:.2}× (λ bit-identical across \
+         mmap/staged/prefetched)",
+        pf_rate / staged_rate
+    );
+    assert_eq!(staged.lambda, from_disk.lambda, "staged solve diverged from mmap solve");
+    assert_eq!(pf.lambda, from_disk.lambda, "prefetched solve diverged from mmap solve");
+    assert_eq!(staged.primal_value.to_bits(), from_disk.primal_value.to_bits());
+    assert_eq!(pf.primal_value.to_bits(), from_disk.primal_value.to_bits());
+
+    if let Ok(out) = std::env::var("BENCH_IO_OUT") {
+        let mmap_rate = n as f64 * from_disk.iterations as f64 / t_disk;
+        let json = JsonValue::Object(vec![
+            ("bench".to_string(), JsonValue::Str("fig7_io_ab".to_string())),
+            ("n_groups".to_string(), JsonValue::Num(n as f64)),
+            ("workers".to_string(), JsonValue::Num(workers as f64)),
+            ("backend".to_string(), JsonValue::Str(stp.backend_name().to_string())),
+            ("depth".to_string(), JsonValue::Num(stp.depth() as f64)),
+            ("mmap_groups_per_sec".to_string(), JsonValue::Num(mmap_rate)),
+            ("staged_groups_per_sec".to_string(), JsonValue::Num(staged_rate)),
+            ("prefetched_groups_per_sec".to_string(), JsonValue::Num(pf_rate)),
+            ("prefetch_speedup_vs_staged".to_string(), JsonValue::Num(pf_rate / staged_rate)),
+            ("io_bytes".to_string(), JsonValue::Num(sp.bytes_read as f64)),
+            ("io_read_ms".to_string(), JsonValue::Num(sp.read_ms)),
+            ("io_wait_ms".to_string(), JsonValue::Num(sp.wait_ms)),
+            ("prefetch_hits".to_string(), JsonValue::Num(sp.prefetch_hits as f64)),
+            ("prefetch_misses".to_string(), JsonValue::Num(sp.prefetch_misses as f64)),
+        ]);
+        std::fs::write(&out, format!("{json}\n")).expect("write BENCH_io.json");
+        println!("wrote {out}");
+    }
 
     if std::env::var("BSKP_STORE_DIR").is_err() {
         std::fs::remove_dir_all(&dir).ok();

@@ -4,17 +4,22 @@
 //! per configured worker and drives synchronous rounds: the global shard
 //! partition is cut into contiguous **chunks** (a fixed function of the
 //! round, independent of which worker computes what), and chunks are dealt
-//! to live workers in *waves* — one chunk per live worker per wave, slot
-//! order, from a pending queue. The deal is a pure function of (pending
-//! chunks, live set): which worker computes which chunk never depends on
-//! thread scheduling, so a simulated run's event trace is replayable from
-//! its seed, and a production run's assignment is auditable from its logs.
-//! Partials are merged **in chunk order** with compensated sums — the
-//! result does not depend on worker count, scheduling, or mid-round
-//! failures. (Versus the earlier work-stealing queue this trades intra-
-//! round rebalancing for per-wave barriers; with the partition's equal-
-//! size chunks the straggler cost is one chunk per wave, and homogeneous
-//! fleets — the deployment target — lose nothing.)
+//! to live workers from a pending queue by one of two [`ExchangeMode`]s:
+//! *waves* — one chunk per live worker per wave, slot order, a full
+//! barrier between waves — or the default *overlapped* gather, which
+//! deals the whole queue round-robin (slot order again) and keeps a
+//! small task pipeline in flight per link, so workers never idle on a
+//! wave barrier and the leader's waiting overlaps their compute. Either
+//! deal is a pure function of (pending chunks, live set): which worker
+//! computes which chunk never depends on thread scheduling, so a
+//! simulated run's event trace is replayable from its seed, and a
+//! production run's assignment is auditable from its logs. Partials are
+//! merged **in chunk order** with compensated sums — the result does not
+//! depend on worker count, scheduling, mid-round failures, or the
+//! exchange mode. (Versus the earlier work-stealing queue this trades
+//! intra-round rebalancing for a deterministic deal; overlap mode
+//! recovers the pipelining a work queue would give, without giving up
+//! the deterministic assignment.)
 //!
 //! **Failure handling.** A worker that errors or times out on a chunk is
 //! marked dead for the session; its chunk goes back on the queue and a
@@ -71,16 +76,55 @@ fn chunk_count(n_shards: usize) -> usize {
     n_shards.min(CHUNKS_PER_ROUND)
 }
 
+/// How the leader waits on its per-round exchange.
+///
+/// Both modes use the identical chunk partition and merge partials in
+/// chunk order, so the solve result is bit-identical either way; they
+/// differ only in when the leader is *waiting*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Strict wave barriers: one chunk per live worker per wave, the
+    /// next wave starts only after every exchange of the current one
+    /// returned. The whole fleet idles on each wave's straggler, but
+    /// leader and worker never have more than one frame outstanding per
+    /// link — the most conservative flow control, and the mode whose
+    /// per-link traces are totally ordered (the chaos suite pins it for
+    /// its exact replay assertions).
+    Wave,
+    /// Overlapped gather: the round's whole chunk queue is dealt up
+    /// front (round-robin over live workers, slot order) and each link
+    /// keeps a small pipeline of tasks in flight, so a worker starts
+    /// its next chunk the moment it finishes one instead of idling on
+    /// the slowest peer. Stragglers only delay their own queue. This is
+    /// the default; `PALLAS_EXCHANGE=wave` restores wave barriers (e.g.
+    /// when frames are so large that pipelined task + partial bytes
+    /// could both sit in kernel socket buffers at once).
+    Overlap,
+}
+
+impl ExchangeMode {
+    /// The environment-configured mode: `PALLAS_EXCHANGE=wave` or
+    /// `overlap` (the default, also used for unset/unknown values).
+    pub fn from_env() -> Self {
+        match std::env::var("PALLAS_EXCHANGE").ok().as_deref() {
+            Some("wave") => ExchangeMode::Wave,
+            _ => ExchangeMode::Overlap,
+        }
+    }
+}
+
 /// Session timeout policy, resolved once at connect time. [`Default`]
 /// reads the `PALLAS_CLUSTER_TIMEOUT_MS` / `PALLAS_CLUSTER_CONNECT_TIMEOUT_MS`
-/// knobs; tests inject explicit values instead of mutating the process
-/// environment.
+/// / `PALLAS_EXCHANGE` knobs; tests inject explicit values instead of
+/// mutating the process environment.
 #[derive(Debug, Clone, Copy)]
 pub struct ConnectOptions {
     /// Bound on dial + handshake per worker.
     pub connect_timeout: Duration,
     /// Bound on each task/partial exchange for the rest of the session.
     pub exchange_timeout: Duration,
+    /// Wave-barrier or overlapped gather (see [`ExchangeMode`]).
+    pub exchange: ExchangeMode,
 }
 
 impl ConnectOptions {
@@ -93,6 +137,7 @@ impl ConnectOptions {
                 DEFAULT_CONNECT_TIMEOUT_MS,
             ),
             exchange_timeout: env_ms("PALLAS_CLUSTER_TIMEOUT_MS", DEFAULT_TIMEOUT_MS),
+            exchange: ExchangeMode::from_env(),
         }
     }
 }
@@ -138,6 +183,34 @@ enum WaveOutcome {
     Fatal(String),
 }
 
+/// Tasks in flight per link in overlapped gather (sent, reply not yet
+/// read). Two is enough to hide the leader's reply-drain time behind the
+/// worker's compute — the worker picks up task k+1 from its receive
+/// buffer the instant it finishes k — while keeping at most one task
+/// frame queued in kernel buffers per link.
+const PIPELINE_DEPTH: usize = 2;
+
+/// What one link's overlapped run of its dealt queue produced (processed
+/// in slot order, so queue re-adds and counters are deterministic).
+struct SlotRun {
+    /// Partials that arrived, in task order.
+    done: Vec<(usize, Msg)>,
+    /// Chunks the dead link never answered (the failing chunk, then the
+    /// rest of its pipeline, then its unsent queue — a deterministic
+    /// order for re-dispatch).
+    lost: Vec<usize>,
+    /// Why the link died, when it did.
+    loss: Option<String>,
+    /// A protocol-level abort: the round (and solve) must fail.
+    fatal: Option<String>,
+}
+
+impl SlotRun {
+    fn new() -> Self {
+        Self { done: Vec::new(), lost: Vec::new(), loss: None, fatal: None }
+    }
+}
+
 /// A fleet of `pallas worker` processes, driven over a [`Transport`] with
 /// the same map→combine→reduce contract as the in-process
 /// [`Cluster`] (see [`super::Exec`]).
@@ -147,6 +220,7 @@ pub struct RemoteCluster {
     capacity: usize,
     counters: NetCounters,
     clock: Arc<dyn Clock>,
+    exchange: ExchangeMode,
 }
 
 impl RemoteCluster {
@@ -216,6 +290,7 @@ impl RemoteCluster {
             capacity,
             counters: NetCounters::default(),
             clock: transport.clock(),
+            exchange: opts.exchange,
         };
         Ok((fleet, skipped))
     }
@@ -272,10 +347,12 @@ impl RemoteCluster {
     }
 
     /// Dispatch one round: cut `[0, n_shards)` into chunks, deal them to
-    /// live workers wave by wave, gather the partials **indexed by
-    /// chunk**. Lost workers re-queue their chunk; the round only fails
-    /// when no live worker remains (or a worker reports a protocol-level
-    /// abort).
+    /// live workers, gather the partials **indexed by chunk** — wave by
+    /// wave or overlapped, per the session's [`ExchangeMode`] (the
+    /// partition, the merge order and therefore the result are identical
+    /// either way). Lost workers re-queue their chunks; the round only
+    /// fails when no live worker remains (or a worker reports a
+    /// protocol-level abort).
     fn gather<F>(&self, n_shards: usize, task: F) -> Result<Vec<Msg>>
     where
         F: Fn(usize, usize) -> Msg + Sync,
@@ -307,57 +384,25 @@ impl RemoteCluster {
                     },
                 )));
             }
-            // the wave deal: one pending chunk per live worker, slot
-            // order — a pure function of (pending, live)
-            let deals: Vec<(usize, usize)> = live
-                .iter()
-                .map_while(|&slot| pending.pop_front().map(|chunk| (slot, chunk)))
-                .collect();
-            let outcomes: Vec<WaveOutcome> = std::thread::scope(|s| {
-                let handles: Vec<_> = deals
-                    .iter()
-                    .map(|&(slot, chunk)| {
-                        let task = &task;
-                        s.spawn(move || {
-                            let lo = chunk * per;
-                            let hi = (lo + per).min(n_shards);
-                            let mut link = self.slots[slot].lock().unwrap();
-                            match link.exchange(&task(lo, hi), &self.counters) {
-                                Ok(Msg::Abort { message }) => WaveOutcome::Fatal(format!(
-                                    "worker {} aborted the round: {message}",
-                                    link.addr
-                                )),
-                                Ok(reply) => WaveOutcome::Done(chunk, reply),
-                                Err(e) => {
-                                    // dead worker: back on the queue for
-                                    // a survivor in the next wave
-                                    link.kill();
-                                    WaveOutcome::Lost(chunk, format!("worker {}: {e}", link.addr))
-                                }
-                            }
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| {
-                        h.join().unwrap_or_else(|_| {
-                            WaveOutcome::Fatal("worker exchange thread panicked".into())
-                        })
-                    })
-                    .collect()
-            });
-            for outcome in outcomes {
-                match outcome {
-                    WaveOutcome::Done(chunk, reply) => results[chunk] = Some(reply),
-                    WaveOutcome::Lost(chunk, loss) => {
-                        last_loss = loss;
-                        pending.push_back(chunk);
-                        self.counters.count(&self.counters.workers_lost, 1);
-                        self.counters.count(&self.counters.redispatches, 1);
-                    }
-                    WaveOutcome::Fatal(message) => return Err(Error::Runtime(message)),
-                }
+            match self.exchange {
+                ExchangeMode::Wave => self.wave_step(
+                    per,
+                    n_shards,
+                    &live,
+                    &mut pending,
+                    &mut results,
+                    &mut last_loss,
+                    &task,
+                )?,
+                ExchangeMode::Overlap => self.overlap_step(
+                    per,
+                    n_shards,
+                    &live,
+                    &mut pending,
+                    &mut results,
+                    &mut last_loss,
+                    &task,
+                )?,
             }
         }
 
@@ -365,6 +410,202 @@ impl RemoteCluster {
         self.counters
             .count(&self.counters.round_us, self.clock.now_ns().saturating_sub(t0) / 1_000);
         Ok(results.into_iter().map(|r| r.expect("all chunks gathered")).collect())
+    }
+
+    /// One wave: one pending chunk per live worker, a barrier, then the
+    /// outcomes in deal order.
+    #[allow(clippy::too_many_arguments)]
+    fn wave_step<F>(
+        &self,
+        per: usize,
+        n_shards: usize,
+        live: &[usize],
+        pending: &mut VecDeque<usize>,
+        results: &mut [Option<Msg>],
+        last_loss: &mut String,
+        task: &F,
+    ) -> Result<()>
+    where
+        F: Fn(usize, usize) -> Msg + Sync,
+    {
+        // the wave deal: one pending chunk per live worker, slot
+        // order — a pure function of (pending, live)
+        let deals: Vec<(usize, usize)> = live
+            .iter()
+            .map_while(|&slot| pending.pop_front().map(|chunk| (slot, chunk)))
+            .collect();
+        let outcomes: Vec<WaveOutcome> = std::thread::scope(|s| {
+            let handles: Vec<_> = deals
+                .iter()
+                .map(|&(slot, chunk)| {
+                    s.spawn(move || {
+                        let lo = chunk * per;
+                        let hi = (lo + per).min(n_shards);
+                        let mut link = self.slots[slot].lock().unwrap();
+                        match link.exchange(&task(lo, hi), &self.counters) {
+                            Ok(Msg::Abort { message }) => WaveOutcome::Fatal(format!(
+                                "worker {} aborted the round: {message}",
+                                link.addr
+                            )),
+                            Ok(reply) => WaveOutcome::Done(chunk, reply),
+                            Err(e) => {
+                                // dead worker: back on the queue for
+                                // a survivor in the next wave
+                                link.kill();
+                                WaveOutcome::Lost(chunk, format!("worker {}: {e}", link.addr))
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        WaveOutcome::Fatal("worker exchange thread panicked".into())
+                    })
+                })
+                .collect()
+        });
+        for outcome in outcomes {
+            match outcome {
+                WaveOutcome::Done(chunk, reply) => results[chunk] = Some(reply),
+                WaveOutcome::Lost(chunk, loss) => {
+                    *last_loss = loss;
+                    pending.push_back(chunk);
+                    self.counters.count(&self.counters.workers_lost, 1);
+                    self.counters.count(&self.counters.redispatches, 1);
+                }
+                WaveOutcome::Fatal(message) => return Err(Error::Runtime(message)),
+            }
+        }
+        Ok(())
+    }
+
+    /// One overlapped pass: deal the *whole* pending queue round-robin
+    /// over the live workers (slot order — a pure function of
+    /// `(pending, live)`, like the wave deal), then run every link's
+    /// queue concurrently with a [`PIPELINE_DEPTH`]-deep task pipeline
+    /// per link. Outcomes are processed in slot order, so counter
+    /// updates and the re-queue order of lost chunks are deterministic;
+    /// partials land indexed by chunk, so the merge (and the solve
+    /// result) is bit-identical to wave mode.
+    #[allow(clippy::too_many_arguments)]
+    fn overlap_step<F>(
+        &self,
+        per: usize,
+        n_shards: usize,
+        live: &[usize],
+        pending: &mut VecDeque<usize>,
+        results: &mut [Option<Msg>],
+        last_loss: &mut String,
+        task: &F,
+    ) -> Result<()>
+    where
+        F: Fn(usize, usize) -> Msg + Sync,
+    {
+        let mut queues: Vec<Vec<usize>> = vec![Vec::new(); live.len()];
+        for (i, chunk) in pending.drain(..).enumerate() {
+            queues[i % live.len()].push(chunk);
+        }
+        let runs: Vec<SlotRun> = std::thread::scope(|s| {
+            let handles: Vec<_> = live
+                .iter()
+                .zip(&queues)
+                .map(|(&slot, queue)| {
+                    s.spawn(move || self.run_slot(slot, queue, per, n_shards, task))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        let mut run = SlotRun::new();
+                        run.fatal = Some("worker exchange thread panicked".into());
+                        run
+                    })
+                })
+                .collect()
+        });
+        for run in runs {
+            if let Some(message) = run.fatal {
+                return Err(Error::Runtime(message));
+            }
+            for (chunk, reply) in run.done {
+                results[chunk] = Some(reply);
+            }
+            if let Some(loss) = run.loss {
+                *last_loss = loss;
+                self.counters.count(&self.counters.workers_lost, 1);
+                self.counters.count(&self.counters.redispatches, run.lost.len() as u64);
+                for chunk in run.lost {
+                    pending.push_back(chunk);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive one link through its dealt queue with up to
+    /// [`PIPELINE_DEPTH`] tasks in flight: fill the pipeline, read the
+    /// oldest partial, refill. The wire stays strict request/response
+    /// (every send is balanced by one receive, replies arrive in task
+    /// order); only the leader's waiting overlaps with the worker's
+    /// compute. Any wire error kills the link and reports every
+    /// unanswered chunk as lost, in a deterministic order.
+    fn run_slot<F>(
+        &self,
+        slot: usize,
+        queue: &[usize],
+        per: usize,
+        n_shards: usize,
+        task: &F,
+    ) -> SlotRun
+    where
+        F: Fn(usize, usize) -> Msg + Sync,
+    {
+        let mut run = SlotRun::new();
+        let mut link = self.slots[slot].lock().unwrap();
+        let mut inflight: VecDeque<usize> = VecDeque::new();
+        let mut next = 0usize;
+        loop {
+            while inflight.len() < PIPELINE_DEPTH && next < queue.len() {
+                let chunk = queue[next];
+                let lo = chunk * per;
+                let hi = (lo + per).min(n_shards);
+                match link.send_task(&task(lo, hi), &self.counters) {
+                    Ok(()) => {
+                        inflight.push_back(chunk);
+                        next += 1;
+                    }
+                    Err(e) => {
+                        link.kill();
+                        run.loss = Some(format!("worker {}: {e}", link.addr));
+                        run.lost.push(chunk);
+                        run.lost.extend(inflight.drain(..));
+                        run.lost.extend(queue[next + 1..].iter().copied());
+                        return run;
+                    }
+                }
+            }
+            let Some(chunk) = inflight.pop_front() else { return run };
+            match link.recv_partial(&self.counters) {
+                Ok(Msg::Abort { message }) => {
+                    run.fatal =
+                        Some(format!("worker {} aborted the round: {message}", link.addr));
+                    return run;
+                }
+                Ok(reply) => run.done.push((chunk, reply)),
+                Err(e) => {
+                    link.kill();
+                    run.loss = Some(format!("worker {}: {e}", link.addr));
+                    run.lost.push(chunk);
+                    run.lost.extend(inflight.drain(..));
+                    run.lost.extend(queue[next..].iter().copied());
+                    return run;
+                }
+            }
+        }
     }
 
     /// Distributed evaluation round (DD rounds, final evaluations).

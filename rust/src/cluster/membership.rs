@@ -98,12 +98,34 @@ impl WorkerLink {
     /// the link intact for the caller to [`WorkerLink::kill`] — the caller
     /// owns the re-dispatch decision.
     pub(crate) fn exchange(&mut self, msg: &Msg, counters: &NetCounters) -> Result<Msg> {
+        self.send_task(msg, counters)?;
+        self.recv_partial(counters)
+    }
+
+    /// Send one task frame without waiting for the reply — the write half
+    /// of [`WorkerLink::exchange`], split out so the overlapped gather can
+    /// keep a bounded pipeline of tasks in flight per link. Every
+    /// `send_task` must be balanced by exactly one [`WorkerLink::recv_partial`]
+    /// (the protocol stays strict request/response on the wire; only the
+    /// leader's waiting overlaps).
+    pub(crate) fn send_task(&mut self, msg: &Msg, counters: &NetCounters) -> Result<()> {
         let stream = self
             .stream
             .as_mut()
             .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
         let sent = send_msg(stream, msg)?;
         counters.count(&counters.bytes_sent, sent as u64);
+        Ok(())
+    }
+
+    /// Receive one reply frame — the read half of [`WorkerLink::exchange`].
+    /// Replies arrive in task order (the worker serves one frame at a
+    /// time), so the caller matches them to its in-flight queue FIFO.
+    pub(crate) fn recv_partial(&mut self, counters: &NetCounters) -> Result<Msg> {
+        let stream = self
+            .stream
+            .as_mut()
+            .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
         let (reply, received) = recv_msg(stream)?;
         counters.count(&counters.bytes_received, received as u64);
         Ok(reply)

@@ -48,7 +48,7 @@ pub mod worker;
 
 pub use clock::{Clock, SystemClock, VirtualClock};
 pub use exec::Exec;
-pub use leader::{ConnectOptions, NetSnapshot, RemoteCluster};
+pub use leader::{ConnectOptions, ExchangeMode, NetSnapshot, RemoteCluster};
 pub use protocol::InstanceFingerprint;
 pub use sim::{Dir, FaultPlan, LinkFaults, SimNet, SimTransport, TraceEvent, TraceKind};
 pub use transport::{NetListener, NetStream, TcpNetListener, TcpTransport, Transport};

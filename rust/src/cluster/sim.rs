@@ -40,7 +40,14 @@
 //! thread interleaving — and chunk dealing on the leader is a pure
 //! function of round state, so two runs with the same `(seed, plan)`
 //! produce identical per-link event traces ([`SimNet::trace`]) and
-//! bit-identical `SolveReport`s.
+//! bit-identical `SolveReport`s. Delivery times anchor on the *sender's*
+//! stream-local virtual clock, so this holds under the overlapped
+//! exchange too — with one caveat: overlap flushes a link's two
+//! directions concurrently, so the recorded order of causally unrelated
+//! events from opposite directions within one link can vary between
+//! replays. Wave mode ([`super::ExchangeMode::Wave`]) keeps each link's
+//! trace totally ordered; overlap replays compare equal after sorting
+//! events by `(worker, conn, dir, seq)`.
 //!
 //! ## Virtual time
 //!
@@ -440,8 +447,19 @@ impl Hub {
 
     /// Flush one complete frame onto a link; returns the virtual send
     /// time. Applies the fault plan: a pure function of the frame
-    /// identity.
-    fn send_frame(&self, link: usize, side: Side, frame: Vec<u8>) -> io::Result<u64> {
+    /// identity. `sender_vnow` is the *sending stream's* own virtual
+    /// time ([`SimStream::last_vnow`]) — arrivals anchor on it rather
+    /// than on the shared link clock, so that when the leader pipelines
+    /// (overlapped gather: a task flush can race the peer's deliveries
+    /// on the same link) the delivery schedule stays a pure function of
+    /// each side's own causal history, not of thread interleaving.
+    fn send_frame(
+        &self,
+        link: usize,
+        side: Side,
+        sender_vnow: u64,
+        frame: Vec<u8>,
+    ) -> io::Result<u64> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
             return Err(broken_pipe("network is shut down"));
@@ -463,7 +481,7 @@ impl Hub {
         let seq = st.links[link].pipes[dir as usize].sent;
         st.links[link].pipes[dir as usize].sent += 1;
         let faults = self.plan.faults_for(ep);
-        let send_vnow = st.links[link].vnow_ns;
+        let send_vnow = sender_vnow;
 
         // crash triggers: the worker process dies on this very frame
         if side == Side::Leader && faults.crash_on_task == Some(seq) {
@@ -532,7 +550,7 @@ impl Hub {
             bytes[idx] ^= 0xA5;
         }
         let l = &mut st.links[link];
-        let arrival = (l.vnow_ns.saturating_add(delay)).max(l.pipes[dir as usize].last_arrival);
+        let arrival = (send_vnow.saturating_add(delay)).max(l.pipes[dir as usize].last_arrival);
         l.pipes[dir as usize].last_arrival = arrival;
         l.pipes[dir as usize].buf.push_back((arrival, bytes));
         l.push_event(
@@ -739,7 +757,7 @@ impl io::Write for SimStream {
             return Ok(());
         }
         let frame = std::mem::take(&mut self.write_buf);
-        let sent_at = self.hub.send_frame(self.link, self.side, frame)?;
+        let sent_at = self.hub.send_frame(self.link, self.side, self.last_vnow, frame)?;
         self.last_vnow = self.last_vnow.max(sent_at);
         Ok(())
     }

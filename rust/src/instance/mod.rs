@@ -30,4 +30,4 @@ pub use problem::{
     GroupSource, MaterializedProblem, RowCosts,
 };
 pub use shard::{ShardRange, Shards};
-pub use store::{MmapProblem, ShardWriter};
+pub use store::{MmapProblem, ShardWriter, StagedProblem};

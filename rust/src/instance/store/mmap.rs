@@ -40,6 +40,9 @@ mod sys {
 
     pub const PROT_READ: c_int = 1;
     pub const MAP_PRIVATE: c_int = 2;
+    // same values on linux and macOS
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MADV_WILLNEED: c_int = 3;
 
     extern "C" {
         pub fn mmap(
@@ -51,7 +54,21 @@ mod sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
     }
+}
+
+/// `PALLAS_NO_MADVISE` off-switch for the readahead hints, resolved once.
+#[cfg(all(unix, target_pointer_width = "64"))]
+fn madvise_enabled() -> bool {
+    use std::sync::OnceLock;
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        !matches!(
+            std::env::var("PALLAS_NO_MADVISE").ok().as_deref(),
+            Some(v) if !v.is_empty() && v != "0"
+        )
+    })
 }
 
 impl Mmap {
@@ -88,6 +105,17 @@ impl Mmap {
                 path.display(),
                 std::io::Error::last_os_error()
             )));
+        }
+        if madvise_enabled() {
+            // best-effort readahead hints: map workers scan a shard's
+            // sections front-to-back (SEQUENTIAL) and will touch the whole
+            // file soon (WILLNEED). Advice only — ignore failures
+            // (PALLAS_NO_MADVISE=1 skips the calls entirely).
+            // SAFETY: ptr/len are the mapping established above.
+            unsafe {
+                sys::madvise(ptr, len, sys::MADV_SEQUENTIAL);
+                sys::madvise(ptr, len, sys::MADV_WILLNEED);
+            }
         }
         Ok(Self { ptr: ptr as *const u8, len })
     }

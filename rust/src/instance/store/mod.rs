@@ -25,8 +25,10 @@ pub mod checksum;
 pub mod format;
 pub mod mmap;
 pub mod reader;
+pub mod staged;
 pub mod writer;
 
 pub use checksum::xxh64;
 pub use reader::MmapProblem;
+pub use staged::StagedProblem;
 pub use writer::{write_source, ShardWriter, StoreMeta, StoreSummary};

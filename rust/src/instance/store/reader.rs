@@ -35,42 +35,7 @@ impl ShardView {
         let map = Mmap::open(path)?;
         let what = path.display().to_string();
         let hdr = ShardHeader::decode(map.bytes(), map.len() as u64, &what)?;
-        let err = |m: String| Error::InvalidProblem(format!("{what}: {m}"));
-        if hdr.dense != expect.dense {
-            return Err(err("shard layout disagrees with manifest".into()));
-        }
-        if hdr.n_items as usize != expect.dims.n_items
-            || hdr.n_global as usize != expect.dims.n_global
-        {
-            return Err(err(format!(
-                "shard shape M={} K={} disagrees with manifest M={} K={}",
-                hdr.n_items, hdr.n_global, expect.dims.n_items, expect.dims.n_global
-            )));
-        }
-        if hdr.rows as usize != expect.shard_size {
-            return Err(err(format!(
-                "shard rows {} disagree with manifest shard_size {}",
-                hdr.rows, expect.shard_size
-            )));
-        }
-        let want_start = idx * expect.shard_size;
-        let want_live =
-            (expect.dims.n_groups - want_start).min(expect.shard_size);
-        if hdr.group_start as usize != want_start || hdr.n_groups as usize != want_live {
-            return Err(err(format!(
-                "shard covers groups [{}, {}) but manifest expects [{}, {})",
-                hdr.group_start,
-                hdr.group_start + hdr.n_groups,
-                want_start,
-                want_start + want_live
-            )));
-        }
-        if hdr.payload_hash != expect.manifest_hashes[idx] {
-            return Err(err(format!(
-                "shard payload hash {:016x} disagrees with manifest {:016x}",
-                hdr.payload_hash, expect.manifest_hashes[idx]
-            )));
-        }
+        expect.check_shard_header(&hdr, idx, &what)?;
         Ok(Self { map, hdr })
     }
 
@@ -277,6 +242,57 @@ impl MmapProblem {
     /// Number of shard files.
     pub fn n_shards(&self) -> usize {
         self.views.len()
+    }
+
+    /// Validate a shard header (however its bytes arrived — mmap or a
+    /// staged read) against the manifest's expectations for shard `idx`.
+    pub(crate) fn check_shard_header(
+        &self,
+        hdr: &ShardHeader,
+        idx: usize,
+        what: &str,
+    ) -> Result<()> {
+        let err = |m: String| Error::InvalidProblem(format!("{what}: {m}"));
+        if hdr.dense != self.dense {
+            return Err(err("shard layout disagrees with manifest".into()));
+        }
+        if hdr.n_items as usize != self.dims.n_items
+            || hdr.n_global as usize != self.dims.n_global
+        {
+            return Err(err(format!(
+                "shard shape M={} K={} disagrees with manifest M={} K={}",
+                hdr.n_items, hdr.n_global, self.dims.n_items, self.dims.n_global
+            )));
+        }
+        if hdr.rows as usize != self.shard_size {
+            return Err(err(format!(
+                "shard rows {} disagree with manifest shard_size {}",
+                hdr.rows, self.shard_size
+            )));
+        }
+        let want_start = idx * self.shard_size;
+        let want_live = (self.dims.n_groups - want_start).min(self.shard_size);
+        if hdr.group_start as usize != want_start || hdr.n_groups as usize != want_live {
+            return Err(err(format!(
+                "shard covers groups [{}, {}) but manifest expects [{}, {})",
+                hdr.group_start,
+                hdr.group_start + hdr.n_groups,
+                want_start,
+                want_start + want_live
+            )));
+        }
+        if hdr.payload_hash != self.manifest_hashes[idx] {
+            return Err(err(format!(
+                "shard payload hash {:016x} disagrees with manifest {:016x}",
+                hdr.payload_hash, self.manifest_hashes[idx]
+            )));
+        }
+        Ok(())
+    }
+
+    /// Path of shard file `idx`.
+    pub(crate) fn shard_path(&self, idx: usize) -> PathBuf {
+        self.dir.join(shard_file_name(idx))
     }
 
     /// Map + header-validate shard `idx`, returning errors instead of

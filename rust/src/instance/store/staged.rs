@@ -1,0 +1,223 @@
+//! [`StagedProblem`]: a shard store served through the async I/O
+//! subsystem ([`crate::io`]) instead of borrow-only mmap.
+//!
+//! Wraps an open [`MmapProblem`] (manifest parsing, laminar profile and
+//! the `fill_group` sampling path are shared) and reroutes the hot block
+//! path: `fill_block` copies group sections out of a whole-shard
+//! [`crate::io::IoLease`] obtained from a [`PrefetchingShardReader`], so
+//! while the kernels chew shard `k` the backend is already reading
+//! shards `k+1`/`k+2`. The bytes and the offset math are exactly the
+//! mmap path's (a lease holds the entire shard file, header included, so
+//! section offsets are the on-disk header offsets), and each staged
+//! shard's header is validated against the manifest on first touch just
+//! like a fresh mapping — results are bit-identical to mmap serving by
+//! construction.
+
+use crate::error::Result;
+use crate::instance::laminar::LaminarProfile;
+use crate::instance::problem::{BlockBuf, Dims, GroupBlock, GroupBuf, GroupSource};
+use crate::instance::store::format::ShardHeader;
+use crate::instance::store::mmap::{copy_f32_le, copy_u32_le};
+use crate::instance::store::reader::MmapProblem;
+use crate::io::{build_backend, IoBackendKind, IoStats, PrefetchingShardReader};
+use std::sync::OnceLock;
+
+/// Cap on the number of f32 values a staged block holds (the
+/// [`GroupSource::block_end`] default) — staged blocks are owned copies,
+/// so they stay cache-resident like every other staging source.
+const BLOCK_STAGING_F32: usize = 262_144;
+
+/// A shard store served by prefetch-staged reads. See the module docs.
+pub struct StagedProblem {
+    inner: MmapProblem,
+    reader: PrefetchingShardReader,
+    /// Per-shard header decoded from staged bytes, validated on first
+    /// touch (same checks a fresh mapping runs).
+    headers: Vec<OnceLock<ShardHeader>>,
+}
+
+impl StagedProblem {
+    /// Open `dir` for prefetch-staged serving through a `kind` backend,
+    /// reading `depth` shards ahead while up to `parallel_hint` map
+    /// workers consume distinct shards concurrently.
+    ///
+    /// Returns the source plus any fallback notes (e.g. io_uring
+    /// unavailable → thread pool) for the solve planner to surface.
+    pub fn open(
+        dir: &std::path::Path,
+        kind: IoBackendKind,
+        depth: usize,
+        parallel_hint: usize,
+    ) -> Result<(Self, Vec<String>)> {
+        let inner = MmapProblem::open(dir)?;
+        Self::from_mmap(inner, kind, depth, parallel_hint)
+    }
+
+    /// [`StagedProblem::open`] over an already-open [`MmapProblem`].
+    pub fn from_mmap(
+        inner: MmapProblem,
+        kind: IoBackendKind,
+        depth: usize,
+        parallel_hint: usize,
+    ) -> Result<(Self, Vec<String>)> {
+        let n_shards = inner.n_shards();
+        let file_len = std::fs::metadata(inner.shard_path(0))?.len() as usize;
+        let parallel = parallel_hint.max(1);
+        // every concurrent consumer can hold one shard resident while
+        // `depth` more are in flight; the spare slots keep demand reads
+        // from waiting on lookahead
+        let resident = parallel + 1;
+        let n_slots = (parallel + depth + 2).min(n_shards.max(1) + depth + 1);
+        let (backend, fallback) = build_backend(kind, n_slots, file_len)?;
+        let paths = (0..n_shards).map(|i| inner.shard_path(i)).collect();
+        let reader = PrefetchingShardReader::new(backend, paths, file_len, depth, resident)?;
+        let staged = Self {
+            headers: (0..n_shards).map(|_| OnceLock::new()).collect(),
+            inner,
+            reader,
+        };
+        Ok((staged, fallback.into_iter().collect()))
+    }
+
+    /// Backend name for plans (`"threadpool"` / `"io_uring"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.reader.backend_name()
+    }
+
+    /// Configured lookahead depth.
+    pub fn depth(&self) -> usize {
+        self.reader.depth()
+    }
+
+    /// Cumulative I/O statistics (reader + backend).
+    pub fn io_stats(&self) -> IoStats {
+        self.reader.stats()
+    }
+
+    /// The wrapped mmap source.
+    pub fn inner(&self) -> &MmapProblem {
+        &self.inner
+    }
+
+    /// Staged bytes + validated header of the shard holding group
+    /// `start`. Panics on I/O or validation failure, mirroring the mmap
+    /// hot path (`fill_block` cannot return errors).
+    fn shard_for(&self, start: usize) -> (std::sync::Arc<crate::io::IoLease>, &ShardHeader) {
+        let idx = start / self.inner.shard_size();
+        let lease = match self.reader.shard(idx) {
+            Ok(l) => l,
+            Err(e) => panic!("staged shard read failed mid-solve: {e}"),
+        };
+        let hdr = loop {
+            if let Some(h) = self.headers[idx].get() {
+                break h;
+            }
+            let bytes = lease.bytes();
+            let what = self.inner.shard_path(idx).display().to_string();
+            let decoded = ShardHeader::decode(bytes, bytes.len() as u64, &what)
+                .and_then(|h| self.inner.check_shard_header(&h, idx, &what).map(|()| h));
+            match decoded {
+                Ok(h) => break self.headers[idx].get_or_init(|| h),
+                Err(e) => panic!("staged shard read failed mid-solve: {e}"),
+            }
+        };
+        (lease, hdr)
+    }
+}
+
+impl GroupSource for StagedProblem {
+    fn dims(&self) -> Dims {
+        self.inner.dims()
+    }
+
+    fn is_dense(&self) -> bool {
+        self.inner.is_dense()
+    }
+
+    fn locals(&self) -> &LaminarProfile {
+        self.inner.locals()
+    }
+
+    fn budgets(&self) -> &[f64] {
+        self.inner.budgets()
+    }
+
+    fn store_dir(&self) -> Option<std::path::PathBuf> {
+        self.inner.store_dir()
+    }
+
+    /// Single-group access (presolve sampling, point queries) stays on
+    /// the mmap path — it is random-access, exactly what prefetch cannot
+    /// help and the page cache handles well.
+    fn fill_group(&self, i: usize, buf: &mut GroupBuf) {
+        self.inner.fill_group(i, buf)
+    }
+
+    fn preferred_shard_size(&self) -> Option<usize> {
+        self.inner.preferred_shard_size()
+    }
+
+    /// Staged blocks respect both boundaries: the storage-shard edge (a
+    /// block reads from one lease) and the owned-staging cap (copied
+    /// blocks stay cache-resident).
+    fn block_end(&self, start: usize, end: usize) -> usize {
+        let d = self.dims();
+        let per_group =
+            if self.is_dense() { d.n_items * (d.n_global + 1) } else { 3 * d.n_items };
+        let cap = (BLOCK_STAGING_F32 / per_group.max(1)).max(1);
+        let boundary = (start / self.inner.shard_size() + 1) * self.inner.shard_size();
+        end.min(start + cap).min(boundary)
+    }
+
+    /// The mmap path's offset math over staged bytes: same sections, same
+    /// little-endian decode, copied into `buf` instead of borrowed — the
+    /// resulting `f32`/`u32` values are bit-identical.
+    fn fill_block<'a>(&'a self, start: usize, end: usize, buf: &'a mut BlockBuf) -> GroupBlock<'a> {
+        let d = self.dims();
+        assert!(
+            end <= d.n_groups,
+            "block [{start}, {end}) reaches past the {} live groups into shard padding",
+            d.n_groups
+        );
+        let (lease, hdr) = self.shard_for(start);
+        let row = start % self.inner.shard_size();
+        let len = end - start;
+        assert!(
+            row + len <= hdr.rows as usize,
+            "block [{start}, {end}) crosses a shard-file boundary (see GroupSource::block_end)"
+        );
+        let (m, k) = (d.n_items, d.n_global);
+        let dense = self.is_dense();
+        let bytes = lease.bytes();
+        buf.ensure(len, m, k, dense);
+        let p_off = hdr.prices.0 as usize + row * m * 4;
+        copy_f32_le(&bytes[p_off..p_off + len * m * 4], &mut buf.profits[..len * m]);
+        if dense {
+            let w = m * k * 4;
+            let off = hdr.costs.0 as usize + row * w;
+            copy_f32_le(&bytes[off..off + len * w], &mut buf.dense[..len * m * k]);
+        } else {
+            let rows = hdr.rows as usize;
+            let knap_off = hdr.costs.0 as usize + row * m * 4;
+            let cost_off = hdr.costs.0 as usize + (rows + row) * m * 4;
+            copy_u32_le(&bytes[knap_off..knap_off + len * m * 4], &mut buf.knap[..len * m]);
+            copy_f32_le(&bytes[cost_off..cost_off + len * m * 4], &mut buf.cost[..len * m]);
+        }
+        buf.block(start, len, m, k, dense)
+    }
+}
+
+const _ASSERT_SYNC: fn() = || {
+    fn is_sync<T: Sync>() {}
+    is_sync::<StagedProblem>();
+};
+
+impl std::fmt::Debug for StagedProblem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StagedProblem")
+            .field("dir", &self.inner.dir())
+            .field("backend", &self.backend_name())
+            .field("depth", &self.depth())
+            .finish()
+    }
+}

@@ -1,0 +1,381 @@
+//! The asynchronous I/O seam: overlapped shard reads for out-of-core
+//! solves.
+//!
+//! The out-of-core path ([`crate::instance::store::MmapProblem`]) serves
+//! group data straight from a memory mapping, which means every cold page
+//! is a *synchronous* fault inside the row-kernel hot loop — the compute
+//! plane stalls exactly as long as the disk takes. This module carves the
+//! same kind of seam out of I/O that [`crate::cluster::transport`] carved
+//! out of the network: a small trait ([`IoBackend`]) behind which reads
+//! are issued ahead of use, so shard `k+1` is in flight while the kernels
+//! chew shard `k`.
+//!
+//! The pieces:
+//!
+//! * [`BufferRing`] — a fixed ring of equally-sized read buffers, checked
+//!   out for the lifetime of one read + its consumers and recycled on
+//!   release (the buffer-group shape io_uring's registered buffers want;
+//!   the portable backend uses the same ring so buffer lifecycle is
+//!   identical across backends).
+//! * [`IoBackend`] — `submit(ReadOp) -> tag`, `wait(tag) -> IoLease`.
+//!   Two implementations: [`ThreadPoolBackend`] (zero-dependency pread
+//!   workers, the portable default) and, behind the `uring` cargo
+//!   feature, [`uring::UringBackend`] (raw `io_uring` syscalls with
+//!   registered buffers on Linux).
+//! * [`PrefetchingShardReader`] — per-shard read scheduling on top of a
+//!   backend: demand reads, lookahead issue, LRU recycling of resident
+//!   shards.
+//!
+//! [`crate::instance::store::StagedProblem`] threads the reader under the
+//! `GroupSource` block API; the solve planner selects it (see
+//! [`IoMode`]) and every solve result is bit-identical across mmap,
+//! thread-pool and io_uring serving — the bytes are the same, only their
+//! arrival overlaps with compute. See `docs/io.md`.
+
+pub mod prefetch;
+pub mod threadpool;
+#[cfg(feature = "uring")]
+pub mod uring;
+
+pub use prefetch::PrefetchingShardReader;
+pub use threadpool::ThreadPoolBackend;
+
+use crate::error::Result;
+use std::cell::UnsafeCell;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One read request: `len` bytes of `path` starting at `offset`, into a
+/// ring slot the backend acquires.
+#[derive(Debug, Clone)]
+pub struct ReadOp {
+    /// File to read.
+    pub path: PathBuf,
+    /// Byte offset of the first byte.
+    pub offset: u64,
+    /// Exact number of bytes to read (short reads are completed by the
+    /// backend or surfaced as errors — a lease never holds partial data).
+    pub len: usize,
+}
+
+/// Cumulative I/O statistics of a backend + reader pair — the numbers
+/// `solve --json` surfaces per phase so prefetch effectiveness is
+/// observable (overlap works when `wait_ms` ≪ `read_ms`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IoStats {
+    /// Reads completed.
+    pub reads: u64,
+    /// Payload bytes read.
+    pub bytes_read: u64,
+    /// Time spent inside reads, milliseconds (overlappable work: on the
+    /// backend's threads, not the caller's).
+    pub read_ms: f64,
+    /// Time callers spent *blocked* waiting for data, milliseconds (the
+    /// part that stalls compute).
+    pub wait_ms: f64,
+    /// First touches of a shard that found its read already issued or
+    /// complete.
+    pub prefetch_hits: u64,
+    /// First touches that found nothing in flight (synchronous demand
+    /// read).
+    pub prefetch_misses: u64,
+}
+
+/// The I/O seam: an asynchronous read engine over a [`BufferRing`].
+///
+/// `submit` queues a read and returns a completion tag; `wait` blocks
+/// until that read finished and hands back an [`IoLease`] on the filled
+/// ring slot. Dropping the lease recycles the slot. Backends are `Sync`:
+/// the reader submits and waits from many map-worker threads at once.
+pub trait IoBackend: Send + Sync {
+    /// Short name for plans and logs (`"threadpool"`, `"io_uring"`).
+    fn name(&self) -> &'static str;
+
+    /// The ring whose slots leases point into.
+    fn ring(&self) -> &Arc<BufferRing>;
+
+    /// Queue a read; returns its completion tag. Blocks only while every
+    /// ring slot is checked out (bounded: slots recycle as leases drop).
+    fn submit(&self, op: ReadOp) -> Result<u64>;
+
+    /// [`IoBackend::submit`] that refuses to block on a full ring:
+    /// `Ok(None)` when no slot is free right now. Prefetch lookahead uses
+    /// this so opportunistic reads never stall the demand path.
+    fn try_submit(&self, op: ReadOp) -> Result<Option<u64>>;
+
+    /// Block until `tag` completes. Each tag must be waited on exactly
+    /// once.
+    fn wait(&self, tag: u64) -> Result<IoLease>;
+
+    /// Backend-side counters (`reads`, `bytes_read`, `read_ms`; the
+    /// wait/hit counters live in the reader).
+    fn stats(&self) -> IoStats;
+}
+
+/// Which [`IoBackend`] implementation to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoBackendKind {
+    /// Zero-dependency pread worker threads (portable default).
+    ThreadPool,
+    /// Raw-syscall `io_uring` with registered buffers (Linux, behind the
+    /// `uring` cargo feature; falls back to the thread pool when the
+    /// kernel or seccomp policy refuses the ring).
+    Uring,
+}
+
+impl IoBackendKind {
+    /// Short name for plans and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoBackendKind::ThreadPool => "threadpool",
+            IoBackendKind::Uring => "io_uring",
+        }
+    }
+}
+
+/// The requested I/O path for an out-of-core solve, resolved by the
+/// planner ([`crate::solve::Solve::io`]) into a
+/// [`crate::solve::PlannedIo`] with a note for every fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoMode {
+    /// Let `PALLAS_IO_BACKEND` decide (`mmap` / `threadpool` / `uring`;
+    /// unset means borrow-only mmap). The default.
+    Auto,
+    /// Borrow-only mmap serving (PR-1 behavior, unchanged).
+    Mmap,
+    /// Prefetch-staged serving through the given backend.
+    Prefetch(IoBackendKind),
+}
+
+impl IoMode {
+    /// Resolve [`IoMode::Auto`] against `PALLAS_IO_BACKEND`. Returns the
+    /// concrete mode plus a note when the variable held an unknown value.
+    pub fn resolve_auto() -> (IoMode, Option<String>) {
+        match std::env::var("PALLAS_IO_BACKEND").ok().as_deref() {
+            None | Some("") | Some("mmap") => (IoMode::Mmap, None),
+            Some("threadpool") => (IoMode::Prefetch(IoBackendKind::ThreadPool), None),
+            Some("uring") => (IoMode::Prefetch(IoBackendKind::Uring), None),
+            Some(other) => (
+                IoMode::Mmap,
+                Some(format!(
+                    "PALLAS_IO_BACKEND={other:?} is not one of mmap/threadpool/uring; \
+                     keeping the borrow-only mmap path"
+                )),
+            ),
+        }
+    }
+}
+
+/// Prefetch lookahead depth: shards issued ahead of the one being
+/// consumed. `PALLAS_PREFETCH_DEPTH` overrides (0 disables lookahead —
+/// the staged-but-synchronous baseline the io bench A/Bs against).
+pub fn prefetch_depth_from_env() -> usize {
+    std::env::var("PALLAS_PREFETCH_DEPTH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(2)
+}
+
+/// Build the requested backend over a fresh ring of `n_slots` ×
+/// `slot_bytes` buffers. Returns the backend plus a human-readable note
+/// when the request fell back (uring unavailable → thread pool).
+pub fn build_backend(
+    kind: IoBackendKind,
+    n_slots: usize,
+    slot_bytes: usize,
+) -> Result<(Arc<dyn IoBackend>, Option<String>)> {
+    let threads = std::env::var("PALLAS_IO_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or(2);
+    match kind {
+        IoBackendKind::ThreadPool => {
+            let ring = BufferRing::new(n_slots, slot_bytes);
+            Ok((Arc::new(ThreadPoolBackend::new(ring, threads)), None))
+        }
+        IoBackendKind::Uring => {
+            #[cfg(feature = "uring")]
+            {
+                let ring = BufferRing::new(n_slots, slot_bytes);
+                match uring::UringBackend::new(Arc::clone(&ring)) {
+                    Ok(b) => return Ok((Arc::new(b), None)),
+                    Err(e) => {
+                        let ring = BufferRing::new(n_slots, slot_bytes);
+                        return Ok((
+                            Arc::new(ThreadPoolBackend::new(ring, threads)),
+                            Some(format!(
+                                "io_uring backend unavailable ({e}); using the thread-pool \
+                                 backend"
+                            )),
+                        ));
+                    }
+                }
+            }
+            #[cfg(not(feature = "uring"))]
+            {
+                let ring = BufferRing::new(n_slots, slot_bytes);
+                Ok((
+                    Arc::new(ThreadPoolBackend::new(ring, threads)),
+                    Some(
+                        "io_uring backend requested but this build has no `uring` feature; \
+                         using the thread-pool backend"
+                            .to_string(),
+                    ),
+                ))
+            }
+        }
+    }
+}
+
+/// One fixed-capacity read buffer. `UnsafeCell` because backend threads
+/// write a slot while the ring is shared — exclusivity is enforced by the
+/// checkout discipline, not the type system (see [`BufferRing`]).
+struct Slot {
+    data: UnsafeCell<Box<[u8]>>,
+}
+
+// SAFETY: a slot's bytes are only accessed between acquire and release
+// by the party that checked it out (backend while reading, lease holders
+// after — and a lease is only created once the read completed). The free
+// list hands a slot to at most one owner at a time.
+unsafe impl Sync for Slot {}
+
+/// A fixed ring of equally-sized read buffers, recycled on lease drop —
+/// the registered-buffer group both backends draw from. Slot count and
+/// capacity are fixed at construction so io_uring can register the
+/// buffers once (the allocations never move or grow).
+pub struct BufferRing {
+    slots: Vec<Slot>,
+    slot_bytes: usize,
+    free: Mutex<Vec<usize>>,
+    cv: Condvar,
+}
+
+impl BufferRing {
+    /// A ring of `n_slots` buffers of `slot_bytes` each.
+    pub fn new(n_slots: usize, slot_bytes: usize) -> Arc<Self> {
+        assert!(n_slots > 0 && slot_bytes > 0, "degenerate buffer ring");
+        Arc::new(Self {
+            slots: (0..n_slots)
+                .map(|_| Slot { data: UnsafeCell::new(vec![0u8; slot_bytes].into_boxed_slice()) })
+                .collect(),
+            slot_bytes,
+            free: Mutex::new((0..n_slots).rev().collect()),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Number of slots.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Capacity of each slot, bytes.
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_bytes
+    }
+
+    /// Check a slot out, blocking until one is free.
+    pub(crate) fn acquire(&self) -> usize {
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if let Some(slot) = free.pop() {
+                return slot;
+            }
+            free = self.cv.wait(free).unwrap();
+        }
+    }
+
+    /// Check a slot out only if one is free right now.
+    pub(crate) fn try_acquire(&self) -> Option<usize> {
+        self.free.lock().unwrap().pop()
+    }
+
+    /// Return a slot to the free list.
+    pub(crate) fn release(&self, slot: usize) {
+        let mut free = self.free.lock().unwrap();
+        debug_assert!(!free.contains(&slot), "double release of ring slot {slot}");
+        free.push(slot);
+        drop(free);
+        self.cv.notify_one();
+    }
+
+    /// Raw base pointer of a slot (for backend reads and io_uring buffer
+    /// registration; the allocation is stable for the ring's lifetime).
+    pub(crate) fn slot_ptr(&self, slot: usize) -> *mut u8 {
+        // SAFETY: only reads the box's pointer, never its bytes.
+        unsafe { (*self.slots[slot].data.get()).as_ptr() as *mut u8 }
+    }
+
+    /// Mutable view of a checked-out slot.
+    ///
+    /// # Safety
+    /// The caller must hold the slot's checkout (between [`acquire`] and
+    /// [`release`]/lease drop) and be its only accessor.
+    ///
+    /// [`acquire`]: BufferRing::acquire
+    /// [`release`]: BufferRing::release
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slot_mut(&self, slot: usize) -> &mut [u8] {
+        &mut *self.slots[slot].data.get()
+    }
+}
+
+/// A completed read: `len` valid bytes in a checked-out ring slot.
+/// Dropping the lease recycles the slot (clone the `Arc<IoLease>` the
+/// reader hands out to keep the data alive).
+pub struct IoLease {
+    ring: Arc<BufferRing>,
+    slot: usize,
+    len: usize,
+}
+
+impl IoLease {
+    pub(crate) fn new(ring: Arc<BufferRing>, slot: usize, len: usize) -> Self {
+        Self { ring, slot, len }
+    }
+
+    /// The read bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: the slot is checked out to this lease and the read that
+        // filled it completed before the lease was created; nobody writes
+        // it until release.
+        unsafe { &(*self.ring.slots[self.slot].data.get())[..self.len] }
+    }
+}
+
+impl Drop for IoLease {
+    fn drop(&mut self) {
+        self.ring.release(self.slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_recycles_slots() {
+        let ring = BufferRing::new(2, 16);
+        let a = ring.acquire();
+        let b = ring.acquire();
+        assert_ne!(a, b);
+        assert!(ring.try_acquire().is_none());
+        let lease = IoLease::new(Arc::clone(&ring), a, 8);
+        assert_eq!(lease.bytes().len(), 8);
+        drop(lease);
+        assert_eq!(ring.try_acquire(), Some(a));
+        ring.release(b);
+    }
+
+    #[test]
+    fn auto_mode_resolves_without_env() {
+        // the test environment does not set PALLAS_IO_BACKEND, so Auto
+        // must resolve to the unchanged mmap default
+        if std::env::var("PALLAS_IO_BACKEND").is_err() {
+            assert_eq!(IoMode::resolve_auto().0, IoMode::Mmap);
+        }
+    }
+}

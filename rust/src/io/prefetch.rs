@@ -1,0 +1,338 @@
+//! Shard-granular read scheduling over an [`IoBackend`]: demand reads,
+//! lookahead issue, LRU recycling of resident shards.
+//!
+//! The unit of I/O is one whole shard file (every file in a store is the
+//! same size — the final shard is zero-padded — so one ring slot fits any
+//! shard and byte offsets inside a lease equal the on-disk header
+//! offsets). While a consumer works on shard `k`, the reader keeps reads
+//! for shards `k+1 ..= k+depth` in flight, so by the time the map phase
+//! reaches the next shard its bytes are (usually) already resident:
+//! a *prefetch hit*. Lookahead uses [`IoBackend::try_submit`] so an
+//! exhausted ring never stalls the demand path, and completed shards are
+//! cached up to a residency cap with least-recently-touched eviction
+//! (only shards nobody is actively reading are evicted — the cache holds
+//! the only [`Arc`] then).
+//!
+//! The reader is shared by all map workers; per-shard state
+//! (`Idle → Pending → Ready`) lives under one mutex, and exactly one
+//! thread performs the backend `wait` for a given shard (others block on
+//! a condvar), so a shard is read from disk exactly once per residency.
+
+use super::{IoBackend, IoLease, IoStats, ReadOp};
+use crate::error::{Error, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Per-shard read state.
+enum ShardIo {
+    /// Nothing in flight, nothing resident.
+    Idle,
+    /// A read is in flight under this backend tag.
+    Pending(u64),
+    /// Some thread is inside `backend.wait` for this shard (or doing the
+    /// demand read); others sleep on the condvar.
+    Claimed,
+    /// Resident. Consumers clone the `Arc`; the slot recycles when the
+    /// cache evicts it and the last clone drops.
+    Ready(Arc<IoLease>),
+}
+
+struct State {
+    shards: Vec<ShardIo>,
+    /// Ready shards, least-recently-touched first.
+    lru: Vec<usize>,
+    /// Shards touched at least once (classifies hit vs miss on first
+    /// touch only).
+    touched: Vec<bool>,
+}
+
+/// Overlapped whole-shard reads for a shard store. See the module docs.
+pub struct PrefetchingShardReader {
+    backend: Arc<dyn IoBackend>,
+    /// Path of every shard file, indexed by shard.
+    paths: Vec<PathBuf>,
+    /// Common size of every shard file, bytes.
+    file_len: usize,
+    /// Shards issued ahead of the one being consumed (0 = demand-only,
+    /// the staged-but-synchronous baseline).
+    depth: usize,
+    /// Max Ready shards kept resident.
+    resident: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+    wait_ns: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PrefetchingShardReader {
+    /// A reader over `paths` (one per shard, all `file_len` bytes),
+    /// prefetching `depth` shards ahead and keeping up to `resident`
+    /// shards cached.
+    ///
+    /// The backend's ring slots must hold a whole shard file
+    /// (`slot_bytes >= file_len`) and the ring should have at least
+    /// `resident + depth + 1` slots so demand reads cannot starve.
+    pub fn new(
+        backend: Arc<dyn IoBackend>,
+        paths: Vec<PathBuf>,
+        file_len: usize,
+        depth: usize,
+        resident: usize,
+    ) -> Result<Self> {
+        if backend.ring().slot_bytes() < file_len {
+            return Err(Error::InvalidConfig(format!(
+                "ring slots ({} bytes) are smaller than a shard file ({file_len} bytes)",
+                backend.ring().slot_bytes()
+            )));
+        }
+        let n = paths.len();
+        Ok(Self {
+            backend,
+            paths,
+            file_len,
+            depth,
+            resident: resident.max(1),
+            state: Mutex::new(State {
+                shards: (0..n).map(|_| ShardIo::Idle).collect(),
+                lru: Vec::new(),
+                touched: vec![false; n],
+            }),
+            cv: Condvar::new(),
+            wait_ns: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    fn op(&self, shard: usize) -> ReadOp {
+        ReadOp { path: self.paths[shard].clone(), offset: 0, len: self.file_len }
+    }
+
+    /// The bytes of shard `k` (the whole file, header included), reading
+    /// it if needed and scheduling lookahead for the shards after it.
+    pub fn shard(&self, k: usize) -> Result<Arc<IoLease>> {
+        assert!(k < self.paths.len(), "shard {k} out of range");
+        let mut st = self.state.lock().unwrap();
+        let lease = loop {
+            match &st.shards[k] {
+                ShardIo::Ready(lease) => {
+                    let lease = Arc::clone(lease);
+                    if !st.touched[k] {
+                        st.touched[k] = true;
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    touch_lru(&mut st.lru, k);
+                    break lease;
+                }
+                ShardIo::Pending(tag) => {
+                    let tag = *tag;
+                    // data already in flight when first needed: the overlap
+                    // did its job even if we still wait out the tail
+                    if !st.touched[k] {
+                        st.touched[k] = true;
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    st.shards[k] = ShardIo::Claimed;
+                    drop(st);
+                    let res = self.finish_wait(tag);
+                    st = self.state.lock().unwrap();
+                    match res {
+                        Ok(lease) => break self.install(&mut st, k, lease),
+                        Err(e) => {
+                            st.shards[k] = ShardIo::Idle;
+                            drop(st);
+                            self.cv.notify_all();
+                            return Err(e);
+                        }
+                    }
+                }
+                ShardIo::Claimed => {
+                    st = self.cv.wait(st).unwrap();
+                }
+                ShardIo::Idle => {
+                    if !st.touched[k] {
+                        st.touched[k] = true;
+                        self.misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                    st.shards[k] = ShardIo::Claimed;
+                    // make room before the blocking acquire inside submit
+                    self.evict(&mut st, self.resident.saturating_sub(1));
+                    drop(st);
+                    let res = self.backend.submit(self.op(k)).and_then(|t| self.finish_wait(t));
+                    st = self.state.lock().unwrap();
+                    match res {
+                        Ok(lease) => break self.install(&mut st, k, lease),
+                        Err(e) => {
+                            st.shards[k] = ShardIo::Idle;
+                            drop(st);
+                            self.cv.notify_all();
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        };
+        self.schedule_lookahead(&mut st, k);
+        Ok(lease)
+    }
+
+    /// Block on the backend for a tag, charging the stall to `wait_ms`.
+    fn finish_wait(&self, tag: u64) -> Result<IoLease> {
+        let t0 = Instant::now();
+        let lease = self.backend.wait(tag);
+        self.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        lease
+    }
+
+    /// Publish a completed read as Ready and wake sleepers.
+    fn install(&self, st: &mut State, k: usize, lease: IoLease) -> Arc<IoLease> {
+        let lease = Arc::new(lease);
+        st.shards[k] = ShardIo::Ready(Arc::clone(&lease));
+        touch_lru(&mut st.lru, k);
+        self.evict(st, self.resident);
+        self.cv.notify_all();
+        lease
+    }
+
+    /// Drop least-recently-touched Ready shards nobody holds until at most
+    /// `keep` remain resident.
+    fn evict(&self, st: &mut State, keep: usize) {
+        while st.lru.len() > keep {
+            let Some(pos) = st.lru.iter().position(|&s| {
+                matches!(&st.shards[s], ShardIo::Ready(l) if Arc::strong_count(l) == 1)
+            }) else {
+                return; // everything resident is in active use
+            };
+            let s = st.lru.remove(pos);
+            st.shards[s] = ShardIo::Idle;
+        }
+    }
+
+    /// Issue reads for shards `k+1 ..= k+depth` that are still Idle,
+    /// without ever blocking on a full ring.
+    fn schedule_lookahead(&self, st: &mut State, k: usize) {
+        for j in k + 1..=(k + self.depth).min(self.paths.len().saturating_sub(1)) {
+            if !matches!(st.shards[j], ShardIo::Idle) {
+                continue;
+            }
+            match self.backend.try_submit(self.op(j)) {
+                Ok(Some(tag)) => st.shards[j] = ShardIo::Pending(tag),
+                Ok(None) => return, // ring saturated; demand path has priority
+                Err(_) => return,   // surface errors on the demand read instead
+            }
+        }
+    }
+
+    /// Reader + backend statistics, merged.
+    pub fn stats(&self) -> IoStats {
+        let mut s = self.backend.stats();
+        s.wait_ms = self.wait_ns.load(Ordering::Relaxed) as f64 / 1e6;
+        s.prefetch_hits = self.hits.load(Ordering::Relaxed);
+        s.prefetch_misses = self.misses.load(Ordering::Relaxed);
+        s
+    }
+
+    /// Backend name (for plans).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Configured lookahead depth.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+}
+
+fn touch_lru(lru: &mut Vec<usize>, k: usize) {
+    if let Some(pos) = lru.iter().position(|&s| s == k) {
+        lru.remove(pos);
+    }
+    lru.push(k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::{BufferRing, ThreadPoolBackend};
+
+    fn shard_fixture(n: usize, len: usize) -> (std::path::PathBuf, Vec<PathBuf>, Vec<Vec<u8>>) {
+        let dir = std::env::temp_dir()
+            .join(format!("bskp-io-pf-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut paths = Vec::new();
+        let mut payloads = Vec::new();
+        for s in 0..n {
+            let payload: Vec<u8> = (0..len).map(|i| ((i * 7 + s * 131) % 256) as u8).collect();
+            let p = dir.join(format!("shard-{s:06}.bin"));
+            std::fs::write(&p, &payload).unwrap();
+            paths.push(p);
+            payloads.push(payload);
+        }
+        (dir, paths, payloads)
+    }
+
+    #[test]
+    fn sequential_scan_prefetches() {
+        let (dir, paths, payloads) = shard_fixture(6, 1024);
+        let backend: Arc<dyn IoBackend> =
+            Arc::new(ThreadPoolBackend::new(BufferRing::new(5, 1024), 2));
+        let reader = PrefetchingShardReader::new(backend, paths, 1024, 2, 2).unwrap();
+        for (s, expect) in payloads.iter().enumerate() {
+            let lease = reader.shard(s).unwrap();
+            assert_eq!(lease.bytes(), &expect[..]);
+        }
+        let stats = reader.stats();
+        assert_eq!(stats.prefetch_hits + stats.prefetch_misses, 6, "every shard touched once");
+        assert!(stats.prefetch_hits >= 4, "lookahead covered the scan: {stats:?}");
+        assert!(stats.reads >= 6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn depth_zero_is_all_misses_and_still_correct() {
+        let (dir, paths, payloads) = shard_fixture(4, 512);
+        let backend: Arc<dyn IoBackend> =
+            Arc::new(ThreadPoolBackend::new(BufferRing::new(3, 512), 1));
+        let reader = PrefetchingShardReader::new(backend, paths, 512, 0, 2).unwrap();
+        // revisits hit the resident cache; eviction keeps only 2 resident
+        for &s in &[0usize, 1, 0, 2, 3, 3, 0] {
+            assert_eq!(reader.shard(s).unwrap().bytes(), &payloads[s][..]);
+        }
+        let stats = reader.stats();
+        assert_eq!(stats.prefetch_hits, 0);
+        assert_eq!(stats.prefetch_misses, 4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_consumers_agree() {
+        let (dir, paths, payloads) = shard_fixture(8, 2048);
+        let backend: Arc<dyn IoBackend> =
+            Arc::new(ThreadPoolBackend::new(BufferRing::new(6, 2048), 2));
+        let reader =
+            Arc::new(PrefetchingShardReader::new(backend, paths, 2048, 2, 3).unwrap());
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let reader = Arc::clone(&reader);
+                let payloads = &payloads;
+                scope.spawn(move || {
+                    for i in 0..8 {
+                        let s = (i + t) % 8;
+                        assert_eq!(reader.shard(s).unwrap().bytes(), &payloads[s][..]);
+                    }
+                });
+            }
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn undersized_slots_are_rejected() {
+        let backend: Arc<dyn IoBackend> =
+            Arc::new(ThreadPoolBackend::new(BufferRing::new(2, 100), 1));
+        assert!(PrefetchingShardReader::new(backend, vec![], 101, 2, 2).is_err());
+    }
+}

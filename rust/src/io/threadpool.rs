@@ -1,0 +1,254 @@
+//! The portable [`IoBackend`]: a small pool of pread worker threads.
+//!
+//! Zero dependencies and no platform assumptions beyond `std`: each
+//! worker pops a queued [`ReadOp`], reads it into its pre-acquired ring
+//! slot with `pread`-style positioned reads (seek+read off unix), and
+//! publishes the completion. Overlap comes from the workers running on
+//! their own threads — the submitting thread returns immediately and the
+//! kernels keep computing while the page cache / disk fills the slot.
+
+use super::{BufferRing, IoBackend, IoLease, IoStats, ReadOp};
+use crate::error::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+struct Queue {
+    jobs: VecDeque<(u64, ReadOp, usize)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    ring: Arc<BufferRing>,
+    queue: Mutex<Queue>,
+    queue_cv: Condvar,
+    /// tag → completed read: `Ok((slot, len))` or the error (slot already
+    /// released on error). Entries are removed by the single waiter.
+    done: Mutex<HashMap<u64, std::result::Result<(usize, usize), Error>>>,
+    done_cv: Condvar,
+    next_tag: AtomicU64,
+    reads: AtomicU64,
+    bytes: AtomicU64,
+    read_ns: AtomicU64,
+}
+
+impl Shared {
+    fn complete(&self, tag: u64, res: std::result::Result<(usize, usize), Error>) {
+        self.done.lock().unwrap().insert(tag, res);
+        self.done_cv.notify_all();
+    }
+}
+
+/// Thread-pool read backend (the portable default). See the module docs.
+pub struct ThreadPoolBackend {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPoolBackend {
+    /// A backend with `threads` pread workers over `ring`.
+    pub fn new(ring: Arc<BufferRing>, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            ring,
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            queue_cv: Condvar::new(),
+            done: Mutex::new(HashMap::new()),
+            done_cv: Condvar::new(),
+            next_tag: AtomicU64::new(1),
+            reads: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            read_ns: AtomicU64::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bskp-io-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn io worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    fn enqueue(&self, op: ReadOp, slot: usize) -> u64 {
+        let tag = self.shared.next_tag.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back((tag, op, slot));
+        drop(q);
+        self.shared.queue_cv.notify_one();
+        tag
+    }
+}
+
+impl Drop for ThreadPoolBackend {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.queue_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.queue_cv.wait(q).unwrap();
+            }
+        };
+        let (tag, op, slot) = job;
+        let t0 = Instant::now();
+        // SAFETY: the slot was acquired by submit for this read and nobody
+        // else touches it until the lease (created after completion) drops.
+        let dst = unsafe { &mut shared.ring.slot_mut(slot)[..op.len] };
+        let res = read_exact_at(&op, dst);
+        shared.read_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match res {
+            Ok(()) => {
+                shared.reads.fetch_add(1, Ordering::Relaxed);
+                shared.bytes.fetch_add(op.len as u64, Ordering::Relaxed);
+                shared.complete(tag, Ok((slot, op.len)));
+            }
+            Err(e) => {
+                shared.ring.release(slot);
+                shared.complete(tag, Err(Error::Io(e)));
+            }
+        }
+    }
+}
+
+fn read_exact_at(op: &ReadOp, dst: &mut [u8]) -> std::io::Result<()> {
+    let file = File::open(&op.path)?;
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        file.read_exact_at(dst, op.offset)
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut file = file;
+        file.seek(SeekFrom::Start(op.offset))?;
+        file.read_exact(dst)
+    }
+}
+
+impl IoBackend for ThreadPoolBackend {
+    fn name(&self) -> &'static str {
+        "threadpool"
+    }
+
+    fn ring(&self) -> &Arc<BufferRing> {
+        &self.shared.ring
+    }
+
+    fn submit(&self, op: ReadOp) -> Result<u64> {
+        check_op(&self.shared.ring, &op)?;
+        let slot = self.shared.ring.acquire();
+        Ok(self.enqueue(op, slot))
+    }
+
+    fn try_submit(&self, op: ReadOp) -> Result<Option<u64>> {
+        check_op(&self.shared.ring, &op)?;
+        match self.shared.ring.try_acquire() {
+            Some(slot) => Ok(Some(self.enqueue(op, slot))),
+            None => Ok(None),
+        }
+    }
+
+    fn wait(&self, tag: u64) -> Result<IoLease> {
+        let mut done = self.shared.done.lock().unwrap();
+        loop {
+            if let Some(res) = done.remove(&tag) {
+                let (slot, len) = res?;
+                return Ok(IoLease::new(Arc::clone(&self.shared.ring), slot, len));
+            }
+            done = self.shared.done_cv.wait(done).unwrap();
+        }
+    }
+
+    fn stats(&self) -> IoStats {
+        IoStats {
+            reads: self.shared.reads.load(Ordering::Relaxed),
+            bytes_read: self.shared.bytes.load(Ordering::Relaxed),
+            read_ms: self.shared.read_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            ..IoStats::default()
+        }
+    }
+}
+
+pub(crate) fn check_op(ring: &BufferRing, op: &ReadOp) -> Result<()> {
+    if op.len > ring.slot_bytes() {
+        return Err(Error::InvalidConfig(format!(
+            "read of {} bytes exceeds the ring's {}-byte slots",
+            op.len,
+            ring.slot_bytes()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_round_trip_and_overlap() {
+        let dir = std::env::temp_dir().join(format!("bskp-io-tp-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let payload: Vec<u8> = (0..65536u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+
+        let backend = ThreadPoolBackend::new(BufferRing::new(4, 4096), 2);
+        let tags: Vec<u64> = (0..4)
+            .map(|i| {
+                backend
+                    .submit(ReadOp { path: path.clone(), offset: i * 4096, len: 4096 })
+                    .unwrap()
+            })
+            .collect();
+        for (i, tag) in tags.into_iter().enumerate() {
+            let lease = backend.wait(tag).unwrap();
+            assert_eq!(lease.bytes(), &payload[i * 4096..(i + 1) * 4096]);
+        }
+        let s = backend.stats();
+        assert_eq!(s.reads, 4);
+        assert_eq!(s.bytes_read, 4 * 4096);
+
+        let missing =
+            backend.submit(ReadOp { path: dir.join("absent"), offset: 0, len: 16 }).unwrap();
+        assert!(backend.wait(missing).is_err());
+        // the errored read released its slot: the ring must still hand out
+        // all four slots
+        let all: Vec<u64> = (0..4)
+            .map(|_| backend.submit(ReadOp { path: path.clone(), offset: 0, len: 8 }).unwrap())
+            .collect();
+        for tag in all {
+            assert_eq!(backend.wait(tag).unwrap().bytes(), &payload[..8]);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_read_is_rejected() {
+        let backend = ThreadPoolBackend::new(BufferRing::new(1, 64), 1);
+        let err = backend
+            .submit(ReadOp { path: "/dev/null".into(), offset: 0, len: 65 })
+            .unwrap_err();
+        assert!(err.to_string().contains("exceeds"));
+    }
+}

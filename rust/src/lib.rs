@@ -81,6 +81,7 @@ pub mod coordinator;
 pub mod error;
 pub mod exact;
 pub mod instance;
+pub mod io;
 pub mod lp;
 pub mod mapreduce;
 pub mod metrics;

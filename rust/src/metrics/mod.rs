@@ -27,6 +27,22 @@ pub fn plan_to_json(p: &SolvePlan<'_>) -> JsonValue {
         ("algorithm".to_string(), JsonValue::Str(algorithm.to_string())),
         ("backend".to_string(), JsonValue::Str(p.backend.name().to_string())),
         ("executor".to_string(), JsonValue::Str(p.executor().to_string())),
+        (
+            "io".to_string(),
+            match &p.io {
+                crate::solve::PlannedIo::Prefetched { backend, depth } => {
+                    JsonValue::Object(vec![
+                        ("mode".to_string(), JsonValue::Str("prefetched".to_string())),
+                        ("backend".to_string(), JsonValue::Str(backend.to_string())),
+                        ("depth".to_string(), JsonValue::Num(*depth as f64)),
+                    ])
+                }
+                other => JsonValue::Object(vec![(
+                    "mode".to_string(),
+                    JsonValue::Str(other.name().to_string()),
+                )]),
+            },
+        ),
         ("reduce".to_string(), JsonValue::Str(reduce)),
         ("workers".to_string(), JsonValue::Num(p.cluster.workers() as f64)),
         ("shard_count".to_string(), JsonValue::Num(p.shard_count as f64)),
@@ -106,6 +122,17 @@ pub fn report_to_json(r: &SolveReport) -> JsonValue {
             ("walks_total".to_string(), JsonValue::Num(r.phases.walks_total as f64)),
             ("walks_skipped".to_string(), JsonValue::Num(r.phases.walks_skipped as f64)),
             ("skip_rate".to_string(), JsonValue::Num(r.phases.skip_rate())),
+            ("io_read_ms".to_string(), JsonValue::Num(r.phases.io_read_ms)),
+            ("io_wait_ms".to_string(), JsonValue::Num(r.phases.io_wait_ms)),
+            ("io_bytes".to_string(), JsonValue::Num(r.phases.io_bytes as f64)),
+            (
+                "io_prefetch_hits".to_string(),
+                JsonValue::Num(r.phases.io_prefetch_hits as f64),
+            ),
+            (
+                "io_prefetch_misses".to_string(),
+                JsonValue::Num(r.phases.io_prefetch_misses as f64),
+            ),
         ]),
     ));
     obj.push((

@@ -34,7 +34,7 @@ pub mod scaled;
 pub mod warm;
 
 pub use observers::{ChainObserver, CheckpointObserver, StopAfter};
-pub use plan::{CheckpointPlan, PlanNote, PlannedBackend, SolvePlan};
+pub use plan::{CheckpointPlan, PlanNote, PlannedBackend, PlannedIo, SolvePlan};
 pub use scaled::ScaledBudgets;
 pub use warm::{
     default_checkpoint_path, read_checkpoint, write_checkpoint, Checkpoint, WarmStart,
@@ -52,6 +52,8 @@ use crate::coordinator::{Algorithm, Backend};
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
+use crate::instance::store::StagedProblem;
+use crate::io::{prefetch_depth_from_env, IoMode};
 use crate::mapreduce::Cluster;
 use crate::solver::config::{ReduceMode, SolverConfig};
 use crate::solver::sparse_q;
@@ -88,6 +90,7 @@ pub struct Solve<'a> {
     warm: Option<WarmStart>,
     checkpoint: CheckpointRequest,
     clock: Option<Arc<dyn Clock>>,
+    io: IoMode,
 }
 
 impl<'a> Solve<'a> {
@@ -107,6 +110,7 @@ impl<'a> Solve<'a> {
             warm: None,
             checkpoint: CheckpointRequest::Off,
             clock: None,
+            io: IoMode::Auto,
         }
     }
 
@@ -177,6 +181,18 @@ impl<'a> Solve<'a> {
     /// behavior.
     pub fn clock(mut self, c: Arc<dyn Clock>) -> Self {
         self.clock = Some(c);
+        self
+    }
+
+    /// Request an I/O path for out-of-core serving (default:
+    /// [`IoMode::Auto`], which follows `PALLAS_IO_BACKEND` and means
+    /// borrow-only mmap when the variable is unset). Like every other
+    /// capability, an unservable request falls back with a plan note:
+    /// prefetch staging on a source with no shard store, or under a
+    /// distributed executor (workers read their own replicas), keeps the
+    /// existing path. See `docs/io.md`.
+    pub fn io(mut self, mode: IoMode) -> Self {
+        self.io = mode;
         self
     }
 
@@ -313,6 +329,62 @@ impl<'a> Solve<'a> {
             self.config.shard_size,
         );
 
+        // I/O path: capability-planned like the backend and executor. Auto
+        // resolves the PALLAS_IO_BACKEND knob (unset ⇒ mmap, note-free);
+        // an explicit prefetch request that cannot be served falls back
+        // with a note instead of erroring.
+        let resolved_io = match self.io {
+            IoMode::Auto => {
+                let (m, note) = IoMode::resolve_auto();
+                if let Some(n) = note {
+                    notes.push(PlanNote::new("io", n));
+                }
+                m
+            }
+            m => m,
+        };
+        let mut planned_io = if self.source.store_dir().is_some() {
+            PlannedIo::Mmap
+        } else {
+            PlannedIo::InMemory
+        };
+        let mut staged = None;
+        if let IoMode::Prefetch(kind) = resolved_io {
+            match self.source.store_dir() {
+                None => notes.push(PlanNote::new(
+                    "io",
+                    "prefetch staging requested but the source has no on-disk shard store; \
+                     serving from memory",
+                )),
+                Some(_) if remote.is_some() => notes.push(PlanNote::new(
+                    "io",
+                    "prefetch staging requested but the map phase runs on remote workers \
+                     (each reads its own store replica); leader keeps the borrow-only mmap \
+                     path",
+                )),
+                Some(dir) => {
+                    let depth = prefetch_depth_from_env();
+                    match StagedProblem::open(&dir, kind, depth, cluster.workers()) {
+                        Ok((sp, io_notes)) => {
+                            for n in io_notes {
+                                notes.push(PlanNote::new("io", n));
+                            }
+                            planned_io =
+                                PlannedIo::Prefetched { backend: sp.backend_name(), depth };
+                            staged = Some(sp);
+                        }
+                        Err(e) => notes.push(PlanNote::new(
+                            "io",
+                            format!(
+                                "prefetch staging unavailable ({e}); keeping the borrow-only \
+                                 mmap path"
+                            ),
+                        )),
+                    }
+                }
+            }
+        }
+
         let checkpoint = match self.checkpoint {
             CheckpointRequest::Off => None,
             CheckpointRequest::To { path, every } => Some(CheckpointPlan { path, every }),
@@ -343,6 +415,8 @@ impl<'a> Solve<'a> {
             shard_size: shards.shard_size(),
             warm: self.warm,
             checkpoint,
+            io: planned_io,
+            staged,
             notes,
             clock: self.clock.unwrap_or_else(|| Arc::new(SystemClock)),
         })

@@ -11,6 +11,7 @@ use crate::cluster::{Clock, Exec, RemoteCluster};
 use crate::coordinator::Algorithm;
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
+use crate::instance::store::StagedProblem;
 use crate::mapreduce::Cluster;
 use crate::solve::observers::{ChainObserver, CheckpointObserver};
 use crate::solve::warm::WarmStart;
@@ -82,6 +83,37 @@ impl PlannedBackend {
     }
 }
 
+/// How the planner will serve group data to the map phase (the
+/// [`crate::io::IoMode`] request resolved against the instance and
+/// executor; see `docs/io.md`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlannedIo {
+    /// The source is in memory; no I/O path applies.
+    InMemory,
+    /// Borrow-only memory-mapped serving (the out-of-core default,
+    /// unchanged from PR 1).
+    Mmap,
+    /// Prefetch-staged serving through the async I/O subsystem: reads for
+    /// upcoming shards overlap with compute.
+    Prefetched {
+        /// Backend name (`"threadpool"` / `"io_uring"`).
+        backend: &'static str,
+        /// Shards read ahead of the one being consumed.
+        depth: usize,
+    },
+}
+
+impl PlannedIo {
+    /// Short name for logs and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannedIo::InMemory => "in-memory",
+            PlannedIo::Mmap => "mmap",
+            PlannedIo::Prefetched { .. } => "prefetched",
+        }
+    }
+}
+
 /// Planned periodic λ checkpointing.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CheckpointPlan {
@@ -116,6 +148,12 @@ pub struct SolvePlan<'a> {
     pub warm: Option<WarmStart>,
     /// Periodic λ checkpointing, if enabled and resolvable.
     pub checkpoint: Option<CheckpointPlan>,
+    /// How group data reaches the map phase (mmap vs prefetch-staged).
+    pub io: PlannedIo,
+    /// The prefetch-staged source, when `io` is
+    /// [`PlannedIo::Prefetched`] — the run serves blocks through it
+    /// instead of `source` (bit-identical bytes, overlapped arrival).
+    pub(crate) staged: Option<StagedProblem>,
     /// Every fallback / advisory decision the planner made.
     pub notes: Vec<PlanNote>,
     /// Clock the drivers read phase timings through (the system clock
@@ -163,6 +201,13 @@ impl fmt::Display for SolvePlan<'_> {
         }
         if let Some(c) = &self.checkpoint {
             writeln!(f, "  checkpoint: {} every {} rounds", c.path.display(), c.every)?;
+        }
+        match &self.io {
+            PlannedIo::InMemory => {}
+            PlannedIo::Mmap => writeln!(f, "  io: borrow-only mmap")?,
+            PlannedIo::Prefetched { backend, depth } => {
+                writeln!(f, "  io: prefetch-staged ({backend}, depth {depth})")?
+            }
         }
         for note in &self.notes {
             writeln!(f, "  {note}")?;
@@ -226,7 +271,14 @@ impl<'a> SolvePlan<'a> {
             if chain.is_empty() { None } else { Some(&mut chain) };
 
         let init = self.warm.as_ref().map(|w| w.lambda.as_slice());
-        let (source, config, cluster) = (self.source, &self.config, &self.cluster);
+        // prefetch-staged serving swaps the block source; the bytes are
+        // identical to the mmap path's, only their arrival overlaps with
+        // compute
+        let source: &dyn GroupSource = match &self.staged {
+            Some(s) => s,
+            None => self.source,
+        };
+        let (config, cluster) = (&self.config, &self.cluster);
         let clock = Arc::clone(&self.clock);
         let clock = clock.as_ref();
         // the planner only attaches a remote fleet to the pure-rust
@@ -235,7 +287,7 @@ impl<'a> SolvePlan<'a> {
             Some(r) => Exec::Remote(r.as_ref()),
             None => Exec::Local(cluster),
         };
-        match (self.algorithm, &self.backend) {
+        let result = match (self.algorithm, &self.backend) {
             (Algorithm::Scd, PlannedBackend::Rust) => {
                 scd::solve_scd_exec_clocked(source, config, &exec, init, observer, clock)
             }
@@ -274,6 +326,18 @@ impl<'a> SolvePlan<'a> {
                 "plan pairs {algo:?} with backend {}, which cannot run it",
                 backend.name()
             ))),
+        };
+        let mut report = result?;
+        if let Some(staged) = &self.staged {
+            // annotate the report with what the I/O plane did: wait_ms is
+            // the compute-visible stall, read_ms the overlapped work
+            let io = staged.io_stats();
+            report.phases.io_read_ms = io.read_ms;
+            report.phases.io_wait_ms = io.wait_ms;
+            report.phases.io_bytes = io.bytes_read;
+            report.phases.io_prefetch_hits = io.prefetch_hits;
+            report.phases.io_prefetch_misses = io.prefetch_misses;
         }
+        Ok(report)
     }
 }

@@ -49,6 +49,21 @@ pub struct PhaseTimings {
     pub walks_total: u64,
     /// Walks served by replaying the λ-stability cache.
     pub walks_skipped: u64,
+    /// Time spent inside shard reads by the async I/O subsystem,
+    /// milliseconds — overlappable work on the backend's threads, not the
+    /// map workers' (0 when serving from memory or borrow-only mmap).
+    pub io_read_ms: f64,
+    /// Time map workers were *blocked* waiting for shard data,
+    /// milliseconds — the compute-visible I/O stall. Prefetch is working
+    /// when this stays far below `io_read_ms`.
+    pub io_wait_ms: f64,
+    /// Bytes read by the async I/O subsystem.
+    pub io_bytes: u64,
+    /// Shards whose read was already in flight (or done) when first
+    /// needed.
+    pub io_prefetch_hits: u64,
+    /// Shards that had to be read synchronously on demand.
+    pub io_prefetch_misses: u64,
 }
 
 impl PhaseTimings {

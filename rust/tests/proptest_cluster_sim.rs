@@ -21,7 +21,8 @@
 //! proptest_cluster_sim` (see `docs/simulation.md`).
 
 use bskp::cluster::{
-    Clock, ConnectOptions, Dir, Exec, FaultPlan, LinkFaults, RemoteCluster, SimNet, TraceKind,
+    Clock, ConnectOptions, Dir, Exec, ExchangeMode, FaultPlan, LinkFaults, RemoteCluster, SimNet,
+    TraceEvent, TraceKind,
 };
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::instance::store::MmapProblem;
@@ -92,13 +93,40 @@ fn sim_fleet(seed: u64, plan: FaultPlan, dir: &Path, n: usize) -> (SimNet, Vec<S
 
 /// Explicit timeout policy (the production defaults, pinned): the
 /// suite's outcomes must be a function of `(seed, plan)` alone, never of
-/// `PALLAS_CLUSTER_*_MS` variables the host environment happens to
-/// export.
+/// `PALLAS_CLUSTER_*_MS` / `PALLAS_EXCHANGE` variables the host
+/// environment happens to export. The exchange mode is pinned to `Wave`,
+/// whose per-link traces are totally ordered — the exact-trace replay
+/// assertions below depend on that; the overlapped mode has its own
+/// tests, which compare traces after canonical sorting.
 fn sim_opts() -> ConnectOptions {
     ConnectOptions {
         connect_timeout: Duration::from_secs(5),
         exchange_timeout: Duration::from_secs(600),
+        exchange: ExchangeMode::Wave,
     }
+}
+
+/// [`sim_opts`] with the overlapped (default-in-production) exchange.
+fn overlap_opts() -> ConnectOptions {
+    ConnectOptions { exchange: ExchangeMode::Overlap, ..sim_opts() }
+}
+
+/// Canonical trace order for overlap-mode replay comparison: overlap
+/// flushes a link's two directions concurrently, so the *recorded* order
+/// of causally unrelated opposite-direction events can vary between
+/// replays — but every event's identity, timestamp and fault decoration
+/// must still replay exactly. Sorting by `(worker, conn, dir, seq,
+/// at_ns, kind)` removes the recording-order freedom and nothing else.
+fn canonical_trace(mut trace: Vec<TraceEvent>) -> Vec<TraceEvent> {
+    trace.sort_by_key(|e| {
+        let dir = match e.dir {
+            None => 0u8,
+            Some(Dir::ToWorker) => 1,
+            Some(Dir::ToLeader) => 2,
+        };
+        (e.worker, e.conn, dir, e.seq, e.at_ns, format!("{:?}", e.kind))
+    });
+    trace
 }
 
 /// Two runs with the same `(seed, fault plan)` must produce identical
@@ -373,6 +401,127 @@ fn planned_session_runs_on_the_simulator() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The overlapped exchange must be a pure performance change: same
+/// chunk partition, same chunk-ordered merge, bit-identical report to
+/// both wave mode and the in-process executor — on a healthy fleet and
+/// on one with asymmetric latency (where overlap actually reorders the
+/// completion times wave mode would have had).
+#[test]
+fn overlap_exchange_matches_wave_bit_identically() {
+    let dir = write_store("overlap", 2_000, 19);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    // one slow link: under waves everyone idles on it, under overlap the
+    // fast workers run ahead — the merge must not care
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults { delay_ns: 2_000_000, jitter_ns: 800_000, ..Default::default() },
+            LinkFaults::default(),
+            LinkFaults { delay_ns: 150_000, ..Default::default() },
+        ],
+    };
+    let run = |opts: ConnectOptions| {
+        let (sim, addrs) = sim_fleet(31, plan.clone(), &dir, 3);
+        let (fleet, skipped) =
+            RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, opts)
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+            .expect("sim solve completes");
+        let stats = fleet.stats();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats)
+    };
+
+    let (wave, wave_stats) = run(sim_opts());
+    let (overlap, overlap_stats) = run(overlap_opts());
+    assert_reports_match(&overlap, &wave, "overlap vs wave");
+    assert_reports_match(&overlap, &baseline, "overlap vs in-process");
+    // same protocol underneath: every task answered once, same rounds
+    assert_eq!(overlap_stats.rounds, wave_stats.rounds, "{overlap_stats:?} vs {wave_stats:?}");
+    assert_eq!(overlap_stats.workers_lost, 0, "{overlap_stats:?}");
+    assert_eq!(overlap_stats.redispatches, 0, "{overlap_stats:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Overlap-mode replay determinism: two runs with the same `(seed,
+/// plan)` produce bit-identical reports, identical wire statistics and
+/// — after canonical sorting (see [`canonical_trace`]) — identical
+/// traces, faults and virtual timestamps included.
+#[test]
+fn overlap_exchange_replays_deterministically() {
+    let dir = write_store("overlap_det", 1_800, 37);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(5);
+
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults { delay_ns: 400_000, jitter_ns: 900_000, ..Default::default() },
+            LinkFaults { drop_prob: 0.12, jitter_ns: 500_000, ..Default::default() },
+            LinkFaults { reorder_prob: 0.4, dup_prob: 0.3, ..Default::default() },
+            LinkFaults::default(),
+        ],
+    };
+    let run = |seed: u64| {
+        let (sim, addrs) = sim_fleet(seed, plan.clone(), &dir, 4);
+        let (fleet, skipped) =
+            RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, overlap_opts())
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+            .expect("sim solve completes");
+        let stats = fleet.stats();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats, canonical_trace(sim.trace()))
+    };
+
+    let (r1, s1, t1) = run(42);
+    let (r2, s2, t2) = run(42);
+    assert_eq!(t1, t2, "same (seed, plan) must replay the identical canonical trace");
+    assert_eq!(s1, s2, "wire statistics must replay under overlap");
+    assert_reports_match(&r1, &r2, "overlap replay");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker crash under the overlapped exchange: the dead link's whole
+/// dealt queue (in-flight pipeline included) re-queues to survivors and
+/// the answer is still exact.
+#[test]
+fn overlap_exchange_survives_worker_crash() {
+    let dir = write_store("overlap_crash", 2_000, 53);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults::default(),
+            LinkFaults { crash_on_reply: Some(3), ..Default::default() },
+            LinkFaults::default(),
+        ],
+    };
+    let (sim, addrs) = sim_fleet(61, plan, &dir, 3);
+    let (fleet, skipped) =
+        RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, overlap_opts())
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+        .expect("survivors finish the solve");
+    let stats = fleet.stats();
+    drop(fleet);
+    sim.shutdown();
+
+    assert_reports_match(&report, &baseline, "overlap crash");
+    assert_eq!(stats.workers_lost, 1, "exactly the crashed worker: {stats:?}");
+    assert_eq!(stats.workers_live, 2, "{stats:?}");
+    assert!(stats.redispatches >= 1, "the dead queue must re-dispatch: {stats:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Build a random fault plan — the generator of the chaos property.
 fn random_plan(rng: &mut Xoshiro256pp, workers: usize) -> FaultPlan {
     let mut links = Vec::with_capacity(workers);
@@ -441,16 +590,18 @@ fn random_fault_plans_never_hang_or_diverge() {
         let mut rng = Xoshiro256pp::new(case_seed);
         let workers = worker_counts[rng.below(4) as usize];
         let use_dd = rng.coin(0.25);
+        let overlap = rng.coin(0.5);
         let plan = random_plan(&mut rng, workers);
         let ctx = format!(
             "case {case} (base seed {base_seed}, case seed {case_seed}, {workers} workers, \
-             {}) — replay with PALLAS_SIM_SEED={base_seed}\nplan: {plan:#?}",
+             {}, {}) — replay with PALLAS_SIM_SEED={base_seed}\nplan: {plan:#?}",
             if use_dd { "dd" } else { "scd" },
+            if overlap { "overlap" } else { "wave" },
         );
 
         let (sim, addrs) = sim_fleet(case_seed, plan, &dir, workers);
-        let connected =
-            RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts());
+        let opts = if overlap { overlap_opts() } else { sim_opts() };
+        let connected = RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, opts);
         let outcome = match &connected {
             Ok((fleet, _skipped)) => {
                 if use_dd {

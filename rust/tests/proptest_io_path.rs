@@ -1,0 +1,202 @@
+//! Bit-identity suite for the async I/O subsystem (`bskp::io`).
+//!
+//! The contract under test: a shard store served prefetch-staged
+//! ([`StagedProblem`], any backend, any depth — including depth 0, the
+//! staged-but-synchronous baseline) yields **bit-identical** group data
+//! and **bit-identical** solve results to the borrow-only mmap path.
+//! The padded final shard is exercised deliberately (group counts are
+//! chosen to not divide the shard size), because the staged path must
+//! respect `hdr.rows` exactly like a fresh mapping does.
+//!
+//! Run with `--features uring` to drive the raw-syscall io_uring backend
+//! through the same assertions (on kernels without io_uring the backend
+//! construction falls back to the thread pool with a note — the identity
+//! assertions hold either way, which is itself part of the contract).
+
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::problem::{for_each_row, BlockBuf, GroupSource, RowCosts};
+use bskp::instance::store::{MmapProblem, StagedProblem};
+use bskp::io::{IoBackendKind, IoMode};
+use bskp::mapreduce::Cluster;
+use bskp::solve::{PlannedIo, Solve};
+use bskp::solver::stats::SolveReport;
+use bskp::solver::SolverConfig;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_io_it_{}_{name}", std::process::id()))
+}
+
+fn write_store(name: &str, cfg: GeneratorConfig, shard_size: usize) -> PathBuf {
+    let p = SyntheticProblem::new(cfg);
+    let dir = tmp_dir(name);
+    std::fs::remove_dir_all(&dir).ok();
+    p.write_shards(&dir, shard_size, &Cluster::new(2)).expect("write store");
+    dir
+}
+
+/// Every bit a source serves through its own `block_end`/`fill_block`
+/// walk: group ids, profit bits, cost bits (and knapsack indices for the
+/// sparse layout). Two sources serving the same store must produce equal
+/// vectors — not approximately, exactly.
+fn fingerprint<S: GroupSource + ?Sized>(src: &S) -> Vec<u64> {
+    let n = src.dims().n_groups;
+    let mut out = Vec::new();
+    let mut buf = BlockBuf::default();
+    for_each_row(src, 0, n, &mut buf, |i, row| {
+        out.push(i as u64);
+        out.extend(row.profits.iter().map(|p| p.to_bits() as u64));
+        match row.costs {
+            RowCosts::Dense(b) => out.extend(b.iter().map(|c| c.to_bits() as u64)),
+            RowCosts::Sparse { knap, cost } => {
+                out.extend(knap.iter().map(|&k| k as u64));
+                out.extend(cost.iter().map(|c| c.to_bits() as u64));
+            }
+        }
+    });
+    out
+}
+
+fn assert_staged_matches(dir: &Path, want: &[u64], kind: IoBackendKind, depth: usize) {
+    let (staged, _notes) =
+        StagedProblem::open(dir, kind, depth, 2).expect("open staged");
+    let got = fingerprint(&staged);
+    assert_eq!(
+        got.len(),
+        want.len(),
+        "staged walk ({}, depth {depth}) visited a different volume of data",
+        staged.backend_name()
+    );
+    assert!(
+        got == *want,
+        "staged serving ({}, depth {depth}) diverged from mmap bytes",
+        staged.backend_name()
+    );
+    let io = staged.io_stats();
+    assert!(io.reads > 0, "staged walk must go through the backend: {io:?}");
+    assert!(io.bytes_read > 0, "{io:?}");
+}
+
+/// Sparse layout: thread pool at depth 2 and depth 0, plus the uring
+/// kind (real io_uring under `--features uring` on a capable kernel,
+/// documented fallback otherwise) — all bit-identical to mmap. 1 000
+/// groups over shard size 256 leaves a zero-padded 232-row final shard.
+#[test]
+fn staged_blocks_match_mmap_bit_for_bit_sparse() {
+    let dir = write_store("sparse", GeneratorConfig::sparse(1_000, 6, 6).with_seed(7), 256);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let want = fingerprint(&mm);
+    assert_eq!(want.len(), 1_000 * (1 + 3 * 6), "fingerprint covers every group");
+
+    assert_staged_matches(&dir, &want, IoBackendKind::ThreadPool, 2);
+    assert_staged_matches(&dir, &want, IoBackendKind::ThreadPool, 0);
+    assert_staged_matches(&dir, &want, IoBackendKind::Uring, 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Dense layout over a padded final shard (600 groups, shard size 128 →
+/// 88 live rows in the last file).
+#[test]
+fn staged_blocks_match_mmap_bit_for_bit_dense() {
+    let dir = write_store("dense", GeneratorConfig::dense(600, 5, 4).with_seed(11), 128);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let want = fingerprint(&mm);
+    assert_eq!(want.len(), 600 * (1 + 5 + 5 * 4), "fingerprint covers every group");
+
+    assert_staged_matches(&dir, &want, IoBackendKind::ThreadPool, 2);
+    assert_staged_matches(&dir, &want, IoBackendKind::ThreadPool, 0);
+    assert_staged_matches(&dir, &want, IoBackendKind::Uring, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn fixed_cfg() -> SolverConfig {
+    SolverConfig { max_iters: 6, tol: 1e-15, shard_size: Some(64), ..Default::default() }
+}
+
+fn assert_reports_match(a: &SolveReport, b: &SolveReport, ctx: &str) {
+    assert_eq!(a.lambda, b.lambda, "{ctx}: λ must be bit-identical");
+    assert_eq!(a.primal_value.to_bits(), b.primal_value.to_bits(), "{ctx}: primal");
+    assert_eq!(a.dual_value.to_bits(), b.dual_value.to_bits(), "{ctx}: dual");
+    let ac: Vec<u64> = a.consumption.iter().map(|c| c.to_bits()).collect();
+    let bc: Vec<u64> = b.consumption.iter().map(|c| c.to_bits()).collect();
+    assert_eq!(ac, bc, "{ctx}: consumption");
+    assert_eq!(a.n_selected, b.n_selected, "{ctx}: n_selected");
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(a.converged, b.converged, "{ctx}: converged");
+}
+
+/// End-to-end through the session planner: the same store solved with
+/// `IoMode::Mmap` and with `IoMode::Prefetch(ThreadPool)` must produce
+/// bit-identical reports, the plan must say what it did, and the
+/// prefetched report must carry the I/O phase telemetry.
+#[test]
+fn prefetched_solve_matches_mmap_solve_bit_identically() {
+    let dir = write_store("solve", GeneratorConfig::sparse(2_000, 6, 6).with_seed(23), 256);
+    let mm = MmapProblem::open(&dir).expect("open store");
+
+    let mmap_plan = Solve::on(&mm)
+        .config(fixed_cfg())
+        .cluster(Cluster::new(2))
+        .io(IoMode::Mmap)
+        .plan()
+        .expect("mmap plan");
+    assert_eq!(mmap_plan.io, PlannedIo::Mmap);
+    let mmap_report = mmap_plan.run().expect("mmap solve");
+    assert_eq!(mmap_report.phases.io_bytes, 0, "mmap serving reports no staged I/O");
+
+    let pf_plan = Solve::on(&mm)
+        .config(fixed_cfg())
+        .cluster(Cluster::new(2))
+        .io(IoMode::Prefetch(IoBackendKind::ThreadPool))
+        .plan()
+        .expect("prefetch plan");
+    match &pf_plan.io {
+        PlannedIo::Prefetched { backend, depth } => {
+            assert_eq!(*backend, "threadpool");
+            assert!(*depth >= 1, "default lookahead must be on");
+        }
+        other => panic!("expected a prefetched io plan, got {other:?}"),
+    }
+    let pf_report = pf_plan.run().expect("prefetched solve");
+
+    assert_reports_match(&pf_report, &mmap_report, "prefetched vs mmap");
+    let ph = &pf_report.phases;
+    assert!(ph.io_bytes > 0, "staged serving must report bytes read: {ph:?}");
+    assert!(
+        ph.io_prefetch_hits >= 1,
+        "lookahead must land at least one shard ahead of demand: {ph:?}"
+    );
+    assert!(ph.io_read_ms >= 0.0 && ph.io_wait_ms >= 0.0, "{ph:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A prefetch request the planner cannot serve (in-memory source, no
+/// shard store) falls back with a note instead of erroring — and the
+/// solve still matches the default path.
+#[test]
+fn prefetch_request_without_store_falls_back_with_note() {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(800, 5, 4).with_seed(3));
+
+    let default_report = Solve::on(&p)
+        .config(fixed_cfg())
+        .cluster(Cluster::new(2))
+        .plan()
+        .expect("default plan")
+        .run()
+        .expect("default solve");
+
+    let plan = Solve::on(&p)
+        .config(fixed_cfg())
+        .cluster(Cluster::new(2))
+        .io(IoMode::Prefetch(IoBackendKind::ThreadPool))
+        .plan()
+        .expect("plan must not error");
+    assert_eq!(plan.io, PlannedIo::InMemory, "no store → no staging");
+    assert!(
+        plan.notes.iter().any(|n| n.stage == "io" && n.message.contains("no on-disk")),
+        "the fallback must be noted: {:?}",
+        plan.notes
+    );
+    let report = plan.run().expect("fallback solve");
+    assert_reports_match(&report, &default_report, "fallback vs default");
+}
