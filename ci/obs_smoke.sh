@@ -1,0 +1,116 @@
+#!/usr/bin/env bash
+# Observability smoke test: a traced `bskp solve` must write a
+# well-formed Chrome trace (valid JSON, per-tid balanced B/E pairs,
+# monotone timestamps in file order, the full leader span vocabulary); a
+# live `bskp serve` daemon started with PALLAS_TRACE=1 must answer a
+# Prometheus scrape and a flight-recorder snapshot that shows its own
+# request/solve spans; and tracing *enabled* must cost < 3% throughput
+# (the ignored A/B benchmark in tests/obs_observability.rs, run here on
+# the release build where timing is meaningful). Run from the repo root;
+# requires a release build (or set BIN).
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bskp}
+SCRATCH=$(mktemp -d)
+STORE="$SCRATCH/store"
+
+cleanup() {
+  for f in "$SCRATCH"/*.pid; do
+    [ -e "$f" ] && kill "$(cat "$f")" 2>/dev/null || true
+  done
+  rm -rf "$SCRATCH"
+}
+trap cleanup EXIT
+
+# ---- 1. traced local solve -------------------------------------------------
+"$BIN" gen --n 20000 --m 8 --k 8 --seed 5 --tightness 0.2 --shard 1024 \
+  --out "$STORE" --quiet
+"$BIN" solve --from "$STORE" --iters 50 --shard 256 \
+  --trace "$SCRATCH/solve_trace.json" --quiet
+
+python3 - "$SCRATCH/solve_trace.json" solve <<'EOF'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))  # json.load alone checks well-formedness
+events = doc["traceEvents"]
+assert events, "a traced solve must record spans"
+
+depth = {}          # tid -> open B count
+last_ts = float("-inf")
+names = set()
+for e in events:
+    if e.get("ph") == "M":          # thread_name metadata carries no ts
+        continue
+    ts = float(e["ts"])
+    assert ts >= last_ts, f"timestamps regressed in file order: {ts} < {last_ts}"
+    last_ts = ts
+    tid = e["tid"]
+    ph = e["ph"]
+    if ph == "B":
+        depth[tid] = depth.get(tid, 0) + 1
+        names.add(e["name"])
+        assert {"code", "a", "b"} <= e["args"].keys(), e
+    elif ph == "E":
+        assert depth.get(tid, 0) > 0, f"E without an open B on tid {tid}"
+        depth[tid] -= 1
+    elif ph == "i":
+        names.add(e["name"])
+for tid, d in depth.items():
+    assert d == 0, f"unbalanced B/E on tid {tid}: {d} left open"
+
+want = {"session", "round", "broadcast", "map", "reduce"}
+assert want <= names, f"missing spans {want - names}; got {sorted(names)}"
+print(f"{sys.argv[2]} trace OK: {len(events)} events, spans {sorted(names)}")
+EOF
+
+# ---- 2. scrape + trace a live daemon ---------------------------------------
+PALLAS_TRACE=1 "$BIN" serve --listen 127.0.0.1:0 --store "$STORE" \
+  --admission 2 --workers 2 >"$SCRATCH/serve.log" &
+echo $! >"$SCRATCH/serve.pid"
+for _ in $(seq 50); do
+  ADDR=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$SCRATCH/serve.log")
+  [ -n "$ADDR" ] && break
+  sleep 0.1
+done
+if [ -z "${ADDR:-}" ]; then
+  echo "serve daemon failed to announce:" >&2
+  cat "$SCRATCH/serve.log" >&2
+  exit 1
+fi
+echo "serve daemon up at $ADDR"
+
+# load it, then scrape and snapshot
+"$BIN" request --to "$ADDR" --op solve --iters 50 --shard 256 \
+  --json "$SCRATCH/served.json" --quiet
+"$BIN" request --to "$ADDR" --op metrics >"$SCRATCH/scrape.txt"
+"$BIN" trace --to "$ADDR" --out "$SCRATCH/serve_trace.json"
+
+python3 - "$SCRATCH/scrape.txt" "$SCRATCH/serve_trace.json" <<'EOF'
+import json, sys
+
+text = open(sys.argv[1]).read()
+def value(name):
+    for line in text.splitlines():
+        if line.startswith(name + " "):
+            return float(line.split()[1])
+    raise AssertionError(f"{name} missing from scrape:\n{text}")
+
+assert "# TYPE bskp_serve_request_ns histogram" in text, text
+assert value("bskp_serve_requests_total") >= 1, "the solve request must be counted"
+assert value("bskp_serve_active") == 0, "all admission slots must be free"
+assert value("bskp_serve_request_ns_count") >= 1
+# the hosted solve mirrors its phase timings into the daemon's registry
+assert value("bskp_solve_map_ns_count") >= 1, "phase histograms missing"
+
+events = json.load(open(sys.argv[2]))["traceEvents"]
+names = {e["name"] for e in events if e.get("ph") in ("B", "i")}
+assert {"serve_request", "serve_solve"} <= names, sorted(names)
+print(f"serve scrape OK ({value('bskp_serve_requests_total'):.0f} requests), "
+      f"daemon trace OK ({len(events)} events)")
+EOF
+
+# ---- 3. the < 3% overhead contract -----------------------------------------
+(cd rust && cargo test --release --test obs_observability \
+  enabled_tracing_costs_under_three_percent -- --ignored --exact)
+
+echo "obs smoke OK"

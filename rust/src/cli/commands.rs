@@ -26,6 +26,8 @@ SUBCOMMANDS
   serve      long-lived solve-as-a-service daemon over a shard store:
              warm-λ re-solves, point queries, progress streaming
   request    one request against a running serve daemon
+  trace      snapshot a running daemon's span flight recorder as Chrome
+             trace-event JSON (loadable in Perfetto / chrome://tracing)
   lpbound    compute the LP-relaxation upper bound (Kelley cutting planes)
   inspect    print instance statistics and a sample group
   help       this text
@@ -69,6 +71,10 @@ SOLVER FLAGS (solve / resolve)
                        mmap their replica of the same store). Unreachable
                        fleet => in-process fallback with a plan note
   --track-history      record the per-iteration series in the report JSON
+  --trace <path>       force span tracing on for this run and write the
+                       flight recorder as Chrome trace-event JSON
+                       (docs/observability.md; PALLAS_TRACE=1 traces
+                       without writing a file)
   --json <path|->      write {plan, report} JSON to a file, or - for
                        stdout (- implies --quiet so stdout stays JSON)
   --plan-only          print the plan (and its JSON) without solving
@@ -99,8 +105,10 @@ SERVE FLAGS (see docs/serve-api.md)
 
 REQUEST FLAGS
   --to <addr>          serve daemon address (required)
-  --op <op>            info|solve|resolve|query|progress (default info);
-                       resolve = solve seeded from the server's warm λ
+  --op <op>            info|solve|resolve|query|progress|metrics|trace
+                       (default info); resolve = solve seeded from the
+                       server's warm λ; metrics = Prometheus text scrape;
+                       trace = flight-recorder snapshot (Chrome JSON)
   --algo scd|dd        solve/resolve algorithm (default scd)
   --iters/--tol/--alpha/--shard   as under SOLVER FLAGS
   --budget-scale <f>   scale the hosted budgets for this solve
@@ -110,6 +118,10 @@ REQUEST FLAGS
   --groups <ids>       comma-separated group ids for --op query
   --json <path|->      write the reply JSON to a file, or - for stdout
   --quiet              suppress the human-readable summary
+
+TRACE FLAGS
+  --to <addr>          serve daemon address (required)
+  --out <path|->       where to write the JSON (default -, stdout)
 
 LPBOUND FLAGS
   --lp-tol <f>         Kelley gap tolerance (default 1e-4)
@@ -271,9 +283,10 @@ pub fn cmd_request(args: &Args) -> Result<()> {
         .get_opt::<String>("to")?
         .ok_or_else(|| Error::Usage("request requires --to <addr> (a serve daemon)".into()))?;
     let op = args.get_str("op", "info");
-    if !matches!(op.as_str(), "info" | "solve" | "resolve" | "query" | "progress") {
+    let known = ["info", "solve", "resolve", "query", "progress", "metrics", "trace"];
+    if !known.contains(&op.as_str()) {
         return Err(Error::Usage(format!(
-            "--op must be info|solve|resolve|query|progress, got {op}"
+            "--op must be info|solve|resolve|query|progress|metrics|trace, got {op}"
         )));
     }
     let json_dest = args.get_opt::<String>("json")?;
@@ -476,8 +489,47 @@ pub fn cmd_request(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "metrics" => {
+            // Prometheus text is the payload; print it verbatim so the
+            // output pipes straight into promtool / a scrape file
+            print!("{}", client.scrape()?);
+            Ok(())
+        }
+        "trace" => {
+            let json = client.trace_snapshot()?;
+            match json_dest.as_deref() {
+                None | Some("-") => println!("{json}"),
+                Some(dest) => {
+                    std::fs::write(dest, &json)?;
+                    if !quiet {
+                        println!("trace written: {dest} ({} bytes)", json.len());
+                    }
+                }
+            }
+            Ok(())
+        }
         _ => unreachable!("op validated above"),
     }
+}
+
+/// `bskp trace`: snapshot a running serve daemon's span flight recorder
+/// as Chrome trace-event JSON — shorthand for `request --op trace`.
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    use crate::serve::ServeClient;
+
+    let to = args
+        .get_opt::<String>("to")?
+        .ok_or_else(|| Error::Usage("trace requires --to <addr> (a serve daemon)".into()))?;
+    let out = args.get_str("out", "-");
+    let mut client = ServeClient::connect_tcp(&to)?;
+    let json = client.trace_snapshot()?;
+    if out == "-" {
+        println!("{json}");
+    } else {
+        std::fs::write(&out, &json)?;
+        println!("trace written: {out} ({} bytes)", json.len());
+    }
+    Ok(())
 }
 
 /// `bskp gen`: stream a synthetic instance into an on-disk shard store.
@@ -523,6 +575,12 @@ pub fn cmd_resolve(args: &Args) -> Result<()> {
 }
 
 fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
+    // `--trace` overrides PALLAS_TRACE before any instrumented work runs
+    // (staging in plan() already records io spans)
+    let trace_dest = args.get_opt::<String>("trace")?;
+    if trace_dest.is_some() {
+        crate::obs::force_trace(true);
+    }
     let problem = source_from_args(args)?;
     let config = solver_config_from_args(args)?;
     let cluster = cluster_from_args(args)?;
@@ -659,6 +717,13 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
                     String::new()
                 }
             );
+        }
+    }
+    if let Some(dest) = &trace_dest {
+        let events = crate::obs::recorder::snapshot();
+        std::fs::write(dest, crate::obs::chrome::render(&events))?;
+        if !quiet {
+            println!("  trace written   : {dest} ({} events)", events.len());
         }
     }
     if let Some(dest) = &json_dest {

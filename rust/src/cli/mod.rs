@@ -10,6 +10,8 @@
 //! bskp request --to host:7500 --op resolve --budget-scale 1.05 --json -
 //! bskp resolve --from /data/store --warm /data/store/lambda.ckpt \
 //!              --budget-scale 1.05 [...]
+//! bskp solve   --from /data/store --trace trace.json [...]
+//! bskp trace   --to host:7500 --out trace.json
 //! bskp lpbound --n 10000 --m 10 --k 5 [...]
 //! bskp inspect --n 100 --m 10 --k 10 --class dense [...]
 //! bskp help
@@ -48,6 +50,7 @@ fn dispatch<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
         "worker" => commands::cmd_worker(&args),
         "serve" => commands::cmd_serve(&args),
         "request" => commands::cmd_request(&args),
+        "trace" => commands::cmd_trace(&args),
         "lpbound" => commands::cmd_lpbound(&args),
         "inspect" => commands::cmd_inspect(&args),
         "help" | "" => {
@@ -118,6 +121,29 @@ mod tests {
     #[test]
     fn request_requires_to() {
         assert_eq!(run(argv("bskp request --op info")), 2);
+    }
+
+    #[test]
+    fn trace_requires_to() {
+        assert_eq!(run(argv("bskp trace")), 2);
+    }
+
+    #[test]
+    fn solve_with_trace_writes_chrome_json() {
+        let path =
+            std::env::temp_dir().join(format!("bskp_cli_trace_{}.json", std::process::id()));
+        let p = path.display().to_string();
+        assert_eq!(
+            run(argv(&format!("bskp solve --n 300 --m 4 --k 4 --iters 5 --trace {p} --quiet"))),
+            0
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        // concurrent unit tests may toggle the global trace gate, so only
+        // the container shape is asserted here; ci/obs_smoke.sh validates
+        // span content in a process of its own
+        assert!(text.starts_with("{\"traceEvents\":["), "not a chrome trace: {text:.40}");
+        assert!(text.ends_with("]}\n") || text.ends_with("]}"), "unterminated trace");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

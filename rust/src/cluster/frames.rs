@@ -71,7 +71,27 @@ pub(crate) mod serve_kind {
     pub const BUSY: u16 = 40;
     /// Server → client: typed request failure (message text).
     pub const ABORT: u16 = 41;
+    /// Client → server: scrape the process metrics registry.
+    pub const METRICS: u16 = 42;
+    /// Server → client: Prometheus text exposition of the registry.
+    pub const METRICS_REPLY: u16 = 43;
+    /// Client → server: snapshot the span flight recorder.
+    pub const TRACE: u16 = 44;
+    /// Server → client: Chrome trace-event JSON document.
+    pub const TRACE_REPLY: u16 = 45;
 }
+
+/// Kind-field flag bit: the frame payload begins with a fixed 16-byte
+/// header extension (span-context propagation, `docs/cluster-protocol.md`
+/// §extensions). The extension rides *inside* the checksummed payload and
+/// the flagged kind seeds the checksum, so corruption of the extension —
+/// or replay of an extended frame as a plain one — fails verification
+/// like any other tampering. Peers that do not expect an extension
+/// ([`read_frame`]) reject extended frames with a typed error.
+pub(crate) const KIND_EXT_FLAG: u16 = 0x4000;
+
+/// Size of the fixed frame-header extension.
+pub(crate) const EXT_LEN: usize = 16;
 
 /// Write one frame; returns the total bytes put on the wire. Enforces the
 /// same payload cap the reader does, so an oversized message fails at the
@@ -96,9 +116,62 @@ pub(crate) fn write_frame<W: Write>(w: &mut W, kind: u16, payload: &[u8]) -> Res
     Ok(HEADER_LEN + payload.len() + 8)
 }
 
+/// Write one frame whose payload is prefixed by a 16-byte header
+/// extension. The extension is part of the checksummed payload and the
+/// wire kind carries [`KIND_EXT_FLAG`]; returns total bytes written.
+pub(crate) fn write_frame_ext<W: Write>(
+    w: &mut W,
+    kind: u16,
+    ext: &[u8; EXT_LEN],
+    payload: &[u8],
+) -> Result<usize> {
+    debug_assert_eq!(kind & KIND_EXT_FLAG, 0, "kind {kind} collides with the ext flag");
+    let mut body = Vec::with_capacity(EXT_LEN + payload.len());
+    body.extend_from_slice(ext);
+    body.extend_from_slice(payload);
+    write_frame(w, kind | KIND_EXT_FLAG, &body)
+}
+
+/// Read one frame that may carry a header extension; returns
+/// `(kind, extension, payload, bytes_read)` with [`KIND_EXT_FLAG`]
+/// stripped from the kind.
+pub(crate) fn read_frame_ext<R: Read>(
+    r: &mut R,
+) -> Result<(u16, Option<[u8; EXT_LEN]>, Vec<u8>, usize)> {
+    let (wire_kind, mut payload, n) = read_frame_inner(r)?;
+    if wire_kind & KIND_EXT_FLAG == 0 {
+        return Ok((wire_kind, None, payload, n));
+    }
+    let kind = wire_kind & !KIND_EXT_FLAG;
+    if payload.len() < EXT_LEN {
+        return Err(Error::Runtime(format!(
+            "cluster wire: extended kind-{kind} frame too short for its {EXT_LEN}-byte \
+             header extension ({} payload bytes)",
+            payload.len()
+        )));
+    }
+    let mut ext = [0u8; EXT_LEN];
+    ext.copy_from_slice(&payload[..EXT_LEN]);
+    payload.drain(..EXT_LEN);
+    Ok((kind, Some(ext), payload, n))
+}
+
 /// Read one frame; returns `(kind, payload, bytes_read)` after verifying
-/// magic, version, length bound and checksum.
+/// magic, version, length bound and checksum. Rejects extended frames —
+/// planes that never negotiate span shipping (the serve plane) must not
+/// silently swallow an extension as payload.
 pub(crate) fn read_frame<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>, usize)> {
+    let (wire_kind, payload, n) = read_frame_inner(r)?;
+    if wire_kind & KIND_EXT_FLAG != 0 {
+        return Err(Error::Runtime(format!(
+            "cluster wire: unexpected header extension on kind-{} frame",
+            wire_kind & !KIND_EXT_FLAG
+        )));
+    }
+    Ok((wire_kind, payload, n))
+}
+
+fn read_frame_inner<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>, usize)> {
     let mut header = [0u8; HEADER_LEN];
     r.read_exact(&mut header)?;
     let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
@@ -195,6 +268,42 @@ mod tests {
         let mut bad = buf;
         bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(read_frame(&mut bad.as_slice()).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn extension_roundtrips_and_plain_readers_reject_it() {
+        let ext = [7u8; EXT_LEN];
+        let mut buf = Vec::new();
+        let n = write_frame_ext(&mut buf, 5, &ext, b"task body").unwrap();
+        assert_eq!(n, buf.len());
+        let (kind, got_ext, payload, read) = read_frame_ext(&mut buf.as_slice()).unwrap();
+        assert_eq!(kind, 5);
+        assert_eq!(got_ext, Some(ext));
+        assert_eq!(payload, b"task body");
+        assert_eq!(read, n);
+        // a reader that never negotiated extensions must reject, not
+        // swallow the extension as payload
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("extension"), "{err}");
+    }
+
+    #[test]
+    fn ext_reader_passes_plain_frames_through() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 9, b"plain").unwrap();
+        let (kind, ext, payload, _) = read_frame_ext(&mut buf.as_slice()).unwrap();
+        assert_eq!(kind, 9);
+        assert_eq!(ext, None);
+        assert_eq!(payload, b"plain");
+    }
+
+    #[test]
+    fn corrupting_the_extension_fails_the_checksum() {
+        let mut buf = Vec::new();
+        write_frame_ext(&mut buf, 5, &[1u8; EXT_LEN], b"body").unwrap();
+        buf[HEADER_LEN + 3] ^= 0x10; // inside the extension bytes
+        let err = read_frame_ext(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
     }
 
     #[test]

@@ -36,13 +36,16 @@
 
 use crate::cluster::clock::Clock;
 use crate::cluster::env_ms;
+use crate::cluster::frames::EXT_LEN;
 use crate::cluster::membership::{NetCounters, WorkerLink};
-use crate::cluster::protocol::{Geometry, InstanceFingerprint, Msg};
+use crate::cluster::protocol::{span_ext, Geometry, InstanceFingerprint, Msg};
 use crate::cluster::transport::{TcpTransport, Transport};
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
+use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::{names, Track};
 use crate::solver::config::ReduceMode;
 use crate::solver::rounds::RoundAgg;
 use crate::solver::scd::{ScdAcc, ScdRoundSpec, ThresholdAcc};
@@ -211,6 +214,36 @@ impl SlotRun {
     }
 }
 
+/// Leader-side registry handles, resolved once per session so the hot
+/// exchange paths bump atomics and never look a metric up by name
+/// ([`crate::obs::metrics`]). Per-link breakdowns live in the span trace
+/// (one `link/<slot>` track each); the registry carries the fleet-wide
+/// aggregates a scrape wants.
+struct LeaderObs {
+    exchanges: Arc<Counter>,
+    exchange_latency_ns: Arc<Histogram>,
+    exchange_bytes: Arc<Histogram>,
+    redeals: Arc<Counter>,
+    workers_lost: Arc<Counter>,
+    gather_rounds: Arc<Counter>,
+    gather_latency_ns: Arc<Histogram>,
+}
+
+impl LeaderObs {
+    fn new() -> Self {
+        let r = crate::obs::metrics::global();
+        Self {
+            exchanges: r.counter("bskp_cluster_exchanges_total"),
+            exchange_latency_ns: r.histogram("bskp_cluster_exchange_latency_ns"),
+            exchange_bytes: r.histogram("bskp_cluster_exchange_bytes"),
+            redeals: r.counter("bskp_cluster_redeals_total"),
+            workers_lost: r.counter("bskp_cluster_workers_lost_total"),
+            gather_rounds: r.counter("bskp_cluster_gather_rounds_total"),
+            gather_latency_ns: r.histogram("bskp_cluster_gather_latency_ns"),
+        }
+    }
+}
+
 /// A fleet of `pallas worker` processes, driven over a [`Transport`] with
 /// the same map→combine→reduce contract as the in-process
 /// [`Cluster`] (see [`super::Exec`]).
@@ -221,6 +254,7 @@ pub struct RemoteCluster {
     counters: NetCounters,
     clock: Arc<dyn Clock>,
     exchange: ExchangeMode,
+    obs: LeaderObs,
 }
 
 impl RemoteCluster {
@@ -291,6 +325,7 @@ impl RemoteCluster {
             counters: NetCounters::default(),
             clock: transport.clock(),
             exchange: opts.exchange,
+            obs: LeaderObs::new(),
         };
         Ok((fleet, skipped))
     }
@@ -361,6 +396,9 @@ impl RemoteCluster {
             return Ok(Vec::new());
         }
         let t0 = self.clock.now_ns();
+        // the gather ordinal doubles as the round index in span-context
+        // frame extensions and EXCHANGE span arguments
+        let round = self.counters.rounds.load(Ordering::Relaxed);
         let n_chunks = chunk_count(n_shards);
         let per = n_shards.div_ceil(n_chunks);
         let n_chunks = n_shards.div_ceil(per);
@@ -386,6 +424,7 @@ impl RemoteCluster {
             }
             match self.exchange {
                 ExchangeMode::Wave => self.wave_step(
+                    round,
                     per,
                     n_shards,
                     &live,
@@ -395,6 +434,7 @@ impl RemoteCluster {
                     &task,
                 )?,
                 ExchangeMode::Overlap => self.overlap_step(
+                    round,
                     per,
                     n_shards,
                     &live,
@@ -407,8 +447,12 @@ impl RemoteCluster {
         }
 
         self.counters.count(&self.counters.rounds, 1);
-        self.counters
-            .count(&self.counters.round_us, self.clock.now_ns().saturating_sub(t0) / 1_000);
+        let dur_ns = self.clock.now_ns().saturating_sub(t0);
+        self.counters.count(&self.counters.round_us, dur_ns / 1_000);
+        if crate::obs::metrics_enabled() {
+            self.obs.gather_rounds.inc();
+            self.obs.gather_latency_ns.observe(dur_ns);
+        }
         Ok(results.into_iter().map(|r| r.expect("all chunks gathered")).collect())
     }
 
@@ -417,6 +461,7 @@ impl RemoteCluster {
     #[allow(clippy::too_many_arguments)]
     fn wave_step<F>(
         &self,
+        round: u64,
         per: usize,
         n_shards: usize,
         live: &[usize],
@@ -434,20 +479,40 @@ impl RemoteCluster {
             .iter()
             .map_while(|&slot| pending.pop_front().map(|chunk| (slot, chunk)))
             .collect();
+        let trace_on = crate::obs::trace_enabled();
+        let want_obs = trace_on || crate::obs::metrics_enabled();
+        let ext = span_ext::encode_task(round, trace_on);
         let outcomes: Vec<WaveOutcome> = std::thread::scope(|s| {
             let handles: Vec<_> = deals
                 .iter()
                 .map(|&(slot, chunk)| {
+                    let ext = &ext;
                     s.spawn(move || {
                         let lo = chunk * per;
                         let hi = (lo + per).min(n_shards);
                         let mut link = self.slots[slot].lock().unwrap();
-                        match link.exchange(&task(lo, hi), &self.counters) {
-                            Ok(Msg::Abort { message }) => WaveOutcome::Fatal(format!(
+                        let t0 = if want_obs { self.clock.now_ns() } else { 0 };
+                        let result = link
+                            .send_task(&task(lo, hi), ext, &self.counters)
+                            .and_then(|()| link.recv_partial(&self.counters));
+                        match result {
+                            Ok((Msg::Abort { message }, _, _)) => WaveOutcome::Fatal(format!(
                                 "worker {} aborted the round: {message}",
                                 link.addr
                             )),
-                            Ok(reply) => WaveOutcome::Done(chunk, reply),
+                            Ok((reply, reply_ext, received)) => {
+                                if want_obs {
+                                    self.observe_exchange(
+                                        slot,
+                                        round,
+                                        lo as u64,
+                                        t0,
+                                        received,
+                                        reply_ext.as_ref(),
+                                    );
+                                }
+                                WaveOutcome::Done(chunk, reply)
+                            }
                             Err(e) => {
                                 // dead worker: back on the queue for
                                 // a survivor in the next wave
@@ -472,6 +537,7 @@ impl RemoteCluster {
                 WaveOutcome::Done(chunk, reply) => results[chunk] = Some(reply),
                 WaveOutcome::Lost(chunk, loss) => {
                     *last_loss = loss;
+                    self.note_loss(round, per, std::slice::from_ref(&chunk));
                     pending.push_back(chunk);
                     self.counters.count(&self.counters.workers_lost, 1);
                     self.counters.count(&self.counters.redispatches, 1);
@@ -480,6 +546,55 @@ impl RemoteCluster {
             }
         }
         Ok(())
+    }
+
+    /// Record one finished exchange: fleet-wide registry metrics plus —
+    /// when tracing — the per-link `EXCHANGE` span and the worker's
+    /// shipped task span, re-based onto the leader clock so it ends at
+    /// receipt (the wire carries only the code and duration; round and
+    /// chunk come from the in-flight task it matches).
+    fn observe_exchange(
+        &self,
+        slot: usize,
+        round: u64,
+        lo: u64,
+        t0_ns: u64,
+        bytes: usize,
+        reply_ext: Option<&[u8; EXT_LEN]>,
+    ) {
+        let now = self.clock.now_ns();
+        let dur_ns = now.saturating_sub(t0_ns);
+        if crate::obs::metrics_enabled() {
+            self.obs.exchanges.inc();
+            self.obs.exchange_latency_ns.observe(dur_ns);
+            self.obs.exchange_bytes.observe(bytes as u64);
+        }
+        if crate::obs::trace_enabled() {
+            let track = Track::Link(slot as u16);
+            crate::obs::complete(track, names::EXCHANGE, t0_ns, dur_ns, round, lo);
+            if let Some(ext) = reply_ext {
+                let (code, w_dur) = span_ext::decode_span(ext);
+                crate::obs::complete(track, code, now.saturating_sub(w_dur), w_dur, round, lo);
+            }
+        }
+    }
+
+    /// Record chunks going back on the deal queue after a worker loss:
+    /// a `REDEAL` instant per chunk plus the fleet-wide counters.
+    fn note_loss(&self, round: u64, per: usize, chunks: &[usize]) {
+        if crate::obs::metrics_enabled() {
+            self.obs.workers_lost.inc();
+            self.obs.redeals.add(chunks.len() as u64);
+        }
+        for &chunk in chunks {
+            crate::obs::instant(
+                self.clock.as_ref(),
+                Track::Leader,
+                names::REDEAL,
+                round,
+                (chunk * per) as u64,
+            );
+        }
     }
 
     /// One overlapped pass: deal the *whole* pending queue round-robin
@@ -493,6 +608,7 @@ impl RemoteCluster {
     #[allow(clippy::too_many_arguments)]
     fn overlap_step<F>(
         &self,
+        round: u64,
         per: usize,
         n_shards: usize,
         live: &[usize],
@@ -513,7 +629,7 @@ impl RemoteCluster {
                 .iter()
                 .zip(&queues)
                 .map(|(&slot, queue)| {
-                    s.spawn(move || self.run_slot(slot, queue, per, n_shards, task))
+                    s.spawn(move || self.run_slot(slot, round, queue, per, n_shards, task))
                 })
                 .collect();
             handles
@@ -538,6 +654,7 @@ impl RemoteCluster {
                 *last_loss = loss;
                 self.counters.count(&self.counters.workers_lost, 1);
                 self.counters.count(&self.counters.redispatches, run.lost.len() as u64);
+                self.note_loss(round, per, &run.lost);
                 for chunk in run.lost {
                     pending.push_back(chunk);
                 }
@@ -556,6 +673,7 @@ impl RemoteCluster {
     fn run_slot<F>(
         &self,
         slot: usize,
+        round: u64,
         queue: &[usize],
         per: usize,
         n_shards: usize,
@@ -564,43 +682,62 @@ impl RemoteCluster {
     where
         F: Fn(usize, usize) -> Msg + Sync,
     {
+        let trace_on = crate::obs::trace_enabled();
+        let want_obs = trace_on || crate::obs::metrics_enabled();
+        let ext = span_ext::encode_task(round, trace_on);
         let mut run = SlotRun::new();
         let mut link = self.slots[slot].lock().unwrap();
-        let mut inflight: VecDeque<usize> = VecDeque::new();
+        // in-flight chunks with their send instants: a pipelined chunk's
+        // exchange latency is its full turnaround, send to reply
+        let mut inflight: VecDeque<(usize, u64)> = VecDeque::new();
         let mut next = 0usize;
         loop {
             while inflight.len() < PIPELINE_DEPTH && next < queue.len() {
                 let chunk = queue[next];
                 let lo = chunk * per;
                 let hi = (lo + per).min(n_shards);
-                match link.send_task(&task(lo, hi), &self.counters) {
+                let t_sent = if want_obs { self.clock.now_ns() } else { 0 };
+                match link.send_task(&task(lo, hi), &ext, &self.counters) {
                     Ok(()) => {
-                        inflight.push_back(chunk);
+                        inflight.push_back((chunk, t_sent));
                         next += 1;
                     }
                     Err(e) => {
                         link.kill();
                         run.loss = Some(format!("worker {}: {e}", link.addr));
                         run.lost.push(chunk);
-                        run.lost.extend(inflight.drain(..));
+                        run.lost.extend(inflight.drain(..).map(|(c, _)| c));
                         run.lost.extend(queue[next + 1..].iter().copied());
                         return run;
                     }
                 }
             }
-            let Some(chunk) = inflight.pop_front() else { return run };
+            let Some((chunk, t_sent)) = inflight.pop_front() else { return run };
             match link.recv_partial(&self.counters) {
-                Ok(Msg::Abort { message }) => {
+                Ok((Msg::Abort { message }, _, _)) => {
                     run.fatal =
                         Some(format!("worker {} aborted the round: {message}", link.addr));
                     return run;
                 }
-                Ok(reply) => run.done.push((chunk, reply)),
+                Ok((reply, reply_ext, received)) => {
+                    if want_obs {
+                        let lo = (chunk * per) as u64;
+                        self.observe_exchange(
+                            slot,
+                            round,
+                            lo,
+                            t_sent,
+                            received,
+                            reply_ext.as_ref(),
+                        );
+                    }
+                    run.done.push((chunk, reply));
+                }
                 Err(e) => {
                     link.kill();
                     run.loss = Some(format!("worker {}: {e}", link.addr));
                     run.lost.push(chunk);
-                    run.lost.extend(inflight.drain(..));
+                    run.lost.extend(inflight.drain(..).map(|(c, _)| c));
                     run.lost.extend(queue[next..].iter().copied());
                     return run;
                 }

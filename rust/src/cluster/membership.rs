@@ -6,8 +6,11 @@
 //! TCP — the same handshake and exchange discipline runs on production
 //! sockets and on the deterministic simulator.
 
+use crate::cluster::frames::EXT_LEN;
 use crate::cluster::leader::ConnectOptions;
-use crate::cluster::protocol::{recv_msg, send_msg, InstanceFingerprint, Msg};
+use crate::cluster::protocol::{
+    recv_msg, recv_msg_ext, send_msg, send_msg_ext, InstanceFingerprint, Msg,
+};
 use crate::cluster::transport::{NetStream, Transport};
 use crate::error::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -94,41 +97,44 @@ impl WorkerLink {
         self.stream = None;
     }
 
-    /// One synchronous request/response exchange. Any wire error leaves
-    /// the link intact for the caller to [`WorkerLink::kill`] — the caller
-    /// owns the re-dispatch decision.
-    pub(crate) fn exchange(&mut self, msg: &Msg, counters: &NetCounters) -> Result<Msg> {
-        self.send_task(msg, counters)?;
-        self.recv_partial(counters)
-    }
-
-    /// Send one task frame without waiting for the reply — the write half
-    /// of [`WorkerLink::exchange`], split out so the overlapped gather can
-    /// keep a bounded pipeline of tasks in flight per link. Every
-    /// `send_task` must be balanced by exactly one [`WorkerLink::recv_partial`]
-    /// (the protocol stays strict request/response on the wire; only the
-    /// leader's waiting overlaps).
-    pub(crate) fn send_task(&mut self, msg: &Msg, counters: &NetCounters) -> Result<()> {
+    /// Send one task frame without waiting for the reply, split from the
+    /// receive half so the overlapped gather can keep a bounded pipeline
+    /// of tasks in flight per link. Every `send_task` must be balanced by
+    /// exactly one [`WorkerLink::recv_partial`] (the protocol stays strict
+    /// request/response on the wire; only the leader's waiting overlaps).
+    /// The span-context frame extension (round index + trace-wanted flag)
+    /// rides the frame header, never the message body.
+    pub(crate) fn send_task(
+        &mut self,
+        msg: &Msg,
+        ext: &[u8; EXT_LEN],
+        counters: &NetCounters,
+    ) -> Result<()> {
         let stream = self
             .stream
             .as_mut()
             .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
-        let sent = send_msg(stream, msg)?;
+        let sent = send_msg_ext(stream, msg, ext)?;
         counters.count(&counters.bytes_sent, sent as u64);
         Ok(())
     }
 
-    /// Receive one reply frame — the read half of [`WorkerLink::exchange`].
+    /// Receive one reply frame — the read half of a task exchange.
     /// Replies arrive in task order (the worker serves one frame at a
     /// time), so the caller matches them to its in-flight queue FIFO.
-    pub(crate) fn recv_partial(&mut self, counters: &NetCounters) -> Result<Msg> {
+    /// Returns the reply, its span-context extension when the matching
+    /// task asked for tracing, and the frame's size on the wire.
+    pub(crate) fn recv_partial(
+        &mut self,
+        counters: &NetCounters,
+    ) -> Result<(Msg, Option<[u8; EXT_LEN]>, usize)> {
         let stream = self
             .stream
             .as_mut()
             .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
-        let (reply, received) = recv_msg(stream)?;
+        let (reply, ext, received) = recv_msg_ext(stream)?;
         counters.count(&counters.bytes_received, received as u64);
-        Ok(reply)
+        Ok((reply, ext, received))
     }
 
     /// Best-effort session close so the worker returns to accepting.

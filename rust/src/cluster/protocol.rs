@@ -452,6 +452,72 @@ pub(crate) fn recv_msg<R: Read>(r: &mut R) -> Result<(Msg, usize)> {
     Ok((Msg::decode(kind, &payload)?, n))
 }
 
+/// Send one message under a 16-byte span-context frame extension
+/// ([`span_ext`]); returns bytes written.
+pub(crate) fn send_msg_ext<W: Write>(
+    w: &mut W,
+    msg: &Msg,
+    ext: &[u8; super::frames::EXT_LEN],
+) -> Result<usize> {
+    let payload = msg.encode();
+    super::frames::write_frame_ext(w, msg.kind(), ext, &payload)
+}
+
+/// Receive one message that may carry a span-context extension; returns
+/// the message, the extension if present, and the bytes read.
+pub(crate) fn recv_msg_ext<R: Read>(
+    r: &mut R,
+) -> Result<(Msg, Option<[u8; super::frames::EXT_LEN]>, usize)> {
+    let (kind, ext, payload, n) = super::frames::read_frame_ext(r)?;
+    Ok((Msg::decode(kind, &payload)?, ext, n))
+}
+
+/// Layout of the 16-byte span-context frame extension (observability;
+/// `docs/cluster-protocol.md` §extensions).
+///
+/// Task direction (leader → worker): `[0..8)` round index, `[8..16)`
+/// flags (bit 0: the leader is tracing and wants the worker's task span
+/// shipped back on the reply).
+///
+/// Reply direction (worker → leader): the worker-side task span —
+/// `[0..2)` span code, `[2..8)` reserved zero, `[8..16)` duration in
+/// worker-clock nanoseconds. The leader re-bases it onto its own clock
+/// and fills the argument words from the in-flight task it matches, so
+/// the wire carries only what the leader cannot know.
+pub(crate) mod span_ext {
+    use crate::cluster::frames::EXT_LEN;
+
+    /// Encode the leader→worker task extension.
+    pub(crate) fn encode_task(round: u64, trace: bool) -> [u8; EXT_LEN] {
+        let mut ext = [0u8; EXT_LEN];
+        ext[0..8].copy_from_slice(&round.to_le_bytes());
+        ext[8..16].copy_from_slice(&(trace as u64).to_le_bytes());
+        ext
+    }
+
+    /// Decode a task extension to `(round, trace_wanted)`.
+    pub(crate) fn decode_task(ext: &[u8; EXT_LEN]) -> (u64, bool) {
+        let round = u64::from_le_bytes(ext[0..8].try_into().unwrap());
+        let flags = u64::from_le_bytes(ext[8..16].try_into().unwrap());
+        (round, flags & 1 != 0)
+    }
+
+    /// Encode the worker→leader reply extension (one shipped task span).
+    pub(crate) fn encode_span(code: u16, dur_ns: u64) -> [u8; EXT_LEN] {
+        let mut ext = [0u8; EXT_LEN];
+        ext[0..2].copy_from_slice(&code.to_le_bytes());
+        ext[8..16].copy_from_slice(&dur_ns.to_le_bytes());
+        ext
+    }
+
+    /// Decode a reply extension to `(code, dur_ns)`.
+    pub(crate) fn decode_span(ext: &[u8; EXT_LEN]) -> (u16, u64) {
+        let code = u16::from_le_bytes(ext[0..2].try_into().unwrap());
+        let dur_ns = u64::from_le_bytes(ext[8..16].try_into().unwrap());
+        (code, dur_ns)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -552,6 +618,37 @@ mod tests {
             },
             other => panic!("wrong kind back: {}", other.name()),
         }
+    }
+
+    #[test]
+    fn span_ext_rides_task_and_partial_frames() {
+        // task with a span-context extension
+        let geo = Geometry { n_total: 100, shard_size: 10 };
+        let task = Msg::EvalTask { geo, lo: 0, hi: 5, lambda: vec![1.0] };
+        let mut buf = Vec::new();
+        send_msg_ext(&mut buf, &task, &span_ext::encode_task(12, true)).unwrap();
+        let (msg, ext, n) = recv_msg_ext(&mut buf.as_slice()).unwrap();
+        assert_eq!(n, buf.len());
+        assert!(matches!(msg, Msg::EvalTask { .. }));
+        let (round, trace) = span_ext::decode_task(&ext.expect("ext present"));
+        assert_eq!(round, 12);
+        assert!(trace);
+
+        // reply carrying a worker task span
+        let reply = Msg::EvalPartial(RoundAgg::new(1));
+        let mut buf = Vec::new();
+        send_msg_ext(&mut buf, &reply, &span_ext::encode_span(9, 1_234_567)).unwrap();
+        let (msg, ext, _) = recv_msg_ext(&mut buf.as_slice()).unwrap();
+        assert!(matches!(msg, Msg::EvalPartial(_)));
+        let (code, dur) = span_ext::decode_span(&ext.expect("ext present"));
+        assert_eq!((code, dur), (9, 1_234_567));
+
+        // plain frames still read as no-extension through the ext path
+        let mut buf = Vec::new();
+        send_msg(&mut buf, &Msg::Shutdown).unwrap();
+        let (msg, ext, _) = recv_msg_ext(&mut buf.as_slice()).unwrap();
+        assert!(matches!(msg, Msg::Shutdown));
+        assert!(ext.is_none());
     }
 
     #[test]

@@ -690,6 +690,10 @@ impl Hub {
                 l.pipes[1].reader_waiting,
             );
         }
+        if crate::obs::trace_enabled() {
+            let _ = writeln!(out, "--- flight recorder (most recent spans) ---");
+            out.push_str(&crate::obs::recorder::dump_text(64));
+        }
         out
     }
 }

@@ -16,8 +16,9 @@
 
 use crate::cluster::clock::Clock;
 use crate::cluster::frames;
-use crate::cluster::protocol::{recv_msg, send_msg, InstanceFingerprint, Msg};
+use crate::cluster::protocol::{recv_msg_ext, send_msg, span_ext, InstanceFingerprint, Msg};
 use crate::cluster::transport::{NetListener, NetStream, TcpNetListener};
+use crate::obs::{names, Track};
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::store::MmapProblem;
@@ -63,7 +64,7 @@ pub fn serve_net<S: GroupSource + ?Sized>(
             // a failed session (leader vanished, corrupt frame) ends the
             // connection, never the worker
             Ok(Some(stream)) => {
-                let _ = session(stream, source, &fingerprint, pool);
+                let _ = session(stream, source, &fingerprint, pool, clock.as_ref());
             }
             Ok(None) => return Ok(()),
             Err(_) => {
@@ -91,12 +92,19 @@ fn session<S: GroupSource + ?Sized>(
     source: &S,
     fingerprint: &InstanceFingerprint,
     pool: &Cluster,
+    clock: &dyn Clock,
 ) -> Result<()> {
     let idle = crate::cluster::env_ms("PALLAS_WORKER_IDLE_TIMEOUT_MS", DEFAULT_IDLE_TIMEOUT_MS);
     stream.set_read_timeout(Some(idle))?;
+    let obs = crate::obs::metrics::global();
+    let (tasks_total, task_ns) =
+        (obs.counter("bskp_worker_tasks_total"), obs.histogram("bskp_worker_task_ns"));
     let mut greeted = false;
     loop {
-        let (msg, _) = recv_msg(&mut stream)?;
+        let (msg, ext, _) = recv_msg_ext(&mut stream)?;
+        // span-context frame extension: the round index this task belongs
+        // to, and whether the leader wants our task span shipped back
+        let (round, ship_span) = ext.as_ref().map(span_ext::decode_task).unwrap_or((0, false));
         if !greeted && !matches!(msg, Msg::Hello { .. } | Msg::Shutdown) {
             let abort = Msg::Abort {
                 message: format!("{} frame before the hello handshake", msg.name()),
@@ -104,6 +112,15 @@ fn session<S: GroupSource + ?Sized>(
             send_msg(&mut stream, &abort)?;
             return Ok(());
         }
+        let is_task =
+            matches!(msg, Msg::EvalTask { .. } | Msg::ScdTask { .. } | Msg::RankTask { .. });
+        let task_lo = match &msg {
+            Msg::EvalTask { lo, .. } | Msg::ScdTask { lo, .. } | Msg::RankTask { lo, .. } => *lo,
+            _ => 0,
+        };
+        let time_task = is_task
+            && (ship_span || crate::obs::trace_enabled() || crate::obs::metrics_enabled());
+        let t0 = if time_task { clock.now_ns() } else { 0 };
         let reply = match msg {
             Msg::Hello { fingerprint: leaders } => {
                 if &leaders != fingerprint {
@@ -175,6 +192,14 @@ fn session<S: GroupSource + ?Sized>(
                 other.name()
             ))),
         };
+        let task_dur = if time_task { clock.now_ns().saturating_sub(t0) } else { 0 };
+        if time_task {
+            if crate::obs::metrics_enabled() {
+                tasks_total.inc();
+                task_ns.observe(task_dur);
+            }
+            crate::obs::complete(Track::Worker(0), names::TASK, t0, task_dur, round, task_lo);
+        }
         // an oversized partial (exact-mode threshold lists at extreme N)
         // must become a diagnosable Abort, not a torn connection the
         // leader would misread as a dead worker and cascade through the
@@ -191,7 +216,18 @@ fn session<S: GroupSource + ?Sized>(
             payload = reply.encode();
         }
         let is_abort = matches!(reply, Msg::Abort { .. });
-        frames::write_frame(&mut stream, reply.kind(), &payload)?;
+        // ship our task span back in the reply's frame-header extension
+        // when the leader asked for it (and the extension still fits)
+        let ship = ship_span
+            && is_task
+            && !is_abort
+            && payload.len() as u64 + frames::EXT_LEN as u64 <= frames::MAX_PAYLOAD;
+        if ship {
+            let ext = span_ext::encode_span(names::TASK, task_dur);
+            frames::write_frame_ext(&mut stream, reply.kind(), &ext, &payload)?;
+        } else {
+            frames::write_frame(&mut stream, reply.kind(), &payload)?;
+        }
         if is_abort {
             return Ok(());
         }

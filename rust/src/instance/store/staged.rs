@@ -13,14 +13,15 @@
 //! like a fresh mapping — results are bit-identical to mmap serving by
 //! construction.
 
+use crate::cluster::{Clock, SystemClock};
 use crate::error::Result;
 use crate::instance::laminar::LaminarProfile;
 use crate::instance::problem::{BlockBuf, Dims, GroupBlock, GroupBuf, GroupSource};
 use crate::instance::store::format::ShardHeader;
 use crate::instance::store::mmap::{copy_f32_le, copy_u32_le};
 use crate::instance::store::reader::MmapProblem;
-use crate::io::{build_backend, IoBackendKind, IoStats, PrefetchingShardReader};
-use std::sync::OnceLock;
+use crate::io::{build_backend_clocked, IoBackendKind, IoStats, PrefetchingShardReader};
+use std::sync::{Arc, OnceLock};
 
 /// Cap on the number of f32 values a staged block holds (the
 /// [`GroupSource::block_end`] default) — staged blocks are owned copies,
@@ -49,8 +50,22 @@ impl StagedProblem {
         depth: usize,
         parallel_hint: usize,
     ) -> Result<(Self, Vec<String>)> {
+        Self::open_clocked(dir, kind, depth, parallel_hint, Arc::new(SystemClock))
+    }
+
+    /// [`StagedProblem::open`] with io timing routed through an explicit
+    /// [`Clock`] — the solve planner passes the session clock here so a
+    /// staged solve under the deterministic simulator keeps virtual-time
+    /// io accounting.
+    pub fn open_clocked(
+        dir: &std::path::Path,
+        kind: IoBackendKind,
+        depth: usize,
+        parallel_hint: usize,
+        clock: Arc<dyn Clock>,
+    ) -> Result<(Self, Vec<String>)> {
         let inner = MmapProblem::open(dir)?;
-        Self::from_mmap(inner, kind, depth, parallel_hint)
+        Self::from_mmap_clocked(inner, kind, depth, parallel_hint, clock)
     }
 
     /// [`StagedProblem::open`] over an already-open [`MmapProblem`].
@@ -60,6 +75,17 @@ impl StagedProblem {
         depth: usize,
         parallel_hint: usize,
     ) -> Result<(Self, Vec<String>)> {
+        Self::from_mmap_clocked(inner, kind, depth, parallel_hint, Arc::new(SystemClock))
+    }
+
+    /// [`StagedProblem::from_mmap`] with an explicit [`Clock`].
+    pub fn from_mmap_clocked(
+        inner: MmapProblem,
+        kind: IoBackendKind,
+        depth: usize,
+        parallel_hint: usize,
+        clock: Arc<dyn Clock>,
+    ) -> Result<(Self, Vec<String>)> {
         let n_shards = inner.n_shards();
         let file_len = std::fs::metadata(inner.shard_path(0))?.len() as usize;
         let parallel = parallel_hint.max(1);
@@ -68,9 +94,11 @@ impl StagedProblem {
         // from waiting on lookahead
         let resident = parallel + 1;
         let n_slots = (parallel + depth + 2).min(n_shards.max(1) + depth + 1);
-        let (backend, fallback) = build_backend(kind, n_slots, file_len)?;
+        let (backend, fallback) =
+            build_backend_clocked(kind, n_slots, file_len, Arc::clone(&clock))?;
         let paths = (0..n_shards).map(|i| inner.shard_path(i)).collect();
-        let reader = PrefetchingShardReader::new(backend, paths, file_len, depth, resident)?;
+        let reader =
+            PrefetchingShardReader::with_clock(backend, paths, file_len, depth, resident, clock)?;
         let staged = Self {
             headers: (0..n_shards).map(|_| OnceLock::new()).collect(),
             inner,

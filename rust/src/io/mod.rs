@@ -40,6 +40,7 @@ pub mod uring;
 pub use prefetch::PrefetchingShardReader;
 pub use threadpool::ThreadPoolBackend;
 
+use crate::cluster::{Clock, SystemClock};
 use crate::error::Result;
 use std::cell::UnsafeCell;
 use std::path::PathBuf;
@@ -184,6 +185,18 @@ pub fn build_backend(
     n_slots: usize,
     slot_bytes: usize,
 ) -> Result<(Arc<dyn IoBackend>, Option<String>)> {
+    build_backend_clocked(kind, n_slots, slot_bytes, Arc::new(SystemClock))
+}
+
+/// [`build_backend`] with read timing routed through an explicit
+/// [`Clock`] — how a staged solve under the deterministic simulator keeps
+/// its io spans and `read_ms` accounting in virtual time.
+pub fn build_backend_clocked(
+    kind: IoBackendKind,
+    n_slots: usize,
+    slot_bytes: usize,
+    clock: Arc<dyn Clock>,
+) -> Result<(Arc<dyn IoBackend>, Option<String>)> {
     let threads = std::env::var("PALLAS_IO_THREADS")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
@@ -192,18 +205,18 @@ pub fn build_backend(
     match kind {
         IoBackendKind::ThreadPool => {
             let ring = BufferRing::new(n_slots, slot_bytes);
-            Ok((Arc::new(ThreadPoolBackend::new(ring, threads)), None))
+            Ok((Arc::new(ThreadPoolBackend::with_clock(ring, threads, clock)), None))
         }
         IoBackendKind::Uring => {
             #[cfg(feature = "uring")]
             {
                 let ring = BufferRing::new(n_slots, slot_bytes);
-                match uring::UringBackend::new(Arc::clone(&ring)) {
+                match uring::UringBackend::with_clock(Arc::clone(&ring), Arc::clone(&clock)) {
                     Ok(b) => return Ok((Arc::new(b), None)),
                     Err(e) => {
                         let ring = BufferRing::new(n_slots, slot_bytes);
                         return Ok((
-                            Arc::new(ThreadPoolBackend::new(ring, threads)),
+                            Arc::new(ThreadPoolBackend::with_clock(ring, threads, clock)),
                             Some(format!(
                                 "io_uring backend unavailable ({e}); using the thread-pool \
                                  backend"
@@ -216,7 +229,7 @@ pub fn build_backend(
             {
                 let ring = BufferRing::new(n_slots, slot_bytes);
                 Ok((
-                    Arc::new(ThreadPoolBackend::new(ring, threads)),
+                    Arc::new(ThreadPoolBackend::with_clock(ring, threads, clock)),
                     Some(
                         "io_uring backend requested but this build has no `uring` feature; \
                          using the thread-pool backend"
@@ -250,12 +263,18 @@ pub struct BufferRing {
     slot_bytes: usize,
     free: Mutex<Vec<usize>>,
     cv: Condvar,
+    /// Scrape-visible free-slot level (`bskp_io_ring_free`): one relaxed
+    /// store per acquire/release, updated while the free-list lock is
+    /// already held.
+    free_gauge: Arc<crate::obs::metrics::Gauge>,
 }
 
 impl BufferRing {
     /// A ring of `n_slots` buffers of `slot_bytes` each.
     pub fn new(n_slots: usize, slot_bytes: usize) -> Arc<Self> {
         assert!(n_slots > 0 && slot_bytes > 0, "degenerate buffer ring");
+        let free_gauge = crate::obs::metrics::global().gauge("bskp_io_ring_free");
+        free_gauge.set(n_slots as i64);
         Arc::new(Self {
             slots: (0..n_slots)
                 .map(|_| Slot { data: UnsafeCell::new(vec![0u8; slot_bytes].into_boxed_slice()) })
@@ -263,6 +282,7 @@ impl BufferRing {
             slot_bytes,
             free: Mutex::new((0..n_slots).rev().collect()),
             cv: Condvar::new(),
+            free_gauge,
         })
     }
 
@@ -281,6 +301,7 @@ impl BufferRing {
         let mut free = self.free.lock().unwrap();
         loop {
             if let Some(slot) = free.pop() {
+                self.free_gauge.set(free.len() as i64);
                 return slot;
             }
             free = self.cv.wait(free).unwrap();
@@ -289,7 +310,12 @@ impl BufferRing {
 
     /// Check a slot out only if one is free right now.
     pub(crate) fn try_acquire(&self) -> Option<usize> {
-        self.free.lock().unwrap().pop()
+        let mut free = self.free.lock().unwrap();
+        let slot = free.pop();
+        if slot.is_some() {
+            self.free_gauge.set(free.len() as i64);
+        }
+        slot
     }
 
     /// Return a slot to the free list.
@@ -297,6 +323,7 @@ impl BufferRing {
         let mut free = self.free.lock().unwrap();
         debug_assert!(!free.contains(&slot), "double release of ring slot {slot}");
         free.push(slot);
+        self.free_gauge.set(free.len() as i64);
         drop(free);
         self.cv.notify_one();
     }

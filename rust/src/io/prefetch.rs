@@ -19,11 +19,13 @@
 //! a condvar), so a shard is read from disk exactly once per residency.
 
 use super::{IoBackend, IoLease, IoStats, ReadOp};
+use crate::cluster::{Clock, SystemClock};
 use crate::error::{Error, Result};
+use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::{names, Track};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
 
 /// Per-shard read state.
 enum ShardIo {
@@ -62,9 +64,14 @@ pub struct PrefetchingShardReader {
     resident: usize,
     state: Mutex<State>,
     cv: Condvar,
+    clock: Arc<dyn Clock>,
     wait_ns: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Registry mirrors (handles resolved once at construction).
+    obs_hits: Arc<Counter>,
+    obs_misses: Arc<Counter>,
+    obs_wait_ns: Arc<Histogram>,
 }
 
 impl PrefetchingShardReader {
@@ -82,6 +89,20 @@ impl PrefetchingShardReader {
         depth: usize,
         resident: usize,
     ) -> Result<Self> {
+        Self::with_clock(backend, paths, file_len, depth, resident, Arc::new(SystemClock))
+    }
+
+    /// [`PrefetchingShardReader::new`] with wait timing routed through an
+    /// explicit [`Clock`] (virtual-time io accounting under the
+    /// deterministic simulator).
+    pub fn with_clock(
+        backend: Arc<dyn IoBackend>,
+        paths: Vec<PathBuf>,
+        file_len: usize,
+        depth: usize,
+        resident: usize,
+        clock: Arc<dyn Clock>,
+    ) -> Result<Self> {
         if backend.ring().slot_bytes() < file_len {
             return Err(Error::InvalidConfig(format!(
                 "ring slots ({} bytes) are smaller than a shard file ({file_len} bytes)",
@@ -89,6 +110,7 @@ impl PrefetchingShardReader {
             )));
         }
         let n = paths.len();
+        let reg = crate::obs::metrics::global();
         Ok(Self {
             backend,
             paths,
@@ -101,9 +123,13 @@ impl PrefetchingShardReader {
                 touched: vec![false; n],
             }),
             cv: Condvar::new(),
+            clock,
             wait_ns: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            obs_hits: reg.counter("bskp_io_prefetch_hits_total"),
+            obs_misses: reg.counter("bskp_io_prefetch_misses_total"),
+            obs_wait_ns: reg.histogram("bskp_io_wait_ns"),
         })
     }
 
@@ -122,7 +148,7 @@ impl PrefetchingShardReader {
                     let lease = Arc::clone(lease);
                     if !st.touched[k] {
                         st.touched[k] = true;
-                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.note_touch(true);
                     }
                     touch_lru(&mut st.lru, k);
                     break lease;
@@ -133,11 +159,11 @@ impl PrefetchingShardReader {
                     // did its job even if we still wait out the tail
                     if !st.touched[k] {
                         st.touched[k] = true;
-                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.note_touch(true);
                     }
                     st.shards[k] = ShardIo::Claimed;
                     drop(st);
-                    let res = self.finish_wait(tag);
+                    let res = self.finish_wait(k, tag);
                     st = self.state.lock().unwrap();
                     match res {
                         Ok(lease) => break self.install(&mut st, k, lease),
@@ -155,13 +181,14 @@ impl PrefetchingShardReader {
                 ShardIo::Idle => {
                     if !st.touched[k] {
                         st.touched[k] = true;
-                        self.misses.fetch_add(1, Ordering::Relaxed);
+                        self.note_touch(false);
                     }
                     st.shards[k] = ShardIo::Claimed;
                     // make room before the blocking acquire inside submit
                     self.evict(&mut st, self.resident.saturating_sub(1));
                     drop(st);
-                    let res = self.backend.submit(self.op(k)).and_then(|t| self.finish_wait(t));
+                    let res =
+                        self.backend.submit(self.op(k)).and_then(|t| self.finish_wait(k, t));
                     st = self.state.lock().unwrap();
                     match res {
                         Ok(lease) => break self.install(&mut st, k, lease),
@@ -179,11 +206,28 @@ impl PrefetchingShardReader {
         Ok(lease)
     }
 
-    /// Block on the backend for a tag, charging the stall to `wait_ms`.
-    fn finish_wait(&self, tag: u64) -> Result<IoLease> {
-        let t0 = Instant::now();
+    /// First-touch accounting: the raw hit/miss counters plus their
+    /// registry mirrors.
+    fn note_touch(&self, hit: bool) {
+        let (raw, obs) =
+            if hit { (&self.hits, &self.obs_hits) } else { (&self.misses, &self.obs_misses) };
+        raw.fetch_add(1, Ordering::Relaxed);
+        if crate::obs::metrics_enabled() {
+            obs.inc();
+        }
+    }
+
+    /// Block on the backend for shard `k`'s tag, charging the stall to
+    /// `wait_ms` (and an [`names::IO_WAIT`] span on the io track).
+    fn finish_wait(&self, k: usize, tag: u64) -> Result<IoLease> {
+        let t0 = self.clock.now_ns();
         let lease = self.backend.wait(tag);
-        self.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let dur_ns = self.clock.now_ns().saturating_sub(t0);
+        self.wait_ns.fetch_add(dur_ns, Ordering::Relaxed);
+        if crate::obs::metrics_enabled() {
+            self.obs_wait_ns.observe(dur_ns);
+        }
+        crate::obs::complete(Track::Io, names::IO_WAIT, t0, dur_ns, k as u64, 0);
         lease
     }
 

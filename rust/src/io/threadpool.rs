@@ -8,13 +8,15 @@
 //! kernels keep computing while the page cache / disk fills the slot.
 
 use super::{BufferRing, IoBackend, IoLease, IoStats, ReadOp};
+use crate::cluster::{Clock, SystemClock};
 use crate::error::{Error, Result};
+use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::{names, Track};
 use std::collections::{HashMap, VecDeque};
 use std::fs::File;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 struct Queue {
     jobs: VecDeque<(u64, ReadOp, usize)>,
@@ -23,6 +25,7 @@ struct Queue {
 
 struct Shared {
     ring: Arc<BufferRing>,
+    clock: Arc<dyn Clock>,
     queue: Mutex<Queue>,
     queue_cv: Condvar,
     /// tag → completed read: `Ok((slot, len))` or the error (slot already
@@ -33,6 +36,10 @@ struct Shared {
     reads: AtomicU64,
     bytes: AtomicU64,
     read_ns: AtomicU64,
+    /// Registry mirrors (handles resolved once at construction).
+    obs_reads: Arc<Counter>,
+    obs_bytes: Arc<Counter>,
+    obs_read_ns: Arc<Histogram>,
 }
 
 impl Shared {
@@ -51,9 +58,18 @@ pub struct ThreadPoolBackend {
 impl ThreadPoolBackend {
     /// A backend with `threads` pread workers over `ring`.
     pub fn new(ring: Arc<BufferRing>, threads: usize) -> Self {
+        Self::with_clock(ring, threads, Arc::new(SystemClock))
+    }
+
+    /// [`ThreadPoolBackend::new`] with read timing routed through an
+    /// explicit [`Clock`] (virtual-time io accounting under the
+    /// deterministic simulator).
+    pub fn with_clock(ring: Arc<BufferRing>, threads: usize, clock: Arc<dyn Clock>) -> Self {
         let threads = threads.max(1);
+        let reg = crate::obs::metrics::global();
         let shared = Arc::new(Shared {
             ring,
+            clock,
             queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
             queue_cv: Condvar::new(),
             done: Mutex::new(HashMap::new()),
@@ -62,6 +78,9 @@ impl ThreadPoolBackend {
             reads: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
             read_ns: AtomicU64::new(0),
+            obs_reads: reg.counter("bskp_io_reads_total"),
+            obs_bytes: reg.counter("bskp_io_bytes_total"),
+            obs_read_ns: reg.histogram("bskp_io_read_ns"),
         });
         let workers = (0..threads)
             .map(|i| {
@@ -110,16 +129,24 @@ fn worker_loop(shared: &Shared) {
             }
         };
         let (tag, op, slot) = job;
-        let t0 = Instant::now();
+        let t0 = shared.clock.now_ns();
         // SAFETY: the slot was acquired by submit for this read and nobody
         // else touches it until the lease (created after completion) drops.
         let dst = unsafe { &mut shared.ring.slot_mut(slot)[..op.len] };
         let res = read_exact_at(&op, dst);
-        shared.read_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let dur_ns = shared.clock.now_ns().saturating_sub(t0);
+        shared.read_ns.fetch_add(dur_ns, Ordering::Relaxed);
         match res {
             Ok(()) => {
                 shared.reads.fetch_add(1, Ordering::Relaxed);
                 shared.bytes.fetch_add(op.len as u64, Ordering::Relaxed);
+                if crate::obs::metrics_enabled() {
+                    shared.obs_reads.inc();
+                    shared.obs_bytes.add(op.len as u64);
+                    shared.obs_read_ns.observe(dur_ns);
+                }
+                let len = op.len as u64;
+                crate::obs::complete(Track::Io, names::IO_READ, t0, dur_ns, op.offset, len);
                 shared.complete(tag, Ok((slot, op.len)));
             }
             Err(e) => {

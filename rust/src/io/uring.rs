@@ -37,6 +37,15 @@ impl UringBackend {
     pub fn new(_ring: std::sync::Arc<BufferRing>) -> Result<Self> {
         Err(Error::Runtime("io_uring is only available on Linux".into()))
     }
+
+    /// [`UringBackend::new`] with an explicit clock; same Linux-only
+    /// error.
+    pub fn with_clock(
+        _ring: std::sync::Arc<BufferRing>,
+        _clock: std::sync::Arc<dyn crate::cluster::Clock>,
+    ) -> Result<Self> {
+        Err(Error::Runtime("io_uring is only available on Linux".into()))
+    }
 }
 
 #[cfg(not(target_os = "linux"))]
@@ -64,13 +73,14 @@ impl IoBackend for UringBackend {
 #[cfg(target_os = "linux")]
 mod imp {
     use super::*;
+    use crate::cluster::{Clock, SystemClock};
     use std::collections::HashMap;
     use std::fs::File;
     use std::os::raw::{c_int, c_long, c_uint, c_void};
     use std::os::unix::io::AsRawFd;
     use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
     use std::sync::{Arc, Condvar, Mutex};
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     const SYS_IO_URING_SETUP: c_long = 425;
     const SYS_IO_URING_ENTER: c_long = 426;
@@ -244,6 +254,7 @@ mod imp {
     pub struct UringBackend {
         fd: c_int,
         ring: Arc<BufferRing>,
+        clock: Arc<dyn Clock>,
         sq_map: Mapping,
         cq_map: Mapping,
         sqe_map: Mapping,
@@ -269,6 +280,12 @@ mod imp {
         /// Set up a ring sized to the buffer ring; errors when the kernel
         /// (or a seccomp policy) refuses `io_uring_setup`.
         pub fn new(ring: Arc<BufferRing>) -> Result<Self> {
+            Self::with_clock(ring, Arc::new(SystemClock))
+        }
+
+        /// [`UringBackend::new`] with submission timing routed through an
+        /// explicit [`Clock`].
+        pub fn with_clock(ring: Arc<BufferRing>, clock: Arc<dyn Clock>) -> Result<Self> {
             let entries = (ring.n_slots() * 2).next_power_of_two().max(8) as u32;
             let mut params = IoUringParams::default();
             // SAFETY: io_uring_setup(2) with an out-param the kernel fills.
@@ -320,6 +337,7 @@ mod imp {
             Ok(Self {
                 fd,
                 ring,
+                clock,
                 sq_map,
                 cq_map,
                 sqe_map,
@@ -420,7 +438,7 @@ mod imp {
         }
 
         fn begin(&self, op: ReadOp, slot: usize) -> Result<u64> {
-            let t0 = Instant::now();
+            let t0 = self.clock.now_ns();
             let file = match File::open(&op.path) {
                 Ok(f) => f,
                 Err(e) => {
@@ -449,7 +467,7 @@ mod imp {
                 return Err(e);
             }
             self.started.fetch_add(1, Ordering::Relaxed);
-            self.read_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.read_ns.fetch_add(self.clock.now_ns().saturating_sub(t0), Ordering::Relaxed);
             Ok(tag)
         }
 

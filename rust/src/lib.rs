@@ -85,6 +85,7 @@ pub mod io;
 pub mod lp;
 pub mod mapreduce;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

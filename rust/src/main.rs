@@ -1,6 +1,9 @@
 //! `bskp` binary: the L3 leader CLI.
 
 fn main() {
+    // a crash with PALLAS_TRACE on leaves the flight recorder's last
+    // spans on stderr
+    bskp::obs::install_panic_hook();
     let code = bskp::cli::run(std::env::args());
     std::process::exit(code);
 }

@@ -9,7 +9,53 @@ pub use timer::{ClockStopwatch, ScopedTimer, Stopwatch};
 
 use crate::solve::SolvePlan;
 use crate::solver::config::ReduceMode;
-use crate::solver::stats::SolveReport;
+use crate::solver::stats::{PhaseTimings, SolveReport};
+
+/// The phase-timing fields in their stable JSON order — the one table
+/// both [`report_to_json`] and the registry mirror read, so the report
+/// schema and the scrape can never drift apart. (The perf-smoke snapshot
+/// diff pins these keys; changing them is a schema break.)
+pub fn phase_fields(p: &PhaseTimings) -> [(&'static str, f64); 13] {
+    [
+        ("broadcast_ms", p.broadcast_ms),
+        ("map_ms", p.map_ms),
+        ("reduce_ms", p.reduce_ms),
+        ("final_eval_ms", p.final_eval_ms),
+        ("postprocess_ms", p.postprocess_ms),
+        ("walks_total", p.walks_total as f64),
+        ("walks_skipped", p.walks_skipped as f64),
+        ("skip_rate", p.skip_rate()),
+        ("io_read_ms", p.io_read_ms),
+        ("io_wait_ms", p.io_wait_ms),
+        ("io_bytes", p.io_bytes as f64),
+        ("io_prefetch_hits", p.io_prefetch_hits as f64),
+        ("io_prefetch_misses", p.io_prefetch_misses as f64),
+    ]
+}
+
+/// Mirror one solve's phase timings into the global observability
+/// registry (`bskp_solve_*_ns` histograms, one observation per solve) —
+/// the drivers call this as the report is finalized, so a long-lived
+/// process (the serve daemon) accumulates per-solve phase distributions
+/// across sessions. Count-style fields are *not* mirrored here: the
+/// λ-stability walk counters and the io-plane counters are bumped live
+/// at their own sites, and double-counting them at solve end would
+/// corrupt the scrape.
+pub fn record_phase_timings(p: &PhaseTimings) {
+    if !crate::obs::metrics_enabled() {
+        return;
+    }
+    let reg = crate::obs::metrics::global();
+    for (name, ms) in [
+        ("bskp_solve_broadcast_ns", p.broadcast_ms),
+        ("bskp_solve_map_ns", p.map_ms),
+        ("bskp_solve_reduce_ns", p.reduce_ms),
+        ("bskp_solve_final_eval_ns", p.final_eval_ms),
+        ("bskp_solve_postprocess_ns", p.postprocess_ms),
+    ] {
+        reg.histogram(name).observe((ms * 1e6).max(0.0) as u64);
+    }
+}
 
 /// Serialize a [`SolvePlan`] as JSON (stable key order): the dispatch
 /// decisions plus every fallback note, so CI can assert not just the
@@ -113,27 +159,12 @@ pub fn report_to_json(r: &SolveReport) -> JsonValue {
     obj.push(("wall_ms".to_string(), JsonValue::Num(r.wall_ms)));
     obj.push((
         "phases".to_string(),
-        JsonValue::Object(vec![
-            ("broadcast_ms".to_string(), JsonValue::Num(r.phases.broadcast_ms)),
-            ("map_ms".to_string(), JsonValue::Num(r.phases.map_ms)),
-            ("reduce_ms".to_string(), JsonValue::Num(r.phases.reduce_ms)),
-            ("final_eval_ms".to_string(), JsonValue::Num(r.phases.final_eval_ms)),
-            ("postprocess_ms".to_string(), JsonValue::Num(r.phases.postprocess_ms)),
-            ("walks_total".to_string(), JsonValue::Num(r.phases.walks_total as f64)),
-            ("walks_skipped".to_string(), JsonValue::Num(r.phases.walks_skipped as f64)),
-            ("skip_rate".to_string(), JsonValue::Num(r.phases.skip_rate())),
-            ("io_read_ms".to_string(), JsonValue::Num(r.phases.io_read_ms)),
-            ("io_wait_ms".to_string(), JsonValue::Num(r.phases.io_wait_ms)),
-            ("io_bytes".to_string(), JsonValue::Num(r.phases.io_bytes as f64)),
-            (
-                "io_prefetch_hits".to_string(),
-                JsonValue::Num(r.phases.io_prefetch_hits as f64),
-            ),
-            (
-                "io_prefetch_misses".to_string(),
-                JsonValue::Num(r.phases.io_prefetch_misses as f64),
-            ),
-        ]),
+        JsonValue::Object(
+            phase_fields(&r.phases)
+                .iter()
+                .map(|(k, v)| (k.to_string(), JsonValue::Num(*v)))
+                .collect(),
+        ),
     ));
     obj.push((
         "lambda".to_string(),

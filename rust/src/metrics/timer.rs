@@ -28,7 +28,19 @@ impl<'c> ClockStopwatch<'c> {
     /// virtual clock shared across sessions may appear to do from a
     /// reader that cached an older origin).
     pub fn elapsed_ms(&self) -> f64 {
-        self.clock.now_ns().saturating_sub(self.start_ns) as f64 / 1e6
+        self.elapsed_ns() as f64 / 1e6
+    }
+
+    /// Nanoseconds since start (same saturating semantics as
+    /// [`Self::elapsed_ms`]) — what the span recorder consumes, so a call
+    /// site can time a phase once and feed both the report and the trace.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.clock.now_ns().saturating_sub(self.start_ns)
+    }
+
+    /// The clock reading the stopwatch started at, in nanoseconds.
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
     }
 
     /// Re-arm at the clock's current instant.

@@ -1,0 +1,209 @@
+//! Chrome trace-event JSON export — `solve --trace out.json`, `bskp
+//! trace`, and the serve daemon's `ServeMsg::Trace` snapshot all emit
+//! this format, loadable in Perfetto / `chrome://tracing`.
+//!
+//! Spans become balanced `"B"`/`"E"` pairs (instants become `"i"`), one
+//! Chrome `tid` per [`Track`]. Within a track the events are emitted by
+//! a stack sweep over the spans in start order, so the file is valid by
+//! construction: per-tid `B`/`E` nest properly and timestamps are
+//! monotone non-decreasing in file order (`ci/obs_smoke.sh` validates
+//! exactly these properties). A child span that leaks past its parent's
+//! end (clock re-basing of shipped worker spans can round that way) is
+//! clamped to the parent, preferring a well-formed file over a
+//! nanosecond of tail.
+
+use crate::obs::names;
+use crate::obs::recorder::{EventKind, EventRecord, Track};
+use std::fmt::Write as _;
+
+/// Timestamp in Chrome's microsecond ticks, 3 decimals (nanosecond
+/// resolution survives).
+fn ts_us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e3)
+}
+
+fn push_event(
+    out: &mut Vec<(u64, String)>,
+    at_ns: u64,
+    ph: char,
+    tid: u32,
+    code: u16,
+    args: Option<(u64, u64)>,
+) {
+    let mut line = format!(
+        "{{\"name\":\"{}\",\"cat\":\"bskp\",\"ph\":\"{ph}\",\"ts\":{},\"pid\":0,\"tid\":{tid}",
+        names::name_of(code),
+        ts_us(at_ns),
+    );
+    if ph == 'i' {
+        line.push_str(",\"s\":\"t\"");
+    }
+    if let Some((a, b)) = args {
+        let _ = write!(line, ",\"args\":{{\"code\":{code},\"a\":{a},\"b\":{b}}}");
+    }
+    line.push('}');
+    out.push((at_ns, line));
+}
+
+/// Render `events` as a complete Chrome trace-event JSON document.
+pub fn render(events: &[EventRecord]) -> String {
+    // group by track
+    let mut tracks: Vec<Track> = events.iter().map(|e| e.track).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+
+    let mut entries: Vec<(u64, String)> = Vec::with_capacity(events.len() * 2 + tracks.len());
+    let mut meta = Vec::new();
+    for &track in &tracks {
+        let tid = track.tid();
+        meta.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            track.label()
+        ));
+
+        let mut spans: Vec<&EventRecord> = events
+            .iter()
+            .filter(|e| e.track == track && e.kind == EventKind::Span)
+            .collect();
+        // start order; at equal starts the longer span is the parent
+        spans.sort_by_key(|e| (e.t_ns, u64::MAX - e.dur_ns));
+
+        // stack sweep: close every span that ends at or before the next
+        // span's start, clamp children into their parents
+        let mut stack: Vec<u64> = Vec::new(); // open span end times
+        for e in &spans {
+            while let Some(&end) = stack.last() {
+                if end <= e.t_ns {
+                    entries_push_end(&mut entries, end, tid);
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            let mut end = e.t_ns.saturating_add(e.dur_ns);
+            if let Some(&parent_end) = stack.last() {
+                end = end.min(parent_end);
+            }
+            push_event(&mut entries, e.t_ns, 'B', tid, e.code, Some((e.a, e.b)));
+            stack.push(end);
+        }
+        while let Some(end) = stack.pop() {
+            entries_push_end(&mut entries, end, tid);
+        }
+
+        for e in events.iter().filter(|e| e.track == track && e.kind == EventKind::Instant) {
+            push_event(&mut entries, e.t_ns, 'i', tid, e.code, Some((e.a, e.b)));
+        }
+    }
+
+    // global stable sort by timestamp: per-tid emission order (already
+    // monotone) is preserved, tracks interleave chronologically
+    entries.sort_by_key(|(at, _)| *at);
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    for line in meta.into_iter().chain(entries.into_iter().map(|(_, l)| l)) {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&line);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+fn entries_push_end(out: &mut Vec<(u64, String)>, at_ns: u64, tid: u32) {
+    out.push((at_ns, format!("{{\"ph\":\"E\",\"ts\":{},\"pid\":0,\"tid\":{tid}}}", ts_us(at_ns))));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(track: Track, code: u16, t: u64, dur: u64) -> EventRecord {
+        EventRecord { track, kind: EventKind::Span, code, t_ns: t, dur_ns: dur, a: 0, b: 0 }
+    }
+
+    /// B/E balance + nesting + monotone ts — the same checks obs_smoke
+    /// runs on a real trace.
+    fn validate(json: &str) {
+        let mut stacks: std::collections::HashMap<String, u64> = Default::default();
+        let mut last_ts = f64::NEG_INFINITY;
+        for line in json.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if !line.starts_with('{') || line.contains("\"ph\":\"M\"") {
+                continue;
+            }
+            let field = |key: &str| -> Option<&str> {
+                let pat = format!("\"{key}\":");
+                let at = line.find(&pat)? + pat.len();
+                let rest = &line[at..];
+                let end = rest.find(|c: char| c == ',' || c == '}').unwrap_or(rest.len());
+                Some(rest[..end].trim_matches('"'))
+            };
+            let (Some(ph), Some(ts), Some(tid)) = (field("ph"), field("ts"), field("tid"))
+            else {
+                continue;
+            };
+            let ts: f64 = ts.parse().unwrap();
+            assert!(ts >= last_ts, "timestamps regressed: {ts} < {last_ts}");
+            last_ts = ts;
+            let depth = stacks.entry(tid.to_string()).or_insert(0);
+            match ph {
+                "B" => *depth += 1,
+                "E" => {
+                    assert!(*depth > 0, "E without open B on tid {tid}");
+                    *depth -= 1;
+                }
+                _ => {}
+            }
+        }
+        for (tid, depth) in stacks {
+            assert_eq!(depth, 0, "unbalanced B/E on tid {tid}");
+        }
+    }
+
+    #[test]
+    fn nested_spans_emit_balanced_monotone_pairs() {
+        let events = vec![
+            span(Track::Leader, names::SESSION, 0, 100),
+            span(Track::Leader, names::ROUND, 10, 30),
+            span(Track::Leader, names::ROUND, 50, 20),
+            span(Track::Leader, names::MAP, 12, 20),
+            span(Track::Link(0), names::EXCHANGE, 15, 10),
+            EventRecord {
+                track: Track::Leader,
+                kind: EventKind::Instant,
+                code: names::REDEAL,
+                t_ns: 60,
+                dur_ns: 0,
+                a: 1,
+                b: 2,
+            },
+        ];
+        let json = render(&events);
+        validate(&json);
+        assert!(json.contains("\"name\":\"session\""), "{json}");
+        assert!(json.contains("\"name\":\"exchange\""), "{json}");
+        assert!(json.contains("\"ph\":\"i\""), "{json}");
+        assert!(json.contains("thread_name"), "{json}");
+    }
+
+    #[test]
+    fn child_overhang_is_clamped_into_the_parent() {
+        // child [10, 200) leaks past parent [0, 100): must clamp, not
+        // emit a crossing E
+        let events =
+            vec![span(Track::Io, names::IO_READ, 0, 100), span(Track::Io, names::IO_WAIT, 10, 190)];
+        validate(&render(&events));
+    }
+
+    #[test]
+    fn empty_snapshot_renders_an_empty_valid_document() {
+        let json = render(&[]);
+        validate(&json);
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+    }
+}

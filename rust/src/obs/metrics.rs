@@ -1,0 +1,314 @@
+//! The metrics registry: counters, gauges and log-bucketed histograms,
+//! all plain atomics, registered under stable names and exposed through
+//! [`crate::obs::prom`].
+//!
+//! Handles are `Arc`s resolved once per instrumentation site (a struct
+//! field or a local at setup time), so the steady state is one atomic
+//! RMW per bump — no name lookups on hot paths. Histograms bucket by
+//! powers of two ([`Histogram::bucket_index`]), which makes merges
+//! element-wise sums: associative and commutative by construction, a
+//! property the proptest suite pins down (partials can therefore be
+//! merged in any deal order without perturbing the scrape).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An up/down gauge (instantaneous level: active sessions, ring
+/// occupancy, queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Add `n` (may be negative).
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Set the level outright.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count: powers of two from `1` up to `2^(N_BUCKETS-2)`, plus a
+/// final overflow bucket. 2^42 ns ≈ 73 min — ample for latencies; byte
+/// sizes past 4 TiB land in the overflow bucket.
+pub const N_BUCKETS: usize = 44;
+
+/// A log₂-bucketed histogram over `u64` observations.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// The bucket an observation lands in: bucket `i` covers
+    /// `(2^(i-1), 2^i]` (bucket 0 holds 0 and 1), the last bucket holds
+    /// everything beyond `2^(N_BUCKETS-2)`.
+    pub fn bucket_index(v: u64) -> usize {
+        let bits = (64 - v.leading_zeros()) as usize; // 0 for v=0
+        bits.saturating_sub(if v.is_power_of_two() { 1 } else { 0 }).min(N_BUCKETS - 1)
+    }
+
+    /// The inclusive upper bound of bucket `i` (`u64::MAX` for the
+    /// overflow bucket).
+    pub fn upper_bound(i: usize) -> u64 {
+        if i >= N_BUCKETS - 1 { u64::MAX } else { 1u64 << i }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Immutable copy of the current state.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum(),
+        }
+    }
+
+    /// Fold another histogram's current state into this one (element-wise
+    /// sums — the associative/commutative merge).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+}
+
+/// A plain-value histogram state, for merge-law tests and exposition.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts ([`Histogram::bucket_index`] layout).
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observations.
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// The pure merge the atomic [`Histogram::merge_from`] implements.
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let n = self.buckets.len().max(other.buckets.len());
+        let get = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+        HistogramSnapshot {
+            buckets: (0..n).map(|i| get(&self.buckets, i) + get(&other.buckets, i)).collect(),
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+        }
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone)]
+pub enum Metric {
+    /// Monotone counter.
+    Counter(Arc<Counter>),
+    /// Up/down gauge.
+    Gauge(Arc<Gauge>),
+    /// Log-bucketed histogram.
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics. Lookup happens at instrumentation
+/// *setup* (handles are cached); the scrape path walks the sorted map.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<&'static str, Metric>>,
+}
+
+impl Registry {
+    /// Fresh, empty registry (tests; production uses [`global`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The counter registered under `name`, creating it on first use.
+    /// Panics if `name` is already registered as a different kind — two
+    /// sites disagreeing on a metric's type is a programming error.
+    pub fn counter(&self, name: &'static str) -> Arc<Counter> {
+        let mut map = self.inner.lock().unwrap();
+        match map.entry(name).or_insert_with(|| Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => Arc::clone(c),
+            other => panic!("metric {name} already registered as {}", kind_name(other)),
+        }
+    }
+
+    /// The gauge registered under `name`, creating it on first use.
+    pub fn gauge(&self, name: &'static str) -> Arc<Gauge> {
+        let mut map = self.inner.lock().unwrap();
+        match map.entry(name).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => Arc::clone(g),
+            other => panic!("metric {name} already registered as {}", kind_name(other)),
+        }
+    }
+
+    /// The histogram registered under `name`, creating it on first use.
+    pub fn histogram(&self, name: &'static str) -> Arc<Histogram> {
+        let mut map = self.inner.lock().unwrap();
+        match map
+            .entry(name)
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::default())))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            other => panic!("metric {name} already registered as {}", kind_name(other)),
+        }
+    }
+
+    /// Visit every metric in name order.
+    pub fn visit(&self, mut f: impl FnMut(&'static str, &Metric)) {
+        for (name, metric) in self.inner.lock().unwrap().iter() {
+            f(name, metric);
+        }
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Whether nothing is registered yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn kind_name(m: &Metric) -> &'static str {
+    match m {
+        Metric::Counter(_) => "counter",
+        Metric::Gauge(_) => "gauge",
+        Metric::Histogram(_) => "histogram",
+    }
+}
+
+/// The process-wide registry every production site registers into (the
+/// serve daemon scrapes it; `metrics::report_to_json` mirrors it).
+pub fn global() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_brackets_powers_of_two() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(1024), 10);
+        assert_eq!(Histogram::bucket_index(u64::MAX), N_BUCKETS - 1);
+        // every observation lands at or below its bucket's upper bound
+        for v in [0u64, 1, 2, 3, 7, 8, 9, 1 << 20, (1 << 20) + 1] {
+            let i = Histogram::bucket_index(v);
+            assert!(v <= Histogram::upper_bound(i), "v={v} i={i}");
+            if i > 0 {
+                assert!(v > Histogram::upper_bound(i - 1), "v={v} below bucket {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_observe_and_merge() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for v in [1u64, 5, 5, 1000] {
+            a.observe(v);
+        }
+        b.observe(7);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum(), 1 + 5 + 5 + 1000 + 7);
+        let snap = a.snapshot();
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn registry_hands_back_the_same_handle() {
+        let r = Registry::new();
+        let c1 = r.counter("x_total");
+        let c2 = r.counter("x_total");
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        assert!(Arc::ptr_eq(&c1, &c2));
+        let g = r.gauge("depth");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        assert_eq!(r.len(), 2);
+        // visit order is name order
+        let mut names = Vec::new();
+        r.visit(|n, _| names.push(n));
+        assert_eq!(names, vec!["depth", "x_total"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("m");
+        let _ = r.gauge("m");
+    }
+}

@@ -1,0 +1,296 @@
+//! L7 — structured observability: a span **flight recorder**, a
+//! **metrics registry**, and **exposition** in Prometheus text and Chrome
+//! trace-event JSON.
+//!
+//! Everything here is zero-dependency and *near-free when disabled*:
+//!
+//! * Tracing is off by default. The hot check ([`trace_enabled`]) is a
+//!   single relaxed atomic load; the `PALLAS_TRACE` knob is resolved
+//!   exactly once, like the cluster's `ConnectOptions`, and a disabled
+//!   [`span`] never reads the clock or touches a ring.
+//! * Metrics are on by default (they back `SolveReport::phases` and the
+//!   serve daemon's scrape) and cost one atomic RMW per bump; the
+//!   `PALLAS_METRICS` knob turns the per-event histogram work off.
+//!
+//! Spans are timestamped through the [`Clock`] seam, so a solve driven
+//! under the deterministic simulator records *virtual*-time spans and two
+//! replays of the same `(seed, FaultPlan)` produce the identical
+//! [`recorder::canonical`] trace. The [`recorder`] holds events in
+//! lock-free per-thread ring buffers — a crashing run still has its last
+//! moments on record ([`install_panic_hook`], and the simulator's hang
+//! guard dumps it too).
+//!
+//! `docs/observability.md` is the user guide.
+
+pub mod chrome;
+pub mod metrics;
+pub mod prom;
+pub mod recorder;
+
+pub use recorder::{EventKind, EventRecord, Track};
+
+use crate::cluster::Clock;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Well-known span/event codes. Codes are stable u16s because worker-side
+/// spans cross the wire inside L4 frame-header extensions (see
+/// `docs/cluster-protocol.md`); [`names::name_of`] maps them back for
+/// exposition.
+pub mod names {
+    /// One whole solve (session root).
+    pub const SESSION: u16 = 1;
+    /// One solver round; `a` = round index.
+    pub const ROUND: u16 = 2;
+    /// Round phase: leader-side broadcast bookkeeping.
+    pub const BROADCAST: u16 = 3;
+    /// Round phase: the map (chunk fan-out / in-process fold).
+    pub const MAP: u16 = 4;
+    /// Round phase: threshold / gradient reduce + λ update.
+    pub const REDUCE: u16 = 5;
+    /// The self-consistency re-evaluation at the final λ.
+    pub const FINAL_EVAL: u16 = 6;
+    /// Feasibility post-processing.
+    pub const POSTPROCESS: u16 = 7;
+    /// One leader↔worker chunk exchange; `a` = round, `b` = chunk lo.
+    pub const EXCHANGE: u16 = 8;
+    /// One task executed worker-side; `a` = round, `b` = chunk lo.
+    pub const TASK: u16 = 9;
+    /// A demand wait on a prefetched shard; `a` = shard index.
+    pub const IO_WAIT: u16 = 10;
+    /// One backend shard read; `a` = byte offset, `b` = length.
+    pub const IO_READ: u16 = 11;
+    /// One serve-plane request; `a` = frame kind.
+    pub const SERVE_REQUEST: u16 = 12;
+    /// A daemon-hosted solve; `a` = session tag.
+    pub const SERVE_SOLVE: u16 = 13;
+    /// Instant: a chunk went back on the deal queue; `a` = round,
+    /// `b` = chunk lo.
+    pub const REDEAL: u16 = 14;
+
+    /// Human name for a code (unknown codes render as `event/<code>`
+    /// would — callers show the number alongside).
+    pub fn name_of(code: u16) -> &'static str {
+        match code {
+            SESSION => "session",
+            ROUND => "round",
+            BROADCAST => "broadcast",
+            MAP => "map",
+            REDUCE => "reduce",
+            FINAL_EVAL => "final_eval",
+            POSTPROCESS => "postprocess",
+            EXCHANGE => "exchange",
+            TASK => "task",
+            IO_WAIT => "io_wait",
+            IO_READ => "io_read",
+            SERVE_REQUEST => "serve_request",
+            SERVE_SOLVE => "serve_solve",
+            REDEAL => "redeal",
+            _ => "event",
+        }
+    }
+}
+
+const UNRESOLVED: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+static TRACE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+static METRICS: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+fn env_flag(var: &str, default_on: bool) -> bool {
+    match std::env::var(var) {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "off" | "false"),
+        Err(_) => default_on,
+    }
+}
+
+#[cold]
+fn resolve(cell: &AtomicU8, var: &str, default_on: bool) -> bool {
+    let on = env_flag(var, default_on);
+    // first resolver wins; a concurrent force_* call is not overwritten
+    let _ = cell.compare_exchange(
+        UNRESOLVED,
+        if on { ON } else { OFF },
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    cell.load(Ordering::Relaxed) == ON
+}
+
+/// Is span tracing on? One relaxed load on the hot path; `PALLAS_TRACE`
+/// is consulted once, on the first call.
+#[inline]
+pub fn trace_enabled() -> bool {
+    match TRACE.load(Ordering::Relaxed) {
+        UNRESOLVED => resolve(&TRACE, "PALLAS_TRACE", false),
+        v => v == ON,
+    }
+}
+
+/// Is per-event metric recording on? (Registry handles always exist and
+/// counters always count — this gates the histogram work.) `PALLAS_METRICS`
+/// is consulted once; the default is on.
+#[inline]
+pub fn metrics_enabled() -> bool {
+    match METRICS.load(Ordering::Relaxed) {
+        UNRESOLVED => resolve(&METRICS, "PALLAS_METRICS", true),
+        v => v == ON,
+    }
+}
+
+/// Force tracing on/off, overriding `PALLAS_TRACE` — `solve --trace` and
+/// tests use this.
+pub fn force_trace(on: bool) {
+    TRACE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Force metric recording on/off, overriding `PALLAS_METRICS`.
+pub fn force_metrics(on: bool) {
+    METRICS.store(if on { ON } else { OFF }, Ordering::Relaxed);
+}
+
+/// Open a span on `track`: records a [`EventKind::Span`] event with the
+/// clocked duration when the guard drops. Disabled tracing returns an
+/// inert guard without reading the clock.
+pub fn span<'c>(clock: &'c dyn Clock, track: Track, code: u16) -> SpanGuard<'c> {
+    if !trace_enabled() {
+        return SpanGuard { clock: None, track, code, t0: 0, a: 0, b: 0 };
+    }
+    SpanGuard { clock: Some(clock), track, code, t0: clock.now_ns(), a: 0, b: 0 }
+}
+
+/// A live (or inert) span; see [`span`].
+pub struct SpanGuard<'c> {
+    clock: Option<&'c dyn Clock>,
+    track: Track,
+    code: u16,
+    t0: u64,
+    a: u64,
+    b: u64,
+}
+
+impl SpanGuard<'_> {
+    /// Attach the two argument words (builder form).
+    pub fn args(mut self, a: u64, b: u64) -> Self {
+        self.a = a;
+        self.b = b;
+        self
+    }
+
+    /// Attach the argument words on an already-held guard.
+    pub fn set_args(&mut self, a: u64, b: u64) {
+        self.a = a;
+        self.b = b;
+    }
+
+    /// Whether this guard will record on drop.
+    pub fn is_live(&self) -> bool {
+        self.clock.is_some()
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(clock) = self.clock {
+            let t1 = clock.now_ns();
+            recorder::record_event(EventRecord {
+                track: self.track,
+                kind: EventKind::Span,
+                code: self.code,
+                t_ns: self.t0,
+                dur_ns: t1.saturating_sub(self.t0),
+                a: self.a,
+                b: self.b,
+            });
+        }
+    }
+}
+
+/// Record a completed span from explicit clock readings (for call sites
+/// that already hold a stopwatch and must not read the clock twice).
+pub fn complete(track: Track, code: u16, t0_ns: u64, dur_ns: u64, a: u64, b: u64) {
+    if trace_enabled() {
+        recorder::record_event(EventRecord {
+            track,
+            kind: EventKind::Span,
+            code,
+            t_ns: t0_ns,
+            dur_ns,
+            a,
+            b,
+        });
+    }
+}
+
+/// Record a zero-duration marker event.
+pub fn instant(clock: &dyn Clock, track: Track, code: u16, a: u64, b: u64) {
+    if trace_enabled() {
+        recorder::record_event(EventRecord {
+            track,
+            kind: EventKind::Instant,
+            code,
+            t_ns: clock.now_ns(),
+            dur_ns: 0,
+            a,
+            b,
+        });
+    }
+}
+
+/// Chain a flight-recorder dump onto the process panic hook, so a crash
+/// with tracing on leaves the last recorded events on stderr (the CLI
+/// installs this; the simulator's hang guard dumps independently).
+pub fn install_panic_hook() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        prev(info);
+        if trace_enabled() {
+            eprintln!("--- flight recorder (most recent spans) ---");
+            eprintln!("{}", recorder::dump_text(64));
+        }
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::VirtualClock;
+
+    #[test]
+    fn disabled_span_is_inert_and_forced_span_records() {
+        // a code no production site uses, so concurrent unit tests that
+        // also record into the global rings cannot collide with this one
+        const TEST_CODE: u16 = 0x7E57;
+        force_trace(false);
+        let clock = VirtualClock::new();
+        {
+            let g = span(clock.as_ref(), Track::Leader, TEST_CODE).args(1, 2);
+            assert!(!g.is_live());
+        }
+        force_trace(true);
+        clock.advance_to(5_000);
+        {
+            let mut g = span(clock.as_ref(), Track::Leader, TEST_CODE);
+            assert!(g.is_live());
+            g.set_args(424_242, 0);
+            clock.advance_to(9_000);
+        }
+        force_trace(false);
+        let events = recorder::snapshot();
+        let e = events
+            .iter()
+            .find(|e| e.code == TEST_CODE && e.a == 424_242)
+            .expect("forced span recorded");
+        assert_eq!(e.t_ns, 5_000);
+        assert_eq!(e.dur_ns, 4_000);
+        assert_eq!(e.kind, EventKind::Span);
+    }
+
+    #[test]
+    fn every_named_code_has_a_label() {
+        for code in 1..=14u16 {
+            assert_ne!(names::name_of(code), "event", "code {code} unnamed");
+        }
+        assert_eq!(names::name_of(9999), "event");
+    }
+}

@@ -1,0 +1,89 @@
+//! Prometheus text exposition (format 0.0.4) over a metrics
+//! [`Registry`] — what a `bskp serve` daemon answers to a
+//! `ServeMsg::Metrics` scrape.
+//!
+//! Deliberately the plain-text subset: `# TYPE` lines, cumulative
+//! `_bucket{le="..."}` series for histograms, sorted by metric name (the
+//! registry's own order), no timestamps. Zero dependencies — the format
+//! is line-oriented text.
+
+use crate::obs::metrics::{Histogram, Metric, Registry, N_BUCKETS};
+use std::fmt::Write as _;
+
+/// Render `registry` in Prometheus text format.
+pub fn render_registry(registry: &Registry) -> String {
+    let mut out = String::new();
+    registry.visit(|name, metric| match metric {
+        Metric::Counter(c) => {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        }
+        Metric::Gauge(g) => {
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {}", g.get());
+        }
+        Metric::Histogram(h) => {
+            let _ = writeln!(out, "# TYPE {name} histogram");
+            let snap = h.snapshot();
+            let mut cum = 0u64;
+            for (i, &n) in snap.buckets.iter().enumerate() {
+                cum += n;
+                // skip interior empty buckets to keep scrapes compact;
+                // always emit +Inf (required) and any populated bound
+                if n == 0 && i < N_BUCKETS - 1 {
+                    continue;
+                }
+                if i >= N_BUCKETS - 1 {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                } else {
+                    let _ =
+                        writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", Histogram::upper_bound(i));
+                }
+            }
+            if snap.buckets.len() < N_BUCKETS {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+            let _ = writeln!(out, "{name}_sum {}", snap.sum);
+            let _ = writeln!(out, "{name}_count {}", snap.count);
+        }
+    });
+    out
+}
+
+/// [`render_registry`] over the process-wide [`crate::obs::metrics::global`]
+/// registry.
+pub fn render() -> String {
+    render_registry(crate::obs::metrics::global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+
+    #[test]
+    fn exposition_is_sorted_typed_and_cumulative() {
+        let r = Registry::new();
+        r.counter("bskp_rounds_total").add(3);
+        r.gauge("bskp_serve_active").set(2);
+        let h = r.histogram("bskp_exchange_ns");
+        h.observe(3); // bucket 2 (le=4)
+        h.observe(100); // bucket 7 (le=128)
+        let text = render_registry(&r);
+
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.contains(&"# TYPE bskp_rounds_total counter"), "{text}");
+        assert!(lines.contains(&"bskp_rounds_total 3"), "{text}");
+        assert!(lines.contains(&"# TYPE bskp_serve_active gauge"), "{text}");
+        assert!(lines.contains(&"bskp_serve_active 2"), "{text}");
+        assert!(lines.contains(&"bskp_exchange_ns_bucket{le=\"4\"} 1"), "{text}");
+        assert!(lines.contains(&"bskp_exchange_ns_bucket{le=\"128\"} 2"), "{text}");
+        assert!(lines.contains(&"bskp_exchange_ns_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(lines.contains(&"bskp_exchange_ns_sum 103"), "{text}");
+        assert!(lines.contains(&"bskp_exchange_ns_count 2"), "{text}");
+        // name-sorted: the histogram series precede the counter lines
+        let hist_at = lines.iter().position(|l| l.contains("exchange_ns_count")).unwrap();
+        let ctr_at = lines.iter().position(|l| *l == "bskp_rounds_total 3").unwrap();
+        assert!(hist_at < ctr_at, "{text}");
+    }
+}

@@ -1,0 +1,382 @@
+//! The span flight recorder: lock-free per-thread ring buffers.
+//!
+//! Every recording thread owns one fixed-size ring of 6-word slots
+//! (sequence word + five payload words, all `AtomicU64`). The owning
+//! thread is the only writer, so a push is five relaxed stores bracketed
+//! by two sequence stores — no locks, no allocation, and a full ring
+//! simply overwrites its oldest events (it is a *flight* recorder, not a
+//! log). Readers ([`snapshot`], [`dump_text`]) validate each slot's
+//! sequence word before and after reading the payload and skip torn
+//! slots, seqlock-style; everything is atomics, so concurrent snapshots
+//! are safe (merely approximate) while quiesced snapshots are exact.
+//!
+//! [`canonical`] is the replay-comparison form: the multiset of event
+//! *identities* `(track, kind, code, a, b)`, sorted. Timestamps are
+//! deliberately excluded — under the simulator the global virtual clock
+//! is a running maximum over all links, so the instant at which a
+//! causally-unrelated event reads it can differ between replays (the
+//! same caveat `cluster::sim` documents for cross-direction event order).
+//! The identity multiset is interleaving-independent, which is what the
+//! sim-determinism property suite pins down.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default events per thread ring (`PALLAS_TRACE_BUF` overrides).
+pub const DEFAULT_RING_EVENTS: usize = 1 << 14;
+
+/// The logical timeline an event belongs to. Tracks are assigned by the
+/// *instrumentation site* (a leader round, a worker link slot, the io
+/// layer), not by OS thread — thread scheduling must never leak into a
+/// trace's shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Track {
+    /// The solve driver / cluster leader.
+    Leader,
+    /// A worker process (index 0 when the worker cannot know its slot).
+    Worker(u16),
+    /// One leader↔worker link, by leader slot index.
+    Link(u16),
+    /// The async I/O subsystem.
+    Io,
+    /// The serve daemon's request plane.
+    Serve,
+}
+
+impl Track {
+    fn pack(self) -> u32 {
+        match self {
+            Track::Leader => 0,
+            Track::Worker(i) => (1 << 16) | i as u32,
+            Track::Link(i) => (2 << 16) | i as u32,
+            Track::Io => 3 << 16,
+            Track::Serve => 4 << 16,
+        }
+    }
+
+    fn unpack(v: u32) -> Self {
+        let idx = (v & 0xFFFF) as u16;
+        match v >> 16 {
+            1 => Track::Worker(idx),
+            2 => Track::Link(idx),
+            3 => Track::Io,
+            4 => Track::Serve,
+            _ => Track::Leader,
+        }
+    }
+
+    /// Stable numeric id (Chrome `tid`, canonical sort key).
+    pub fn tid(self) -> u32 {
+        self.pack()
+    }
+
+    /// Human label for dumps and Chrome thread names.
+    pub fn label(self) -> String {
+        match self {
+            Track::Leader => "leader".into(),
+            Track::Worker(i) => format!("worker/{i}"),
+            Track::Link(i) => format!("link/{i}"),
+            Track::Io => "io".into(),
+            Track::Serve => "serve".into(),
+        }
+    }
+}
+
+/// What shape of event a record is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A duration: `[t_ns, t_ns + dur_ns)`.
+    Span,
+    /// A zero-duration marker.
+    Instant,
+}
+
+impl EventKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            EventKind::Span => 0,
+            EventKind::Instant => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Self {
+        if v == 1 { EventKind::Instant } else { EventKind::Span }
+    }
+}
+
+/// One recorded event (the decoded form of a ring slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventRecord {
+    /// Logical timeline.
+    pub track: Track,
+    /// Span or instant.
+    pub kind: EventKind,
+    /// Name code ([`crate::obs::names`]).
+    pub code: u16,
+    /// Start time, clock nanoseconds.
+    pub t_ns: u64,
+    /// Duration, nanoseconds (0 for instants).
+    pub dur_ns: u64,
+    /// First argument word (site-defined; round index, shard index, …).
+    pub a: u64,
+    /// Second argument word (site-defined; chunk lo, byte count, …).
+    pub b: u64,
+}
+
+const WORDS: usize = 6;
+
+struct Slot {
+    w: [AtomicU64; WORDS],
+}
+
+struct Ring {
+    slots: Box<[Slot]>,
+    /// Events ever pushed this epoch (single writer; readers load it).
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        let slots = (0..cap.max(16))
+            .map(|_| Slot { w: std::array::from_fn(|_| AtomicU64::new(0)) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self { slots, head: AtomicU64::new(0) }
+    }
+
+    /// Owner-thread push (the sole writer of this ring).
+    fn push(&self, e: &EventRecord) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) % self.slots.len()];
+        // invalidate, write payload, publish with the new sequence
+        slot.w[0].store(0, Ordering::Release);
+        fence(Ordering::Release);
+        let meta = (e.code as u64)
+            | ((e.kind.to_u8() as u64) << 16)
+            | ((e.track.pack() as u64) << 32);
+        slot.w[1].store(meta, Ordering::Relaxed);
+        slot.w[2].store(e.t_ns, Ordering::Relaxed);
+        slot.w[3].store(e.dur_ns, Ordering::Relaxed);
+        slot.w[4].store(e.a, Ordering::Relaxed);
+        slot.w[5].store(e.b, Ordering::Relaxed);
+        slot.w[0].store(h + 1, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    fn read_into(&self, out: &mut Vec<EventRecord>) {
+        for slot in self.slots.iter() {
+            let seq = slot.w[0].load(Ordering::Acquire);
+            if seq == 0 {
+                continue;
+            }
+            let meta = slot.w[1].load(Ordering::Relaxed);
+            let t_ns = slot.w[2].load(Ordering::Relaxed);
+            let dur_ns = slot.w[3].load(Ordering::Relaxed);
+            let a = slot.w[4].load(Ordering::Relaxed);
+            let b = slot.w[5].load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if slot.w[0].load(Ordering::Relaxed) != seq {
+                continue; // torn: the writer lapped us mid-read
+            }
+            out.push(EventRecord {
+                track: Track::unpack((meta >> 32) as u32),
+                kind: EventKind::from_u8((meta >> 16) as u8),
+                code: meta as u16,
+                t_ns,
+                dur_ns,
+                a,
+                b,
+            });
+        }
+    }
+
+    fn clear(&self) {
+        for slot in self.slots.iter() {
+            slot.w[0].store(0, Ordering::Release);
+        }
+        self.head.store(0, Ordering::Release);
+    }
+
+    fn dropped(&self) -> u64 {
+        self.head.load(Ordering::Acquire).saturating_sub(self.slots.len() as u64)
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn ring_events_from_env() -> usize {
+    std::env::var("PALLAS_TRACE_BUF")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_RING_EVENTS)
+}
+
+thread_local! {
+    static RING: std::cell::OnceCell<Arc<Ring>> = const { std::cell::OnceCell::new() };
+}
+
+/// Record one event into the calling thread's ring (creating and
+/// registering the ring on first use). Callers gate on
+/// [`crate::obs::trace_enabled`]; this function itself never checks.
+pub(crate) fn record_event(e: EventRecord) {
+    RING.with(|cell| {
+        let ring = cell.get_or_init(|| {
+            let r = Arc::new(Ring::new(ring_events_from_env()));
+            registry().lock().unwrap().push(Arc::clone(&r));
+            r
+        });
+        ring.push(&e);
+    });
+}
+
+/// Every currently-readable event across all thread rings, in no
+/// particular order. Exact when writers are quiesced; torn slots (a
+/// writer lapping the reader mid-slot) are skipped.
+pub fn snapshot() -> Vec<EventRecord> {
+    let rings: Vec<Arc<Ring>> = registry().lock().unwrap().iter().cloned().collect();
+    let mut out = Vec::new();
+    for ring in rings {
+        ring.read_into(&mut out);
+    }
+    out
+}
+
+/// Total events overwritten by ring wraparound since the last [`reset`].
+/// Replay-comparison suites assert this is 0 (otherwise the multiset
+/// comparison would depend on *which* events each ring dropped).
+pub fn dropped() -> u64 {
+    registry().lock().unwrap().iter().map(|r| r.dropped()).sum()
+}
+
+/// Clear every ring (head and sequence words). Callers must quiesce
+/// recording threads first — a concurrent writer may land events across
+/// the reset boundary.
+pub fn reset() {
+    for ring in registry().lock().unwrap().iter() {
+        ring.clear();
+    }
+}
+
+/// The canonical, replay-comparable form of `events`: the identity
+/// multiset `(track tid, kind, code, a, b)`, sorted on all fields.
+/// Timestamps and durations are excluded by design (see the module docs).
+pub fn canonical(events: &[EventRecord]) -> Vec<(u32, u8, u16, u64, u64)> {
+    let mut keys: Vec<(u32, u8, u16, u64, u64)> = events
+        .iter()
+        .map(|e| (e.track.tid(), e.kind.to_u8(), e.code, e.a, e.b))
+        .collect();
+    keys.sort_unstable();
+    keys
+}
+
+/// [`canonical`] over a fresh [`snapshot`], rendered one event per line
+/// (for assertions and replay diffs).
+pub fn canonical_text() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (tid, kind, code, a, b) in canonical(&snapshot()) {
+        let _ = writeln!(
+            out,
+            "{} {} {}({code}) a={a} b={b}",
+            Track::unpack(tid).label(),
+            if kind == 1 { "instant" } else { "span" },
+            crate::obs::names::name_of(code),
+        );
+    }
+    out
+}
+
+/// The most recent `max_events` events rendered one per line, newest
+/// last — the forensic dump chained onto panics and the simulator's
+/// hang guard.
+pub fn dump_text(max_events: usize) -> String {
+    use std::fmt::Write as _;
+    let mut events = snapshot();
+    events.sort_by_key(|e| (e.t_ns, e.track.tid(), e.code));
+    let skip = events.len().saturating_sub(max_events);
+    let mut out = String::new();
+    for e in events.into_iter().skip(skip) {
+        let _ = writeln!(
+            out,
+            "{:>12}ns +{:<10} {:<9} {:<12} a={} b={}",
+            e.t_ns,
+            format!("{}ns", e.dur_ns),
+            e.track.label(),
+            format!("{}({})", crate::obs::names::name_of(e.code), e.code),
+            e.a,
+            e.b,
+        );
+    }
+    if out.is_empty() {
+        out.push_str("(flight recorder empty)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let ring = Ring::new(16);
+        for i in 0..40u64 {
+            ring.push(&EventRecord {
+                track: Track::Io,
+                kind: EventKind::Instant,
+                code: 1,
+                t_ns: i,
+                dur_ns: 0,
+                a: i,
+                b: 0,
+            });
+        }
+        let mut out = Vec::new();
+        ring.read_into(&mut out);
+        assert_eq!(out.len(), 16, "ring holds exactly its capacity");
+        let min_a = out.iter().map(|e| e.a).min().unwrap();
+        assert_eq!(min_a, 24, "oldest events overwritten first");
+        assert_eq!(ring.dropped(), 24);
+        ring.clear();
+        out.clear();
+        ring.read_into(&mut out);
+        assert!(out.is_empty());
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn track_roundtrips_through_packing() {
+        for t in [
+            Track::Leader,
+            Track::Worker(0),
+            Track::Worker(513),
+            Track::Link(7),
+            Track::Io,
+            Track::Serve,
+        ] {
+            assert_eq!(Track::unpack(t.pack()), t, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn canonical_is_order_independent() {
+        let e1 = EventRecord {
+            track: Track::Leader,
+            kind: EventKind::Span,
+            code: 2,
+            t_ns: 100,
+            dur_ns: 5,
+            a: 0,
+            b: 0,
+        };
+        let e2 = EventRecord { track: Track::Link(1), t_ns: 7, a: 3, ..e1 };
+        // different timestamps, same identities: canonical forms agree
+        let c1 = canonical(&[e1, e2]);
+        let c2 = canonical(&[EventRecord { t_ns: 999, dur_ns: 1, ..e2 }, e1]);
+        assert_eq!(c1, c2);
+    }
+}

@@ -148,4 +148,21 @@ impl ServeClient {
             other => Err(self.unexpected(&other, "progress-reply")),
         }
     }
+
+    /// Scrape the daemon's metric registry as Prometheus text exposition.
+    pub fn scrape(&mut self) -> Result<String> {
+        match self.roundtrip(&ServeMsg::Metrics)? {
+            ServeMsg::MetricsReply { text } => Ok(text),
+            other => Err(self.unexpected(&other, "metrics-reply")),
+        }
+    }
+
+    /// Snapshot the daemon's span flight recorder as Chrome trace-event
+    /// JSON (an empty trace when the daemon runs without `PALLAS_TRACE`).
+    pub fn trace_snapshot(&mut self) -> Result<String> {
+        match self.roundtrip(&ServeMsg::Trace)? {
+            ServeMsg::TraceReply { json } => Ok(json),
+            other => Err(self.unexpected(&other, "trace-reply")),
+        }
+    }
 }

@@ -4,8 +4,8 @@
 //! budgets drift a few percent (§6: warm-started re-solves converge in a
 //! fraction of the cold rounds). This module hosts that loop as a
 //! daemon: mmap the shard store **once**, keep the last converged λ per
-//! instance fingerprint, and answer three request kinds over the cluster
-//! frame layer (kinds 32–41; see [`protocol`] and `docs/serve-api.md`):
+//! instance fingerprint, and answer these request kinds over the cluster
+//! frame layer (kinds 32–45; see [`protocol`] and `docs/serve-api.md`):
 //!
 //! * **Solve / warm re-solve** — a [`protocol::SolveSpec`] names the
 //!   algorithm, a uniform budget scale (served through
@@ -19,6 +19,9 @@
 //! * **Progress streaming** — a client-tagged solve publishes per-round
 //!   events into a registry; any connection can poll them while the
 //!   solve runs.
+//! * **Observability** — `Metrics` scrapes the [`crate::obs`] registry in
+//!   Prometheus text; `Trace` snapshots the span flight recorder as
+//!   Chrome trace-event JSON (see `docs/observability.md`).
 //!
 //! **Admission control**: at most `ServeOptions::admission` solves run
 //! concurrently; an excess solve gets a typed `Busy` reply immediately —
@@ -45,6 +48,8 @@ use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::store::MmapProblem;
 use crate::mapreduce::Cluster;
+use crate::obs::metrics::{Counter, Gauge, Histogram};
+use crate::obs::{self, names, Track};
 use crate::solve::{ScaledBudgets, Solve, WarmStart};
 use crate::solver::config::SolverConfig;
 use crate::solver::pointquery::allocations_at;
@@ -151,15 +156,25 @@ struct ServeState {
     /// (which share it — budgets are excluded from identity).
     warm: Mutex<Vec<(InstanceFingerprint, Vec<f64>)>>,
     progress: Mutex<HashMap<u64, ProgressState>>,
+    /// Registry mirror of the admission counter, for scrapes.
+    active_gauge: Arc<Gauge>,
+    requests: Arc<Counter>,
+    busy_total: Arc<Counter>,
+    request_ns: Arc<Histogram>,
 }
 
 impl ServeState {
     fn new(limit: usize) -> Self {
+        let reg = obs::metrics::global();
         Self {
             limit,
             active: Mutex::new(0),
             warm: Mutex::new(Vec::new()),
             progress: Mutex::new(HashMap::new()),
+            active_gauge: reg.gauge("bskp_serve_active"),
+            requests: reg.counter("bskp_serve_requests_total"),
+            busy_total: reg.counter("bskp_serve_busy_total"),
+            request_ns: reg.histogram("bskp_serve_request_ns"),
         }
     }
 
@@ -168,6 +183,7 @@ impl ServeState {
         let mut a = self.active.lock().unwrap();
         if *a < self.limit {
             *a += 1;
+            self.active_gauge.set(*a as i64);
             Ok(AdmitGuard { state: self })
         } else {
             Err(*a)
@@ -206,7 +222,9 @@ struct AdmitGuard<'a> {
 
 impl Drop for AdmitGuard<'_> {
     fn drop(&mut self) {
-        *self.state.active.lock().unwrap() -= 1;
+        let mut a = self.state.active.lock().unwrap();
+        *a -= 1;
+        self.state.active_gauge.set(*a as i64);
     }
 }
 
@@ -257,6 +275,8 @@ fn session(
             Ok((msg, _)) => msg,
             Err(_) => return Ok(()),
         };
+        let req_kind = msg.kind();
+        let t0 = clock.now_ns();
         let reply = match msg {
             ServeMsg::Info => ServeMsg::InfoReply {
                 fingerprint: fp.clone(),
@@ -267,10 +287,23 @@ fn session(
             ServeMsg::Solve { spec } => handle_solve(&spec, source, fp, pool, state, &clock),
             ServeMsg::Query { groups } => handle_query(&groups, source, fp, state),
             ServeMsg::Progress { tag, after } => handle_progress(tag, after, state),
+            ServeMsg::Metrics => ServeMsg::MetricsReply { text: obs::prom::render() },
+            ServeMsg::Trace => {
+                ServeMsg::TraceReply { json: obs::chrome::render(&obs::recorder::snapshot()) }
+            }
             other => ServeMsg::Abort {
                 message: format!("unexpected {} frame from a client", other.name()),
             },
         };
+        let dur_ns = clock.now_ns().saturating_sub(t0);
+        if obs::metrics_enabled() {
+            state.requests.inc();
+            state.request_ns.observe(dur_ns);
+            if matches!(reply, ServeMsg::Busy { .. }) {
+                state.busy_total.inc();
+            }
+        }
+        obs::complete(Track::Serve, names::SERVE_REQUEST, t0, dur_ns, req_kind as u64, 0);
         send_serve(&mut stream, &reply)?;
     }
 }
@@ -294,8 +327,11 @@ fn handle_solve(
     if spec.tag != 0 {
         state.progress.lock().unwrap().insert(spec.tag, ProgressState::default());
     }
+    let t0 = clock.now_ns();
     let out = run_solve(spec, source, fp, pool, state, clock);
     state.mark_done(spec.tag);
+    let dur_ns = clock.now_ns().saturating_sub(t0);
+    obs::complete(Track::Serve, names::SERVE_SOLVE, t0, dur_ns, spec.tag, 0);
     match out {
         Ok((warm_used, report)) => ServeMsg::SolveReply { warm_used, report },
         Err(e) => ServeMsg::Abort { message: e.to_string() },

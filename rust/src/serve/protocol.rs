@@ -1,8 +1,8 @@
 //! Message vocabulary of the serve plane (`bskp serve`).
 //!
-//! Ten message kinds ride the same frame layer as the worker protocol
-//! ([`crate::cluster`]'s frames: magic, version, kind, length, payload,
-//! kind-seeded XXH64 trailer) under kinds 32–41
+//! Fourteen message kinds ride the same frame layer as the worker
+//! protocol ([`crate::cluster`]'s frames: magic, version, kind, length,
+//! payload, kind-seeded XXH64 trailer) under kinds 32–45
 //! (`frames::serve_kind`) — disjoint from the worker plane's 1–10, and
 //! since the kind seeds the checksum, a frame replayed across planes
 //! fails verification outright. `docs/serve-api.md` is the normative
@@ -221,6 +221,15 @@ pub(crate) enum ServeMsg {
     Busy { active: u32, limit: u32 },
     /// Typed request failure.
     Abort { message: String },
+    /// Scrape the daemon's metric registry ([`crate::obs::metrics`]).
+    Metrics,
+    /// Prometheus text exposition of every registered metric.
+    MetricsReply { text: String },
+    /// Snapshot the daemon's span flight recorder.
+    Trace,
+    /// Chrome trace-event JSON of the recorder snapshot (empty array
+    /// when tracing is off — the daemon decides via `PALLAS_TRACE`).
+    TraceReply { json: String },
 }
 
 impl ServeMsg {
@@ -236,6 +245,10 @@ impl ServeMsg {
             ServeMsg::ProgressReply { .. } => k::PROGRESS_REPLY,
             ServeMsg::Busy { .. } => k::BUSY,
             ServeMsg::Abort { .. } => k::ABORT,
+            ServeMsg::Metrics => k::METRICS,
+            ServeMsg::MetricsReply { .. } => k::METRICS_REPLY,
+            ServeMsg::Trace => k::TRACE,
+            ServeMsg::TraceReply { .. } => k::TRACE_REPLY,
         }
     }
 
@@ -252,6 +265,10 @@ impl ServeMsg {
             ServeMsg::ProgressReply { .. } => "progress-reply",
             ServeMsg::Busy { .. } => "busy",
             ServeMsg::Abort { .. } => "abort",
+            ServeMsg::Metrics => "metrics",
+            ServeMsg::MetricsReply { .. } => "metrics-reply",
+            ServeMsg::Trace => "trace",
+            ServeMsg::TraceReply { .. } => "trace-reply",
         }
     }
 
@@ -297,6 +314,13 @@ impl ServeMsg {
             ServeMsg::Abort { message } => {
                 e.str(message);
             }
+            ServeMsg::Metrics | ServeMsg::Trace => {}
+            ServeMsg::MetricsReply { text } => {
+                e.str(text);
+            }
+            ServeMsg::TraceReply { json } => {
+                e.str(json);
+            }
         }
         e.into_bytes()
     }
@@ -339,6 +363,10 @@ impl ServeMsg {
             }
             k::BUSY => ServeMsg::Busy { active: d.u32()?, limit: d.u32()? },
             k::ABORT => ServeMsg::Abort { message: d.str()? },
+            k::METRICS => ServeMsg::Metrics,
+            k::METRICS_REPLY => ServeMsg::MetricsReply { text: d.str()? },
+            k::TRACE => ServeMsg::Trace,
+            k::TRACE_REPLY => ServeMsg::TraceReply { json: d.str()? },
             other => return Err(corrupt(&format!("unknown serve message kind {other}"))),
         };
         d.finish()?;
@@ -421,6 +449,10 @@ mod tests {
             },
             ServeMsg::Busy { active: 2, limit: 2 },
             ServeMsg::Abort { message: "nope".into() },
+            ServeMsg::Metrics,
+            ServeMsg::MetricsReply { text: "# TYPE bskp_x counter\nbskp_x 1\n".into() },
+            ServeMsg::Trace,
+            ServeMsg::TraceReply { json: "{\"traceEvents\":[]}".into() },
         ];
         for m in &msgs {
             let got = roundtrip(m);

@@ -348,6 +348,10 @@ impl<'a> Solve<'a> {
         } else {
             PlannedIo::InMemory
         };
+        // resolve the session clock before staging: the io plane's
+        // read/wait accounting runs through the same seam as the solver's
+        // phase timings
+        let clock: Arc<dyn Clock> = self.clock.clone().unwrap_or_else(|| Arc::new(SystemClock));
         let mut staged = None;
         if let IoMode::Prefetch(kind) = resolved_io {
             match self.source.store_dir() {
@@ -364,7 +368,9 @@ impl<'a> Solve<'a> {
                 )),
                 Some(dir) => {
                     let depth = prefetch_depth_from_env();
-                    match StagedProblem::open(&dir, kind, depth, cluster.workers()) {
+                    let io_clock = Arc::clone(&clock);
+                    let workers = cluster.workers();
+                    match StagedProblem::open_clocked(&dir, kind, depth, workers, io_clock) {
                         Ok((sp, io_notes)) => {
                             for n in io_notes {
                                 notes.push(PlanNote::new("io", n));
@@ -418,7 +424,7 @@ impl<'a> Solve<'a> {
             io: planned_io,
             staged,
             notes,
-            clock: self.clock.unwrap_or_else(|| Arc::new(SystemClock)),
+            clock,
         })
     }
 

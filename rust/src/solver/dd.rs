@@ -16,6 +16,7 @@ use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
 use crate::metrics::ClockStopwatch;
+use crate::obs::{self, names, Track};
 use crate::solver::config::SolverConfig;
 use crate::solver::postprocess;
 use crate::solver::rounds::{evaluation_round, RoundAgg, RustEvaluator, ShardEvaluator};
@@ -174,8 +175,10 @@ fn dd_drive<S: GroupSource + ?Sized>(
     for t in 0..config.max_iters {
         let it0 = ClockStopwatch::start(clock);
         let agg = round(shards, &lambda)?;
-        let map_ms = it0.elapsed_ms();
+        let map_ns = it0.elapsed_ns();
+        let map_ms = map_ns as f64 / 1e6;
         phases.map_ms += map_ms;
+        obs::complete(Track::Leader, names::MAP, it0.start_ns(), map_ns, t as u64, 0);
         let r0 = ClockStopwatch::start(clock);
         let consumption = agg.consumption_values();
 
@@ -184,17 +187,21 @@ fn dd_drive<S: GroupSource + ?Sized>(
         for k in 0..dims.n_global {
             new_lambda[k] = (lambda[k] + config.dd_alpha * (consumption[k] - budgets[k])).max(0.0);
         }
-        let reduce_ms = r0.elapsed_ms();
+        let reduce_ns = r0.elapsed_ns();
+        let reduce_ms = reduce_ns as f64 / 1e6;
         phases.reduce_ms += reduce_ms;
+        obs::complete(Track::Leader, names::REDUCE, r0.start_ns(), reduce_ns, t as u64, 0);
         let residual = rel_change(&new_lambda, &lambda);
         iterations = t + 1;
+        let round_ns = it0.elapsed_ns();
+        obs::complete(Track::Leader, names::ROUND, it0.start_ns(), round_ns, t as u64, 0);
         let event = RoundEvent {
             iter: t,
             primal: agg.primal.value(),
             dual: agg.dual_value(&lambda, &budgets),
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
-            wall_ms: it0.elapsed_ms(),
+            wall_ms: round_ns as f64 / 1e6,
             map_ms,
             reduce_ms,
             skip_rate: 0.0,
@@ -226,7 +233,10 @@ fn dd_drive<S: GroupSource + ?Sized>(
     let agg = if stopped {
         let e0 = ClockStopwatch::start(clock);
         let agg = round(shards, &lambda)?;
-        phases.final_eval_ms = e0.elapsed_ms();
+        let final_ns = e0.elapsed_ns();
+        phases.final_eval_ms = final_ns as f64 / 1e6;
+        let it = iterations as u64;
+        obs::complete(Track::Leader, names::FINAL_EVAL, e0.start_ns(), final_ns, it, 0);
         agg
     } else {
         last_agg.expect("max_iters ≥ 1 ran at least one round")
@@ -248,9 +258,14 @@ fn dd_drive<S: GroupSource + ?Sized>(
     if config.postprocess && !report.is_feasible() {
         let p0 = ClockStopwatch::start(clock);
         postprocess::enforce_feasibility(source, &mut report, exec)?;
-        report.phases.postprocess_ms = p0.elapsed_ms();
+        let post_ns = p0.elapsed_ns();
+        report.phases.postprocess_ms = post_ns as f64 / 1e6;
+        obs::complete(Track::Leader, names::POSTPROCESS, p0.start_ns(), post_ns, 0, 0);
     }
-    report.wall_ms = t0.elapsed_ms();
+    let wall_ns = t0.elapsed_ns();
+    report.wall_ms = wall_ns as f64 / 1e6;
+    obs::complete(Track::Leader, names::SESSION, t0.start_ns(), wall_ns, iterations as u64, 0);
+    crate::metrics::record_phase_timings(&report.phases);
     if let Some(obs) = observer.as_mut() {
         obs.on_complete(&report);
     }

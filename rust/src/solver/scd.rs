@@ -22,6 +22,7 @@ use crate::metrics::ClockStopwatch;
 use crate::instance::problem::{for_each_row, BlockBuf, GroupSource, RowCosts};
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
+use crate::obs::{self, names, Track};
 use crate::solver::adjusted::{accumulate_selection_row, adjusted_profits_row};
 use crate::solver::bucketing::BucketHist;
 use crate::solver::candidates::{candidate_lambdas, line_coefficients_row};
@@ -394,6 +395,12 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
     } else {
         None
     };
+    // registry handles for the λ-stability cache (resolved once; the
+    // per-round bump is two relaxed adds)
+    let walk_counters = stability.as_ref().map(|_| {
+        let reg = obs::metrics::global();
+        (reg.counter("bskp_scd_walks_total"), reg.counter("bskp_scd_walks_skipped_total"))
+    });
     // the λ the previous round was mapped at (bit-equality tracking)
     let mut last_broadcast: Option<Vec<f64>> = None;
     // the pair-buffer arena only cycles on the in-process executor — the
@@ -445,16 +452,26 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
             st.begin_round(last_broadcast.as_deref(), &lambda);
             last_broadcast = Some(lambda.clone());
         }
-        phases.broadcast_ms += it0.elapsed_ms();
+        let bcast_ns = it0.elapsed_ns();
+        phases.broadcast_ms += bcast_ns as f64 / 1e6;
+        obs::complete(Track::Leader, names::BROADCAST, it0.start_ns(), bcast_ns, t as u64, 0);
 
         let m0 = ClockStopwatch::start(clock);
         let ctx = ScdRoundCtx { stability: stability.as_ref(), pool: pool.as_ref() };
         let acc = exec.scd_round(source, shards, &spec, ctx)?;
-        let map_ms = m0.elapsed_ms();
+        let map_ns = m0.elapsed_ns();
+        let map_ms = map_ns as f64 / 1e6;
         phases.map_ms += map_ms;
+        obs::complete(Track::Leader, names::MAP, m0.start_ns(), map_ns, t as u64, 0);
         let (walks, skipped) = stability.as_ref().map_or((0, 0), |st| st.take_counts());
         phases.walks_total += walks;
         phases.walks_skipped += skipped;
+        if let Some((wt, ws)) = &walk_counters {
+            if obs::metrics_enabled() {
+                wt.add(walks);
+                ws.add(skipped);
+            }
+        }
         let skip_rate = if walks == 0 { 0.0 } else { skipped as f64 / walks as f64 };
 
         let r0 = ClockStopwatch::start(clock);
@@ -469,10 +486,14 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
         if let Some(p) = &pool {
             thresholds.recycle(p);
         }
-        let reduce_ms = r0.elapsed_ms();
+        let reduce_ns = r0.elapsed_ns();
+        let reduce_ms = reduce_ns as f64 / 1e6;
         phases.reduce_ms += reduce_ms;
+        obs::complete(Track::Leader, names::REDUCE, r0.start_ns(), reduce_ns, t as u64, 0);
 
         iterations = t + 1;
+        let round_ns = it0.elapsed_ns();
+        obs::complete(Track::Leader, names::ROUND, it0.start_ns(), round_ns, t as u64, 0);
         let residual = rel_change(&new_lambda, &lambda);
         let event = RoundEvent {
             iter: t,
@@ -480,7 +501,7 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
             dual: round.dual_value(&lambda, &budgets),
             max_violation_ratio: max_violation_ratio(&consumption, &budgets),
             lambda_change: residual,
-            wall_ms: it0.elapsed_ms(),
+            wall_ms: round_ns as f64 / 1e6,
             map_ms,
             reduce_ms,
             skip_rate,
@@ -548,7 +569,9 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
             None => RoundAgg::new(kk),
         }
     };
-    phases.final_eval_ms = e0.elapsed_ms();
+    let final_ns = e0.elapsed_ns();
+    phases.final_eval_ms = final_ns as f64 / 1e6;
+    obs::complete(Track::Leader, names::FINAL_EVAL, e0.start_ns(), final_ns, iterations as u64, 0);
 
     let mut report = SolveReport {
         dual_value: agg.dual_value(&lambda, &budgets),
@@ -567,9 +590,14 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
     if config.postprocess && !report.is_feasible() {
         let p0 = ClockStopwatch::start(clock);
         postprocess::enforce_feasibility(source, &mut report, exec)?;
-        report.phases.postprocess_ms = p0.elapsed_ms();
+        let post_ns = p0.elapsed_ns();
+        report.phases.postprocess_ms = post_ns as f64 / 1e6;
+        obs::complete(Track::Leader, names::POSTPROCESS, p0.start_ns(), post_ns, 0, 0);
     }
-    report.wall_ms = t0.elapsed_ms();
+    let wall_ns = t0.elapsed_ns();
+    report.wall_ms = wall_ns as f64 / 1e6;
+    obs::complete(Track::Leader, names::SESSION, t0.start_ns(), wall_ns, iterations as u64, 0);
+    crate::metrics::record_phase_timings(&report.phases);
     if let Some(obs) = observer.as_mut() {
         obs.on_complete(&report);
     }

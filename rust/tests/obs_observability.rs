@@ -1,0 +1,270 @@
+//! Integration suite for the observability subsystem (`bskp::obs`).
+//!
+//! Three contracts from the tracing/metrics ISSUE:
+//!
+//! * **Chaos-deterministic traces** — a distributed solve on the
+//!   deterministic simulator, traced through the span flight recorder,
+//!   replays the *bit-identical* canonical span trace for the same
+//!   `(seed, FaultPlan)`: same span identity multiset, no ring drops.
+//! * **Merge laws** — histogram merging is associative and commutative
+//!   (element-wise bucket sums), and the atomic `merge_from` agrees with
+//!   the pure snapshot merge — so partials can fold in any deal order.
+//! * **Scrape under load** — a `serve_net` daemon on a sim endpoint
+//!   answers a Prometheus scrape and a trace snapshot while (and after)
+//!   concurrent clients load it, with a sane admission gauge and a
+//!   request-latency histogram that counted every request.
+//!
+//! The flight recorder and the metric registry are process-global, so
+//! every test that records or resets spans serializes on [`OBS_LOCK`].
+
+use bskp::cluster::{
+    ConnectOptions, Exec, ExchangeMode, FaultPlan, LinkFaults, RemoteCluster, SimNet,
+};
+use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
+use bskp::instance::store::MmapProblem;
+use bskp::mapreduce::Cluster;
+use bskp::obs::metrics::{Histogram, HistogramSnapshot};
+use bskp::obs::{self, names, recorder};
+use bskp::rng::Xoshiro256pp;
+use bskp::serve::{self, ServeClient, ServeOptions, SolveOutcome, SolveSpec};
+use bskp::solver::scd::{solve_scd, solve_scd_exec_clocked};
+use bskp::solver::SolverConfig;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Serializes every test that touches the global recorder or forces the
+/// trace gate — the rings are shared process state.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bskp_obs_it_{}_{name}", std::process::id()))
+}
+
+fn write_store(name: &str, n: usize, seed: u64) -> PathBuf {
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(n, 6, 6).with_seed(seed));
+    let dir = tmp_dir(name);
+    std::fs::remove_dir_all(&dir).ok();
+    p.write_shards(&dir, 256, &Cluster::new(2)).expect("write store");
+    dir
+}
+
+/// Pinned timeouts + the totally-ordered wave exchange, so outcomes are
+/// a function of `(seed, plan)` alone (see proptest_cluster_sim).
+fn sim_opts() -> ConnectOptions {
+    ConnectOptions {
+        connect_timeout: Duration::from_secs(5),
+        exchange_timeout: Duration::from_secs(600),
+        exchange: ExchangeMode::Wave,
+    }
+}
+
+/// Two traced chaos solves with the same `(seed, FaultPlan)` must record
+/// the identical canonical span trace — the identity multiset `(track,
+/// kind, code, a, b)` — with zero ring drops, and the trace must contain
+/// the full leader/worker/link span vocabulary.
+#[test]
+fn chaos_solve_replays_bit_identical_canonical_span_trace() {
+    let _guard = OBS_LOCK.lock().unwrap();
+    let dir = write_store("det", 1_500, 11);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg =
+        SolverConfig { max_iters: 5, tol: 1e-15, shard_size: Some(64), ..Default::default() };
+
+    // lossy but survivable: delays, jitter, drops (retransmitted),
+    // reordering and duplication — no kills, so every link's spans show
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults { delay_ns: 300_000, jitter_ns: 900_000, ..Default::default() },
+            LinkFaults { drop_prob: 0.15, jitter_ns: 500_000, ..Default::default() },
+            LinkFaults { reorder_prob: 0.4, dup_prob: 0.3, ..Default::default() },
+        ],
+    };
+
+    obs::force_trace(true);
+    let run = || {
+        recorder::reset();
+        let sim = SimNet::new(42, plan.clone());
+        let addrs: Vec<String> = (0..3).map(|_| sim.add_worker(&dir, 1)).collect();
+        let (fleet, skipped) =
+            RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, sim_opts())
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let clock = sim.clock();
+        let report =
+            solve_scd_exec_clocked(&mm, &cfg, &Exec::Remote(&fleet), None, None, clock.as_ref())
+                .expect("sim solve completes");
+        drop(fleet);
+        sim.shutdown();
+        assert_eq!(recorder::dropped(), 0, "ring overflow would make the comparison lossy");
+        (report, recorder::canonical(&recorder::snapshot()))
+    };
+
+    let (r1, t1) = run();
+    let (r2, t2) = run();
+    obs::force_trace(false);
+
+    assert!(!t1.is_empty(), "a traced solve must record spans");
+    assert_eq!(t1, t2, "same (seed, plan) must replay the identical canonical span trace");
+    assert_eq!(r1.lambda, r2.lambda, "and the identical answer");
+    assert_eq!(r1.primal_value.to_bits(), r2.primal_value.to_bits());
+
+    let codes: std::collections::BTreeSet<u16> = t1.iter().map(|e| e.2).collect();
+    for code in
+        [names::SESSION, names::ROUND, names::MAP, names::REDUCE, names::EXCHANGE, names::TASK]
+    {
+        assert!(codes.contains(&code), "trace is missing {} spans", names::name_of(code));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Histogram merging is a commutative monoid: element-wise bucket sums
+/// with the empty snapshot as identity, and the atomic [`merge_from`]
+/// agrees with the pure [`HistogramSnapshot::merge`].
+///
+/// [`merge_from`]: Histogram::merge_from
+#[test]
+fn histogram_merge_is_associative_and_commutative() {
+    let mut rng = Xoshiro256pp::new(0xB0B);
+    let snap = |obs: &[u64]| {
+        let h = Histogram::default();
+        for &v in obs {
+            h.observe(v);
+        }
+        h.snapshot()
+    };
+    for case in 0..200 {
+        // observation sets with wildly mixed magnitudes (shifting a raw
+        // u64 spreads values across every log₂ bucket, overflow included)
+        let mut sets: [Vec<u64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for set in sets.iter_mut() {
+            for _ in 0..rng.below(40) {
+                let shift = rng.below(64) as u32;
+                set.push(rng.next_u64() >> shift);
+            }
+        }
+        let (a, b, c) = (snap(&sets[0]), snap(&sets[1]), snap(&sets[2]));
+        assert_eq!(a.merge(&b), b.merge(&a), "commutativity, case {case}");
+        assert_eq!(
+            a.merge(&b).merge(&c),
+            a.merge(&b.merge(&c)),
+            "associativity, case {case}"
+        );
+        assert_eq!(a.merge(&HistogramSnapshot::default()), a, "identity, case {case}");
+
+        let ha = Histogram::default();
+        let hb = Histogram::default();
+        for &v in &sets[0] {
+            ha.observe(v);
+        }
+        for &v in &sets[1] {
+            hb.observe(v);
+        }
+        ha.merge_from(&hb);
+        assert_eq!(ha.snapshot(), a.merge(&b), "merge_from matches the pure merge, case {case}");
+    }
+}
+
+/// First sample of metric `name` in a Prometheus text exposition.
+fn prom_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| l.strip_prefix(name)?.strip_prefix(' ')?.trim().parse().ok())
+}
+
+/// A daemon on a sim endpoint, loaded by concurrent solving clients,
+/// must answer a metrics scrape with a sane admission gauge (all slots
+/// released once the load drains, never above the bound) and a request
+/// histogram that counted every request — and answer a trace snapshot
+/// with well-formed Chrome JSON.
+#[test]
+fn serve_scrape_under_load_exposes_sane_metrics() {
+    let _guard = OBS_LOCK.lock().unwrap();
+    obs::force_metrics(true);
+    let sim = SimNet::new(7, FaultPlan::healthy());
+    let (addr, listener) = sim.add_endpoint();
+    let daemon = std::thread::spawn(move || {
+        let problem = SyntheticProblem::new(GeneratorConfig::sparse(300, 5, 5).with_seed(3));
+        let opts = ServeOptions { admission: 2, threads: 1 };
+        let _ = serve::serve_net(listener.as_ref(), &problem, &opts);
+    });
+    let connect = || {
+        ServeClient::connect(
+            &sim.transport(),
+            &addr,
+            Duration::from_secs(5),
+            Some(Duration::from_secs(600)),
+        )
+        .expect("dial daemon")
+    };
+
+    // load: three concurrent clients, each an info + a cold solve (a
+    // Busy against admission 2 is a legal outcome under this load)
+    let spec =
+        SolveSpec { warm: false, max_iters: 30, tol: 1e-4, shard_size: 64, ..Default::default() };
+    std::thread::scope(|scope| {
+        for _ in 0..3 {
+            let (connect, spec) = (&connect, spec.clone());
+            scope.spawn(move || {
+                let mut c = connect();
+                c.info().expect("info under load");
+                match c.solve(spec).expect("solve request under load") {
+                    SolveOutcome::Done(_) | SolveOutcome::Busy { .. } => {}
+                }
+            });
+        }
+    });
+
+    let mut c = connect();
+    let text = c.scrape().expect("metrics scrape");
+    assert!(
+        text.contains("# TYPE bskp_serve_request_ns histogram"),
+        "missing histogram TYPE line:\n{text}"
+    );
+    let active = prom_value(&text, "bskp_serve_active").expect("admission gauge exposed");
+    assert_eq!(active, 0.0, "every admission slot must be released after the load drains");
+    let requests =
+        prom_value(&text, "bskp_serve_requests_total").expect("request counter exposed");
+    assert!(requests >= 6.0, "3 infos + 3 solves must be counted, got {requests}");
+    let latencies =
+        prom_value(&text, "bskp_serve_request_ns_count").expect("latency histogram exposed");
+    assert!(latencies >= 6.0, "every request must land in the histogram, got {latencies}");
+
+    let json = c.trace_snapshot().expect("trace snapshot");
+    assert!(json.starts_with("{\"traceEvents\":["), "not a chrome trace: {json:.60}");
+
+    drop(c);
+    sim.shutdown();
+    daemon.join().expect("daemon joins after shutdown");
+}
+
+/// The overhead guarantee: tracing *enabled* must cost < 3% throughput
+/// on an in-process solve against tracing disabled. Timing-sensitive, so
+/// ignored by default; `ci/obs_smoke.sh` runs it on the release build.
+#[test]
+#[ignore = "timing-sensitive A/B benchmark; run via ci/obs_smoke.sh"]
+fn enabled_tracing_costs_under_three_percent() {
+    let _guard = OBS_LOCK.lock().unwrap();
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(20_000, 8, 8).with_seed(9));
+    let cfg = SolverConfig { max_iters: 12, tol: 1e-15, ..Default::default() };
+    let pool = Cluster::new(2);
+    let time_solves = |on: bool| -> f64 {
+        obs::force_trace(on);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            recorder::reset();
+            let t0 = std::time::Instant::now();
+            let _ = solve_scd(&p, &cfg, &pool).expect("solve");
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let _ = time_solves(false); // warm caches / threads
+    let off = time_solves(false);
+    let on = time_solves(true);
+    obs::force_trace(false);
+    // best-of-3 vs best-of-3; an absolute floor absorbs scheduler noise
+    // on very fast solves
+    assert!(
+        on <= off * 1.03 + 0.005,
+        "tracing overhead above 3%: off {off:.4}s vs on {on:.4}s"
+    );
+}
