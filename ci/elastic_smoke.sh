@@ -1,0 +1,115 @@
+#!/usr/bin/env bash
+# Elastic-cluster smoke test: a real leader solve survives a worker being
+# killed and restarted mid-solve (redial with backoff picks the link back
+# up) while a third worker hot-joins through the leader's join listener —
+# and the final JSON report must still match the undisturbed single-process
+# solve field for field (λ, objective, iterations).
+# Run from the repo root; requires a release build (or set BIN).
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bskp}
+SCRATCH=$(mktemp -d)
+STORE="$SCRATCH/store"
+
+cleanup() {
+  # pid files, not a shell array: start_worker runs inside $(...) command
+  # substitution, so variable mutations there never reach this shell
+  for f in "$SCRATCH"/*.pid; do
+    [ -e "$f" ] && kill "$(cat "$f")" 2>/dev/null || true
+  done
+  rm -rf "$SCRATCH"
+}
+trap cleanup EXIT
+
+"$BIN" gen --n 40000 --m 8 --k 8 --seed 11 --shard 512 --out "$STORE" --quiet
+
+start_worker() { # $1: log file, $2: listen addr (default ephemeral)
+  "$BIN" worker --listen "${2:-127.0.0.1:0}" --store "$STORE" --workers 2 >"$1" &
+  echo $! >"$1.pid"
+  for _ in $(seq 50); do
+    addr=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$1")
+    [ -n "$addr" ] && { echo "$addr"; return; }
+    sleep 0.1
+  done
+  echo "worker failed to announce ($1):" >&2
+  cat "$1" >&2
+  exit 1
+}
+
+# the undisturbed oracle
+"$BIN" solve --from "$STORE" --iters 40 --shard 256 \
+  --json "$SCRATCH/single.json" --quiet
+
+ADDR1=$(start_worker "$SCRATCH/w1.log")
+ADDR2=$(start_worker "$SCRATCH/w2.log")
+echo "workers up at $ADDR1 and $ADDR2"
+
+# elastic leader in the background: generous redial budget, tight backoff
+# base so the healed worker deals back in quickly, join listener bound on
+# an ephemeral port and parsed from the announcement line
+PALLAS_CLUSTER_REDIALS=20 PALLAS_CLUSTER_REDIAL_BACKOFF_MS=50 \
+  "$BIN" solve --from "$STORE" --iters 40 --shard 256 \
+  --cluster "$ADDR1,$ADDR2" --join-listen 127.0.0.1:0 \
+  --json "$SCRATCH/elastic.json" >"$SCRATCH/solve.log" &
+SOLVE_PID=$!
+echo $SOLVE_PID >"$SCRATCH/solve.pid"
+
+JOIN_ADDR=""
+for _ in $(seq 50); do
+  JOIN_ADDR=$(sed -n 's/.*join listener on \([0-9.:]*\).*/\1/p' "$SCRATCH/solve.log")
+  [ -n "$JOIN_ADDR" ] && break
+  sleep 0.1
+done
+[ -n "$JOIN_ADDR" ] || { echo "leader never announced the join listener:" >&2; cat "$SCRATCH/solve.log" >&2; exit 1; }
+echo "leader join listener at $JOIN_ADDR"
+
+# mid-solve chaos: SIGKILL worker 2, restart it on the *same* address (the
+# leader redials the address it lost), and hot-join a third worker
+sleep 0.5
+kill -9 "$(cat "$SCRATCH/w2.log.pid")" 2>/dev/null || true
+echo "killed worker 2 ($ADDR2) mid-solve"
+sleep 0.3
+for _ in $(seq 20); do
+  # the dead listener's port can linger briefly; retry the re-bind
+  if ADDR2B=$(start_worker "$SCRATCH/w2b.log" "$ADDR2" 2>/dev/null); then
+    break
+  fi
+  ADDR2B=""
+  sleep 0.25
+done
+[ -n "${ADDR2B:-}" ] && echo "worker 2 restarted at $ADDR2B" \
+  || echo "worker 2 re-bind never succeeded (leader continues degraded)"
+
+"$BIN" worker --join "$JOIN_ADDR" --store "$STORE" --workers 2 \
+  --join-attempts 20 >"$SCRATCH/w3.log" 2>&1 &
+echo $! >"$SCRATCH/w3.log.pid"
+echo "worker 3 hot-joining via $JOIN_ADDR"
+
+if ! wait "$SOLVE_PID"; then
+  echo "elastic solve failed:" >&2
+  cat "$SCRATCH/solve.log" >&2
+  exit 1
+fi
+cat "$SCRATCH/solve.log"
+
+python3 - "$SCRATCH/single.json" "$SCRATCH/elastic.json" <<'EOF'
+import json, sys
+
+single = json.load(open(sys.argv[1]))
+elastic = json.load(open(sys.argv[2]))
+
+assert elastic["plan"]["executor"] == "distributed", elastic["plan"]
+
+a, b = single["report"], elastic["report"]
+for key in ["lambda", "primal_value", "dual_value", "n_selected",
+            "iterations", "converged", "consumption", "dropped_groups"]:
+    assert a[key] == b[key], f"report.{key} differs: {a[key]} vs {b[key]}"
+
+net = elastic["cluster"]
+assert net["workers_total"] >= 2 and net["bytes_sent"] > 0, net
+events = b.get("membership", [])
+kinds = sorted({e["change"] for e in events})
+print(f"elastic smoke OK: {b['iterations']} iters, primal {b['primal_value']:.2f}, "
+      f"{net['workers_total']} workers total ({net['redials']} redials, "
+      f"{net['joins']} joins), membership events: {kinds or 'none (solve outran the chaos)'}")
+EOF

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 
 /// Switches that take no value.
 const SWITCHES: &[&str] =
-    &["quiet", "no-postprocess", "no-fastpath", "track-history", "verify", "plan-only"];
+    &["quiet", "no-postprocess", "no-fastpath", "track-history", "verify", "plan-only", "wait"];
 
 /// Parsed arguments.
 #[derive(Debug, Clone, Default)]

@@ -70,6 +70,12 @@ SOLVER FLAGS (solve / resolve)
                        host:port[,host:port...]; requires --from (workers
                        mmap their replica of the same store). Unreachable
                        fleet => in-process fallback with a plan note
+  --join-listen <addr> with --cluster: bind a join listener so fresh
+                       `bskp worker --join` processes are admitted
+                       mid-solve (elasticity; the actual address is
+                       announced on stdout). Redial/quorum knobs:
+                       PALLAS_CLUSTER_REDIALS, PALLAS_CLUSTER_REDIAL_BACKOFF_MS,
+                       PALLAS_MIN_WORKERS (docs/solve-api.md)
   --track-history      record the per-iteration series in the report JSON
   --trace <path>       force span tracing on for this run and write the
                        flight recorder as Chrome trace-event JSON
@@ -94,6 +100,11 @@ WORKER FLAGS
                        address is announced on stdout)
   --store <dir>        shard-store replica to serve (required)
   --workers <int>      map threads to advertise (default as above)
+  --join <addr>        instead of listening, dial a running leader's
+                       --join-listen address and serve it mid-solve
+                       (chunks arrive from the next round boundary)
+  --join-attempts <n>  dial retries (with backoff) before giving up
+                       when joining (default 5)
 
 SERVE FLAGS (see docs/serve-api.md)
   --store <dir>        shard store to host (required; mmapped once)
@@ -116,6 +127,8 @@ REQUEST FLAGS
                        under it; on --op progress, poll it
   --after <int>        first progress event to return (default 0)
   --groups <ids>       comma-separated group ids for --op query
+  --wait               on a busy reply, retry after the daemon's
+                       retry-after hint instead of failing
   --json <path|->      write the reply JSON to a file, or - for stdout
   --quiet              suppress the human-readable summary
 
@@ -232,13 +245,33 @@ fn cluster_from_args(args: &Args) -> Result<Cluster> {
 
 /// `bskp worker`: bind, announce the actual address on stdout (so scripts
 /// can use `--listen 127.0.0.1:0` for an ephemeral port), then serve the
-/// store replica to leader sessions until killed.
+/// store replica to leader sessions until killed. With `--join <addr>`
+/// the worker instead dials a *running* leader's join listener and is
+/// dealt chunks from the next round on (mid-solve admission; see
+/// `docs/cluster-protocol.md`).
 pub fn cmd_worker(args: &Args) -> Result<()> {
     let store = args.get_opt::<String>("store")?.ok_or_else(|| {
         Error::Usage("worker requires --store <dir> (a shard-store replica)".into())
     })?;
-    let listen = args.get_str("listen", "127.0.0.1:0");
     let pool = cluster_from_args(args)?;
+    if let Some(leader) = args.get_opt::<String>("join")? {
+        let attempts = args.get("join-attempts", 5u32)?;
+        let problem = MmapProblem::open(&store)?;
+        println!(
+            "pallas worker joining leader at {leader} (store {store}, {} map threads)",
+            pool.workers()
+        );
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        return crate::cluster::worker::join_net(
+            &crate::cluster::TcpTransport,
+            &leader,
+            &problem,
+            &pool,
+            attempts,
+        );
+    }
+    let listen = args.get_str("listen", "127.0.0.1:0");
     let listener = std::net::TcpListener::bind(&listen)
         .map_err(|e| Error::Runtime(format!("cannot listen on {listen}: {e}")))?;
     let addr = listener.local_addr()?;
@@ -343,12 +376,27 @@ pub fn cmd_request(args: &Args) -> Result<()> {
                 dd_alpha: args.get("alpha", defaults.dd_alpha)?,
                 shard_size: args.get("shard", 0u64)?,
             };
-            let served = match client.solve(spec)? {
-                SolveOutcome::Done(s) => s,
-                SolveOutcome::Busy { active, limit } => {
-                    return Err(Error::Runtime(format!(
-                        "server busy: {active}/{limit} solves running — retry later"
-                    )))
+            let wait = args.has("wait");
+            let served = loop {
+                match client.solve(spec.clone())? {
+                    SolveOutcome::Done(s) => break s,
+                    SolveOutcome::Busy { active, limit, retry_after_ms } if wait => {
+                        // honor the daemon's cadence-derived hint instead
+                        // of polling blindly
+                        if !quiet {
+                            eprintln!(
+                                "server busy ({active}/{limit} solves running); \
+                                 retrying in {retry_after_ms} ms"
+                            );
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(retry_after_ms));
+                    }
+                    SolveOutcome::Busy { active, limit, retry_after_ms } => {
+                        return Err(Error::Runtime(format!(
+                            "server busy: {active}/{limit} solves running — retry in \
+                             ~{retry_after_ms} ms, or pass --wait to let bskp do it"
+                        )))
+                    }
                 }
             };
             let report = &served.report;
@@ -635,6 +683,25 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
             return Err(Error::Usage("--cluster needs host:port[,host:port...]".into()));
         }
         session = session.distributed(addrs);
+        // a bound join listener admits `bskp worker --join` processes
+        // mid-solve; announced like the worker's --listen so scripts can
+        // bind port 0 and read the address back
+        if let Some(bind) = args.get_opt::<String>("join-listen")? {
+            let listener = std::net::TcpListener::bind(&bind)
+                .map_err(|e| Error::Runtime(format!("cannot listen on {bind}: {e}")))?;
+            let addr = listener.local_addr()?;
+            println!("pallas leader join listener on {addr}");
+            use std::io::Write as _;
+            std::io::stdout().flush().ok();
+            session = session
+                .join_listener(Box::new(crate::cluster::TcpNetListener::new(listener)));
+        }
+    } else if args.get_opt::<String>("join-listen")?.is_some() {
+        return Err(Error::Usage(
+            "--join-listen only makes sense with --cluster (mid-solve admission \
+             needs an attached worker fleet)"
+                .into(),
+        ));
     }
     if let Some(w) = warm {
         session = session.warm(w);
@@ -704,19 +771,28 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
         );
         if let Some(r) = &remote {
             let s = r.stats();
+            let mut extras = String::new();
+            if s.redispatches > 0 {
+                extras.push_str(&format!(", {} chunks re-dispatched", s.redispatches));
+            }
+            if s.redials > 0 {
+                extras.push_str(&format!(", {} redials", s.redials));
+            }
+            if s.joins > 0 {
+                extras.push_str(&format!(", {} joined mid-solve", s.joins));
+            }
             println!(
                 "  cluster         : {}/{} workers live, {} rounds, {} B out / {} B in{}",
-                s.workers_live,
-                s.workers_total,
-                s.rounds,
-                s.bytes_sent,
-                s.bytes_received,
-                if s.redispatches > 0 {
-                    format!(", {} chunks re-dispatched", s.redispatches)
-                } else {
-                    String::new()
-                }
+                s.workers_live, s.workers_total, s.rounds, s.bytes_sent, s.bytes_received, extras
             );
+            for ev in &report.membership {
+                println!(
+                    "  membership      : round {} {} — {}",
+                    ev.round,
+                    ev.change.label(),
+                    ev.detail
+                );
+            }
         }
     }
     if let Some(dest) = &trace_dest {

@@ -74,6 +74,54 @@ impl Clock for VirtualClock {
     }
 }
 
+/// Exponential backoff with deterministic jitter, elapsing through the
+/// [`Clock`] seam — real sleeps in production, pure virtual-time advances
+/// under the simulator, so no test ever sleeps wall-clock time.
+///
+/// The schedule is a pure function of `(base, cap, seed, attempt)`:
+/// `base · 2^attempt` plus up to 25 % jitter drawn from
+/// [`mix64(seed, attempt)`](crate::rng::mix64), capped at `cap`. Sharing
+/// one helper keeps every retry loop (worker/serve accept loops, leader
+/// redials, join dials) on the same replayable curve.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    seed: u64,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// A fresh schedule starting at `base`, never exceeding `cap`.
+    /// `seed` decorrelates the jitter of independent retry loops.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Self { base, cap, seed, attempt: 0 }
+    }
+
+    /// The delay `attempt` consecutive failures in — a pure function, so
+    /// callers that keep their own attempt counters (the leader's
+    /// per-link redial schedule) share the exact curve of the stateful
+    /// helper.
+    pub fn delay(base: Duration, cap: Duration, seed: u64, attempt: u32) -> Duration {
+        let base_ns = (base.as_nanos() as u64).max(1);
+        let raw = base_ns.saturating_mul(1u64 << attempt.min(20));
+        let jitter = crate::rng::mix64(seed, attempt as u64) % (raw / 4).max(1);
+        Duration::from_nanos(raw.saturating_add(jitter).min(cap.as_nanos() as u64))
+    }
+
+    /// Sleep the next delay on `clock` and advance the schedule.
+    pub fn wait(&mut self, clock: &dyn Clock) {
+        let d = Self::delay(self.base, self.cap, self.seed, self.attempt);
+        self.attempt = self.attempt.saturating_add(1);
+        clock.sleep(d);
+    }
+
+    /// A success resets the schedule to the base delay.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +145,44 @@ mod tests {
         assert_eq!(c.now_ns(), 3600 * 1_000_000_000);
         c.advance_to(u64::MAX - 1);
         assert_eq!(c.now_ns(), u64::MAX - 1);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_grows_exponentially() {
+        let base = Duration::from_millis(100);
+        let cap = Duration::from_secs(60);
+        for attempt in 0..8 {
+            let a = Backoff::delay(base, cap, 7, attempt);
+            let b = Backoff::delay(base, cap, 7, attempt);
+            assert_eq!(a, b, "same (seed, attempt) must give the same delay");
+            let raw = 100u64 << attempt;
+            assert!(a >= Duration::from_millis(raw), "attempt {attempt}: {a:?} < base·2^n");
+            assert!(a < Duration::from_millis(raw + raw / 4 + 1), "attempt {attempt}: {a:?}");
+        }
+        // doubling beats max jitter: the schedule is strictly monotone
+        for attempt in 0..7 {
+            assert!(
+                Backoff::delay(base, cap, 7, attempt + 1) > Backoff::delay(base, cap, 7, attempt)
+            );
+        }
+        // the cap bounds arbitrarily late attempts
+        assert_eq!(Backoff::delay(base, cap, 7, 63), cap);
+    }
+
+    #[test]
+    fn backoff_waits_in_virtual_time_and_resets() {
+        let c = VirtualClock::new();
+        let mut b = Backoff::new(Duration::from_millis(100), Duration::from_secs(5), 3);
+        let wall = Instant::now();
+        b.wait(c.as_ref());
+        let first = c.now_ns();
+        assert!(first >= 100_000_000, "first wait must be at least the base delay");
+        b.wait(c.as_ref());
+        assert!(c.now_ns() - first > first, "second wait must back off further");
+        b.reset();
+        let at = c.now_ns();
+        b.wait(c.as_ref());
+        assert_eq!(c.now_ns() - at, first, "reset must restart the schedule");
+        assert!(wall.elapsed() < Duration::from_secs(1), "backoff must not sleep for real");
     }
 }

@@ -43,7 +43,7 @@ pub(crate) const MAX_PAYLOAD: u64 = 1 << 30;
 const HEADER_LEN: usize = 16;
 
 /// Frame kinds of the serve plane (`bskp serve`, [`crate::serve`]). The
-/// worker plane owns kinds 1–10 ([`super::protocol::Msg`]); serve kinds
+/// worker plane owns kinds 1–12 ([`super::protocol::Msg`]); serve kinds
 /// start at 32 so the two request vocabularies can never be confused —
 /// and because the kind seeds the frame checksum, a frame replayed across
 /// planes fails verification outright.

@@ -22,24 +22,46 @@
 //! the deterministic assignment.)
 //!
 //! **Failure handling.** A worker that errors or times out on a chunk is
-//! marked dead for the session; its chunk goes back on the queue and a
-//! survivor re-executes it in a later wave. Because every task frame
-//! carries the round's full broadcast state (λ, active mask, reduce mode),
+//! marked dead; its chunk goes back on the queue and a survivor
+//! re-executes it in a later wave. Because every task frame carries the
+//! round's full broadcast state (λ, active mask, reduce mode),
 //! re-dispatch resumes from the λ the round started with — a lost worker
 //! costs one chunk of recomputation. Only when *every* worker is gone does
 //! the round (and the solve) fail; with checkpointing enabled the λ trail
 //! survives for a warm-started retry.
 //!
+//! **Elastic membership.** All membership work happens at the deal
+//! boundary (the top of each gather pass), so the deal stays a pure
+//! function of `(pending, live)` and simulated traces stay replayable.
+//! With a redial budget (`PALLAS_CLUSTER_REDIALS` /
+//! [`ConnectOptions::redial_budget`]) the leader re-dials
+//! transiently-dead links on an exponential-backoff schedule with
+//! deterministic jitter ([`Backoff`]), re-handshaking the instance
+//! fingerprint; a peer that answers and *refuses* is retired permanently.
+//! A session constructed with a join listener
+//! ([`RemoteCluster::connect_elastic`]) admits fresh `bskp worker --join`
+//! processes mid-solve over the `Join`/`Admit` frames; admitted workers
+//! receive chunks from the next deal on. A quorum floor
+//! (`PALLAS_MIN_WORKERS` / [`ConnectOptions::min_workers`]) turns a
+//! too-degraded fleet into a typed fail-fast error instead of a grind;
+//! above the floor but below full strength the solve continues degraded,
+//! with a `Degraded` note per strength transition. Every membership
+//! change lands in the [`MembershipEvent`] log (surfaced through
+//! `SolveReport::membership`), the metrics registry and the flight
+//! recorder.
+//!
 //! All timing goes through the transport's [`Clock`]: wall time on TCP,
 //! virtual time under [`super::sim`] — which is how a 10-minute exchange
 //! timeout can fire in microseconds of test time.
 
-use crate::cluster::clock::Clock;
-use crate::cluster::env_ms;
+use crate::cluster::clock::{Backoff, Clock};
 use crate::cluster::frames::EXT_LEN;
 use crate::cluster::membership::{NetCounters, WorkerLink};
-use crate::cluster::protocol::{span_ext, Geometry, InstanceFingerprint, Msg};
-use crate::cluster::transport::{TcpTransport, Transport};
+use crate::cluster::protocol::{
+    recv_msg, send_msg, span_ext, Geometry, InstanceFingerprint, Msg,
+};
+use crate::cluster::transport::{NetListener, NetStream, TcpTransport, Transport};
+use crate::cluster::{env_count, env_ms};
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
@@ -49,9 +71,10 @@ use crate::obs::{names, Track};
 use crate::solver::config::ReduceMode;
 use crate::solver::rounds::RoundAgg;
 use crate::solver::scd::{ScdAcc, ScdRoundSpec, ThresholdAcc};
+use crate::solver::stats::{MembershipChange, MembershipEvent};
 use std::collections::VecDeque;
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// Default per-exchange timeout. This is the *only* detector for a worker
@@ -66,6 +89,23 @@ const DEFAULT_TIMEOUT_MS: u64 = 600_000;
 /// Default connect/handshake timeout (seconds, not minutes: planning must
 /// reach its in-process fallback promptly when a fleet is blackholed).
 const DEFAULT_CONNECT_TIMEOUT_MS: u64 = 5_000;
+
+/// Default redial budget: 0 — self-healing is opt-in
+/// (`PALLAS_CLUSTER_REDIALS`), so by default a failed worker stays failed
+/// for the session and existing failure semantics (and chaos-replay
+/// baselines) are byte-identical.
+const DEFAULT_REDIALS: u64 = 0;
+
+/// Default base redial backoff; doubles per failed attempt with
+/// deterministic jitter, capped at [`REDIAL_BACKOFF_CAP_MS`].
+const DEFAULT_REDIAL_BACKOFF_MS: u64 = 100;
+
+/// Redial backoff cap: a flapping worker is probed at least this often.
+const REDIAL_BACKOFF_CAP_MS: u64 = 30_000;
+
+/// Default quorum floor: one live worker keeps the solve going (the
+/// pre-elastic behavior).
+const DEFAULT_MIN_WORKERS: u64 = 1;
 
 /// Chunks per round: a pure function of the shard count — deliberately
 /// **independent of worker count and liveness**, so the chunk partition
@@ -128,6 +168,20 @@ pub struct ConnectOptions {
     pub exchange_timeout: Duration,
     /// Wave-barrier or overlapped gather (see [`ExchangeMode`]).
     pub exchange: ExchangeMode,
+    /// Redial attempts allowed per link for the whole session
+    /// (`PALLAS_CLUSTER_REDIALS`; 0 — the default — disables healing).
+    /// The budget is *total*, not per outage, so a flapping worker
+    /// cannot crash-redial-crash forever.
+    pub redial_budget: u32,
+    /// Base redial backoff (`PALLAS_CLUSTER_REDIAL_BACKOFF_MS`): the
+    /// n-th consecutive failed redial of an outage waits
+    /// `base · 2ⁿ` plus deterministic jitter, capped at 30 s.
+    pub redial_backoff: Duration,
+    /// Quorum floor (`PALLAS_MIN_WORKERS`): with fewer live workers the
+    /// gather fails fast (typed error) instead of grinding on degraded;
+    /// at or above it but below full strength the solve continues with a
+    /// `Degraded` membership note.
+    pub min_workers: usize,
 }
 
 impl ConnectOptions {
@@ -141,6 +195,13 @@ impl ConnectOptions {
             ),
             exchange_timeout: env_ms("PALLAS_CLUSTER_TIMEOUT_MS", DEFAULT_TIMEOUT_MS),
             exchange: ExchangeMode::from_env(),
+            redial_budget: env_count("PALLAS_CLUSTER_REDIALS", DEFAULT_REDIALS).min(u32::MAX as u64)
+                as u32,
+            redial_backoff: env_ms(
+                "PALLAS_CLUSTER_REDIAL_BACKOFF_MS",
+                DEFAULT_REDIAL_BACKOFF_MS,
+            ),
+            min_workers: env_count("PALLAS_MIN_WORKERS", DEFAULT_MIN_WORKERS).max(1) as usize,
         }
     }
 }
@@ -167,11 +228,15 @@ pub struct NetSnapshot {
     pub redispatches: u64,
     /// Workers lost during the session.
     pub workers_lost: u64,
+    /// Successful redials of transiently-dead links.
+    pub redials: u64,
+    /// Workers admitted mid-solve through the join listener.
+    pub joins: u64,
     /// Workers still live.
     pub workers_live: usize,
-    /// Workers the session started with.
+    /// Workers in the session: dial-time plus admitted.
     pub workers_total: usize,
-    /// Advertised map-thread capacity across all started workers.
+    /// Advertised map-thread capacity across all session workers.
     pub capacity: usize,
 }
 
@@ -180,8 +245,9 @@ pub struct NetSnapshot {
 enum WaveOutcome {
     /// The chunk's partial arrived.
     Done(usize, Msg),
-    /// The worker died on this chunk; re-queue it for a survivor.
-    Lost(usize, String),
+    /// The worker in this slot died on this chunk; re-queue it for a
+    /// survivor (and log the loss against the slot).
+    Lost { slot: usize, chunk: usize, loss: String },
     /// A protocol-level abort: the round (and solve) must fail.
     Fatal(String),
 }
@@ -227,6 +293,9 @@ struct LeaderObs {
     workers_lost: Arc<Counter>,
     gather_rounds: Arc<Counter>,
     gather_latency_ns: Arc<Histogram>,
+    redials: Arc<Counter>,
+    joins: Arc<Counter>,
+    degraded: Arc<Counter>,
 }
 
 impl LeaderObs {
@@ -240,6 +309,9 @@ impl LeaderObs {
             workers_lost: r.counter("bskp_cluster_workers_lost_total"),
             gather_rounds: r.counter("bskp_cluster_gather_rounds_total"),
             gather_latency_ns: r.histogram("bskp_cluster_gather_latency_ns"),
+            redials: r.counter("bskp_cluster_redials_total"),
+            joins: r.counter("bskp_cluster_joins_total"),
+            degraded: r.counter("bskp_cluster_degraded_total"),
         }
     }
 }
@@ -248,12 +320,28 @@ impl LeaderObs {
 /// the same map→combine→reduce contract as the in-process
 /// [`Cluster`] (see [`super::Exec`]).
 pub struct RemoteCluster {
-    slots: Vec<Mutex<WorkerLink>>,
+    /// Worker links: dial-time slots first, mid-solve admissions
+    /// appended. Only [`RemoteCluster::admit_joiners`] ever grows the
+    /// vector, and only at a deal boundary.
+    slots: RwLock<Vec<Arc<Mutex<WorkerLink>>>>,
     leader_pool: Cluster,
-    capacity: usize,
     counters: NetCounters,
     clock: Arc<dyn Clock>,
-    exchange: ExchangeMode,
+    opts: ConnectOptions,
+    fingerprint: InstanceFingerprint,
+    /// Retained dialer for round-boundary redials; `None` on the
+    /// borrowed-transport [`RemoteCluster::connect_with`] path, where
+    /// healing is structurally off.
+    transport: Option<Arc<dyn Transport>>,
+    /// Mid-solve join listener, when the session runs one.
+    join: Option<Mutex<Box<dyn NetListener>>>,
+    /// Membership changes in occurrence order (drained into
+    /// `SolveReport::membership`).
+    events: Mutex<Vec<MembershipEvent>>,
+    /// Live count at the last `Degraded` note (`usize::MAX` at full
+    /// strength) — dedupes the note to strength *transitions*, not
+    /// rounds.
+    degraded_live: AtomicUsize,
     obs: LeaderObs,
 }
 
@@ -267,17 +355,50 @@ impl RemoteCluster {
         addrs: &[String],
         source: &S,
     ) -> Result<(Self, Vec<String>)> {
-        Self::connect_with(&TcpTransport, addrs, source, ConnectOptions::from_env())
+        Self::connect_elastic(
+            Arc::new(TcpTransport),
+            addrs,
+            source,
+            ConnectOptions::from_env(),
+            None,
+        )
     }
 
-    /// [`RemoteCluster::connect`] over an explicit [`Transport`] and
-    /// timeout policy — the entry point the deterministic simulator (and
-    /// any future transport) uses; TCP behavior is unchanged.
+    /// [`RemoteCluster::connect`] over a borrowed [`Transport`] and an
+    /// explicit timeout policy. The transport cannot be retained past the
+    /// call, so this session never redials and never admits joiners —
+    /// the pre-elastic contract, which parts of the chaos suite pin.
+    /// Elastic sessions use [`RemoteCluster::connect_elastic`].
     pub fn connect_with<S: GroupSource + ?Sized>(
         transport: &dyn Transport,
         addrs: &[String],
         source: &S,
         opts: ConnectOptions,
+    ) -> Result<(Self, Vec<String>)> {
+        Self::connect_inner(transport, None, addrs, source, opts, None)
+    }
+
+    /// [`RemoteCluster::connect`] with the full elastic feature set: the
+    /// transport is retained for round-boundary redials
+    /// (`opts.redial_budget`), and `join`, when given, is polled at every
+    /// deal boundary for mid-solve worker admissions.
+    pub fn connect_elastic<S: GroupSource + ?Sized>(
+        transport: Arc<dyn Transport>,
+        addrs: &[String],
+        source: &S,
+        opts: ConnectOptions,
+        join: Option<Box<dyn NetListener>>,
+    ) -> Result<(Self, Vec<String>)> {
+        Self::connect_inner(transport.as_ref(), Some(Arc::clone(&transport)), addrs, source, opts, join)
+    }
+
+    fn connect_inner<S: GroupSource + ?Sized>(
+        transport: &dyn Transport,
+        retained: Option<Arc<dyn Transport>>,
+        addrs: &[String],
+        source: &S,
+        opts: ConnectOptions,
+        join: Option<Box<dyn NetListener>>,
     ) -> Result<(Self, Vec<String>)> {
         let fingerprint = InstanceFingerprint::of(source);
         // dial concurrently: N blackholed hosts must cost one connect
@@ -303,7 +424,7 @@ impl RemoteCluster {
         let mut skipped = Vec::new();
         for (addr, dial) in addrs.iter().zip(dials) {
             match dial {
-                Ok(link) => slots.push(Mutex::new(link)),
+                Ok(link) => slots.push(Arc::new(Mutex::new(link))),
                 Err(e) => skipped.push(format!("worker {addr} skipped: {e}")),
             }
         }
@@ -317,14 +438,17 @@ impl RemoteCluster {
                     .collect::<String>(),
             )));
         }
-        let capacity = slots.iter().map(|s| s.lock().unwrap().threads).sum();
         let fleet = Self {
-            slots,
+            slots: RwLock::new(slots),
             leader_pool: Cluster::configured(),
-            capacity,
             counters: NetCounters::default(),
             clock: transport.clock(),
-            exchange: opts.exchange,
+            opts,
+            fingerprint,
+            transport: retained,
+            join: join.map(Mutex::new),
+            events: Mutex::new(Vec::new()),
+            degraded_live: AtomicUsize::new(usize::MAX),
             obs: LeaderObs::new(),
         };
         Ok((fleet, skipped))
@@ -339,24 +463,35 @@ impl RemoteCluster {
         self
     }
 
-    /// Workers the session started with.
+    /// Workers in the session: dial-time plus admitted joiners.
     pub fn workers(&self) -> usize {
-        self.slots.len()
+        self.slots.read().unwrap().len()
     }
 
     /// Workers still live.
     pub fn workers_live(&self) -> usize {
-        self.slots.iter().filter(|s| s.lock().unwrap().is_live()).count()
+        self.slots.read().unwrap().iter().filter(|s| s.lock().unwrap().is_live()).count()
     }
 
     /// Total advertised map-thread capacity (drives shard planning).
     pub fn capacity(&self) -> usize {
-        self.capacity
+        self.slots.read().unwrap().iter().map(|s| s.lock().unwrap().threads).sum()
     }
 
-    /// The configured worker addresses.
+    /// The session's worker addresses (dial-time plus admitted).
     pub fn addrs(&self) -> Vec<String> {
-        self.slots.iter().map(|s| s.lock().unwrap().addr.clone()).collect()
+        self.slots.read().unwrap().iter().map(|s| s.lock().unwrap().addr.clone()).collect()
+    }
+
+    /// Membership changes so far (losses, redials, admissions,
+    /// degradations), in occurrence order — the session planner attaches
+    /// them to `SolveReport::membership`.
+    pub fn membership_events(&self) -> Vec<MembershipEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    fn push_event(&self, event: MembershipEvent) {
+        self.events.lock().unwrap().push(event);
     }
 
     /// The leader-local pool used for the phases that stay on the leader
@@ -368,6 +503,13 @@ impl RemoteCluster {
     /// Wire statistics so far.
     pub fn stats(&self) -> NetSnapshot {
         let c = &self.counters;
+        let slots = self.slots.read().unwrap();
+        let (mut workers_live, mut capacity) = (0, 0);
+        for slot in slots.iter() {
+            let link = slot.lock().unwrap();
+            workers_live += link.is_live() as usize;
+            capacity += link.threads;
+        }
         NetSnapshot {
             bytes_sent: c.bytes_sent.load(Ordering::Relaxed),
             bytes_received: c.bytes_received.load(Ordering::Relaxed),
@@ -375,10 +517,229 @@ impl RemoteCluster {
             round_ms: c.round_us.load(Ordering::Relaxed) as f64 / 1e3,
             redispatches: c.redispatches.load(Ordering::Relaxed),
             workers_lost: c.workers_lost.load(Ordering::Relaxed),
-            workers_live: self.workers_live(),
-            workers_total: self.slots.len(),
-            capacity: self.capacity,
+            redials: c.redials.load(Ordering::Relaxed),
+            joins: c.joins.load(Ordering::Relaxed),
+            workers_live,
+            workers_total: slots.len(),
+            capacity,
         }
+    }
+
+    /// Round-boundary healing: redial every transiently-dead link whose
+    /// backoff deadline has passed, while its session budget lasts. A
+    /// successful redial re-enters the deal from this round on; a dial
+    /// failure schedules the next probe on the exponential-backoff curve
+    /// (deterministic jitter, seeded by the slot); a handshake refusal
+    /// retires the link for good. No-op without a budget or without a
+    /// retained transport (the [`RemoteCluster::connect_with`] path).
+    fn heal(&self, round: u64) {
+        if self.opts.redial_budget == 0 {
+            return;
+        }
+        let Some(transport) = self.transport.as_ref() else { return };
+        let slots = self.slots.read().unwrap().clone();
+        for (slot, link) in slots.iter().enumerate() {
+            let mut link = link.lock().unwrap();
+            if link.is_live()
+                || link.permanent
+                || link.redials_spent >= self.opts.redial_budget
+                || self.clock.now_ns() < link.next_redial_at_ns
+            {
+                continue;
+            }
+            link.redials_spent += 1;
+            match link.redial(transport.as_ref(), &self.fingerprint, self.opts) {
+                Ok(()) => {
+                    self.counters.count(&self.counters.redials, 1);
+                    if crate::obs::metrics_enabled() {
+                        self.obs.redials.inc();
+                    }
+                    crate::obs::instant(
+                        self.clock.as_ref(),
+                        Track::Leader,
+                        names::REDIAL,
+                        round,
+                        slot as u64,
+                    );
+                    self.push_event(MembershipEvent {
+                        round,
+                        worker: Some(slot),
+                        change: MembershipChange::Redialed,
+                        detail: format!(
+                            "worker {} redialed ({} of {} redials spent)",
+                            link.addr, link.redials_spent, self.opts.redial_budget
+                        ),
+                    });
+                }
+                Err(e) => {
+                    let delay = Backoff::delay(
+                        self.opts.redial_backoff,
+                        Duration::from_millis(REDIAL_BACKOFF_CAP_MS),
+                        slot as u64,
+                        link.attempts,
+                    );
+                    link.attempts = link.attempts.saturating_add(1);
+                    link.next_redial_at_ns =
+                        self.clock.now_ns().saturating_add(delay.as_nanos() as u64);
+                    if link.permanent {
+                        self.push_event(MembershipEvent {
+                            round,
+                            worker: Some(slot),
+                            change: MembershipChange::Lost,
+                            detail: format!("worker {} retired: {e}", link.addr),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// The earliest future redial deadline among still-healable links —
+    /// what the quorum wait sleeps to (virtual time under the simulator).
+    /// `None` when no dead link can come back: healing off, transport not
+    /// retained, or every dead link permanent / out of budget.
+    fn earliest_redial(&self, slots: &[Arc<Mutex<WorkerLink>>]) -> Option<u64> {
+        if self.opts.redial_budget == 0 || self.transport.is_none() {
+            return None;
+        }
+        slots
+            .iter()
+            .filter_map(|slot| {
+                let link = slot.lock().unwrap();
+                (!link.is_live()
+                    && !link.permanent
+                    && link.redials_spent < self.opts.redial_budget)
+                    .then_some(link.next_redial_at_ns)
+            })
+            .min()
+    }
+
+    /// Emit a `Degraded` membership note when the live count *transitions*
+    /// while below full strength (the `degraded_live` latch dedupes the
+    /// note to transitions, not rounds), clearing the latch once the fleet
+    /// is whole again.
+    fn note_degraded(&self, round: u64, live: usize, total: usize) {
+        if live >= total {
+            self.degraded_live.store(usize::MAX, Ordering::Relaxed);
+            return;
+        }
+        if self.degraded_live.swap(live, Ordering::Relaxed) != live {
+            if crate::obs::metrics_enabled() {
+                self.obs.degraded.inc();
+            }
+            crate::obs::instant(
+                self.clock.as_ref(),
+                Track::Leader,
+                names::DEGRADED,
+                round,
+                live as u64,
+            );
+            self.push_event(MembershipEvent {
+                round,
+                worker: None,
+                change: MembershipChange::Degraded,
+                detail: format!("continuing degraded: {live} of {total} workers live"),
+            });
+        }
+    }
+
+    /// Drain the mid-solve join listener: every queued `bskp worker
+    /// --join` dial-in that passes the version (frame layer) and
+    /// fingerprint checks becomes a fresh slot and receives chunks from
+    /// this deal on. Non-blocking — an idle listener costs one poll per
+    /// deal boundary.
+    fn admit_joiners(&self, round: u64) {
+        let Some(join) = self.join.as_ref() else { return };
+        loop {
+            let polled = join.lock().unwrap().poll_accept();
+            match polled {
+                Ok(Some(stream)) => self.admit_one(round, stream),
+                // transient accept failures retry at the next boundary
+                Ok(None) | Err(_) => return,
+            }
+        }
+    }
+
+    fn admit_one(&self, round: u64, stream: Box<dyn NetStream>) {
+        match self.join_handshake(stream) {
+            Ok((threads, stream)) => {
+                let addr = stream.peer();
+                let slot = {
+                    let mut slots = self.slots.write().unwrap();
+                    slots.push(Arc::new(Mutex::new(WorkerLink::admitted(
+                        addr.clone(),
+                        threads as usize,
+                        stream,
+                    ))));
+                    slots.len() - 1
+                };
+                self.counters.count(&self.counters.joins, 1);
+                if crate::obs::metrics_enabled() {
+                    self.obs.joins.inc();
+                }
+                crate::obs::instant(
+                    self.clock.as_ref(),
+                    Track::Leader,
+                    names::JOIN,
+                    round,
+                    slot as u64,
+                );
+                self.push_event(MembershipEvent {
+                    round,
+                    worker: Some(slot),
+                    change: MembershipChange::Admitted,
+                    detail: format!("worker {addr} joined mid-solve ({threads} threads)"),
+                });
+            }
+            Err(e) => {
+                // a refused joiner never becomes a slot; note it for the
+                // membership log so operators see the refusal
+                self.push_event(MembershipEvent {
+                    round,
+                    worker: None,
+                    change: MembershipChange::Lost,
+                    detail: format!("join refused: {e}"),
+                });
+            }
+        }
+    }
+
+    /// The leader half of the mid-solve admission handshake: expect
+    /// `Join` (capacity + fingerprint), verify the fingerprint, reply
+    /// `Admit`, and install the session's exchange timeouts. Version skew
+    /// is caught by the frame layer before the message even decodes.
+    fn join_handshake(
+        &self,
+        mut stream: Box<dyn NetStream>,
+    ) -> Result<(u32, Box<dyn NetStream>)> {
+        stream.set_read_timeout(Some(self.opts.connect_timeout))?;
+        stream.set_write_timeout(Some(self.opts.connect_timeout))?;
+        let (msg, _) = recv_msg(&mut stream)?;
+        let (threads, theirs) = match msg {
+            Msg::Join { threads, fingerprint } => (threads, fingerprint),
+            other => {
+                let _ = send_msg(
+                    &mut stream,
+                    &Msg::Abort { message: format!("expected join, got {}", other.name()) },
+                );
+                return Err(Error::Runtime(format!(
+                    "joiner opened with {} instead of join",
+                    other.name()
+                )));
+            }
+        };
+        if theirs != self.fingerprint {
+            let message = format!(
+                "joiner serves a different instance: leader has [{}], joiner has [{theirs}]",
+                self.fingerprint
+            );
+            let _ = send_msg(&mut stream, &Msg::Abort { message: message.clone() });
+            return Err(Error::Runtime(message));
+        }
+        send_msg(&mut stream, &Msg::Admit)?;
+        stream.set_read_timeout(Some(self.opts.exchange_timeout))?;
+        stream.set_write_timeout(Some(self.opts.exchange_timeout))?;
+        Ok((threads, stream))
     }
 
     /// Dispatch one round: cut `[0, n_shards)` into chunks, deal them to
@@ -407,26 +768,52 @@ impl RemoteCluster {
         let mut last_loss = String::new();
 
         while !pending.is_empty() {
-            let live: Vec<usize> = (0..self.slots.len())
-                .filter(|&i| self.slots[i].lock().unwrap().is_live())
-                .collect();
-            if live.is_empty() {
+            // every membership change happens here, at the deal boundary:
+            // drain the join listener, then redial transiently-dead links
+            // whose backoff elapsed — so the deal below stays a pure
+            // function of (pending, live) and sim traces stay replayable
+            self.admit_joiners(round);
+            self.heal(round);
+            let slots: Vec<Arc<Mutex<WorkerLink>>> = self.slots.read().unwrap().clone();
+            let live: Vec<usize> =
+                (0..slots.len()).filter(|&i| slots[i].lock().unwrap().is_live()).collect();
+            if live.is_empty() || live.len() < self.opts.min_workers {
+                // healing may still restore quorum: wait out the earliest
+                // redial deadline (a virtual sleep under sim) and retry
+                if let Some(at_ns) = self.earliest_redial(&slots) {
+                    let now = self.clock.now_ns();
+                    self.clock
+                        .sleep(Duration::from_nanos(at_ns.saturating_sub(now).max(1)));
+                    continue;
+                }
+                let done = results.iter().filter(|r| r.is_some()).count();
+                let failure = if last_loss.is_empty() {
+                    String::new()
+                } else {
+                    format!("; last failure: {last_loss}")
+                };
+                if live.is_empty() {
+                    return Err(Error::Runtime(format!(
+                        "all cluster workers lost mid-round ({done} of {n_chunks} chunks \
+                         done){failure}",
+                    )));
+                }
                 return Err(Error::Runtime(format!(
-                    "all cluster workers lost mid-round ({} of {} chunks done){}",
-                    results.iter().filter(|r| r.is_some()).count(),
-                    n_chunks,
-                    if last_loss.is_empty() {
-                        String::new()
-                    } else {
-                        format!("; last failure: {last_loss}")
-                    },
+                    "cluster quorum lost: {} of {} workers live, below the \
+                     PALLAS_MIN_WORKERS floor of {} ({done} of {n_chunks} chunks \
+                     done){failure}",
+                    live.len(),
+                    slots.len(),
+                    self.opts.min_workers,
                 )));
             }
-            match self.exchange {
+            self.note_degraded(round, live.len(), slots.len());
+            match self.opts.exchange {
                 ExchangeMode::Wave => self.wave_step(
                     round,
                     per,
                     n_shards,
+                    &slots,
                     &live,
                     &mut pending,
                     &mut results,
@@ -437,6 +824,7 @@ impl RemoteCluster {
                     round,
                     per,
                     n_shards,
+                    &slots,
                     &live,
                     &mut pending,
                     &mut results,
@@ -464,6 +852,7 @@ impl RemoteCluster {
         round: u64,
         per: usize,
         n_shards: usize,
+        slots: &[Arc<Mutex<WorkerLink>>],
         live: &[usize],
         pending: &mut VecDeque<usize>,
         results: &mut [Option<Msg>],
@@ -490,7 +879,7 @@ impl RemoteCluster {
                     s.spawn(move || {
                         let lo = chunk * per;
                         let hi = (lo + per).min(n_shards);
-                        let mut link = self.slots[slot].lock().unwrap();
+                        let mut link = slots[slot].lock().unwrap();
                         let t0 = if want_obs { self.clock.now_ns() } else { 0 };
                         let result = link
                             .send_task(&task(lo, hi), ext, &self.counters)
@@ -517,7 +906,11 @@ impl RemoteCluster {
                                 // dead worker: back on the queue for
                                 // a survivor in the next wave
                                 link.kill();
-                                WaveOutcome::Lost(chunk, format!("worker {}: {e}", link.addr))
+                                WaveOutcome::Lost {
+                                    slot,
+                                    chunk,
+                                    loss: format!("worker {}: {e}", link.addr),
+                                }
                             }
                         }
                     })
@@ -535,7 +928,13 @@ impl RemoteCluster {
         for outcome in outcomes {
             match outcome {
                 WaveOutcome::Done(chunk, reply) => results[chunk] = Some(reply),
-                WaveOutcome::Lost(chunk, loss) => {
+                WaveOutcome::Lost { slot, chunk, loss } => {
+                    self.push_event(MembershipEvent {
+                        round,
+                        worker: Some(slot),
+                        change: MembershipChange::Lost,
+                        detail: loss.clone(),
+                    });
                     *last_loss = loss;
                     self.note_loss(round, per, std::slice::from_ref(&chunk));
                     pending.push_back(chunk);
@@ -611,6 +1010,7 @@ impl RemoteCluster {
         round: u64,
         per: usize,
         n_shards: usize,
+        slots: &[Arc<Mutex<WorkerLink>>],
         live: &[usize],
         pending: &mut VecDeque<usize>,
         results: &mut [Option<Msg>],
@@ -629,7 +1029,7 @@ impl RemoteCluster {
                 .iter()
                 .zip(&queues)
                 .map(|(&slot, queue)| {
-                    s.spawn(move || self.run_slot(slot, round, queue, per, n_shards, task))
+                    s.spawn(move || self.run_slot(slots, slot, round, queue, per, n_shards, task))
                 })
                 .collect();
             handles
@@ -643,7 +1043,7 @@ impl RemoteCluster {
                 })
                 .collect()
         });
-        for run in runs {
+        for (run, &slot) in runs.into_iter().zip(live) {
             if let Some(message) = run.fatal {
                 return Err(Error::Runtime(message));
             }
@@ -651,6 +1051,12 @@ impl RemoteCluster {
                 results[chunk] = Some(reply);
             }
             if let Some(loss) = run.loss {
+                self.push_event(MembershipEvent {
+                    round,
+                    worker: Some(slot),
+                    change: MembershipChange::Lost,
+                    detail: loss.clone(),
+                });
                 *last_loss = loss;
                 self.counters.count(&self.counters.workers_lost, 1);
                 self.counters.count(&self.counters.redispatches, run.lost.len() as u64);
@@ -670,8 +1076,10 @@ impl RemoteCluster {
     /// order); only the leader's waiting overlaps with the worker's
     /// compute. Any wire error kills the link and reports every
     /// unanswered chunk as lost, in a deterministic order.
+    #[allow(clippy::too_many_arguments)]
     fn run_slot<F>(
         &self,
+        slots: &[Arc<Mutex<WorkerLink>>],
         slot: usize,
         round: u64,
         queue: &[usize],
@@ -686,7 +1094,7 @@ impl RemoteCluster {
         let want_obs = trace_on || crate::obs::metrics_enabled();
         let ext = span_ext::encode_task(round, trace_on);
         let mut run = SlotRun::new();
-        let mut link = self.slots[slot].lock().unwrap();
+        let mut link = slots[slot].lock().unwrap();
         // in-flight chunks with their send instants: a pipelined chunk's
         // exchange latency is its full turnaround, send to reply
         let mut inflight: VecDeque<(usize, u64)> = VecDeque::new();
@@ -840,7 +1248,7 @@ fn unexpected(want: &str, got: &Msg) -> Error {
 
 impl Drop for RemoteCluster {
     fn drop(&mut self) {
-        for slot in &self.slots {
+        for slot in self.slots.read().unwrap().iter() {
             if let Ok(mut link) = slot.lock() {
                 link.shutdown();
             }

@@ -26,6 +26,8 @@ pub(crate) struct NetCounters {
     pub(crate) round_us: AtomicU64,
     pub(crate) redispatches: AtomicU64,
     pub(crate) workers_lost: AtomicU64,
+    pub(crate) redials: AtomicU64,
+    pub(crate) joins: AtomicU64,
 }
 
 impl NetCounters {
@@ -35,12 +37,30 @@ impl NetCounters {
 }
 
 /// One leader→worker connection. Dead links keep their slot (and their
-/// address, for reporting) but `stream` is gone; a link never resurrects
-/// within a session — re-dispatch moves work to survivors instead.
+/// address, for reporting); under a redial budget
+/// ([`ConnectOptions::redial_budget`]) a *transiently*-dead link — one
+/// killed by an I/O error or timeout — can be re-dialed and
+/// re-handshaken at a round boundary via [`WorkerLink::redial`].
+/// Permanent deaths (the worker answered and refused: fingerprint
+/// mismatch, session refusal, exhausted budget) never resurrect;
+/// re-dispatch moves their work to survivors instead.
 pub(crate) struct WorkerLink {
     pub(crate) addr: String,
     pub(crate) threads: usize,
     stream: Option<Box<dyn NetStream>>,
+    /// Consecutive failed redial attempts since the link last died
+    /// (resets on a successful redial — each outage gets a fresh
+    /// backoff schedule).
+    pub(crate) attempts: u32,
+    /// Total redials attempted over the whole session; never resets, so
+    /// a link that keeps flapping (crash → redial → crash …) exhausts
+    /// [`ConnectOptions::redial_budget`] instead of looping forever.
+    pub(crate) redials_spent: u32,
+    /// Clock deadline before which no redial is attempted (exponential
+    /// backoff + deterministic jitter; virtual time under the simulator).
+    pub(crate) next_redial_at_ns: u64,
+    /// The peer answered and refused — never redial this link.
+    pub(crate) permanent: bool,
 }
 
 impl WorkerLink {
@@ -57,7 +77,44 @@ impl WorkerLink {
         fingerprint: &InstanceFingerprint,
         opts: ConnectOptions,
     ) -> Result<Self> {
-        let mut stream = transport.dial(addr, opts.connect_timeout)?;
+        let stream = transport.dial(addr, opts.connect_timeout)?;
+        let (threads, stream) = Self::handshake(stream, addr, fingerprint, opts)?;
+        Ok(Self {
+            addr: addr.to_string(),
+            threads,
+            stream: Some(stream),
+            attempts: 0,
+            redials_spent: 0,
+            next_redial_at_ns: 0,
+            permanent: false,
+        })
+    }
+
+    /// A link over an already-handshaken stream — how a mid-solve
+    /// `Join`/`Admit` admission becomes a slot (the join handshake
+    /// replaced `Hello`/`Welcome`; exchange timeouts are already set).
+    pub(crate) fn admitted(addr: String, threads: usize, stream: Box<dyn NetStream>) -> Self {
+        Self {
+            addr,
+            threads: threads.max(1),
+            stream: Some(stream),
+            attempts: 0,
+            redials_spent: 0,
+            next_redial_at_ns: 0,
+            permanent: false,
+        }
+    }
+
+    /// The `Hello`/`Welcome` exchange on a fresh stream, shared by
+    /// [`WorkerLink::connect`] and [`WorkerLink::redial`]. On success the
+    /// exchange timeouts are installed and the advertised capacity
+    /// returned with the stream.
+    fn handshake(
+        mut stream: Box<dyn NetStream>,
+        addr: &str,
+        fingerprint: &InstanceFingerprint,
+        opts: ConnectOptions,
+    ) -> Result<(usize, Box<dyn NetStream>)> {
         stream.set_read_timeout(Some(opts.connect_timeout))?;
         stream.set_write_timeout(Some(opts.connect_timeout))?;
         send_msg(&mut stream, &Msg::Hello { fingerprint: fingerprint.clone() })?;
@@ -72,11 +129,7 @@ impl WorkerLink {
                          [{fingerprint}], worker has [{theirs}]"
                     )));
                 }
-                Ok(Self {
-                    addr: addr.to_string(),
-                    threads: threads.max(1) as usize,
-                    stream: Some(stream),
-                })
+                Ok((threads.max(1) as usize, stream))
             }
             Msg::Abort { message } => {
                 Err(Error::Runtime(format!("worker {addr} refused the session: {message}")))
@@ -88,11 +141,42 @@ impl WorkerLink {
         }
     }
 
+    /// Re-dial a transiently-dead link and re-run the fingerprint
+    /// handshake; on success the link serves tasks again with a fresh
+    /// backoff schedule. Failure classification: a *dial* failure (the
+    /// peer is unreachable — still restarting, still partitioned) stays
+    /// transient and merely consumes a redial attempt; a *handshake*
+    /// failure means the peer answered and refused — that is permanent
+    /// and the link is retired for the session.
+    pub(crate) fn redial(
+        &mut self,
+        transport: &dyn Transport,
+        fingerprint: &InstanceFingerprint,
+        opts: ConnectOptions,
+    ) -> Result<()> {
+        debug_assert!(self.stream.is_none(), "redial of a live link");
+        let stream = transport.dial(&self.addr, opts.connect_timeout)?;
+        match Self::handshake(stream, &self.addr, fingerprint, opts) {
+            Ok((threads, stream)) => {
+                self.threads = threads;
+                self.stream = Some(stream);
+                self.attempts = 0;
+                self.next_redial_at_ns = 0;
+                Ok(())
+            }
+            Err(e) => {
+                self.permanent = true;
+                Err(e)
+            }
+        }
+    }
+
     pub(crate) fn is_live(&self) -> bool {
         self.stream.is_some()
     }
 
-    /// Drop the connection; the link stays dead for the session.
+    /// Drop the connection; the link stays dead until (and unless) a
+    /// round-boundary redial revives it.
     pub(crate) fn kill(&mut self) {
         self.stream = None;
     }

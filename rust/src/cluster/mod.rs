@@ -29,11 +29,17 @@
 //!   ([`TcpTransport`]) in production, and a deterministic in-memory
 //!   simulator ([`sim`]) in tests, where any drop/delay/corruption/crash
 //!   schedule is replayable from a seed (`docs/simulation.md`).
-//! * **Failure handling** (`membership`, `leader`): a worker that times
-//!   out or drops its connection is marked dead, its in-flight chunk goes
-//!   back on the round's queue, and survivors re-execute it — the round
-//!   resumes from the λ it was dispatched with, so a lost worker costs one
-//!   chunk of recomputation, not the solve.
+//! * **Failure handling & elasticity** (`membership`, `leader`): a worker
+//!   that times out or drops its connection is marked dead, its in-flight
+//!   chunk goes back on the round's queue, and survivors re-execute it —
+//!   the round resumes from the λ it was dispatched with, so a lost worker
+//!   costs one chunk of recomputation, not the solve. When a redial budget
+//!   is configured (`PALLAS_CLUSTER_REDIALS`), transiently-dead links are
+//!   redialed with exponential backoff at round boundaries; a leader
+//!   started with a join listener admits fresh `bskp worker --join`
+//!   processes mid-solve (`Join`/`Admit` frames); and a quorum policy
+//!   (`PALLAS_MIN_WORKERS`) fails fast when the live fleet shrinks below
+//!   strength instead of grinding on degraded.
 
 pub mod clock;
 pub(crate) mod exec;
@@ -46,11 +52,11 @@ pub mod transport;
 pub(crate) mod wire;
 pub mod worker;
 
-pub use clock::{Clock, SystemClock, VirtualClock};
+pub use clock::{Backoff, Clock, SystemClock, VirtualClock};
 pub use exec::Exec;
 pub use leader::{ConnectOptions, ExchangeMode, NetSnapshot, RemoteCluster};
 pub use protocol::InstanceFingerprint;
-pub use sim::{Dir, FaultPlan, LinkFaults, SimNet, SimTransport, TraceEvent, TraceKind};
+pub use sim::{Dir, ElasticObserver, FaultPlan, LinkFaults, SimNet, SimTransport, TraceEvent, TraceKind};
 pub use transport::{NetListener, NetStream, TcpNetListener, TcpTransport, Transport};
 
 /// Read a `PALLAS_*` millisecond knob, ignoring unparsable or zero
@@ -64,4 +70,11 @@ pub(crate) fn env_ms(var: &str, default_ms: u64) -> std::time::Duration {
             .filter(|&ms| ms > 0)
             .unwrap_or(default_ms),
     )
+}
+
+/// Read a `PALLAS_*` count knob (budgets, quorums), ignoring unparsable
+/// values. Unlike [`env_ms`], zero is a meaningful setting — it is how
+/// `PALLAS_CLUSTER_REDIALS=0` switches redialing off.
+pub(crate) fn env_count(var: &str, default: u64) -> u64 {
+    std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }

@@ -1,10 +1,13 @@
 //! Message vocabulary of the cluster wire protocol.
 //!
-//! Ten message kinds ride the [`super::frames`] layer: a two-message
+//! Twelve message kinds ride the [`super::frames`] layer: a two-message
 //! handshake (`Hello`/`Welcome`) that pins the protocol version and the
 //! instance fingerprint, three task kinds (one per map-round flavor:
 //! evaluation, SCD threshold emission, §5.4 ranking), their three partial
-//! kinds, plus `Abort` and `Shutdown`. Tasks are *self-contained*: shard
+//! kinds, `Abort` and `Shutdown`, plus the elastic-membership handshake
+//! (`Join`/`Admit`): a fresh worker dials the *leader's* join listener
+//! mid-solve, offers its capacity and fingerprint, and — once admitted —
+//! serves the same stateless task loop as a dial-time worker. Tasks are *self-contained*: shard
 //! geometry, chunk bounds and the full per-round broadcast state (λ,
 //! active mask, reduce mode) travel in every task, so a worker is
 //! stateless between frames and any task can be re-dispatched to any
@@ -169,7 +172,8 @@ impl Geometry {
 }
 
 /// One protocol message. Kinds 1–2 handshake, 3–5 tasks (leader→worker),
-/// 6–8 partials (worker→leader), 9 abort, 10 shutdown.
+/// 6–8 partials (worker→leader), 9 abort, 10 shutdown, 11–12 the
+/// mid-solve join handshake (worker-dialed).
 pub(crate) enum Msg {
     /// Leader → worker: open the session. The worker refuses a fingerprint
     /// that does not match its own store.
@@ -201,6 +205,16 @@ pub(crate) enum Msg {
     Abort { message: String },
     /// Leader → worker: end the session; the worker returns to accepting.
     Shutdown,
+    /// Worker → leader, on a worker-dialed stream to the leader's join
+    /// listener: ask to join the running solve, advertising map-thread
+    /// capacity and the store fingerprint. The frame layer has already
+    /// pinned the protocol version; the leader checks the fingerprint and
+    /// answers `Admit` (or `Abort` on a mismatch).
+    Join { threads: u32, fingerprint: InstanceFingerprint },
+    /// Leader → worker: join accepted — from the next round boundary on,
+    /// the stream carries the same task/partial traffic as a dial-time
+    /// session.
+    Admit,
 }
 
 impl Msg {
@@ -216,6 +230,8 @@ impl Msg {
             Msg::RankPartial(_) => 8,
             Msg::Abort { .. } => 9,
             Msg::Shutdown => 10,
+            Msg::Join { .. } => 11,
+            Msg::Admit => 12,
         }
     }
 
@@ -231,6 +247,8 @@ impl Msg {
             Msg::RankPartial(_) => "rank-partial",
             Msg::Abort { .. } => "abort",
             Msg::Shutdown => "shutdown",
+            Msg::Join { .. } => "join",
+            Msg::Admit => "admit",
         }
     }
 
@@ -277,6 +295,11 @@ impl Msg {
                 e.str(message);
             }
             Msg::Shutdown => {}
+            Msg::Join { threads, fingerprint } => {
+                e.u32(*threads);
+                fingerprint.encode(&mut e);
+            }
+            Msg::Admit => {}
         }
         e.into_bytes()
     }
@@ -340,6 +363,11 @@ impl Msg {
             }
             9 => Msg::Abort { message: d.str()? },
             10 => Msg::Shutdown,
+            11 => Msg::Join {
+                threads: d.u32()?,
+                fingerprint: InstanceFingerprint::decode(&mut d)?,
+            },
+            12 => Msg::Admit,
             other => return Err(corrupt(&format!("unknown message kind {other}"))),
         };
         d.finish()?;
@@ -667,5 +695,26 @@ mod tests {
             Msg::Abort { message } => assert_eq!(message, "nope"),
             other => panic!("wrong kind back: {}", other.name()),
         }
+    }
+
+    #[test]
+    fn join_handshake_roundtrips() {
+        let p = SyntheticProblem::new(GeneratorConfig::dense(50, 4, 3).with_seed(9));
+        let fp = InstanceFingerprint::of(&p);
+        match roundtrip(&Msg::Join { threads: 4, fingerprint: fp.clone() }) {
+            Msg::Join { threads, fingerprint } => {
+                assert_eq!(threads, 4);
+                assert_eq!(fingerprint, fp);
+            }
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+        assert!(matches!(roundtrip(&Msg::Admit), Msg::Admit));
+        // Join carries exactly what Welcome does, so the payloads match
+        // byte for byte — only the kind differs (spec'd in
+        // docs/cluster-protocol.md)
+        let join = Msg::Join { threads: 4, fingerprint: fp.clone() };
+        let welcome = Msg::Welcome { threads: 4, fingerprint: fp };
+        assert_eq!(join.encode(), welcome.encode());
+        assert_eq!((join.kind(), welcome.kind()), (11, 2));
     }
 }

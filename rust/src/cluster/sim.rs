@@ -31,9 +31,15 @@
 //!   `SolveObserver` at a chosen round); a stalled worker's replies are
 //!   delayed past the leader's exchange timeout, which then fires in
 //!   **virtual** time — no test ever sleeps wall-clock time. A crashed
-//!   worker can [`SimNet::rejoin_worker`] and accept new sessions (the
-//!   leader's policy of never resurrecting a link *within* a session is
-//!   itself under test).
+//!   worker can [`SimNet::rejoin_worker`] and accept new sessions;
+//!   without a redial budget the leader never resurrects a link *within*
+//!   a session (itself under test), while [`LinkFaults::redial_after`]
+//!   plans a deterministic restart for a leader that heals.
+//! * **elasticity** — [`LinkFaults::redial_after`] restarts a crashed
+//!   worker after N bounced re-dials (exercising the leader's backoff
+//!   redial loop), and [`FaultPlan::join_at_round`] admits fresh workers
+//!   mid-solve through the leader's join listener
+//!   ([`SimNet::join_worker`] / [`SimNet::elastic_observer`]).
 //!
 //! Every per-frame decision is a pure function of
 //! `(seed, worker, connection, direction, frame seq)` — independent of
@@ -154,6 +160,13 @@ pub struct LinkFaults {
     /// Refuse new connections (dial fails; the planner should skip this
     /// worker with a note).
     pub refuse_dials: bool,
+    /// After a crash, the worker "restarts": the first N re-dials still
+    /// fail (the process is coming back up), then the endpoint accepts
+    /// again. `Some(0)` restarts instantly. `None` (the default) keeps a
+    /// crashed worker down for good — the pre-elastic behavior. Pair
+    /// with a leader-side redial budget (`PALLAS_CLUSTER_REDIALS` /
+    /// `ConnectOptions::redial_budget`) to exercise self-healing.
+    pub redial_after: Option<u32>,
 }
 
 /// A fault-free link.
@@ -169,6 +182,7 @@ pub const NO_FAULTS: LinkFaults = LinkFaults {
     crash_on_reply: None,
     stall_after: None,
     refuse_dials: false,
+    redial_after: None,
 };
 
 /// The fault plan DSL: one [`LinkFaults`] per worker (by the order
@@ -177,6 +191,13 @@ pub const NO_FAULTS: LinkFaults = LinkFaults {
 pub struct FaultPlan {
     /// Per-worker fault schedules.
     pub links: Vec<LinkFaults>,
+    /// Mid-solve admissions: `(round, threads)` pairs. At the start of
+    /// solve round `round` (0-based, as a [`SolveObserver`] counts
+    /// them) a fresh worker with a `threads`-wide pool dials the
+    /// leader's join listener — the sim analogue of launching
+    /// `bskp worker --join` mid-solve. Executed by the observer from
+    /// [`SimNet::elastic_observer`]; ignored without one.
+    pub join_at_round: Vec<(u64, usize)>,
 }
 
 impl FaultPlan {
@@ -317,6 +338,9 @@ struct EpState {
     pending: VecDeque<usize>,
     /// Connection ordinal counter.
     conns: u64,
+    /// Dials refused since the last crash (drives
+    /// [`LinkFaults::redial_after`]; resets when the worker restarts).
+    failed_dials: u32,
 }
 
 struct SimState {
@@ -383,7 +407,28 @@ impl Hub {
             return Err(Error::Runtime(format!("sim: {addr} refused the connection")));
         }
         if !st.eps[ep].alive {
-            return Err(Error::Runtime(format!("sim: {addr} is down (crashed worker)")));
+            // the redial_after verb: the crashed worker "restarts" once
+            // enough re-dials have bounced off it, then accepts again
+            let revive = match hub.plan.faults_for(ep).redial_after {
+                Some(after) => st.eps[ep].failed_dials >= after,
+                None => false,
+            };
+            if !revive {
+                st.eps[ep].failed_dials = st.eps[ep].failed_dials.saturating_add(1);
+                return Err(Error::Runtime(format!("sim: {addr} is down (crashed worker)")));
+            }
+            st.eps[ep].alive = true;
+            st.eps[ep].failed_dials = 0;
+            let at = hub.clock.now_ns();
+            let conn = st.eps[ep].conns;
+            st.admin.push(TraceEvent {
+                worker: ep,
+                conn,
+                dir: None,
+                seq: 0,
+                at_ns: at,
+                kind: TraceKind::Rejoined,
+            });
         }
         let ordinal = st.eps[ep].conns;
         st.eps[ep].conns += 1;
@@ -820,6 +865,29 @@ impl NetListener for SimListener {
         Ok(Hub::accept(&self.hub, self.ep))
     }
 
+    fn poll_accept(&self) -> io::Result<Option<Box<dyn NetStream>>> {
+        let mut st = self.hub.state.lock().unwrap();
+        if st.closed || !st.eps[self.ep].alive {
+            return Ok(None);
+        }
+        let Some(id) = st.eps[self.ep].pending.pop_front() else {
+            return Ok(None);
+        };
+        let ordinal = st.links[id].ordinal;
+        Ok(Some(Box::new(SimStream {
+            hub: Arc::clone(&self.hub),
+            link: id,
+            ep: self.ep,
+            ordinal,
+            side: Side::Worker,
+            last_vnow: 0,
+            read_buf: Vec::new(),
+            read_pos: 0,
+            write_buf: Vec::new(),
+            read_timeout: None,
+        })))
+    }
+
     fn local_addr(&self) -> String {
         self.hub.state.lock().unwrap().eps[self.ep].addr.clone()
     }
@@ -881,6 +949,7 @@ impl SimNet {
                 alive: true,
                 pending: VecDeque::new(),
                 conns: 0,
+                failed_dials: 0,
             });
             (ep, addr)
         };
@@ -916,6 +985,7 @@ impl SimNet {
                 alive: true,
                 pending: VecDeque::new(),
                 conns: 0,
+                failed_dials: 0,
             });
             ep
         };
@@ -958,9 +1028,13 @@ impl SimNet {
         self.hub.cv.notify_all();
     }
 
-    /// Revive a crashed worker: it accepts new connections again (a
-    /// leader session in flight will *not* redial it — links never
-    /// resurrect within a session — but a new connect sees it).
+    /// Revive a crashed worker: it accepts new connections again. A
+    /// leader session in flight will *not* redial it unless it runs with
+    /// a redial budget (`PALLAS_CLUSTER_REDIALS` /
+    /// `ConnectOptions::redial_budget`) — without one, links never
+    /// resurrect within a session, and only a new connect sees the
+    /// revived worker. (Planned, deterministic restarts go through
+    /// [`LinkFaults::redial_after`] instead.)
     pub fn rejoin_worker(&self, index: usize) {
         let mut st = self.hub.state.lock().unwrap();
         if st.eps[index].alive {
@@ -983,6 +1057,73 @@ impl SimNet {
     /// Is worker `index` currently accepting?
     pub fn worker_alive(&self, index: usize) -> bool {
         self.hub.state.lock().unwrap().eps[index].alive
+    }
+
+    /// Launch a fresh worker that joins a running leader mid-solve: dial
+    /// `leader` (the join listener's address from
+    /// [`SimNet::add_endpoint`]), put the `Join` frame on the wire
+    /// **synchronously** — so when the caller is a round-boundary hook the
+    /// admission lands at a deterministic deal — then serve the admitted
+    /// session on a new thread, exactly as `bskp worker --join` would.
+    ///
+    /// Panics if the store does not open, like [`SimNet::add_worker`].
+    pub fn join_worker(&self, store: &Path, threads: usize, leader: &str) -> Result<()> {
+        if let Err(e) = MmapProblem::open(store) {
+            panic!("sim joiner cannot open the store {}: {e}", store.display());
+        }
+        let transport = self.transport();
+        let opts = crate::cluster::leader::ConnectOptions::from_env();
+        let mut stream = transport.dial(leader, opts.connect_timeout)?;
+        // fingerprint from a caller-side open, dropped before the thread
+        // spawns: the Join frame must go out synchronously, but mmaps are
+        // not moved across threads (add_worker's rule), so the session
+        // thread re-opens its own copy
+        let fingerprint = {
+            let probe = MmapProblem::open(store)
+                .map_err(|e| Error::Runtime(format!("sim joiner: store vanished: {e}")))?;
+            crate::cluster::protocol::InstanceFingerprint::of(&probe)
+        };
+        crate::cluster::protocol::send_msg(
+            &mut stream,
+            &crate::cluster::protocol::Msg::Join {
+                threads: threads.max(1) as u32,
+                fingerprint: fingerprint.clone(),
+            },
+        )?;
+        let clock = self.hub.clock.clone();
+        let dir: PathBuf = store.to_path_buf();
+        let handle = std::thread::spawn(move || {
+            let problem = MmapProblem::open(&dir)
+                .unwrap_or_else(|e| panic!("sim joiner: store vanished: {e}"));
+            let pool = Cluster::new(threads);
+            let _ = worker::serve_admitted(
+                stream,
+                &problem,
+                &fingerprint,
+                &pool,
+                clock.as_ref(),
+                opts,
+            );
+        });
+        self.threads.lock().unwrap().push(handle);
+        Ok(())
+    }
+
+    /// A [`SolveObserver`](crate::solver::stats::SolveObserver) that
+    /// executes the plan's [`FaultPlan::join_at_round`] verbs: at the
+    /// start of each listed solve round it calls [`SimNet::join_worker`]
+    /// with `store` and the planned thread count against `leader`. Hooks
+    /// run on the leader's solve thread at round boundaries, so planned
+    /// admissions are deterministic.
+    pub fn elastic_observer(&self, store: &Path, leader: &str) -> ElasticObserver<'_> {
+        let mut pending = self.hub.plan.join_at_round.clone();
+        pending.sort_unstable();
+        ElasticObserver {
+            net: self,
+            store: store.to_path_buf(),
+            leader: leader.to_string(),
+            pending,
+        }
     }
 
     /// Retire the network: all blocked operations resolve, worker threads
@@ -1042,6 +1183,32 @@ impl Drop for SimNet {
     }
 }
 
+/// The observer behind [`SimNet::elastic_observer`]: fires the plan's
+/// [`FaultPlan::join_at_round`] admissions at their solve rounds.
+pub struct ElasticObserver<'a> {
+    net: &'a SimNet,
+    store: PathBuf,
+    leader: String,
+    /// Remaining `(round, threads)` verbs, sorted by round.
+    pending: Vec<(u64, usize)>,
+}
+
+impl crate::solver::stats::SolveObserver for ElasticObserver<'_> {
+    fn on_round(
+        &mut self,
+        event: &crate::solver::stats::RoundEvent<'_>,
+    ) -> crate::solver::stats::ObserverControl {
+        // on_round(iter) runs at the boundary *after* round `iter`, so a
+        // verb for round r fires once iter + 1 reaches it — admitted
+        // workers receive chunks from round r on
+        while self.pending.first().is_some_and(|&(r, _)| r <= event.iter as u64 + 1) {
+            let (_, threads) = self.pending.remove(0);
+            let _ = self.net.join_worker(&self.store, threads, &self.leader);
+        }
+        crate::solver::stats::ObserverControl::Continue
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1060,6 +1227,7 @@ mod tests {
                 alive: true,
                 pending: VecDeque::new(),
                 conns: 0,
+                failed_dials: 0,
             });
         }
         std::mem::forget(net); // keep the hub open: these tests own both ends
@@ -1089,6 +1257,7 @@ mod tests {
                 corrupt_frames: vec![(Dir::ToWorker, 0)],
                 ..NO_FAULTS
             }],
+            ..Default::default()
         };
         let (hub, addr) = bare_hub(2, plan);
         let mut leader = Hub::dial(&hub, &addr).unwrap();
@@ -1102,6 +1271,7 @@ mod tests {
     fn delay_past_deadline_fires_virtually_not_really() {
         let plan = FaultPlan {
             links: vec![LinkFaults { delay_ns: 2_000_000_000, ..NO_FAULTS }],
+            ..Default::default()
         };
         let (hub, addr) = bare_hub(3, plan);
         let mut leader = Hub::dial(&hub, &addr).unwrap();
@@ -1123,6 +1293,7 @@ mod tests {
     fn drop_storms_break_the_link_and_readers_see_eof() {
         let plan = FaultPlan {
             links: vec![LinkFaults { drop_prob: 1.0, ..NO_FAULTS }],
+            ..Default::default()
         };
         let (hub, addr) = bare_hub(4, plan);
         let mut leader = Hub::dial(&hub, &addr).unwrap();
@@ -1141,6 +1312,7 @@ mod tests {
     fn same_seed_same_faults_different_seed_differs() {
         let plan = FaultPlan {
             links: vec![LinkFaults { jitter_ns: 1_000_000, drop_prob: 0.4, ..NO_FAULTS }],
+            ..Default::default()
         };
         let run = |seed: u64| -> Vec<TraceEvent> {
             let (hub, addr) = bare_hub(seed, plan.clone());

@@ -61,6 +61,15 @@ pub trait NetListener: Send + Sync {
     /// retry after a breath.
     fn accept_stream(&self) -> io::Result<Option<Box<dyn NetStream>>>;
 
+    /// Non-blocking accept: a queued inbound stream if one is already
+    /// waiting, `Ok(None)` otherwise — never blocks. This is how the
+    /// leader drains its mid-solve join listener at round boundaries
+    /// without stalling the gather. The default suits listeners that
+    /// cannot poll: nothing is ever pending.
+    fn poll_accept(&self) -> io::Result<Option<Box<dyn NetStream>>> {
+        Ok(None)
+    }
+
     /// Bound address, for announcements.
     fn local_addr(&self) -> String;
 
@@ -135,6 +144,25 @@ impl NetListener for TcpNetListener {
         Ok(Some(Box::new(stream)))
     }
 
+    fn poll_accept(&self) -> io::Result<Option<Box<dyn NetStream>>> {
+        self.inner.set_nonblocking(true)?;
+        let accepted = self.inner.accept();
+        // restore blocking before surfacing any result so a later
+        // accept_stream is unaffected even when the poll errors
+        self.inner.set_nonblocking(false)?;
+        match accepted {
+            Ok((stream, _)) => {
+                // the accepted socket's non-blocking flag is platform-
+                // dependent; force the blocking contract NetStream expects
+                stream.set_nonblocking(false)?;
+                stream.set_nodelay(true).ok();
+                Ok(Some(Box::new(stream)))
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
     fn local_addr(&self) -> String {
         self.inner.local_addr().map(|a| a.to_string()).unwrap_or_default()
     }
@@ -171,6 +199,30 @@ mod tests {
         assert_eq!(&back, b"hello");
         assert_eq!(server.join().unwrap(), *b"hello");
         assert!(!c.peer().is_empty());
+    }
+
+    #[test]
+    fn tcp_poll_accept_never_blocks() {
+        let listener = TcpNetListener::new(TcpListener::bind("127.0.0.1:0").unwrap());
+        assert!(listener.poll_accept().unwrap().is_none(), "idle listener polls empty");
+        let addr = listener.local_addr();
+        let mut c = TcpTransport.dial(&addr, Duration::from_secs(5)).unwrap();
+        let mut polled = None;
+        for _ in 0..100 {
+            if let Some(s) = listener.poll_accept().unwrap() {
+                polled = Some(s);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut s = polled.expect("dialed stream surfaces through poll_accept");
+        c.write_all(b"hi").unwrap();
+        c.flush().unwrap();
+        let mut buf = [0u8; 2];
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
+        assert!(listener.poll_accept().unwrap().is_none(), "queue drained");
     }
 
     #[test]

@@ -14,10 +14,13 @@
 //! streams ([`serve_net`]), which is how chaos tests exercise this file
 //! without sockets or wall-clock timeouts.
 
-use crate::cluster::clock::Clock;
+use crate::cluster::clock::{Backoff, Clock};
 use crate::cluster::frames;
-use crate::cluster::protocol::{recv_msg_ext, send_msg, span_ext, InstanceFingerprint, Msg};
-use crate::cluster::transport::{NetListener, NetStream, TcpNetListener};
+use crate::cluster::leader::ConnectOptions;
+use crate::cluster::protocol::{
+    recv_msg, recv_msg_ext, send_msg, span_ext, InstanceFingerprint, Msg,
+};
+use crate::cluster::transport::{NetListener, NetStream, TcpNetListener, Transport};
 use crate::obs::{names, Track};
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
@@ -59,21 +62,99 @@ pub fn serve_net<S: GroupSource + ?Sized>(
     source.validate()?;
     let fingerprint = InstanceFingerprint::of(source);
     let clock = listener.clock();
+    // persistent accept failures (fd exhaustion, ...) must not become a
+    // 100%-CPU spin; back off exponentially, reset on the next success
+    let mut backoff =
+        Backoff::new(std::time::Duration::from_millis(100), std::time::Duration::from_secs(5), 0);
     loop {
         match listener.accept_stream() {
             // a failed session (leader vanished, corrupt frame) ends the
             // connection, never the worker
             Ok(Some(stream)) => {
-                let _ = session(stream, source, &fingerprint, pool, clock.as_ref());
+                backoff.reset();
+                let _ = session(stream, source, &fingerprint, pool, clock.as_ref(), false);
             }
             Ok(None) => return Ok(()),
-            Err(_) => {
-                // persistent accept failure (fd exhaustion, ...) must not
-                // become a 100%-CPU spin; breathe, then retry
-                clock.sleep(std::time::Duration::from_millis(100));
-            }
+            Err(_) => backoff.wait(clock.as_ref()),
         }
     }
+}
+
+/// Dial a running leader's join listener and serve its session
+/// (`bskp worker --join <addr>`): send `Join` with our capacity and
+/// fingerprint, wait for `Admit`, then run the regular task loop with the
+/// handshake already complete. Dial failures retry up to `dial_attempts`
+/// times on the shared backoff helper — the leader may still be binding
+/// its listener when the worker starts.
+pub fn join_net<S: GroupSource + ?Sized>(
+    transport: &dyn Transport,
+    leader: &str,
+    source: &S,
+    pool: &Cluster,
+    dial_attempts: u32,
+) -> Result<()> {
+    source.validate()?;
+    let fingerprint = InstanceFingerprint::of(source);
+    let clock = transport.clock();
+    let opts = ConnectOptions::from_env();
+    let mut backoff = Backoff::new(
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_secs(5),
+        0,
+    );
+    let mut last = String::new();
+    for attempt in 0..dial_attempts.max(1) {
+        if attempt > 0 {
+            backoff.wait(clock.as_ref());
+        }
+        let mut stream = match transport.dial(leader, opts.connect_timeout) {
+            Ok(s) => s,
+            Err(e) => {
+                last = e.to_string();
+                continue;
+            }
+        };
+        stream.set_write_timeout(Some(opts.connect_timeout))?;
+        send_msg(
+            &mut stream,
+            &Msg::Join { threads: pool.workers() as u32, fingerprint: fingerprint.clone() },
+        )?;
+        return serve_admitted(stream, source, &fingerprint, pool, clock.as_ref(), opts);
+    }
+    Err(Error::Runtime(format!("cannot join leader at {leader}: {last}")))
+}
+
+/// The worker half of an admission whose `Join` frame is already on the
+/// wire: wait for `Admit` (or a typed refusal), then serve the session
+/// with the handshake done. Split from [`join_net`] so the simulator can
+/// dial and send `Join` synchronously at a planned round boundary and
+/// run only this half on the joiner's thread.
+pub(crate) fn serve_admitted<S: GroupSource + ?Sized>(
+    mut stream: Box<dyn NetStream>,
+    source: &S,
+    fingerprint: &InstanceFingerprint,
+    pool: &Cluster,
+    clock: &dyn Clock,
+    opts: ConnectOptions,
+) -> Result<()> {
+    stream.set_read_timeout(Some(opts.connect_timeout))?;
+    let (reply, _) = recv_msg(&mut stream)?;
+    match reply {
+        Msg::Admit => {}
+        Msg::Abort { message } => {
+            return Err(Error::Runtime(format!("leader refused the join: {message}")))
+        }
+        other => {
+            return Err(Error::Runtime(format!(
+                "leader answered join with {}",
+                other.name()
+            )))
+        }
+    }
+    // the session installs its own idle read timeout; writes go unbounded
+    // like an accepted session's
+    stream.set_write_timeout(None)?;
+    session(stream, source, fingerprint, pool, clock, true)
 }
 
 /// Idle bound on one leader session: a leader that vanished without
@@ -86,20 +167,23 @@ const DEFAULT_IDLE_TIMEOUT_MS: u64 = 600_000;
 /// One leader session: loop over frames until shutdown, error, or idle
 /// timeout (after which the worker returns to `accept`). Tasks are only
 /// served after a successful `Hello` handshake — the fingerprint check
-/// happens *before any work*, as the protocol spec requires.
+/// happens *before any work*, as the protocol spec requires. Sessions
+/// reached through the `Join`/`Admit` admission start with `greeted`
+/// already true (that handshake verified the fingerprint).
 fn session<S: GroupSource + ?Sized>(
     mut stream: Box<dyn NetStream>,
     source: &S,
     fingerprint: &InstanceFingerprint,
     pool: &Cluster,
     clock: &dyn Clock,
+    greeted: bool,
 ) -> Result<()> {
     let idle = crate::cluster::env_ms("PALLAS_WORKER_IDLE_TIMEOUT_MS", DEFAULT_IDLE_TIMEOUT_MS);
     stream.set_read_timeout(Some(idle))?;
     let obs = crate::obs::metrics::global();
     let (tasks_total, task_ns) =
         (obs.counter("bskp_worker_tasks_total"), obs.histogram("bskp_worker_task_ns"));
-    let mut greeted = false;
+    let mut greeted = greeted;
     loop {
         let (msg, ext, _) = recv_msg_ext(&mut stream)?;
         // span-context frame extension: the round index this task belongs

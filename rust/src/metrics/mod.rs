@@ -142,6 +142,8 @@ pub fn cluster_to_json(s: &crate::cluster::NetSnapshot) -> JsonValue {
         ("bytes_received".to_string(), JsonValue::Num(s.bytes_received as f64)),
         ("redispatches".to_string(), JsonValue::Num(s.redispatches as f64)),
         ("workers_lost".to_string(), JsonValue::Num(s.workers_lost as f64)),
+        ("redials".to_string(), JsonValue::Num(s.redials as f64)),
+        ("joins".to_string(), JsonValue::Num(s.joins as f64)),
     ])
 }
 
@@ -202,6 +204,31 @@ pub fn report_to_json(r: &SolveReport) -> JsonValue {
                 .collect(),
         ),
     ));
+    obj.push((
+        "membership".to_string(),
+        JsonValue::Array(
+            r.membership
+                .iter()
+                .map(|ev| {
+                    JsonValue::Object(vec![
+                        ("round".to_string(), JsonValue::Num(ev.round as f64)),
+                        (
+                            "worker".to_string(),
+                            match ev.worker {
+                                Some(w) => JsonValue::Num(w as f64),
+                                None => JsonValue::Null,
+                            },
+                        ),
+                        (
+                            "change".to_string(),
+                            JsonValue::Str(ev.change.label().to_string()),
+                        ),
+                        ("detail".to_string(), JsonValue::Str(ev.detail.clone())),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
     JsonValue::Object(obj)
 }
 
@@ -224,9 +251,24 @@ mod tests {
             history: vec![],
             wall_ms: 1.5,
             phases: Default::default(),
+            membership: vec![crate::solver::stats::MembershipEvent {
+                round: 3,
+                worker: Some(1),
+                change: crate::solver::stats::MembershipChange::Redialed,
+                detail: "worker 1 redialed (1 of 2 redials spent)".into(),
+            }],
         };
         let s = report_to_json(&r).to_string();
-        for key in ["iterations", "duality_gap", "lambda", "wall_ms", "phases", "skip_rate"] {
+        for key in [
+            "iterations",
+            "duality_gap",
+            "lambda",
+            "wall_ms",
+            "phases",
+            "skip_rate",
+            "membership",
+            "\"change\":\"redialed\"",
+        ] {
             assert!(s.contains(key), "missing {key} in {s}");
         }
     }

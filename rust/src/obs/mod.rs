@@ -66,6 +66,15 @@ pub mod names {
     /// Instant: a chunk went back on the deal queue; `a` = round,
     /// `b` = chunk lo.
     pub const REDEAL: u16 = 14;
+    /// Instant: a transiently-dead worker was redialed back into the
+    /// deal; `a` = round, `b` = worker slot.
+    pub const REDIAL: u16 = 15;
+    /// Instant: a fresh worker was admitted mid-solve through the join
+    /// listener; `a` = round, `b` = worker slot.
+    pub const JOIN: u16 = 16;
+    /// Instant: the solve transitioned to a degraded fleet strength;
+    /// `a` = round, `b` = live workers.
+    pub const DEGRADED: u16 = 17;
 
     /// Human name for a code (unknown codes render as `event/<code>`
     /// would — callers show the number alongside).
@@ -85,6 +94,9 @@ pub mod names {
             SERVE_REQUEST => "serve_request",
             SERVE_SOLVE => "serve_solve",
             REDEAL => "redeal",
+            REDIAL => "redial",
+            JOIN => "join",
+            DEGRADED => "degraded",
             _ => "event",
         }
     }
@@ -288,7 +300,7 @@ mod tests {
 
     #[test]
     fn every_named_code_has_a_label() {
-        for code in 1..=14u16 {
+        for code in 1..=17u16 {
             assert_ne!(names::name_of(code), "event", "code {code} unnamed");
         }
         assert_eq!(names::name_of(9999), "event");

@@ -294,6 +294,7 @@ pub fn solve_scd_xla_sparse_driven_clocked<S: GroupSource + ?Sized>(
         history,
         wall_ms: 0.0,
         phases,
+        membership: Vec::new(),
     };
     if config.postprocess && !report.is_feasible() {
         let exec = crate::cluster::Exec::Local(cluster);

@@ -51,6 +51,10 @@ pub enum SolveOutcome {
         active: u32,
         /// The admission bound.
         limit: u32,
+        /// The daemon's retry hint, milliseconds — derived from its
+        /// observed per-round solve cadence (`bskp request --wait`
+        /// honors it instead of polling blindly).
+        retry_after_ms: u64,
     },
 }
 
@@ -124,7 +128,9 @@ impl ServeClient {
             ServeMsg::SolveReply { warm_used, report } => {
                 Ok(SolveOutcome::Done(ServedSolve { warm_used, report }))
             }
-            ServeMsg::Busy { active, limit } => Ok(SolveOutcome::Busy { active, limit }),
+            ServeMsg::Busy { active, limit, retry_after_ms } => {
+                Ok(SolveOutcome::Busy { active, limit, retry_after_ms })
+            }
             other => Err(self.unexpected(&other, "solve-reply")),
         }
     }

@@ -42,7 +42,7 @@ pub use client::{ProgressSnapshot, ServeClient, ServeInfo, ServedSolve, SolveOut
 pub use protocol::{ProgressEvent, SolveSpec, MAX_QUERY_BATCH};
 
 use crate::cluster::transport::{NetListener, NetStream, TcpNetListener};
-use crate::cluster::{Clock, InstanceFingerprint};
+use crate::cluster::{Backoff, Clock, InstanceFingerprint};
 use crate::coordinator::Algorithm;
 use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
@@ -50,7 +50,10 @@ use crate::instance::store::MmapProblem;
 use crate::mapreduce::Cluster;
 use crate::obs::metrics::{Counter, Gauge, Histogram};
 use crate::obs::{self, names, Track};
-use crate::solve::{ScaledBudgets, Solve, WarmStart};
+use crate::solve::{
+    default_checkpoint_path, ChainObserver, ScaledBudgets, Solve, WarmStart,
+    DEFAULT_CHECKPOINT_EVERY,
+};
 use crate::solver::config::SolverConfig;
 use crate::solver::pointquery::allocations_at;
 use crate::solver::stats::{ObserverControl, RoundEvent, SolveObserver, SolveReport};
@@ -58,7 +61,9 @@ use protocol::{recv_serve, send_serve, ProgressEvent as Ev, ServeMsg, SolveSpec 
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Daemon configuration.
 #[derive(Debug, Clone)]
@@ -81,6 +86,21 @@ impl Default for ServeOptions {
 /// FIN/RST must not hold a session thread forever. Override with
 /// `PALLAS_SERVE_IDLE_TIMEOUT_MS`.
 const DEFAULT_IDLE_TIMEOUT_MS: u64 = 600_000;
+
+/// `Busy.retry_after_ms` before the daemon has completed any solve (no
+/// cadence observed yet).
+const DEFAULT_RETRY_AFTER_MS: u64 = 1_000;
+
+/// Bounds on the cadence-derived retry hint: never tighter than 100 ms
+/// (a poll that fast is pure load), never looser than a minute (clients
+/// deserve progress even when rounds are glacial).
+const RETRY_AFTER_BOUNDS_MS: (u64, u64) = (100, 60_000);
+
+/// The retry hint is this many observed round-times: a freed admission
+/// slot is only useful if the running solve actually retired some rounds
+/// meanwhile, and hammering every round-time doubles the daemon's frame
+/// load for nothing.
+const RETRY_AFTER_ROUNDS: u64 = 8;
 
 /// Open the store under `dir` and serve clients on `listener` until the
 /// listener fails (TCP never retires cleanly; the simulator does).
@@ -116,9 +136,12 @@ pub fn serve_net(
     let clock = listener.clock();
     let state = ServeState::new(opts.admission.max(1));
     std::thread::scope(|scope| {
+        let mut backoff =
+            Backoff::new(Duration::from_millis(100), Duration::from_secs(5), 0);
         loop {
             match listener.accept_stream() {
                 Ok(Some(stream)) => {
+                    backoff.reset();
                     // a failed session (client vanished, corrupt frame)
                     // ends that connection, never the daemon
                     let (state, fp, pool) = (&state, &fingerprint, &pool);
@@ -130,8 +153,9 @@ pub fn serve_net(
                 Ok(None) => break,
                 Err(_) => {
                     // persistent accept failure must not become a
-                    // 100%-CPU spin; breathe, then retry
-                    clock.sleep(std::time::Duration::from_millis(100));
+                    // 100%-CPU spin; back off (capped exponential,
+                    // through the clock seam), then retry
+                    backoff.wait(clock.as_ref());
                 }
             }
         }
@@ -156,10 +180,15 @@ struct ServeState {
     /// (which share it — budgets are excluded from identity).
     warm: Mutex<Vec<(InstanceFingerprint, Vec<f64>)>>,
     progress: Mutex<HashMap<u64, ProgressState>>,
+    /// Mean per-round wall time of the most recent completed solve,
+    /// nanoseconds (0 until one completes) — the cadence behind the
+    /// `Busy.retry_after_ms` hint.
+    round_ns: AtomicU64,
     /// Registry mirror of the admission counter, for scrapes.
     active_gauge: Arc<Gauge>,
     requests: Arc<Counter>,
     busy_total: Arc<Counter>,
+    resumes: Arc<Counter>,
     request_ns: Arc<Histogram>,
 }
 
@@ -171,10 +200,30 @@ impl ServeState {
             active: Mutex::new(0),
             warm: Mutex::new(Vec::new()),
             progress: Mutex::new(HashMap::new()),
+            round_ns: AtomicU64::new(0),
             active_gauge: reg.gauge("bskp_serve_active"),
             requests: reg.counter("bskp_serve_requests_total"),
             busy_total: reg.counter("bskp_serve_busy_total"),
+            resumes: reg.counter("bskp_serve_resumes_total"),
             request_ns: reg.histogram("bskp_serve_request_ns"),
+        }
+    }
+
+    /// Record a completed solve's cadence for later `Busy` hints.
+    fn note_cadence(&self, solve_ns: u64, rounds: u64) {
+        if rounds > 0 {
+            self.round_ns.store(solve_ns / rounds, Ordering::Relaxed);
+        }
+    }
+
+    /// The `Busy.retry_after_ms` hint: [`RETRY_AFTER_ROUNDS`] observed
+    /// round-times, clamped to [`RETRY_AFTER_BOUNDS_MS`];
+    /// [`DEFAULT_RETRY_AFTER_MS`] before any solve has completed.
+    fn retry_after_ms(&self) -> u64 {
+        match self.round_ns.load(Ordering::Relaxed) {
+            0 => DEFAULT_RETRY_AFTER_MS,
+            per_round => ((per_round / 1_000_000) * RETRY_AFTER_ROUNDS)
+                .clamp(RETRY_AFTER_BOUNDS_MS.0, RETRY_AFTER_BOUNDS_MS.1),
         }
     }
 
@@ -319,7 +368,11 @@ fn handle_solve(
     let _guard = match state.try_admit() {
         Ok(g) => g,
         Err(active) => {
-            return ServeMsg::Busy { active: active as u32, limit: state.limit as u32 }
+            return ServeMsg::Busy {
+                active: active as u32,
+                limit: state.limit as u32,
+                retry_after_ms: state.retry_after_ms(),
+            }
         }
     };
     // the tag goes live before any solve work so a concurrent poller can
@@ -333,7 +386,10 @@ fn handle_solve(
     let dur_ns = clock.now_ns().saturating_sub(t0);
     obs::complete(Track::Serve, names::SERVE_SOLVE, t0, dur_ns, spec.tag, 0);
     match out {
-        Ok((warm_used, report)) => ServeMsg::SolveReply { warm_used, report },
+        Ok((warm_used, report)) => {
+            state.note_cadence(dur_ns, report.iterations as u64);
+            ServeMsg::SolveReply { warm_used, report }
+        }
         Err(e) => ServeMsg::Abort { message: e.to_string() },
     }
 }
@@ -374,22 +430,111 @@ fn run_solve(
     };
     let warm = if spec.warm { state.warm_for(fp) } else { None };
     let warm_used = warm.is_some();
-    let mut session = Solve::on(src)
-        .cluster(pool.clone())
-        .config(config)
-        .algorithm(algorithm)
-        .clock(Arc::clone(clock));
-    if let Some(lambda) = warm {
-        session = session.warm(WarmStart { lambda, provenance: "server warm λ".into() });
-    }
-    let mut observer = RegistryObserver { state, tag: spec.tag };
-    let report = session.run_observed(&mut observer)?;
+    let warm_start =
+        warm.map(|lambda| WarmStart { lambda, provenance: "server warm λ".into() });
+
+    let mut last = LastLambda::default();
+    let first = attempt_solve(spec, src, algorithm, &config, pool, state, clock, warm_start, &mut last);
+    let report = match first {
+        Ok(r) => r,
+        // a runtime / I/O fault mid-solve (lost fleet, vanished
+        // artifacts, disk hiccup) is worth exactly one automatic resume:
+        // re-run the session warm from the freshest λ recoverable — the
+        // store's checkpoint when there is one, else the last in-memory
+        // round λ the observer saw. Config and data errors re-fail
+        // identically, so they are not retried.
+        Err(e @ (Error::Runtime(_) | Error::Io(_))) => {
+            let Some(recovered) = recover_warm(src, &last) else { return Err(e) };
+            if obs::metrics_enabled() {
+                state.resumes.inc();
+            }
+            let mut resumed = LastLambda::default();
+            attempt_solve(
+                spec,
+                src,
+                algorithm,
+                &config,
+                pool,
+                state,
+                clock,
+                Some(recovered),
+                &mut resumed,
+            )?
+        }
+        Err(e) => return Err(e),
+    };
     // only a *converged* λ becomes the warm seed — a cancelled or
     // iteration-capped λ would poison every later warm re-solve
     if report.converged {
         state.store_warm(fp, report.lambda.clone());
     }
     Ok((warm_used, report))
+}
+
+/// One solve attempt: a store-backed instance checkpoints λ as it goes
+/// (so an interrupted attempt resumes from disk, not round zero), and
+/// `last` shadows every round's λ in memory for sources with no store.
+#[allow(clippy::too_many_arguments)]
+fn attempt_solve(
+    spec: &Spec,
+    src: &dyn GroupSource,
+    algorithm: Algorithm,
+    config: &SolverConfig,
+    pool: &Cluster,
+    state: &ServeState,
+    clock: &Arc<dyn Clock>,
+    warm: Option<WarmStart>,
+    last: &mut LastLambda,
+) -> Result<SolveReport> {
+    let mut session = Solve::on(src)
+        .cluster(pool.clone())
+        .config(config.clone())
+        .algorithm(algorithm)
+        .clock(Arc::clone(clock));
+    if src.store_dir().is_some() {
+        session = session.checkpoint_auto(DEFAULT_CHECKPOINT_EVERY);
+    }
+    if let Some(w) = warm {
+        session = session.warm(w);
+    }
+    let mut registry = RegistryObserver { state, tag: spec.tag };
+    let mut chain = ChainObserver::new();
+    chain.push(last);
+    chain.push(&mut registry);
+    session.run_observed(&mut chain)
+}
+
+/// Captures the most recent round's λ of a running solve, so an attempt
+/// that dies mid-flight can be resumed warm even when the instance has
+/// no on-disk checkpoint home.
+#[derive(Default)]
+struct LastLambda {
+    lambda: Vec<f64>,
+    rounds: u64,
+}
+
+impl SolveObserver for LastLambda {
+    fn on_round(&mut self, event: &RoundEvent<'_>) -> ObserverControl {
+        self.lambda = event.lambda.to_vec();
+        self.rounds = event.iter as u64 + 1;
+        ObserverControl::Continue
+    }
+}
+
+/// The freshest λ recoverable after a failed attempt: the store's
+/// checkpoint file when one exists (written by the attempt itself or a
+/// predecessor), else the last in-memory round λ. `None` — no resume —
+/// when the attempt died before its first round with nothing on disk.
+fn recover_warm(src: &dyn GroupSource, last: &LastLambda) -> Option<WarmStart> {
+    if let Some(dir) = src.store_dir() {
+        if let Ok(w) = WarmStart::from_checkpoint(default_checkpoint_path(&dir)) {
+            return Some(w);
+        }
+    }
+    (!last.lambda.is_empty()).then(|| WarmStart {
+        lambda: last.lambda.clone(),
+        provenance: format!("auto-resume after {} in-memory rounds", last.rounds),
+    })
 }
 
 fn handle_query(
@@ -432,5 +577,52 @@ fn handle_progress(tag: u64, after: u64, state: &ServeState) -> ServeMsg {
         // a tag the daemon has not seen yet: empty, not-done — pollers
         // racing the solve's admission just poll again
         None => ServeMsg::ProgressReply { total: 0, done: false, events: Vec::new() },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instance::generator::{GeneratorConfig, SyntheticProblem};
+
+    #[test]
+    fn retry_hint_defaults_then_follows_cadence_within_bounds() {
+        let state = ServeState::new(2);
+        assert_eq!(state.retry_after_ms(), DEFAULT_RETRY_AFTER_MS, "no cadence observed yet");
+
+        // 5 ms rounds: 8 round-times = 40 ms, clamped up to the 100 ms floor
+        state.note_cadence(50_000_000, 10);
+        assert_eq!(state.retry_after_ms(), RETRY_AFTER_BOUNDS_MS.0);
+
+        // 40 ms rounds: 8 round-times = 320 ms, inside the bounds
+        state.note_cadence(400_000_000, 10);
+        assert_eq!(state.retry_after_ms(), 320);
+
+        // glacial 60 s rounds: clamped down to the minute ceiling
+        state.note_cadence(600_000_000_000, 10);
+        assert_eq!(state.retry_after_ms(), RETRY_AFTER_BOUNDS_MS.1);
+
+        // a zero-round solve must not divide by zero or clobber the cadence
+        state.note_cadence(1_000_000, 0);
+        assert_eq!(state.retry_after_ms(), RETRY_AFTER_BOUNDS_MS.1);
+    }
+
+    #[test]
+    fn recover_warm_falls_back_from_checkpoint_to_memory_to_none() {
+        let src = SyntheticProblem::new(GeneratorConfig::dense(50, 3, 3).with_seed(5));
+
+        // nothing on disk (synthetic sources have no store), nothing in
+        // memory: the attempt died before round one — no resume
+        assert!(recover_warm(&src, &LastLambda::default()).is_none());
+
+        // with in-memory rounds the last λ seeds the retry
+        let last = LastLambda { lambda: vec![0.5, 0.25, 0.125], rounds: 7 };
+        let w = recover_warm(&src, &last).expect("in-memory λ must recover");
+        assert_eq!(w.lambda, last.lambda);
+        assert!(
+            w.provenance.contains("7 in-memory rounds"),
+            "provenance must say where the λ came from: {}",
+            w.provenance
+        );
     }
 }

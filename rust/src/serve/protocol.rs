@@ -156,6 +156,7 @@ fn decode_report(d: &mut Dec<'_>) -> Result<SolveReport> {
         wall_ms: d.f64()?,
         history: Vec::new(),
         phases: Default::default(),
+        membership: Vec::new(),
     })
 }
 
@@ -217,8 +218,10 @@ pub(crate) enum ServeMsg {
     /// events from `after` on.
     ProgressReply { total: u64, done: bool, events: Vec<ProgressEvent> },
     /// Admission control refused the solve; retry after a running solve
-    /// finishes.
-    Busy { active: u32, limit: u32 },
+    /// finishes. `retry_after_ms` is the daemon's hint for when that is
+    /// worth trying, derived from the observed per-round cadence of its
+    /// recent solves (a fixed default when it has not completed one yet).
+    Busy { active: u32, limit: u32, retry_after_ms: u64 },
     /// Typed request failure.
     Abort { message: String },
     /// Scrape the daemon's metric registry ([`crate::obs::metrics`]).
@@ -308,8 +311,8 @@ impl ServeMsg {
                     ev.encode(&mut e);
                 }
             }
-            ServeMsg::Busy { active, limit } => {
-                e.u32(*active).u32(*limit);
+            ServeMsg::Busy { active, limit, retry_after_ms } => {
+                e.u32(*active).u32(*limit).u64(*retry_after_ms);
             }
             ServeMsg::Abort { message } => {
                 e.str(message);
@@ -361,7 +364,11 @@ impl ServeMsg {
                     (0..n).map(|_| ProgressEvent::decode(&mut d)).collect::<Result<Vec<_>>>()?;
                 ServeMsg::ProgressReply { total, done, events }
             }
-            k::BUSY => ServeMsg::Busy { active: d.u32()?, limit: d.u32()? },
+            k::BUSY => ServeMsg::Busy {
+                active: d.u32()?,
+                limit: d.u32()?,
+                retry_after_ms: d.u64()?,
+            },
             k::ABORT => ServeMsg::Abort { message: d.str()? },
             k::METRICS => ServeMsg::Metrics,
             k::METRICS_REPLY => ServeMsg::MetricsReply { text: d.str()? },
@@ -415,6 +422,7 @@ mod tests {
             history: Vec::new(),
             wall_ms: 1.25,
             phases: Default::default(),
+            membership: Vec::new(),
         };
         let alloc = GroupAllocation {
             group: 9,
@@ -447,7 +455,7 @@ mod tests {
                     lambda_change: 1e-3,
                 }],
             },
-            ServeMsg::Busy { active: 2, limit: 2 },
+            ServeMsg::Busy { active: 2, limit: 2, retry_after_ms: 1_500 },
             ServeMsg::Abort { message: "nope".into() },
             ServeMsg::Metrics,
             ServeMsg::MetricsReply { text: "# TYPE bskp_x counter\nbskp_x 1\n".into() },
@@ -478,6 +486,7 @@ mod tests {
             history: Vec::new(),
             wall_ms: 0.0,
             phases: Default::default(),
+            membership: Vec::new(),
         };
         let m = ServeMsg::SolveReply { warm_used: false, report };
         let got = roundtrip(&m);

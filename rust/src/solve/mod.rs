@@ -44,10 +44,13 @@ pub use warm::{
 // the observer vocabulary lives next to the solvers; re-export it here so
 // session users need only `use bskp::solve::*`
 pub use crate::solver::stats::{
-    HistoryObserver, ObserverControl, RoundEvent, SolveObserver, SolveReport,
+    HistoryObserver, MembershipChange, MembershipEvent, ObserverControl, RoundEvent,
+    SolveObserver, SolveReport,
 };
 
-use crate::cluster::{Clock, ConnectOptions, RemoteCluster, SystemClock, TcpTransport, Transport};
+use crate::cluster::{
+    Clock, ConnectOptions, NetListener, RemoteCluster, SystemClock, TcpTransport, Transport,
+};
 use crate::coordinator::{Algorithm, Backend};
 use crate::error::Result;
 use crate::instance::problem::GroupSource;
@@ -85,6 +88,7 @@ pub struct Solve<'a> {
     cluster_addrs: Vec<String>,
     transport: Option<Arc<dyn Transport>>,
     connect_opts: Option<ConnectOptions>,
+    join: Option<Box<dyn NetListener>>,
     algorithm: Algorithm,
     backend: Backend,
     warm: Option<WarmStart>,
@@ -105,6 +109,7 @@ impl<'a> Solve<'a> {
             cluster_addrs: Vec::new(),
             transport: None,
             connect_opts: None,
+            join: None,
             algorithm: Algorithm::Scd,
             backend: Backend::Rust,
             warm: None,
@@ -162,6 +167,18 @@ impl<'a> Solve<'a> {
     /// the default is [`crate::cluster::TcpTransport`].
     pub fn transport(mut self, t: Arc<dyn Transport>) -> Self {
         self.transport = Some(t);
+        self
+    }
+
+    /// Admit fresh `bskp worker --join <addr>` processes mid-solve
+    /// through this bound listener: the leader polls it (non-blocking)
+    /// at every deal boundary and deals chunks to admitted workers from
+    /// the next round on. Only meaningful together with
+    /// [`Solve::distributed`]; without an attached fleet the listener is
+    /// dropped and joiners see a closed connection. See
+    /// `docs/cluster-protocol.md` ("Membership lifecycle").
+    pub fn join_listener(mut self, l: Box<dyn NetListener>) -> Self {
+        self.join = Some(l);
         self
     }
 
@@ -258,6 +275,13 @@ impl<'a> Solve<'a> {
         // once a fleet actually attaches, so a failed attach leaves the
         // planned (possibly XLA) backend intact for the in-process run.
         let mut remote: Option<Arc<RemoteCluster>> = None;
+        if self.join.is_some() && self.cluster_addrs.is_empty() {
+            notes.push(PlanNote::new(
+                "executor",
+                "a join listener was configured without distributed() worker addresses; \
+                 mid-solve admission needs an attached fleet, so the listener is dropped",
+            ));
+        }
         if !self.cluster_addrs.is_empty() {
             if self.source.store_dir().is_none() {
                 notes.push(PlanNote::new(
@@ -266,16 +290,17 @@ impl<'a> Solve<'a> {
                      replica of it); this source has none — using the in-process pool",
                 ));
             } else {
-                let transport: &dyn Transport = match &self.transport {
-                    Some(t) => t.as_ref(),
-                    None => &TcpTransport,
+                let transport: Arc<dyn Transport> = match &self.transport {
+                    Some(t) => Arc::clone(t),
+                    None => Arc::new(TcpTransport),
                 };
                 let opts = self.connect_opts.unwrap_or_else(ConnectOptions::from_env);
-                let connected = RemoteCluster::connect_with(
+                let connected = RemoteCluster::connect_elastic(
                     transport,
                     &self.cluster_addrs,
                     self.source,
                     opts,
+                    self.join,
                 );
                 match connected {
                     Ok((rc, skipped)) => {

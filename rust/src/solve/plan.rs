@@ -328,6 +328,12 @@ impl<'a> SolvePlan<'a> {
             ))),
         };
         let mut report = result?;
+        if let Some(r) = &self.remote {
+            // membership changes (losses, redials, admissions,
+            // degradations) in occurrence order — same annotation
+            // discipline as the staged-I/O stats below
+            report.membership = r.membership_events();
+        }
         if let Some(staged) = &self.staged {
             // annotate the report with what the I/O plane did: wait_ms is
             // the compute-visible stall, read_ms the overlapped work

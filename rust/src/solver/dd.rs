@@ -254,6 +254,7 @@ fn dd_drive<S: GroupSource + ?Sized>(
         history,
         wall_ms: 0.0,
         phases,
+        membership: Vec::new(),
     };
     if config.postprocess && !report.is_feasible() {
         let p0 = ClockStopwatch::start(clock);

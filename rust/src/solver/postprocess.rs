@@ -161,6 +161,7 @@ mod tests {
             history: vec![],
             wall_ms: 0.0,
             phases: Default::default(),
+            membership: Vec::new(),
         }
     }
 

@@ -586,6 +586,7 @@ pub fn solve_scd_exec_clocked<S: GroupSource + ?Sized>(
         history,
         wall_ms: 0.0,
         phases,
+        membership: Vec::new(),
     };
     if config.postprocess && !report.is_feasible() {
         let p0 = ClockStopwatch::start(clock);

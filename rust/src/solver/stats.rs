@@ -84,6 +84,50 @@ impl IterStat {
     }
 }
 
+/// What happened to cluster membership, as recorded in
+/// [`SolveReport::membership`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipChange {
+    /// A worker died (wire error / timeout) or a joiner was refused.
+    Lost,
+    /// A transiently-dead worker was re-dialed and re-handshaken back
+    /// into the deal.
+    Redialed,
+    /// A fresh worker was admitted mid-solve through the join listener.
+    Admitted,
+    /// The solve continued below full strength (one note per strength
+    /// transition, not per round).
+    Degraded,
+}
+
+impl MembershipChange {
+    /// Stable lowercase label (JSON reports, logs).
+    pub fn label(&self) -> &'static str {
+        match self {
+            MembershipChange::Lost => "lost",
+            MembershipChange::Redialed => "redialed",
+            MembershipChange::Admitted => "admitted",
+            MembershipChange::Degraded => "degraded",
+        }
+    }
+}
+
+/// One cluster membership change during a distributed solve — losses,
+/// redials, mid-solve admissions, degradations — in occurrence order.
+/// Empty for in-process solves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipEvent {
+    /// Gather round (the leader's round ordinal) the change landed in.
+    pub round: u64,
+    /// Worker slot affected; `None` for fleet-wide notes (degradation,
+    /// refused joins that never got a slot).
+    pub worker: Option<usize>,
+    /// What changed.
+    pub change: MembershipChange,
+    /// Human-readable detail (address, cause).
+    pub detail: String,
+}
+
 /// Final report of a DD/SCD solve.
 #[derive(Debug, Clone)]
 pub struct SolveReport {
@@ -111,6 +155,10 @@ pub struct SolveReport {
     pub wall_ms: f64,
     /// Per-phase timing breakdown and λ-stability skip counters.
     pub phases: PhaseTimings,
+    /// Cluster membership changes during the solve (losses, redials,
+    /// admissions, degradations), in occurrence order; empty for
+    /// in-process solves.
+    pub membership: Vec<MembershipEvent>,
 }
 
 impl SolveReport {
@@ -279,6 +327,7 @@ mod tests {
             history: vec![],
             wall_ms: 1.0,
             phases: PhaseTimings::default(),
+            membership: Vec::new(),
         }
     }
 

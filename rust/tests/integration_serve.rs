@@ -71,7 +71,7 @@ fn bits(xs: &[f64]) -> Vec<u64> {
 fn done(outcome: SolveOutcome) -> serve::ServedSolve {
     match outcome {
         SolveOutcome::Done(s) => s,
-        SolveOutcome::Busy { active, limit } => {
+        SolveOutcome::Busy { active, limit, .. } => {
             panic!("unexpected Busy ({active}/{limit}) from an idle daemon")
         }
     }
@@ -254,7 +254,8 @@ fn concurrent_solve_beyond_admission_gets_typed_busy() {
     assert!(observed_running, "A's 400-round solve ended before publishing a single round");
 
     match client.solve(fixed_rounds_spec(2)).expect("solve request while busy") {
-        SolveOutcome::Busy { active, limit } => {
+        SolveOutcome::Busy { active, limit, retry_after_ms } => {
+            assert!(retry_after_ms >= 100, "retry hint below the 100 ms floor: {retry_after_ms}");
             assert_eq!(limit, 1);
             assert!(active >= 1);
         }

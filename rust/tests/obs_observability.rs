@@ -79,6 +79,7 @@ fn chaos_solve_replays_bit_identical_canonical_span_trace() {
             LinkFaults { drop_prob: 0.15, jitter_ns: 500_000, ..Default::default() },
             LinkFaults { reorder_prob: 0.4, dup_prob: 0.3, ..Default::default() },
         ],
+        ..Default::default()
     };
 
     obs::force_trace(true);

@@ -103,6 +103,9 @@ fn sim_opts() -> ConnectOptions {
         connect_timeout: Duration::from_secs(5),
         exchange_timeout: Duration::from_secs(600),
         exchange: ExchangeMode::Wave,
+        redial_budget: 0,
+        redial_backoff: Duration::from_millis(100),
+        min_workers: 1,
     }
 }
 
@@ -152,6 +155,7 @@ fn same_seed_and_plan_replay_identically() {
             LinkFaults { reorder_prob: 0.4, dup_prob: 0.3, ..Default::default() },
             LinkFaults::default(),
         ],
+        ..Default::default()
     };
 
     let run = |seed: u64| {
@@ -207,6 +211,7 @@ fn drop_reorder_corrupt_and_crash_in_one_solve_still_matches() {
             LinkFaults { reorder_prob: 0.5, jitter_ns: 400_000, ..Default::default() },
             LinkFaults { crash_on_reply: Some(4), ..Default::default() },
         ],
+        ..Default::default()
     };
     let (sim, addrs) = sim_fleet(7, plan, &dir, 4);
     let (fleet, skipped) =
@@ -262,6 +267,7 @@ fn stalled_worker_times_out_virtually_without_real_sleep() {
     // 600 s default exchange timeout (the Welcome at seq 0 stays prompt)
     let plan = FaultPlan {
         links: vec![LinkFaults { stall_after: Some((1, 700_000_000_000)), ..Default::default() }],
+        ..Default::default()
     };
     let (sim, addrs) = sim_fleet(5, plan, &dir, 2);
     let wall = Instant::now();
@@ -360,6 +366,221 @@ fn crash_at_round_redispatches_and_rejoin_serves_new_sessions() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The self-healing property: a worker crashed at a chosen round comes
+/// back (`LinkFaults::redial_after`), the elastic leader redials it on
+/// the backoff schedule — sleeping *virtual* time while below the
+/// `min_workers` quorum — and deals it back in at a round boundary, with
+/// the answer bit-identical to the undisturbed solve. The whole episode
+/// (crash, failed probe, revival, redial) must replay exactly from the
+/// same `(seed, plan)`.
+#[test]
+fn transient_crash_redials_with_backoff_and_heals() {
+    let dir = write_store("redial", 2_000, 59);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    // victim restarts after one bounced re-dial; the leader gets a
+    // 2-redial session budget (probe + successful redial) and a quorum
+    // floor of 2 so the gather waits out the backoff instead of
+    // finishing degraded
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults::default(),
+            LinkFaults { redial_after: Some(1), ..Default::default() },
+        ],
+        ..Default::default()
+    };
+    let opts = ConnectOptions { redial_budget: 2, min_workers: 2, ..sim_opts() };
+
+    let run = |seed: u64| {
+        let (sim, addrs) = sim_fleet(seed, plan.clone(), &dir, 2);
+        let (fleet, skipped) =
+            RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, opts, None)
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let mut killer = CrashAt { sim: &sim, at: 1, victim: 1, done: false };
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, Some(&mut killer))
+            .expect("the healed fleet finishes the solve");
+        let stats = fleet.stats();
+        let membership = fleet.membership_events();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats, membership, sim.trace())
+    };
+
+    let (report, stats, membership, trace) = run(67);
+    assert_reports_match(&report, &baseline, "redial heal");
+    assert_eq!(stats.workers_lost, 1, "the crash must be counted: {stats:?}");
+    assert_eq!(stats.redials, 1, "exactly one successful redial: {stats:?}");
+    assert_eq!(stats.workers_live, 2, "the healed link must serve again: {stats:?}");
+    assert!(stats.redispatches >= 1, "the dead link's chunk must re-queue: {stats:?}");
+    let kinds: Vec<&str> = membership.iter().map(|e| e.change.label()).collect();
+    assert!(
+        kinds.contains(&"lost") && kinds.contains(&"redialed"),
+        "membership must log the loss and the heal: {membership:?}"
+    );
+    assert!(
+        membership.iter().any(|e| e.change.label() == "redialed"
+            && e.worker == Some(1)
+            && e.detail.contains("redialed")),
+        "the redial event must name the slot: {membership:?}"
+    );
+    assert!(
+        trace.iter().any(|e| matches!(e.kind, TraceKind::Crashed))
+            && trace.iter().any(|e| matches!(e.kind, TraceKind::Rejoined)),
+        "crash and revival must both be traced"
+    );
+
+    let (r2, s2, m2, t2) = run(67);
+    assert_eq!(trace, t2, "the healing episode must replay from the same (seed, plan)");
+    assert_eq!(stats, s2, "wire statistics (redials included) must replay");
+    assert_eq!(membership.len(), m2.len(), "membership log must replay");
+    assert_reports_match(&report, &r2, "redial replay");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Mid-solve admission: a fresh worker dials the leader's join listener
+/// at a planned round (`FaultPlan::join_at_round` via
+/// [`SimNet::elastic_observer`]), handshakes `Join`/`Admit`, and serves
+/// chunks from the next deal on — the fleet grows, the answer does not
+/// move, and the admission replays deterministically.
+#[test]
+fn join_mid_solve_expands_the_fleet_without_moving_the_answer() {
+    let dir = write_store("join", 2_000, 73);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    let plan = FaultPlan { join_at_round: vec![(2, 1)], ..Default::default() };
+    let run = |seed: u64| {
+        let (sim, addrs) = sim_fleet(seed, plan.clone(), &dir, 2);
+        let (leader_addr, listener) = sim.add_endpoint();
+        let (fleet, skipped) = RemoteCluster::connect_elastic(
+            Arc::new(sim.transport()),
+            &addrs,
+            &mm,
+            sim_opts(),
+            Some(listener),
+        )
+        .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        assert_eq!(fleet.workers(), 2, "the joiner must not be there yet");
+        let mut joiner = sim.elastic_observer(&dir, &leader_addr);
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, Some(&mut joiner))
+            .expect("the grown fleet finishes the solve");
+        let stats = fleet.stats();
+        let membership = fleet.membership_events();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats, membership, sim.trace())
+    };
+
+    let (report, stats, membership, trace) = run(29);
+    assert_reports_match(&report, &baseline, "mid-solve join");
+    assert_eq!(stats.joins, 1, "exactly one admission: {stats:?}");
+    assert_eq!(stats.workers_total, 3, "the fleet must have grown: {stats:?}");
+    assert_eq!(stats.workers_live, 3, "the joiner must still serve at the end: {stats:?}");
+    assert_eq!(stats.workers_lost, 0, "{stats:?}");
+    assert!(
+        membership.iter().any(|e| e.change.label() == "admitted"
+            && e.worker == Some(2)
+            && e.detail.contains("joined mid-solve")),
+        "the admission must be logged against the new slot: {membership:?}"
+    );
+
+    let (r2, s2, m2, t2) = run(29);
+    assert_eq!(trace, t2, "the admission must replay from the same (seed, plan)");
+    assert_eq!(stats, s2, "wire statistics (joins included) must replay");
+    assert_eq!(membership.len(), m2.len(), "membership log must replay");
+    assert_reports_match(&report, &r2, "join replay");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Quorum policy, fail-fast half: when the live count drops below
+/// `min_workers` and no redial can restore it, the gather fails with a
+/// typed error naming the knob — never a hang, never a silent grind on a
+/// skeleton fleet.
+#[test]
+fn quorum_loss_without_healing_fails_fast_with_typed_error() {
+    let dir = write_store("quorum", 1_500, 79);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(5);
+
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults::default(),
+            LinkFaults { crash_on_reply: Some(2), ..Default::default() },
+        ],
+        ..Default::default()
+    };
+    let (sim, addrs) = sim_fleet(83, plan, &dir, 2);
+    let opts = ConnectOptions { min_workers: 2, ..sim_opts() };
+    let (fleet, skipped) =
+        RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, opts, None)
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    let err = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+        .expect_err("one survivor is below the floor of 2");
+    assert!(matches!(err, bskp::Error::Runtime(_)), "typed error, got: {err}");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("quorum") && msg.contains("PALLAS_MIN_WORKERS"),
+        "the error must name the quorum knob: {msg}"
+    );
+    drop(fleet);
+    sim.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Quorum policy, degraded half: at or above the floor but below full
+/// strength the solve continues and the membership log carries one
+/// `Degraded` note per strength transition — with the exact answer.
+#[test]
+fn degraded_continuation_notes_the_strength_transition() {
+    let dir = write_store("degraded", 2_000, 89);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults::default(),
+            LinkFaults::default(),
+            LinkFaults { crash_on_reply: Some(2), ..Default::default() },
+        ],
+        ..Default::default()
+    };
+    let (sim, addrs) = sim_fleet(97, plan, &dir, 3);
+    let (fleet, skipped) =
+        RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, sim_opts(), None)
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+        .expect("two survivors are above the default floor");
+    let stats = fleet.stats();
+    let membership = fleet.membership_events();
+    drop(fleet);
+    sim.shutdown();
+
+    assert_reports_match(&report, &baseline, "degraded continuation");
+    assert_eq!(stats.workers_lost, 1, "{stats:?}");
+    assert_eq!(stats.workers_live, 2, "{stats:?}");
+    let degraded: Vec<_> =
+        membership.iter().filter(|e| e.change.label() == "degraded").collect();
+    assert_eq!(
+        degraded.len(),
+        1,
+        "one note per strength transition, not per round: {membership:?}"
+    );
+    assert!(
+        degraded[0].detail.contains("2 of 3"),
+        "the note must carry the strength: {:?}",
+        degraded[0]
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The full planned session API runs under the simulator too (the
 /// `Solve::transport` seam): capability planning, executor selection and
 /// fallback notes — a refused worker is skipped with a note, and the
@@ -376,6 +597,7 @@ fn planned_session_runs_on_the_simulator() {
             LinkFaults::default(),
             LinkFaults { refuse_dials: true, ..Default::default() },
         ],
+        ..Default::default()
     };
     let (sim, addrs) = sim_fleet(9, plan, &dir, 2);
     let solve_plan = Solve::on(&mm)
@@ -421,6 +643,7 @@ fn overlap_exchange_matches_wave_bit_identically() {
             LinkFaults::default(),
             LinkFaults { delay_ns: 150_000, ..Default::default() },
         ],
+        ..Default::default()
     };
     let run = |opts: ConnectOptions| {
         let (sim, addrs) = sim_fleet(31, plan.clone(), &dir, 3);
@@ -464,6 +687,7 @@ fn overlap_exchange_replays_deterministically() {
             LinkFaults { reorder_prob: 0.4, dup_prob: 0.3, ..Default::default() },
             LinkFaults::default(),
         ],
+        ..Default::default()
     };
     let run = |seed: u64| {
         let (sim, addrs) = sim_fleet(seed, plan.clone(), &dir, 4);
@@ -503,6 +727,7 @@ fn overlap_exchange_survives_worker_crash() {
             LinkFaults { crash_on_reply: Some(3), ..Default::default() },
             LinkFaults::default(),
         ],
+        ..Default::default()
     };
     let (sim, addrs) = sim_fleet(61, plan, &dir, 3);
     let (fleet, skipped) =
@@ -560,9 +785,14 @@ fn random_plan(rng: &mut Xoshiro256pp, workers: usize) -> FaultPlan {
         if rng.coin(0.07) {
             f.refuse_dials = true;
         }
+        if rng.coin(0.15) {
+            // crashed workers may restart; only sessions that also draw a
+            // redial budget (below) actually heal through it
+            f.redial_after = Some(rng.below(3) as u32);
+        }
         links.push(f);
     }
-    FaultPlan { links }
+    FaultPlan { links, ..Default::default() }
 }
 
 /// The chaos property: random fault plans over {1, 2, 4, 8} sim workers
@@ -592,16 +822,22 @@ fn random_fault_plans_never_hang_or_diverge() {
         let use_dd = rng.coin(0.25);
         let overlap = rng.coin(0.5);
         let plan = random_plan(&mut rng, workers);
+        let redial_budget = rng.below(3) as u32;
         let ctx = format!(
             "case {case} (base seed {base_seed}, case seed {case_seed}, {workers} workers, \
-             {}, {}) — replay with PALLAS_SIM_SEED={base_seed}\nplan: {plan:#?}",
+             {}, {}, redial budget {redial_budget}) — replay with \
+             PALLAS_SIM_SEED={base_seed}\nplan: {plan:#?}",
             if use_dd { "dd" } else { "scd" },
             if overlap { "overlap" } else { "wave" },
         );
 
         let (sim, addrs) = sim_fleet(case_seed, plan, &dir, workers);
-        let opts = if overlap { overlap_opts() } else { sim_opts() };
-        let connected = RemoteCluster::connect_with(&sim.transport(), &addrs, &mm, opts);
+        let opts = ConnectOptions {
+            redial_budget,
+            ..if overlap { overlap_opts() } else { sim_opts() }
+        };
+        let connected =
+            RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, opts, None);
         let outcome = match &connected {
             Ok((fleet, _skipped)) => {
                 if use_dd {

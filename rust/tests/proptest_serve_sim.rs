@@ -188,7 +188,7 @@ fn baselines() -> Baselines {
 /// request (answered it, rejected it, or never received it) — so no
 /// server-side work ever races a later op.
 fn run_case(seed: u64, faults: &LinkFaults, base: &Baselines, ctx: &str) -> Vec<String> {
-    let sim = SimNet::new(seed, FaultPlan { links: vec![faults.clone()] });
+    let sim = SimNet::new(seed, FaultPlan { links: vec![faults.clone()], ..Default::default() });
     let (addr, daemon) = start_daemon(&sim, 2);
     let mut rng = Xoshiro256pp::new(mix64(seed, 0x5E17E));
     let mut transcript = Vec::new();
@@ -226,7 +226,7 @@ fn run_case(seed: u64, faults: &LinkFaults, base: &Baselines, ctx: &str) -> Vec<
                     assert_solve_matches(&s.report, &base.cold, ctx);
                     format!("op{op} solve {}", fmt_solve(s.warm_used, &s.report))
                 }
-                Ok(SolveOutcome::Busy { active, limit }) => {
+                Ok(SolveOutcome::Busy { active, limit, .. }) => {
                     panic!("{ctx}\nsequential driving can never see Busy ({active}/{limit})")
                 }
                 Err(e) => format!("op{op} solve err: {e}"),
@@ -386,7 +386,7 @@ fn client_crash_after_full_request_releases_admission_and_state() {
     // would answer Busy here forever
     let served = match client.solve(chaos_spec()).expect("post-crash solve") {
         SolveOutcome::Done(s) => s,
-        SolveOutcome::Busy { active, limit } => {
+        SolveOutcome::Busy { active, limit, .. } => {
             panic!("crashed client leaked its admission slot ({active}/{limit})")
         }
     };
@@ -417,6 +417,7 @@ fn stalled_reply_trips_the_virtual_read_timeout() {
     let plan = FaultPlan {
         // every reply from seq 0 arrives 700 virtual seconds late
         links: vec![LinkFaults { stall_after: Some((0, 700_000_000_000)), ..Default::default() }],
+        ..Default::default()
     };
     let sim = SimNet::new(9, plan);
     let (addr, daemon) = start_daemon(&sim, 2);
@@ -452,6 +453,7 @@ fn corrupt_request_ends_only_that_session() {
             corrupt_frames: vec![(Dir::ToWorker, 1)],
             ..Default::default()
         }],
+        ..Default::default()
     };
     let sim = SimNet::new(21, plan);
     let (addr, daemon) = start_daemon(&sim, 2);
