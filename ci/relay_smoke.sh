@@ -1,0 +1,100 @@
+#!/usr/bin/env bash
+# Relay-tier smoke test: a real leader solve over 6 worker OS processes
+# with PALLAS_RELAY_FANOUT=2 promotes 2 of them to relays (each combining
+# a 2-leaf subtree), and the final JSON report must match the undisturbed
+# single-process solve field for field — the two-level reduce is a pure
+# topology change. Also regenerates the Figure-8b topology table on the
+# deterministic simulator and asserts the O(relays) fan-in drop.
+# Run from the repo root; requires a release build (or set BIN).
+set -euo pipefail
+
+BIN=${BIN:-rust/target/release/bskp}
+SCRATCH=$(mktemp -d)
+STORE="$SCRATCH/store"
+
+cleanup() {
+  # pid files, not a shell array: start_worker runs inside $(...) command
+  # substitution, so variable mutations there never reach this shell
+  for f in "$SCRATCH"/*.pid; do
+    [ -e "$f" ] && kill "$(cat "$f")" 2>/dev/null || true
+  done
+  rm -rf "$SCRATCH"
+}
+trap cleanup EXIT
+
+"$BIN" gen --n 40000 --m 8 --k 8 --seed 11 --shard 512 --out "$STORE" --quiet
+
+start_worker() { # $1: log file
+  "$BIN" worker --listen 127.0.0.1:0 --store "$STORE" --workers 2 >"$1" &
+  echo $! >"$1.pid"
+  for _ in $(seq 50); do
+    addr=$(sed -n 's/.*listening on \([0-9.:]*\).*/\1/p' "$1")
+    [ -n "$addr" ] && { echo "$addr"; return; }
+    sleep 0.1
+  done
+  echo "worker failed to announce ($1):" >&2
+  cat "$1" >&2
+  exit 1
+}
+
+# the undisturbed oracle
+"$BIN" solve --from "$STORE" --iters 40 --shard 256 \
+  --json "$SCRATCH/single.json" --quiet
+
+ADDRS=""
+for i in $(seq 6); do
+  ADDR=$(start_worker "$SCRATCH/w$i.log")
+  ADDRS="${ADDRS:+$ADDRS,}$ADDR"
+done
+echo "6 workers up at $ADDRS"
+
+# fanout 2 over 6 workers: ⌈6/3⌉ = 2 relays, each dealt a 2-leaf subtree
+PALLAS_RELAY_FANOUT=2 \
+  "$BIN" solve --from "$STORE" --iters 40 --shard 256 \
+  --cluster "$ADDRS" \
+  --json "$SCRATCH/relay.json" >"$SCRATCH/solve.log"
+cat "$SCRATCH/solve.log"
+
+python3 - "$SCRATCH/single.json" "$SCRATCH/relay.json" <<'EOF'
+import json, sys
+
+single = json.load(open(sys.argv[1]))
+relay = json.load(open(sys.argv[2]))
+
+assert relay["plan"]["executor"] == "distributed", relay["plan"]
+
+a, b = single["report"], relay["report"]
+for key in ["lambda", "primal_value", "dual_value", "n_selected",
+            "iterations", "converged", "consumption", "dropped_groups"]:
+    assert a[key] == b[key], f"report.{key} differs: {a[key]} vs {b[key]}"
+
+net = relay["cluster"]
+assert net["workers_total"] == 6 and net["workers_live"] == 6, net
+assert net["relays"] == 2, f"expected 2 relays at fanout 2 over 6 workers: {net}"
+assert net["frames_sent"] > 0 and net["frames_received"] > 0, net
+# the tier's point: the leader hears O(relays) aggregate frames per
+# gather, far fewer than the 64 chunk partials a flat deal returns
+per_round = net["frames_received"] / max(net["rounds"], 1)
+assert per_round <= 16, f"leader fan-in did not drop: {per_round} frames/round ({net})"
+print(f"relay smoke OK: {b['iterations']} iters, primal {b['primal_value']:.2f}, "
+      f"{net['relays']} relays, {per_round:.1f} frames/round at the leader")
+EOF
+
+# Figure-8b: flat vs two-level on the simulated fleet at {4,8,16,32}
+# workers; the bench itself asserts bit-identical λ and the fan-in drop
+TOPO_OUT=${BENCH_TOPOLOGY_OUT:-rust/BENCH_topology.json}
+BENCH_TOPOLOGY_ONLY=1 BENCH_TOPOLOGY_OUT="$TOPO_OUT" \
+  cargo bench --manifest-path rust/Cargo.toml --bench fig8_distributed
+
+python3 - "$TOPO_OUT" <<'EOF'
+import json, sys
+
+table = json.load(open(sys.argv[1]))
+assert table["bench"] == "fig8_topology", table
+for row in table["rows"]:
+    assert row["hier_recv_per_round"] < row["flat_recv_per_round"], row
+    assert row["hier_recv_per_round"] <= row["relays"] + 1, row
+print("topology table OK:", ", ".join(
+    f"w={r['workers']}: {r['flat_recv_per_round']:.0f}→{r['hier_recv_per_round']:.0f}"
+    for r in table["rows"]))
+EOF

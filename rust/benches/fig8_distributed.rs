@@ -46,7 +46,112 @@ fn spawn_worker(store: &std::path::Path) -> Worker {
     Worker { child, addr }
 }
 
+/// **Figure 8b** — flat vs two-level reduce topology on the deterministic
+/// simulator: {4, 8, 16, 32} workers, 64-shard store (64 chunks per
+/// gather), fanout ⌈√w⌉. The interesting number is the leader's
+/// per-gather receive count: O(chunks) flat, O(relays) two-level — with
+/// the λ bit-identical across topologies. Writes the table as JSON to
+/// `BENCH_topology.json` (override with `BENCH_TOPOLOGY_OUT`).
+fn topology_bench() {
+    use bskp::cluster::{
+        ConnectOptions, Exec, ExchangeMode, FaultPlan, RelayFanout, RemoteCluster, SimNet,
+    };
+    use bskp::solver::scd::solve_scd_exec;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    common::banner(
+        "Figure 8b: reduce topology (flat vs two-level relay tier, simulated fleet)",
+        "N=12800 M=6 K=6 sparse, 64 shards, 6 SCD rounds, fanout ⌈√w⌉",
+    );
+    let dir = std::env::temp_dir().join(format!("bskp_fig8_topo_{}", std::process::id()));
+    let p = SyntheticProblem::new(GeneratorConfig::sparse(12_800, 6, 6).with_seed(8));
+    p.write_shards(&dir, 200, &common::cluster()).expect("write store");
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = SolverConfig {
+        max_iters: 6,
+        tol: 1e-15,
+        shard_size: Some(200),
+        ..Default::default()
+    };
+    let base = solve_scd(&mm, &cfg, &common::cluster()).expect("in-process solve");
+
+    let opts = |fanout: RelayFanout| ConnectOptions {
+        connect_timeout: Duration::from_secs(5),
+        exchange_timeout: Duration::from_secs(600),
+        exchange: ExchangeMode::Wave,
+        redial_budget: 0,
+        redial_backoff: Duration::from_millis(100),
+        min_workers: 1,
+        relay_fanout: fanout,
+    };
+    let run = |w: usize, fanout: RelayFanout| {
+        let sim = SimNet::new(8, FaultPlan::healthy());
+        let addrs: Vec<String> = (0..w).map(|_| sim.add_worker(&dir, 1)).collect();
+        let (fleet, skipped) = RemoteCluster::connect_elastic(
+            Arc::new(sim.transport()),
+            &addrs,
+            &mm,
+            opts(fanout),
+            None,
+        )
+        .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let report =
+            solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None).expect("sim solve");
+        let stats = fleet.stats();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats)
+    };
+
+    let mut rows = Vec::new();
+    for w in [4usize, 8, 16, 32] {
+        let fanout = (w as f64).sqrt().ceil() as usize;
+        let (flat, fs) = run(w, RelayFanout::Flat);
+        let (hier, hs) = run(w, RelayFanout::Leaves(fanout));
+        assert_eq!(flat.lambda, base.lambda, "flat λ must match in-process bit-exactly");
+        assert_eq!(hier.lambda, flat.lambda, "two-level λ must match flat bit-exactly");
+        assert_eq!(fs.relays, 0, "{fs:?}");
+        let flat_rr = fs.frames_received as f64 / fs.rounds.max(1) as f64;
+        let hier_rr = hs.frames_received as f64 / hs.rounds.max(1) as f64;
+        assert!(
+            hier_rr < flat_rr,
+            "the tier must shrink the leader's per-gather receive count: \
+             w={w} flat {flat_rr} vs hier {hier_rr}"
+        );
+        println!(
+            "w={w:>2}: flat {flat_rr:>5.1} recv/gather | two-level (fanout {fanout}, \
+             {:>2} relays) {hier_rr:>5.1} recv/gather — {:.0}× fewer",
+            hs.relays,
+            flat_rr / hier_rr,
+        );
+        rows.push(format!(
+            "    {{\"workers\": {w}, \"fanout\": {fanout}, \"relays\": {}, \
+             \"flat_recv_per_round\": {flat_rr:.1}, \"hier_recv_per_round\": {hier_rr:.1}}}",
+            hs.relays
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fig8_topology\",\n  \"n_shards\": 64,\n  \
+         \"chunks_per_round\": 64,\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let out =
+        std::env::var("BENCH_TOPOLOGY_OUT").unwrap_or_else(|_| "BENCH_topology.json".into());
+    std::fs::write(&out, json).expect("write topology table");
+    println!("topology table written to {out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 fn main() {
+    // BENCH_TOPOLOGY_ONLY=1 runs just the (cheap, simulated) topology
+    // comparison — what CI archives; BENCH_TOPOLOGY=1 appends it to the
+    // full process-fleet bench
+    if std::env::var("BENCH_TOPOLOGY_ONLY").as_deref() == Ok("1") {
+        topology_bench();
+        return;
+    }
     let n: usize = if common::full_scale() { 2_000_000 } else { 200_000 };
     common::banner(
         "Figure 8: distributed scaling (leader + {1,2,4} worker processes over TCP)",
@@ -110,5 +215,8 @@ fn main() {
 
     if std::env::var("BSKP_STORE_DIR").is_err() {
         std::fs::remove_dir_all(&dir).ok();
+    }
+    if std::env::var("BENCH_TOPOLOGY").as_deref() == Ok("1") {
+        topology_bench();
     }
 }

@@ -264,7 +264,7 @@ pub fn cmd_worker(args: &Args) -> Result<()> {
         use std::io::Write as _;
         std::io::stdout().flush().ok();
         return crate::cluster::worker::join_net(
-            &crate::cluster::TcpTransport,
+            std::sync::Arc::new(crate::cluster::TcpTransport),
             &leader,
             &problem,
             &pool,
@@ -780,6 +780,9 @@ fn cmd_solve_impl(args: &Args, require_warm: bool) -> Result<()> {
             }
             if s.joins > 0 {
                 extras.push_str(&format!(", {} joined mid-solve", s.joins));
+            }
+            if s.relays > 0 {
+                extras.push_str(&format!(", {} relays", s.relays));
             }
             println!(
                 "  cluster         : {}/{} workers live, {} rounds, {} B out / {} B in{}",

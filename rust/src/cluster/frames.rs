@@ -3,7 +3,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic      0x53_4C_4C_50 ("PLLS" little-endian)
-//! 4       2     version    wire protocol version (1)
+//! 4       2     version    wire protocol version (2)
 //! 6       2     kind       message kind (see protocol::Msg)
 //! 8       8     len        payload length in bytes
 //! 16      len   payload    message body (little-endian, wire::Enc)
@@ -32,8 +32,11 @@ use std::io::{Read, Write};
 pub(crate) const MAGIC: u32 = u32::from_le_bytes(*b"PLLS");
 
 /// Wire protocol version. Bump on any frame- or message-layout change;
-/// the handshake refuses mismatched peers.
-pub(crate) const VERSION: u16 = 1;
+/// the handshake refuses mismatched peers. Version 2 widened the
+/// handshake fingerprint display to the full 64-bit hashes, added the
+/// shard-replica span to `Welcome`/`Join`, and introduced the
+/// relay-tier kinds 13–15.
+pub(crate) const VERSION: u16 = 2;
 
 /// Upper bound on a frame payload (1 GiB). Real partials are far smaller;
 /// the cap stops a corrupt length prefix from provoking an absurd
@@ -43,7 +46,7 @@ pub(crate) const MAX_PAYLOAD: u64 = 1 << 30;
 const HEADER_LEN: usize = 16;
 
 /// Frame kinds of the serve plane (`bskp serve`, [`crate::serve`]). The
-/// worker plane owns kinds 1–12 ([`super::protocol::Msg`]); serve kinds
+/// worker plane owns kinds 1–15 ([`super::protocol::Msg`]); serve kinds
 /// start at 32 so the two request vocabularies can never be confused —
 /// and because the kind seeds the frame checksum, a frame replayed across
 /// planes fails verification outright.

@@ -50,6 +50,25 @@
 //! `SolveReport::membership`), the metrics registry and the flight
 //! recorder.
 //!
+//! **The relay tier.** With `PALLAS_RELAY_FANOUT` ([`RelayFanout`]) the
+//! leader promotes some workers to *relays* at the deal boundary: each
+//! relay is dealt a subtree of leaf workers (`RelayAssign`), the leader
+//! hands the leaves' connections off to it, and from then on exchanges
+//! contiguous *runs* of chunks with the relays instead of single chunks
+//! with every worker — the per-round receive count drops from O(workers)
+//! to O(relays). A relay splits its run on the identical global chunk
+//! grid ([`crate::cluster::chunk_plan`]), fans sub-chunks over its
+//! subtree and merges the partials in ascending chunk order before
+//! replying with one `RelayPartial`, so the leader's final merge sees the
+//! same operands in the same order as a flat gather: **flat and two-level
+//! topologies are bit-identical** for any relay count. Leaf failures are
+//! absorbed relay-side (local recompute; the loss is reported in the
+//! envelope); a relay failure re-queues its runs, invalidates the cached
+//! topology and the next boundary re-parents the orphaned subtree onto
+//! survivors — or back to direct exchanges when no relay remains. The
+//! tier requires a retained transport (the [`RemoteCluster::connect_with`]
+//! path stays structurally flat).
+//!
 //! All timing goes through the transport's [`Clock`]: wall time on TCP,
 //! virtual time under [`super::sim`] — which is how a 10-minute exchange
 //! timeout can fire in microseconds of test time.
@@ -66,7 +85,7 @@ use crate::error::{Error, Result};
 use crate::instance::problem::GroupSource;
 use crate::instance::shard::Shards;
 use crate::mapreduce::Cluster;
-use crate::obs::metrics::{Counter, Histogram};
+use crate::obs::metrics::{Counter, Gauge, Histogram};
 use crate::obs::{names, Track};
 use crate::solver::config::ReduceMode;
 use crate::solver::rounds::RoundAgg;
@@ -107,16 +126,48 @@ const REDIAL_BACKOFF_CAP_MS: u64 = 30_000;
 /// pre-elastic behavior).
 const DEFAULT_MIN_WORKERS: u64 = 1;
 
-/// Chunks per round: a pure function of the shard count — deliberately
-/// **independent of worker count and liveness**, so the chunk partition
-/// (and with it the merge order of every compensated sum) is identical
-/// for any fleet size and any mid-round failure pattern. 64 chunks give
-/// fine-grained dealing and re-dispatch for any realistic fleet while
-/// keeping per-round frame counts and per-chunk accumulators bounded.
-const CHUNKS_PER_ROUND: usize = 64;
+/// Minimum live fleet before [`RelayFanout::Auto`] engages the two-level
+/// tier: below this, a relay layer only adds a hop without shrinking the
+/// leader's fan-in meaningfully.
+const AUTO_RELAY_MIN_WORKERS: usize = 6;
 
-fn chunk_count(n_shards: usize) -> usize {
-    n_shards.min(CHUNKS_PER_ROUND)
+/// The two-level reduce topology policy (`PALLAS_RELAY_FANOUT`). The
+/// chunk partition and merge order are identical in every mode, so the
+/// solve result is bit-identical flat or two-level — the policy only
+/// moves where partials are combined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelayFanout {
+    /// Single-level gather: the leader exchanges with every worker
+    /// directly (`PALLAS_RELAY_FANOUT=flat|off|0`).
+    Flat,
+    /// Derive the fanout as ⌈√W⌉ leaves per relay from the live worker
+    /// count, engaging only once the fleet reaches
+    /// [`AUTO_RELAY_MIN_WORKERS`]. The default.
+    Auto,
+    /// Exactly this many leaves per relay; engages from 2 live workers.
+    Leaves(usize),
+}
+
+impl RelayFanout {
+    /// The environment-configured policy: unset/`auto` → [`Auto`],
+    /// `flat`/`off`/`0` → [`Flat`], an integer n ≥ 1 → [`Leaves`]`(n)`
+    /// (unparsable values fall back to [`Auto`]).
+    ///
+    /// [`Auto`]: RelayFanout::Auto
+    /// [`Flat`]: RelayFanout::Flat
+    /// [`Leaves`]: RelayFanout::Leaves
+    pub fn from_env() -> Self {
+        match std::env::var("PALLAS_RELAY_FANOUT").ok().as_deref() {
+            Some("flat") | Some("off") | Some("0") => RelayFanout::Flat,
+            Some("auto") | Some("") | None => RelayFanout::Auto,
+            Some(v) => v
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .map(RelayFanout::Leaves)
+                .unwrap_or(RelayFanout::Auto),
+        }
+    }
 }
 
 /// How the leader waits on its per-round exchange.
@@ -182,6 +233,11 @@ pub struct ConnectOptions {
     /// at or above it but below full strength the solve continues with a
     /// `Degraded` membership note.
     pub min_workers: usize,
+    /// Two-level reduce policy (`PALLAS_RELAY_FANOUT`, see
+    /// [`RelayFanout`]). Only effective on sessions with a retained
+    /// transport ([`RemoteCluster::connect_elastic`]); the
+    /// borrowed-transport path stays flat.
+    pub relay_fanout: RelayFanout,
 }
 
 impl ConnectOptions {
@@ -202,6 +258,7 @@ impl ConnectOptions {
                 DEFAULT_REDIAL_BACKOFF_MS,
             ),
             min_workers: env_count("PALLAS_MIN_WORKERS", DEFAULT_MIN_WORKERS).max(1) as usize,
+            relay_fanout: RelayFanout::from_env(),
         }
     }
 }
@@ -238,6 +295,14 @@ pub struct NetSnapshot {
     pub workers_total: usize,
     /// Advertised map-thread capacity across all session workers.
     pub capacity: usize,
+    /// Protocol frames written by the leader (tasks, control).
+    pub frames_sent: u64,
+    /// Protocol frames read by the leader (partials, control replies).
+    /// Under a relay topology this grows O(relays) per round instead of
+    /// O(workers) — the observable the relay tier exists to shrink.
+    pub frames_received: u64,
+    /// Relays active in the current topology (0 when flat).
+    pub relays: usize,
 }
 
 /// What one wave exchange produced (processed in deal order, so queue
@@ -280,6 +345,143 @@ impl SlotRun {
     }
 }
 
+/// The installed two-level topology: which slots are relays, which leaf
+/// slots each relay was dealt (in `RelayAssign` order — `RelayPartial`
+/// loss reports index this list, so dead or unreached leaves keep their
+/// position), and which slots still exchange directly with the leader.
+#[derive(Clone)]
+struct Topology {
+    /// `(relay slot, leaf slots in assignment order)` per subtree.
+    subtrees: Vec<(usize, Vec<usize>)>,
+    /// Slots the leader exchanges with directly (demoted relays whose
+    /// whole subtree was unreachable land here too).
+    direct: Vec<usize>,
+    /// `(alive slots, fanout)` the topology was built for — any
+    /// membership or policy change misses this stamp and forces a
+    /// rebuild at the next deal boundary.
+    stamp: (Vec<usize>, usize),
+}
+
+/// One relay candidate for [`plan_topology`]: everything the placement
+/// needs to know about an alive slot, decoupled from the link structs so
+/// the planner is a pure, unit-testable function.
+struct TopoSlot {
+    slot: usize,
+    /// The leader currently holds this slot's stream (promoting it to
+    /// relay costs nothing; a delegated slot would need a reattach dial).
+    live_stream: bool,
+    /// Shard-index span `[lo, hi)` the worker's store replica advertises.
+    span: (u64, u64),
+    /// Already serving as a relay — preferred, to keep placements sticky
+    /// across rebuilds that don't change the fleet shape.
+    is_relay_now: bool,
+}
+
+/// What [`plan_topology`] decided (slot indices only — the leader turns
+/// it into an installed [`Topology`] by reattaching, detaching and
+/// dealing `RelayAssign`s).
+struct TopologyPlan {
+    subtrees: Vec<(usize, Vec<usize>)>,
+    direct: Vec<usize>,
+}
+
+/// What one relay exchange pass produced (processed in deal order).
+struct RelayRun {
+    /// Aggregate partials that arrived: `(first chunk, chunk span,
+    /// subtree-merged partial)`.
+    done: Vec<(usize, usize, Msg)>,
+    /// Chunks the dead relay never answered, for re-dispatch.
+    lost_chunks: Vec<usize>,
+    /// Leaf *slots* the relay reported lost while recovering (their work
+    /// was recomputed relay-side — membership bookkeeping only, no
+    /// re-dispatch).
+    leaf_losses: Vec<usize>,
+    /// Why the relay died, when it did.
+    loss: Option<String>,
+    /// A protocol-level abort: the round (and solve) must fail.
+    fatal: Option<String>,
+}
+
+impl RelayRun {
+    fn new() -> Self {
+        Self {
+            done: Vec::new(),
+            lost_chunks: Vec::new(),
+            leaf_losses: Vec::new(),
+            loss: None,
+            fatal: None,
+        }
+    }
+}
+
+/// What one hierarchical uplink produced (a relay's aggregate run or a
+/// direct slot's per-chunk run).
+enum HierRun {
+    Relay(usize, RelayRun),
+    Direct(usize, SlotRun),
+}
+
+/// Pure relay placement over the alive slots. Subtree `i` of `r` is
+/// nominally responsible for shards `[i·S/r, (i+1)·S/r)`; its relay is
+/// the unused streamed candidate preferring (1) a replica span covering
+/// that range — the relay can recompute any leaf loss from local data —
+/// then (2) an incumbent relay, then (3) the lowest slot, so the plan is
+/// deterministic. Remaining candidates become leaves, round-robin in
+/// slot order (hot-joins land in the emptiest subtree); with no relays
+/// everyone exchanges directly.
+fn plan_topology(cands: &[TopoSlot], fanout: usize, n_shards: usize) -> TopologyPlan {
+    let w = cands.len();
+    let streamed = cands.iter().filter(|c| c.live_stream).count();
+    let want_r = w.div_ceil(fanout.max(1) + 1);
+    let r = if w < 2 { 0 } else { want_r.min(streamed) };
+    if r == 0 {
+        return TopologyPlan {
+            subtrees: Vec::new(),
+            direct: cands.iter().map(|c| c.slot).collect(),
+        };
+    }
+    let mut used = vec![false; w];
+    let mut subtrees: Vec<(usize, Vec<usize>)> = Vec::with_capacity(r);
+    for i in 0..r {
+        let (range_lo, range_hi) = (
+            (i * n_shards / r) as u64,
+            ((i + 1) * n_shards / r) as u64,
+        );
+        let pick = cands
+            .iter()
+            .enumerate()
+            .filter(|(ci, c)| !used[*ci] && c.live_stream)
+            .min_by_key(|(_, c)| {
+                let covers = c.span.0 <= range_lo && c.span.1 >= range_hi;
+                (!covers as u8, !c.is_relay_now as u8, c.slot)
+            });
+        match pick {
+            Some((ci, c)) => {
+                used[ci] = true;
+                subtrees.push((c.slot, Vec::new()));
+            }
+            None => break,
+        }
+    }
+    if subtrees.is_empty() {
+        return TopologyPlan {
+            subtrees: Vec::new(),
+            direct: cands.iter().map(|c| c.slot).collect(),
+        };
+    }
+    let n_sub = subtrees.len();
+    for (i, leaf) in cands
+        .iter()
+        .enumerate()
+        .filter(|(ci, _)| !used[*ci])
+        .map(|(_, c)| c.slot)
+        .enumerate()
+    {
+        subtrees[i % n_sub].1.push(leaf);
+    }
+    TopologyPlan { subtrees, direct: Vec::new() }
+}
+
 /// Leader-side registry handles, resolved once per session so the hot
 /// exchange paths bump atomics and never look a metric up by name
 /// ([`crate::obs::metrics`]). Per-link breakdowns live in the span trace
@@ -296,6 +498,10 @@ struct LeaderObs {
     redials: Arc<Counter>,
     joins: Arc<Counter>,
     degraded: Arc<Counter>,
+    relays_active: Arc<Gauge>,
+    relay_assigns: Arc<Counter>,
+    relay_partials: Arc<Counter>,
+    relay_leaf_losses: Arc<Counter>,
 }
 
 impl LeaderObs {
@@ -312,6 +518,10 @@ impl LeaderObs {
             redials: r.counter("bskp_cluster_redials_total"),
             joins: r.counter("bskp_cluster_joins_total"),
             degraded: r.counter("bskp_cluster_degraded_total"),
+            relays_active: r.gauge("bskp_cluster_relays_active"),
+            relay_assigns: r.counter("bskp_cluster_relay_assigns_total"),
+            relay_partials: r.counter("bskp_cluster_relay_partials_total"),
+            relay_leaf_losses: r.counter("bskp_cluster_relay_leaf_losses_total"),
         }
     }
 }
@@ -342,6 +552,13 @@ pub struct RemoteCluster {
     /// strength) — dedupes the note to strength *transitions*, not
     /// rounds.
     degraded_live: AtomicUsize,
+    /// The current two-level topology, rebuilt lazily at deal boundaries
+    /// when membership or policy changes (`None` — flat — until the relay
+    /// tier first engages).
+    topology: Mutex<Option<Topology>>,
+    /// Subtree count of the current topology (mirrors the
+    /// `bskp_cluster_relays_active` gauge for [`RemoteCluster::stats`]).
+    relays_active: AtomicUsize,
     obs: LeaderObs,
 }
 
@@ -449,6 +666,8 @@ impl RemoteCluster {
             join: join.map(Mutex::new),
             events: Mutex::new(Vec::new()),
             degraded_live: AtomicUsize::new(usize::MAX),
+            topology: Mutex::new(None),
+            relays_active: AtomicUsize::new(0),
             obs: LeaderObs::new(),
         };
         Ok((fleet, skipped))
@@ -468,9 +687,9 @@ impl RemoteCluster {
         self.slots.read().unwrap().len()
     }
 
-    /// Workers still live.
+    /// Workers still live (directly linked or delegated to a relay).
     pub fn workers_live(&self) -> usize {
-        self.slots.read().unwrap().iter().filter(|s| s.lock().unwrap().is_live()).count()
+        self.slots.read().unwrap().iter().filter(|s| s.lock().unwrap().is_alive()).count()
     }
 
     /// Total advertised map-thread capacity (drives shard planning).
@@ -507,7 +726,7 @@ impl RemoteCluster {
         let (mut workers_live, mut capacity) = (0, 0);
         for slot in slots.iter() {
             let link = slot.lock().unwrap();
-            workers_live += link.is_live() as usize;
+            workers_live += link.is_alive() as usize;
             capacity += link.threads;
         }
         NetSnapshot {
@@ -522,6 +741,9 @@ impl RemoteCluster {
             workers_live,
             workers_total: slots.len(),
             capacity,
+            frames_sent: c.frames_sent.load(Ordering::Relaxed),
+            frames_received: c.frames_received.load(Ordering::Relaxed),
+            relays: self.relays_active.load(Ordering::Relaxed),
         }
     }
 
@@ -540,7 +762,9 @@ impl RemoteCluster {
         let slots = self.slots.read().unwrap().clone();
         for (slot, link) in slots.iter().enumerate() {
             let mut link = link.lock().unwrap();
-            if link.is_live()
+            // is_alive, not is_live: a delegated leaf's stream was handed
+            // to its relay on purpose — redialing it would steal it back
+            if link.is_alive()
                 || link.permanent
                 || link.redials_spent >= self.opts.redial_budget
                 || self.clock.now_ns() < link.next_redial_at_ns
@@ -606,7 +830,7 @@ impl RemoteCluster {
             .iter()
             .filter_map(|slot| {
                 let link = slot.lock().unwrap();
-                (!link.is_live()
+                (!link.is_alive()
                     && !link.permanent
                     && link.redials_spent < self.opts.redial_budget)
                     .then_some(link.next_redial_at_ns)
@@ -662,13 +886,14 @@ impl RemoteCluster {
 
     fn admit_one(&self, round: u64, stream: Box<dyn NetStream>) {
         match self.join_handshake(stream) {
-            Ok((threads, stream)) => {
+            Ok((threads, span, stream)) => {
                 let addr = stream.peer();
                 let slot = {
                     let mut slots = self.slots.write().unwrap();
                     slots.push(Arc::new(Mutex::new(WorkerLink::admitted(
                         addr.clone(),
                         threads as usize,
+                        span,
                         stream,
                     ))));
                     slots.len() - 1
@@ -711,12 +936,14 @@ impl RemoteCluster {
     fn join_handshake(
         &self,
         mut stream: Box<dyn NetStream>,
-    ) -> Result<(u32, Box<dyn NetStream>)> {
+    ) -> Result<(u32, (u64, u64), Box<dyn NetStream>)> {
         stream.set_read_timeout(Some(self.opts.connect_timeout))?;
         stream.set_write_timeout(Some(self.opts.connect_timeout))?;
         let (msg, _) = recv_msg(&mut stream)?;
-        let (threads, theirs) = match msg {
-            Msg::Join { threads, fingerprint } => (threads, fingerprint),
+        let (threads, theirs, span) = match msg {
+            Msg::Join { threads, fingerprint, shard_lo, shard_hi } => {
+                (threads, fingerprint, (shard_lo, shard_hi))
+            }
             other => {
                 let _ = send_msg(
                     &mut stream,
@@ -739,7 +966,7 @@ impl RemoteCluster {
         send_msg(&mut stream, &Msg::Admit)?;
         stream.set_read_timeout(Some(self.opts.exchange_timeout))?;
         stream.set_write_timeout(Some(self.opts.exchange_timeout))?;
-        Ok((threads, stream))
+        Ok((threads, span, stream))
     }
 
     /// Dispatch one round: cut `[0, n_shards)` into chunks, deal them to
@@ -760,23 +987,28 @@ impl RemoteCluster {
         // the gather ordinal doubles as the round index in span-context
         // frame extensions and EXCHANGE span arguments
         let round = self.counters.rounds.load(Ordering::Relaxed);
-        let n_chunks = chunk_count(n_shards);
-        let per = n_shards.div_ceil(n_chunks);
-        let n_chunks = n_shards.div_ceil(per);
+        let (per, n_chunks) =
+            crate::cluster::chunk_plan(n_shards, crate::cluster::CHUNKS_PER_ROUND);
         let mut pending: VecDeque<usize> = (0..n_chunks).collect();
         let mut results: Vec<Option<Msg>> = (0..n_chunks).map(|_| None).collect();
+        // subtree aggregates from relay exchanges: (first chunk, chunk
+        // span, merged partial) — kept apart from `results` because one
+        // entry covers a contiguous run of chunks
+        let mut hier_done: Vec<(usize, usize, Msg)> = Vec::new();
         let mut last_loss = String::new();
 
         while !pending.is_empty() {
             // every membership change happens here, at the deal boundary:
-            // drain the join listener, then redial transiently-dead links
-            // whose backoff elapsed — so the deal below stays a pure
-            // function of (pending, live) and sim traces stay replayable
+            // drain the join listener, redial transiently-dead links whose
+            // backoff elapsed, then revalidate the relay topology — so the
+            // deal below stays a pure function of (pending, topology) and
+            // sim traces stay replayable
             self.admit_joiners(round);
             self.heal(round);
+            let topology = self.ensure_topology(round, n_shards);
             let slots: Vec<Arc<Mutex<WorkerLink>>> = self.slots.read().unwrap().clone();
             let live: Vec<usize> =
-                (0..slots.len()).filter(|&i| slots[i].lock().unwrap().is_live()).collect();
+                (0..slots.len()).filter(|&i| slots[i].lock().unwrap().is_alive()).collect();
             if live.is_empty() || live.len() < self.opts.min_workers {
                 // healing may still restore quorum: wait out the earliest
                 // redial deadline (a virtual sleep under sim) and retry
@@ -786,7 +1018,8 @@ impl RemoteCluster {
                         .sleep(Duration::from_nanos(at_ns.saturating_sub(now).max(1)));
                     continue;
                 }
-                let done = results.iter().filter(|r| r.is_some()).count();
+                let done = results.iter().filter(|r| r.is_some()).count()
+                    + hier_done.iter().map(|&(_, span, _)| span).sum::<usize>();
                 let failure = if last_loss.is_empty() {
                     String::new()
                 } else {
@@ -808,6 +1041,23 @@ impl RemoteCluster {
                 )));
             }
             self.note_degraded(round, live.len(), slots.len());
+            if let Some(topo) = topology {
+                self.hier_step(
+                    round,
+                    per,
+                    n_shards,
+                    &slots,
+                    &topo,
+                    &mut pending,
+                    &mut results,
+                    &mut hier_done,
+                    &mut last_loss,
+                    &task,
+                )?;
+                continue;
+            }
+            // flat: ensure_topology flattened any prior relay tier, so no
+            // alive slot is delegated here and is_alive == is_live
             match self.opts.exchange {
                 ExchangeMode::Wave => self.wave_step(
                     round,
@@ -841,7 +1091,18 @@ impl RemoteCluster {
             self.obs.gather_rounds.inc();
             self.obs.gather_latency_ns.observe(dur_ns);
         }
-        Ok(results.into_iter().map(|r| r.expect("all chunks gathered")).collect())
+        // assemble in ascending chunk order: per-chunk partials and
+        // subtree aggregates interleave on the same global chunk grid, so
+        // the caller's in-order merge folds the identical operand
+        // sequence a flat gather would have produced
+        let mut assembled: Vec<(usize, Msg)> = results
+            .into_iter()
+            .enumerate()
+            .filter_map(|(chunk, r)| r.map(|msg| (chunk, msg)))
+            .collect();
+        assembled.extend(hier_done.into_iter().map(|(chunk, _, msg)| (chunk, msg)));
+        assembled.sort_by_key(|&(chunk, _)| chunk);
+        Ok(assembled.into_iter().map(|(_, msg)| msg).collect())
     }
 
     /// One wave: one pending chunk per live worker, a barrier, then the
@@ -1153,6 +1414,637 @@ impl RemoteCluster {
         }
     }
 
+    /// Resolve the relay policy against the current fleet and return the
+    /// topology to gather through this pass (`None` — flat). A cached
+    /// topology is reused while its stamp (alive slots + fanout) holds
+    /// and every participant is still in the state the build left it in;
+    /// anything else rebuilds at this deal boundary. When the policy
+    /// resolves to flat, any leftover tier is dismantled first so the
+    /// flat deal sees directly-linked workers only.
+    fn ensure_topology(&self, round: u64, n_shards: usize) -> Option<Topology> {
+        let slots: Vec<Arc<Mutex<WorkerLink>>> = self.slots.read().unwrap().clone();
+        let alive: Vec<usize> =
+            (0..slots.len()).filter(|&i| slots[i].lock().unwrap().is_alive()).collect();
+        let fanout = if self.transport.is_none() {
+            // borrowed transport: the leader cannot hand a leaf's session
+            // to a relay it could never redial — structurally flat
+            None
+        } else {
+            match self.opts.relay_fanout {
+                RelayFanout::Flat => None,
+                RelayFanout::Auto if alive.len() >= AUTO_RELAY_MIN_WORKERS => {
+                    Some((alive.len() as f64).sqrt().ceil() as usize)
+                }
+                RelayFanout::Auto => None,
+                RelayFanout::Leaves(n) if alive.len() >= 2 => Some(n.max(1)),
+                RelayFanout::Leaves(_) => None,
+            }
+        };
+        let Some(fanout) = fanout else {
+            self.flatten(round, &slots);
+            return None;
+        };
+        {
+            let cached = self.topology.lock().unwrap();
+            if let Some(topo) = cached.as_ref() {
+                if topo.stamp.1 == fanout
+                    && topo.stamp.0 == alive
+                    && topology_healthy(topo, &slots)
+                {
+                    return (!topo.subtrees.is_empty()).then(|| topo.clone());
+                }
+            }
+        }
+        let topo = self.rebuild_topology(round, n_shards, &slots, fanout);
+        let out = (!topo.subtrees.is_empty()).then(|| topo.clone());
+        *self.topology.lock().unwrap() = Some(topo);
+        out
+    }
+
+    /// Dismantle any relay tier: demote live relays (an empty
+    /// `RelayAssign` makes the relay drop its leaf links), then bring
+    /// every delegated leaf back onto a direct leader stream. A no-op on
+    /// sessions that never built a tier.
+    fn flatten(&self, round: u64, slots: &[Arc<Mutex<WorkerLink>>]) {
+        let prior = self.topology.lock().unwrap().take();
+        if let Some(prior) = &prior {
+            self.relays_active.store(0, Ordering::Relaxed);
+            if crate::obs::metrics_enabled() {
+                self.obs.relays_active.set(0);
+            }
+            self.demote_relays(prior, slots);
+        }
+        for (slot, cell) in slots.iter().enumerate() {
+            if cell.lock().unwrap().delegated {
+                self.reattach(round, slots, slot);
+            }
+        }
+    }
+
+    /// Force a rebuild at the next deal boundary *without* forgetting the
+    /// installed structure: the stamp is poisoned (no alive list ever
+    /// matches an empty one, no fanout is 0) so the cache check misses,
+    /// while the subtree list survives for [`RemoteCluster::demote_relays`]
+    /// — surviving relays must release their leaves before any
+    /// re-parenting dial, or that dial could park behind the stale hold.
+    fn invalidate_topology(&self) {
+        if let Some(t) = self.topology.lock().unwrap().as_mut() {
+            t.stamp = (Vec::new(), 0);
+        }
+    }
+
+    /// Tell each live relay to release its subtree (empty `RelayAssign`),
+    /// restoring the plain per-task deadline on success and killing the
+    /// link on any control-plane failure. After this every former leaf's
+    /// worker session is back in (or heading to) its accept loop, so no
+    /// re-parenting dial can park behind a stale hold — the ordering that
+    /// keeps rebuilds deadlock-free on any transport.
+    fn demote_relays(&self, prior: &Topology, slots: &[Arc<Mutex<WorkerLink>>]) {
+        let demote = Msg::RelayAssign {
+            leaves: Vec::new(),
+            connect_timeout_ms: self.opts.connect_timeout.as_millis().max(1) as u64,
+            exchange_timeout_ms: self.opts.exchange_timeout.as_millis().max(1) as u64,
+        };
+        for &(relay, _) in &prior.subtrees {
+            let Some(cell) = slots.get(relay) else { continue };
+            let mut link = cell.lock().unwrap();
+            if !link.is_live() {
+                continue;
+            }
+            let reply = link
+                .send_control(&demote, &self.counters)
+                .and_then(|()| link.recv_control(&self.counters));
+            match reply {
+                Ok(Msg::RelayReady { .. }) => {
+                    link.set_exchange_deadline(self.opts.exchange_timeout)
+                }
+                _ => link.kill(),
+            }
+        }
+    }
+
+    /// Bring one slot back onto a direct leader stream. Budget-free: a
+    /// delegated leaf's stream was handed off deliberately, so this dial
+    /// is topology bookkeeping, not failure healing. Returns whether the
+    /// slot is live afterwards; an unreachable worker is retired with a
+    /// `Lost` note (and stays healable under the session budget).
+    fn reattach(&self, round: u64, slots: &[Arc<Mutex<WorkerLink>>], slot: usize) -> bool {
+        let Some(transport) = self.transport.as_ref() else { return false };
+        let mut link = slots[slot].lock().unwrap();
+        if link.is_live() {
+            return true;
+        }
+        link.delegated = false;
+        match link.redial(transport.as_ref(), &self.fingerprint, self.opts) {
+            Ok(()) => true,
+            Err(e) => {
+                let detail = format!("worker {} lost during re-parenting: {e}", link.addr);
+                link.kill();
+                drop(link);
+                self.counters.count(&self.counters.workers_lost, 1);
+                if crate::obs::metrics_enabled() {
+                    self.obs.workers_lost.inc();
+                }
+                self.push_event(MembershipEvent {
+                    round,
+                    worker: Some(slot),
+                    change: MembershipChange::Lost,
+                    detail,
+                });
+                false
+            }
+        }
+    }
+
+    /// Tear the old relay tier down and build one for the current fleet:
+    /// demote, plan, reattach planned relays and direct slots, hand each
+    /// subtree's leaf sessions to its relay (`RelayAssign`/`RelayReady`),
+    /// and stamp the result with the fleet it was built for.
+    fn rebuild_topology(
+        &self,
+        round: u64,
+        n_shards: usize,
+        slots: &[Arc<Mutex<WorkerLink>>],
+        fanout: usize,
+    ) -> Topology {
+        // (0) teardown first, remembering incumbents for stickiness
+        let prior = self.topology.lock().unwrap().take();
+        let mut incumbents: Vec<usize> = Vec::new();
+        if let Some(prior) = &prior {
+            incumbents.extend(prior.subtrees.iter().map(|&(r, _)| r));
+            self.demote_relays(prior, slots);
+        }
+        // (1) plan over the now-flat alive fleet
+        let cands: Vec<TopoSlot> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, cell)| {
+                let link = cell.lock().unwrap();
+                link.is_alive().then(|| TopoSlot {
+                    slot: i,
+                    live_stream: link.is_live(),
+                    span: link.span,
+                    is_relay_now: incumbents.contains(&i),
+                })
+            })
+            .collect();
+        let plan = plan_topology(&cands, fanout, n_shards);
+        // (2) every planned relay and direct slot needs a live leader
+        // stream again (leaves hand theirs off)
+        let mut subtrees: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut direct: Vec<usize> = Vec::new();
+        for &slot in &plan.direct {
+            if self.reattach(round, slots, slot) {
+                direct.push(slot);
+            }
+        }
+        for (relay, leaves) in plan.subtrees {
+            if !self.reattach(round, slots, relay) {
+                // the planned relay is gone: its leaves fall back to
+                // direct exchanges in this topology
+                for &leaf in &leaves {
+                    if self.reattach(round, slots, leaf) {
+                        direct.push(leaf);
+                    }
+                }
+                continue;
+            }
+            // (3) hand each leaf's session to the relay: close our stream
+            // so the worker returns to accept, then deal the subtree
+            // (addresses resolved before taking the relay's lock — one
+            // link lock at a time, always)
+            let mut addrs: Vec<String> = Vec::with_capacity(leaves.len());
+            for &leaf in &leaves {
+                let mut link = slots[leaf].lock().unwrap();
+                if link.is_live() {
+                    link.shutdown();
+                }
+                link.delegated = true;
+                addrs.push(link.addr.clone());
+            }
+            let n_leaves = leaves.len();
+            let assign = Msg::RelayAssign {
+                leaves: addrs,
+                connect_timeout_ms: self.opts.connect_timeout.as_millis().max(1) as u64,
+                exchange_timeout_ms: self.opts.exchange_timeout.as_millis().max(1) as u64,
+            };
+            let reply = {
+                let mut link = slots[relay].lock().unwrap();
+                link.send_control(&assign, &self.counters)
+                    .and_then(|()| link.recv_control(&self.counters))
+            };
+            match reply {
+                Ok(Msg::RelayReady { reached, .. }) => {
+                    let mut reached_any = false;
+                    for (i, &leaf) in leaves.iter().enumerate() {
+                        if reached.get(i).copied().unwrap_or(false) {
+                            reached_any = true;
+                            continue;
+                        }
+                        // the relay could not dial it: the worker is gone
+                        // (still healable later under the session budget)
+                        let mut link = slots[leaf].lock().unwrap();
+                        let detail =
+                            format!("worker {} unreachable from its relay", link.addr);
+                        link.kill();
+                        drop(link);
+                        self.counters.count(&self.counters.workers_lost, 1);
+                        if crate::obs::metrics_enabled() {
+                            self.obs.workers_lost.inc();
+                        }
+                        self.push_event(MembershipEvent {
+                            round,
+                            worker: Some(leaf),
+                            change: MembershipChange::Lost,
+                            detail,
+                        });
+                    }
+                    if reached_any {
+                        // a relay exchange covers leaf recovery and local
+                        // recompute in the worst case: double its deadline
+                        slots[relay]
+                            .lock()
+                            .unwrap()
+                            .set_exchange_deadline(self.opts.exchange_timeout * 2);
+                        if crate::obs::metrics_enabled() {
+                            self.obs.relay_assigns.inc();
+                        }
+                        crate::obs::instant(
+                            self.clock.as_ref(),
+                            Track::Leader,
+                            names::RELAY_ASSIGN,
+                            round,
+                            n_leaves as u64,
+                        );
+                        subtrees.push((relay, leaves));
+                    } else {
+                        // a subtree with no reachable leaf is just a
+                        // direct worker
+                        direct.push(relay);
+                    }
+                }
+                Ok(Msg::Abort { message }) => self.relay_setup_loss(
+                    round,
+                    slots,
+                    relay,
+                    format!("relay refused its subtree: {message}"),
+                    &leaves,
+                    &mut direct,
+                ),
+                Ok(other) => self.relay_setup_loss(
+                    round,
+                    slots,
+                    relay,
+                    format!("relay answered assignment with {}", other.name()),
+                    &leaves,
+                    &mut direct,
+                ),
+                Err(e) => self.relay_setup_loss(
+                    round,
+                    slots,
+                    relay,
+                    format!("relay lost during assignment: {e}"),
+                    &leaves,
+                    &mut direct,
+                ),
+            }
+        }
+        let n_relays = subtrees.len();
+        self.relays_active.store(n_relays, Ordering::Relaxed);
+        if crate::obs::metrics_enabled() {
+            self.obs.relays_active.set(n_relays as i64);
+        }
+        let alive_now: Vec<usize> =
+            (0..slots.len()).filter(|&i| slots[i].lock().unwrap().is_alive()).collect();
+        Topology { subtrees, direct, stamp: (alive_now, fanout) }
+    }
+
+    /// A relay died (or misbehaved) during assignment: retire its link
+    /// and fall its planned leaves back to direct exchanges. (Killing the
+    /// relay's stream makes its worker process drop the leaf links it may
+    /// already hold, so the leaves' reattach dials cannot park forever.)
+    fn relay_setup_loss(
+        &self,
+        round: u64,
+        slots: &[Arc<Mutex<WorkerLink>>],
+        relay: usize,
+        detail: String,
+        leaves: &[usize],
+        direct: &mut Vec<usize>,
+    ) {
+        slots[relay].lock().unwrap().kill();
+        self.counters.count(&self.counters.workers_lost, 1);
+        if crate::obs::metrics_enabled() {
+            self.obs.workers_lost.inc();
+        }
+        self.push_event(MembershipEvent {
+            round,
+            worker: Some(relay),
+            change: MembershipChange::Lost,
+            detail,
+        });
+        for &leaf in leaves {
+            if self.reattach(round, slots, leaf) {
+                direct.push(leaf);
+            }
+        }
+    }
+
+    /// One hierarchical pass: deal the pending queue as contiguous runs
+    /// over the uplinks — each subtree weighted by its size, each direct
+    /// slot weight one — then exchange concurrently: relays answer whole
+    /// runs with subtree aggregates, direct slots run their chunks
+    /// through the same pipelined exchange as a flat overlap pass.
+    /// Outcomes are processed in deal order, so counters and re-queues
+    /// stay deterministic.
+    #[allow(clippy::too_many_arguments)]
+    fn hier_step<F>(
+        &self,
+        round: u64,
+        per: usize,
+        n_shards: usize,
+        slots: &[Arc<Mutex<WorkerLink>>],
+        topo: &Topology,
+        pending: &mut VecDeque<usize>,
+        results: &mut [Option<Msg>],
+        hier_done: &mut Vec<(usize, usize, Msg)>,
+        last_loss: &mut String,
+        task: &F,
+    ) -> Result<()>
+    where
+        F: Fn(usize, usize) -> Msg + Sync,
+    {
+        // runs are contiguous in chunk space so a relay's aggregate
+        // covers one dense range
+        let mut chunks: Vec<usize> = pending.drain(..).collect();
+        chunks.sort_unstable();
+        #[derive(Clone, Copy)]
+        enum Uplink<'a> {
+            Relay(usize, &'a [usize]),
+            Direct(usize),
+        }
+        let mut uplinks: Vec<(Uplink, usize)> = Vec::new();
+        for (relay, leaves) in &topo.subtrees {
+            let alive =
+                leaves.iter().filter(|&&l| slots[l].lock().unwrap().is_alive()).count();
+            uplinks.push((Uplink::Relay(*relay, leaves), 1 + alive));
+        }
+        for &d in &topo.direct {
+            if slots[d].lock().unwrap().is_live() {
+                uplinks.push((Uplink::Direct(d), 1));
+            }
+        }
+        if uplinks.is_empty() {
+            // every uplink died since the topology was installed: force a
+            // rebuild and let the quorum logic decide what remains
+            self.invalidate_topology();
+            pending.extend(chunks);
+            return Ok(());
+        }
+        // contiguous weighted deal: uplink u takes the next
+        // ⌈rem · wᵤ / rem_w⌉ chunks — every uplink gets work proportional
+        // to its subtree, and a relay's range stays dense
+        let mut deals: Vec<(Uplink, &[usize])> = Vec::new();
+        let mut rem = chunks.len();
+        let mut rem_w: usize = uplinks.iter().map(|&(_, w)| w).sum();
+        let mut cursor = 0usize;
+        for &(uplink, w) in &uplinks {
+            if rem == 0 {
+                break;
+            }
+            let take = ((rem * w).div_ceil(rem_w)).min(rem);
+            if take > 0 {
+                deals.push((uplink, &chunks[cursor..cursor + take]));
+            }
+            cursor += take;
+            rem -= take;
+            rem_w -= w;
+        }
+        let runs: Vec<HierRun> = std::thread::scope(|s| {
+            let handles: Vec<_> = deals
+                .iter()
+                .map(|&(uplink, run)| {
+                    s.spawn(move || match uplink {
+                        Uplink::Relay(relay, leaves) => HierRun::Relay(
+                            relay,
+                            self.run_relay(
+                                slots, relay, leaves, round, run, per, n_shards, task,
+                            ),
+                        ),
+                        Uplink::Direct(slot) => HierRun::Direct(
+                            slot,
+                            self.run_slot(slots, slot, round, run, per, n_shards, task),
+                        ),
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        let mut run = RelayRun::new();
+                        run.fatal = Some("relay exchange thread panicked".into());
+                        HierRun::Relay(usize::MAX, run)
+                    })
+                })
+                .collect()
+        });
+        let mut leaf_dead = false;
+        for outcome in runs {
+            match outcome {
+                HierRun::Relay(relay, run) => {
+                    if let Some(message) = run.fatal {
+                        return Err(Error::Runtime(message));
+                    }
+                    if crate::obs::metrics_enabled() {
+                        self.obs.relay_partials.add(run.done.len() as u64);
+                    }
+                    hier_done.extend(run.done);
+                    for leaf in run.leaf_losses {
+                        let mut link = slots[leaf].lock().unwrap();
+                        if !link.is_alive() {
+                            continue; // already retired this pass
+                        }
+                        let detail = format!(
+                            "worker {} lost from its relay subtree (work recomputed \
+                             relay-side)",
+                            link.addr
+                        );
+                        link.kill();
+                        drop(link);
+                        leaf_dead = true;
+                        self.counters.count(&self.counters.workers_lost, 1);
+                        if crate::obs::metrics_enabled() {
+                            self.obs.workers_lost.inc();
+                            self.obs.relay_leaf_losses.inc();
+                        }
+                        self.push_event(MembershipEvent {
+                            round,
+                            worker: Some(leaf),
+                            change: MembershipChange::Lost,
+                            detail,
+                        });
+                    }
+                    if let Some(loss) = run.loss {
+                        self.push_event(MembershipEvent {
+                            round,
+                            worker: Some(relay),
+                            change: MembershipChange::Lost,
+                            detail: loss.clone(),
+                        });
+                        *last_loss = loss;
+                        self.counters.count(&self.counters.workers_lost, 1);
+                        self.counters
+                            .count(&self.counters.redispatches, run.lost_chunks.len() as u64);
+                        self.note_loss(round, per, &run.lost_chunks);
+                        pending.extend(run.lost_chunks);
+                        // the subtree is orphaned: rebuild at the next
+                        // boundary (its leaves re-parent or go direct)
+                        self.invalidate_topology();
+                    }
+                }
+                HierRun::Direct(slot, run) => {
+                    if let Some(message) = run.fatal {
+                        return Err(Error::Runtime(message));
+                    }
+                    for (chunk, reply) in run.done {
+                        results[chunk] = Some(reply);
+                    }
+                    if let Some(loss) = run.loss {
+                        self.push_event(MembershipEvent {
+                            round,
+                            worker: Some(slot),
+                            change: MembershipChange::Lost,
+                            detail: loss.clone(),
+                        });
+                        *last_loss = loss;
+                        self.counters.count(&self.counters.workers_lost, 1);
+                        self.counters
+                            .count(&self.counters.redispatches, run.lost.len() as u64);
+                        self.note_loss(round, per, &run.lost);
+                        pending.extend(run.lost);
+                        self.invalidate_topology();
+                    }
+                }
+            }
+        }
+        if leaf_dead {
+            // leaf deaths are absorbed by their relay, so the topology
+            // stays valid — refresh its stamp to the shrunken fleet
+            // instead of forcing a full teardown and rebuild
+            let alive_now: Vec<usize> =
+                (0..slots.len()).filter(|&i| slots[i].lock().unwrap().is_alive()).collect();
+            if let Some(t) = self.topology.lock().unwrap().as_mut() {
+                t.stamp.0 = alive_now;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive one relay through its dealt run of chunks: contiguous
+    /// stretches go out as single ranged tasks, each answered by a
+    /// subtree aggregate (`RelayPartial`). A relay that lost every leaf
+    /// mid-pass answers with a *plain* partial — it computed the range
+    /// itself — which is accepted unchanged, since a one-operand merge
+    /// is the operand. Any wire error kills the relay and reports every
+    /// unanswered chunk for re-dispatch.
+    #[allow(clippy::too_many_arguments)]
+    fn run_relay<F>(
+        &self,
+        slots: &[Arc<Mutex<WorkerLink>>],
+        relay: usize,
+        leaves: &[usize],
+        round: u64,
+        run_chunks: &[usize],
+        per: usize,
+        n_shards: usize,
+        task: &F,
+    ) -> RelayRun
+    where
+        F: Fn(usize, usize) -> Msg + Sync,
+    {
+        let trace_on = crate::obs::trace_enabled();
+        let want_obs = trace_on || crate::obs::metrics_enabled();
+        let ext = span_ext::encode_task(round, trace_on);
+        let mut run = RelayRun::new();
+        let mut link = slots[relay].lock().unwrap();
+        let mut i = 0usize;
+        while i < run_chunks.len() {
+            let mut j = i + 1;
+            while j < run_chunks.len() && run_chunks[j] == run_chunks[j - 1] + 1 {
+                j += 1;
+            }
+            let (first, last) = (run_chunks[i], run_chunks[j - 1]);
+            let lo = first * per;
+            let hi = ((last + 1) * per).min(n_shards);
+            let t0 = if want_obs { self.clock.now_ns() } else { 0 };
+            let reply = link
+                .send_task(&task(lo, hi), &ext, &self.counters)
+                .and_then(|()| link.recv_partial(&self.counters));
+            match reply {
+                Ok((Msg::Abort { message }, _, _)) => {
+                    run.fatal =
+                        Some(format!("relay {} aborted the round: {message}", link.addr));
+                    return run;
+                }
+                Ok((Msg::RelayPartial { lost, inner }, reply_ext, received)) => {
+                    if want_obs {
+                        self.observe_exchange(
+                            relay,
+                            round,
+                            lo as u64,
+                            t0,
+                            received,
+                            reply_ext.as_ref(),
+                        );
+                    }
+                    // loss indices address the assignment-order leaf list
+                    for li in lost {
+                        if let Some(&leaf) = leaves.get(li as usize) {
+                            run.leaf_losses.push(leaf);
+                        }
+                    }
+                    run.done.push((first, last - first + 1, *inner));
+                }
+                Ok((
+                    reply @ (Msg::EvalPartial(_) | Msg::ScdPartial(_) | Msg::RankPartial(_)),
+                    reply_ext,
+                    received,
+                )) => {
+                    // demoted-relay window: its last leaf died earlier in
+                    // this pass, so it folded the range locally
+                    if want_obs {
+                        self.observe_exchange(
+                            relay,
+                            round,
+                            lo as u64,
+                            t0,
+                            received,
+                            reply_ext.as_ref(),
+                        );
+                    }
+                    run.done.push((first, last - first + 1, reply));
+                }
+                Ok((other, _, _)) => {
+                    run.fatal = Some(format!(
+                        "relay {} answered a ranged task with {}",
+                        link.addr,
+                        other.name()
+                    ));
+                    return run;
+                }
+                Err(e) => {
+                    link.kill();
+                    run.loss = Some(format!("relay {}: {e}", link.addr));
+                    run.lost_chunks.extend(run_chunks[i..].iter().copied());
+                    return run;
+                }
+            }
+            i = j;
+        }
+        run
+    }
+
     /// Distributed evaluation round (DD rounds, final evaluations).
     pub(crate) fn eval_round(
         &self,
@@ -1238,6 +2130,21 @@ fn thresholds_fit(t: &ThresholdAcc, reduce: ReduceMode, kk: usize) -> bool {
     }
 }
 
+/// Is every participant of the installed topology still in the state the
+/// build left it in? Relays and direct slots must hold live leader
+/// streams; alive leaves must still be delegated (a healed leaf that
+/// reacquired a direct stream invalidates the tier, since it would be
+/// dealt twice).
+fn topology_healthy(topo: &Topology, slots: &[Arc<Mutex<WorkerLink>>]) -> bool {
+    let leaf_ok = |leaf: usize| {
+        let link = slots[leaf].lock().unwrap();
+        !link.is_alive() || link.delegated
+    };
+    topo.subtrees.iter().all(|(relay, leaves)| {
+        slots[*relay].lock().unwrap().is_live() && leaves.iter().all(|&l| leaf_ok(l))
+    }) && topo.direct.iter().all(|&d| slots[d].lock().unwrap().is_live())
+}
+
 fn unexpected(want: &str, got: &Msg) -> Error {
     Error::Runtime(format!(
         "cluster protocol violation: expected a well-formed {want}, got {} \
@@ -1253,5 +2160,94 @@ impl Drop for RemoteCluster {
                 link.shutdown();
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(slot: usize, live_stream: bool, is_relay_now: bool) -> TopoSlot {
+        TopoSlot { slot, live_stream, span: (0, u64::MAX), is_relay_now }
+    }
+
+    #[test]
+    fn plan_small_fleets_stay_flat() {
+        let plan = plan_topology(&[cand(0, true, false)], 2, 64);
+        assert!(plan.subtrees.is_empty());
+        assert_eq!(plan.direct, vec![0]);
+        assert!(plan_topology(&[], 2, 64).subtrees.is_empty());
+    }
+
+    #[test]
+    fn plan_deals_leaves_round_robin() {
+        let cands: Vec<TopoSlot> = (0..6).map(|i| cand(i, true, false)).collect();
+        let plan = plan_topology(&cands, 2, 64);
+        // 6 workers at fanout 2 → ⌈6/3⌉ = 2 relays (slots 0 and 1),
+        // leaves alternate over the subtrees in slot order
+        assert_eq!(plan.subtrees.len(), 2);
+        assert_eq!(plan.subtrees[0], (0, vec![2, 4]));
+        assert_eq!(plan.subtrees[1], (1, vec![3, 5]));
+        assert!(plan.direct.is_empty());
+    }
+
+    #[test]
+    fn plan_relay_count_capped_by_streamed_slots() {
+        // only slot 2 still holds a leader stream, so it is the only
+        // possible relay even though the fanout asks for two
+        let cands = vec![
+            cand(0, false, false),
+            cand(1, false, false),
+            cand(2, true, false),
+            cand(3, false, false),
+        ];
+        let plan = plan_topology(&cands, 1, 64);
+        assert_eq!(plan.subtrees.len(), 1);
+        assert_eq!(plan.subtrees[0], (2, vec![0, 1, 3]));
+        assert!(plan.direct.is_empty());
+    }
+
+    #[test]
+    fn plan_prefers_incumbent_relays() {
+        let cands = vec![
+            cand(0, true, false),
+            cand(1, true, false),
+            cand(2, true, false),
+            cand(3, true, true),
+        ];
+        let plan = plan_topology(&cands, 3, 64);
+        // one relay wanted; the incumbent wins over lower slot numbers
+        assert_eq!(plan.subtrees.len(), 1);
+        assert_eq!(plan.subtrees[0], (3, vec![0, 1, 2]));
+    }
+
+    #[test]
+    fn plan_prefers_covering_replica_spans() {
+        // subtree 0 is nominally [0, 32), subtree 1 [32, 64): the two
+        // slots whose replicas cover those ranges are picked as relays
+        // (they can recompute any leaf loss from local shards), ahead of
+        // lower-numbered slots that cover nothing
+        let cands = vec![
+            TopoSlot { slot: 0, live_stream: true, span: (32, 64), is_relay_now: false },
+            TopoSlot { slot: 1, live_stream: true, span: (0, 32), is_relay_now: false },
+            TopoSlot { slot: 2, live_stream: true, span: (64, 64), is_relay_now: false },
+            TopoSlot { slot: 3, live_stream: true, span: (64, 64), is_relay_now: false },
+            TopoSlot { slot: 4, live_stream: true, span: (64, 64), is_relay_now: false },
+            TopoSlot { slot: 5, live_stream: true, span: (64, 64), is_relay_now: false },
+        ];
+        let plan = plan_topology(&cands, 2, 64);
+        assert_eq!(plan.subtrees.len(), 2);
+        assert_eq!(plan.subtrees[0].0, 1); // covers [0, 32)
+        assert_eq!(plan.subtrees[1].0, 0); // covers [32, 64)
+        assert_eq!(plan.subtrees[0].1, vec![2, 4]);
+        assert_eq!(plan.subtrees[1].1, vec![3, 5]);
+    }
+
+    #[test]
+    fn plan_with_no_streamed_slot_goes_direct() {
+        let cands = vec![cand(0, false, false), cand(1, false, false)];
+        let plan = plan_topology(&cands, 2, 64);
+        assert!(plan.subtrees.is_empty());
+        assert_eq!(plan.direct, vec![0, 1]);
     }
 }

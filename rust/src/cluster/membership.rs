@@ -22,6 +22,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub(crate) struct NetCounters {
     pub(crate) bytes_sent: AtomicU64,
     pub(crate) bytes_received: AtomicU64,
+    /// Data-plane frames (tasks out / partials in) — relay control frames
+    /// are excluded, so `frames_received / rounds` is exactly the leader's
+    /// per-round fan-in: O(workers) flat, O(relays) two-level.
+    pub(crate) frames_sent: AtomicU64,
+    pub(crate) frames_received: AtomicU64,
     pub(crate) rounds: AtomicU64,
     pub(crate) round_us: AtomicU64,
     pub(crate) redispatches: AtomicU64,
@@ -47,6 +52,13 @@ impl NetCounters {
 pub(crate) struct WorkerLink {
     pub(crate) addr: String,
     pub(crate) threads: usize,
+    /// The shard-index span `[lo, hi)` the worker's store replica covers,
+    /// from its `Welcome`/`Join` (today always `(0, u64::MAX)`; the relay
+    /// placement prefers relays whose span covers their subtree).
+    pub(crate) span: (u64, u64),
+    /// The slot serves through a relay's subtree: its leader stream is
+    /// intentionally closed, but the worker is alive and counted.
+    pub(crate) delegated: bool,
     stream: Option<Box<dyn NetStream>>,
     /// Consecutive failed redial attempts since the link last died
     /// (resets on a successful redial — each outage gets a fresh
@@ -78,10 +90,12 @@ impl WorkerLink {
         opts: ConnectOptions,
     ) -> Result<Self> {
         let stream = transport.dial(addr, opts.connect_timeout)?;
-        let (threads, stream) = Self::handshake(stream, addr, fingerprint, opts)?;
+        let (threads, span, stream) = Self::handshake(stream, addr, fingerprint, opts)?;
         Ok(Self {
             addr: addr.to_string(),
             threads,
+            span,
+            delegated: false,
             stream: Some(stream),
             attempts: 0,
             redials_spent: 0,
@@ -93,10 +107,17 @@ impl WorkerLink {
     /// A link over an already-handshaken stream — how a mid-solve
     /// `Join`/`Admit` admission becomes a slot (the join handshake
     /// replaced `Hello`/`Welcome`; exchange timeouts are already set).
-    pub(crate) fn admitted(addr: String, threads: usize, stream: Box<dyn NetStream>) -> Self {
+    pub(crate) fn admitted(
+        addr: String,
+        threads: usize,
+        span: (u64, u64),
+        stream: Box<dyn NetStream>,
+    ) -> Self {
         Self {
             addr,
             threads: threads.max(1),
+            span,
+            delegated: false,
             stream: Some(stream),
             attempts: 0,
             redials_spent: 0,
@@ -114,7 +135,7 @@ impl WorkerLink {
         addr: &str,
         fingerprint: &InstanceFingerprint,
         opts: ConnectOptions,
-    ) -> Result<(usize, Box<dyn NetStream>)> {
+    ) -> Result<(usize, (u64, u64), Box<dyn NetStream>)> {
         stream.set_read_timeout(Some(opts.connect_timeout))?;
         stream.set_write_timeout(Some(opts.connect_timeout))?;
         send_msg(&mut stream, &Msg::Hello { fingerprint: fingerprint.clone() })?;
@@ -122,14 +143,14 @@ impl WorkerLink {
         stream.set_read_timeout(Some(opts.exchange_timeout))?;
         stream.set_write_timeout(Some(opts.exchange_timeout))?;
         match reply {
-            Msg::Welcome { threads, fingerprint: theirs } => {
+            Msg::Welcome { threads, fingerprint: theirs, shard_lo, shard_hi } => {
                 if &theirs != fingerprint {
                     return Err(Error::Runtime(format!(
                         "worker {addr} serves a different instance: leader has \
                          [{fingerprint}], worker has [{theirs}]"
                     )));
                 }
-                Ok((threads.max(1) as usize, stream))
+                Ok((threads.max(1) as usize, (shard_lo, shard_hi), stream))
             }
             Msg::Abort { message } => {
                 Err(Error::Runtime(format!("worker {addr} refused the session: {message}")))
@@ -157,9 +178,11 @@ impl WorkerLink {
         debug_assert!(self.stream.is_none(), "redial of a live link");
         let stream = transport.dial(&self.addr, opts.connect_timeout)?;
         match Self::handshake(stream, &self.addr, fingerprint, opts) {
-            Ok((threads, stream)) => {
+            Ok((threads, span, stream)) => {
                 self.threads = threads;
+                self.span = span;
                 self.stream = Some(stream);
+                self.delegated = false;
                 self.attempts = 0;
                 self.next_redial_at_ns = 0;
                 Ok(())
@@ -175,10 +198,28 @@ impl WorkerLink {
         self.stream.is_some()
     }
 
+    /// Alive for quorum and capacity purposes: the leader holds its
+    /// stream, *or* the worker serves through a relay subtree (the stream
+    /// was intentionally handed off, not lost).
+    pub(crate) fn is_alive(&self) -> bool {
+        self.stream.is_some() || self.delegated
+    }
+
+    /// Re-bound the per-task read/write deadline on a live stream (the
+    /// leader doubles a relay's deadline: a relay exchange includes leaf
+    /// recovery and local recompute in the worst case).
+    pub(crate) fn set_exchange_deadline(&mut self, t: std::time::Duration) {
+        if let Some(stream) = self.stream.as_mut() {
+            let _ = stream.set_read_timeout(Some(t));
+            let _ = stream.set_write_timeout(Some(t));
+        }
+    }
+
     /// Drop the connection; the link stays dead until (and unless) a
     /// round-boundary redial revives it.
     pub(crate) fn kill(&mut self) {
         self.stream = None;
+        self.delegated = false;
     }
 
     /// Send one task frame without waiting for the reply, split from the
@@ -200,6 +241,7 @@ impl WorkerLink {
             .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
         let sent = send_msg_ext(stream, msg, ext)?;
         counters.count(&counters.bytes_sent, sent as u64);
+        counters.count(&counters.frames_sent, 1);
         Ok(())
     }
 
@@ -218,7 +260,32 @@ impl WorkerLink {
             .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
         let (reply, ext, received) = recv_msg_ext(stream)?;
         counters.count(&counters.bytes_received, received as u64);
+        counters.count(&counters.frames_received, 1);
         Ok((reply, ext, received))
+    }
+
+    /// Send one control-plane message (relay assignment) — counted in
+    /// bytes but not in data-plane frames, so `frames_* / rounds` stays a
+    /// pure fan-in measure.
+    pub(crate) fn send_control(&mut self, msg: &Msg, counters: &NetCounters) -> Result<()> {
+        let stream = self
+            .stream
+            .as_mut()
+            .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
+        let sent = send_msg(stream, msg)?;
+        counters.count(&counters.bytes_sent, sent as u64);
+        Ok(())
+    }
+
+    /// Receive one control-plane reply (`RelayReady`/`Abort`).
+    pub(crate) fn recv_control(&mut self, counters: &NetCounters) -> Result<Msg> {
+        let stream = self
+            .stream
+            .as_mut()
+            .ok_or_else(|| Error::Runtime(format!("worker {} is dead", self.addr)))?;
+        let (reply, received) = recv_msg(stream)?;
+        counters.count(&counters.bytes_received, received as u64);
+        Ok(reply)
     }
 
     /// Best-effort session close so the worker returns to accepting.

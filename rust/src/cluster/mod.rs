@@ -40,6 +40,13 @@
 //!   processes mid-solve (`Join`/`Admit` frames); and a quorum policy
 //!   (`PALLAS_MIN_WORKERS`) fails fast when the live fleet shrinks below
 //!   strength instead of grinding on degraded.
+//! * **The relay tier** (`PALLAS_RELAY_FANOUT`, [`RelayFanout`]): on
+//!   large fleets the leader promotes some workers to *relays*, each
+//!   fanning tasks over a subtree of leaf workers and map-side-combining
+//!   their partials into one aggregate frame — the gather's per-round
+//!   receive count drops from O(workers) to O(relays) while the merge
+//!   stays chunk-order canonical, so flat and two-level topologies are
+//!   bit-identical (`docs/cluster-protocol.md` §relay tier).
 
 pub mod clock;
 pub(crate) mod exec;
@@ -54,7 +61,7 @@ pub mod worker;
 
 pub use clock::{Backoff, Clock, SystemClock, VirtualClock};
 pub use exec::Exec;
-pub use leader::{ConnectOptions, ExchangeMode, NetSnapshot, RemoteCluster};
+pub use leader::{ConnectOptions, ExchangeMode, NetSnapshot, RelayFanout, RemoteCluster};
 pub use protocol::InstanceFingerprint;
 pub use sim::{Dir, ElasticObserver, FaultPlan, LinkFaults, SimNet, SimTransport, TraceEvent, TraceKind};
 pub use transport::{NetListener, NetStream, TcpNetListener, TcpTransport, Transport};
@@ -77,4 +84,25 @@ pub(crate) fn env_ms(var: &str, default_ms: u64) -> std::time::Duration {
 /// `PALLAS_CLUSTER_REDIALS=0` switches redialing off.
 pub(crate) fn env_count(var: &str, default: u64) -> u64 {
     std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Upper bound on chunks dealt per round — enough granularity for
+/// re-dispatch after a failure without drowning the wire in tiny tasks.
+/// Shared by the leader's deal and the relay's sub-deal (both sides must
+/// agree on the chunk grid for the merge to be topology-independent).
+pub(crate) const CHUNKS_PER_ROUND: usize = 64;
+
+/// The global chunk partition of a round: `(per, n_chunks)` — chunk `c`
+/// covers shards `[c * per, ((c + 1) * per).min(n_shards))`. One pure
+/// function shared by the leader's gather and the relay's sub-deal, so a
+/// relay splits its task range on exactly the chunk boundaries the
+/// leader's flat deal would have used — the precondition for the
+/// chunk-order-canonical merge being topology-independent.
+pub(crate) fn chunk_plan(n_shards: usize, chunks_per_round: usize) -> (usize, usize) {
+    if n_shards == 0 {
+        return (1, 0); // an empty round deals no chunks
+    }
+    let n_chunks = n_shards.min(chunks_per_round).max(1);
+    let per = n_shards.div_ceil(n_chunks);
+    (per, n_shards.div_ceil(per))
 }

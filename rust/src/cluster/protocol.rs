@@ -1,13 +1,18 @@
 //! Message vocabulary of the cluster wire protocol.
 //!
-//! Twelve message kinds ride the [`super::frames`] layer: a two-message
+//! Fifteen message kinds ride the [`super::frames`] layer: a two-message
 //! handshake (`Hello`/`Welcome`) that pins the protocol version and the
 //! instance fingerprint, three task kinds (one per map-round flavor:
 //! evaluation, SCD threshold emission, §5.4 ranking), their three partial
-//! kinds, `Abort` and `Shutdown`, plus the elastic-membership handshake
+//! kinds, `Abort` and `Shutdown`, the elastic-membership handshake
 //! (`Join`/`Admit`): a fresh worker dials the *leader's* join listener
 //! mid-solve, offers its capacity and fingerprint, and — once admitted —
-//! serves the same stateless task loop as a dial-time worker. Tasks are *self-contained*: shard
+//! serves the same stateless task loop as a dial-time worker; plus the
+//! relay tier (`RelayAssign`/`RelayReady`/`RelayPartial`): the leader
+//! promotes a worker to fan a task out over a subtree of leaf workers
+//! and merge their partials map-side before one aggregate frame comes
+//! back upstream (`docs/cluster-protocol.md` §relay tier). Tasks are
+//! *self-contained*: shard
 //! geometry, chunk bounds and the full per-round broadcast state (λ,
 //! active mask, reduce mode) travel in every task, so a worker is
 //! stateless between frames and any task can be re-dispatched to any
@@ -130,13 +135,13 @@ impl std::fmt::Display for InstanceFingerprint {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "N={} M={} K={} {} locals#{:08x} data#{:08x}",
+            "N={} M={} K={} {} locals#{:016x} data#{:016x}",
             self.n_groups,
             self.n_items,
             self.n_global,
             if self.dense { "dense" } else { "sparse" },
-            self.locals_hash as u32,
-            self.sample_hash as u32,
+            self.locals_hash,
+            self.sample_hash,
         )
     }
 }
@@ -173,13 +178,18 @@ impl Geometry {
 
 /// One protocol message. Kinds 1–2 handshake, 3–5 tasks (leader→worker),
 /// 6–8 partials (worker→leader), 9 abort, 10 shutdown, 11–12 the
-/// mid-solve join handshake (worker-dialed).
+/// mid-solve join handshake (worker-dialed), 13–15 the two-level relay
+/// tier (`docs/cluster-protocol.md` §relay tier).
 pub(crate) enum Msg {
     /// Leader → worker: open the session. The worker refuses a fingerprint
     /// that does not match its own store.
     Hello { fingerprint: InstanceFingerprint },
-    /// Worker → leader: session accepted; advertises map-thread capacity.
-    Welcome { threads: u32, fingerprint: InstanceFingerprint },
+    /// Worker → leader: session accepted; advertises map-thread capacity
+    /// and the shard-index span `[shard_lo, shard_hi)` its store replica
+    /// covers (today every worker serves the whole store and advertises
+    /// `(0, u64::MAX)`; partial replicas are the forward hook the
+    /// shard-replica-aware relay placement keys on).
+    Welcome { threads: u32, fingerprint: InstanceFingerprint, shard_lo: u64, shard_hi: u64 },
     /// Evaluate shard chunk `[lo, hi)` at fixed λ (DD round / final eval).
     EvalTask { geo: Geometry, lo: u64, hi: u64, lambda: Vec<f64> },
     /// One SCD round over shard chunk `[lo, hi)`.
@@ -207,14 +217,33 @@ pub(crate) enum Msg {
     Shutdown,
     /// Worker → leader, on a worker-dialed stream to the leader's join
     /// listener: ask to join the running solve, advertising map-thread
-    /// capacity and the store fingerprint. The frame layer has already
-    /// pinned the protocol version; the leader checks the fingerprint and
-    /// answers `Admit` (or `Abort` on a mismatch).
-    Join { threads: u32, fingerprint: InstanceFingerprint },
+    /// capacity, the store fingerprint and the replica's shard span (the
+    /// same fields `Welcome` carries, byte for byte). The frame layer has
+    /// already pinned the protocol version; the leader checks the
+    /// fingerprint and answers `Admit` (or `Abort` on a mismatch).
+    Join { threads: u32, fingerprint: InstanceFingerprint, shard_lo: u64, shard_hi: u64 },
     /// Leader → worker: join accepted — from the next round boundary on,
     /// the stream carries the same task/partial traffic as a dial-time
     /// session.
     Admit,
+    /// Leader → worker: promote this worker to a *relay* over the given
+    /// leaf worker addresses (or update the subtree — the assignment is
+    /// idempotent and replaceable; an empty leaf list demotes back to a
+    /// plain worker). The timeouts are the leader's connect/exchange
+    /// policy, forwarded so relay→leaf links inherit it.
+    RelayAssign { leaves: Vec<String>, connect_timeout_ms: u64, exchange_timeout_ms: u64 },
+    /// Worker → leader: the relay assignment was applied. `reached[i]`
+    /// says whether leaf `i` of the assignment handshook; `threads` is the
+    /// subtree's total advertised map capacity (informational — the
+    /// leader's per-slot capacity accounting already counts the leaves).
+    RelayReady { threads: u32, reached: Vec<bool> },
+    /// Relay → leader: one subtree aggregate — the map-side-combined
+    /// partial covering the relay's whole task range, wrapped around the
+    /// ordinary partial message it would have sent as a plain worker.
+    /// `lost` lists assignment-order leaf indices that died during this
+    /// exchange (their sub-chunks were recomputed by the relay, so the
+    /// aggregate is complete regardless).
+    RelayPartial { lost: Vec<u32>, inner: Box<Msg> },
 }
 
 impl Msg {
@@ -232,6 +261,9 @@ impl Msg {
             Msg::Shutdown => 10,
             Msg::Join { .. } => 11,
             Msg::Admit => 12,
+            Msg::RelayAssign { .. } => 13,
+            Msg::RelayReady { .. } => 14,
+            Msg::RelayPartial { .. } => 15,
         }
     }
 
@@ -249,6 +281,9 @@ impl Msg {
             Msg::Shutdown => "shutdown",
             Msg::Join { .. } => "join",
             Msg::Admit => "admit",
+            Msg::RelayAssign { .. } => "relay-assign",
+            Msg::RelayReady { .. } => "relay-ready",
+            Msg::RelayPartial { .. } => "relay-partial",
         }
     }
 
@@ -256,9 +291,11 @@ impl Msg {
         let mut e = Enc::new();
         match self {
             Msg::Hello { fingerprint } => fingerprint.encode(&mut e),
-            Msg::Welcome { threads, fingerprint } => {
+            Msg::Welcome { threads, fingerprint, shard_lo, shard_hi }
+            | Msg::Join { threads, fingerprint, shard_lo, shard_hi } => {
                 e.u32(*threads);
                 fingerprint.encode(&mut e);
+                e.u64(*shard_lo).u64(*shard_hi);
             }
             Msg::EvalTask { geo, lo, hi, lambda } | Msg::RankTask { geo, lo, hi, lambda } => {
                 geo.encode(&mut e);
@@ -295,11 +332,30 @@ impl Msg {
                 e.str(message);
             }
             Msg::Shutdown => {}
-            Msg::Join { threads, fingerprint } => {
-                e.u32(*threads);
-                fingerprint.encode(&mut e);
-            }
             Msg::Admit => {}
+            Msg::RelayAssign { leaves, connect_timeout_ms, exchange_timeout_ms } => {
+                e.u64(leaves.len() as u64);
+                for leaf in leaves {
+                    e.str(leaf);
+                }
+                e.u64(*connect_timeout_ms).u64(*exchange_timeout_ms);
+            }
+            Msg::RelayReady { threads, reached } => {
+                e.u32(*threads);
+                e.u64(reached.len() as u64);
+                for &r in reached {
+                    e.u8(r as u8);
+                }
+            }
+            Msg::RelayPartial { lost, inner } => {
+                e.u64(lost.len() as u64);
+                for &i in lost {
+                    e.u32(i);
+                }
+                e.u32(inner.kind() as u32);
+                let body = inner.encode();
+                e.bytes(&body);
+            }
         }
         e.into_bytes()
     }
@@ -311,6 +367,8 @@ impl Msg {
             2 => Msg::Welcome {
                 threads: d.u32()?,
                 fingerprint: InstanceFingerprint::decode(&mut d)?,
+                shard_lo: d.u64()?,
+                shard_hi: d.u64()?,
             },
             3 | 5 => {
                 let geo = Geometry::decode(&mut d)?;
@@ -366,8 +424,49 @@ impl Msg {
             11 => Msg::Join {
                 threads: d.u32()?,
                 fingerprint: InstanceFingerprint::decode(&mut d)?,
+                shard_lo: d.u64()?,
+                shard_hi: d.u64()?,
             },
             12 => Msg::Admit,
+            13 => {
+                let n = d.len()?;
+                let mut leaves = Vec::with_capacity(n);
+                for _ in 0..n {
+                    leaves.push(d.str()?);
+                }
+                Msg::RelayAssign {
+                    leaves,
+                    connect_timeout_ms: d.u64()?,
+                    exchange_timeout_ms: d.u64()?,
+                }
+            }
+            14 => {
+                let threads = d.u32()?;
+                let n = d.len()?;
+                let mut reached = Vec::with_capacity(n);
+                for _ in 0..n {
+                    reached.push(d.u8()? != 0);
+                }
+                Msg::RelayReady { threads, reached }
+            }
+            15 => {
+                let n = d.len_of(4)?;
+                let mut lost = Vec::with_capacity(n);
+                for _ in 0..n {
+                    lost.push(d.u32()?);
+                }
+                let inner_kind = d.u32()? as u16;
+                // only the three partial kinds may travel inside the
+                // envelope — anything else (nested envelopes included)
+                // is a malformed frame
+                if !(6..=8).contains(&inner_kind) {
+                    return Err(corrupt(&format!(
+                        "relay-partial envelope around non-partial kind {inner_kind}"
+                    )));
+                }
+                let inner = Msg::decode(inner_kind, d.rest())?;
+                Msg::RelayPartial { lost, inner: Box::new(inner) }
+            }
             other => return Err(corrupt(&format!("unknown message kind {other}"))),
         };
         d.finish()?;
@@ -683,10 +782,13 @@ mod tests {
     fn handshake_and_control_roundtrip() {
         let p = SyntheticProblem::new(GeneratorConfig::dense(50, 4, 3).with_seed(9));
         let fp = InstanceFingerprint::of(&p);
-        match roundtrip(&Msg::Welcome { threads: 8, fingerprint: fp.clone() }) {
-            Msg::Welcome { threads, fingerprint } => {
+        let welcome =
+            Msg::Welcome { threads: 8, fingerprint: fp.clone(), shard_lo: 0, shard_hi: u64::MAX };
+        match roundtrip(&welcome) {
+            Msg::Welcome { threads, fingerprint, shard_lo, shard_hi } => {
                 assert_eq!(threads, 8);
                 assert_eq!(fingerprint, fp);
+                assert_eq!((shard_lo, shard_hi), (0, u64::MAX));
             }
             other => panic!("wrong kind back: {}", other.name()),
         }
@@ -701,10 +803,13 @@ mod tests {
     fn join_handshake_roundtrips() {
         let p = SyntheticProblem::new(GeneratorConfig::dense(50, 4, 3).with_seed(9));
         let fp = InstanceFingerprint::of(&p);
-        match roundtrip(&Msg::Join { threads: 4, fingerprint: fp.clone() }) {
-            Msg::Join { threads, fingerprint } => {
+        let join =
+            Msg::Join { threads: 4, fingerprint: fp.clone(), shard_lo: 3, shard_hi: 900 };
+        match roundtrip(&join) {
+            Msg::Join { threads, fingerprint, shard_lo, shard_hi } => {
                 assert_eq!(threads, 4);
                 assert_eq!(fingerprint, fp);
+                assert_eq!((shard_lo, shard_hi), (3, 900));
             }
             other => panic!("wrong kind back: {}", other.name()),
         }
@@ -712,9 +817,108 @@ mod tests {
         // Join carries exactly what Welcome does, so the payloads match
         // byte for byte — only the kind differs (spec'd in
         // docs/cluster-protocol.md)
-        let join = Msg::Join { threads: 4, fingerprint: fp.clone() };
-        let welcome = Msg::Welcome { threads: 4, fingerprint: fp };
+        let join =
+            Msg::Join { threads: 4, fingerprint: fp.clone(), shard_lo: 0, shard_hi: u64::MAX };
+        let welcome =
+            Msg::Welcome { threads: 4, fingerprint: fp, shard_lo: 0, shard_hi: u64::MAX };
         assert_eq!(join.encode(), welcome.encode());
         assert_eq!((join.kind(), welcome.kind()), (11, 2));
+    }
+
+    #[test]
+    fn relay_messages_roundtrip() {
+        let assign = Msg::RelayAssign {
+            leaves: vec!["sim://3".into(), "10.0.0.7:4710".into()],
+            connect_timeout_ms: 5_000,
+            exchange_timeout_ms: 600_000,
+        };
+        match roundtrip(&assign) {
+            Msg::RelayAssign { leaves, connect_timeout_ms, exchange_timeout_ms } => {
+                assert_eq!(leaves, vec!["sim://3".to_string(), "10.0.0.7:4710".to_string()]);
+                assert_eq!(connect_timeout_ms, 5_000);
+                assert_eq!(exchange_timeout_ms, 600_000);
+            }
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+        // an empty assignment (demotion) roundtrips too
+        let demote =
+            Msg::RelayAssign { leaves: vec![], connect_timeout_ms: 1, exchange_timeout_ms: 2 };
+        assert!(matches!(roundtrip(&demote), Msg::RelayAssign { leaves, .. } if leaves.is_empty()));
+
+        match roundtrip(&Msg::RelayReady { threads: 6, reached: vec![true, false, true] }) {
+            Msg::RelayReady { threads, reached } => {
+                assert_eq!(threads, 6);
+                assert_eq!(reached, vec![true, false, true]);
+            }
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn relay_partial_envelope_is_bit_exact_and_rejects_non_partials() {
+        let mut agg = RoundAgg::new(2);
+        agg.consumption[0].add(1e16);
+        agg.consumption[0].add(1.0); // non-zero compensation term
+        agg.consumption[1].add(-3.5);
+        agg.primal.add(42.0);
+        agg.n_selected = 5;
+        let env = Msg::RelayPartial {
+            lost: vec![1, 3],
+            inner: Box::new(Msg::EvalPartial(agg.clone())),
+        };
+        match roundtrip(&env) {
+            Msg::RelayPartial { lost, inner } => {
+                assert_eq!(lost, vec![1, 3]);
+                match *inner {
+                    Msg::EvalPartial(back) => {
+                        let bits = |k: &KahanSum| {
+                            let (s, c) = k.parts();
+                            (s.to_bits(), c.to_bits())
+                        };
+                        for (x, y) in back.consumption.iter().zip(&agg.consumption) {
+                            assert_eq!(bits(x), bits(y));
+                        }
+                        assert_eq!(bits(&back.primal), bits(&agg.primal));
+                        assert_eq!(back.n_selected, 5);
+                    }
+                    other => panic!("wrong inner kind back: {}", other.name()),
+                }
+            }
+            other => panic!("wrong kind back: {}", other.name()),
+        }
+
+        // the envelope must refuse non-partial inner kinds — a nested
+        // envelope or a smuggled control frame is a malformed payload
+        let bad = Msg::RelayPartial {
+            lost: vec![],
+            inner: Box::new(Msg::Abort { message: "no".into() }),
+        };
+        let payload = bad.encode();
+        assert!(Msg::decode(15, &payload).is_err());
+    }
+
+    #[test]
+    fn fingerprint_display_carries_full_hash_width() {
+        // two stores that differ only in the high 32 bits of their hashes
+        // must be refused (inequality) *and* be tellable apart in the
+        // error message — the display used to truncate to 32 bits, so the
+        // refusal text showed two identical fingerprints
+        let a = InstanceFingerprint {
+            n_groups: 100,
+            n_items: 4,
+            n_global: 3,
+            dense: false,
+            locals_hash: 0x1111_2222_3333_4444,
+            sample_hash: 0x5555_6666_7777_8888,
+        };
+        let b = InstanceFingerprint {
+            locals_hash: 0xFFFF_0000_3333_4444, // same low 32 bits
+            sample_hash: 0xAAAA_BBBB_7777_8888, // same low 32 bits
+            ..a.clone()
+        };
+        assert_ne!(a, b, "high-bit-only differences must still refuse the handshake");
+        assert_ne!(a.to_string(), b.to_string(), "display must distinguish them: {a}");
+        assert!(a.to_string().contains("locals#1111222233334444"), "{a}");
+        assert!(a.to_string().contains("data#5555666677778888"), "{a}");
     }
 }

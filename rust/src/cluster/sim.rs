@@ -895,6 +895,12 @@ impl NetListener for SimListener {
     fn clock(&self) -> Arc<dyn Clock> {
         self.hub.clock.clone()
     }
+
+    fn dialer(&self) -> Option<Arc<dyn Transport>> {
+        // sim workers can dial their siblings through the shared hub,
+        // which is what lets the relay tier run under the simulator
+        Some(Arc::new(SimTransport { hub: Arc::clone(&self.hub) }))
+    }
 }
 
 /// A deterministic in-memory cluster: N in-process workers, a leader-side
@@ -1088,8 +1094,11 @@ impl SimNet {
             &crate::cluster::protocol::Msg::Join {
                 threads: threads.max(1) as u32,
                 fingerprint: fingerprint.clone(),
+                shard_lo: 0,
+                shard_hi: u64::MAX,
             },
         )?;
+        let dialer: Arc<dyn Transport> = Arc::new(self.transport());
         let clock = self.hub.clock.clone();
         let dir: PathBuf = store.to_path_buf();
         let handle = std::thread::spawn(move || {
@@ -1103,6 +1112,7 @@ impl SimNet {
                 &pool,
                 clock.as_ref(),
                 opts,
+                Some(dialer),
             );
         });
         self.threads.lock().unwrap().push(handle);

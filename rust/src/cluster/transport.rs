@@ -75,6 +75,15 @@ pub trait NetListener: Send + Sync {
 
     /// The clock this listener's timeouts elapse against.
     fn clock(&self) -> Arc<dyn Clock>;
+
+    /// A dialer on the same network this listener accepts from, if the
+    /// transport supports worker-originated dials. A worker serving on
+    /// this listener uses it to reach *other workers* when the leader
+    /// promotes it to a relay (`RelayAssign`); `None` (the default) means
+    /// the worker cannot dial and refuses relay assignments.
+    fn dialer(&self) -> Option<Arc<dyn Transport>> {
+        None
+    }
 }
 
 /// Leader-side dialer + the clock its session runs on.
@@ -169,6 +178,10 @@ impl NetListener for TcpNetListener {
 
     fn clock(&self) -> Arc<dyn Clock> {
         Arc::new(SystemClock)
+    }
+
+    fn dialer(&self) -> Option<Arc<dyn Transport>> {
+        Some(Arc::new(TcpTransport))
     }
 }
 

@@ -61,6 +61,13 @@ impl Enc {
         self
     }
 
+    /// Append raw bytes with no length prefix — for envelope messages
+    /// whose tail is an opaque inner payload (the frame length bounds it).
+    pub(crate) fn bytes(&mut self, b: &[u8]) -> &mut Self {
+        self.buf.extend_from_slice(b);
+        self
+    }
+
     pub(crate) fn into_bytes(self) -> Vec<u8> {
         self.buf
     }
@@ -132,6 +139,14 @@ impl<'a> Dec<'a> {
         let n = self.len()?;
         let raw = self.take(n)?;
         String::from_utf8(raw.to_vec()).map_err(|_| corrupt("non-utf8 string"))
+    }
+
+    /// Take every remaining byte — for envelope messages whose tail is an
+    /// opaque inner payload (`RelayPartial`).
+    pub(crate) fn rest(&mut self) -> &'a [u8] {
+        let all = self.b;
+        self.b = &[];
+        all
     }
 
     pub(crate) fn finish(self) -> Result<()> {

@@ -13,10 +13,28 @@
 //! deterministic simulator runs the *same* session code over in-memory
 //! streams ([`serve_net`]), which is how chaos tests exercise this file
 //! without sockets or wall-clock timeouts.
+//!
+//! **Relay mode.** A leader running the two-level reduce tier promotes a
+//! worker to *relay* with a `RelayAssign` frame naming a subtree of leaf
+//! worker addresses. The relay dials each leaf through the listener's
+//! [`NetListener::dialer`] (refusing the assignment when the transport
+//! cannot dial), and from then on fans every task frame out over the
+//! subtree: the task's shard range is split on the *global* chunk grid
+//! ([`crate::cluster::chunk_plan`]), sub-chunks are dealt round-robin over
+//! `[self] + live leaves`, leaf partials are gathered concurrently, work
+//! from a leaf that dies mid-task is recomputed locally (a `RelayPartial`
+//! always covers the full assigned range), and the sub-partials are merged
+//! **in ascending chunk order** — the same canonical order the leader's
+//! flat gather uses, which is what keeps flat and two-level topologies
+//! bit-identical. The merged aggregate goes back in a single
+//! `RelayPartial` envelope carrying the indices of any leaves lost on the
+//! way. Relay state is per-session: the subtree is released (leaf links
+//! shut down so leaves return to `accept`) when the leader session ends.
 
 use crate::cluster::clock::{Backoff, Clock};
 use crate::cluster::frames;
-use crate::cluster::leader::ConnectOptions;
+use crate::cluster::leader::{ConnectOptions, ExchangeMode, RelayFanout};
+use crate::cluster::membership::{NetCounters, WorkerLink};
 use crate::cluster::protocol::{
     recv_msg, recv_msg_ext, send_msg, span_ext, InstanceFingerprint, Msg,
 };
@@ -31,6 +49,8 @@ use crate::solver::rounds::{evaluation_chunk, RustEvaluator};
 use crate::solver::scd::{scd_round_chunk, ScdRoundCtx, ScdRoundSpec};
 use std::net::TcpListener;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Open the store under `dir` and serve leader sessions on `listener`
 /// forever (returns only if the listener itself fails, or on a store-open
@@ -62,6 +82,7 @@ pub fn serve_net<S: GroupSource + ?Sized>(
     source.validate()?;
     let fingerprint = InstanceFingerprint::of(source);
     let clock = listener.clock();
+    let dialer = listener.dialer();
     // persistent accept failures (fd exhaustion, ...) must not become a
     // 100%-CPU spin; back off exponentially, reset on the next success
     let mut backoff =
@@ -72,7 +93,15 @@ pub fn serve_net<S: GroupSource + ?Sized>(
             // connection, never the worker
             Ok(Some(stream)) => {
                 backoff.reset();
-                let _ = session(stream, source, &fingerprint, pool, clock.as_ref(), false);
+                let _ = session(
+                    stream,
+                    source,
+                    &fingerprint,
+                    pool,
+                    clock.as_ref(),
+                    false,
+                    dialer.clone(),
+                );
             }
             Ok(None) => return Ok(()),
             Err(_) => backoff.wait(clock.as_ref()),
@@ -85,9 +114,11 @@ pub fn serve_net<S: GroupSource + ?Sized>(
 /// fingerprint, wait for `Admit`, then run the regular task loop with the
 /// handshake already complete. Dial failures retry up to `dial_attempts`
 /// times on the shared backoff helper — the leader may still be binding
-/// its listener when the worker starts.
+/// its listener when the worker starts. The transport doubles as the
+/// dialer for relay assignments: a joined worker can be promoted exactly
+/// like a configured one.
 pub fn join_net<S: GroupSource + ?Sized>(
-    transport: &dyn Transport,
+    transport: Arc<dyn Transport>,
     leader: &str,
     source: &S,
     pool: &Cluster,
@@ -117,9 +148,22 @@ pub fn join_net<S: GroupSource + ?Sized>(
         stream.set_write_timeout(Some(opts.connect_timeout))?;
         send_msg(
             &mut stream,
-            &Msg::Join { threads: pool.workers() as u32, fingerprint: fingerprint.clone() },
+            &Msg::Join {
+                threads: pool.workers() as u32,
+                fingerprint: fingerprint.clone(),
+                shard_lo: 0,
+                shard_hi: u64::MAX,
+            },
         )?;
-        return serve_admitted(stream, source, &fingerprint, pool, clock.as_ref(), opts);
+        return serve_admitted(
+            stream,
+            source,
+            &fingerprint,
+            pool,
+            clock.as_ref(),
+            opts,
+            Some(Arc::clone(&transport)),
+        );
     }
     Err(Error::Runtime(format!("cannot join leader at {leader}: {last}")))
 }
@@ -136,6 +180,7 @@ pub(crate) fn serve_admitted<S: GroupSource + ?Sized>(
     pool: &Cluster,
     clock: &dyn Clock,
     opts: ConnectOptions,
+    dialer: Option<Arc<dyn Transport>>,
 ) -> Result<()> {
     stream.set_read_timeout(Some(opts.connect_timeout))?;
     let (reply, _) = recv_msg(&mut stream)?;
@@ -154,7 +199,7 @@ pub(crate) fn serve_admitted<S: GroupSource + ?Sized>(
     // the session installs its own idle read timeout; writes go unbounded
     // like an accepted session's
     stream.set_write_timeout(None)?;
-    session(stream, source, fingerprint, pool, clock, true)
+    session(stream, source, fingerprint, pool, clock, true, dialer)
 }
 
 /// Idle bound on one leader session: a leader that vanished without
@@ -164,19 +209,108 @@ pub(crate) fn serve_admitted<S: GroupSource + ?Sized>(
 /// scale, far below this. Override with `PALLAS_WORKER_IDLE_TIMEOUT_MS`.
 const DEFAULT_IDLE_TIMEOUT_MS: u64 = 600_000;
 
+/// Per-session relay state: the assigned subtree of leaf links, in
+/// assignment order (`RelayPartial::lost` indexes into it), plus the
+/// relay's own wire counters for leaf traffic.
+struct RelayState {
+    leaves: Vec<(String, Option<WorkerLink>)>,
+    counters: NetCounters,
+}
+
+impl RelayState {
+    fn new() -> Self {
+        Self { leaves: Vec::new(), counters: NetCounters::default() }
+    }
+
+    fn live_count(&self) -> usize {
+        self.leaves.iter().filter(|(_, l)| l.as_ref().is_some_and(|w| w.is_live())).count()
+    }
+
+    /// Apply a `RelayAssign`: keep live links whose address survives into
+    /// the new set, dial the rest, shut down links no longer assigned.
+    /// Idempotent; an empty `addrs` demotes the relay back to a plain
+    /// worker. Returns the subtree's reachable leaf capacity and the
+    /// per-address reached flags, in assignment order.
+    fn assign(
+        &mut self,
+        dialer: &dyn Transport,
+        addrs: &[String],
+        fingerprint: &InstanceFingerprint,
+        opts: ConnectOptions,
+    ) -> (usize, Vec<bool>) {
+        let mut old = std::mem::take(&mut self.leaves);
+        let mut reached = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let kept = old
+                .iter()
+                .position(|(a, l)| a == addr && l.as_ref().is_some_and(|w| w.is_live()));
+            let link = match kept {
+                Some(i) => old.swap_remove(i).1,
+                None => WorkerLink::connect(dialer, addr, fingerprint, opts).ok(),
+            };
+            reached.push(link.as_ref().is_some_and(|w| w.is_live()));
+            self.leaves.push((addr.clone(), link));
+        }
+        for (_, link) in old.iter_mut() {
+            if let Some(w) = link {
+                w.shutdown();
+            }
+        }
+        let threads = self
+            .leaves
+            .iter()
+            .filter_map(|(_, l)| l.as_ref())
+            .filter(|w| w.is_live())
+            .map(|w| w.threads)
+            .sum();
+        (threads, reached)
+    }
+
+    /// Release the subtree so every leaf returns to `accept` (for the next
+    /// leader session, or for re-parenting under another relay).
+    fn shutdown_all(&mut self) {
+        for (_, link) in self.leaves.iter_mut() {
+            if let Some(w) = link {
+                w.shutdown();
+            }
+        }
+        self.leaves.clear();
+    }
+}
+
 /// One leader session: loop over frames until shutdown, error, or idle
 /// timeout (after which the worker returns to `accept`). Tasks are only
 /// served after a successful `Hello` handshake — the fingerprint check
 /// happens *before any work*, as the protocol spec requires. Sessions
 /// reached through the `Join`/`Admit` admission start with `greeted`
-/// already true (that handshake verified the fingerprint).
+/// already true (that handshake verified the fingerprint). However the
+/// session ends, any relay subtree it held is released.
 fn session<S: GroupSource + ?Sized>(
+    stream: Box<dyn NetStream>,
+    source: &S,
+    fingerprint: &InstanceFingerprint,
+    pool: &Cluster,
+    clock: &dyn Clock,
+    greeted: bool,
+    dialer: Option<Arc<dyn Transport>>,
+) -> Result<()> {
+    let mut relay = RelayState::new();
+    let out =
+        session_loop(stream, source, fingerprint, pool, clock, greeted, dialer, &mut relay);
+    relay.shutdown_all();
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn session_loop<S: GroupSource + ?Sized>(
     mut stream: Box<dyn NetStream>,
     source: &S,
     fingerprint: &InstanceFingerprint,
     pool: &Cluster,
     clock: &dyn Clock,
     greeted: bool,
+    dialer: Option<Arc<dyn Transport>>,
+    relay: &mut RelayState,
 ) -> Result<()> {
     let idle = crate::cluster::env_ms("PALLAS_WORKER_IDLE_TIMEOUT_MS", DEFAULT_IDLE_TIMEOUT_MS);
     stream.set_read_timeout(Some(idle))?;
@@ -202,6 +336,8 @@ fn session<S: GroupSource + ?Sized>(
             Msg::EvalTask { lo, .. } | Msg::ScdTask { lo, .. } | Msg::RankTask { lo, .. } => *lo,
             _ => 0,
         };
+        let fan_out = is_task && relay.live_count() > 0;
+        let span_code = if fan_out { names::RELAY_FANIN } else { names::TASK };
         let time_task = is_task
             && (ship_span || crate::obs::trace_enabled() || crate::obs::metrics_enabled());
         let t0 = if time_task { clock.now_ns() } else { 0 };
@@ -218,56 +354,54 @@ fn session<S: GroupSource + ?Sized>(
                     return Ok(());
                 }
                 greeted = true;
-                Msg::Welcome { threads: pool.workers() as u32, fingerprint: fingerprint.clone() }
-            }
-            Msg::EvalTask { geo, lo, hi, lambda } => {
-                match check_task(source, geo, lo, hi, &lambda) {
-                    Err(e) => abort(e),
-                    Ok((shards, lo, hi)) => {
-                        let kk = source.dims().n_global;
-                        Msg::EvalPartial(evaluation_chunk(
-                            &RustEvaluator::new(source),
-                            shards,
-                            lo,
-                            hi,
-                            kk,
-                            &lambda,
-                            pool,
-                        ))
-                    }
+                Msg::Welcome {
+                    threads: pool.workers() as u32,
+                    fingerprint: fingerprint.clone(),
+                    shard_lo: 0,
+                    shard_hi: u64::MAX,
                 }
             }
-            Msg::ScdTask { geo, lo, hi, lambda, active, sparse_q, reduce } => {
-                match check_task(source, geo, lo, hi, &lambda) {
-                    Err(e) => abort(e),
-                    Ok(_) if active.len() != lambda.len() => {
-                        abort(Error::Runtime("active mask length != λ length".into()))
-                    }
-                    Ok((shards, lo, hi)) => {
-                        let spec = ScdRoundSpec {
-                            lambda: &lambda,
-                            active_mask: &active,
-                            sparse_q,
-                            reduce,
-                        };
-                        Msg::ScdPartial(scd_round_chunk(
-                            source,
-                            shards,
-                            lo,
-                            hi,
-                            &spec,
-                            pool,
-                            ScdRoundCtx::none(),
-                        ))
-                    }
+            task @ (Msg::EvalTask { .. } | Msg::ScdTask { .. } | Msg::RankTask { .. }) => {
+                if fan_out {
+                    relay_exec(source, pool, relay, &task, round)
+                } else {
+                    exec_task(source, pool, &task)
                 }
             }
-            Msg::RankTask { geo, lo, hi, lambda } => {
-                match check_task(source, geo, lo, hi, &lambda) {
-                    Err(e) => abort(e),
-                    Ok((shards, lo, hi)) => {
-                        Msg::RankPartial(rank_chunk(source, shards, lo, hi, &lambda, pool))
-                    }
+            Msg::RelayAssign { leaves, connect_timeout_ms, exchange_timeout_ms } => {
+                let Some(dialer) = dialer.as_deref() else {
+                    let abort = Msg::Abort {
+                        message: "this worker's transport cannot dial leaf workers — \
+                                  relay assignment refused"
+                            .into(),
+                    };
+                    send_msg(&mut stream, &abort)?;
+                    return Ok(());
+                };
+                // leaf exchanges must carry a *finite* deadline: the relay
+                // blocks on leaf replies while the leader blocks on the
+                // relay, and only timeouts unwind that chain on a stall
+                let leaf_opts = ConnectOptions {
+                    connect_timeout: Duration::from_millis(connect_timeout_ms.max(1)),
+                    exchange_timeout: Duration::from_millis(exchange_timeout_ms.max(1)),
+                    exchange: ExchangeMode::Wave,
+                    redial_budget: 0,
+                    redial_backoff: Duration::from_millis(100),
+                    min_workers: 1,
+                    relay_fanout: RelayFanout::Flat,
+                };
+                let (leaf_threads, reached) =
+                    relay.assign(dialer, &leaves, fingerprint, leaf_opts);
+                crate::obs::instant(
+                    clock,
+                    Track::Worker(0),
+                    names::RELAY_ASSIGN,
+                    round,
+                    leaves.len() as u64,
+                );
+                Msg::RelayReady {
+                    threads: (pool.workers() + leaf_threads) as u32,
+                    reached,
                 }
             }
             Msg::Shutdown => return Ok(()),
@@ -282,7 +416,7 @@ fn session<S: GroupSource + ?Sized>(
                 tasks_total.inc();
                 task_ns.observe(task_dur);
             }
-            crate::obs::complete(Track::Worker(0), names::TASK, t0, task_dur, round, task_lo);
+            crate::obs::complete(Track::Worker(0), span_code, t0, task_dur, round, task_lo);
         }
         // an oversized partial (exact-mode threshold lists at extreme N)
         // must become a diagnosable Abort, not a torn connection the
@@ -307,7 +441,7 @@ fn session<S: GroupSource + ?Sized>(
             && !is_abort
             && payload.len() as u64 + frames::EXT_LEN as u64 <= frames::MAX_PAYLOAD;
         if ship {
-            let ext = span_ext::encode_span(names::TASK, task_dur);
+            let ext = span_ext::encode_span(span_code, task_dur);
             frames::write_frame_ext(&mut stream, reply.kind(), &ext, &payload)?;
         } else {
             frames::write_frame(&mut stream, reply.kind(), &payload)?;
@@ -315,6 +449,243 @@ fn session<S: GroupSource + ?Sized>(
         if is_abort {
             return Ok(());
         }
+    }
+}
+
+/// Execute one task frame locally: validate against the store, fold the
+/// chunk on the worker's own pool. Shared by the plain session path and
+/// the relay's self/recompute queues.
+fn exec_task<S: GroupSource + ?Sized>(source: &S, pool: &Cluster, task: &Msg) -> Msg {
+    match task {
+        Msg::EvalTask { geo, lo, hi, lambda } => {
+            match check_task(source, *geo, *lo, *hi, lambda) {
+                Err(e) => abort(e),
+                Ok((shards, lo, hi)) => {
+                    let kk = source.dims().n_global;
+                    Msg::EvalPartial(evaluation_chunk(
+                        &RustEvaluator::new(source),
+                        shards,
+                        lo,
+                        hi,
+                        kk,
+                        lambda,
+                        pool,
+                    ))
+                }
+            }
+        }
+        Msg::ScdTask { geo, lo, hi, lambda, active, sparse_q, reduce } => {
+            match check_task(source, *geo, *lo, *hi, lambda) {
+                Err(e) => abort(e),
+                Ok(_) if active.len() != lambda.len() => {
+                    abort(Error::Runtime("active mask length != λ length".into()))
+                }
+                Ok((shards, lo, hi)) => {
+                    let spec = ScdRoundSpec {
+                        lambda: lambda.as_slice(),
+                        active_mask: active.as_slice(),
+                        sparse_q: *sparse_q,
+                        reduce: *reduce,
+                    };
+                    Msg::ScdPartial(scd_round_chunk(
+                        source,
+                        shards,
+                        lo,
+                        hi,
+                        &spec,
+                        pool,
+                        ScdRoundCtx::none(),
+                    ))
+                }
+            }
+        }
+        Msg::RankTask { geo, lo, hi, lambda } => {
+            match check_task(source, *geo, *lo, *hi, lambda) {
+                Err(e) => abort(e),
+                Ok((shards, lo, hi)) => {
+                    Msg::RankPartial(rank_chunk(source, shards, lo, hi, lambda, pool))
+                }
+            }
+        }
+        other => abort(Error::Runtime(format!(
+            "unexpected {} frame from the leader",
+            other.name()
+        ))),
+    }
+}
+
+/// The same task frame with a narrowed shard range — how a relay deals
+/// sub-chunks of its assigned range to leaves (and to itself).
+fn sub_task(task: &Msg, lo: usize, hi: usize) -> Msg {
+    let (lo, hi) = (lo as u64, hi as u64);
+    match task {
+        Msg::EvalTask { geo, lambda, .. } => {
+            Msg::EvalTask { geo: *geo, lo, hi, lambda: lambda.clone() }
+        }
+        Msg::RankTask { geo, lambda, .. } => {
+            Msg::RankTask { geo: *geo, lo, hi, lambda: lambda.clone() }
+        }
+        Msg::ScdTask { geo, lambda, active, sparse_q, reduce, .. } => Msg::ScdTask {
+            geo: *geo,
+            lo,
+            hi,
+            lambda: lambda.clone(),
+            active: active.clone(),
+            sparse_q: *sparse_q,
+            reduce: *reduce,
+        },
+        other => unreachable!("sub_task of a {} frame", other.name()),
+    }
+}
+
+/// Merge two same-kind chunk partials, the earlier chunk on the left —
+/// exactly the leader's per-chunk merge discipline, so a relay-side merge
+/// followed by the leader's merge is bit-identical to the leader merging
+/// every chunk itself.
+fn merge_partials(a: Msg, b: Msg) -> Result<Msg> {
+    Ok(match (a, b) {
+        (Msg::EvalPartial(x), Msg::EvalPartial(y)) => Msg::EvalPartial(x.merge(y)),
+        (Msg::ScdPartial(x), Msg::ScdPartial(y)) => Msg::ScdPartial(x.merge(y)),
+        (Msg::RankPartial(mut x), Msg::RankPartial(y)) => {
+            x.extend(y);
+            Msg::RankPartial(x)
+        }
+        (a, b) => {
+            return Err(Error::Runtime(format!(
+                "relay cannot merge a {} with a {}",
+                a.name(),
+                b.name()
+            )))
+        }
+    })
+}
+
+/// Fan one task out over the relay's subtree and merge the sub-partials
+/// into a single [`Msg::RelayPartial`].
+///
+/// The task's range is split on the global chunk grid so every sub-chunk
+/// is exactly a chunk the leader's flat deal would have produced;
+/// sub-chunks go round-robin over `[self] + live leaves`; each leaf's
+/// queue is driven by its own thread (strict send/recv per sub-chunk,
+/// matching the worker session contract) while this thread folds its own
+/// queue; any leaf failure retires the leaf and moves its unfinished
+/// sub-chunks to a local recompute pass. The reply therefore always
+/// covers the full assigned range — the leader needs no sub-chunk
+/// re-dispatch for leaf-level failures, only for relay-level ones.
+fn relay_exec<S: GroupSource + ?Sized>(
+    source: &S,
+    pool: &Cluster,
+    relay: &mut RelayState,
+    task: &Msg,
+    round: u64,
+) -> Msg {
+    let (geo, lo, hi, lambda) = match task {
+        Msg::EvalTask { geo, lo, hi, lambda }
+        | Msg::RankTask { geo, lo, hi, lambda }
+        | Msg::ScdTask { geo, lo, hi, lambda, .. } => (*geo, *lo, *hi, lambda),
+        other => return abort(Error::Runtime(format!("relay cannot fan out {}", other.name()))),
+    };
+    let (shards, lo, hi) = match check_task(source, geo, lo, hi, lambda) {
+        Err(e) => return abort(e),
+        Ok(ok) => ok,
+    };
+    let (per, _) = crate::cluster::chunk_plan(shards.count(), crate::cluster::CHUNKS_PER_ROUND);
+    // sub-ranges of [lo, hi) on the global chunk grid, ascending
+    let mut subs: Vec<(usize, usize)> = Vec::new();
+    let mut c = lo / per;
+    loop {
+        let start = (c * per).max(lo);
+        if start >= hi {
+            break;
+        }
+        subs.push((start, ((c + 1) * per).min(hi)));
+        c += 1;
+    }
+    if subs.is_empty() {
+        subs.push((lo, hi)); // an empty range still owes one (empty) partial
+    }
+    let n_sub = subs.len();
+    let parts = 1 + relay.live_count();
+    let results: Mutex<Vec<Option<Msg>>> = Mutex::new((0..n_sub).map(|_| None).collect());
+    let retry: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    let lost: Mutex<Vec<u32>> = Mutex::new(Vec::new());
+    let RelayState { leaves, counters } = relay;
+    let (results, retry, lost, counters, subs) = (&results, &retry, &lost, &*counters, &subs);
+    std::thread::scope(|scope| {
+        let mut p = 0usize;
+        for (i, (_, slot)) in leaves.iter_mut().enumerate() {
+            let Some(link) = slot.as_mut().filter(|w| w.is_live()) else { continue };
+            p += 1;
+            let my_p = p; // participant 0 is the relay itself
+            let queue: Vec<usize> = (my_p..n_sub).step_by(parts).collect();
+            if queue.is_empty() {
+                continue;
+            }
+            scope.spawn(move || {
+                for (qi, &j) in queue.iter().enumerate() {
+                    let (s, e) = subs[j];
+                    let msg = sub_task(task, s, e);
+                    let outcome = link
+                        .send_task(&msg, &span_ext::encode_task(round, false), counters)
+                        .and_then(|()| link.recv_partial(counters));
+                    match outcome {
+                        Ok((
+                            reply @ (Msg::EvalPartial(_)
+                            | Msg::ScdPartial(_)
+                            | Msg::RankPartial(_)),
+                            _,
+                            _,
+                        )) => {
+                            results.lock().unwrap()[j] = Some(reply);
+                        }
+                        Ok(_) | Err(_) => {
+                            // leaf died or refused: retire it, recompute
+                            // its unfinished queue locally after the joins
+                            link.kill();
+                            lost.lock().unwrap().push(i as u32);
+                            retry.lock().unwrap().extend(queue[qi..].iter().copied());
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        // the relay's own queue folds on the session thread, overlapped
+        // with the leaf exchanges
+        for j in (0..n_sub).step_by(parts) {
+            let (s, e) = subs[j];
+            let reply = exec_task(source, pool, &sub_task(task, s, e));
+            results.lock().unwrap()[j] = Some(reply);
+        }
+    });
+    // leaf threads are joined: drain whatever failed leaves abandoned
+    let retry = std::mem::take(&mut *retry.lock().unwrap());
+    for j in retry {
+        let (s, e) = subs[j];
+        let reply = exec_task(source, pool, &sub_task(task, s, e));
+        results.lock().unwrap()[j] = Some(reply);
+    }
+    let mut collected = Vec::with_capacity(n_sub);
+    for r in std::mem::take(&mut *results.lock().unwrap()) {
+        match r {
+            Some(Msg::Abort { message }) => return Msg::Abort { message },
+            Some(m) => collected.push(m),
+            None => {
+                return abort(Error::Runtime(
+                    "relay sub-chunk went uncomputed — dealing bug".into(),
+                ))
+            }
+        }
+    }
+    let mut it = collected.into_iter();
+    let first = it.next().expect("n_sub >= 1");
+    match it.try_fold(first, merge_partials) {
+        Ok(inner) => {
+            let mut lost = std::mem::take(&mut *lost.lock().unwrap());
+            lost.sort_unstable();
+            Msg::RelayPartial { lost, inner: Box::new(inner) }
+        }
+        Err(e) => abort(e),
     }
 }
 

@@ -127,7 +127,10 @@ impl Cluster {
         let mut parts = partials.into_inner().unwrap();
         parts.sort_unstable_by_key(|(r, _)| *r);
         let mut iter = parts.into_iter().map(|(_, a)| a);
-        let first = iter.next().expect("at least one worker ran");
+        // never panic on an empty reduce: a worker that observed the
+        // cursor already exhausted contributes nothing, so fall back to
+        // the identity accumulator rather than trusting `workers ≥ 1`
+        let first = iter.next().unwrap_or_else(|| init());
         iter.fold(first, |a, b| merge(a, b))
     }
 }
@@ -154,6 +157,13 @@ mod tests {
         let c = Cluster::new(4);
         let out: Vec<usize> = c.map_shards(0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_combine_zero_shards_returns_identity() {
+        let c = Cluster::new(4);
+        let total = c.map_combine(0, || 41u64, |acc, idx| *acc += idx as u64, |a, b| a + b);
+        assert_eq!(total, 41, "an empty round must reduce to the identity accumulator");
     }
 
     #[test]

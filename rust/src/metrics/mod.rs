@@ -140,10 +140,13 @@ pub fn cluster_to_json(s: &crate::cluster::NetSnapshot) -> JsonValue {
         ("round_ms".to_string(), JsonValue::Num(s.round_ms)),
         ("bytes_sent".to_string(), JsonValue::Num(s.bytes_sent as f64)),
         ("bytes_received".to_string(), JsonValue::Num(s.bytes_received as f64)),
+        ("frames_sent".to_string(), JsonValue::Num(s.frames_sent as f64)),
+        ("frames_received".to_string(), JsonValue::Num(s.frames_received as f64)),
         ("redispatches".to_string(), JsonValue::Num(s.redispatches as f64)),
         ("workers_lost".to_string(), JsonValue::Num(s.workers_lost as f64)),
         ("redials".to_string(), JsonValue::Num(s.redials as f64)),
         ("joins".to_string(), JsonValue::Num(s.joins as f64)),
+        ("relays".to_string(), JsonValue::Num(s.relays as f64)),
     ])
 }
 

@@ -75,6 +75,12 @@ pub mod names {
     /// Instant: the solve transitioned to a degraded fleet strength;
     /// `a` = round, `b` = live workers.
     pub const DEGRADED: u16 = 17;
+    /// A relay (re)assignment: the leader dealt a worker its subtree;
+    /// `a` = round, `b` = subtree size (leaf count).
+    pub const RELAY_ASSIGN: u16 = 18;
+    /// One relay-side fan-in: sub-deal, leaf gather and merge of a task
+    /// over a subtree; `a` = round, `b` = chunk lo.
+    pub const RELAY_FANIN: u16 = 19;
 
     /// Human name for a code (unknown codes render as `event/<code>`
     /// would — callers show the number alongside).
@@ -97,6 +103,8 @@ pub mod names {
             REDIAL => "redial",
             JOIN => "join",
             DEGRADED => "degraded",
+            RELAY_ASSIGN => "relay_assign",
+            RELAY_FANIN => "relay_fanin",
             _ => "event",
         }
     }
@@ -300,7 +308,7 @@ mod tests {
 
     #[test]
     fn every_named_code_has_a_label() {
-        for code in 1..=17u16 {
+        for code in 1..=19u16 {
             assert_ne!(names::name_of(code), "event", "code {code} unnamed");
         }
         assert_eq!(names::name_of(9999), "event");

@@ -177,8 +177,13 @@ struct ServeState {
     active: Mutex<usize>,
     /// Tiny association list, not a map: the daemon hosts one store, so
     /// this holds the hosted fingerprint plus its budget-scaled aliases
-    /// (which share it — budgets are excluded from identity).
+    /// (which share it — budgets are excluded from identity). Kept in
+    /// most-recently-used order and capped at [`ServeState::warm_cap`]
+    /// entries (`PALLAS_WARM_CACHE`, default 64): each entry is a full
+    /// λ vector, so an adversarial stream of distinct budget aliases
+    /// must evict, not grow without bound.
     warm: Mutex<Vec<(InstanceFingerprint, Vec<f64>)>>,
+    warm_cap: usize,
     progress: Mutex<HashMap<u64, ProgressState>>,
     /// Mean per-round wall time of the most recent completed solve,
     /// nanoseconds (0 until one completes) — the cadence behind the
@@ -189,6 +194,7 @@ struct ServeState {
     requests: Arc<Counter>,
     busy_total: Arc<Counter>,
     resumes: Arc<Counter>,
+    warm_evictions: Arc<Counter>,
     request_ns: Arc<Histogram>,
 }
 
@@ -199,12 +205,14 @@ impl ServeState {
             limit,
             active: Mutex::new(0),
             warm: Mutex::new(Vec::new()),
+            warm_cap: crate::cluster::env_count("PALLAS_WARM_CACHE", 64).max(1) as usize,
             progress: Mutex::new(HashMap::new()),
             round_ns: AtomicU64::new(0),
             active_gauge: reg.gauge("bskp_serve_active"),
             requests: reg.counter("bskp_serve_requests_total"),
             busy_total: reg.counter("bskp_serve_busy_total"),
             resumes: reg.counter("bskp_serve_resumes_total"),
+            warm_evictions: reg.counter("bskp_serve_warm_evictions_total"),
             request_ns: reg.histogram("bskp_serve_request_ns"),
         }
     }
@@ -243,15 +251,26 @@ impl ServeState {
         *self.active.lock().unwrap()
     }
 
+    /// A hit is also a *use*: the entry moves to the front so the cap
+    /// evicts the coldest fingerprint, not the oldest-inserted one.
     fn warm_for(&self, fp: &InstanceFingerprint) -> Option<Vec<f64>> {
-        self.warm.lock().unwrap().iter().find(|(f, _)| f == fp).map(|(_, l)| l.clone())
+        let mut w = self.warm.lock().unwrap();
+        let i = w.iter().position(|(f, _)| f == fp)?;
+        let hit = w.remove(i);
+        let lambda = hit.1.clone();
+        w.insert(0, hit);
+        Some(lambda)
     }
 
     fn store_warm(&self, fp: &InstanceFingerprint, lambda: Vec<f64>) {
         let mut w = self.warm.lock().unwrap();
-        match w.iter_mut().find(|(f, _)| f == fp) {
-            Some((_, l)) => *l = lambda,
-            None => w.push((fp.clone(), lambda)),
+        if let Some(i) = w.iter().position(|(f, _)| f == fp) {
+            w.remove(i);
+        }
+        w.insert(0, (fp.clone(), lambda));
+        while w.len() > self.warm_cap {
+            w.pop();
+            self.warm_evictions.inc();
         }
     }
 
@@ -605,6 +624,45 @@ mod tests {
         // a zero-round solve must not divide by zero or clobber the cadence
         state.note_cadence(1_000_000, 0);
         assert_eq!(state.retry_after_ms(), RETRY_AFTER_BOUNDS_MS.1);
+    }
+
+    #[test]
+    fn warm_cache_is_a_capped_lru_and_counts_evictions() {
+        let mut state = ServeState::new(2);
+        state.warm_cap = 3;
+        let fp = |seed: u64| InstanceFingerprint {
+            n_groups: seed,
+            n_items: 1,
+            n_global: 1,
+            dense: false,
+            locals_hash: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            sample_hash: !seed,
+        };
+        let before = state.warm_evictions.get();
+
+        for s in 0..3 {
+            state.store_warm(&fp(s), vec![s as f64]);
+        }
+        assert_eq!(state.warm.lock().unwrap().len(), 3);
+        assert_eq!(state.warm_evictions.get(), before, "no eviction below the cap");
+
+        // touch the oldest entry so it becomes the most recent...
+        assert_eq!(state.warm_for(&fp(0)), Some(vec![0.0]), "hit must return the stored λ");
+        // ...then overflow: the cap must evict the coldest (1), not the
+        // oldest-inserted (0)
+        state.store_warm(&fp(3), vec![3.0]);
+        assert_eq!(state.warm.lock().unwrap().len(), 3, "cap must hold");
+        assert_eq!(state.warm_evictions.get(), before + 1, "the eviction must be counted");
+        assert_eq!(state.warm_for(&fp(1)), None, "the coldest entry must be gone");
+        assert_eq!(state.warm_for(&fp(0)), Some(vec![0.0]), "the touched entry must survive");
+        assert_eq!(state.warm_for(&fp(3)), Some(vec![3.0]));
+
+        // re-storing an existing fingerprint updates in place: no
+        // growth, no eviction
+        state.store_warm(&fp(0), vec![0.5]);
+        assert_eq!(state.warm.lock().unwrap().len(), 3);
+        assert_eq!(state.warm_evictions.get(), before + 1);
+        assert_eq!(state.warm_for(&fp(0)), Some(vec![0.5]));
     }
 
     #[test]

@@ -331,4 +331,31 @@ mod tests {
         let cfg = SolverConfig { max_iters: 0, ..Default::default() };
         assert!(solve_dd(&p, &cfg, &Cluster::single()).is_err());
     }
+
+    #[test]
+    fn zero_group_instance_is_refused_typed_by_both_solvers() {
+        // a degenerate instance with no groups maps over zero shards;
+        // both drivers must refuse it with a typed error up front — the
+        // reduce path underneath must never panic on an empty round
+        use crate::instance::laminar::LaminarProfile;
+        use crate::instance::problem::{Dims, MaterializedProblem};
+        let p = MaterializedProblem::zeroed_dense(
+            Dims { n_groups: 0, n_items: 2, n_global: 1 },
+            vec![1.0],
+            LaminarProfile::single(2, 1),
+        )
+        .unwrap();
+        let cfg = SolverConfig::default();
+        for r in [
+            solve_dd(&p, &cfg, &Cluster::single()),
+            crate::solver::scd::solve_scd(&p, &cfg, &Cluster::single()),
+        ] {
+            match r {
+                Err(crate::Error::InvalidProblem(msg)) => {
+                    assert!(msg.contains("positive"), "unexpected message: {msg}")
+                }
+                other => panic!("expected InvalidProblem, got {other:?}"),
+            }
+        }
+    }
 }

@@ -192,6 +192,19 @@ mod tests {
     }
 
     #[test]
+    fn empty_chunk_reduces_to_the_identity_aggregate() {
+        // a zero-shard chunk (lo == hi, the shape a relay or worker sees
+        // when its dealt range is empty) must produce the zeroed
+        // aggregate, not panic in the reduce
+        let p = SyntheticProblem::new(GeneratorConfig::sparse(100, 4, 3).with_seed(7));
+        let eval = RustEvaluator::new(&p);
+        let agg = evaluation_chunk(&eval, Shards::new(100, 10), 4, 4, 3, &[0.5; 3], &Cluster::new(4));
+        assert_eq!(agg.n_selected, 0);
+        assert_eq!(agg.primal.value(), 0.0);
+        assert_eq!(agg.consumption_values(), vec![0.0; 3]);
+    }
+
+    #[test]
     fn deterministic_across_cluster_sizes_and_shard_sizes() {
         let p = SyntheticProblem::new(GeneratorConfig::sparse(5_000, 10, 10).with_seed(3));
         let lambda = vec![0.7; 10];

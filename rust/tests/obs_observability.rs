@@ -18,7 +18,7 @@
 //! every test that records or resets spans serializes on [`OBS_LOCK`].
 
 use bskp::cluster::{
-    ConnectOptions, Exec, ExchangeMode, FaultPlan, LinkFaults, RemoteCluster, SimNet,
+    ConnectOptions, Exec, ExchangeMode, FaultPlan, LinkFaults, RelayFanout, RemoteCluster, SimNet,
 };
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::instance::store::MmapProblem;
@@ -56,6 +56,10 @@ fn sim_opts() -> ConnectOptions {
         connect_timeout: Duration::from_secs(5),
         exchange_timeout: Duration::from_secs(600),
         exchange: ExchangeMode::Wave,
+        redial_budget: 0,
+        redial_backoff: Duration::from_millis(100),
+        min_workers: 1,
+        relay_fanout: RelayFanout::Flat,
     }
 }
 

@@ -21,8 +21,8 @@
 //! proptest_cluster_sim` (see `docs/simulation.md`).
 
 use bskp::cluster::{
-    Clock, ConnectOptions, Dir, Exec, ExchangeMode, FaultPlan, LinkFaults, RemoteCluster, SimNet,
-    TraceEvent, TraceKind,
+    Clock, ConnectOptions, Dir, Exec, ExchangeMode, FaultPlan, LinkFaults, RelayFanout,
+    RemoteCluster, SimNet, TraceEvent, TraceKind,
 };
 use bskp::instance::generator::{GeneratorConfig, SyntheticProblem};
 use bskp::instance::store::MmapProblem;
@@ -106,6 +106,7 @@ fn sim_opts() -> ConnectOptions {
         redial_budget: 0,
         redial_backoff: Duration::from_millis(100),
         min_workers: 1,
+        relay_fanout: RelayFanout::Flat,
     }
 }
 
@@ -869,5 +870,162 @@ fn random_fault_plans_never_hang_or_diverge() {
         drop(connected);
         sim.shutdown();
     }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The relay tier must be a pure topology change: the same chunk grid
+/// and the same ascending-chunk merge, so a two-level solve is
+/// bit-identical to the flat gather and the in-process executor — under
+/// the same seeded chaos — while the leader's per-round fan-in drops
+/// from O(workers) to O(relays).
+#[test]
+fn two_level_reduce_matches_flat_bit_identically_under_chaos() {
+    let dir = write_store("relay_flatvs", 2_000, 101);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    // lossy but survivable: delays, jitter, drops, reordering and
+    // duplication — no kills, so both topologies see the full fleet
+    let plan = FaultPlan {
+        links: vec![
+            LinkFaults { delay_ns: 300_000, jitter_ns: 700_000, ..Default::default() },
+            LinkFaults { drop_prob: 0.1, jitter_ns: 400_000, ..Default::default() },
+            LinkFaults { reorder_prob: 0.3, dup_prob: 0.2, ..Default::default() },
+            LinkFaults { delay_ns: 900_000, ..Default::default() },
+            LinkFaults { jitter_ns: 250_000, ..Default::default() },
+            LinkFaults::default(),
+        ],
+        ..Default::default()
+    };
+    let run = |fanout: RelayFanout| {
+        let (sim, addrs) = sim_fleet(43, plan.clone(), &dir, 6);
+        let opts = ConnectOptions { relay_fanout: fanout, ..sim_opts() };
+        let (fleet, skipped) =
+            RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, opts, None)
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, None)
+            .expect("sim solve completes");
+        let stats = fleet.stats();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats)
+    };
+
+    let (flat, flat_stats) = run(RelayFanout::Flat);
+    let (hier, hier_stats) = run(RelayFanout::Leaves(2));
+    assert_reports_match(&hier, &flat, "two-level vs flat");
+    assert_reports_match(&hier, &baseline, "two-level vs in-process");
+    assert_eq!(flat_stats.relays, 0, "{flat_stats:?}");
+    assert_eq!(hier_stats.relays, 2, "6 workers at fanout 2 → 2 relays: {hier_stats:?}");
+    assert_eq!(hier_stats.rounds, flat_stats.rounds, "same number of gathers");
+    assert_eq!(hier_stats.workers_live, 6, "nobody lost: {hier_stats:?}");
+    assert_eq!(hier_stats.workers_lost, 0, "{hier_stats:?}");
+    // the point of the tier: aggregated fan-in means far fewer
+    // data-plane frames at the leader
+    assert!(
+        hier_stats.frames_received < flat_stats.frames_received,
+        "relay fan-in must shrink the leader's receive count: \
+         {hier_stats:?} vs {flat_stats:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A relay crashed mid-round loses nothing but time: its runs re-queue,
+/// the next deal boundary demotes the stale tier and re-parents the
+/// orphaned subtree onto survivors, and the answer is still bit-identical
+/// — and the whole episode replays from the same `(seed, plan)`.
+#[test]
+fn relay_crash_mid_round_reparents_subtree_and_stays_exact() {
+    let dir = write_store("relay_crash", 2_000, 103);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+    let baseline = solve_scd(&mm, &cfg, &Cluster::new(2)).unwrap();
+
+    // deterministic placement puts the relays at the lowest streamed
+    // slots: 0 and 1. Crash slot 1 at round 1 — mid-solve, between its
+    // subtree exchanges.
+    let run = |seed: u64| {
+        let (sim, addrs) = sim_fleet(seed, FaultPlan::healthy(), &dir, 6);
+        let opts = ConnectOptions { relay_fanout: RelayFanout::Leaves(2), ..sim_opts() };
+        let (fleet, skipped) =
+            RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, opts, None)
+                .expect("connect sim fleet");
+        assert!(skipped.is_empty(), "{skipped:?}");
+        let mut killer = CrashAt { sim: &sim, at: 1, victim: 1, done: false };
+        let report = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, Some(&mut killer))
+            .expect("survivors re-parent the subtree and finish");
+        let stats = fleet.stats();
+        let membership = fleet.membership_events();
+        drop(fleet);
+        sim.shutdown();
+        (report, stats, membership, canonical_trace(sim.trace()))
+    };
+
+    let (report, stats, membership, trace) = run(47);
+    assert_reports_match(&report, &baseline, "relay crash");
+    assert_eq!(stats.workers_lost, 1, "exactly the crashed relay: {stats:?}");
+    assert!(stats.redispatches >= 1, "the relay's dealt run must re-queue: {stats:?}");
+    assert_eq!(stats.workers_live, 5, "the orphaned leaves must survive: {stats:?}");
+    assert!(
+        stats.relays >= 1,
+        "a (smaller) tier must stand after re-parenting: {stats:?}"
+    );
+    assert!(
+        membership
+            .iter()
+            .any(|e| e.change.label() == "lost" && e.worker == Some(1)),
+        "the relay loss must be logged against its slot: {membership:?}"
+    );
+
+    let (r2, s2, m2, t2) = run(47);
+    assert_eq!(trace, t2, "the crash + re-parenting episode must replay");
+    assert_eq!(stats, s2, "wire statistics must replay");
+    assert_eq!(membership.len(), m2.len(), "membership log must replay");
+    assert_reports_match(&report, &r2, "relay crash replay");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Quorum under the tier: a leaf death inside a subtree is absorbed by
+/// its relay for the round it happened in (local recompute), but it
+/// still counts against `PALLAS_MIN_WORKERS` — when the alive fleet
+/// (delegated leaves included) drops below the floor, the next gather
+/// fails fast with the typed quorum error, never a hang.
+#[test]
+fn subtree_leaf_loss_below_quorum_floor_fails_typed() {
+    let dir = write_store("relay_quorum", 1_500, 107);
+    let mm = MmapProblem::open(&dir).expect("open store");
+    let cfg = fixed_rounds(6);
+
+    let (sim, addrs) = sim_fleet(53, FaultPlan::healthy(), &dir, 6);
+    let opts = ConnectOptions {
+        relay_fanout: RelayFanout::Leaves(2),
+        min_workers: 6,
+        ..sim_opts()
+    };
+    let (fleet, skipped) =
+        RemoteCluster::connect_elastic(Arc::new(sim.transport()), &addrs, &mm, opts, None)
+            .expect("connect sim fleet");
+    assert!(skipped.is_empty(), "{skipped:?}");
+    // slot 2 is a leaf (relays sit at slots 0 and 1); crash it mid-solve
+    let mut killer = CrashAt { sim: &sim, at: 1, victim: 2, done: false };
+    let err = solve_scd_exec(&mm, &cfg, &Exec::Remote(&fleet), None, Some(&mut killer))
+        .expect_err("5 alive workers are below the floor of 6");
+    assert!(matches!(err, bskp::Error::Runtime(_)), "typed error, got: {err}");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("quorum") && msg.contains("PALLAS_MIN_WORKERS"),
+        "the error must name the quorum knob: {msg}"
+    );
+    let membership = fleet.membership_events();
+    assert!(
+        membership
+            .iter()
+            .any(|e| e.change.label() == "lost" && e.worker == Some(2)),
+        "the leaf loss must be logged against its slot: {membership:?}"
+    );
+    drop(fleet);
+    sim.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }
